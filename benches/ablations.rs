@@ -1,0 +1,22 @@
+//! `cargo bench` target for the ablations (DESIGN.md §5): queue
+//! ordering, the sequential algorithm ladder, dense-vs-incremental RTAC,
+//! and the tightness sweep.
+
+use rtac::bench::ablations;
+
+fn main() {
+    let episodes = std::env::var("RTAC_BENCH_EPISODES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(60);
+    let spec = ablations::default_spec();
+    eprintln!("ablations: workload {spec:?}, {episodes} episodes each");
+    let (_, a) = ablations::queue_ordering(&spec, episodes);
+    println!("{a}");
+    let (_, b) = ablations::algorithm_ladder(&spec, episodes);
+    println!("{b}");
+    let (_, c) = ablations::rtac_incremental(&spec, episodes);
+    println!("{c}");
+    let (_, d) = ablations::tightness_sweep(&spec, episodes);
+    println!("{d}");
+}

@@ -1,0 +1,59 @@
+//! `cargo bench` target for the coordinator: batching-policy sweep under
+//! parallel search load — throughput, latency, and batch occupancy as a
+//! function of the coalescing window.  The L3 half of §Perf.
+//! Self-skips without artifacts.
+
+use std::time::Duration;
+
+use rtac::coordinator::{BatchPolicy, Coordinator, CoordinatorConfig};
+use rtac::gen::queens;
+use rtac::search::parallel::solve_parallel;
+use rtac::search::SolverConfig;
+use rtac::util::table::Table;
+
+fn main() {
+    let dir = rtac::runtime::default_artifact_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("coordinator bench skipped: run `make artifacts` first");
+        return;
+    }
+    let p = queens(8);
+    let mut t = Table::new(&[
+        "max_wait µs", "workers", "enforcements", "enf/s", "p-lat µs", "exec µs/batch", "occupancy",
+    ]);
+    for &workers in &[1usize, 4, 8] {
+        for &wait_us in &[0u64, 200, 1000, 5000] {
+            let coord = Coordinator::start(
+                &p,
+                CoordinatorConfig {
+                    artifact_dir: dir.clone(),
+                    policy: BatchPolicy {
+                        max_batch: 8,
+                        max_wait: Duration::from_micros(wait_us),
+                    },
+                },
+            )
+            .expect("start coordinator");
+            let t0 = std::time::Instant::now();
+            let out = solve_parallel(&p, &coord, &SolverConfig::default(), 0, workers)
+                .expect("parallel solve");
+            let wall = t0.elapsed().as_secs_f64();
+            assert!(out.result.is_sat());
+            let m = coord.metrics().snapshot();
+            t.row(vec![
+                wait_us.to_string(),
+                workers.to_string(),
+                m.responses.to_string(),
+                format!("{:.0}", m.responses as f64 / wall),
+                format!("{:.0}", m.mean_total_us),
+                format!("{:.0}", m.mean_exec_us),
+                format!("{:.2}", m.mean_batch_occupancy),
+            ]);
+        }
+    }
+    println!("{}", t.render());
+    println!(
+        "reading: occupancy grows with the window and worker count; the \
+         throughput-optimal window balances fusion against queue wait."
+    );
+}

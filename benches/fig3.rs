@@ -1,0 +1,46 @@
+//! `cargo bench` target for Fig. 3: running time (ms) of one assignment
+//! in backtrack search across the n × density grid, native engines.
+//! Scaled grid by default (RTAC_BENCH_FULL=1 for the paper's full grid —
+//! hours).  Output mirrors the paper's figure as table rows.
+
+use rtac::bench::{fig3, GridSpec};
+
+fn main() {
+    let full = std::env::var("RTAC_BENCH_FULL").ok().as_deref() == Some("1");
+    let mut spec = if full { GridSpec::paper_full() } else { GridSpec::scaled() };
+    if !full {
+        // keep the default cargo-bench wall time reasonable
+        spec.assignments = std::env::var("RTAC_BENCH_ASSIGNMENTS")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(150);
+    }
+    let engines = ["ac3", "ac3bit", "rtac", "rtac-inc"];
+    eprintln!(
+        "fig3: sizes={:?} densities={:?} dom={} tightness={} assignments={}",
+        spec.sizes, spec.densities, spec.dom_size, spec.tightness, spec.assignments
+    );
+    let mut results = fig3::run(&spec, &engines);
+    println!("{}", fig3::render(&results, &engines));
+
+    // XLA series on the bucket-sized grid (skipped without artifacts)
+    let dir = rtac::runtime::default_artifact_dir();
+    if dir.join("manifest.json").exists() && !full {
+        let mut xspec = GridSpec::xla();
+        xspec.assignments = std::env::var("RTAC_BENCH_XLA_ASSIGNMENTS")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(40);
+        eprintln!("fig3 XLA series: sizes={:?} dom={}", xspec.sizes, xspec.dom_size);
+        match fig3::run_xla(&xspec, &dir) {
+            Ok(xla) => {
+                println!("{}", fig3::render(&xla, &["rtac-xla"]));
+                results.extend(xla);
+            }
+            Err(e) => eprintln!("XLA series failed: {e:#}"),
+        }
+    }
+    for claim in fig3::shape_claims(&results) {
+        println!("{claim}");
+    }
+}

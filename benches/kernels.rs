@@ -1,0 +1,102 @@
+//! `cargo bench` target for the XLA executable latencies: per-bucket,
+//! per-batch fixpoint timings plus the step kernel — the L1/L2 half of
+//! the §Perf profile (the numbers that stand in for the paper's GPU
+//! kernel timings on this CPU-PJRT testbed).  Self-skips without
+//! artifacts.
+
+use rtac::bench::{bench, BenchConfig};
+use rtac::core::State;
+use rtac::gen::random::{random_csp, RandomSpec};
+use rtac::runtime::{encode_cons, encode_vars, Bucket, Kind, Runtime};
+
+fn main() {
+    let dir = rtac::runtime::default_artifact_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("kernels bench skipped: run `make artifacts` first");
+        return;
+    }
+    let rt = Runtime::load(&dir).expect("load artifacts");
+    eprintln!("platform: {}; artifacts: {:?}", rt.platform(), rt.loaded_names());
+    let cfg = BenchConfig { warmup: 3, samples: 30, max_time: std::time::Duration::from_secs(5) };
+
+    for (n, d) in rt.manifest().buckets(Kind::Fixpoint) {
+        let bucket = Bucket { n, d };
+        // a dense instance filling ~80% of the bucket
+        let p = random_csp(&RandomSpec::new(
+            (n * 4 / 5).max(2),
+            d.min(((d * 4) / 5).max(2)),
+            0.8,
+            0.35,
+            7,
+        ));
+        let cons = encode_cons(&p, bucket).unwrap();
+        let mut s = State::new(&p);
+        s.assign(0, 0);
+        let vars = encode_vars(&p, &s, bucket).unwrap();
+
+        let name = format!("step_n{n}_d{d}");
+        let m = bench(&format!("xla {name}"), &cfg, || {
+            rt.run_step(&name, &cons, &vars).unwrap();
+        });
+        println!("{}", m.line());
+
+        let name = format!("fix_n{n}_d{d}");
+        let m = bench(&format!("xla {name} (cons upload/call)"), &cfg, || {
+            rt.run_fixpoint(&name, &cons, &vars).unwrap();
+        });
+        println!("{}", m.line());
+
+        // §Perf L3: device-resident constraint tensor (upload once)
+        let cons_dev = rt.upload(&cons, &[bucket.n, bucket.n, bucket.d, bucket.d]).unwrap();
+        let m = bench(&format!("xla {name} (cons resident)"), &cfg, || {
+            rt.run_fixpoint_dev(&name, &cons_dev, &vars).unwrap();
+        });
+        println!("{}", m.line());
+
+        // §Perf L2 round-trip ablation: Rust-driven loop over the step
+        // artifact vs the fused while_loop executable.
+        let step_name = format!("step_n{n}_d{d}");
+        let m = bench(&format!("xla fixpoint stepwise n{n} d{d}"), &cfg, || {
+            rt.run_fixpoint_stepwise(&step_name, &cons, &vars).unwrap();
+        });
+        println!("{}", m.line());
+
+        for b in rt.manifest().batch_sizes() {
+            let name = format!("fixb{b}_n{n}_d{d}");
+            let mut batch = Vec::new();
+            for _ in 0..b {
+                batch.extend_from_slice(&vars);
+            }
+            let m = bench(&format!("xla {name} (per-plane)"), &cfg, || {
+                rt.run_fixpoint(&name, &cons, &batch).unwrap();
+            });
+            // report per-plane amortised time too
+            println!(
+                "{}   => {:.2}µs/plane",
+                m.line(),
+                m.summary.mean / b as f64
+            );
+        }
+    }
+
+    // native engine on identical instances, for the CPU-vs-XLA overhead
+    // comparison quoted in EXPERIMENTS.md §Perf.
+    for (n, d) in rt.manifest().buckets(Kind::Fixpoint) {
+        let p = random_csp(&RandomSpec::new(
+            (n * 4 / 5).max(2),
+            d.min(((d * 4) / 5).max(2)),
+            0.8,
+            0.35,
+            7,
+        ));
+        let m = bench(&format!("native rtac-inc n{n} d{d}"), &cfg, || {
+            let mut engine = rtac::ac::rtac::RtacNative::incremental();
+            let mut s = State::new(&p);
+            s.assign(0, 0);
+            let mut c = rtac::ac::Counters::default();
+            use rtac::ac::Propagator;
+            let _ = engine.enforce(&p, &mut s, &[], &mut c);
+        });
+        println!("{}", m.line());
+    }
+}

@@ -1,0 +1,23 @@
+//! `cargo bench` target for Table 1: `#Revision` (AC-3) vs `#Recurrence`
+//! (RTAC) per assignment across the grid, in the paper's exact column
+//! format.  Scaled grid by default; RTAC_BENCH_FULL=1 for the paper's.
+
+use rtac::bench::{table1, GridSpec};
+
+fn main() {
+    let full = std::env::var("RTAC_BENCH_FULL").ok().as_deref() == Some("1");
+    let mut spec = if full { GridSpec::paper_full() } else { GridSpec::scaled() };
+    if !full {
+        spec.assignments = std::env::var("RTAC_BENCH_ASSIGNMENTS")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(200);
+    }
+    eprintln!(
+        "table1: sizes={:?} densities={:?} dom={} tightness={} assignments={}",
+        spec.sizes, spec.densities, spec.dom_size, spec.tightness, spec.assignments
+    );
+    let rows = table1::run(&spec);
+    println!("{}", table1::render(&rows));
+    println!("{}", table1::verdict(&rows));
+}

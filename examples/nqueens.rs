@@ -1,0 +1,58 @@
+//! n-queens across every AC engine: same search, same answer, very
+//! different work profiles — a miniature of the paper's Table 1 on a
+//! structured instance.
+//!
+//! Run: `cargo run --release --example nqueens -- [N]`   (default 10)
+
+use rtac::ac::{make_engine, ALL_ENGINES};
+use rtac::gen::queens;
+use rtac::search::{Solver, SolverConfig};
+use rtac::util::table::{fnum, Table};
+
+fn main() {
+    let n: usize = std::env::args().nth(1).and_then(|a| a.parse().ok()).unwrap_or(10);
+    let p = queens(n);
+    println!("queens({n}): {} constraints, density {:.2}", p.n_constraints(), p.density());
+
+    let mut t = Table::new(&[
+        "engine", "result", "assignments", "ac ms/call", "revisions/call", "recurrences/call",
+    ]);
+    let mut solution: Option<Vec<usize>> = None;
+    for name in ALL_ENGINES {
+        let mut engine = make_engine(name).unwrap();
+        let cfg = SolverConfig { record_ac_times: true, ..Default::default() };
+        let mut solver = Solver::new(engine.as_mut(), cfg);
+        let (result, stats) = solver.solve(&p);
+        let verdict = match &result {
+            rtac::search::SolveResult::Sat(sol) => {
+                assert!(p.satisfies(sol), "{name} returned a bad solution");
+                if let Some(prev) = &solution {
+                    // engines may find different solutions; both valid
+                    let _ = prev;
+                }
+                solution = Some(sol.clone());
+                "SAT"
+            }
+            rtac::search::SolveResult::Unsat => "UNSAT",
+            rtac::search::SolveResult::Limit => "LIMIT",
+        };
+        t.row(vec![
+            name.to_string(),
+            verdict.into(),
+            stats.assignments.to_string(),
+            format!("{:.4}", stats.mean_ac_ms()),
+            fnum(stats.revisions_per_call()),
+            fnum(stats.recurrences_per_call()),
+        ]);
+    }
+    println!("{}", t.render());
+
+    if let Some(sol) = solution {
+        println!("one solution:");
+        for row in 0..n {
+            let line: String =
+                (0..n).map(|col| if sol[col] == row { " Q" } else { " ." }).collect();
+            println!("{line}");
+        }
+    }
+}

@@ -1,0 +1,142 @@
+"""AOT pipeline: lower the L2 model to HLO *text* artifacts for the Rust
+runtime (Layer 3).
+
+Interchange format is HLO text, NOT a serialized HloModuleProto: jax >=
+0.5 emits protos with 64-bit instruction ids which the ``xla`` crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/gen_hlo.py).
+
+Python runs ONCE here (``make artifacts``); the Rust binary is
+self-contained afterwards.  Every artifact is compiled for a fixed shape
+bucket (DESIGN.md §Hardware-Adaptation): the Rust router pads a request's
+(n, d) up to the nearest bucket with universal relations / zero rows,
+which is AC-neutral (tested on both sides of the boundary).
+
+Emitted set (see BUCKETS / BATCHES below):
+  artifacts/step_n{N}_d{D}.hlo.txt      one revise sweep
+  artifacts/fix_n{N}_d{D}.hlo.txt       full fixpoint, B=1, wipeout abort
+  artifacts/fixb{B}_n{N}_d{D}.hlo.txt   joint fixpoint over B planes
+  artifacts/fixinc_n{N}_d{D}.hlo.txt    Prop.-2 incremental (ablation)
+  artifacts/manifest.json               machine-readable index
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+# (n_vars, n_dom) shape buckets.  n is a multiple of the kernel x-tile.
+BUCKETS = [(8, 4), (16, 8), (32, 8), (64, 16)]
+# Batched-fixpoint sizes compiled per bucket (coordinator fuses up to
+# max(BATCHES) requests per execution; it pads partial batches).
+BATCHES = [4, 8]
+# Incremental ablation bucket (one is enough for the ablation bench).
+INC_BUCKETS = [(16, 8), (32, 8)]
+
+# Kernel x-tile: one grid program per bucket unless VMEM would overflow
+# (perf sweep: 12.6x over the old fixed bx=8 on the 64x16 bucket; see
+# EXPERIMENTS.md §Perf).  `BLOCK_X` kept as the fallback/reporting value.
+BLOCK_X = 8
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True so the
+    Rust side can always unwrap a tuple, regardless of output arity)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def build_entries():
+    """Yield (name, lowered, meta) for every artifact."""
+    from compile.kernels.revise import pick_block_x
+
+    for (n, d) in BUCKETS:
+        bx = pick_block_x(n, d)
+        cons = _spec((n, n, d, d))
+        plane = _spec((n, d))
+
+        name = f"step_n{n}_d{d}"
+        low = jax.jit(lambda c, v: (model.rtac_step(c, v, block_x=bx),)).lower(cons, plane)
+        yield name, low, dict(kind="step", n=n, d=d, batch=1, outputs=["vars"])
+
+        name = f"fix_n{n}_d{d}"
+        low = jax.jit(lambda c, v: model.rtac_fixpoint(c, v, block_x=bx)).lower(cons, plane)
+        yield name, low, dict(kind="fixpoint", n=n, d=d, batch=1,
+                              outputs=["vars", "iters", "status"])
+
+        for b in BATCHES:
+            name = f"fixb{b}_n{n}_d{d}"
+            low = jax.jit(
+                lambda c, v: model.rtac_fixpoint_batched(c, v, block_x=bx)
+            ).lower(cons, _spec((b, n, d)))
+            yield name, low, dict(kind="fixpoint_batched", n=n, d=d, batch=b,
+                                  outputs=["vars", "iters", "status"])
+
+    from compile.kernels.revise import pick_block_x
+
+    for (n, d) in INC_BUCKETS:
+        bx = pick_block_x(n, d)
+        name = f"fixinc_n{n}_d{d}"
+        low = jax.jit(
+            lambda c, v: model.rtac_fixpoint_incremental(c, v, block_x=bx)
+        ).lower(_spec((n, n, d, d)), _spec((n, d)))
+        yield name, low, dict(kind="fixpoint_incremental", n=n, d=d, batch=1,
+                              outputs=["vars", "iters", "status"])
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts",
+                    help="artifact output directory (default: ../artifacts)")
+    args = ap.parse_args()
+    out_dir = os.path.abspath(args.out_dir)
+    os.makedirs(out_dir, exist_ok=True)
+
+    manifest = {"format": 1, "block_x": BLOCK_X, "entries": []}
+    for name, lowered, meta in build_entries():
+        text = to_hlo_text(lowered)
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        entry = dict(
+            name=name,
+            file=f"{name}.hlo.txt",
+            hlo_bytes=len(text),
+            inputs=[
+                dict(name="cons", shape=[meta["n"], meta["n"], meta["d"], meta["d"]],
+                     dtype="f32"),
+                dict(name="vars",
+                     shape=([meta["batch"], meta["n"], meta["d"]]
+                            if meta["kind"] == "fixpoint_batched"
+                            else [meta["n"], meta["d"]]),
+                     dtype="f32"),
+            ],
+            **meta,
+        )
+        manifest["entries"].append(entry)
+        print(f"wrote {path} ({len(text)} chars)", file=sys.stderr)
+
+    man_path = os.path.join(out_dir, "manifest.json")
+    with open(man_path, "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {man_path} ({len(manifest['entries'])} entries)", file=sys.stderr)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,131 @@
+"""Pure-jnp / pure-python correctness oracles for the RTAC kernels.
+
+Three independent references, from "closest to the kernel" to "closest to
+the textbook definition":
+
+1. ``revise_ref``          — one dense revise sweep, plain jnp (no Pallas).
+2. ``fixpoint_ref``        — python-loop fixpoint over ``revise_ref``.
+3. ``ac3_closure``         — a classic queue-based AC-3 on python sets.
+
+The pytest suite asserts: Pallas kernel == (1), JAX while_loop model == (2),
+and both == (3) on random instances.  The AC closure of a CSP is unique
+(paper Prop. 1), so all engines must agree bit-for-bit on the 0/1 grid.
+
+Encoding (shared with the Rust native engine and the AOT artifacts):
+  Vars : f32[n, d]        Vars[x, a] = 1.0  iff value a is in dom(x)
+  Cons : f32[n, n, d, d]  Cons[x, y, a, b] = 1.0 iff (a, b) allowed by
+                          c_xy; pairs (x, y) with *no* constraint hold the
+                          universal (all-ones) relation, which is
+                          AC-neutral; the diagonal Cons[x, x] is universal
+                          as well.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def revise_ref(cons: jnp.ndarray, vars_: jnp.ndarray) -> jnp.ndarray:
+    """One dense revise sweep (paper Fig. 2 steps 1-3), plain jnp.
+
+    supp[x, y, a] = sum_b Cons[x, y, a, b] * Vars[y, b]
+    ok[x, a]      = all_y (supp[x, y, a] > 0)
+    out[x, a]     = Vars[x, a] * ok[x, a]
+    """
+    supp = jnp.einsum("xyab,yb->xya", cons, vars_)
+    ok = jnp.min(jnp.where(supp > 0.0, 1.0, 0.0), axis=1)
+    return vars_ * ok
+
+
+def fixpoint_ref(cons, vars_, max_iters: int = 10_000):
+    """Run ``revise_ref`` to the fixpoint with a host-side python loop.
+
+    Returns (vars_out, n_sweeps, wiped) where ``n_sweeps`` counts executed
+    sweeps (the paper's ``while n_idx != 0`` trip count) and ``wiped`` is
+    True iff some variable's domain was annihilated (inconsistent CSP).
+    Matches the #Recurrence semantics in DESIGN.md §7.
+    """
+    v = vars_
+    sweeps = 0
+    for _ in range(max_iters):
+        nv = revise_ref(cons, v)
+        sweeps += 1
+        wiped = bool(jnp.any(jnp.sum(nv, axis=1) == 0.0))
+        if wiped:
+            return nv, sweeps, True
+        if bool(jnp.all(nv == v)):
+            return nv, sweeps, False
+        v = nv
+    raise RuntimeError("fixpoint_ref did not converge")
+
+
+# ---------------------------------------------------------------------------
+# Classic AC-3 on python data structures (textbook comparator).
+# ---------------------------------------------------------------------------
+
+
+def ac3_closure(cons: np.ndarray, vars_: np.ndarray):
+    """Queue-based AC-3 over the same tensor encoding.
+
+    Returns (vars_out, n_revisions, wiped).  Only (x, y) pairs whose
+    relation is non-universal are treated as constraints (universal
+    relations can never prune and correspond to "no constraint").
+    """
+    cons = np.asarray(cons)
+    vars_ = np.asarray(vars_).copy()
+    n, d = vars_.shape
+
+    def is_edge(x, y):
+        return x != y and not np.all(cons[x, y] == 1.0)
+
+    edges = [(x, y) for x in range(n) for y in range(n) if is_edge(x, y)]
+    queue = list(edges)
+    in_queue = set(queue)
+    revisions = 0
+
+    while queue:
+        x, y = queue.pop(0)
+        in_queue.discard((x, y))
+        revisions += 1
+        changed = False
+        for a in range(d):
+            if vars_[x, a] == 0.0:
+                continue
+            # does (x,a) keep a support on c_xy?
+            if not np.any(cons[x, y, a] * vars_[y]):
+                vars_[x, a] = 0.0
+                changed = True
+        if changed:
+            if not np.any(vars_[x]):
+                return vars_, revisions, True
+            for (z, w) in edges:
+                if w == x and z != y and (z, w) not in in_queue:
+                    queue.append((z, w))
+                    in_queue.add((z, w))
+    return vars_, revisions, False
+
+
+# ---------------------------------------------------------------------------
+# Random instance builder shared by the pytest suite.
+# ---------------------------------------------------------------------------
+
+
+def random_instance(n: int, d: int, density: float, tightness: float, seed: int):
+    """Random binary CSP in tensor encoding (paper §5.2 model).
+
+    Each of the n(n-1)/2 variable pairs gets a constraint with probability
+    ``density``; a constrained pair forbids each value pair independently
+    with probability ``tightness``.  Unconstrained pairs (and the diagonal)
+    hold the universal relation.
+    """
+    rng = np.random.default_rng(seed)
+    cons = np.ones((n, n, d, d), dtype=np.float32)
+    for x in range(n):
+        for y in range(x + 1, n):
+            if rng.random() < density:
+                allowed = (rng.random((d, d)) >= tightness).astype(np.float32)
+                cons[x, y] = allowed
+                cons[y, x] = allowed.T
+    vars_ = np.ones((n, d), dtype=np.float32)
+    return cons, vars_

@@ -1,0 +1,122 @@
+"""Layer-1 Pallas kernel: one dense RTAC revise sweep.
+
+The hot spot of each recurrence iteration (paper Fig. 2 / Algorithm 1,
+``tensorRevise``) is the support-count contraction
+
+    supp[x, y, a] = sum_b Cons[x, y, a, b] * Vars[y, b]
+
+followed by an all-reduce over the neighbour axis and a masked write-back.
+On the paper's hardware (RTX3090 + PyTorch) this is a cuBLAS batched GEMM
+over a *gathered* ``changed_idx`` slab.  Here we re-express it for the
+TPU-style memory hierarchy (DESIGN.md §Hardware-Adaptation):
+
+* the grid tiles the x axis; each program streams its ``(bx, n, d, d)``
+  constraint slab HBM→VMEM via the BlockSpec index_map while the full
+  ``(n, d)`` Vars plane stays VMEM-resident (it is tiny);
+* the contraction is expressed as a ``dot_general`` on the last axis so
+  XLA maps it to the MXU when d is large and to the VPU otherwise;
+* the dynamic ``changed_idx`` gather of the paper's Listing 1.1 is
+  replaced by a dense masked sweep — every shape is static, which is what
+  makes ahead-of-time lowering (and TPU tiling) possible.
+
+``interpret=True`` always: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; interpret mode lowers the kernel to plain HLO so the same
+artifact runs anywhere.  Correctness is pinned to ``ref.revise_ref`` by
+``python/tests/test_kernel.py``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _revise_kernel(cons_ref, vars_full_ref, vars_tile_ref, out_ref):
+    """One x-tile of the revise sweep.
+
+    Block shapes:
+      cons_ref      : (bx, n, d, d)  — this tile's constraint slab
+      vars_full_ref : (n, d)         — the whole Vars plane (the "y" side)
+      vars_tile_ref : (bx, d)        — this tile's Vars rows (the "x" side)
+      out_ref       : (bx, d)
+    """
+    cons = cons_ref[...]          # (bx, n, d, d)
+    vy = vars_full_ref[...]       # (n, d)
+
+    # supp[t, y, a] = sum_b cons[t, y, a, b] * vy[y, b]
+    # dot_general: contract cons dim 3 with vy dim 1, batch cons dim 1 / vy dim 0.
+    supp = jax.lax.dot_general(
+        cons,
+        vy,
+        dimension_numbers=(((3,), (1,)), ((1,), (0,))),
+        preferred_element_type=jnp.float32,
+    )
+    # dot_general output layout: (batch, lhs-free..., rhs-free...) = (n, bx, d)
+    has = jnp.where(supp > 0.0, 1.0, 0.0)
+    ok = jnp.min(has, axis=0)     # all over y -> (bx, d)
+    out_ref[...] = vars_tile_ref[...] * ok
+
+
+@functools.partial(jax.jit, static_argnames=("block_x",))
+def revise(cons: jnp.ndarray, vars_: jnp.ndarray, *, block_x: int = 8) -> jnp.ndarray:
+    """One dense revise sweep via the Pallas kernel.
+
+    Args:
+      cons: f32[n, n, d, d] constraint tensor (universal rows where no
+        constraint exists — see ``ref.py`` for the encoding contract).
+      vars_: f32[n, d] 0/1 domain plane.
+      block_x: x-tile height; must divide n (shape buckets guarantee this).
+
+    Returns f32[n, d]: the plane after one sweep (values that lost all
+    supports on some constraint are zeroed).
+    """
+    n, d = vars_.shape
+    assert cons.shape == (n, n, d, d), (cons.shape, vars_.shape)
+    bx = min(block_x, n)
+    assert n % bx == 0, f"block_x {bx} must divide n {n}"
+
+    return pl.pallas_call(
+        _revise_kernel,
+        grid=(n // bx,),
+        in_specs=[
+            pl.BlockSpec((bx, n, d, d), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec((n, d), lambda i: (0, 0)),
+            pl.BlockSpec((bx, d), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((bx, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, d), jnp.float32),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(cons, vars_, vars_)
+
+
+def pick_block_x(n: int, d: int, vmem_budget: int = 12 * 2**20) -> int:
+    """Largest x-tile whose VMEM footprint fits the budget (§Perf L1).
+
+    Perf sweep on the (64,16) bucket (EXPERIMENTS.md §Perf): the
+    interpret-mode grid loop dominates at small tiles — bx=8 ran 11.3ms,
+    bx=64 (single program) 0.90ms, a 12.6x win — and analytically the
+    whole constraint slab fits VMEM for every compiled bucket, so the
+    policy is simply "one program unless the slab would blow VMEM", which
+    also matches the TPU story: stream x-tiles only when you must.
+    """
+    bx = n
+    while bx > 1 and vmem_bytes(n, d, bx) > vmem_budget:
+        # halve until it fits; n is a power of two for all buckets
+        bx //= 2
+    return max(bx, 1)
+
+
+def vmem_bytes(n: int, d: int, block_x: int = 8) -> int:
+    """Analytic VMEM footprint of one kernel program (DESIGN.md §8 L1).
+
+    cons tile + vars plane + vars tile + out tile + supp scratch, f32.
+    """
+    bx = min(block_x, n)
+    cons_tile = bx * n * d * d
+    vars_plane = n * d
+    tiles = 2 * bx * d
+    supp = n * bx * d
+    return 4 * (cons_tile + vars_plane + tiles + supp)

@@ -1,0 +1,165 @@
+"""Layer-2 JAX model: the full Recurrent Arc Consistency (RAC) fixpoint.
+
+Wraps the Layer-1 Pallas revise kernel (``kernels/revise.py``) in a
+``jax.lax.while_loop`` implementing Eq. 1 of the paper:
+
+    D~(0) = ∅
+    D~(k) = D~(k-1) ∪ { (x,a) | ∃y, c_xy|(x,a) ⊆ D~(k-1) }
+
+iterated until the removed-set stops growing (fixpoint == the AC closure,
+paper Prop. 1) or some domain is wiped out (inconsistency, early abort).
+
+Entry points, all with static shapes so they can be AOT-lowered to single
+HLO executables (no host round-trip inside the loop):
+
+  rtac_step(cons, vars)        -> vars'                  one sweep
+  rtac_fixpoint(cons, vars)    -> (vars*, iters, status) full enforcement,
+                                  early-aborts on wipeout (paper's "throw
+                                  inconsistency"); iters == #Recurrence
+  rtac_fixpoint_batched(cons, vars[B])
+                               -> (vars*[B], iters, status[B])
+  rtac_fixpoint_incremental(cons, vars)
+                               -> (vars*, iters, status)  Prop.-2 ablation
+
+The batched variant runs B independent domain planes against ONE shared
+constraint tensor — the coordinator uses it to fuse AC requests from
+parallel search workers exploring different branches of the same CSP
+(DESIGN.md §3).  It runs to the *joint* fixpoint (a wiped plane must not
+abort its batch-mates), so its ``iters`` is a joint sweep count, not the
+per-request #Recurrence.
+
+Status codes (i32): 0 = CONSISTENT, 1 = WIPEOUT (some domain emptied).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import revise as revise_kernel
+
+STATUS_CONSISTENT = 0
+STATUS_WIPEOUT = 1
+
+# Safety cap only: the loop exits on fixpoint (paper measures ~3.4-4.8
+# sweeps); the theoretical max is n*d+1 sweeps (>=1 removal per sweep).
+MAX_ITERS = 4096
+
+
+def rtac_step(cons: jnp.ndarray, vars_: jnp.ndarray, *, block_x: int = 8):
+    """One dense revise sweep (Layer-1 kernel pass-through)."""
+    return revise_kernel.revise(cons, vars_, block_x=block_x)
+
+
+def _wiped_plane(v):  # f32[n,d] -> bool
+    return jnp.any(jnp.sum(v, axis=1) == 0.0)
+
+
+@functools.partial(jax.jit, static_argnames=("block_x",))
+def rtac_fixpoint(cons: jnp.ndarray, vars_: jnp.ndarray, *, block_x: int = 8):
+    """Full RAC enforcement of a single domain plane.
+
+    Returns (vars_out f32[n,d], iters i32, status i32).  ``iters`` counts
+    executed sweeps per DESIGN.md §7 (the paper's ``while n_idx != 0``
+    trip count); on WIPEOUT the loop aborts immediately, mirroring the
+    paper's ``throw inconsistency``.
+    """
+
+    def body(carry):
+        v, it, _changed = carry
+        nv = revise_kernel.revise(cons, v, block_x=block_x)
+        return nv, it + 1, jnp.any(nv != v)
+
+    def cond(carry):
+        v, it, changed = carry
+        return changed & (~_wiped_plane(v)) & (it < MAX_ITERS)
+
+    v0 = vars_.astype(jnp.float32)
+    vout, iters, _ = jax.lax.while_loop(
+        cond, body, (v0, jnp.int32(0), jnp.bool_(True))
+    )
+    status = jnp.where(_wiped_plane(vout), STATUS_WIPEOUT, STATUS_CONSISTENT)
+    return vout, iters, status.astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("block_x",))
+def rtac_fixpoint_batched(cons: jnp.ndarray, vars_: jnp.ndarray, *, block_x: int = 8):
+    """Joint RAC enforcement of B domain planes sharing one ``cons``.
+
+    Args:
+      cons:  f32[n, n, d, d]
+      vars_: f32[B, n, d]
+
+    Returns (vars_out f32[B,n,d], iters i32, status i32[B]).  Runs until
+    no plane changes; a revise sweep is idempotent on already-stable
+    planes, so stragglers converge independently.  Wiped planes are frozen
+    (their fixpoint is already decided) purely to keep removal sets
+    deterministic for the bit-exact cross-engine tests.
+    """
+    B, n, d = vars_.shape
+
+    def wiped(v):  # f32[B,n,d] -> bool[B]
+        return jnp.any(jnp.sum(v, axis=2) == 0.0, axis=1)
+
+    def body(carry):
+        v, it, _changed = carry
+        nv = jax.vmap(lambda p: revise_kernel.revise(cons, p, block_x=block_x))(v)
+        freeze = wiped(v)[:, None, None]
+        nv = jnp.where(freeze, v, nv)
+        return nv, it + 1, jnp.any(nv != v)
+
+    def cond(carry):
+        _v, it, changed = carry
+        return changed & (it < MAX_ITERS)
+
+    v0 = vars_.astype(jnp.float32)
+    vout, iters, _ = jax.lax.while_loop(
+        cond, body, (v0, jnp.int32(0), jnp.bool_(True))
+    )
+    status = jnp.where(wiped(vout), STATUS_WIPEOUT, STATUS_CONSISTENT)
+    return vout, iters, status.astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("block_x",))
+def rtac_fixpoint_incremental(cons: jnp.ndarray, vars_: jnp.ndarray, *, block_x: int = 8):
+    """Prop.-2 incremental formulation, static-shape edition (ablation).
+
+    The paper's Listing 1.1 exploits Prop. 2 by *gathering* the changed
+    columns (dynamic shapes).  The static-shape equivalent maintains the
+    support-count tensor and updates it with the *delta* of removed
+    values:
+
+        supp[x,y,a] -= sum_b Cons[x,y,a,b] * removed[y,b]
+
+    Each sweep costs one einsum either way on dense hardware, but replaces
+    the full recount with a subtraction and avoids re-deriving ``ok`` from
+    scratch; EXPERIMENTS.md quantifies whether XLA cares.  Semantics are
+    identical to ``rtac_fixpoint`` (same iters, same closure) — asserted
+    in the pytest suite.
+    """
+    n, d = vars_.shape
+    v0 = vars_.astype(jnp.float32)
+    supp0 = jnp.einsum("xyab,yb->xya", cons, v0)
+
+    def prune(v, supp):
+        ok = jnp.min(jnp.where(supp > 0.0, 1.0, 0.0), axis=1)
+        return v * ok
+
+    def body(carry):
+        v, supp, it, _changed = carry
+        nv = prune(v, supp)
+        removed = v - nv
+        nsupp = supp - jnp.einsum("xyab,yb->xya", cons, removed)
+        return nv, nsupp, it + 1, jnp.any(nv != v)
+
+    def cond(carry):
+        v, _supp, it, changed = carry
+        return changed & (~_wiped_plane(v)) & (it < MAX_ITERS)
+
+    vout, _, iters, _ = jax.lax.while_loop(
+        cond, body, (v0, supp0, jnp.int32(0), jnp.bool_(True))
+    )
+    status = jnp.where(_wiped_plane(vout), STATUS_WIPEOUT, STATUS_CONSISTENT)
+    return vout, iters, status.astype(jnp.int32)

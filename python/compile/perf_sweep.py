@@ -1,0 +1,73 @@
+"""L1 perf tooling: block-shape sweep for the Pallas revise kernel.
+
+Regenerates the EXPERIMENTS.md §Perf L1 table: wallclock per jitted call
+(CPU, interpret-mode — optimise *structure*, per DESIGN.md §8) plus the
+analytic VMEM footprint that gates TPU validity of each block shape.
+
+Usage:  cd python && python -m compile.perf_sweep [--n 64 --d 16]
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from compile import model
+from compile.kernels import ref, revise
+
+
+def time_call(f, *args, iters: int = 15) -> float:
+    """Mean wallclock per call in µs, after one warmup compile+run."""
+    out = f(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = f(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def sweep(n: int, d: int, density: float, tightness: float, seed: int) -> None:
+    cons_np, vars_np = ref.random_instance(n, d, density, tightness, seed)
+    cons, vars_ = jnp.array(cons_np), jnp.array(vars_np)
+
+    print(f"# block_x sweep on ({n}, {d}) bucket  density={density} t={tightness}")
+    print(f"{'bx':>4} {'step µs':>10} {'fixpoint µs':>12} {'VMEM MiB':>9} {'TPU-valid':>9}")
+    bx = 1
+    shapes = []
+    while bx <= n:
+        if n % bx == 0:
+            shapes.append(bx)
+        bx *= 2
+    for bx in shapes:
+        step = jax.jit(lambda c, v, bx=bx: revise.revise(c, v, block_x=bx))
+        fix = jax.jit(lambda c, v, bx=bx: model.rtac_fixpoint(c, v, block_x=bx))
+        vmem = revise.vmem_bytes(n, d, bx) / 2**20
+        print(
+            f"{bx:>4} {time_call(step, cons, vars_):>10.1f} "
+            f"{time_call(fix, cons, vars_):>12.1f} {vmem:>9.2f} "
+            f"{'yes' if vmem <= 12 else 'NO':>9}"
+        )
+    chosen = revise.pick_block_x(n, d)
+    print(f"pick_block_x({n}, {d}) -> {chosen}")
+
+    ref_us = time_call(jax.jit(ref.revise_ref), cons, vars_)
+    print(f"pure-jnp einsum reference step: {ref_us:.1f} µs")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--n", type=int, default=64)
+    ap.add_argument("--d", type=int, default=16)
+    ap.add_argument("--density", type=float, default=0.8)
+    ap.add_argument("--tightness", type=float, default=0.35)
+    ap.add_argument("--seed", type=int, default=7)
+    args = ap.parse_args()
+    sweep(args.n, args.d, args.density, args.tightness, args.seed)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,153 @@
+"""L1 correctness: the Pallas revise kernel vs the pure-jnp oracle.
+
+The AC closure is a 0/1 grid, so equality is exact (no allclose slack
+needed); we still route through assert_allclose for readable diffs.
+Hypothesis sweeps shapes, densities, tightnesses and block sizes.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile.kernels import ref, revise
+
+
+def _run_pair(n, d, density, tightness, seed, block_x):
+    cons, vars_ = ref.random_instance(n, d, density, tightness, seed)
+    got = revise.revise(jnp.array(cons), jnp.array(vars_), block_x=block_x)
+    want = ref.revise_ref(jnp.array(cons), jnp.array(vars_))
+    assert_allclose(np.array(got), np.array(want))
+    return np.array(got)
+
+
+class TestReviseBasics:
+    def test_universal_relations_prune_nothing(self):
+        n, d = 8, 4
+        cons = np.ones((n, n, d, d), dtype=np.float32)
+        vars_ = np.ones((n, d), dtype=np.float32)
+        out = revise.revise(jnp.array(cons), jnp.array(vars_), block_x=4)
+        assert_allclose(np.array(out), vars_)
+
+    def test_empty_relation_wipes_both_sides(self):
+        n, d = 8, 4
+        cons = np.ones((n, n, d, d), dtype=np.float32)
+        cons[0, 1] = 0.0
+        cons[1, 0] = 0.0
+        vars_ = np.ones((n, d), dtype=np.float32)
+        out = np.array(revise.revise(jnp.array(cons), jnp.array(vars_), block_x=4))
+        assert np.all(out[0] == 0.0)
+        assert np.all(out[1] == 0.0)
+        assert np.all(out[2:] == 1.0)
+
+    def test_single_support_survives(self):
+        n, d = 8, 4
+        cons = np.ones((n, n, d, d), dtype=np.float32)
+        rel = np.zeros((d, d), dtype=np.float32)
+        rel[0, 3] = 1.0  # only (x=0,a=0) <-> (y=1,b=3) allowed
+        cons[0, 1] = rel
+        cons[1, 0] = rel.T
+        vars_ = np.ones((n, d), dtype=np.float32)
+        out = np.array(revise.revise(jnp.array(cons), jnp.array(vars_), block_x=4))
+        assert out[0].tolist() == [1.0, 0.0, 0.0, 0.0]
+        assert out[1].tolist() == [0.0, 0.0, 0.0, 1.0]
+
+    def test_removed_value_gives_no_support(self):
+        # (y, b) already removed must not count as a support.
+        n, d = 8, 4
+        cons = np.ones((n, n, d, d), dtype=np.float32)
+        rel = np.zeros((d, d), dtype=np.float32)
+        rel[1, 2] = 1.0
+        cons[0, 1] = rel
+        cons[1, 0] = rel.T
+        vars_ = np.ones((n, d), dtype=np.float32)
+        vars_[1, 2] = 0.0  # the lone support of (0,1) is gone
+        out = np.array(revise.revise(jnp.array(cons), jnp.array(vars_), block_x=4))
+        assert out[0, 1] == 0.0
+
+    def test_matches_ref_on_dense_instance(self):
+        _run_pair(16, 8, 1.0, 0.4, 3, block_x=8)
+
+    def test_matches_ref_on_sparse_instance(self):
+        _run_pair(16, 8, 0.1, 0.4, 4, block_x=8)
+
+    def test_idempotent_on_fixpoint(self):
+        cons, vars_ = ref.random_instance(8, 4, 0.5, 0.4, 11)
+        v, _, _ = ref.fixpoint_ref(jnp.array(cons), jnp.array(vars_))
+        again = revise.revise(jnp.array(cons), v, block_x=4)
+        assert_allclose(np.array(again), np.array(v))
+
+
+class TestReviseHypothesis:
+    @settings(max_examples=25, deadline=None)
+    @given(
+        n=st.sampled_from([4, 8, 16]),
+        d=st.sampled_from([2, 4, 8]),
+        density=st.floats(0.0, 1.0),
+        tightness=st.floats(0.0, 0.8),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_kernel_equals_ref(self, n, d, density, tightness, seed):
+        _run_pair(n, d, density, tightness, seed, block_x=min(8, n))
+
+    @settings(max_examples=10, deadline=None)
+    @given(
+        block_x=st.sampled_from([1, 2, 4, 8, 16]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_block_shape_invariance(self, block_x, seed):
+        # The perf pass sweeps block_x; results must not depend on it.
+        n, d = 16, 4
+        cons, vars_ = ref.random_instance(n, d, 0.7, 0.5, seed)
+        got = revise.revise(jnp.array(cons), jnp.array(vars_), block_x=block_x)
+        want = ref.revise_ref(jnp.array(cons), jnp.array(vars_))
+        assert_allclose(np.array(got), np.array(want))
+
+    @settings(max_examples=10, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1))
+    def test_monotone_removal(self, seed):
+        # A sweep only removes values, never adds (D~ grows monotonically).
+        n, d = 8, 4
+        cons, vars_ = ref.random_instance(n, d, 0.8, 0.6, seed)
+        out = np.array(revise.revise(jnp.array(cons), jnp.array(vars_), block_x=4))
+        assert np.all(out <= vars_)
+        assert set(np.unique(out)).issubset({0.0, 1.0})
+
+
+class TestVmemModel:
+    def test_vmem_within_budget_for_all_buckets(self):
+        # DESIGN.md §8: every compiled bucket must fit TPU VMEM (16 MiB),
+        # including at the perf-pass block policy (bx = whole bucket).
+        from compile import aot
+
+        for (n, d) in aot.BUCKETS:
+            bx = revise.pick_block_x(n, d)
+            assert revise.vmem_bytes(n, d, bx) < 16 * 2**20, (n, d, bx)
+
+    def test_vmem_scales_linearly_in_block(self):
+        a = revise.vmem_bytes(64, 16, block_x=4)
+        b = revise.vmem_bytes(64, 16, block_x=8)
+        assert a < b <= 2 * a
+
+    def test_pick_block_x_takes_whole_bucket_when_it_fits(self):
+        # §Perf L1: single grid program unless VMEM would overflow.
+        for (n, d) in [(8, 4), (16, 8), (32, 8), (64, 16)]:
+            assert revise.pick_block_x(n, d) == n
+
+    def test_pick_block_x_halves_under_tight_budget(self):
+        bx = revise.pick_block_x(64, 16, vmem_budget=2 * 2**20)
+        assert bx < 64
+        assert 64 % bx == 0
+        assert revise.vmem_bytes(64, 16, bx) <= 2 * 2**20
+        # pathological budget still returns a legal tile
+        assert revise.pick_block_x(64, 16, vmem_budget=1) == 1
+
+    def test_full_bucket_block_matches_ref(self):
+        # correctness of the perf-pass configuration specifically
+        n, d = 16, 8
+        cons, vars_ = ref.random_instance(n, d, 0.9, 0.5, 123)
+        got = revise.revise(jnp.array(cons), jnp.array(vars_),
+                            block_x=revise.pick_block_x(n, d))
+        assert_allclose(np.array(got), np.array(ref.revise_ref(
+            jnp.array(cons), jnp.array(vars_))))

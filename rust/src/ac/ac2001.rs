@@ -1,0 +1,284 @@
+//! AC-2001/3.1 (Bessière, Régin, Yap & Zhang 2005, [4]) — the optimal
+//! coarse-grained sequential algorithm.
+//!
+//! AC-3's support scan restarts from scratch on every revision; AC-2001
+//! memoises, per directed arc and value, the *last* support found
+//! (`last[arc][a]`).  A revision first re-checks the residue in O(1) and
+//! only on failure resumes the scan *after* it — each (arc, value) pair
+//! scans every witness value at most once over a full enforcement,
+//! giving the optimal O(e·d²) bound.
+//!
+//! The `last` table is search-state dependent: on backtrack a recorded
+//! support may reappear, which is *safe* (it is still a support if it is
+//! in the domain — supports never need to move backwards within one
+//! enforcement; across enforcements the residue is just a hint, cf.
+//! AC-3^rm residues [7]).
+
+use std::collections::VecDeque;
+
+use crate::ac::{Counters, Outcome, Propagator};
+use crate::core::{Arc, Problem, State, VarId};
+
+/// The AC-2001 engine.
+pub struct Ac2001 {
+    queue: VecDeque<Arc>,
+    in_queue: Vec<bool>,
+    /// last[arc_id] indexed by value -> last known support (usize::MAX = none yet).
+    last: Vec<Vec<usize>>,
+    vals_buf: Vec<usize>,
+}
+
+#[inline]
+fn arc_id(a: Arc) -> usize {
+    a.cons * 2 + a.is_x as usize
+}
+
+impl Ac2001 {
+    pub fn new() -> Ac2001 {
+        Ac2001 { queue: VecDeque::new(), in_queue: Vec::new(), last: Vec::new(), vals_buf: Vec::new() }
+    }
+
+    fn ensure_tables(&mut self, problem: &Problem) {
+        let want = problem.n_constraints() * 2;
+        if self.last.len() != want {
+            self.last = (0..want)
+                .map(|id| {
+                    let arc = Arc { cons: id / 2, is_x: id % 2 == 1 };
+                    // note: arc_id(x-arc)=cons*2+1
+                    let var = problem.arc_var(arc);
+                    vec![usize::MAX; problem.dom_size(var)]
+                })
+                .collect();
+        }
+    }
+
+    fn push(&mut self, a: Arc) {
+        let id = arc_id(a);
+        if !self.in_queue[id] {
+            self.in_queue[id] = true;
+            self.queue.push_back(a);
+        }
+    }
+
+    /// Find a support for (var=a) at-or-after the residue, updating it.
+    fn has_support(
+        &mut self,
+        problem: &Problem,
+        state: &State,
+        arc: Arc,
+        a: usize,
+        counters: &mut Counters,
+    ) -> bool {
+        let id = arc_id(arc);
+        let other = problem.arc_other(arc);
+        let dom_other = state.dom(other);
+        let residue = self.last[id][a];
+        if residue != usize::MAX && dom_other.get(residue) {
+            // residue still valid: O(1) accept (no fresh support check)
+            return true;
+        }
+        let row = problem.arc_support_row(arc, a);
+        // resume the scan strictly after the stale residue; wrap is NOT
+        // needed within one enforcement (domains only shrink), but across
+        // enforcements (search) residues can be stale-low, so we fall
+        // back to a full scan from 0 when the tail fails.
+        let start = if residue == usize::MAX { 0 } else { residue + 1 };
+        for b in dom_other.iter_ones() {
+            if b < start {
+                continue;
+            }
+            counters.support_checks += 1;
+            if row.get(b) {
+                self.last[id][a] = b;
+                return true;
+            }
+        }
+        if start > 0 {
+            for b in dom_other.iter_ones() {
+                if b >= start {
+                    break;
+                }
+                counters.support_checks += 1;
+                if row.get(b) {
+                    self.last[id][a] = b;
+                    return true;
+                }
+            }
+        }
+        false
+    }
+
+    fn revise(
+        &mut self,
+        problem: &Problem,
+        state: &mut State,
+        arc: Arc,
+        counters: &mut Counters,
+    ) -> (bool, bool) {
+        counters.revisions += 1;
+        let var = problem.arc_var(arc);
+        self.vals_buf.clear();
+        self.vals_buf.extend(state.dom(var).iter_ones());
+        let vals = std::mem::take(&mut self.vals_buf);
+        let mut changed = false;
+        for &a in &vals {
+            if !self.has_support(problem, state, arc, a, counters) {
+                state.remove(var, a);
+                counters.removals += 1;
+                changed = true;
+            }
+        }
+        self.vals_buf = vals;
+        (changed, changed && state.wiped(var))
+    }
+}
+
+impl Default for Ac2001 {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Propagator for Ac2001 {
+    fn name(&self) -> &'static str {
+        "ac2001"
+    }
+
+    fn reset(&mut self, _problem: &Problem) {
+        self.last.clear();
+    }
+
+    fn enforce(
+        &mut self,
+        problem: &Problem,
+        state: &mut State,
+        touched: &[VarId],
+        counters: &mut Counters,
+    ) -> Outcome {
+        self.ensure_tables(problem);
+        self.queue.clear();
+        self.in_queue.clear();
+        self.in_queue.resize(problem.n_constraints() * 2, false);
+        if touched.is_empty() {
+            for a in problem.all_arcs() {
+                self.push(a);
+            }
+        } else {
+            for &v in touched {
+                for &a in problem.arcs_of(v) {
+                    self.push(Arc { cons: a.cons, is_x: !a.is_x });
+                }
+            }
+        }
+        while let Some(arc) = self.queue.pop_front() {
+            self.in_queue[arc_id(arc)] = false;
+            let (changed, wiped) = self.revise(problem, state, arc, counters);
+            if wiped {
+                return Outcome::Wipeout(problem.arc_var(arc));
+            }
+            if changed {
+                let var = problem.arc_var(arc);
+                let witness = problem.arc_other(arc);
+                for &a in problem.arcs_of(var) {
+                    let neighbour_arc = Arc { cons: a.cons, is_x: !a.is_x };
+                    if problem.arc_var(neighbour_arc) != witness {
+                        self.push(neighbour_arc);
+                    }
+                }
+            }
+        }
+        Outcome::Consistent
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ac::ac3::{Ac3, QueueOrder};
+    use crate::gen::random::{random_csp, RandomSpec};
+    use crate::util::quickcheck::forall;
+
+    #[test]
+    fn arc_id_var_mapping_is_consistent() {
+        // ensure_tables sizes last[] by arc_var; verify the id encoding.
+        let mut p = Problem::new("t", 2, 3);
+        p.add_constraint(0, 1, crate::core::Relation::allow_all(3, 3));
+        let ax = Arc { cons: 0, is_x: true };
+        let ay = Arc { cons: 0, is_x: false };
+        assert_eq!(arc_id(ax), 1);
+        assert_eq!(arc_id(ay), 0);
+        let mut e = Ac2001::new();
+        e.ensure_tables(&p);
+        assert_eq!(e.last[arc_id(ax)].len(), p.dom_size(0));
+        assert_eq!(e.last[arc_id(ay)].len(), p.dom_size(1));
+    }
+
+    #[test]
+    fn matches_ac3_closure_on_random_instances() {
+        forall("ac2001-vs-ac3", 0x2001, 20, |rng| {
+            let spec = RandomSpec::new(
+                3 + rng.gen_range(10),
+                1 + rng.gen_range(7),
+                rng.next_f64(),
+                rng.next_f64() * 0.9,
+                rng.next_u64(),
+            );
+            let p = random_csp(&spec);
+            let mut s1 = State::new(&p);
+            let mut s2 = State::new(&p);
+            let mut c = Counters::default();
+            let o1 = Ac3::new(QueueOrder::Fifo).enforce(&p, &mut s1, &[], &mut c);
+            let o2 = Ac2001::new().enforce(&p, &mut s2, &[], &mut c);
+            if o1.is_consistent() != o2.is_consistent() {
+                return Err(format!("outcome mismatch on {spec:?}"));
+            }
+            if o1.is_consistent() && s1.snapshot() != s2.snapshot() {
+                return Err(format!("closure mismatch on {spec:?}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn residues_cut_support_checks() {
+        let p = random_csp(&RandomSpec::new(18, 10, 0.7, 0.4, 42));
+        let mut c3 = Counters::default();
+        let mut c01 = Counters::default();
+        let mut s1 = State::new(&p);
+        let mut s2 = State::new(&p);
+        Ac3::new(QueueOrder::Fifo).enforce(&p, &mut s1, &[], &mut c3);
+        Ac2001::new().enforce(&p, &mut s2, &[], &mut c01);
+        assert!(
+            c01.support_checks <= c3.support_checks,
+            "ac2001 {} vs ac3 {}",
+            c01.support_checks,
+            c3.support_checks
+        );
+    }
+
+    #[test]
+    fn reused_engine_with_stale_residues_is_still_correct() {
+        // Enforce, backtrack-like domain restore, enforce again: the
+        // residue table now points at values that may be out of domain
+        // order; the closure must still match a fresh engine's.
+        let p = crate::gen::queens(7);
+        let mut engine = Ac2001::new();
+        let mut c = Counters::default();
+
+        let mut s = State::new(&p);
+        assert!(engine.enforce(&p, &mut s, &[], &mut c).is_consistent());
+        s.push_level();
+        s.assign(0, 3);
+        let _ = engine.enforce(&p, &mut s, &[0], &mut c);
+        s.pop_level();
+        s.push_level();
+        s.assign(0, 1);
+        let o_reused = engine.enforce(&p, &mut s, &[0], &mut c);
+
+        let mut fresh = State::new(&p);
+        fresh.assign(0, 1);
+        let o_fresh = Ac2001::new().enforce(&p, &mut fresh, &[], &mut c);
+        assert_eq!(o_reused.is_consistent(), o_fresh.is_consistent());
+        assert_eq!(s.snapshot(), fresh.snapshot());
+    }
+}

@@ -1,0 +1,275 @@
+//! AC-3 (Mackworth 1977) — the paper's baseline comparator.
+//!
+//! A queue of directed arcs; each pop *revises* one variable against one
+//! constraint by scanning, value by value, for a support in the witness
+//! variable's current domain.  The scan is deliberately scalar (`allows`
+//! probes) — the bit-parallel variant lives in [`super::ac3bit`] so the
+//! ablation bench can separate algorithmic from representational gains.
+//!
+//! Queue ordering is pluggable ([`QueueOrder`]): FIFO (classic), LIFO,
+//! and smallest-domain-first (a revision-ordering heuristic in the
+//! spirit of Boussemart et al. [5]).
+
+use std::collections::VecDeque;
+
+use crate::ac::{Counters, Outcome, Propagator};
+use crate::core::{Arc, Problem, State, VarId};
+
+/// Revision (queue pop) ordering policy.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum QueueOrder {
+    /// First-in first-out (the textbook AC-3).
+    Fifo,
+    /// Last-in first-out (depth-first propagation).
+    Lifo,
+    /// Pop the arc whose *revised* variable has the smallest domain.
+    MinDom,
+}
+
+/// The AC-3 engine.
+pub struct Ac3 {
+    order: QueueOrder,
+    queue: VecDeque<Arc>,
+    in_queue: Vec<bool>, // indexed by arc id = cons*2 + is_x
+    vals_buf: Vec<usize>,
+}
+
+#[inline]
+fn arc_id(a: Arc) -> usize {
+    a.cons * 2 + a.is_x as usize
+}
+
+impl Ac3 {
+    pub fn new(order: QueueOrder) -> Ac3 {
+        Ac3 { order, queue: VecDeque::new(), in_queue: Vec::new(), vals_buf: Vec::new() }
+    }
+
+    fn push(&mut self, a: Arc) {
+        let id = arc_id(a);
+        if !self.in_queue[id] {
+            self.in_queue[id] = true;
+            self.queue.push_back(a);
+        }
+    }
+
+    fn pop(&mut self, problem: &Problem, state: &State) -> Option<Arc> {
+        let a = match self.order {
+            QueueOrder::Fifo => self.queue.pop_front()?,
+            QueueOrder::Lifo => self.queue.pop_back()?,
+            QueueOrder::MinDom => {
+                // linear scan for the smallest revised-variable domain
+                let (best, _) = self
+                    .queue
+                    .iter()
+                    .enumerate()
+                    .min_by_key(|(_, &a)| state.dom_size(problem.arc_var(a)))?;
+                self.queue.remove(best)?
+            }
+        };
+        self.in_queue[arc_id(a)] = false;
+        Some(a)
+    }
+
+    /// Scalar support scan: does (var=a) have a support on this arc?
+    fn has_support(
+        problem: &Problem,
+        state: &State,
+        arc: Arc,
+        a: usize,
+        counters: &mut Counters,
+    ) -> bool {
+        let other = problem.arc_other(arc);
+        let row = problem.arc_support_row(arc, a);
+        for b in state.dom(other).iter_ones() {
+            counters.support_checks += 1;
+            if row.get(b) {
+                return true;
+            }
+        }
+        false
+    }
+
+    /// Remove unsupported values of the arc's revised variable.
+    /// Returns (changed, wiped).
+    fn revise(
+        &mut self,
+        problem: &Problem,
+        state: &mut State,
+        arc: Arc,
+        counters: &mut Counters,
+    ) -> (bool, bool) {
+        counters.revisions += 1;
+        let var = problem.arc_var(arc);
+        self.vals_buf.clear();
+        self.vals_buf.extend(state.dom(var).iter_ones());
+        let mut changed = false;
+        // take the buffer to avoid aliasing self in the loop
+        let vals = std::mem::take(&mut self.vals_buf);
+        for &a in &vals {
+            if !Self::has_support(problem, state, arc, a, counters) {
+                state.remove(var, a);
+                counters.removals += 1;
+                changed = true;
+            }
+        }
+        self.vals_buf = vals;
+        (changed, changed && state.wiped(var))
+    }
+
+    fn seed(&mut self, problem: &Problem, touched: &[VarId]) {
+        self.queue.clear();
+        self.in_queue.clear();
+        self.in_queue.resize(problem.n_constraints() * 2, false);
+        if touched.is_empty() {
+            for a in problem.all_arcs() {
+                self.push(a);
+            }
+        } else {
+            // domains of `touched` changed: revise their neighbours
+            for &v in touched {
+                for &a in problem.arcs_of(v) {
+                    // the arc revising the *other* endpoint, witnessed by v
+                    let rev = Arc { cons: a.cons, is_x: !a.is_x };
+                    self.push(rev);
+                }
+            }
+        }
+    }
+}
+
+impl Propagator for Ac3 {
+    fn name(&self) -> &'static str {
+        match self.order {
+            QueueOrder::Fifo => "ac3",
+            QueueOrder::Lifo => "ac3-lifo",
+            QueueOrder::MinDom => "ac3-dom",
+        }
+    }
+
+    fn enforce(
+        &mut self,
+        problem: &Problem,
+        state: &mut State,
+        touched: &[VarId],
+        counters: &mut Counters,
+    ) -> Outcome {
+        self.seed(problem, touched);
+        while let Some(arc) = self.pop(problem, state) {
+            let (changed, wiped) = self.revise(problem, state, arc, counters);
+            if wiped {
+                return Outcome::Wipeout(problem.arc_var(arc));
+            }
+            if changed {
+                let var = problem.arc_var(arc);
+                let witness = problem.arc_other(arc);
+                for &a in problem.arcs_of(var) {
+                    let neighbour_arc = Arc { cons: a.cons, is_x: !a.is_x };
+                    let nv = problem.arc_var(neighbour_arc);
+                    if nv != witness {
+                        self.push(neighbour_arc);
+                    }
+                }
+            }
+        }
+        Outcome::Consistent
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::Relation;
+
+    fn chain_eq(n: usize, d: usize) -> Problem {
+        let mut p = Problem::new("chain", n, d);
+        let eq = Relation::from_fn(d, d, |a, b| a == b);
+        for v in 0..n - 1 {
+            p.add_constraint(v, v + 1, eq.clone());
+        }
+        p
+    }
+
+    #[test]
+    fn full_domains_on_equality_chain_stay_full() {
+        let p = chain_eq(5, 3);
+        let mut s = State::new(&p);
+        let mut c = Counters::default();
+        let out = Ac3::new(QueueOrder::Fifo).enforce(&p, &mut s, &[], &mut c);
+        assert_eq!(out, Outcome::Consistent);
+        assert_eq!(s.total_size(), 15);
+        assert!(c.revisions >= 8); // all arcs revised at least once
+    }
+
+    #[test]
+    fn assignment_propagates_down_chain() {
+        let p = chain_eq(6, 4);
+        let mut s = State::new(&p);
+        s.assign(0, 2);
+        let mut c = Counters::default();
+        let out = Ac3::new(QueueOrder::Fifo).enforce(&p, &mut s, &[0], &mut c);
+        assert_eq!(out, Outcome::Consistent);
+        for v in 0..6 {
+            assert_eq!(s.value(v), Some(2), "var {v}");
+        }
+        assert_eq!(c.removals as usize, 5 * 3);
+    }
+
+    #[test]
+    fn wipeout_detected() {
+        let mut p = Problem::new("unsat", 2, 2);
+        p.add_constraint(0, 1, Relation::forbid_all(2, 2));
+        let mut s = State::new(&p);
+        let mut c = Counters::default();
+        let out = Ac3::new(QueueOrder::Fifo).enforce(&p, &mut s, &[], &mut c);
+        assert!(matches!(out, Outcome::Wipeout(_)));
+    }
+
+    #[test]
+    fn touched_seeding_equivalent_to_full_on_prior_ac_state() {
+        // enforce fully, assign, then touched-seeded enforcement must
+        // agree with full re-enforcement.
+        let p = crate::gen::queens(6);
+        let mut engine = Ac3::new(QueueOrder::Fifo);
+        let mut c = Counters::default();
+
+        let mut s1 = State::new(&p);
+        assert!(engine.enforce(&p, &mut s1, &[], &mut c).is_consistent());
+        s1.assign(0, 1);
+        let o1 = engine.enforce(&p, &mut s1, &[0], &mut c);
+
+        let mut s2 = State::new(&p);
+        s2.assign(0, 1);
+        let o2 = engine.enforce(&p, &mut s2, &[], &mut c);
+
+        assert_eq!(o1.is_consistent(), o2.is_consistent());
+        assert_eq!(s1.snapshot(), s2.snapshot());
+    }
+
+    #[test]
+    fn all_orders_reach_same_closure() {
+        let p = crate::gen::random::random_csp(&crate::gen::random::RandomSpec::new(
+            12, 6, 0.6, 0.45, 1234,
+        ));
+        let mut results = Vec::new();
+        for order in [QueueOrder::Fifo, QueueOrder::Lifo, QueueOrder::MinDom] {
+            let mut s = State::new(&p);
+            let mut c = Counters::default();
+            let out = Ac3::new(order).enforce(&p, &mut s, &[], &mut c);
+            results.push((out.is_consistent(), s.snapshot()));
+        }
+        assert_eq!(results[0], results[1]);
+        assert_eq!(results[1], results[2]);
+    }
+
+    #[test]
+    fn already_consistent_makes_no_removals() {
+        let p = chain_eq(4, 3);
+        let mut s = State::new(&p);
+        let mut c = Counters::default();
+        Ac3::new(QueueOrder::Fifo).enforce(&p, &mut s, &[], &mut c);
+        let mut c2 = Counters::default();
+        let out = Ac3::new(QueueOrder::Fifo).enforce(&p, &mut s, &[], &mut c2);
+        assert!(out.is_consistent());
+        assert_eq!(c2.removals, 0);
+    }
+}

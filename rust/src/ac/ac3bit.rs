@@ -1,0 +1,183 @@
+//! AC3^bit — AC-3 with bitwise support tests (Lecoutre & Vion 2008, [8]).
+//!
+//! Identical propagation structure to [`super::ac3::Ac3`] (FIFO queue),
+//! but the per-value support scan is a single word-wise
+//! `row & domain != 0` test instead of a value loop.  On dense domains
+//! this is the strongest *sequential* baseline in the suite — exactly
+//! the representational trick the paper generalises to tensors.
+
+use std::collections::VecDeque;
+
+use crate::ac::{Counters, Outcome, Propagator};
+use crate::core::{Arc, Problem, State, VarId};
+
+/// The bitwise AC-3 engine.
+pub struct Ac3Bit {
+    queue: VecDeque<Arc>,
+    in_queue: Vec<bool>,
+    vals_buf: Vec<usize>,
+}
+
+#[inline]
+fn arc_id(a: Arc) -> usize {
+    a.cons * 2 + a.is_x as usize
+}
+
+impl Ac3Bit {
+    pub fn new() -> Ac3Bit {
+        Ac3Bit { queue: VecDeque::new(), in_queue: Vec::new(), vals_buf: Vec::new() }
+    }
+
+    fn push(&mut self, a: Arc) {
+        let id = arc_id(a);
+        if !self.in_queue[id] {
+            self.in_queue[id] = true;
+            self.queue.push_back(a);
+        }
+    }
+
+    fn revise(
+        &mut self,
+        problem: &Problem,
+        state: &mut State,
+        arc: Arc,
+        counters: &mut Counters,
+    ) -> (bool, bool) {
+        counters.revisions += 1;
+        let var = problem.arc_var(arc);
+        let other = problem.arc_other(arc);
+        self.vals_buf.clear();
+        self.vals_buf.extend(state.dom(var).iter_ones());
+        let vals = std::mem::take(&mut self.vals_buf);
+        let mut changed = false;
+        for &a in &vals {
+            counters.support_checks += 1; // one bit-parallel test
+            if !problem.arc_support_row(arc, a).intersects(state.dom(other)) {
+                state.remove(var, a);
+                counters.removals += 1;
+                changed = true;
+            }
+        }
+        self.vals_buf = vals;
+        (changed, changed && state.wiped(var))
+    }
+}
+
+impl Default for Ac3Bit {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Propagator for Ac3Bit {
+    fn name(&self) -> &'static str {
+        "ac3bit"
+    }
+
+    fn enforce(
+        &mut self,
+        problem: &Problem,
+        state: &mut State,
+        touched: &[VarId],
+        counters: &mut Counters,
+    ) -> Outcome {
+        self.queue.clear();
+        self.in_queue.clear();
+        self.in_queue.resize(problem.n_constraints() * 2, false);
+        if touched.is_empty() {
+            for a in problem.all_arcs() {
+                self.push(a);
+            }
+        } else {
+            for &v in touched {
+                for &a in problem.arcs_of(v) {
+                    self.push(Arc { cons: a.cons, is_x: !a.is_x });
+                }
+            }
+        }
+        while let Some(arc) = self.queue.pop_front() {
+            self.in_queue[arc_id(arc)] = false;
+            let (changed, wiped) = self.revise(problem, state, arc, counters);
+            if wiped {
+                return Outcome::Wipeout(problem.arc_var(arc));
+            }
+            if changed {
+                let var = problem.arc_var(arc);
+                let witness = problem.arc_other(arc);
+                for &a in problem.arcs_of(var) {
+                    let neighbour_arc = Arc { cons: a.cons, is_x: !a.is_x };
+                    if problem.arc_var(neighbour_arc) != witness {
+                        self.push(neighbour_arc);
+                    }
+                }
+            }
+        }
+        Outcome::Consistent
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ac::ac3::{Ac3, QueueOrder};
+    use crate::gen::random::{random_csp, RandomSpec};
+    use crate::util::quickcheck::forall;
+
+    #[test]
+    fn matches_ac3_on_random_instances() {
+        forall("ac3bit-vs-ac3", 0xB17, 20, |rng| {
+            let spec = RandomSpec::new(
+                3 + rng.gen_range(10),
+                1 + rng.gen_range(7),
+                rng.next_f64(),
+                rng.next_f64() * 0.9,
+                rng.next_u64(),
+            );
+            let p = random_csp(&spec);
+            let mut s1 = State::new(&p);
+            let mut s2 = State::new(&p);
+            let mut c1 = Counters::default();
+            let mut c2 = Counters::default();
+            let o1 = Ac3::new(QueueOrder::Fifo).enforce(&p, &mut s1, &[], &mut c1);
+            let o2 = Ac3Bit::new().enforce(&p, &mut s2, &[], &mut c2);
+            if o1.is_consistent() != o2.is_consistent() {
+                return Err(format!("outcome mismatch on {spec:?}"));
+            }
+            if o1.is_consistent() && s1.snapshot() != s2.snapshot() {
+                return Err(format!("closure mismatch on {spec:?}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn fewer_support_checks_than_scalar_ac3() {
+        let p = random_csp(&RandomSpec::new(20, 12, 0.8, 0.4, 77));
+        let mut s1 = State::new(&p);
+        let mut s2 = State::new(&p);
+        let mut c1 = Counters::default();
+        let mut c2 = Counters::default();
+        Ac3::new(QueueOrder::Fifo).enforce(&p, &mut s1, &[], &mut c1);
+        Ac3Bit::new().enforce(&p, &mut s2, &[], &mut c2);
+        assert!(
+            c2.support_checks < c1.support_checks,
+            "bitwise {} vs scalar {}",
+            c2.support_checks,
+            c1.support_checks
+        );
+        // same queue discipline => identical revision counts
+        assert_eq!(c1.revisions, c2.revisions);
+    }
+
+    #[test]
+    fn wipeout_on_pigeonhole_after_assignments() {
+        let p = crate::gen::pigeonhole(4, 3);
+        let mut s = State::new(&p);
+        s.assign(0, 0);
+        s.assign(1, 1);
+        s.assign(2, 2);
+        let mut c = Counters::default();
+        let out = Ac3Bit::new().enforce(&p, &mut s, &[0, 1, 2], &mut c);
+        assert!(matches!(out, Outcome::Wipeout(_)));
+    }
+}

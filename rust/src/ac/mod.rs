@@ -1,0 +1,112 @@
+//! Arc consistency engines.
+//!
+//! Four interchangeable implementations behind the [`Propagator`] trait:
+//!
+//! * [`ac3::Ac3`] — the paper's baseline: queue of directed arcs,
+//!   value-by-value support scan (pluggable queue ordering).
+//! * [`ac2001::Ac2001`] — AC-3 + *last support* residues (ref [4]):
+//!   optimal O(ed²) worst case.
+//! * [`ac3bit::Ac3Bit`] — AC-3 with bitwise support tests (ref [8]):
+//!   one `AND`+`any` per value instead of a value loop.
+//! * [`rtac::RtacNative`] — the paper's contribution in native form:
+//!   synchronous Jacobi-style sweeps of Eq. 1 (exactly what the tensor
+//!   path computes), dense or Prop.-2 incremental.  Counts
+//!   `#Recurrence`; the queue engines count `#Revision`.
+//!
+//! All engines compute the same unique closure (Prop. 1) — asserted
+//! pairwise by integration tests on random instances.
+
+pub mod ac2001;
+pub mod ac3;
+pub mod ac3bit;
+pub mod rtac;
+pub mod sac;
+
+use crate::core::{Problem, State, VarId};
+
+/// Result of an enforcement run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Outcome {
+    /// All domains non-empty and arc consistent.
+    Consistent,
+    /// Some domain was wiped out: the current assignment is dead.
+    Wipeout(VarId),
+}
+
+impl Outcome {
+    pub fn is_consistent(&self) -> bool {
+        matches!(self, Outcome::Consistent)
+    }
+}
+
+/// Work counters in the paper's terms (Table 1).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct Counters {
+    /// AC-3-family: revise() calls (queue pops).  Paper's `#Revision`.
+    pub revisions: u64,
+    /// RTAC-family: full sweeps executed.  Paper's `#Recurrence`.
+    pub recurrences: u64,
+    /// Values removed by the run.
+    pub removals: u64,
+    /// Individual support checks (finer-grained than revisions; used by
+    /// the ablation benches).
+    pub support_checks: u64,
+}
+
+impl Counters {
+    pub fn add(&mut self, other: &Counters) {
+        self.revisions += other.revisions;
+        self.recurrences += other.recurrences;
+        self.removals += other.removals;
+        self.support_checks += other.support_checks;
+    }
+}
+
+/// An arc-consistency enforcement engine.
+pub trait Propagator {
+    /// Human-readable engine name (bench labels).
+    fn name(&self) -> &'static str;
+
+    /// Enforce AC on `state`, given that the domains of `touched`
+    /// variables just changed (empty slice = enforce from scratch on the
+    /// whole network, e.g. at the search root).
+    ///
+    /// Removals go through `state.remove` so the search trail can undo
+    /// them.  Returns the outcome and updates `counters`.
+    fn enforce(
+        &mut self,
+        problem: &Problem,
+        state: &mut State,
+        touched: &[VarId],
+        counters: &mut Counters,
+    ) -> Outcome;
+
+    /// Reset any per-problem caches (e.g. AC-2001 residues) — called when
+    /// the engine is reused for a different problem instance.
+    fn reset(&mut self, _problem: &Problem) {}
+}
+
+/// Engine selection by name (CLI / bench wiring).
+pub fn make_engine(name: &str) -> Result<Box<dyn Propagator>, String> {
+    match name {
+        "ac3" => Ok(Box::new(ac3::Ac3::new(ac3::QueueOrder::Fifo))),
+        "ac3-lifo" => Ok(Box::new(ac3::Ac3::new(ac3::QueueOrder::Lifo))),
+        "ac3-dom" => Ok(Box::new(ac3::Ac3::new(ac3::QueueOrder::MinDom))),
+        "ac2001" => Ok(Box::new(ac2001::Ac2001::new())),
+        "ac3bit" => Ok(Box::new(ac3bit::Ac3Bit::new())),
+        "rtac" => Ok(Box::new(rtac::RtacNative::dense())),
+        "rtac-inc" => Ok(Box::new(rtac::RtacNative::incremental())),
+        // SAC is a *stronger* consistency: not interchangeable with the
+        // AC engines in closure-equality tests, but plugs into the same
+        // solver for stronger-but-costlier propagation.
+        "sac" => Ok(Box::new(sac::Sac1::new(ac3bit::Ac3Bit::new()))),
+        "sac-rtac" => Ok(Box::new(sac::Sac1::new(rtac::RtacNative::incremental()))),
+        other => Err(format!(
+            "unknown engine {other:?} (try ac3 | ac3-lifo | ac3-dom | ac2001 | ac3bit | rtac | rtac-inc | sac | sac-rtac)"
+        )),
+    }
+}
+
+/// All engine names (for cross-engine agreement tests and benches).
+pub const ALL_ENGINES: &[&str] =
+    &["ac3", "ac3-lifo", "ac3-dom", "ac2001", "ac3bit", "rtac", "rtac-inc"];

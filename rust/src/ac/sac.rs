@@ -1,0 +1,170 @@
+//! Singleton arc consistency (SAC) — a stronger consistency built *on
+//! top of* any [`Propagator`]: value (x, a) is SAC iff the subproblem
+//! with x := a is arc consistent.  This is the natural "next level" the
+//! paper's recurrent formulation extends to (each singleton probe is an
+//! independent enforcement — massively parallel in the tensor setting,
+//! and a natural batch for the coordinator).
+//!
+//! Implementation: SAC-1 (Debruyne & Bessière).  Probes run on a scratch
+//! level of the trail; confirmed removals propagate through the inner
+//! engine until a fixpoint over all (var, value) pairs.
+
+use crate::ac::{Counters, Outcome, Propagator};
+use crate::core::{Problem, State, VarId};
+
+/// SAC-1 enforcer wrapping an inner AC engine.
+pub struct Sac1<E: Propagator> {
+    inner: E,
+    /// Probes performed (for the ablation bench).
+    pub probes: u64,
+}
+
+impl<E: Propagator> Sac1<E> {
+    pub fn new(inner: E) -> Sac1<E> {
+        Sac1 { inner, probes: 0 }
+    }
+
+    /// Enforce SAC.  Returns the outcome; `counters` accumulates the
+    /// inner engine's work across all probes.
+    pub fn enforce_sac(
+        &mut self,
+        problem: &Problem,
+        state: &mut State,
+        counters: &mut Counters,
+    ) -> Outcome {
+        // start from the AC closure
+        let out = self.inner.enforce(problem, state, &[], counters);
+        if !out.is_consistent() {
+            return out;
+        }
+        loop {
+            let mut removed_any = false;
+            for x in 0..problem.n_vars() {
+                let vals: Vec<usize> = state.dom(x).iter_ones().collect();
+                if vals.len() <= 1 {
+                    continue; // a singleton that survived AC is SAC
+                }
+                for a in vals {
+                    if !state.contains(x, a) {
+                        continue; // removed by an earlier probe's fallout
+                    }
+                    self.probes += 1;
+                    state.push_level();
+                    state.assign(x, a);
+                    let probe = self.inner.enforce(problem, state, &[x], counters);
+                    state.pop_level();
+                    if !probe.is_consistent() {
+                        state.remove(x, a);
+                        removed_any = true;
+                        if state.wiped(x) {
+                            return Outcome::Wipeout(x);
+                        }
+                        // re-establish AC after a confirmed removal
+                        let out = self.inner.enforce(problem, state, &[x], counters);
+                        if !out.is_consistent() {
+                            return out;
+                        }
+                    }
+                }
+            }
+            if !removed_any {
+                return Outcome::Consistent;
+            }
+        }
+    }
+}
+
+impl<E: Propagator> Propagator for Sac1<E> {
+    fn name(&self) -> &'static str {
+        "sac1"
+    }
+
+    fn reset(&mut self, problem: &Problem) {
+        self.inner.reset(problem);
+        self.probes = 0;
+    }
+
+    fn enforce(
+        &mut self,
+        problem: &Problem,
+        state: &mut State,
+        _touched: &[VarId],
+        counters: &mut Counters,
+    ) -> Outcome {
+        self.enforce_sac(problem, state, counters)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ac::ac3bit::Ac3Bit;
+    use crate::ac::rtac::RtacNative;
+    use crate::core::Relation;
+    use crate::gen::random::{random_csp, RandomSpec};
+
+    #[test]
+    fn sac_strictly_stronger_than_ac_on_known_gadget() {
+        // x0,x1,x2 pairwise != over d=2: AC-consistent (every value has
+        // a support on each edge) but no solution — SAC detects it.
+        let p = crate::gen::pigeonhole(3, 2);
+        let mut s_ac = State::new(&p);
+        let mut c = Counters::default();
+        assert!(Ac3Bit::new().enforce(&p, &mut s_ac, &[], &mut c).is_consistent());
+        assert_eq!(s_ac.total_size(), 6); // AC removes nothing
+
+        let mut s_sac = State::new(&p);
+        let out = Sac1::new(Ac3Bit::new()).enforce_sac(&p, &mut s_sac, &mut c);
+        assert!(!out.is_consistent(), "SAC must refute pigeonhole(3,2)");
+    }
+
+    #[test]
+    fn sac_equals_ac_when_already_sac() {
+        let mut p = Problem::new("chain", 4, 3);
+        let eq = Relation::from_fn(3, 3, |a, b| a == b);
+        for v in 0..3 {
+            p.add_constraint(v, v + 1, eq.clone());
+        }
+        let mut s = State::new(&p);
+        let mut c = Counters::default();
+        let out = Sac1::new(RtacNative::dense()).enforce_sac(&p, &mut s, &mut c);
+        assert!(out.is_consistent());
+        assert_eq!(s.total_size(), 12); // equality chain: everything SAC
+    }
+
+    #[test]
+    fn sac_closure_engine_independent() {
+        for seed in [11u64, 29, 47] {
+            let p = random_csp(&RandomSpec::new(8, 4, 0.7, 0.45, seed));
+            let mut s1 = State::new(&p);
+            let mut s2 = State::new(&p);
+            let mut c = Counters::default();
+            let o1 = Sac1::new(Ac3Bit::new()).enforce_sac(&p, &mut s1, &mut c);
+            let o2 = Sac1::new(RtacNative::incremental()).enforce_sac(&p, &mut s2, &mut c);
+            assert_eq!(o1.is_consistent(), o2.is_consistent(), "seed {seed}");
+            if o1.is_consistent() {
+                assert_eq!(s1.snapshot(), s2.snapshot(), "seed {seed}");
+            }
+        }
+    }
+
+    #[test]
+    fn sac_subset_of_ac_closure() {
+        for seed in [5u64, 17] {
+            let p = random_csp(&RandomSpec::new(9, 4, 0.8, 0.5, seed));
+            let mut s_ac = State::new(&p);
+            let mut s_sac = State::new(&p);
+            let mut c = Counters::default();
+            let o_ac = Ac3Bit::new().enforce(&p, &mut s_ac, &[], &mut c);
+            let o_sac = Sac1::new(Ac3Bit::new()).enforce_sac(&p, &mut s_sac, &mut c);
+            if !o_ac.is_consistent() || !o_sac.is_consistent() {
+                continue;
+            }
+            for v in 0..p.n_vars() {
+                for a in s_sac.dom(v).iter_ones() {
+                    assert!(s_ac.contains(v, a), "SAC kept a value AC removed");
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,284 @@
+//! Fig. 3 reproduction: running time (ms) of one assignment in backtrack
+//! search, across the n × density grid, per engine.
+//!
+//! Paper series: AC-3 (CPU, Python+JIT) vs RTAC (GPU, PyTorch).  Ours:
+//! AC-3 / AC3^bit (native CPU baselines), RTAC native dense+incremental
+//! (CPU mirror of the tensor formulation), and — on bucket-sized grids —
+//! RTAC-XLA through the runtime.  Absolute numbers differ from the paper
+//! (no GPU here); the *shape* claims are asserted in EXPERIMENTS.md.
+
+use crate::bench::workloads::{run_grid, CellResult, GridSpec};
+use crate::util::json::{num, obj, s, Json};
+use crate::util::table::{fnum, Table};
+
+/// Default engine series for the figure.
+pub const DEFAULT_ENGINES: &[&str] = &["ac3", "ac3bit", "rtac", "rtac-inc"];
+
+/// Run the grid and return all cells.
+pub fn run(spec: &GridSpec, engines: &[&str]) -> Vec<CellResult> {
+    run_grid(spec, engines)
+}
+
+/// Propagator running directly on a loaded `Runtime` (no coordinator,
+/// no batching) — used by the XLA series so the grid loads/compiles the
+/// artifacts exactly once.
+pub struct DirectXla<'a> {
+    rt: &'a crate::runtime::Runtime,
+    artifact: String,
+    bucket: crate::runtime::Bucket,
+    cons: crate::runtime::DeviceTensor,
+}
+
+impl<'a> DirectXla<'a> {
+    /// Bind the runtime to one problem (encodes its constraint tensor).
+    pub fn bind(
+        rt: &'a crate::runtime::Runtime,
+        problem: &crate::core::Problem,
+    ) -> anyhow::Result<DirectXla<'a>> {
+        use anyhow::Context;
+        let entry = rt
+            .manifest()
+            .pick(
+                crate::runtime::Kind::Fixpoint,
+                problem.n_vars(),
+                problem.max_dom_size(),
+                1,
+            )
+            .context("no artifact bucket fits the problem")?;
+        let bucket = crate::runtime::Bucket { n: entry.n, d: entry.d };
+        let cons_host = crate::runtime::encode_cons(problem, bucket)?;
+        // resident constraint tensor: uploaded once per problem (§Perf L3)
+        let cons = rt.upload(&cons_host, &[bucket.n, bucket.n, bucket.d, bucket.d])?;
+        Ok(DirectXla { rt, artifact: entry.name.clone(), bucket, cons })
+    }
+}
+
+impl crate::ac::Propagator for DirectXla<'_> {
+    fn name(&self) -> &'static str {
+        "rtac-xla"
+    }
+
+    fn enforce(
+        &mut self,
+        problem: &crate::core::Problem,
+        state: &mut crate::core::State,
+        _touched: &[crate::core::VarId],
+        counters: &mut crate::ac::Counters,
+    ) -> crate::ac::Outcome {
+        let vars = crate::runtime::encode_vars(problem, state, self.bucket)
+            .expect("bucket fits by construction");
+        let out = self
+            .rt
+            .run_fixpoint_dev(&self.artifact, &self.cons, &vars)
+            .expect("artifact execution");
+        counters.recurrences += out.iters.max(0) as u64;
+        if out.status[0] == crate::runtime::STATUS_WIPEOUT {
+            return crate::ac::Outcome::Wipeout(0);
+        }
+        let before = state.trail_len();
+        crate::runtime::decode_vars(problem, state, &out.vars, self.bucket)
+            .expect("monotone plane");
+        counters.removals += (state.trail_len() - before) as u64;
+        crate::ac::Outcome::Consistent
+    }
+}
+
+/// The XLA series: the same measurement protocol, every AC call on the
+/// AOT artifacts (`GridSpec::xla()` sizes only — artifacts top out at
+/// n=64, d=16).  Recurrences come from the executable's `iters` output.
+pub fn run_xla(
+    spec: &GridSpec,
+    artifact_dir: &std::path::Path,
+) -> anyhow::Result<Vec<CellResult>> {
+    use crate::gen::random::{random_csp, RandomSpec};
+    use crate::search::{Solver, SolverConfig, ValOrder, VarHeuristic};
+
+    let rt = crate::runtime::Runtime::load_filtered(artifact_dir, |e| {
+        e.kind == crate::runtime::Kind::Fixpoint
+    })?;
+    let mut out = Vec::new();
+    for &n in &spec.sizes {
+        for &density in &spec.densities {
+            let mut remaining = spec.assignments;
+            let mut total_ms = 0.0;
+            let mut calls = 0u64;
+            let mut recurrences = 0u64;
+            let mut measured = 0u64;
+            let mut episodes = 0u64;
+            let mut seed = spec.seed;
+            while remaining > 0 && episodes <= spec.assignments {
+                episodes += 1;
+                let p = random_csp(&RandomSpec::new(
+                    n,
+                    spec.dom_size,
+                    density,
+                    spec.tightness,
+                    seed,
+                ));
+                let mut engine = DirectXla::bind(&rt, &p)?;
+                let cfg = SolverConfig {
+                    var_heuristic: VarHeuristic::MinDom,
+                    val_order: ValOrder::Random,
+                    max_assignments: remaining,
+                    record_ac_times: true,
+                    seed,
+                    ..Default::default()
+                };
+                let mut solver = Solver::new(&mut engine, cfg);
+                let (_r, stats) = solver.solve(&p);
+                total_ms += stats.ac_times_ms.iter().sum::<f64>();
+                calls += stats.ac_calls;
+                recurrences += stats.ac.recurrences;
+                measured += stats.assignments;
+                remaining = remaining.saturating_sub(stats.assignments.max(1));
+                seed = seed.wrapping_mul(6364136223846793005).wrapping_add(1);
+            }
+            out.push(CellResult {
+                n,
+                density,
+                engine: "rtac-xla".into(),
+                mean_ac_ms: if calls == 0 { 0.0 } else { total_ms / calls as f64 },
+                revisions_per_call: 0.0,
+                recurrences_per_call: if calls == 0 {
+                    0.0
+                } else {
+                    recurrences as f64 / calls as f64
+                },
+                assignments: measured,
+                episodes,
+            });
+        }
+    }
+    Ok(out)
+}
+
+/// Render the paper-style matrix: one row per (n, density), one time
+/// column per engine.
+pub fn render(results: &[CellResult], engines: &[&str]) -> String {
+    let mut headers = vec!["#Variable", "Density"];
+    let cols: Vec<String> = engines.iter().map(|e| format!("{e} ms/assign")).collect();
+    headers.extend(cols.iter().map(|c| c.as_str()));
+    let mut t = Table::new(&headers);
+    let mut keys: Vec<(usize, u64)> = results
+        .iter()
+        .map(|r| (r.n, r.density.to_bits()))
+        .collect();
+    keys.sort();
+    keys.dedup();
+    for (n, dbits) in keys {
+        let density = f64::from_bits(dbits);
+        let mut row = vec![n.to_string(), format!("{density:.2}")];
+        for &e in engines {
+            let cell = results
+                .iter()
+                .find(|r| r.n == n && r.density.to_bits() == dbits && r.engine == e);
+            row.push(cell.map(|c| fnum(c.mean_ac_ms)).unwrap_or_else(|| "-".into()));
+        }
+        t.row(row);
+    }
+    t.render()
+}
+
+/// JSON export (series consumed by EXPERIMENTS.md tooling).
+pub fn to_json(results: &[CellResult]) -> Json {
+    Json::Arr(
+        results
+            .iter()
+            .map(|r| {
+                obj(vec![
+                    ("n", num(r.n as f64)),
+                    ("density", num(r.density)),
+                    ("engine", s(&r.engine)),
+                    ("mean_ac_ms", num(r.mean_ac_ms)),
+                    ("revisions_per_call", num(r.revisions_per_call)),
+                    ("recurrences_per_call", num(r.recurrences_per_call)),
+                    ("assignments", num(r.assignments as f64)),
+                ])
+            })
+            .collect(),
+    )
+}
+
+/// Shape checks corresponding to the paper's two §5.3 claims; returns
+/// human-readable verdict lines (also asserted in tests at small scale).
+pub fn shape_claims(results: &[CellResult]) -> Vec<String> {
+    let mut out = Vec::new();
+    // claim 1: RTAC recurrences ~flat over the grid (max/min small)
+    let recs: Vec<f64> = results
+        .iter()
+        .filter(|r| r.engine.starts_with("rtac") && r.recurrences_per_call > 0.0)
+        .map(|r| r.recurrences_per_call)
+        .collect();
+    if !recs.is_empty() {
+        let (lo, hi) = recs
+            .iter()
+            .fold((f64::INFINITY, 0.0f64), |(l, h), &x| (l.min(x), h.max(x)));
+        out.push(format!(
+            "#Recurrence range over grid: [{lo:.2}, {hi:.2}] (paper: 3.4-4.8, ~flat) -> {}",
+            if hi / lo.max(1e-9) < 3.0 { "FLAT ok" } else { "NOT flat" }
+        ));
+    }
+    // claim 2: AC-3 revisions grow with n and density
+    let mut ac3: Vec<&CellResult> = results.iter().filter(|r| r.engine == "ac3").collect();
+    ac3.sort_by_key(|r| (r.n, r.density.to_bits()));
+    if ac3.len() >= 2 {
+        let first = ac3.first().unwrap();
+        let last = ac3.last().unwrap();
+        out.push(format!(
+            "#Revision grows {:.1} -> {:.1} from ({}, {:.2}) to ({}, {:.2}) -> {}",
+            first.revisions_per_call,
+            last.revisions_per_call,
+            first.n,
+            first.density,
+            last.n,
+            last.density,
+            if last.revisions_per_call > 2.0 * first.revisions_per_call {
+                "GROWS ok"
+            } else {
+                "no growth?"
+            }
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_results() -> Vec<CellResult> {
+        let spec = GridSpec {
+            sizes: vec![8, 16],
+            densities: vec![0.2, 0.9],
+            dom_size: 4,
+            tightness: 0.35,
+            assignments: 30,
+            seed: 3,
+        };
+        run(&spec, &["ac3", "rtac"])
+    }
+
+    #[test]
+    fn render_has_row_per_cell() {
+        let rs = tiny_results();
+        let txt = render(&rs, &["ac3", "rtac"]);
+        assert_eq!(txt.lines().count(), 2 + 4); // header + underline + 4 cells
+        assert!(txt.contains("ac3 ms/assign"));
+    }
+
+    #[test]
+    fn json_roundtrips() {
+        let rs = tiny_results();
+        let j = to_json(&rs);
+        let parsed = crate::util::json::parse(&j.to_string()).unwrap();
+        assert_eq!(parsed.as_arr().unwrap().len(), rs.len());
+    }
+
+    #[test]
+    fn shape_claims_hold_even_tiny() {
+        let rs = tiny_results();
+        let claims = shape_claims(&rs);
+        assert_eq!(claims.len(), 2);
+        assert!(claims[1].contains("GROWS ok"), "{claims:?}");
+    }
+}

@@ -1,0 +1,127 @@
+//! Bench harness: warmup + repeated measurement + summary reporting
+//! (criterion-style methodology; criterion itself is not in the offline
+//! crate set).  Used by `benches/*.rs` (cargo bench) and the `rtac
+//! bench-*` CLI subcommands.
+
+use std::time::{Duration, Instant};
+
+use crate::util::stats::Summary;
+
+/// Measurement configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct BenchConfig {
+    /// Un-timed warmup executions.
+    pub warmup: usize,
+    /// Timed samples.
+    pub samples: usize,
+    /// Soft wall-clock cap: sampling stops early once exceeded.
+    pub max_time: Duration,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        BenchConfig { warmup: 3, samples: 20, max_time: Duration::from_secs(10) }
+    }
+}
+
+impl BenchConfig {
+    pub fn quick() -> Self {
+        BenchConfig { warmup: 1, samples: 5, max_time: Duration::from_secs(3) }
+    }
+}
+
+/// One benchmark measurement.
+#[derive(Clone, Debug)]
+pub struct Measurement {
+    pub name: String,
+    pub summary: Summary,
+}
+
+impl Measurement {
+    /// criterion-style one-liner: `name  time: [p50 µs]  mean ± std`.
+    pub fn line(&self) -> String {
+        format!(
+            "{:<42} time: p50 {:>10.2}µs  mean {:>10.2}µs ± {:>8.2}  (n={})",
+            self.name, self.summary.p50, self.summary.mean, self.summary.std, self.summary.n
+        )
+    }
+}
+
+/// Measure `f` (already including any per-call setup) in microseconds.
+pub fn bench(name: &str, cfg: &BenchConfig, mut f: impl FnMut()) -> Measurement {
+    for _ in 0..cfg.warmup {
+        f();
+    }
+    let started = Instant::now();
+    let mut samples = Vec::with_capacity(cfg.samples);
+    for _ in 0..cfg.samples {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_secs_f64() * 1e6);
+        if started.elapsed() > cfg.max_time && samples.len() >= 3 {
+            break;
+        }
+    }
+    Measurement {
+        name: name.to_string(),
+        summary: Summary::from(&samples).expect("at least one sample"),
+    }
+}
+
+/// Measure a closure that runs `inner_iters` iterations internally,
+/// reporting the per-iteration time.
+pub fn bench_batch(
+    name: &str,
+    cfg: &BenchConfig,
+    inner_iters: usize,
+    mut f: impl FnMut(),
+) -> Measurement {
+    let mut m = bench(name, cfg, &mut f);
+    let k = inner_iters.max(1) as f64;
+    m.summary = Summary {
+        n: m.summary.n,
+        mean: m.summary.mean / k,
+        std: m.summary.std / k,
+        min: m.summary.min / k,
+        max: m.summary.max / k,
+        p50: m.summary.p50 / k,
+        p90: m.summary.p90 / k,
+        p99: m.summary.p99 / k,
+    };
+    m
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_produces_sane_summary() {
+        let cfg = BenchConfig { warmup: 1, samples: 5, max_time: Duration::from_secs(1) };
+        let m = bench("busy-wait", &cfg, || {
+            std::thread::sleep(Duration::from_micros(200));
+        });
+        assert!(m.summary.mean >= 150.0, "mean {}", m.summary.mean);
+        assert!(m.summary.n >= 3);
+        assert!(m.line().contains("busy-wait"));
+    }
+
+    #[test]
+    fn bench_batch_divides() {
+        let cfg = BenchConfig { warmup: 0, samples: 3, max_time: Duration::from_secs(1) };
+        let m = bench_batch("10x", &cfg, 10, || {
+            std::thread::sleep(Duration::from_micros(100));
+        });
+        // 100µs / 10 iters ≈ 10µs each
+        assert!(m.summary.mean < 60.0, "mean {}", m.summary.mean);
+    }
+
+    #[test]
+    fn max_time_stops_early() {
+        let cfg =
+            BenchConfig { warmup: 0, samples: 1000, max_time: Duration::from_millis(50) };
+        let m = bench("slow", &cfg, || std::thread::sleep(Duration::from_millis(10)));
+        assert!(m.summary.n < 1000);
+        assert!(m.summary.n >= 3);
+    }
+}

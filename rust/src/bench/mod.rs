@@ -1,0 +1,12 @@
+//! Benchmark drivers reproducing the paper's evaluation (one module per
+//! table/figure, DESIGN.md §5) plus ablations.  `benches/*.rs` and the
+//! `rtac bench-*` CLI subcommands are thin wrappers over these.
+
+pub mod ablations;
+pub mod fig3;
+pub mod harness;
+pub mod table1;
+pub mod workloads;
+
+pub use harness::{bench, bench_batch, BenchConfig, Measurement};
+pub use workloads::{run_cell, run_grid, CellResult, GridSpec};

@@ -1,0 +1,199 @@
+//! Paper-grid workloads (§5.2): the 5×5 sweep over #variables ×
+//! constraint density, plus the measurement protocol shared by Fig. 3
+//! and Table 1 — run MAC search, average AC work per assignment.
+//!
+//! Paper protocol: "25 random CSPs with #variables {100,250,500,750,1000}
+//! and densities {0.1,0.25,0.5,0.75,1.0} ... average of 50K assignments."
+//! Domain size and tightness are unspecified (DESIGN.md §2); defaults
+//! here are d=20, t=0.3, both overridable from the CLI.  Scaled defaults
+//! keep container runtime sane; `--full` reproduces the paper grid.
+
+use crate::ac::make_engine;
+use crate::gen::random::{random_csp, RandomSpec};
+use crate::search::{Solver, SolverConfig, ValOrder, VarHeuristic};
+
+/// The measurement grid.
+#[derive(Clone, Debug)]
+pub struct GridSpec {
+    pub sizes: Vec<usize>,
+    pub densities: Vec<f64>,
+    pub dom_size: usize,
+    pub tightness: f64,
+    /// Assignments to average per cell (paper: 50_000).
+    pub assignments: u64,
+    pub seed: u64,
+}
+
+impl GridSpec {
+    /// Container-scale default grid.
+    pub fn scaled() -> GridSpec {
+        GridSpec {
+            sizes: vec![20, 50, 100, 200],
+            densities: vec![0.1, 0.25, 0.5, 0.75, 1.0],
+            dom_size: 20,
+            tightness: 0.3,
+            assignments: 300,
+            seed: 2024,
+        }
+    }
+
+    /// The paper's grid (expensive; hours on CPU for the native engines).
+    pub fn paper_full() -> GridSpec {
+        GridSpec {
+            sizes: vec![100, 250, 500, 750, 1000],
+            densities: vec![0.1, 0.25, 0.5, 0.75, 1.0],
+            dom_size: 20,
+            tightness: 0.3,
+            assignments: 50_000,
+            seed: 2024,
+        }
+    }
+
+    /// Bucket-sized grid for the XLA series (artifacts top out at
+    /// n=64, d=16).
+    pub fn xla() -> GridSpec {
+        GridSpec {
+            sizes: vec![16, 32, 64],
+            densities: vec![0.1, 0.25, 0.5, 0.75, 1.0],
+            dom_size: 8,
+            tightness: 0.3,
+            assignments: 60,
+            seed: 2024,
+        }
+    }
+}
+
+/// Per-(cell, engine) measurement.
+#[derive(Clone, Debug)]
+pub struct CellResult {
+    pub n: usize,
+    pub density: f64,
+    pub engine: String,
+    /// Fig. 3 y-axis: mean AC time per assignment, ms.
+    pub mean_ac_ms: f64,
+    /// Table 1: mean revise() calls per AC call (queue engines).
+    pub revisions_per_call: f64,
+    /// Table 1: mean sweeps per AC call (recurrent engines).
+    pub recurrences_per_call: f64,
+    /// Assignments actually measured.
+    pub assignments: u64,
+    /// Solve episodes needed to reach the assignment budget.
+    pub episodes: u64,
+}
+
+/// Run one grid cell with one engine: repeatedly solve fresh instances
+/// (value order randomised per episode) until the assignment budget is
+/// consumed, aggregating AC statistics — the paper's averaging protocol.
+pub fn run_cell(spec: &GridSpec, n: usize, density: f64, engine_name: &str) -> CellResult {
+    let mut engine = make_engine(engine_name).unwrap_or_else(|e| panic!("{e}"));
+    let mut remaining = spec.assignments;
+    let mut total_ms = 0.0;
+    let mut calls = 0u64;
+    let mut revisions = 0u64;
+    let mut recurrences = 0u64;
+    let mut measured = 0u64;
+    let mut episodes = 0u64;
+    let mut episode_seed = spec.seed;
+    while remaining > 0 {
+        episodes += 1;
+        let p = random_csp(&RandomSpec::new(n, spec.dom_size, density, spec.tightness, episode_seed));
+        let cfg = SolverConfig {
+            var_heuristic: VarHeuristic::MinDom,
+            val_order: ValOrder::Random,
+            max_assignments: remaining,
+            record_ac_times: true,
+            seed: episode_seed,
+            ..Default::default()
+        };
+        let mut solver = Solver::new(engine.as_mut(), cfg);
+        let (_result, stats) = solver.solve(&p);
+        total_ms += stats.ac_times_ms.iter().sum::<f64>();
+        calls += stats.ac_calls;
+        revisions += stats.ac.revisions;
+        recurrences += stats.ac.recurrences;
+        measured += stats.assignments;
+        remaining = remaining.saturating_sub(stats.assignments.max(1));
+        episode_seed = episode_seed.wrapping_mul(6364136223846793005).wrapping_add(1);
+        if episodes > spec.assignments {
+            break; // safety: degenerate cells (e.g. n tiny) can't absorb budget
+        }
+    }
+    CellResult {
+        n,
+        density,
+        engine: engine_name.to_string(),
+        mean_ac_ms: if calls == 0 { 0.0 } else { total_ms / calls as f64 },
+        revisions_per_call: if calls == 0 { 0.0 } else { revisions as f64 / calls as f64 },
+        recurrences_per_call: if calls == 0 { 0.0 } else { recurrences as f64 / calls as f64 },
+        assignments: measured,
+        episodes,
+    }
+}
+
+/// Run a whole grid for several engines.
+pub fn run_grid(spec: &GridSpec, engines: &[&str]) -> Vec<CellResult> {
+    let mut out = Vec::new();
+    for &n in &spec.sizes {
+        for &density in &spec.densities {
+            for &engine in engines {
+                out.push(run_cell(spec, n, density, engine));
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> GridSpec {
+        GridSpec {
+            sizes: vec![10],
+            densities: vec![0.5],
+            dom_size: 5,
+            tightness: 0.35,
+            assignments: 40,
+            seed: 7,
+        }
+    }
+
+    #[test]
+    fn cell_consumes_assignment_budget() {
+        let spec = tiny();
+        let r = run_cell(&spec, 10, 0.5, "ac3");
+        assert!(r.assignments >= 30, "measured {}", r.assignments);
+        assert!(r.mean_ac_ms >= 0.0);
+        assert!(r.revisions_per_call > 0.0);
+        assert_eq!(r.recurrences_per_call, 0.0); // queue engine
+    }
+
+    #[test]
+    fn recurrent_engine_reports_recurrences() {
+        let spec = tiny();
+        let r = run_cell(&spec, 10, 0.5, "rtac-inc");
+        assert!(r.recurrences_per_call >= 1.0);
+        assert_eq!(r.revisions_per_call, 0.0);
+    }
+
+    #[test]
+    fn grid_covers_cells_x_engines() {
+        let mut spec = tiny();
+        spec.assignments = 10;
+        spec.sizes = vec![8, 10];
+        spec.densities = vec![0.2, 0.8];
+        let rs = run_grid(&spec, &["ac3", "rtac"]);
+        assert_eq!(rs.len(), 2 * 2 * 2);
+        assert!(rs.iter().any(|r| r.engine == "rtac" && r.n == 8));
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let spec = tiny();
+        let a = run_cell(&spec, 10, 0.5, "ac3");
+        let b = run_cell(&spec, 10, 0.5, "ac3");
+        assert_eq!(a.revisions_per_call, b.revisions_per_call);
+        assert_eq!(a.assignments, b.assignments);
+        assert_eq!(a.episodes, b.episodes);
+    }
+}

@@ -1,0 +1,83 @@
+//! `TensorEngine` — a [`Propagator`] whose enforcement runs on the XLA
+//! artifacts *through the coordinator*.  This is what lets the existing
+//! MAC solver (search/solver.rs) run unchanged on the tensor path: each
+//! AC call encodes the current domains, submits them to the session, and
+//! decodes the enforced plane back through the trail.
+//!
+//! When several search workers share one coordinator session, their AC
+//! calls coalesce into batched executions — the end-to-end system the
+//! paper's GPU experiments point at (DESIGN.md §3, examples/serve_demo).
+
+use crate::ac::{Counters, Outcome, Propagator};
+use crate::coordinator::service::Handle;
+use crate::core::{Problem, State, VarId};
+use crate::runtime::{decode_vars, encode_vars};
+
+/// Propagator that routes enforcement through a coordinator session.
+pub struct TensorEngine {
+    handle: Handle,
+    /// Set on coordinator failure: the engine is then poisoned and
+    /// reports wipeouts to force search termination.
+    pub failed: Option<String>,
+}
+
+impl TensorEngine {
+    pub fn new(handle: Handle) -> TensorEngine {
+        TensorEngine { handle, failed: None }
+    }
+}
+
+impl Propagator for TensorEngine {
+    fn name(&self) -> &'static str {
+        "tensor-xla"
+    }
+
+    fn enforce(
+        &mut self,
+        problem: &Problem,
+        state: &mut State,
+        _touched: &[VarId], // dense artifact: the whole plane each time
+        counters: &mut Counters,
+    ) -> Outcome {
+        if self.failed.is_some() {
+            return Outcome::Wipeout(0);
+        }
+        let bucket = self.handle.bucket;
+        let plane = match encode_vars(problem, state, bucket) {
+            Ok(p) => p,
+            Err(e) => {
+                self.failed = Some(format!("encode: {e:#}"));
+                return Outcome::Wipeout(0);
+            }
+        };
+        let resp = match self.handle.enforce_blocking(plane) {
+            Ok(r) => r,
+            Err(e) => {
+                self.failed = Some(format!("submit: {e:#}"));
+                return Outcome::Wipeout(0);
+            }
+        };
+        counters.recurrences += resp.iters.max(0) as u64;
+        if resp.wiped() {
+            // the artifact reports status only; find a wiped/nearly-wiped
+            // variable for the wdeg heuristic by decoding into a scratch
+            // copy (the real state must stay untouched on wipeout so the
+            // search pops a clean level).
+            let mut probe = state.clone();
+            let _ = decode_vars(problem, &mut probe, &resp.plane, bucket);
+            let victim = (0..problem.n_vars()).find(|&v| probe.wiped(v)).unwrap_or(0);
+            return Outcome::Wipeout(victim);
+        }
+        let trail_before = state.trail_len();
+        match decode_vars(problem, state, &resp.plane, bucket) {
+            Ok(_changed) => {
+                counters.removals += (state.trail_len() - trail_before) as u64;
+                Outcome::Consistent
+            }
+            Err(e) => {
+                self.failed = Some(format!("decode: {e:#}"));
+                Outcome::Wipeout(0)
+            }
+        }
+    }
+}

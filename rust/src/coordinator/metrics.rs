@@ -1,0 +1,147 @@
+//! Coordinator metrics: request/batch counters, latency decomposition
+//! (queue wait vs execution), batch-occupancy histogram, padding waste.
+
+use std::sync::Mutex;
+use std::time::Duration;
+
+use crate::util::stats::Online;
+
+/// Shared, thread-safe metrics sink.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    inner: Mutex<Inner>,
+}
+
+#[derive(Debug, Default)]
+struct Inner {
+    requests: u64,
+    responses: u64,
+    batches: u64,
+    batch_occupancy_sum: u64,
+    padded_slots: u64,
+    wipeouts: u64,
+    queue_us: Online,
+    exec_us: Online,
+    total_us: Online,
+    iters: Online,
+}
+
+/// A snapshot for reporting.
+#[derive(Clone, Debug)]
+pub struct MetricsSnapshot {
+    pub requests: u64,
+    pub responses: u64,
+    pub batches: u64,
+    pub mean_batch_occupancy: f64,
+    pub padded_slots: u64,
+    pub wipeouts: u64,
+    pub mean_queue_us: f64,
+    pub mean_exec_us: f64,
+    pub mean_total_us: f64,
+    pub max_total_us: f64,
+    pub mean_iters: f64,
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics::default()
+    }
+
+    pub fn on_submit(&self) {
+        self.inner.lock().unwrap().requests += 1;
+    }
+
+    /// Record one executed batch: `real` occupied slots of `capacity`.
+    pub fn on_batch(&self, real: usize, capacity: usize, exec: Duration) {
+        let mut m = self.inner.lock().unwrap();
+        m.batches += 1;
+        m.batch_occupancy_sum += real as u64;
+        m.padded_slots += (capacity - real) as u64;
+        m.exec_us.push(exec.as_secs_f64() * 1e6);
+    }
+
+    /// Record one completed request.
+    pub fn on_response(&self, queue: Duration, total: Duration, iters: i32, wiped: bool) {
+        let mut m = self.inner.lock().unwrap();
+        m.responses += 1;
+        m.queue_us.push(queue.as_secs_f64() * 1e6);
+        m.total_us.push(total.as_secs_f64() * 1e6);
+        m.iters.push(iters as f64);
+        if wiped {
+            m.wipeouts += 1;
+        }
+    }
+
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let m = self.inner.lock().unwrap();
+        MetricsSnapshot {
+            requests: m.requests,
+            responses: m.responses,
+            batches: m.batches,
+            mean_batch_occupancy: if m.batches == 0 {
+                0.0
+            } else {
+                m.batch_occupancy_sum as f64 / m.batches as f64
+            },
+            padded_slots: m.padded_slots,
+            wipeouts: m.wipeouts,
+            mean_queue_us: m.queue_us.mean(),
+            mean_exec_us: m.exec_us.mean(),
+            mean_total_us: m.total_us.mean(),
+            max_total_us: m.total_us.max(),
+            mean_iters: m.iters.mean(),
+        }
+    }
+}
+
+impl MetricsSnapshot {
+    /// One-line human summary (served by `rtac serve` and the examples).
+    pub fn summary(&self) -> String {
+        format!(
+            "req={} resp={} batches={} occ={:.2} padded={} wipeouts={} \
+             queue={:.0}µs exec={:.0}µs total={:.0}µs iters={:.2}",
+            self.requests,
+            self.responses,
+            self.batches,
+            self.mean_batch_occupancy,
+            self.padded_slots,
+            self.wipeouts,
+            self.mean_queue_us,
+            self.mean_exec_us,
+            self.mean_total_us,
+            self.mean_iters,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let m = Metrics::new();
+        m.on_submit();
+        m.on_submit();
+        m.on_batch(2, 4, Duration::from_micros(100));
+        m.on_response(Duration::from_micros(10), Duration::from_micros(110), 4, false);
+        m.on_response(Duration::from_micros(20), Duration::from_micros(120), 5, true);
+        let s = m.snapshot();
+        assert_eq!(s.requests, 2);
+        assert_eq!(s.responses, 2);
+        assert_eq!(s.batches, 1);
+        assert_eq!(s.padded_slots, 2);
+        assert_eq!(s.wipeouts, 1);
+        assert!((s.mean_batch_occupancy - 2.0).abs() < 1e-9);
+        assert!((s.mean_iters - 4.5).abs() < 1e-9);
+        assert!(s.mean_total_us > s.mean_queue_us);
+        assert!(!s.summary().is_empty());
+    }
+
+    #[test]
+    fn snapshot_of_empty_metrics() {
+        let s = Metrics::new().snapshot();
+        assert_eq!(s.requests, 0);
+        assert_eq!(s.mean_batch_occupancy, 0.0);
+    }
+}

@@ -1,0 +1,13 @@
+//! The L3 coordination system: a per-problem serving session that
+//! dynamically batches arc-consistency requests from concurrent clients
+//! (parallel search workers, the `serve` CLI loop, benches) into fused
+//! XLA executions — router + dynamic batcher + executor, vLLM-style but
+//! for constraint propagation.
+
+pub mod engine;
+pub mod metrics;
+pub mod service;
+
+pub use engine::TensorEngine;
+pub use metrics::{Metrics, MetricsSnapshot};
+pub use service::{BatchPolicy, Coordinator, CoordinatorConfig, Handle, Response};

@@ -1,0 +1,356 @@
+//! The coordination service — the L3 system contribution.
+//!
+//! One `Coordinator` serves one CSP instance ("session").  Parallel
+//! search workers (or remote callers via `rtac serve`) submit
+//! arc-consistency requests — a domains plane at the session's shape
+//! bucket — and the coordinator **dynamically batches** concurrent
+//! requests into one fused `fixpoint_batched` XLA execution, exactly the
+//! way a vLLM-style router fuses decode steps: the constraint tensor is
+//! resident (uploaded once per session), only the small vars planes move
+//! per request.
+//!
+//! Threading: `PjRtClient` is not `Send`, so a dedicated executor thread
+//! owns the `Runtime`, the compiled executables and the cached constraint
+//! tensor; an MPSC channel carries requests in, and each request carries
+//! its own response sender.  Batching policy (size + deadline) is applied
+//! on the executor thread between `recv`s — there is no separate batcher
+//! thread to hand off through, which keeps p50 latency at one channel
+//! hop.
+
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::coordinator::metrics::Metrics;
+use crate::core::Problem;
+use crate::runtime::{encode_cons, Bucket, Kind, Manifest, Runtime, STATUS_WIPEOUT};
+
+/// Batching policy.
+#[derive(Clone, Debug)]
+pub struct BatchPolicy {
+    /// Upper bound on fused requests (must be a compiled batch size).
+    pub max_batch: usize,
+    /// How long the executor waits for batch-mates after the first
+    /// request arrives.  0 disables coalescing (batch == 1 always).
+    pub max_wait: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy { max_batch: 8, max_wait: Duration::from_micros(300) }
+    }
+}
+
+/// Coordinator configuration.
+#[derive(Clone, Debug)]
+pub struct CoordinatorConfig {
+    pub artifact_dir: std::path::PathBuf,
+    pub policy: BatchPolicy,
+}
+
+impl Default for CoordinatorConfig {
+    fn default() -> Self {
+        CoordinatorConfig {
+            artifact_dir: crate::runtime::default_artifact_dir(),
+            policy: BatchPolicy::default(),
+        }
+    }
+}
+
+/// A request: one domains plane to enforce.
+struct Request {
+    plane: Vec<f32>,
+    submitted: Instant,
+    resp: mpsc::Sender<Response>,
+}
+
+/// A response: the enforced plane plus run metadata.
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub plane: Vec<f32>,
+    /// 0 = consistent, 1 = wipeout (see `runtime::STATUS_*`).
+    pub status: i32,
+    /// Joint sweep count of the batch that served this request.
+    pub iters: i32,
+    /// Requests fused into the same execution.
+    pub batch_size: usize,
+    pub queue_time: Duration,
+    pub total_time: Duration,
+}
+
+impl Response {
+    pub fn wiped(&self) -> bool {
+        self.status == STATUS_WIPEOUT
+    }
+}
+
+/// Cloneable client handle to a running coordinator.
+#[derive(Clone)]
+pub struct Handle {
+    tx: mpsc::Sender<Request>,
+    pub bucket: Bucket,
+    pub metrics: Arc<Metrics>,
+}
+
+impl Handle {
+    /// Submit a plane; returns a receiver for the response.
+    pub fn submit(&self, plane: Vec<f32>) -> Result<mpsc::Receiver<Response>> {
+        if plane.len() != self.bucket.vars_len() {
+            bail!(
+                "plane has {} values, session bucket wants {}",
+                plane.len(),
+                self.bucket.vars_len()
+            );
+        }
+        let (rtx, rrx) = mpsc::channel();
+        self.metrics.on_submit();
+        self.tx
+            .send(Request { plane, submitted: Instant::now(), resp: rtx })
+            .map_err(|_| anyhow!("coordinator is shut down"))?;
+        Ok(rrx)
+    }
+
+    /// Submit and block for the result.
+    pub fn enforce_blocking(&self, plane: Vec<f32>) -> Result<Response> {
+        let rx = self.submit(plane)?;
+        rx.recv().context("coordinator dropped the request (executor died?)")
+    }
+}
+
+/// A running coordinator session.
+pub struct Coordinator {
+    handle: Handle,
+    join: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Coordinator {
+    /// Start a session for `problem`.  Blocks until the executor thread
+    /// has loaded the runtime and encoded the constraint tensor (so a
+    /// broken artifact dir fails fast, here, not on first request).
+    pub fn start(problem: &Problem, config: CoordinatorConfig) -> Result<Coordinator> {
+        // pick the bucket from the manifest before spawning, so errors
+        // (problem too large for any artifact) surface synchronously.
+        let manifest = Manifest::load(&config.artifact_dir)?;
+        let n = problem.n_vars();
+        let d = problem.max_dom_size();
+        let entry = manifest
+            .pick(Kind::Fixpoint, n, d, 1)
+            .ok_or_else(|| anyhow!("no artifact bucket fits ({n} vars × {d} values)"))?;
+        let bucket = Bucket { n: entry.n, d: entry.d };
+        let cons = encode_cons(problem, bucket)?;
+
+        let metrics = Arc::new(Metrics::new());
+        let (tx, rx) = mpsc::channel::<Request>();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+
+        let cfg = config.clone();
+        let metrics2 = metrics.clone();
+        let join = std::thread::Builder::new()
+            .name("rtac-executor".into())
+            .spawn(move || {
+                executor_thread(cfg, bucket, cons, rx, ready_tx, metrics2);
+            })
+            .context("spawning executor thread")?;
+
+        ready_rx
+            .recv()
+            .context("executor thread died during startup")?
+            .context("executor startup failed")?;
+
+        Ok(Coordinator { handle: Handle { tx, bucket, metrics }, join: Some(join) })
+    }
+
+    pub fn handle(&self) -> Handle {
+        self.handle.clone()
+    }
+
+    pub fn bucket(&self) -> Bucket {
+        self.handle.bucket
+    }
+
+    pub fn metrics(&self) -> Arc<Metrics> {
+        self.handle.metrics.clone()
+    }
+}
+
+impl Coordinator {
+    /// Graceful shutdown: drop the session's sender and join the
+    /// executor.  Callers must have dropped their `Handle` clones first
+    /// or this blocks until they do.
+    pub fn shutdown(mut self) {
+        let (dead_tx, _) = mpsc::channel();
+        self.handle.tx = dead_tx;
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        // Detach: the executor thread exits on its own once every Handle
+        // (and our sender) is gone.  Joining here could deadlock against
+        // user-held Handle clones.
+        self.join.take();
+    }
+}
+
+/// Executor main loop: owns all XLA state.
+fn executor_thread(
+    config: CoordinatorConfig,
+    bucket: Bucket,
+    cons: Vec<f32>,
+    rx: mpsc::Receiver<Request>,
+    ready_tx: mpsc::Sender<Result<()>>,
+    metrics: Arc<Metrics>,
+) {
+    // Load only this session's bucket (all batch sizes + the unbatched
+    // fixpoint), keeping startup proportional to what we'll run.
+    let runtime = match Runtime::load_filtered(&config.artifact_dir, |e| {
+        e.n == bucket.n
+            && e.d == bucket.d
+            && matches!(e.kind, Kind::Fixpoint | Kind::FixpointBatched)
+    }) {
+        Ok(rt) => {
+            let _ = ready_tx.send(Ok(()));
+            rt
+        }
+        Err(e) => {
+            let _ = ready_tx.send(Err(e));
+            return;
+        }
+    };
+    let mut batch_sizes: Vec<usize> = runtime
+        .manifest()
+        .entries
+        .iter()
+        .filter(|e| e.n == bucket.n && e.d == bucket.d)
+        .filter(|e| matches!(e.kind, Kind::Fixpoint | Kind::FixpointBatched))
+        .map(|e| e.batch)
+        .collect();
+    batch_sizes.sort();
+    batch_sizes.dedup();
+    let max_batch = config
+        .policy
+        .max_batch
+        .min(batch_sizes.last().copied().unwrap_or(1));
+
+    // §Perf L3: upload the session's constraint tensor ONCE; every batch
+    // then moves only the small vars planes host→device.
+    let cons_dev = match runtime.upload(&cons, &[bucket.n, bucket.n, bucket.d, bucket.d]) {
+        Ok(b) => b,
+        Err(e) => {
+            eprintln!("rtac-executor: cons upload failed: {e:#}");
+            return;
+        }
+    };
+    drop(cons);
+
+    let mut pending: Vec<Request> = Vec::new();
+    loop {
+        // 1. block for the first request (or shut down)
+        if pending.is_empty() {
+            match rx.recv() {
+                Ok(r) => pending.push(r),
+                Err(_) => return, // all handles dropped
+            }
+        }
+        // 2. coalesce batch-mates until the deadline or capacity
+        let deadline = Instant::now() + config.policy.max_wait;
+        while pending.len() < max_batch {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match rx.recv_timeout(deadline - now) {
+                Ok(r) => pending.push(r),
+                Err(mpsc::RecvTimeoutError::Timeout) => break,
+                Err(mpsc::RecvTimeoutError::Disconnected) => break,
+            }
+        }
+        // 3. pick the smallest compiled batch that fits, pad, execute
+        let real = pending.len();
+        let capacity = batch_sizes
+            .iter()
+            .copied()
+            .find(|&b| b >= real)
+            .unwrap_or_else(|| *batch_sizes.last().unwrap());
+        let (capacity, take) = if capacity >= real {
+            (capacity, real)
+        } else {
+            (capacity, capacity) // more pending than largest batch: split
+        };
+        let batch: Vec<Request> = pending.drain(..take).collect();
+        let plane_len = bucket.vars_len();
+        let mut input = Vec::with_capacity(capacity * plane_len);
+        for r in &batch {
+            input.extend_from_slice(&r.plane);
+        }
+        // padding: replicate the first plane — it converges in the same
+        // sweeps as its twin, adding no extra joint iterations.
+        for _ in take..capacity {
+            input.extend_from_slice(&batch[0].plane);
+        }
+
+        let name = artifact_name(capacity, bucket);
+        let t_exec = Instant::now();
+        let result = runtime.run_fixpoint_dev(&name, &cons_dev, &input);
+        let exec = t_exec.elapsed();
+        metrics.on_batch(take, capacity, exec);
+
+        match result {
+            Ok(out) => {
+                for (i, req) in batch.into_iter().enumerate() {
+                    let queue = t_exec.duration_since(req.submitted);
+                    let total = req.submitted.elapsed();
+                    let resp = Response {
+                        plane: out.vars[i * plane_len..(i + 1) * plane_len].to_vec(),
+                        status: out.status[i],
+                        iters: out.iters,
+                        batch_size: take,
+                        queue_time: queue,
+                        total_time: total,
+                    };
+                    metrics.on_response(queue, total, out.iters, resp.wiped());
+                    let _ = req.resp.send(resp); // receiver may have gone
+                }
+            }
+            Err(e) => {
+                // drop the responders: receivers see RecvError and surface
+                // a coordinator failure; log once on this side.
+                eprintln!("rtac-executor: batch execution failed: {e:#}");
+            }
+        }
+    }
+}
+
+/// Artifact naming scheme shared with `python/compile/aot.py`.
+fn artifact_name(capacity: usize, bucket: Bucket) -> String {
+    if capacity == 1 {
+        format!("fix_n{}_d{}", bucket.n, bucket.d)
+    } else {
+        format!("fixb{}_n{}_d{}", capacity, bucket.n, bucket.d)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn artifact_names_match_aot_scheme() {
+        let b = Bucket { n: 16, d: 8 };
+        assert_eq!(artifact_name(1, b), "fix_n16_d8");
+        assert_eq!(artifact_name(4, b), "fixb4_n16_d8");
+        assert_eq!(artifact_name(8, b), "fixb8_n16_d8");
+    }
+
+    #[test]
+    fn default_policy_sane() {
+        let p = BatchPolicy::default();
+        assert!(p.max_batch >= 1);
+        assert!(p.max_wait < Duration::from_millis(10));
+    }
+}

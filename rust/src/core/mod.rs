@@ -1,0 +1,10 @@
+//! CSP core: immutable problems (variables, domains, bit-matrix binary
+//! relations, arc adjacency) and mutable domain state with an undo trail.
+
+pub mod problem;
+pub mod relation;
+pub mod state;
+
+pub use problem::{Arc, Constraint, Problem, Val, VarId};
+pub use relation::Relation;
+pub use state::State;

@@ -1,0 +1,322 @@
+//! The immutable CSP instance: variables, domain sizes, binary
+//! constraints, and the arc adjacency used by every AC engine.
+//!
+//! A `Problem` is built once (by a generator, a parser, or an example)
+//! and then shared read-only across search workers; all mutable domain
+//! state lives in [`crate::core::state::State`].
+
+use std::collections::HashMap;
+
+use crate::core::relation::Relation;
+
+/// Index of a variable.
+pub type VarId = usize;
+/// A value (index into a variable's domain).
+pub type Val = usize;
+
+/// A binary constraint `c_xy` over variables `x` and `y`.
+#[derive(Clone, Debug)]
+pub struct Constraint {
+    pub x: VarId,
+    pub y: VarId,
+    pub rel: Relation, // rel.allows(a, b)  <=>  (x=a, y=b) permitted
+}
+
+/// One directed arc `(var, constraint)`: "revise `var` against the other
+/// endpoint of `cons`".  AC queues hold these.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct Arc {
+    pub cons: usize,
+    /// true if the arc revises the constraint's `x` endpoint.
+    pub is_x: bool,
+}
+
+/// An immutable CSP instance.
+#[derive(Clone, Debug)]
+pub struct Problem {
+    dom_sizes: Vec<usize>,
+    constraints: Vec<Constraint>,
+    /// adj[v] = arcs that revise v (one per incident constraint).
+    adj: Vec<Vec<Arc>>,
+    pair_index: HashMap<(VarId, VarId), usize>,
+    name: String,
+}
+
+impl Problem {
+    /// A problem with `n` variables, all with domain `{0..dom_size}`.
+    pub fn new(name: &str, n: usize, dom_size: usize) -> Problem {
+        assert!(dom_size > 0, "empty initial domains are not a CSP");
+        Problem {
+            dom_sizes: vec![dom_size; n],
+            constraints: Vec::new(),
+            adj: vec![Vec::new(); n],
+            pair_index: HashMap::new(),
+            name: name.to_string(),
+        }
+    }
+
+    /// A problem with per-variable domain sizes.
+    pub fn with_domains(name: &str, dom_sizes: Vec<usize>) -> Problem {
+        assert!(dom_sizes.iter().all(|&d| d > 0));
+        let n = dom_sizes.len();
+        Problem {
+            dom_sizes,
+            constraints: Vec::new(),
+            adj: vec![Vec::new(); n],
+            pair_index: HashMap::new(),
+            name: name.to_string(),
+        }
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    #[inline]
+    pub fn n_vars(&self) -> usize {
+        self.dom_sizes.len()
+    }
+
+    #[inline]
+    pub fn dom_size(&self, v: VarId) -> usize {
+        self.dom_sizes[v]
+    }
+
+    /// Largest domain size (the tensor encoding's `d`).
+    pub fn max_dom_size(&self) -> usize {
+        self.dom_sizes.iter().copied().max().unwrap_or(0)
+    }
+
+    #[inline]
+    pub fn constraints(&self) -> &[Constraint] {
+        &self.constraints
+    }
+
+    #[inline]
+    pub fn constraint(&self, c: usize) -> &Constraint {
+        &self.constraints[c]
+    }
+
+    pub fn n_constraints(&self) -> usize {
+        self.constraints.len()
+    }
+
+    /// Arcs revising variable `v`.
+    #[inline]
+    pub fn arcs_of(&self, v: VarId) -> &[Arc] {
+        &self.adj[v]
+    }
+
+    /// All directed arcs of the network (2 per constraint).
+    pub fn all_arcs(&self) -> Vec<Arc> {
+        let mut arcs = Vec::with_capacity(2 * self.constraints.len());
+        for c in 0..self.constraints.len() {
+            arcs.push(Arc { cons: c, is_x: true });
+            arcs.push(Arc { cons: c, is_x: false });
+        }
+        arcs
+    }
+
+    /// The variable an arc revises.
+    #[inline]
+    pub fn arc_var(&self, a: Arc) -> VarId {
+        let c = &self.constraints[a.cons];
+        if a.is_x {
+            c.x
+        } else {
+            c.y
+        }
+    }
+
+    /// The other endpoint of an arc (the "witness" variable).
+    #[inline]
+    pub fn arc_other(&self, a: Arc) -> VarId {
+        let c = &self.constraints[a.cons];
+        if a.is_x {
+            c.y
+        } else {
+            c.x
+        }
+    }
+
+    /// Supports of value `val` of the revised variable, as a bitset over
+    /// the witness variable's domain.
+    #[inline]
+    pub fn arc_support_row(&self, a: Arc, val: Val) -> &crate::util::bitset::BitSet {
+        let c = &self.constraints[a.cons];
+        if a.is_x {
+            c.rel.row_fwd(val)
+        } else {
+            c.rel.row_rev(val)
+        }
+    }
+
+    /// Add (or merge into an existing) constraint between `x` and `y`.
+    ///
+    /// Constraints are stored once per unordered pair; adding a second
+    /// relation on the same pair intersects the two (conjunction), which
+    /// is the standard normalisation for binary CSPs.
+    pub fn add_constraint(&mut self, x: VarId, y: VarId, rel: Relation) {
+        assert!(x != y, "binary constraint endpoints must differ");
+        assert!(x < self.n_vars() && y < self.n_vars());
+        // store with x < y canonically
+        let (cx, cy, rel) = if x < y { (x, y, rel) } else { (y, x, rel.transposed()) };
+        assert_eq!(rel.dx(), self.dom_sizes[cx]);
+        assert_eq!(rel.dy(), self.dom_sizes[cy]);
+        if let Some(&ci) = self.pair_index.get(&(cx, cy)) {
+            // conjunction with the existing relation
+            let existing = &mut self.constraints[ci].rel;
+            let mut merged = Relation::forbid_all(rel.dx(), rel.dy());
+            for a in 0..rel.dx() {
+                for b in 0..rel.dy() {
+                    if rel.allows(a, b) && existing.allows(a, b) {
+                        merged.allow(a, b);
+                    }
+                }
+            }
+            *existing = merged;
+            return;
+        }
+        let ci = self.constraints.len();
+        self.constraints.push(Constraint { x: cx, y: cy, rel });
+        self.pair_index.insert((cx, cy), ci);
+        self.adj[cx].push(Arc { cons: ci, is_x: true });
+        self.adj[cy].push(Arc { cons: ci, is_x: false });
+    }
+
+    /// Constraint index between two variables, if any.
+    pub fn constraint_between(&self, x: VarId, y: VarId) -> Option<usize> {
+        let key = if x < y { (x, y) } else { (y, x) };
+        self.pair_index.get(&key).copied()
+    }
+
+    /// Constraint density: #constraints / #possible pairs.
+    pub fn density(&self) -> f64 {
+        let n = self.n_vars();
+        if n < 2 {
+            return 0.0;
+        }
+        self.constraints.len() as f64 / (n * (n - 1) / 2) as f64
+    }
+
+    /// Check a full assignment against every constraint.
+    pub fn satisfies(&self, assignment: &[Val]) -> bool {
+        assert_eq!(assignment.len(), self.n_vars());
+        assignment.iter().enumerate().all(|(v, &a)| a < self.dom_sizes[v])
+            && self
+                .constraints
+                .iter()
+                .all(|c| c.rel.allows(assignment[c.x], assignment[c.y]))
+    }
+
+    /// Structural sanity (used by parsers and property tests).
+    pub fn validate(&self) -> Result<(), String> {
+        for (ci, c) in self.constraints.iter().enumerate() {
+            if c.x >= self.n_vars() || c.y >= self.n_vars() || c.x == c.y {
+                return Err(format!("constraint {ci}: bad endpoints ({}, {})", c.x, c.y));
+            }
+            if c.rel.dx() != self.dom_sizes[c.x] || c.rel.dy() != self.dom_sizes[c.y] {
+                return Err(format!("constraint {ci}: relation shape mismatch"));
+            }
+            if !c.rel.check_mirror() {
+                return Err(format!("constraint {ci}: fwd/rev mirror broken"));
+            }
+        }
+        for (v, arcs) in self.adj.iter().enumerate() {
+            for a in arcs {
+                if self.arc_var(*a) != v {
+                    return Err(format!("adjacency of var {v} holds foreign arc {a:?}"));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn neq(d: usize) -> Relation {
+        Relation::from_fn(d, d, |a, b| a != b)
+    }
+
+    #[test]
+    fn build_and_validate() {
+        let mut p = Problem::new("t", 3, 3);
+        p.add_constraint(0, 1, neq(3));
+        p.add_constraint(1, 2, neq(3));
+        assert_eq!(p.n_constraints(), 2);
+        assert_eq!(p.arcs_of(1).len(), 2);
+        p.validate().unwrap();
+        assert!((p.density() - 2.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn reversed_add_is_canonicalised() {
+        let mut p = Problem::new("t", 2, 3);
+        let lt = Relation::from_fn(3, 3, |a, b| a < b);
+        p.add_constraint(1, 0, lt); // y=1 < x=0 reversed: stored as (0,1) transposed
+        let c = p.constraint(0);
+        assert_eq!((c.x, c.y), (0, 1));
+        // transposed: allows(a,b) iff b < a
+        assert!(c.rel.allows(2, 1));
+        assert!(!c.rel.allows(1, 2));
+    }
+
+    #[test]
+    fn duplicate_pair_intersects() {
+        let mut p = Problem::new("t", 2, 4);
+        p.add_constraint(0, 1, Relation::from_fn(4, 4, |a, b| a <= b));
+        p.add_constraint(0, 1, Relation::from_fn(4, 4, |a, b| a >= b));
+        assert_eq!(p.n_constraints(), 1);
+        let c = p.constraint(0);
+        for a in 0..4 {
+            for b in 0..4 {
+                assert_eq!(c.rel.allows(a, b), a == b);
+            }
+        }
+        // adjacency not duplicated
+        assert_eq!(p.arcs_of(0).len(), 1);
+    }
+
+    #[test]
+    fn arc_accessors() {
+        let mut p = Problem::new("t", 2, 3);
+        p.add_constraint(0, 1, Relation::from_fn(3, 3, |a, b| a == b));
+        let ax = Arc { cons: 0, is_x: true };
+        let ay = Arc { cons: 0, is_x: false };
+        assert_eq!(p.arc_var(ax), 0);
+        assert_eq!(p.arc_other(ax), 1);
+        assert_eq!(p.arc_var(ay), 1);
+        assert_eq!(p.arc_other(ay), 0);
+        assert_eq!(p.arc_support_row(ax, 2).to_vec(), vec![2]);
+        assert_eq!(p.all_arcs().len(), 2);
+    }
+
+    #[test]
+    fn satisfies_checks_all_constraints() {
+        let mut p = Problem::new("t", 3, 3);
+        p.add_constraint(0, 1, neq(3));
+        p.add_constraint(1, 2, neq(3));
+        assert!(p.satisfies(&[0, 1, 0]));
+        assert!(!p.satisfies(&[1, 1, 0]));
+        assert!(!p.satisfies(&[0, 2, 2]));
+    }
+
+    #[test]
+    #[should_panic]
+    fn self_loop_rejected() {
+        let mut p = Problem::new("t", 2, 2);
+        p.add_constraint(1, 1, Relation::allow_all(2, 2));
+    }
+
+    #[test]
+    fn mixed_domain_sizes() {
+        let mut p = Problem::with_domains("t", vec![2, 5]);
+        p.add_constraint(0, 1, Relation::from_fn(2, 5, |a, b| (a + b) % 2 == 0));
+        p.validate().unwrap();
+        assert_eq!(p.max_dom_size(), 5);
+        assert_eq!(p.dom_size(0), 2);
+    }
+}

@@ -1,0 +1,203 @@
+//! Binary constraint relations as bit-matrices.
+//!
+//! A relation over domains of size `dx` × `dy` stores, for every value
+//! `a` of the first variable, the bitset of supporting values of the
+//! second (`row_fwd`), and the transpose (`row_rev`).  Both directions
+//! are maintained eagerly because every AC algorithm revises both arcs
+//! and the transpose would otherwise be recomputed O(#revisions) times —
+//! this is the "bidirectionality" exploited by AC-2001/AC3.2 [6].
+
+use crate::util::bitset::BitSet;
+
+/// A bit-matrix relation between two domains.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Relation {
+    dx: usize,
+    dy: usize,
+    fwd: Vec<BitSet>, // fwd[a] = supports of (x,a) among y's values
+    rev: Vec<BitSet>, // rev[b] = supports of (y,b) among x's values
+}
+
+impl Relation {
+    /// The universal relation (every pair allowed) — AC-neutral.
+    pub fn allow_all(dx: usize, dy: usize) -> Relation {
+        Relation {
+            dx,
+            dy,
+            fwd: (0..dx).map(|_| BitSet::ones(dy)).collect(),
+            rev: (0..dy).map(|_| BitSet::ones(dx)).collect(),
+        }
+    }
+
+    /// The empty relation (nothing allowed) — instantly UNSAT if both
+    /// variables have non-empty domains.
+    pub fn forbid_all(dx: usize, dy: usize) -> Relation {
+        Relation {
+            dx,
+            dy,
+            fwd: (0..dx).map(|_| BitSet::zeros(dy)).collect(),
+            rev: (0..dy).map(|_| BitSet::zeros(dx)).collect(),
+        }
+    }
+
+    /// Build from a predicate: `pred(a, b)` == allowed.
+    pub fn from_fn(dx: usize, dy: usize, pred: impl Fn(usize, usize) -> bool) -> Relation {
+        let mut r = Relation::forbid_all(dx, dy);
+        for a in 0..dx {
+            for b in 0..dy {
+                if pred(a, b) {
+                    r.allow(a, b);
+                }
+            }
+        }
+        r
+    }
+
+    #[inline]
+    pub fn dx(&self) -> usize {
+        self.dx
+    }
+
+    #[inline]
+    pub fn dy(&self) -> usize {
+        self.dy
+    }
+
+    #[inline]
+    pub fn allow(&mut self, a: usize, b: usize) {
+        self.fwd[a].set(b);
+        self.rev[b].set(a);
+    }
+
+    #[inline]
+    pub fn forbid(&mut self, a: usize, b: usize) {
+        self.fwd[a].clear(b);
+        self.rev[b].clear(a);
+    }
+
+    #[inline]
+    pub fn allows(&self, a: usize, b: usize) -> bool {
+        self.fwd[a].get(b)
+    }
+
+    /// Supports of value `a` of the first variable (bits over dy).
+    #[inline]
+    pub fn row_fwd(&self, a: usize) -> &BitSet {
+        &self.fwd[a]
+    }
+
+    /// Supports of value `b` of the second variable (bits over dx).
+    #[inline]
+    pub fn row_rev(&self, b: usize) -> &BitSet {
+        &self.rev[b]
+    }
+
+    /// True iff every pair is allowed (encodes "no constraint").
+    pub fn is_universal(&self) -> bool {
+        self.fwd.iter().all(|r| r.count() == self.dy)
+    }
+
+    /// Number of allowed pairs.
+    pub fn cardinality(&self) -> usize {
+        self.fwd.iter().map(|r| r.count()).sum()
+    }
+
+    /// Tightness = forbidden fraction.
+    pub fn tightness(&self) -> f64 {
+        1.0 - self.cardinality() as f64 / (self.dx * self.dy) as f64
+    }
+
+    /// The transposed relation (swap the two variables' roles).
+    pub fn transposed(&self) -> Relation {
+        Relation { dx: self.dy, dy: self.dx, fwd: self.rev.clone(), rev: self.fwd.clone() }
+    }
+
+    /// Internal consistency: fwd and rev agree (used by debug asserts
+    /// and property tests).
+    pub fn check_mirror(&self) -> bool {
+        for a in 0..self.dx {
+            for b in 0..self.dy {
+                if self.fwd[a].get(b) != self.rev[b].get(a) {
+                    return false;
+                }
+            }
+        }
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::quickcheck::forall;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn allow_all_and_forbid_all() {
+        let u = Relation::allow_all(3, 5);
+        assert!(u.is_universal());
+        assert_eq!(u.cardinality(), 15);
+        assert_eq!(u.tightness(), 0.0);
+        let e = Relation::forbid_all(3, 5);
+        assert_eq!(e.cardinality(), 0);
+        assert_eq!(e.tightness(), 1.0);
+    }
+
+    #[test]
+    fn allow_forbid_mirror() {
+        let mut r = Relation::forbid_all(4, 4);
+        r.allow(1, 2);
+        assert!(r.allows(1, 2));
+        assert!(r.row_rev(2).get(1));
+        r.forbid(1, 2);
+        assert!(!r.allows(1, 2));
+        assert!(!r.row_rev(2).get(1));
+        assert!(r.check_mirror());
+    }
+
+    #[test]
+    fn from_fn_equality_relation() {
+        let eq = Relation::from_fn(4, 4, |a, b| a == b);
+        assert_eq!(eq.cardinality(), 4);
+        for a in 0..4 {
+            assert_eq!(eq.row_fwd(a).to_vec(), vec![a]);
+        }
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let r = Relation::from_fn(3, 5, |a, b| (a + b) % 2 == 0);
+        let t = r.transposed();
+        assert_eq!(t.dx(), 5);
+        assert_eq!(t.dy(), 3);
+        for a in 0..3 {
+            for b in 0..5 {
+                assert_eq!(r.allows(a, b), t.allows(b, a));
+            }
+        }
+        assert_eq!(t.transposed(), r);
+    }
+
+    #[test]
+    fn prop_mirror_invariant_under_random_edits() {
+        forall("relation-mirror", 0xC0FFEE, 32, |rng: &mut Rng| {
+            let dx = 1 + rng.gen_range(8);
+            let dy = 1 + rng.gen_range(8);
+            let mut r = Relation::forbid_all(dx, dy);
+            for _ in 0..32 {
+                let a = rng.gen_range(dx);
+                let b = rng.gen_range(dy);
+                if rng.bernoulli(0.5) {
+                    r.allow(a, b);
+                } else {
+                    r.forbid(a, b);
+                }
+            }
+            if r.check_mirror() {
+                Ok(())
+            } else {
+                Err("fwd/rev diverged".into())
+            }
+        });
+    }
+}

@@ -1,0 +1,259 @@
+//! Mutable domain state + trail for chronological backtracking.
+//!
+//! `State` owns one bitset per variable (current domain) and a trail of
+//! removals.  Search pushes a level before each assignment and pops it on
+//! backtrack; popping replays the trail tail to restore exactly the
+//! pre-level domains (tested to be bit-exact).
+
+use crate::core::problem::{Problem, Val, VarId};
+use crate::util::bitset::BitSet;
+
+/// Mutable domains with an undo trail.
+#[derive(Clone, Debug)]
+pub struct State {
+    doms: Vec<BitSet>,
+    trail: Vec<(u32, u32)>, // (var, val) removals, in order
+    levels: Vec<usize>,     // trail length at each level push
+}
+
+impl State {
+    /// Full initial domains of `problem`.
+    pub fn new(problem: &Problem) -> State {
+        State {
+            doms: (0..problem.n_vars()).map(|v| BitSet::ones(problem.dom_size(v))).collect(),
+            trail: Vec::new(),
+            levels: Vec::new(),
+        }
+    }
+
+    #[inline]
+    pub fn n_vars(&self) -> usize {
+        self.doms.len()
+    }
+
+    #[inline]
+    pub fn dom(&self, v: VarId) -> &BitSet {
+        &self.doms[v]
+    }
+
+    #[inline]
+    pub fn dom_size(&self, v: VarId) -> usize {
+        self.doms[v].count()
+    }
+
+    #[inline]
+    pub fn contains(&self, v: VarId, a: Val) -> bool {
+        self.doms[v].get(a)
+    }
+
+    #[inline]
+    pub fn is_singleton(&self, v: VarId) -> bool {
+        self.doms[v].count() == 1
+    }
+
+    /// The assigned value if the domain is a singleton.
+    pub fn value(&self, v: VarId) -> Option<Val> {
+        if self.is_singleton(v) {
+            self.doms[v].first()
+        } else {
+            None
+        }
+    }
+
+    /// Remove value `a` from `v`'s domain (recorded on the trail).
+    /// Returns false if it was already absent.
+    pub fn remove(&mut self, v: VarId, a: Val) -> bool {
+        if !self.doms[v].get(a) {
+            return false;
+        }
+        self.doms[v].clear(a);
+        self.trail.push((v as u32, a as u32));
+        true
+    }
+
+    /// True iff `v`'s domain is empty (wipeout).
+    #[inline]
+    pub fn wiped(&self, v: VarId) -> bool {
+        self.doms[v].none()
+    }
+
+    /// Any empty domain anywhere?
+    pub fn any_wiped(&self) -> bool {
+        self.doms.iter().any(|d| d.none())
+    }
+
+    /// Reduce `v` to the singleton `{a}` (all removals trailed).
+    pub fn assign(&mut self, v: VarId, a: Val) {
+        assert!(self.doms[v].get(a), "assigning a removed value");
+        let others: Vec<usize> = self.doms[v].iter_ones().filter(|&b| b != a).collect();
+        for b in others {
+            self.remove(v, b);
+        }
+    }
+
+    /// Open a new decision level.
+    pub fn push_level(&mut self) {
+        self.levels.push(self.trail.len());
+    }
+
+    /// Undo every removal since the matching `push_level`.
+    pub fn pop_level(&mut self) {
+        let mark = self.levels.pop().expect("pop without push");
+        while self.trail.len() > mark {
+            let (v, a) = self.trail.pop().unwrap();
+            self.doms[v as usize].set(a as usize);
+        }
+    }
+
+    /// Current depth (number of open levels).
+    pub fn depth(&self) -> usize {
+        self.levels.len()
+    }
+
+    /// Number of removals recorded since the last `push_level` (or since
+    /// construction if none).  AC engines use it to detect "no change".
+    pub fn trail_len(&self) -> usize {
+        self.trail.len()
+    }
+
+    /// The removals recorded after trail position `from` (for
+    /// incremental propagation and the coordinator's delta encoding).
+    pub fn removals_since(&self, from: usize) -> &[(u32, u32)] {
+        &self.trail[from..]
+    }
+
+    /// Snapshot of all current domains as plain vecs (test/debug aid).
+    pub fn snapshot(&self) -> Vec<Vec<Val>> {
+        self.doms.iter().map(|d| d.to_vec()).collect()
+    }
+
+    /// Total number of live (var, value) pairs.
+    pub fn total_size(&self) -> usize {
+        self.doms.iter().map(|d| d.count()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::relation::Relation;
+    use crate::util::quickcheck::forall;
+
+    fn tiny_problem() -> Problem {
+        let mut p = Problem::new("t", 4, 5);
+        p.add_constraint(0, 1, Relation::from_fn(5, 5, |a, b| a != b));
+        p
+    }
+
+    #[test]
+    fn initial_domains_full() {
+        let p = tiny_problem();
+        let s = State::new(&p);
+        assert_eq!(s.total_size(), 20);
+        assert!(!s.any_wiped());
+        assert_eq!(s.dom_size(2), 5);
+    }
+
+    #[test]
+    fn remove_and_wipeout() {
+        let p = tiny_problem();
+        let mut s = State::new(&p);
+        assert!(s.remove(0, 3));
+        assert!(!s.remove(0, 3)); // idempotent
+        assert_eq!(s.dom_size(0), 4);
+        for a in [0, 1, 2, 4] {
+            s.remove(0, a);
+        }
+        assert!(s.wiped(0));
+        assert!(s.any_wiped());
+    }
+
+    #[test]
+    fn assign_makes_singleton() {
+        let p = tiny_problem();
+        let mut s = State::new(&p);
+        s.assign(1, 2);
+        assert!(s.is_singleton(1));
+        assert_eq!(s.value(1), Some(2));
+        assert_eq!(s.value(0), None);
+    }
+
+    #[test]
+    fn push_pop_restores_exactly() {
+        let p = tiny_problem();
+        let mut s = State::new(&p);
+        s.remove(0, 1); // pre-level removal must survive the pop
+        let before = s.snapshot();
+        s.push_level();
+        s.assign(2, 4);
+        s.remove(0, 0);
+        s.remove(3, 2);
+        assert_ne!(s.snapshot(), before);
+        s.pop_level();
+        assert_eq!(s.snapshot(), before);
+        assert_eq!(s.depth(), 0);
+    }
+
+    #[test]
+    fn nested_levels() {
+        let p = tiny_problem();
+        let mut s = State::new(&p);
+        s.push_level();
+        s.remove(0, 0);
+        let mid = s.snapshot();
+        s.push_level();
+        s.remove(1, 1);
+        s.remove(1, 2);
+        s.pop_level();
+        assert_eq!(s.snapshot(), mid);
+        s.pop_level();
+        assert_eq!(s.total_size(), 20);
+    }
+
+    #[test]
+    fn removals_since_tracks_deltas() {
+        let p = tiny_problem();
+        let mut s = State::new(&p);
+        let mark = s.trail_len();
+        s.remove(2, 0);
+        s.remove(3, 4);
+        assert_eq!(s.removals_since(mark), &[(2, 0), (3, 4)]);
+    }
+
+    #[test]
+    #[should_panic(expected = "assigning a removed value")]
+    fn assign_removed_value_panics() {
+        let p = tiny_problem();
+        let mut s = State::new(&p);
+        s.remove(0, 2);
+        s.assign(0, 2);
+    }
+
+    #[test]
+    fn prop_random_ops_restore() {
+        let p = Problem::new("t", 6, 8);
+        forall("trail-restore", 0xBEEF, 48, |rng| {
+            let mut s = State::new(&p);
+            // random pre-level mutations
+            for _ in 0..rng.gen_range(10) {
+                s.remove(rng.gen_range(6), rng.gen_range(8));
+            }
+            let before = s.snapshot();
+            let levels = 1 + rng.gen_range(4);
+            for _ in 0..levels {
+                s.push_level();
+                for _ in 0..rng.gen_range(12) {
+                    s.remove(rng.gen_range(6), rng.gen_range(8));
+                }
+            }
+            for _ in 0..levels {
+                s.pop_level();
+            }
+            if s.snapshot() == before {
+                Ok(())
+            } else {
+                Err("restore mismatch".into())
+            }
+        });
+    }
+}

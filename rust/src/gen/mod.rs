@@ -1,0 +1,15 @@
+//! Problem generators: the paper's random binary CSP model (§5.2) plus
+//! structured families (n-queens, graph colouring, sudoku, pigeonhole)
+//! used by the examples and by tests as known-SAT/UNSAT fixtures.
+
+pub mod coloring;
+pub mod pigeonhole;
+pub mod queens;
+pub mod random;
+pub mod sudoku;
+
+pub use coloring::coloring;
+pub use pigeonhole::pigeonhole;
+pub use queens::queens;
+pub use random::{random_csp, RandomSpec};
+pub use sudoku::{sudoku_from_givens, sudoku_empty};

@@ -1,0 +1,43 @@
+//! Pigeonhole: n+1 pigeons (variables) into n holes (values), all-diff
+//! pairwise.  UNSAT by construction — the standard stress fixture for
+//! propagation + search (every branch must be refuted).
+
+use crate::core::{Problem, Relation};
+
+/// `pigeons` variables, `holes` values, pairwise `!=`.
+/// UNSAT iff pigeons > holes.
+pub fn pigeonhole(pigeons: usize, holes: usize) -> Problem {
+    let mut p = Problem::new(&format!("pigeonhole-{pigeons}p-{holes}h"), pigeons, holes);
+    let neq = Relation::from_fn(holes, holes, |a, b| a != b);
+    for x in 0..pigeons {
+        for y in (x + 1)..pigeons {
+            p.add_constraint(x, y, neq.clone());
+        }
+    }
+    p
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn structure() {
+        let p = pigeonhole(5, 4);
+        assert_eq!(p.n_vars(), 5);
+        assert_eq!(p.n_constraints(), 10);
+        p.validate().unwrap();
+    }
+
+    #[test]
+    fn sat_when_enough_holes() {
+        let p = pigeonhole(4, 4);
+        assert!(p.satisfies(&[0, 1, 2, 3]));
+    }
+
+    #[test]
+    fn pairwise_conflicts_rejected() {
+        let p = pigeonhole(3, 3);
+        assert!(!p.satisfies(&[0, 0, 1]));
+    }
+}

@@ -1,0 +1,56 @@
+//! n-queens as a binary CSP: one variable per column, domain = rows,
+//! constraints forbid same row and same diagonal.  SAT for n = 1 and
+//! n >= 4 — a cheap known-answer fixture for solver tests, and the
+//! workload of `examples/nqueens.rs`.
+
+use crate::core::{Problem, Relation};
+
+/// Build the n-queens CSP.
+pub fn queens(n: usize) -> Problem {
+    let mut p = Problem::new(&format!("queens-{n}"), n, n.max(1));
+    for x in 0..n {
+        for y in (x + 1)..n {
+            let dist = y - x;
+            let rel = Relation::from_fn(n, n, move |a, b| {
+                a != b && (a as isize - b as isize).unsigned_abs() != dist
+            });
+            p.add_constraint(x, y, rel);
+        }
+    }
+    p
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn structure() {
+        let p = queens(6);
+        assert_eq!(p.n_vars(), 6);
+        assert_eq!(p.n_constraints(), 15); // complete graph
+        p.validate().unwrap();
+        assert!((p.density() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn known_solution_accepted() {
+        // a classic 6-queens solution (rows per column)
+        let p = queens(6);
+        assert!(p.satisfies(&[1, 3, 5, 0, 2, 4]));
+    }
+
+    #[test]
+    fn attacks_rejected() {
+        let p = queens(4);
+        assert!(!p.satisfies(&[0, 0, 2, 3])); // same row
+        assert!(!p.satisfies(&[0, 1, 3, 2])); // diagonal 0-1
+    }
+
+    #[test]
+    fn queens_one_is_trivial() {
+        let p = queens(1);
+        assert_eq!(p.n_constraints(), 0);
+        assert!(p.satisfies(&[0]));
+    }
+}

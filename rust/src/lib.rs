@@ -1,0 +1,28 @@
+//! # rtac — Recurrent Tensor Arc Consistency
+//!
+//! A full-system reproduction of *"Paralleling and Accelerating Arc
+//! Consistency Enforcement with Recurrent Tensor Computations"* (Yang,
+//! 2024) as a three-layer Rust + JAX + Pallas stack:
+//!
+//! * **Layer 1** (`python/compile/kernels/`) — the dense revise sweep as
+//!   a Pallas kernel, AOT-lowered to HLO text.
+//! * **Layer 2** (`python/compile/model.py`) — the recurrent fixpoint
+//!   (`lax.while_loop`) around the kernel, per shape bucket.
+//! * **Layer 3** (this crate) — CSP substrates, four native AC engines
+//!   (AC-3 / AC-2001 / AC3bit / native RTAC), a MAC backtracking solver,
+//!   a PJRT runtime that executes the AOT artifacts, and a coordinator
+//!   that batches AC requests from parallel search workers into fused
+//!   tensor executions.
+//!
+//! See DESIGN.md for the architecture and EXPERIMENTS.md for the
+//! paper-reproduction results (Fig. 3, Table 1).
+
+pub mod ac;
+pub mod bench;
+pub mod coordinator;
+pub mod core;
+pub mod gen;
+pub mod parser;
+pub mod runtime;
+pub mod search;
+pub mod util;

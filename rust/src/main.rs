@@ -1,0 +1,317 @@
+//! `rtac` — the Layer-3 leader binary.
+//!
+//! Subcommands:
+//!   gen           generate a random CSP and write `.csp` text
+//!   solve         MAC search on a file or generated instance
+//!   ac            one arc-consistency enforcement, engine-selectable
+//!   serve         start a coordinator session and drive a synthetic
+//!                 parallel-search load against it (metrics report)
+//!   bench-fig3    reproduce Fig. 3 (time per assignment grid)
+//!   bench-table1  reproduce Table 1 (#Revision vs #Recurrence grid)
+//!   bench-ablate  ablations A-D (DESIGN.md §5)
+//!   info          artifact manifest + runtime info
+//!
+//! Run `rtac help` for flags.
+
+use std::time::Duration;
+
+use rtac::ac::make_engine;
+use rtac::bench::{ablations, fig3, table1, GridSpec};
+use rtac::coordinator::{BatchPolicy, Coordinator, CoordinatorConfig};
+use rtac::core::Problem;
+use rtac::gen::random::{random_csp, RandomSpec};
+use rtac::search::parallel::solve_parallel;
+use rtac::search::{SolveResult, Solver, SolverConfig, ValOrder, VarHeuristic};
+use rtac::util::cli::Args;
+
+const HELP: &str = "\
+rtac — Recurrent Tensor Arc Consistency (paper reproduction)
+
+USAGE: rtac <subcommand> [options]
+
+SUBCOMMANDS
+  gen          --n 50 --dom 20 --density 0.5 --tightness 0.3 --seed 1 --out FILE
+  solve        [FILE.csp] [--queens N | --n .. --density ..] --engine ac3|ac2001|ac3bit|rtac|rtac-inc
+               --var-heuristic lex|mindom|domdeg|domwdeg --val-order lex|random
+               --max-assignments K --seed S
+  ac           same instance flags; runs one enforcement and prints counters
+  serve        --queens 8 | --n .. --dom 8 ..; --workers 4 --max-wait-us 300
+               --artifacts DIR     (end-to-end batched tensor serving demo)
+  bench-fig3   --full | --sizes 20,50 --densities 0.1,0.5 --assignments 300
+               --engines ac3,ac3bit,rtac,rtac-inc [--json FILE]
+  bench-table1 same grid flags [--json FILE]
+  bench-ablate --episodes 40
+  info         --artifacts DIR
+";
+
+fn main() {
+    let args = match Args::from_env() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    };
+    let code = match run(args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn run(args: Args) -> Result<(), String> {
+    match args.subcommand.as_deref() {
+        Some("gen") => cmd_gen(&args),
+        Some("solve") => cmd_solve(&args),
+        Some("ac") => cmd_ac(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("bench-fig3") => cmd_fig3(&args),
+        Some("bench-table1") => cmd_table1(&args),
+        Some("bench-ablate") => cmd_ablate(&args),
+        Some("info") => cmd_info(&args),
+        Some("help") | None => {
+            print!("{HELP}");
+            Ok(())
+        }
+        Some(other) => Err(format!("unknown subcommand {other:?}\n{HELP}")),
+    }
+}
+
+/// Instance selection shared by solve/ac/serve.
+fn load_problem(args: &Args) -> Result<Problem, String> {
+    if let Some(n) = args.get_str("queens") {
+        let n: usize = n.parse().map_err(|_| "--queens: bad integer".to_string())?;
+        return Ok(rtac::gen::queens(n));
+    }
+    if let Some(file) = args.positional.first() {
+        let f = std::fs::File::open(file).map_err(|e| format!("{file}: {e}"))?;
+        return rtac::parser::read_csp(f);
+    }
+    let spec = RandomSpec::new(
+        args.get_usize("n", 30)?,
+        args.get_usize("dom", 10)?,
+        args.get_f64("density", 0.5)?,
+        args.get_f64("tightness", 0.3)?,
+        args.get_u64("seed", 1)?,
+    );
+    Ok(random_csp(&spec))
+}
+
+fn solver_config(args: &Args) -> Result<SolverConfig, String> {
+    Ok(SolverConfig {
+        var_heuristic: VarHeuristic::parse(&args.get_or("var-heuristic", "mindom"))?,
+        val_order: ValOrder::parse(&args.get_or("val-order", "lex"))?,
+        max_assignments: args.get_u64("max-assignments", 0)?,
+        time_limit: match args.get_u64("time-limit-ms", 0)? {
+            0 => None,
+            ms => Some(Duration::from_millis(ms)),
+        },
+        seed: args.get_u64("seed", 1)?,
+        record_ac_times: true,
+        stop: None,
+    })
+}
+
+fn cmd_gen(args: &Args) -> Result<(), String> {
+    let spec = RandomSpec::new(
+        args.get_usize("n", 50)?,
+        args.get_usize("dom", 20)?,
+        args.get_f64("density", 0.5)?,
+        args.get_f64("tightness", 0.3)?,
+        args.get_u64("seed", 1)?,
+    );
+    let out = args.get_or("out", "/dev/stdout");
+    args.finish()?;
+    let p = random_csp(&spec);
+    let mut f = std::fs::File::create(&out).map_err(|e| format!("{out}: {e}"))?;
+    rtac::parser::write_csp(&p, &mut f).map_err(|e| e.to_string())?;
+    eprintln!(
+        "wrote {} ({} vars, {} constraints, density {:.3})",
+        out,
+        p.n_vars(),
+        p.n_constraints(),
+        p.density()
+    );
+    Ok(())
+}
+
+fn cmd_solve(args: &Args) -> Result<(), String> {
+    let p = load_problem(args)?;
+    let engine_name = args.get_or("engine", "ac3bit");
+    let cfg = solver_config(args)?;
+    args.finish()?;
+    let mut engine = make_engine(&engine_name)?;
+    let mut solver = Solver::new(engine.as_mut(), cfg);
+    let (result, stats) = solver.solve(&p);
+    match &result {
+        SolveResult::Sat(sol) => {
+            println!("SAT {sol:?}");
+            assert!(p.satisfies(sol));
+        }
+        SolveResult::Unsat => println!("UNSAT"),
+        SolveResult::Limit => println!("LIMIT (budget exhausted)"),
+    }
+    println!(
+        "assignments={} backtracks={} ac_calls={} mean_ac_ms={:.4} \
+         revisions/call={:.1} recurrences/call={:.2} total={:?}",
+        stats.assignments,
+        stats.backtracks,
+        stats.ac_calls,
+        stats.mean_ac_ms(),
+        stats.revisions_per_call(),
+        stats.recurrences_per_call(),
+        stats.total_time,
+    );
+    Ok(())
+}
+
+fn cmd_ac(args: &Args) -> Result<(), String> {
+    let p = load_problem(args)?;
+    let engine_name = args.get_or("engine", "rtac");
+    args.finish()?;
+    let mut engine = make_engine(&engine_name)?;
+    let mut state = rtac::core::State::new(&p);
+    let mut c = rtac::ac::Counters::default();
+    let sw = rtac::util::timer::Stopwatch::start();
+    let out = engine.enforce(&p, &mut state, &[], &mut c);
+    println!(
+        "{} on {}: {:?} in {:.3}ms — revisions={} recurrences={} \
+         support_checks={} removals={} live={}/{}",
+        engine.name(),
+        p.name(),
+        out,
+        sw.elapsed_ms(),
+        c.revisions,
+        c.recurrences,
+        c.support_checks,
+        c.removals,
+        state.total_size(),
+        (0..p.n_vars()).map(|v| p.dom_size(v)).sum::<usize>(),
+    );
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<(), String> {
+    let p = load_problem(args)?;
+    let workers = args.get_usize("workers", 4)?;
+    let max_wait = args.get_u64("max-wait-us", 300)?;
+    let artifacts = args.get_or("artifacts", "artifacts");
+    let cfg = solver_config(args)?;
+    args.finish()?;
+    let coord = Coordinator::start(
+        &p,
+        CoordinatorConfig {
+            artifact_dir: artifacts.into(),
+            policy: BatchPolicy {
+                max_batch: 8,
+                max_wait: Duration::from_micros(max_wait),
+            },
+        },
+    )
+    .map_err(|e| format!("{e:#}"))?;
+    println!(
+        "session up: problem={} bucket={}x{} workers={workers} max_wait={max_wait}µs",
+        p.name(),
+        coord.bucket().n,
+        coord.bucket().d
+    );
+    let sw = rtac::util::timer::Stopwatch::start();
+    let out = solve_parallel(&p, &coord, &cfg, 0, workers).map_err(|e| format!("{e:#}"))?;
+    let elapsed = sw.elapsed_ms();
+    match &out.result {
+        SolveResult::Sat(sol) => {
+            println!("SAT (worker {:?}) {sol:?}", out.winner);
+            assert!(p.satisfies(sol));
+        }
+        other => println!("{other:?}"),
+    }
+    let m = coord.metrics().snapshot();
+    println!("metrics: {}", m.summary());
+    println!(
+        "throughput: {:.0} enforcements/s over {:.1}ms wall",
+        m.responses as f64 / (elapsed / 1e3),
+        elapsed
+    );
+    Ok(())
+}
+
+fn grid_spec(args: &Args) -> Result<GridSpec, String> {
+    let mut spec = if args.has_flag("full") { GridSpec::paper_full() } else { GridSpec::scaled() };
+    spec.sizes = args.get_usize_list("sizes", &spec.sizes)?;
+    spec.densities = args.get_f64_list("densities", &spec.densities)?;
+    spec.dom_size = args.get_usize("dom", spec.dom_size)?;
+    spec.tightness = args.get_f64("tightness", spec.tightness)?;
+    spec.assignments = args.get_u64("assignments", spec.assignments)?;
+    spec.seed = args.get_u64("seed", spec.seed)?;
+    Ok(spec)
+}
+
+fn maybe_write_json(args: &Args, json: rtac::util::json::Json) -> Result<(), String> {
+    if let Some(path) = args.get_str("json") {
+        std::fs::write(&path, json.to_string()).map_err(|e| format!("{path}: {e}"))?;
+        eprintln!("wrote {path}");
+    }
+    Ok(())
+}
+
+fn cmd_fig3(args: &Args) -> Result<(), String> {
+    let spec = grid_spec(args)?;
+    let engines_arg = args.get_or("engines", "ac3,ac3bit,rtac,rtac-inc");
+    let engines: Vec<&str> = engines_arg.split(',').collect();
+    let json_requested = args.get_str("json");
+    args.finish()?;
+    eprintln!("fig3 grid: sizes={:?} densities={:?} dom={} t={} assignments={}",
+        spec.sizes, spec.densities, spec.dom_size, spec.tightness, spec.assignments);
+    let results = fig3::run(&spec, &engines);
+    println!("{}", fig3::render(&results, &engines));
+    for claim in fig3::shape_claims(&results) {
+        println!("{claim}");
+    }
+    if json_requested.is_some() {
+        maybe_write_json(args, fig3::to_json(&results))?;
+    }
+    Ok(())
+}
+
+fn cmd_table1(args: &Args) -> Result<(), String> {
+    let spec = grid_spec(args)?;
+    let json_requested = args.get_str("json");
+    args.finish()?;
+    let rows = table1::run(&spec);
+    println!("{}", table1::render(&rows));
+    println!("{}", table1::verdict(&rows));
+    if json_requested.is_some() {
+        maybe_write_json(args, table1::to_json(&rows))?;
+    }
+    Ok(())
+}
+
+fn cmd_ablate(args: &Args) -> Result<(), String> {
+    let episodes = args.get_u64("episodes", 40)?;
+    args.finish()?;
+    let spec = ablations::default_spec();
+    let (_, a) = ablations::queue_ordering(&spec, episodes);
+    println!("{a}");
+    let (_, b) = ablations::algorithm_ladder(&spec, episodes);
+    println!("{b}");
+    let (_, c) = ablations::rtac_incremental(&spec, episodes);
+    println!("{c}");
+    let (_, d) = ablations::tightness_sweep(&spec, episodes);
+    println!("{d}");
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> Result<(), String> {
+    let artifacts = args.get_or("artifacts", "artifacts");
+    args.finish()?;
+    let m = rtac::runtime::Manifest::load(std::path::Path::new(&artifacts))
+        .map_err(|e| format!("{e:#}"))?;
+    println!("artifacts: {} entries (block_x={}) in {artifacts}", m.entries.len(), m.block_x);
+    for e in &m.entries {
+        println!("  {:<18} kind={:?} bucket={}x{} batch={}", e.name, e.kind, e.n, e.d, e.batch);
+    }
+    Ok(())
+}

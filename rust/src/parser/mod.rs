@@ -1,0 +1,22 @@
+//! Plain-text CSP interchange format (`.csp`) reader/writer.
+//!
+//! The format is line-oriented and diff-friendly:
+//!
+//! ```text
+//! # comment
+//! csp <name>
+//! vars <n>
+//! dom <var> <size>            # optional; default domain size via `domsize`
+//! domsize <size>              # uniform domain size shortcut
+//! con <x> <y> allow|forbid    # followed by pair lines "a b", ended by "end"
+//! a b
+//! end
+//! ```
+//!
+//! `allow` lists the allowed pairs (everything else forbidden); `forbid`
+//! lists the forbidden pairs (everything else allowed — the economical
+//! form for loose relations like `!=`).
+
+pub mod text;
+
+pub use text::{read_csp, write_csp};

@@ -1,0 +1,254 @@
+//! `.csp` text format implementation (see module docs in `mod.rs`).
+
+use std::io::{BufRead, Write};
+
+use crate::core::{Problem, Relation};
+
+/// Read a problem from `.csp` text.
+pub fn read_csp(reader: impl std::io::Read) -> Result<Problem, String> {
+    let buf = std::io::BufReader::new(reader);
+    let mut name = String::from("unnamed");
+    let mut n_vars: Option<usize> = None;
+    let mut default_dom: Option<usize> = None;
+    let mut dom_overrides: Vec<(usize, usize)> = Vec::new();
+    // constraints parsed before we can build the Problem (domain sizes
+    // must be known first), so buffer them.
+    struct PendingCon {
+        x: usize,
+        y: usize,
+        mode_allow: bool,
+        pairs: Vec<(usize, usize)>,
+        line: usize,
+    }
+    let mut pending: Vec<PendingCon> = Vec::new();
+    let mut current: Option<PendingCon> = None;
+
+    for (lineno, line) in buf.lines().enumerate() {
+        let line = line.map_err(|e| format!("io error: {e}"))?;
+        let line = line.split('#').next().unwrap_or("").trim().to_string();
+        if line.is_empty() {
+            continue;
+        }
+        let toks: Vec<&str> = line.split_whitespace().collect();
+        if let Some(con) = current.as_mut() {
+            match toks[0] {
+                "end" => pending.push(current.take().unwrap()),
+                _ => {
+                    if toks.len() != 2 {
+                        return Err(format!("line {}: expected 'a b' pair or 'end'", lineno + 1));
+                    }
+                    let a = toks[0].parse().map_err(|_| format!("line {}: bad value", lineno + 1))?;
+                    let b = toks[1].parse().map_err(|_| format!("line {}: bad value", lineno + 1))?;
+                    con.pairs.push((a, b));
+                }
+            }
+            continue;
+        }
+        match toks[0] {
+            "csp" => name = toks.get(1).unwrap_or(&"unnamed").to_string(),
+            "vars" => {
+                n_vars = Some(
+                    toks.get(1)
+                        .and_then(|t| t.parse().ok())
+                        .ok_or(format!("line {}: vars <n>", lineno + 1))?,
+                )
+            }
+            "domsize" => {
+                default_dom = Some(
+                    toks.get(1)
+                        .and_then(|t| t.parse().ok())
+                        .ok_or(format!("line {}: domsize <d>", lineno + 1))?,
+                )
+            }
+            "dom" => {
+                let v = toks.get(1).and_then(|t| t.parse().ok());
+                let d = toks.get(2).and_then(|t| t.parse().ok());
+                match (v, d) {
+                    (Some(v), Some(d)) => dom_overrides.push((v, d)),
+                    _ => return Err(format!("line {}: dom <var> <size>", lineno + 1)),
+                }
+            }
+            "con" => {
+                let x = toks.get(1).and_then(|t| t.parse().ok());
+                let y = toks.get(2).and_then(|t| t.parse().ok());
+                let mode = toks.get(3).copied();
+                match (x, y, mode) {
+                    (Some(x), Some(y), Some("allow")) => {
+                        current = Some(PendingCon { x, y, mode_allow: true, pairs: vec![], line: lineno + 1 })
+                    }
+                    (Some(x), Some(y), Some("forbid")) => {
+                        current = Some(PendingCon { x, y, mode_allow: false, pairs: vec![], line: lineno + 1 })
+                    }
+                    _ => return Err(format!("line {}: con <x> <y> allow|forbid", lineno + 1)),
+                }
+            }
+            other => return Err(format!("line {}: unknown directive {other:?}", lineno + 1)),
+        }
+    }
+    if current.is_some() {
+        return Err("unterminated 'con' block (missing 'end')".into());
+    }
+    let n = n_vars.ok_or("missing 'vars' directive")?;
+    let dd = default_dom.ok_or("missing 'domsize' directive")?;
+    let mut sizes = vec![dd; n];
+    for (v, d) in dom_overrides {
+        if v >= n {
+            return Err(format!("dom override for out-of-range var {v}"));
+        }
+        sizes[v] = d;
+    }
+    let mut p = Problem::with_domains(&name, sizes);
+    for con in pending {
+        if con.x >= n || con.y >= n || con.x == con.y {
+            return Err(format!("line {}: bad constraint endpoints", con.line));
+        }
+        let (dx, dy) = (p.dom_size(con.x), p.dom_size(con.y));
+        let mut rel = if con.mode_allow {
+            Relation::forbid_all(dx, dy)
+        } else {
+            Relation::allow_all(dx, dy)
+        };
+        for (a, b) in con.pairs {
+            if a >= dx || b >= dy {
+                return Err(format!("line {}: value pair ({a},{b}) out of range", con.line));
+            }
+            if con.mode_allow {
+                rel.allow(a, b);
+            } else {
+                rel.forbid(a, b);
+            }
+        }
+        p.add_constraint(con.x, con.y, rel);
+    }
+    p.validate()?;
+    Ok(p)
+}
+
+/// Write a problem as `.csp` text (choosing allow/forbid per relation by
+/// whichever list is shorter).
+pub fn write_csp(p: &Problem, w: &mut impl Write) -> std::io::Result<()> {
+    writeln!(w, "# generated by rtac")?;
+    writeln!(w, "csp {}", p.name().split_whitespace().next().unwrap_or("unnamed"))?;
+    writeln!(w, "vars {}", p.n_vars())?;
+    let dmax = p.max_dom_size();
+    writeln!(w, "domsize {dmax}")?;
+    for v in 0..p.n_vars() {
+        if p.dom_size(v) != dmax {
+            writeln!(w, "dom {} {}", v, p.dom_size(v))?;
+        }
+    }
+    for c in p.constraints() {
+        let (dx, dy) = (c.rel.dx(), c.rel.dy());
+        let allowed = c.rel.cardinality();
+        let forbidden = dx * dy - allowed;
+        if allowed <= forbidden {
+            writeln!(w, "con {} {} allow", c.x, c.y)?;
+            for a in 0..dx {
+                for b in c.rel.row_fwd(a).iter_ones() {
+                    writeln!(w, "{a} {b}")?;
+                }
+            }
+        } else {
+            writeln!(w, "con {} {} forbid", c.x, c.y)?;
+            for a in 0..dx {
+                for b in 0..dy {
+                    if !c.rel.allows(a, b) {
+                        writeln!(w, "{a} {b}")?;
+                    }
+                }
+            }
+        }
+        writeln!(w, "end")?;
+    }
+    Ok(())
+}
+
+/// Round-trip helper: problem -> text -> string.
+pub fn to_string(p: &Problem) -> String {
+    let mut buf = Vec::new();
+    write_csp(p, &mut buf).expect("write to Vec cannot fail");
+    String::from_utf8(buf).expect("csp text is utf8")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::{queens, random::{random_csp, RandomSpec}};
+
+    #[test]
+    fn parse_minimal() {
+        let src = "\
+# a triangle
+csp tri
+vars 3
+domsize 2
+con 0 1 forbid
+0 0
+1 1
+end
+con 1 2 allow
+0 1
+1 0
+end
+";
+        let p = read_csp(src.as_bytes()).unwrap();
+        assert_eq!(p.name(), "tri");
+        assert_eq!(p.n_vars(), 3);
+        assert_eq!(p.n_constraints(), 2);
+        assert!(!p.constraint(0).rel.allows(0, 0));
+        assert!(p.constraint(0).rel.allows(0, 1));
+        assert!(p.constraint(1).rel.allows(0, 1));
+        assert!(!p.constraint(1).rel.allows(0, 0));
+    }
+
+    #[test]
+    fn dom_override() {
+        let src = "csp t\nvars 2\ndomsize 3\ndom 1 5\ncon 0 1 allow\n0 4\nend\n";
+        let p = read_csp(src.as_bytes()).unwrap();
+        assert_eq!(p.dom_size(0), 3);
+        assert_eq!(p.dom_size(1), 5);
+        assert!(p.constraint(0).rel.allows(0, 4));
+    }
+
+    #[test]
+    fn errors_reported_with_lines() {
+        assert!(read_csp("vars 2".as_bytes()).is_err()); // no domsize
+        assert!(read_csp("domsize 2".as_bytes()).is_err()); // no vars
+        let unterminated = "csp t\nvars 2\ndomsize 2\ncon 0 1 allow\n0 0\n";
+        assert!(read_csp(unterminated.as_bytes()).unwrap_err().contains("unterminated"));
+        let oob = "csp t\nvars 2\ndomsize 2\ncon 0 1 allow\n0 5\nend\n";
+        assert!(read_csp(oob.as_bytes()).unwrap_err().contains("out of range"));
+        let badtok = "csp t\nvars 2\ndomsize 2\nwhat 1\n";
+        assert!(read_csp(badtok.as_bytes()).unwrap_err().contains("unknown directive"));
+    }
+
+    #[test]
+    fn roundtrip_queens() {
+        let p = queens(5);
+        let text = to_string(&p);
+        let q = read_csp(text.as_bytes()).unwrap();
+        assert_eq!(q.n_vars(), p.n_vars());
+        assert_eq!(q.n_constraints(), p.n_constraints());
+        for (a, b) in p.constraints().iter().zip(q.constraints()) {
+            assert_eq!((a.x, a.y), (b.x, b.y));
+            assert_eq!(a.rel, b.rel);
+        }
+    }
+
+    #[test]
+    fn roundtrip_random() {
+        let p = random_csp(&RandomSpec::new(10, 6, 0.5, 0.35, 17));
+        let q = read_csp(to_string(&p).as_bytes()).unwrap();
+        assert_eq!(q.n_constraints(), p.n_constraints());
+        for (a, b) in p.constraints().iter().zip(q.constraints()) {
+            assert_eq!(a.rel, b.rel, "constraint ({},{})", a.x, a.y);
+        }
+    }
+
+    #[test]
+    fn comments_and_blank_lines_ignored() {
+        let src = "\n# hi\ncsp t # trailing\n\nvars 2\ndomsize 2\n";
+        let p = read_csp(src.as_bytes()).unwrap();
+        assert_eq!(p.n_vars(), 2);
+    }
+}

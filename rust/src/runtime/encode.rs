@@ -1,0 +1,279 @@
+//! Tensor encoding/decoding: `Problem` + `State` ⇄ the f32 planes the
+//! AOT artifacts consume (DESIGN.md §Hardware-Adaptation).
+//!
+//! Layout contract (mirrors `python/compile/kernels/ref.py`):
+//! * `vars[x, a] = 1.0` iff value `a` is live in `dom(x)`; row-major
+//!   `[n, d]`.
+//! * `cons[x, y, a, b] = 1.0` iff the pair is allowed; row-major
+//!   `[n, n, d, d]`; unconstrained pairs (and the diagonal) hold the
+//!   universal relation.
+//!
+//! Padding up to a shape bucket `(N, D)` must be **AC-neutral**:
+//! * padded *variables* (`x >= n`) get all-ones rows and universal
+//!   relations — they support everything and are never pruned (unless a
+//!   real domain wipes, which ends the run anyway);
+//! * padded *values* (`a >= dom_size(x)` of a real variable) are 0 in
+//!   `vars` and 0 in every real constraint slab, so they neither receive
+//!   nor provide support.
+//!
+//! Neutrality is proven by `python/tests/test_model.py
+//! TestPaddingNeutrality` and re-checked here against the native engine.
+
+use anyhow::{bail, Result};
+
+use crate::core::{Problem, State, VarId};
+
+/// A (n_vars, dom) shape bucket.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Bucket {
+    pub n: usize,
+    pub d: usize,
+}
+
+impl Bucket {
+    pub fn fits(&self, problem: &Problem) -> bool {
+        problem.n_vars() <= self.n && problem.max_dom_size() <= self.d
+    }
+
+    pub fn cons_len(&self) -> usize {
+        self.n * self.n * self.d * self.d
+    }
+
+    pub fn vars_len(&self) -> usize {
+        self.n * self.d
+    }
+}
+
+/// Encode the constraint tensor of `problem`, padded to `bucket`.
+///
+/// O(N²D²) — do this once per (problem, bucket) and cache (the
+/// coordinator does); only the vars plane changes across requests.
+pub fn encode_cons(problem: &Problem, bucket: Bucket) -> Result<Vec<f32>> {
+    if !bucket.fits(problem) {
+        bail!(
+            "problem ({} vars, dom {}) exceeds bucket ({}, {})",
+            problem.n_vars(),
+            problem.max_dom_size(),
+            bucket.n,
+            bucket.d
+        );
+    }
+    let (nn, dd) = (bucket.n, bucket.d);
+    // universal by default (covers padded vars, diagonal, non-edges)
+    let mut cons = vec![1.0f32; nn * nn * dd * dd];
+    let idx = |x: usize, y: usize, a: usize, b: usize| ((x * nn + y) * dd + a) * dd + b;
+    for c in problem.constraints() {
+        let (dx, dy) = (c.rel.dx(), c.rel.dy());
+        for a in 0..dd {
+            for b in 0..dd {
+                let allowed = a < dx && b < dy && c.rel.allows(a, b);
+                let v = if allowed { 1.0 } else { 0.0 };
+                // real pair: padded (a, b) region must provide no fake
+                // support, so everything outside the real rectangle is 0.
+                cons[idx(c.x, c.y, a, b)] = v;
+                cons[idx(c.y, c.x, b, a)] = v;
+            }
+        }
+    }
+    Ok(cons)
+}
+
+/// Encode the current domains of `state`, padded to `bucket`.
+pub fn encode_vars(problem: &Problem, state: &State, bucket: Bucket) -> Result<Vec<f32>> {
+    if !bucket.fits(problem) {
+        bail!("problem exceeds bucket");
+    }
+    let (nn, dd) = (bucket.n, bucket.d);
+    let mut vars = vec![0.0f32; nn * dd];
+    for x in 0..problem.n_vars() {
+        for a in state.dom(x).iter_ones() {
+            vars[x * dd + a] = 1.0;
+        }
+    }
+    // padded variables: full dummy domains (all ones)
+    for x in problem.n_vars()..nn {
+        for a in 0..dd {
+            vars[x * dd + a] = 1.0;
+        }
+    }
+    Ok(vars)
+}
+
+/// Apply an output plane back onto `state`: every live value that the
+/// plane zeroed is removed (through the trail, so search can undo it).
+/// Returns the list of changed variables.
+pub fn decode_vars(
+    problem: &Problem,
+    state: &mut State,
+    plane: &[f32],
+    bucket: Bucket,
+) -> Result<Vec<VarId>> {
+    if plane.len() != bucket.vars_len() {
+        bail!("plane length {} != bucket {}", plane.len(), bucket.vars_len());
+    }
+    let dd = bucket.d;
+    let mut changed = Vec::new();
+    for x in 0..problem.n_vars() {
+        let mut x_changed = false;
+        for a in 0..problem.dom_size(x) {
+            let live = state.contains(x, a);
+            let keep = plane[x * dd + a] != 0.0;
+            if live && !keep {
+                state.remove(x, a);
+                x_changed = true;
+            } else if !live && keep {
+                // the artifact can only remove values (monotone sweep);
+                // seeing a resurrection means caller mixed up planes.
+                bail!("plane resurrects removed value ({x}, {a})");
+            }
+        }
+        if x_changed {
+            changed.push(x);
+        }
+    }
+    Ok(changed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ac::{rtac::RtacNative, Counters, Propagator};
+    use crate::gen::random::{random_csp, RandomSpec};
+
+    fn bucket() -> Bucket {
+        Bucket { n: 16, d: 8 }
+    }
+
+    #[test]
+    fn cons_universal_for_nonedges_zero_padded_for_edges() {
+        let p = random_csp(&RandomSpec::new(5, 4, 0.99, 0.4, 3));
+        let b = bucket();
+        let cons = encode_cons(&p, b).unwrap();
+        let idx = |x: usize, y: usize, a: usize, bb: usize| ((x * b.n + y) * b.d + a) * b.d + bb;
+        // diagonal universal
+        assert_eq!(cons[idx(0, 0, 7, 7)], 1.0);
+        // padded var rows universal
+        assert_eq!(cons[idx(10, 2, 3, 3)], 1.0);
+        // a real edge: padded region is zero
+        let c = &p.constraints()[0];
+        assert_eq!(cons[idx(c.x, c.y, 0, 7)], 0.0); // b >= dy
+        assert_eq!(cons[idx(c.x, c.y, 7, 0)], 0.0); // a >= dx
+        // symmetry
+        for a in 0..4 {
+            for bb in 0..4 {
+                assert_eq!(cons[idx(c.x, c.y, a, bb)], cons[idx(c.y, c.x, bb, a)]);
+            }
+        }
+    }
+
+    #[test]
+    fn vars_padding_layout() {
+        let p = random_csp(&RandomSpec::new(5, 4, 0.5, 0.3, 9));
+        let mut s = State::new(&p);
+        s.remove(2, 1);
+        let b = bucket();
+        let vars = encode_vars(&p, &s, b).unwrap();
+        assert_eq!(vars.len(), 16 * 8);
+        assert_eq!(vars[2 * 8 + 1], 0.0); // removed value
+        assert_eq!(vars[2 * 8 + 0], 1.0);
+        assert_eq!(vars[0 * 8 + 5], 0.0); // padded value of real var
+        assert_eq!(vars[10 * 8 + 7], 1.0); // padded var fully live
+    }
+
+    #[test]
+    fn decode_applies_removals_and_reports_changes() {
+        let p = random_csp(&RandomSpec::new(4, 4, 0.0, 0.0, 1));
+        let mut s = State::new(&p);
+        let b = bucket();
+        let mut plane = encode_vars(&p, &s, b).unwrap();
+        plane[0 * 8 + 2] = 0.0;
+        plane[3 * 8 + 0] = 0.0;
+        let changed = decode_vars(&p, &mut s, &plane, b).unwrap();
+        assert_eq!(changed, vec![0, 3]);
+        assert!(!s.contains(0, 2));
+        assert!(!s.contains(3, 0));
+        assert_eq!(s.dom_size(1), 4);
+    }
+
+    #[test]
+    fn decode_rejects_resurrection() {
+        let p = random_csp(&RandomSpec::new(3, 3, 0.0, 0.0, 1));
+        let mut s = State::new(&p);
+        s.remove(1, 1);
+        let b = Bucket { n: 8, d: 4 };
+        let mut plane = encode_vars(&p, &s, b).unwrap();
+        plane[1 * 4 + 1] = 1.0;
+        assert!(decode_vars(&p, &mut s, &plane, b).is_err());
+    }
+
+    #[test]
+    fn bucket_too_small_is_error() {
+        let p = random_csp(&RandomSpec::new(20, 4, 0.1, 0.1, 1));
+        assert!(encode_cons(&p, bucket()).is_err());
+        let s = State::new(&p);
+        assert!(encode_vars(&p, &s, bucket()).is_err());
+    }
+
+    /// CPU reference of one dense revise sweep over the padded planes —
+    /// mirrors ref.py, used to cross-check the encoding against the
+    /// native engine (no XLA needed in unit tests).
+    fn sweep_plane(cons: &[f32], vars: &[f32], b: Bucket) -> Vec<f32> {
+        let (nn, dd) = (b.n, b.d);
+        let mut out = vars.to_vec();
+        for x in 0..nn {
+            for a in 0..dd {
+                if vars[x * dd + a] == 0.0 {
+                    continue;
+                }
+                for y in 0..nn {
+                    let mut supp = 0.0f32;
+                    for bb in 0..dd {
+                        supp += cons[((x * nn + y) * dd + a) * dd + bb] * vars[y * dd + bb];
+                    }
+                    if supp == 0.0 {
+                        out[x * dd + a] = 0.0;
+                        break;
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn padded_sweep_fixpoint_matches_native_rtac() {
+        for seed in [1u64, 7, 42] {
+            let p = random_csp(&RandomSpec::new(6, 4, 0.8, 0.5, seed));
+            let b = bucket();
+            let cons = encode_cons(&p, b).unwrap();
+
+            // native closure
+            let mut s_native = State::new(&p);
+            let mut c = Counters::default();
+            let native_out = RtacNative::dense().enforce(&p, &mut s_native, &[], &mut c);
+
+            // plane fixpoint
+            let s0 = State::new(&p);
+            let mut plane = encode_vars(&p, &s0, b).unwrap();
+            let mut sweeps = 0;
+            loop {
+                let next = sweep_plane(&cons, &plane, b);
+                sweeps += 1;
+                let wiped = (0..p.n_vars())
+                    .any(|x| (0..b.d).all(|a| next[x * b.d + a] == 0.0));
+                if wiped || next == plane {
+                    plane = next;
+                    break;
+                }
+                plane = next;
+            }
+            assert_eq!(sweeps as u64, c.recurrences, "seed {seed}: sweep count");
+
+            if native_out.is_consistent() {
+                let mut s_decode = State::new(&p);
+                decode_vars(&p, &mut s_decode, &plane, b).unwrap();
+                assert_eq!(s_decode.snapshot(), s_native.snapshot(), "seed {seed}");
+            }
+        }
+    }
+}

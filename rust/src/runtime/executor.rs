@@ -1,0 +1,260 @@
+//! PJRT execution of the AOT artifacts.
+//!
+//! Wraps the `xla` crate: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `compile` → `execute`.  HLO *text*
+//! is the interchange format (see `python/compile/aot.py`).
+//!
+//! `PjRtClient` is `Rc`-backed (not `Send`), so a `Runtime` must stay on
+//! the thread that created it; the coordinator owns one on a dedicated
+//! executor thread and feeds it through channels.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::runtime::manifest::{Entry, Kind, Manifest};
+
+/// Output of a fixpoint artifact.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FixpointOut {
+    /// The enforced plane(s): `batch * n * d` f32 values.
+    pub vars: Vec<f32>,
+    /// Sweeps executed (== native `#Recurrence` for batch == 1).
+    pub iters: i32,
+    /// Per-batch-element status: 0 consistent, 1 wipeout.
+    pub status: Vec<i32>,
+}
+
+/// Status code produced by the L2 model.
+pub const STATUS_CONSISTENT: i32 = 0;
+/// Status code produced by the L2 model.
+pub const STATUS_WIPEOUT: i32 = 1;
+
+struct Loaded {
+    entry: Entry,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// A device-resident tensor (see [`Runtime::upload`]).  Not `Send` —
+/// lives and dies on the runtime's thread like everything PJRT.
+pub struct DeviceTensor {
+    buf: xla::PjRtBuffer,
+}
+
+/// A PJRT CPU client plus the compiled artifacts.
+pub struct Runtime {
+    manifest: Manifest,
+    client: xla::PjRtClient,
+    loaded: HashMap<String, Loaded>,
+}
+
+impl Runtime {
+    /// Load the manifest and compile every artifact eagerly.
+    pub fn load(artifact_dir: &Path) -> Result<Runtime> {
+        Self::load_filtered(artifact_dir, |_| true)
+    }
+
+    /// Load the manifest and compile the entries `keep` accepts
+    /// (compilation is the expensive part; benches load only what they
+    /// exercise).
+    pub fn load_filtered(artifact_dir: &Path, keep: impl Fn(&Entry) -> bool) -> Result<Runtime> {
+        let manifest = Manifest::load(artifact_dir)?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow!("creating PJRT CPU client: {e:?}"))?;
+        let mut loaded = HashMap::new();
+        for entry in manifest.entries.iter().filter(|e| keep(e)) {
+            let exe = compile_entry(&client, entry)
+                .with_context(|| format!("compiling artifact {}", entry.name))?;
+            loaded.insert(entry.name.clone(), Loaded { entry: entry.clone(), exe });
+        }
+        if loaded.is_empty() {
+            bail!("no artifacts loaded from {artifact_dir:?}");
+        }
+        Ok(Runtime { manifest, client, loaded })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn loaded_names(&self) -> Vec<String> {
+        let mut names: Vec<String> = self.loaded.keys().cloned().collect();
+        names.sort();
+        names
+    }
+
+    fn get(&self, name: &str) -> Result<&Loaded> {
+        self.loaded
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact {name:?} not loaded (have {:?})", self.loaded_names()))
+    }
+
+    /// Execute a `step` artifact: one revise sweep.
+    pub fn run_step(&self, name: &str, cons: &[f32], vars: &[f32]) -> Result<Vec<f32>> {
+        let l = self.get(name)?;
+        if l.entry.kind != Kind::Step {
+            bail!("{name} is not a step artifact");
+        }
+        let (n, d) = (l.entry.n as i64, l.entry.d as i64);
+        check_len(cons, (n * n * d * d) as usize, "cons")?;
+        check_len(vars, (n * d) as usize, "vars")?;
+        let cons_l = lit(cons, &[n, n, d, d])?;
+        let vars_l = lit(vars, &[n, d])?;
+        let out = execute(&l.exe, &[cons_l, vars_l])?;
+        let out = out.to_tuple1().map_err(wrap)?;
+        out.to_vec::<f32>().map_err(wrap)
+    }
+
+    /// Execute a fixpoint-family artifact.
+    pub fn run_fixpoint(&self, name: &str, cons: &[f32], vars: &[f32]) -> Result<FixpointOut> {
+        let l = self.get(name)?;
+        let (n, d, b) = (l.entry.n as i64, l.entry.d as i64, l.entry.batch as i64);
+        check_len(cons, (n * n * d * d) as usize, "cons")?;
+        let cons_l = lit(cons, &[n, n, d, d])?;
+        let vars_l = match l.entry.kind {
+            Kind::Fixpoint | Kind::FixpointIncremental => {
+                check_len(vars, (n * d) as usize, "vars")?;
+                lit(vars, &[n, d])?
+            }
+            Kind::FixpointBatched => {
+                check_len(vars, (b * n * d) as usize, "vars")?;
+                lit(vars, &[b, n, d])?
+            }
+            Kind::Step => bail!("{name} is a step artifact; use run_step"),
+        };
+        let out = execute(&l.exe, &[cons_l, vars_l])?;
+        let (vars_out, iters_out, status_out) = out.to_tuple3().map_err(wrap)?;
+        let vars = vars_out.to_vec::<f32>().map_err(wrap)?;
+        let iters = iters_out.to_vec::<i32>().map_err(wrap)?[0];
+        let status = if l.entry.kind == Kind::FixpointBatched {
+            status_out.to_vec::<i32>().map_err(wrap)?
+        } else {
+            vec![status_out.to_vec::<i32>().map_err(wrap)?[0]]
+        };
+        Ok(FixpointOut { vars, iters, status })
+    }
+
+    /// The entry metadata for a loaded artifact.
+    pub fn entry(&self, name: &str) -> Result<&Entry> {
+        Ok(&self.get(name)?.entry)
+    }
+
+    /// Upload a tensor to the device once; reuse across executions.
+    ///
+    /// §Perf L3: the constraint tensor is by far the largest input
+    /// (16.8 MB at the 64×16 bucket) and is immutable per session —
+    /// re-uploading it per request dominated execution time (3.8 ms of
+    /// the 6.3 ms fixpoint; EXPERIMENTS.md §Perf).  The coordinator
+    /// uploads it once per session and passes the resident buffer.
+    pub fn upload(&self, data: &[f32], dims: &[usize]) -> Result<DeviceTensor> {
+        let buf = self
+            .client
+            .buffer_from_host_buffer(data, dims, None)
+            .map_err(wrap)?;
+        Ok(DeviceTensor { buf })
+    }
+
+    /// `run_fixpoint` with a device-resident constraint tensor.
+    pub fn run_fixpoint_dev(
+        &self,
+        name: &str,
+        cons: &DeviceTensor,
+        vars: &[f32],
+    ) -> Result<FixpointOut> {
+        let l = self.get(name)?;
+        let (n, d, b) = (l.entry.n, l.entry.d, l.entry.batch);
+        let vars_buf = match l.entry.kind {
+            Kind::Fixpoint | Kind::FixpointIncremental => {
+                check_len(vars, n * d, "vars")?;
+                self.client.buffer_from_host_buffer(vars, &[n, d], None).map_err(wrap)?
+            }
+            Kind::FixpointBatched => {
+                check_len(vars, b * n * d, "vars")?;
+                self.client.buffer_from_host_buffer(vars, &[b, n, d], None).map_err(wrap)?
+            }
+            Kind::Step => bail!("{name} is a step artifact; use run_step"),
+        };
+        let bufs = l.exe.execute_b(&[&cons.buf, &vars_buf]).map_err(wrap)?;
+        let out = bufs[0][0].to_literal_sync().map_err(wrap)?;
+        let (vars_out, iters_out, status_out) = out.to_tuple3().map_err(wrap)?;
+        let vars = vars_out.to_vec::<f32>().map_err(wrap)?;
+        let iters = iters_out.to_vec::<i32>().map_err(wrap)?[0];
+        let status = if l.entry.kind == Kind::FixpointBatched {
+            status_out.to_vec::<i32>().map_err(wrap)?
+        } else {
+            vec![status_out.to_vec::<i32>().map_err(wrap)?[0]]
+        };
+        Ok(FixpointOut { vars, iters, status })
+    }
+
+    /// Host-driven fixpoint over the *step* artifact: Rust owns the
+    /// recurrence loop, paying one host↔device round-trip per sweep.
+    ///
+    /// Semantically identical to the fused `fixpoint` artifact (asserted
+    /// in tests); exists to *measure* what fusing the while_loop into one
+    /// executable buys (EXPERIMENTS.md §Perf: round-trip ablation) and as
+    /// the hook where an L3 scheduler could interleave work between
+    /// sweeps.
+    pub fn run_fixpoint_stepwise(
+        &self,
+        step_name: &str,
+        cons: &[f32],
+        vars: &[f32],
+    ) -> Result<FixpointOut> {
+        let entry = self.entry(step_name)?.clone();
+        if entry.kind != Kind::Step {
+            bail!("{step_name} is not a step artifact");
+        }
+        let (n, d) = (entry.n, entry.d);
+        let mut cur = vars.to_vec();
+        let mut iters = 0i32;
+        loop {
+            let next = self.run_step(step_name, cons, &cur)?;
+            iters += 1;
+            let wiped = (0..n).any(|x| next[x * d..(x + 1) * d].iter().all(|&v| v == 0.0));
+            if wiped {
+                return Ok(FixpointOut { vars: next, iters, status: vec![STATUS_WIPEOUT] });
+            }
+            if next == cur {
+                return Ok(FixpointOut { vars: next, iters, status: vec![STATUS_CONSISTENT] });
+            }
+            cur = next;
+        }
+    }
+}
+
+fn compile_entry(client: &xla::PjRtClient, entry: &Entry) -> Result<xla::PjRtLoadedExecutable> {
+    let path_str = entry
+        .path
+        .to_str()
+        .ok_or_else(|| anyhow!("non-utf8 artifact path {:?}", entry.path))?;
+    let proto = xla::HloModuleProto::from_text_file(path_str)
+        .map_err(|e| anyhow!("parsing HLO text {path_str}: {e:?}"))?;
+    let comp = xla::XlaComputation::from_proto(&proto);
+    client.compile(&comp).map_err(|e| anyhow!("XLA compile failed: {e:?}"))
+}
+
+fn lit(data: &[f32], dims: &[i64]) -> Result<xla::Literal> {
+    xla::Literal::vec1(data).reshape(dims).map_err(wrap)
+}
+
+fn execute(exe: &xla::PjRtLoadedExecutable, args: &[xla::Literal]) -> Result<xla::Literal> {
+    let bufs = exe.execute::<xla::Literal>(args).map_err(wrap)?;
+    bufs[0][0].to_literal_sync().map_err(wrap)
+}
+
+fn check_len(xs: &[f32], want: usize, what: &str) -> Result<()> {
+    if xs.len() != want {
+        bail!("{what} has {} elements, artifact expects {want}", xs.len());
+    }
+    Ok(())
+}
+
+fn wrap(e: xla::Error) -> anyhow::Error {
+    anyhow!("xla: {e:?}")
+}

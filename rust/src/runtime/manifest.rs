@@ -1,0 +1,195 @@
+//! Artifact manifest: the machine-readable index written by
+//! `python/compile/aot.py` (`artifacts/manifest.json`).
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::{self, Json};
+
+/// What an artifact computes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Kind {
+    /// One revise sweep: (cons, vars) -> (vars',)
+    Step,
+    /// Full fixpoint with wipeout abort: (cons, vars) -> (vars*, iters, status)
+    Fixpoint,
+    /// Joint fixpoint over a batch: (cons, vars[B]) -> (vars*[B], iters, status[B])
+    FixpointBatched,
+    /// Prop.-2 incremental ablation variant.
+    FixpointIncremental,
+}
+
+impl Kind {
+    fn parse(s: &str) -> Result<Kind> {
+        Ok(match s {
+            "step" => Kind::Step,
+            "fixpoint" => Kind::Fixpoint,
+            "fixpoint_batched" => Kind::FixpointBatched,
+            "fixpoint_incremental" => Kind::FixpointIncremental,
+            other => bail!("unknown artifact kind {other:?}"),
+        })
+    }
+}
+
+/// One artifact entry.
+#[derive(Clone, Debug)]
+pub struct Entry {
+    pub name: String,
+    pub path: PathBuf,
+    pub kind: Kind,
+    /// Shape bucket: number of variables.
+    pub n: usize,
+    /// Shape bucket: domain size.
+    pub d: usize,
+    /// Batch size (1 except FixpointBatched).
+    pub batch: usize,
+}
+
+/// The parsed manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub block_x: usize,
+    pub entries: Vec<Entry>,
+    pub dir: PathBuf,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let man_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&man_path)
+            .with_context(|| format!("reading {man_path:?} (run `make artifacts`)"))?;
+        let root = json::parse(&text).map_err(|e| anyhow!("parsing {man_path:?}: {e}"))?;
+        let format = root.get("format").and_then(Json::as_usize).unwrap_or(0);
+        if format != 1 {
+            bail!("unsupported manifest format {format}");
+        }
+        let block_x = root
+            .get("block_x")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| anyhow!("manifest missing block_x"))?;
+        let mut entries = Vec::new();
+        for e in root
+            .get("entries")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("manifest missing entries"))?
+        {
+            let get_str = |k: &str| -> Result<String> {
+                Ok(e.get(k)
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow!("entry missing {k}"))?
+                    .to_string())
+            };
+            let get_usize = |k: &str| -> Result<usize> {
+                e.get(k).and_then(Json::as_usize).ok_or_else(|| anyhow!("entry missing {k}"))
+            };
+            let name = get_str("name")?;
+            let file = get_str("file")?;
+            let path = dir.join(&file);
+            if !path.exists() {
+                bail!("artifact file {path:?} listed in manifest but missing on disk");
+            }
+            entries.push(Entry {
+                name,
+                path,
+                kind: Kind::parse(&get_str("kind")?)?,
+                n: get_usize("n")?,
+                d: get_usize("d")?,
+                batch: get_usize("batch")?,
+            });
+        }
+        if entries.is_empty() {
+            bail!("manifest has no entries");
+        }
+        Ok(Manifest { block_x, entries, dir: dir.to_path_buf() })
+    }
+
+    /// Entry lookup by name.
+    pub fn entry(&self, name: &str) -> Option<&Entry> {
+        self.entries.iter().find(|e| e.name == name)
+    }
+
+    /// Distinct (n, d) buckets available for a kind, ascending by volume.
+    pub fn buckets(&self, kind: Kind) -> Vec<(usize, usize)> {
+        let mut b: Vec<(usize, usize)> = self
+            .entries
+            .iter()
+            .filter(|e| e.kind == kind)
+            .map(|e| (e.n, e.d))
+            .collect();
+        b.sort_by_key(|&(n, d)| n * d);
+        b.dedup();
+        b
+    }
+
+    /// Smallest entry of `kind` (and batch, where relevant) that fits a
+    /// request of `n` variables × `d` values.
+    pub fn pick(&self, kind: Kind, n: usize, d: usize, batch: usize) -> Option<&Entry> {
+        self.entries
+            .iter()
+            .filter(|e| e.kind == kind && e.batch == batch && e.n >= n && e.d >= d)
+            .min_by_key(|e| e.n * e.n * e.d * e.d)
+    }
+
+    /// Batch sizes available for FixpointBatched at any bucket.
+    pub fn batch_sizes(&self) -> Vec<usize> {
+        let mut b: Vec<usize> = self
+            .entries
+            .iter()
+            .filter(|e| e.kind == Kind::FixpointBatched)
+            .map(|e| e.batch)
+            .collect();
+        b.sort();
+        b.dedup();
+        b
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn repo_artifacts() -> Option<Manifest> {
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        Manifest::load(&dir).ok()
+    }
+
+    #[test]
+    fn kind_parse() {
+        assert_eq!(Kind::parse("step").unwrap(), Kind::Step);
+        assert_eq!(Kind::parse("fixpoint_batched").unwrap(), Kind::FixpointBatched);
+        assert!(Kind::parse("nope").is_err());
+    }
+
+    #[test]
+    fn loads_real_manifest_when_present() {
+        let Some(m) = repo_artifacts() else {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        };
+        assert!(m.block_x >= 1);
+        assert!(!m.entries.is_empty());
+        assert!(!m.buckets(Kind::Fixpoint).is_empty());
+        assert_eq!(m.batch_sizes(), vec![4, 8]);
+    }
+
+    #[test]
+    fn pick_prefers_smallest_fitting_bucket() {
+        let Some(m) = repo_artifacts() else {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        };
+        let e = m.pick(Kind::Fixpoint, 10, 5, 1).expect("bucket for 10x5");
+        assert_eq!((e.n, e.d), (16, 8));
+        let tiny = m.pick(Kind::Fixpoint, 3, 3, 1).unwrap();
+        assert_eq!((tiny.n, tiny.d), (8, 4));
+        assert!(m.pick(Kind::Fixpoint, 1000, 4, 1).is_none());
+    }
+
+    #[test]
+    fn missing_dir_is_error_with_hint() {
+        let err = Manifest::load(Path::new("/nonexistent-dir")).unwrap_err();
+        assert!(format!("{err:#}").contains("make artifacts"));
+    }
+}

@@ -1,0 +1,20 @@
+//! PJRT runtime: load the AOT HLO-text artifacts produced by
+//! `python/compile/aot.py`, compile them on the PJRT CPU client, and
+//! execute them from the L3 hot path.  Also owns the tensor
+//! encode/decode contract between `Problem`/`State` and the artifact
+//! planes.
+
+pub mod encode;
+pub mod executor;
+pub mod manifest;
+
+pub use encode::{decode_vars, encode_cons, encode_vars, Bucket};
+pub use executor::{DeviceTensor, FixpointOut, Runtime, STATUS_CONSISTENT, STATUS_WIPEOUT};
+pub use manifest::{Entry, Kind, Manifest};
+
+/// Default artifact directory: `$RTAC_ARTIFACTS` or `./artifacts`.
+pub fn default_artifact_dir() -> std::path::PathBuf {
+    std::env::var_os("RTAC_ARTIFACTS")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|| std::path::PathBuf::from("artifacts"))
+}

@@ -1,0 +1,184 @@
+//! Variable / value ordering heuristics for the MAC solver
+//! (paper Algorithm 2 line 8: `idx = heuristics()`).
+
+use crate::core::{Problem, State, Val, VarId};
+use crate::util::rng::Rng;
+
+/// Variable selection policy.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum VarHeuristic {
+    /// First unassigned variable in index order.
+    Lex,
+    /// Smallest current domain (fail-first).
+    MinDom,
+    /// dom size / static degree.
+    DomDeg,
+    /// dom size / weighted degree; weights bump on wipeout (wdeg-lite —
+    /// weights attach to the wiped variable rather than the culprit
+    /// constraint, which our engine-agnostic Propagator API doesn't
+    /// expose; see DESIGN.md).
+    DomWdeg,
+}
+
+impl VarHeuristic {
+    pub fn parse(s: &str) -> Result<VarHeuristic, String> {
+        match s {
+            "lex" => Ok(VarHeuristic::Lex),
+            "mindom" => Ok(VarHeuristic::MinDom),
+            "domdeg" => Ok(VarHeuristic::DomDeg),
+            "domwdeg" => Ok(VarHeuristic::DomWdeg),
+            other => Err(format!("unknown var heuristic {other:?}")),
+        }
+    }
+}
+
+/// Value ordering policy.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ValOrder {
+    /// Ascending value order.
+    Lex,
+    /// Deterministic shuffle from the solver seed (diversification for
+    /// the random-CSP benches, mirroring the paper's random pick).
+    Random,
+}
+
+impl ValOrder {
+    pub fn parse(s: &str) -> Result<ValOrder, String> {
+        match s {
+            "lex" => Ok(ValOrder::Lex),
+            "random" => Ok(ValOrder::Random),
+            other => Err(format!("unknown value order {other:?}")),
+        }
+    }
+}
+
+/// Mutable heuristic state (wdeg weights).
+pub struct HeuristicState {
+    pub weights: Vec<u64>,
+}
+
+impl HeuristicState {
+    pub fn new(problem: &Problem) -> HeuristicState {
+        HeuristicState { weights: vec![1; problem.n_vars()] }
+    }
+
+    /// Bump the weight of a variable implicated in a wipeout.
+    pub fn bump(&mut self, v: VarId) {
+        self.weights[v] = self.weights[v].saturating_add(1);
+    }
+}
+
+/// Pick the next variable to assign, or None if all are singletons.
+pub fn select_var(
+    h: VarHeuristic,
+    problem: &Problem,
+    state: &State,
+    hs: &HeuristicState,
+) -> Option<VarId> {
+    let unassigned = (0..problem.n_vars()).filter(|&v| !state.is_singleton(v));
+    match h {
+        VarHeuristic::Lex => unassigned.min(),
+        VarHeuristic::MinDom => unassigned.min_by_key(|&v| (state.dom_size(v), v)),
+        VarHeuristic::DomDeg => unassigned.min_by_key(|&v| {
+            let deg = problem.arcs_of(v).len().max(1);
+            // compare dom/deg as rationals: dom_a/deg_a < dom_b/deg_b
+            // avoided via cross-multiplication by mapping to a key tuple
+            (state.dom_size(v) * 1_000_000 / deg, v)
+        }),
+        VarHeuristic::DomWdeg => unassigned.min_by_key(|&v| {
+            let deg = problem.arcs_of(v).len() as u64;
+            let w = (hs.weights[v] * deg.max(1)).max(1);
+            ((state.dom_size(v) as u64 * 1_000_000 / w), v as u64)
+        }),
+    }
+}
+
+/// Order the live values of `v` for branching.
+pub fn order_values(order: ValOrder, state: &State, v: VarId, rng: &mut Rng) -> Vec<Val> {
+    let mut vals: Vec<Val> = state.dom(v).iter_ones().collect();
+    if order == ValOrder::Random {
+        rng.shuffle(&mut vals);
+    }
+    vals
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::Relation;
+
+    fn star_problem() -> Problem {
+        // var 0 is connected to everyone; others only to 0.
+        let mut p = Problem::new("star", 4, 4);
+        let r = Relation::from_fn(4, 4, |a, b| a != b);
+        for v in 1..4 {
+            p.add_constraint(0, v, r.clone());
+        }
+        p
+    }
+
+    #[test]
+    fn lex_picks_lowest_unassigned() {
+        let p = star_problem();
+        let mut s = State::new(&p);
+        let hs = HeuristicState::new(&p);
+        assert_eq!(select_var(VarHeuristic::Lex, &p, &s, &hs), Some(0));
+        s.assign(0, 0);
+        assert_eq!(select_var(VarHeuristic::Lex, &p, &s, &hs), Some(1));
+    }
+
+    #[test]
+    fn mindom_prefers_small_domains() {
+        let p = star_problem();
+        let mut s = State::new(&p);
+        let hs = HeuristicState::new(&p);
+        s.remove(2, 0);
+        s.remove(2, 1);
+        assert_eq!(select_var(VarHeuristic::MinDom, &p, &s, &hs), Some(2));
+    }
+
+    #[test]
+    fn domdeg_prefers_high_degree_on_ties() {
+        let p = star_problem();
+        let s = State::new(&p);
+        let hs = HeuristicState::new(&p);
+        // all domains equal; var 0 has degree 3 vs 1 → smallest ratio
+        assert_eq!(select_var(VarHeuristic::DomDeg, &p, &s, &hs), Some(0));
+    }
+
+    #[test]
+    fn domwdeg_follows_bumps() {
+        let p = star_problem();
+        let s = State::new(&p);
+        let mut hs = HeuristicState::new(&p);
+        // without bumps, degree dominates → var 0
+        assert_eq!(select_var(VarHeuristic::DomWdeg, &p, &s, &hs), Some(0));
+        for _ in 0..10 {
+            hs.bump(2);
+        }
+        assert_eq!(select_var(VarHeuristic::DomWdeg, &p, &s, &hs), Some(2));
+    }
+
+    #[test]
+    fn all_assigned_returns_none() {
+        let p = star_problem();
+        let mut s = State::new(&p);
+        for v in 0..4 {
+            s.assign(v, v % 4);
+        }
+        let hs = HeuristicState::new(&p);
+        assert_eq!(select_var(VarHeuristic::MinDom, &p, &s, &hs), None);
+    }
+
+    #[test]
+    fn value_order_random_is_permutation() {
+        let p = star_problem();
+        let s = State::new(&p);
+        let mut rng = Rng::new(5);
+        let vals = order_values(ValOrder::Random, &s, 1, &mut rng);
+        let mut sorted = vals.clone();
+        sorted.sort();
+        assert_eq!(sorted, vec![0, 1, 2, 3]);
+        assert_eq!(order_values(ValOrder::Lex, &s, 1, &mut rng), vec![0, 1, 2, 3]);
+    }
+}

@@ -1,0 +1,10 @@
+//! MAC backtracking search (the paper's Algorithm 2), generic over the
+//! AC engine, plus ordering heuristics and a parallel portfolio driver
+//! that feeds the coordinator's batched tensor path.
+
+pub mod heuristics;
+pub mod parallel;
+pub mod solver;
+
+pub use heuristics::{ValOrder, VarHeuristic};
+pub use solver::{SolveResult, SolveStats, Solver, SolverConfig};

@@ -1,0 +1,118 @@
+//! Parallel portfolio MAC search over a shared coordinator session.
+//!
+//! The first branching variable's values are partitioned across K worker
+//! threads; each worker runs the standard MAC solver on its sub-space
+//! with a [`TensorEngine`], so every AC call flows through the
+//! coordinator and coalesces with the other workers' calls into batched
+//! XLA executions.  First SAT answer wins (cooperative stop flag); if
+//! every worker exhausts its slice, the instance is UNSAT.
+//!
+//! This is the system story of the paper's GPU pitch: one resident
+//! constraint tensor, many in-flight domain planes.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc};
+
+use anyhow::Result;
+
+use crate::coordinator::{Coordinator, TensorEngine};
+use crate::core::{Problem, Val, VarId};
+use crate::search::solver::{SolveResult, SolveStats, Solver, SolverConfig};
+
+/// Result of a parallel run.
+#[derive(Debug)]
+pub struct ParallelOutcome {
+    pub result: SolveResult,
+    /// Per-worker stats, indexed by worker id.
+    pub worker_stats: Vec<SolveStats>,
+    /// Which worker found the solution (if SAT).
+    pub winner: Option<usize>,
+}
+
+/// Split variable `split_var`'s values round-robin across `k` workers
+/// and race them on the shared `coordinator` session.
+pub fn solve_parallel(
+    problem: &Problem,
+    coordinator: &Coordinator,
+    base_config: &SolverConfig,
+    split_var: VarId,
+    k: usize,
+) -> Result<ParallelOutcome> {
+    assert!(k >= 1);
+    let d = problem.dom_size(split_var);
+    let mut slices: Vec<Vec<Val>> = vec![Vec::new(); k];
+    for a in 0..d {
+        slices[a % k].push(a);
+    }
+
+    let stop = Arc::new(AtomicBool::new(false));
+    let (tx, rx) = mpsc::channel::<(usize, SolveResult, SolveStats)>();
+
+    std::thread::scope(|scope| {
+        for (wid, slice) in slices.into_iter().enumerate() {
+            let handle = coordinator.handle();
+            let stop = stop.clone();
+            let tx = tx.clone();
+            let mut config = base_config.clone();
+            config.stop = Some(stop.clone());
+            config.seed = base_config.seed.wrapping_add(wid as u64);
+            let problem = &*problem;
+            scope.spawn(move || {
+                let mut merged_stats = SolveStats::default();
+                let mut outcome = SolveResult::Unsat;
+                for a in slice {
+                    if stop.load(Ordering::Relaxed) {
+                        outcome = SolveResult::Limit;
+                        break;
+                    }
+                    let mut engine = TensorEngine::new(handle.clone());
+                    let mut solver = Solver::new(&mut engine, config.clone());
+                    let (r, s) = solver.solve_with_assignments(problem, &[(split_var, a)]);
+                    merged_stats.assignments += s.assignments;
+                    merged_stats.backtracks += s.backtracks;
+                    merged_stats.ac_calls += s.ac_calls;
+                    merged_stats.ac.add(&s.ac);
+                    merged_stats.ac_times_ms.extend(s.ac_times_ms);
+                    match r {
+                        SolveResult::Sat(sol) => {
+                            stop.store(true, Ordering::Relaxed);
+                            outcome = SolveResult::Sat(sol);
+                            break;
+                        }
+                        SolveResult::Limit => {
+                            outcome = SolveResult::Limit;
+                            // keep scanning remaining values unless stopped
+                        }
+                        SolveResult::Unsat => {}
+                    }
+                }
+                let _ = tx.send((wid, outcome, merged_stats));
+            });
+        }
+        drop(tx);
+
+        let mut worker_stats: Vec<SolveStats> = vec![SolveStats::default(); k];
+        let mut winner = None;
+        let mut best: Option<SolveResult> = None;
+        let mut any_limit = false;
+        for (wid, r, s) in rx.iter() {
+            worker_stats[wid] = s;
+            match r {
+                SolveResult::Sat(sol) => {
+                    if !matches!(best, Some(SolveResult::Sat(_))) {
+                        best = Some(SolveResult::Sat(sol));
+                        winner = Some(wid);
+                    }
+                }
+                SolveResult::Limit => any_limit = true,
+                SolveResult::Unsat => {}
+            }
+        }
+        let result = match best {
+            Some(sat) => sat,
+            None if any_limit => SolveResult::Limit,
+            None => SolveResult::Unsat,
+        };
+        Ok(ParallelOutcome { result, worker_stats, winner })
+    })
+}

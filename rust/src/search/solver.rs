@@ -1,0 +1,417 @@
+//! MAC (maintaining arc consistency) backtracking search — the paper's
+//! Algorithm 2 (`dfs` + `assign` + `tensorAC`), generic over the AC
+//! engine so AC-3 and RTAC plug into the *same* search for Fig. 3's
+//! apples-to-apples per-assignment timing.
+
+use std::time::{Duration, Instant};
+
+use crate::ac::{Counters, Outcome, Propagator};
+use crate::core::{Problem, State, Val, VarId};
+use crate::search::heuristics::{
+    order_values, select_var, HeuristicState, ValOrder, VarHeuristic,
+};
+use crate::util::rng::Rng;
+
+/// Search configuration.
+#[derive(Clone, Debug)]
+pub struct SolverConfig {
+    pub var_heuristic: VarHeuristic,
+    pub val_order: ValOrder,
+    /// Stop after this many assignments (paper benches: 50K). 0 = no cap.
+    pub max_assignments: u64,
+    /// Wall-clock cap. None = unbounded.
+    pub time_limit: Option<Duration>,
+    /// Seed for value-order shuffling.
+    pub seed: u64,
+    /// Record the duration of every AC call (Fig. 3 data).
+    pub record_ac_times: bool,
+    /// Cooperative cancellation (parallel portfolio: first finisher
+    /// raises the flag, the rest unwind as `SolveResult::Limit`).
+    pub stop: Option<std::sync::Arc<std::sync::atomic::AtomicBool>>,
+}
+
+impl Default for SolverConfig {
+    fn default() -> Self {
+        SolverConfig {
+            var_heuristic: VarHeuristic::MinDom,
+            val_order: ValOrder::Lex,
+            max_assignments: 0,
+            time_limit: None,
+            seed: 0,
+            record_ac_times: false,
+            stop: None,
+        }
+    }
+}
+
+/// Why the search stopped.
+#[derive(Clone, Debug, PartialEq)]
+pub enum SolveResult {
+    /// A solution (one value per variable).
+    Sat(Vec<Val>),
+    /// Exhausted the space.
+    Unsat,
+    /// Hit max_assignments / time_limit first.
+    Limit,
+}
+
+impl SolveResult {
+    pub fn is_sat(&self) -> bool {
+        matches!(self, SolveResult::Sat(_))
+    }
+}
+
+/// Aggregated statistics of one solve run.
+#[derive(Clone, Debug, Default)]
+pub struct SolveStats {
+    /// Assignments tried (paper's unit for Fig. 3 / Table 1 averaging).
+    pub assignments: u64,
+    pub backtracks: u64,
+    /// Work counters summed over every AC call.
+    pub ac: Counters,
+    /// Number of AC calls (root + one per assignment).
+    pub ac_calls: u64,
+    /// Per-AC-call wall time in ms (only if record_ac_times).
+    pub ac_times_ms: Vec<f64>,
+    pub total_time: Duration,
+}
+
+impl SolveStats {
+    /// Mean AC time per assignment in ms (Fig. 3's y-axis).
+    pub fn mean_ac_ms(&self) -> f64 {
+        if self.ac_times_ms.is_empty() {
+            0.0
+        } else {
+            self.ac_times_ms.iter().sum::<f64>() / self.ac_times_ms.len() as f64
+        }
+    }
+
+    /// Mean revisions per AC call (Table 1 `#Revision` column).
+    pub fn revisions_per_call(&self) -> f64 {
+        if self.ac_calls == 0 {
+            0.0
+        } else {
+            self.ac.revisions as f64 / self.ac_calls as f64
+        }
+    }
+
+    /// Mean recurrences per AC call (Table 1 `#Recurrence` column).
+    pub fn recurrences_per_call(&self) -> f64 {
+        if self.ac_calls == 0 {
+            0.0
+        } else {
+            self.ac.recurrences as f64 / self.ac_calls as f64
+        }
+    }
+}
+
+/// The MAC solver.  Borrows the engine so callers can inspect/reuse it.
+pub struct Solver<'e> {
+    pub config: SolverConfig,
+    engine: &'e mut dyn Propagator,
+}
+
+struct Search<'p, 'e> {
+    problem: &'p Problem,
+    config: SolverConfig,
+    engine: &'e mut dyn Propagator,
+    hs: HeuristicState,
+    rng: Rng,
+    stats: SolveStats,
+    started: Instant,
+    limit_hit: bool,
+}
+
+impl<'e> Solver<'e> {
+    pub fn new(engine: &'e mut dyn Propagator, config: SolverConfig) -> Solver<'e> {
+        Solver { config, engine }
+    }
+
+    /// Solve from full initial domains.
+    pub fn solve(&mut self, problem: &Problem) -> (SolveResult, SolveStats) {
+        self.solve_with_assignments(problem, &[])
+    }
+
+    /// Solve with unary givens applied first (e.g. sudoku clues).
+    pub fn solve_with_assignments(
+        &mut self,
+        problem: &Problem,
+        givens: &[(VarId, Val)],
+    ) -> (SolveResult, SolveStats) {
+        let started = Instant::now();
+        self.engine.reset(problem);
+        let mut search = Search {
+            problem,
+            config: self.config.clone(),
+            engine: &mut *self.engine,
+            hs: HeuristicState::new(problem),
+            rng: Rng::new(self.config.seed),
+            stats: SolveStats::default(),
+            started,
+            limit_hit: false,
+        };
+        let mut state = State::new(problem);
+        for &(v, a) in givens {
+            if !state.contains(v, a) {
+                let mut stats = search.stats;
+                stats.total_time = started.elapsed();
+                return (SolveResult::Unsat, stats);
+            }
+            state.assign(v, a);
+        }
+        // Root enforcement over the whole network (Algorithm 2 line 3).
+        let root = search.run_ac(&mut state, &[]);
+        let result = if !root.is_consistent() {
+            SolveResult::Unsat
+        } else {
+            match search.dfs(&mut state) {
+                Some(solution) => SolveResult::Sat(solution),
+                None if search.limit_hit => SolveResult::Limit,
+                None => SolveResult::Unsat,
+            }
+        };
+        let mut stats = search.stats;
+        stats.total_time = started.elapsed();
+        if let SolveResult::Sat(sol) = &result {
+            debug_assert!(problem.satisfies(sol), "solver returned a non-solution");
+        }
+        (result, stats)
+    }
+}
+
+impl<'p, 'e> Search<'p, 'e> {
+    fn run_ac(&mut self, state: &mut State, touched: &[VarId]) -> Outcome {
+        let t = Instant::now();
+        let out = self.engine.enforce(self.problem, state, touched, &mut self.stats.ac);
+        self.stats.ac_calls += 1;
+        if self.config.record_ac_times {
+            self.stats.ac_times_ms.push(t.elapsed().as_secs_f64() * 1e3);
+        }
+        out
+    }
+
+    fn budget_exhausted(&mut self) -> bool {
+        if self.config.max_assignments > 0 && self.stats.assignments >= self.config.max_assignments
+        {
+            self.limit_hit = true;
+            return true;
+        }
+        if let Some(stop) = &self.config.stop {
+            if stop.load(std::sync::atomic::Ordering::Relaxed) {
+                self.limit_hit = true;
+                return true;
+            }
+        }
+        if let Some(limit) = self.config.time_limit {
+            // check the clock only every few nodes to keep it cheap
+            if self.stats.assignments % 64 == 0 && self.started.elapsed() > limit {
+                self.limit_hit = true;
+                return true;
+            }
+        }
+        false
+    }
+
+    /// Depth-first MAC.  Returns a solution extension if one exists
+    /// below this node.
+    fn dfs(&mut self, state: &mut State) -> Option<Vec<Val>> {
+        let var = match select_var(self.config.var_heuristic, self.problem, state, &self.hs) {
+            None => {
+                // every variable is a singleton: a solution
+                return Some(
+                    (0..self.problem.n_vars()).map(|v| state.value(v).unwrap()).collect(),
+                );
+            }
+            Some(v) => v,
+        };
+        let vals = order_values(self.config.val_order, state, var, &mut self.rng);
+        for a in vals {
+            if self.budget_exhausted() {
+                return None;
+            }
+            state.push_level();
+            state.assign(var, a);
+            self.stats.assignments += 1;
+            let out = self.run_ac(state, &[var]);
+            if out.is_consistent() {
+                if let Some(sol) = self.dfs(state) {
+                    return Some(sol);
+                }
+                if self.limit_hit {
+                    state.pop_level();
+                    return None;
+                }
+            } else if let Outcome::Wipeout(w) = out {
+                self.hs.bump(w);
+            }
+            state.pop_level();
+            self.stats.backtracks += 1;
+        }
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ac::make_engine;
+    use crate::gen::{pigeonhole, queens};
+    use crate::gen::coloring::c5;
+    use crate::gen::random::{random_csp, RandomSpec};
+
+    fn solve_with(engine_name: &str, p: &Problem) -> (SolveResult, SolveStats) {
+        let mut engine = make_engine(engine_name).unwrap();
+        let mut solver = Solver::new(engine.as_mut(), SolverConfig::default());
+        solver.solve(p)
+    }
+
+    #[test]
+    fn queens_sat_sizes() {
+        for n in [1, 4, 5, 6, 8] {
+            let p = queens(n);
+            let (r, _) = solve_with("ac3", &p);
+            match r {
+                SolveResult::Sat(sol) => assert!(p.satisfies(&sol), "n={n}"),
+                other => panic!("queens({n}) -> {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn queens_unsat_sizes() {
+        for n in [2, 3] {
+            let (r, _) = solve_with("ac3bit", &queens(n));
+            assert_eq!(r, SolveResult::Unsat, "n={n}");
+        }
+    }
+
+    #[test]
+    fn pigeonhole_unsat_with_every_engine() {
+        let p = pigeonhole(5, 4);
+        for name in crate::ac::ALL_ENGINES {
+            let (r, _) = solve_with(name, &p);
+            assert_eq!(r, SolveResult::Unsat, "engine {name}");
+        }
+    }
+
+    #[test]
+    fn c5_colorable_with_3_not_2() {
+        let (r3, _) = solve_with("rtac", &c5(3));
+        assert!(r3.is_sat());
+        let (r2, _) = solve_with("rtac", &c5(2));
+        assert_eq!(r2, SolveResult::Unsat);
+    }
+
+    #[test]
+    fn engines_agree_on_random_instances() {
+        for seed in 0..6 {
+            let p = random_csp(&RandomSpec::new(10, 5, 0.5, 0.45, seed));
+            let verdicts: Vec<bool> = crate::ac::ALL_ENGINES
+                .iter()
+                .map(|e| solve_with(e, &p).0.is_sat())
+                .collect();
+            assert!(
+                verdicts.iter().all(|&v| v == verdicts[0]),
+                "seed {seed}: {verdicts:?} across {:?}",
+                crate::ac::ALL_ENGINES
+            );
+        }
+    }
+
+    #[test]
+    fn sat_solutions_verified_per_engine() {
+        let p = random_csp(&RandomSpec::new(9, 6, 0.4, 0.3, 11));
+        for name in crate::ac::ALL_ENGINES {
+            let (r, _) = solve_with(name, &p);
+            if let SolveResult::Sat(sol) = r {
+                assert!(p.satisfies(&sol), "engine {name}");
+            }
+        }
+    }
+
+    #[test]
+    fn assignment_limit_respected() {
+        let p = pigeonhole(9, 8); // big UNSAT tree
+        let mut engine = make_engine("ac3bit").unwrap();
+        let cfg = SolverConfig { max_assignments: 50, ..Default::default() };
+        let mut solver = Solver::new(engine.as_mut(), cfg);
+        let (r, stats) = solver.solve(&p);
+        assert_eq!(r, SolveResult::Limit);
+        assert!(stats.assignments <= 51);
+    }
+
+    #[test]
+    fn givens_respected() {
+        let p = queens(6);
+        let mut engine = make_engine("ac3").unwrap();
+        let mut solver = Solver::new(engine.as_mut(), SolverConfig::default());
+        let (r, _) = solver.solve_with_assignments(&p, &[(0, 1)]);
+        if let SolveResult::Sat(sol) = r {
+            assert_eq!(sol[0], 1);
+            assert!(p.satisfies(&sol));
+        } else {
+            panic!("queens(6) with given col0=1 should be SAT");
+        }
+    }
+
+    #[test]
+    fn contradictory_given_is_unsat() {
+        let p = queens(5);
+        let mut engine = make_engine("ac3").unwrap();
+        let mut solver = Solver::new(engine.as_mut(), SolverConfig::default());
+        // two givens attacking each other
+        let (r, _) = solver.solve_with_assignments(&p, &[(0, 0), (1, 0)]);
+        assert_eq!(r, SolveResult::Unsat);
+    }
+
+    #[test]
+    fn stats_populated() {
+        let p = queens(6);
+        let mut engine = make_engine("rtac").unwrap();
+        let cfg = SolverConfig { record_ac_times: true, ..Default::default() };
+        let mut solver = Solver::new(engine.as_mut(), cfg);
+        let (_, stats) = solver.solve(&p);
+        assert!(stats.assignments > 0);
+        assert!(stats.ac_calls as usize == stats.ac_times_ms.len());
+        assert!(stats.ac.recurrences > 0);
+        assert!(stats.recurrences_per_call() >= 1.0);
+        assert!(stats.mean_ac_ms() >= 0.0);
+    }
+
+    #[test]
+    fn heuristics_all_solve_queens8() {
+        for h in ["lex", "mindom", "domdeg", "domwdeg"] {
+            let p = queens(8);
+            let mut engine = make_engine("ac3bit").unwrap();
+            let cfg = SolverConfig {
+                var_heuristic: VarHeuristic::parse(h).unwrap(),
+                ..Default::default()
+            };
+            let mut solver = Solver::new(engine.as_mut(), cfg);
+            let (r, _) = solver.solve(&p);
+            assert!(r.is_sat(), "heuristic {h}");
+        }
+    }
+
+    #[test]
+    fn sudoku_solves() {
+        let (p, givens) = crate::gen::sudoku_from_givens(&format!(
+            "53..7....6..195....98....6.8...6...34..8.3..17...2...6.6....28....419..5....8..79{}",
+            ""
+        ))
+        .unwrap();
+        let mut engine = make_engine("ac3bit").unwrap();
+        let mut solver = Solver::new(engine.as_mut(), SolverConfig::default());
+        let (r, _) = solver.solve_with_assignments(&p, &givens);
+        match r {
+            SolveResult::Sat(sol) => {
+                assert!(p.satisfies(&sol));
+                // givens preserved
+                for (c, v) in givens {
+                    assert_eq!(sol[c], v);
+                }
+            }
+            other => panic!("sudoku -> {other:?}"),
+        }
+    }
+}

@@ -1,0 +1,288 @@
+//! Dynamic bitset over `u64` words — the workhorse of the native AC
+//! engines (domains and relation rows are bitsets; support checks are
+//! word-wise AND + any-nonzero).
+//!
+//! The hot operations (`intersects`, `intersect_count`, `and_assign`) are
+//! branch-light loops over the word slice so LLVM auto-vectorises them.
+
+/// A fixed-capacity bitset backed by a `Vec<u64>`.
+#[derive(Clone, PartialEq, Eq, Hash)]
+pub struct BitSet {
+    len: usize,
+    words: Vec<u64>,
+}
+
+#[inline]
+fn word_count(len: usize) -> usize {
+    (len + 63) / 64
+}
+
+/// Mask selecting the valid bits of the final word.
+#[inline]
+fn tail_mask(len: usize) -> u64 {
+    let r = len % 64;
+    if r == 0 {
+        !0
+    } else {
+        (1u64 << r) - 1
+    }
+}
+
+impl BitSet {
+    /// All-zeros bitset of capacity `len` bits.
+    pub fn zeros(len: usize) -> Self {
+        BitSet { len, words: vec![0; word_count(len)] }
+    }
+
+    /// All-ones bitset of capacity `len` bits.
+    pub fn ones(len: usize) -> Self {
+        let mut s = BitSet { len, words: vec![!0u64; word_count(len)] };
+        if let Some(last) = s.words.last_mut() {
+            *last &= tail_mask(len);
+        }
+        s
+    }
+
+    /// Build from an iterator of set bit positions.
+    pub fn from_indices(len: usize, idx: impl IntoIterator<Item = usize>) -> Self {
+        let mut s = Self::zeros(len);
+        for i in idx {
+            s.set(i);
+        }
+        s
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    #[inline]
+    pub fn is_empty_capacity(&self) -> bool {
+        self.len == 0
+    }
+
+    #[inline]
+    pub fn words(&self) -> &[u64] {
+        &self.words
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize) {
+        debug_assert!(i < self.len);
+        self.words[i / 64] |= 1u64 << (i % 64);
+    }
+
+    #[inline]
+    pub fn clear(&mut self, i: usize) {
+        debug_assert!(i < self.len);
+        self.words[i / 64] &= !(1u64 << (i % 64));
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize) -> bool {
+        debug_assert!(i < self.len);
+        (self.words[i / 64] >> (i % 64)) & 1 == 1
+    }
+
+    /// Number of set bits.
+    #[inline]
+    pub fn count(&self) -> usize {
+        self.words.iter().map(|w| w.count_ones() as usize).sum()
+    }
+
+    /// True iff no bit is set.
+    #[inline]
+    pub fn none(&self) -> bool {
+        self.words.iter().all(|&w| w == 0)
+    }
+
+    /// True iff `self & other` has any set bit — the support test.
+    #[inline]
+    pub fn intersects(&self, other: &BitSet) -> bool {
+        debug_assert_eq!(self.len, other.len);
+        self.words
+            .iter()
+            .zip(&other.words)
+            .any(|(&a, &b)| a & b != 0)
+    }
+
+    /// popcount(self & other) — the support *count* (paper's `Sup_xy`).
+    #[inline]
+    pub fn intersect_count(&self, other: &BitSet) -> usize {
+        debug_assert_eq!(self.len, other.len);
+        self.words
+            .iter()
+            .zip(&other.words)
+            .map(|(&a, &b)| (a & b).count_ones() as usize)
+            .sum()
+    }
+
+    /// self &= other; returns true if self changed.
+    pub fn and_assign(&mut self, other: &BitSet) -> bool {
+        debug_assert_eq!(self.len, other.len);
+        let mut changed = false;
+        for (a, &b) in self.words.iter_mut().zip(&other.words) {
+            let na = *a & b;
+            changed |= na != *a;
+            *a = na;
+        }
+        changed
+    }
+
+    /// self |= other.
+    pub fn or_assign(&mut self, other: &BitSet) {
+        debug_assert_eq!(self.len, other.len);
+        for (a, &b) in self.words.iter_mut().zip(&other.words) {
+            *a |= b;
+        }
+    }
+
+    /// self &= !other (set difference); returns true if self changed.
+    pub fn and_not_assign(&mut self, other: &BitSet) -> bool {
+        debug_assert_eq!(self.len, other.len);
+        let mut changed = false;
+        for (a, &b) in self.words.iter_mut().zip(&other.words) {
+            let na = *a & !b;
+            changed |= na != *a;
+            *a = na;
+        }
+        changed
+    }
+
+    /// Set every bit to zero, keeping capacity.
+    pub fn clear_all(&mut self) {
+        self.words.iter_mut().for_each(|w| *w = 0);
+    }
+
+    /// Index of the lowest set bit, if any.
+    #[inline]
+    pub fn first(&self) -> Option<usize> {
+        for (wi, &w) in self.words.iter().enumerate() {
+            if w != 0 {
+                return Some(wi * 64 + w.trailing_zeros() as usize);
+            }
+        }
+        None
+    }
+
+    /// Iterate indices of set bits in ascending order.
+    pub fn iter_ones(&self) -> OnesIter<'_> {
+        OnesIter { set: self, wi: 0, cur: self.words.first().copied().unwrap_or(0) }
+    }
+
+    /// Copy the set bits into a Vec (convenience for tests / tracing).
+    pub fn to_vec(&self) -> Vec<usize> {
+        self.iter_ones().collect()
+    }
+}
+
+impl std::fmt::Debug for BitSet {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "BitSet{{len:{}, ones:{:?}}}", self.len, self.to_vec())
+    }
+}
+
+/// Iterator over set-bit indices.
+pub struct OnesIter<'a> {
+    set: &'a BitSet,
+    wi: usize,
+    cur: u64,
+}
+
+impl<'a> Iterator for OnesIter<'a> {
+    type Item = usize;
+
+    #[inline]
+    fn next(&mut self) -> Option<usize> {
+        loop {
+            if self.cur != 0 {
+                let b = self.cur.trailing_zeros() as usize;
+                self.cur &= self.cur - 1;
+                return Some(self.wi * 64 + b);
+            }
+            self.wi += 1;
+            if self.wi >= self.set.words.len() {
+                return None;
+            }
+            self.cur = self.set.words[self.wi];
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zeros_and_ones() {
+        let z = BitSet::zeros(70);
+        assert_eq!(z.count(), 0);
+        assert!(z.none());
+        let o = BitSet::ones(70);
+        assert_eq!(o.count(), 70);
+        assert!(!o.get(69) == false);
+        // tail bits beyond len must be clear
+        assert_eq!(o.words()[1] >> 6, 0);
+    }
+
+    #[test]
+    fn set_get_clear() {
+        let mut s = BitSet::zeros(130);
+        for i in [0, 1, 63, 64, 127, 129] {
+            s.set(i);
+            assert!(s.get(i));
+        }
+        assert_eq!(s.count(), 6);
+        s.clear(64);
+        assert!(!s.get(64));
+        assert_eq!(s.count(), 5);
+    }
+
+    #[test]
+    fn intersects_and_count() {
+        let a = BitSet::from_indices(100, [1, 50, 99]);
+        let b = BitSet::from_indices(100, [2, 50, 99]);
+        assert!(a.intersects(&b));
+        assert_eq!(a.intersect_count(&b), 2);
+        let c = BitSet::from_indices(100, [3, 4]);
+        assert!(!a.intersects(&c));
+        assert_eq!(a.intersect_count(&c), 0);
+    }
+
+    #[test]
+    fn and_assign_reports_change() {
+        let mut a = BitSet::from_indices(64, [1, 2, 3]);
+        let b = BitSet::from_indices(64, [2, 3, 4]);
+        assert!(a.and_assign(&b));
+        assert_eq!(a.to_vec(), vec![2, 3]);
+        let b2 = BitSet::ones(64);
+        assert!(!a.and_assign(&b2));
+    }
+
+    #[test]
+    fn and_not_assign() {
+        let mut a = BitSet::from_indices(64, [1, 2, 3]);
+        let b = BitSet::from_indices(64, [2]);
+        assert!(a.and_not_assign(&b));
+        assert_eq!(a.to_vec(), vec![1, 3]);
+        assert!(!a.and_not_assign(&b));
+    }
+
+    #[test]
+    fn iter_ones_crosses_words() {
+        let idx = vec![0, 63, 64, 65, 128, 199];
+        let s = BitSet::from_indices(200, idx.clone());
+        assert_eq!(s.to_vec(), idx);
+        assert_eq!(s.first(), Some(0));
+        assert_eq!(BitSet::zeros(10).first(), None);
+    }
+
+    #[test]
+    fn or_assign() {
+        let mut a = BitSet::from_indices(80, [1]);
+        let b = BitSet::from_indices(80, [70]);
+        a.or_assign(&b);
+        assert_eq!(a.to_vec(), vec![1, 70]);
+    }
+}

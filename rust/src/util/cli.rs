@@ -1,0 +1,195 @@
+//! Tiny CLI argument parser (the vendored crate set has no clap).
+//!
+//! Grammar: `binary SUBCOMMAND [positional...] [--key value | --flag]`.
+//! Unknown keys are collected and reported by `finish()` so typos fail
+//! loudly instead of silently using defaults.
+//!
+//! Ambiguity rule: `--name tok` treats `tok` as the option's value
+//! whenever `tok` does not itself start with `--` (there is no flag
+//! registry).  Boolean flags must therefore appear *after* positionals,
+//! or use the unambiguous `--flag` / `--key=value` forms.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positional: Vec<String>,
+    options: BTreeMap<String, String>,
+    flags: Vec<String>,
+    consumed: std::cell::RefCell<Vec<String>>,
+}
+
+impl Args {
+    /// Parse from an iterator of arguments (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Result<Args, String> {
+        let mut args = Args::default();
+        let mut it = argv.into_iter().peekable();
+        if let Some(first) = it.peek() {
+            if !first.starts_with('-') {
+                args.subcommand = it.next();
+            }
+        }
+        while let Some(a) = it.next() {
+            if let Some(key) = a.strip_prefix("--") {
+                if key.is_empty() {
+                    return Err("bare '--' not supported".into());
+                }
+                if let Some((k, v)) = key.split_once('=') {
+                    args.options.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = it.next().unwrap();
+                    args.options.insert(key.to_string(), v);
+                } else {
+                    args.flags.push(key.to_string());
+                }
+            } else {
+                args.positional.push(a);
+            }
+        }
+        Ok(args)
+    }
+
+    /// Parse the real process arguments.
+    pub fn from_env() -> Result<Args, String> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    fn mark(&self, key: &str) {
+        self.consumed.borrow_mut().push(key.to_string());
+    }
+
+    pub fn has_flag(&self, key: &str) -> bool {
+        self.mark(key);
+        self.flags.iter().any(|f| f == key)
+    }
+
+    pub fn get_str(&self, key: &str) -> Option<String> {
+        self.mark(key);
+        self.options.get(key).cloned()
+    }
+
+    pub fn get_or(&self, key: &str, default: &str) -> String {
+        self.get_str(key).unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize, String> {
+        match self.get_str(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| format!("--{key}: expected integer, got {v:?}")),
+        }
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> Result<u64, String> {
+        match self.get_str(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| format!("--{key}: expected integer, got {v:?}")),
+        }
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> Result<f64, String> {
+        match self.get_str(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| format!("--{key}: expected number, got {v:?}")),
+        }
+    }
+
+    /// Comma-separated list, e.g. `--densities 0.1,0.5,1.0`.
+    pub fn get_f64_list(&self, key: &str, default: &[f64]) -> Result<Vec<f64>, String> {
+        match self.get_str(key) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .map(|p| p.trim().parse().map_err(|_| format!("--{key}: bad number {p:?}")))
+                .collect(),
+        }
+    }
+
+    pub fn get_usize_list(&self, key: &str, default: &[usize]) -> Result<Vec<usize>, String> {
+        match self.get_str(key) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .map(|p| p.trim().parse().map_err(|_| format!("--{key}: bad integer {p:?}")))
+                .collect(),
+        }
+    }
+
+    /// Call after reading every expected option: errors on unknown keys.
+    pub fn finish(&self) -> Result<(), String> {
+        let consumed = self.consumed.borrow();
+        let unknown: Vec<&String> = self
+            .options
+            .keys()
+            .chain(self.flags.iter())
+            .filter(|k| !consumed.contains(k))
+            .collect();
+        if unknown.is_empty() {
+            Ok(())
+        } else {
+            Err(format!("unknown option(s): {unknown:?}"))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = parse("solve input.csp --vars 100 --density 0.5 --verbose");
+        assert_eq!(a.subcommand.as_deref(), Some("solve"));
+        assert_eq!(a.get_usize("vars", 0).unwrap(), 100);
+        assert_eq!(a.get_f64("density", 0.0).unwrap(), 0.5);
+        assert!(a.has_flag("verbose"));
+        assert_eq!(a.positional, vec!["input.csp"]);
+        a.finish().unwrap();
+    }
+
+    #[test]
+    fn equals_syntax() {
+        let a = parse("gen --n=10 --d=0.25");
+        assert_eq!(a.get_usize("n", 0).unwrap(), 10);
+        assert_eq!(a.get_f64("d", 0.0).unwrap(), 0.25);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse("bench");
+        assert_eq!(a.get_usize("iters", 7).unwrap(), 7);
+        assert_eq!(a.get_or("engine", "rtac"), "rtac");
+    }
+
+    #[test]
+    fn lists() {
+        let a = parse("bench --densities 0.1,0.5,1.0 --sizes 10,20");
+        assert_eq!(a.get_f64_list("densities", &[]).unwrap(), vec![0.1, 0.5, 1.0]);
+        assert_eq!(a.get_usize_list("sizes", &[]).unwrap(), vec![10, 20]);
+    }
+
+    #[test]
+    fn unknown_options_detected() {
+        let a = parse("run --typo 3");
+        let _ = a.get_usize("iters", 1);
+        assert!(a.finish().is_err());
+    }
+
+    #[test]
+    fn bad_number_is_error() {
+        let a = parse("run --n abc");
+        assert!(a.get_usize("n", 0).is_err());
+    }
+
+    #[test]
+    fn flag_followed_by_flag() {
+        let a = parse("x --quiet --fast");
+        assert!(a.has_flag("quiet"));
+        assert!(a.has_flag("fast"));
+    }
+}

@@ -1,0 +1,13 @@
+//! Foundation utilities: bitsets, deterministic RNG, JSON, CLI parsing,
+//! tables, stats, timing, and a mini property-testing harness.  All of
+//! this exists because the offline vendored crate set has no rand / serde
+//! / clap / criterion / proptest — see DESIGN.md §3.
+
+pub mod bitset;
+pub mod cli;
+pub mod json;
+pub mod quickcheck;
+pub mod rng;
+pub mod stats;
+pub mod table;
+pub mod timer;

@@ -1,0 +1,88 @@
+//! Miniature property-testing harness (proptest is not in the vendored
+//! crate set).  Deterministic: every case derives from a base seed, and a
+//! failure report prints the seed of the failing case so it can be
+//! replayed with `forall_seeded`.
+
+use super::rng::Rng;
+
+/// Default number of cases per property.
+pub const DEFAULT_CASES: usize = 64;
+
+/// Run `prop` on `cases` generated inputs; panics with the failing seed
+/// and message on the first counterexample.
+pub fn forall<F>(name: &str, base_seed: u64, cases: usize, mut prop: F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    let mut seeder = Rng::new(base_seed);
+    for case in 0..cases {
+        let case_seed = seeder.next_u64();
+        let mut rng = Rng::new(case_seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!(
+                "property {name:?} failed at case {case}/{cases} \
+                 (replay seed: {case_seed:#x}): {msg}"
+            );
+        }
+    }
+}
+
+/// Replay a single case by seed (for debugging a reported failure).
+pub fn forall_seeded<F>(name: &str, case_seed: u64, mut prop: F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    let mut rng = Rng::new(case_seed);
+    if let Err(msg) = prop(&mut rng) {
+        panic!("property {name:?} failed (seed {case_seed:#x}): {msg}");
+    }
+}
+
+/// Assertion helper producing property-style Result errors.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)+) => {
+        if !$cond {
+            return Err(format!($($fmt)+));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_true_property() {
+        forall("sum-commutes", 1, 32, |rng| {
+            let a = rng.gen_range(1000) as i64;
+            let b = rng.gen_range(1000) as i64;
+            if a + b == b + a {
+                Ok(())
+            } else {
+                Err("math broke".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "replay seed")]
+    fn reports_failing_seed() {
+        forall("always-false", 2, 4, |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn deterministic_cases() {
+        let mut first: Vec<u64> = Vec::new();
+        forall("collect", 42, 8, |rng| {
+            first.push(rng.next_u64());
+            Ok(())
+        });
+        let mut second: Vec<u64> = Vec::new();
+        forall("collect", 42, 8, |rng| {
+            second.push(rng.next_u64());
+            Ok(())
+        });
+        assert_eq!(first, second);
+    }
+}

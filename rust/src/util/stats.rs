@@ -1,0 +1,178 @@
+//! Sample statistics for the bench harness and coordinator metrics:
+//! mean/stddev/min/max and order statistics (p50/p90/p99).
+
+/// Summary statistics of a sample of f64 measurements.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub max: f64,
+    pub p50: f64,
+    pub p90: f64,
+    pub p99: f64,
+}
+
+impl Summary {
+    /// Compute from a sample; returns None on an empty slice.
+    pub fn from(samples: &[f64]) -> Option<Summary> {
+        if samples.is_empty() {
+            return None;
+        }
+        let n = samples.len();
+        let mean = samples.iter().sum::<f64>() / n as f64;
+        let var = samples.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>()
+            / n.max(1) as f64;
+        let mut sorted = samples.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Some(Summary {
+            n,
+            mean,
+            std: var.sqrt(),
+            min: sorted[0],
+            max: sorted[n - 1],
+            p50: percentile_sorted(&sorted, 0.50),
+            p90: percentile_sorted(&sorted, 0.90),
+            p99: percentile_sorted(&sorted, 0.99),
+        })
+    }
+}
+
+/// Nearest-rank percentile of an ascending-sorted slice.
+pub fn percentile_sorted(sorted: &[f64], q: f64) -> f64 {
+    assert!(!sorted.is_empty());
+    let rank = (q * (sorted.len() - 1) as f64).round() as usize;
+    sorted[rank.min(sorted.len() - 1)]
+}
+
+/// Streaming mean/variance (Welford) for long-running metrics where
+/// keeping every sample would be wasteful.
+#[derive(Clone, Debug, Default)]
+pub struct Online {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Online {
+    pub fn new() -> Online {
+        Online { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let delta = x - self.mean;
+        self.mean += delta / self.n as f64;
+        self.m2 += delta * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    pub fn std(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            (self.m2 / self.n as f64).sqrt()
+        }
+    }
+
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+
+    pub fn merge(&mut self, other: &Online) {
+        if other.n == 0 {
+            return;
+        }
+        if self.n == 0 {
+            *self = other.clone();
+            return;
+        }
+        let n = self.n + other.n;
+        let delta = other.mean - self.mean;
+        let mean = self.mean + delta * other.n as f64 / n as f64;
+        let m2 = self.m2
+            + other.m2
+            + delta * delta * (self.n as f64 * other.n as f64) / n as f64;
+        self.n = n;
+        self.mean = mean;
+        self.m2 = m2;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_of_known_sample() {
+        let s = Summary::from(&[1.0, 2.0, 3.0, 4.0, 5.0]).unwrap();
+        assert_eq!(s.n, 5);
+        assert!((s.mean - 3.0).abs() < 1e-12);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 5.0);
+        assert_eq!(s.p50, 3.0);
+    }
+
+    #[test]
+    fn summary_empty_is_none() {
+        assert!(Summary::from(&[]).is_none());
+    }
+
+    #[test]
+    fn percentiles_monotone() {
+        let mut v: Vec<f64> = (0..1000).map(|i| i as f64).collect();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let p50 = percentile_sorted(&v, 0.5);
+        let p90 = percentile_sorted(&v, 0.9);
+        let p99 = percentile_sorted(&v, 0.99);
+        assert!(p50 <= p90 && p90 <= p99);
+        assert!((p50 - 499.0).abs() <= 1.0);
+        assert!((p99 - 989.0).abs() <= 1.5);
+    }
+
+    #[test]
+    fn online_matches_batch() {
+        let xs: Vec<f64> = (0..100).map(|i| ((i * 37) % 11) as f64).collect();
+        let mut o = Online::new();
+        xs.iter().for_each(|&x| o.push(x));
+        let s = Summary::from(&xs).unwrap();
+        assert!((o.mean() - s.mean).abs() < 1e-9);
+        assert!((o.std() - s.std).abs() < 1e-9);
+        assert_eq!(o.min(), s.min);
+        assert_eq!(o.max(), s.max);
+    }
+
+    #[test]
+    fn online_merge_matches_single_stream() {
+        let xs: Vec<f64> = (0..50).map(|i| i as f64 * 0.5).collect();
+        let (a, b) = xs.split_at(20);
+        let mut oa = Online::new();
+        a.iter().for_each(|&x| oa.push(x));
+        let mut ob = Online::new();
+        b.iter().for_each(|&x| ob.push(x));
+        oa.merge(&ob);
+        let mut all = Online::new();
+        xs.iter().for_each(|&x| all.push(x));
+        assert!((oa.mean() - all.mean()).abs() < 1e-9);
+        assert!((oa.std() - all.std()).abs() < 1e-9);
+        assert_eq!(oa.count(), all.count());
+    }
+}

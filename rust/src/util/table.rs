@@ -1,0 +1,111 @@
+//! ASCII table rendering for bench reports (paper-style rows on stdout).
+
+/// Column-aligned text table.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Table {
+        Table { headers: headers.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(cells);
+        self
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    /// Render with a header underline; numeric-looking cells right-align.
+    pub fn render(&self) -> String {
+        let ncol = self.headers.len();
+        let mut width = vec![0usize; ncol];
+        for c in 0..ncol {
+            width[c] = self.headers[c].len();
+            for r in &self.rows {
+                width[c] = width[c].max(r[c].len());
+            }
+        }
+        let numeric: Vec<bool> = (0..ncol)
+            .map(|c| {
+                !self.rows.is_empty()
+                    && self.rows.iter().all(|r| {
+                        r[c].trim_end_matches(|ch: char| "x%ms".contains(ch))
+                            .parse::<f64>()
+                            .is_ok()
+                    })
+            })
+            .collect();
+        let mut out = String::new();
+        let fmt_cell = |text: &str, c: usize, is_num: bool| {
+            if is_num {
+                format!("{:>width$}", text, width = width[c])
+            } else {
+                format!("{:<width$}", text, width = width[c])
+            }
+        };
+        let hdr: Vec<String> = (0..ncol).map(|c| fmt_cell(&self.headers[c], c, numeric[c])).collect();
+        out.push_str(&hdr.join("  "));
+        out.push('\n');
+        out.push_str(&"-".repeat(width.iter().sum::<usize>() + 2 * (ncol - 1)));
+        out.push('\n');
+        for r in &self.rows {
+            let cells: Vec<String> = (0..ncol).map(|c| fmt_cell(&r[c], c, numeric[c])).collect();
+            out.push_str(&cells.join("  "));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Format a float with a sensible number of digits for a report cell.
+pub fn fnum(x: f64) -> String {
+    if x == 0.0 {
+        "0".to_string()
+    } else if x.abs() >= 1000.0 {
+        format!("{:.0}", x)
+    } else if x.abs() >= 10.0 {
+        format!("{:.1}", x)
+    } else {
+        format!("{:.3}", x)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = Table::new(&["name", "value"]);
+        t.row(vec!["alpha".into(), "1.5".into()]);
+        t.row(vec!["b".into(), "120".into()]);
+        let s = t.render();
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert!(lines[0].starts_with("name"));
+        // numeric column right-aligned
+        assert!(lines[2].ends_with("1.5"));
+        assert!(lines[3].ends_with("120"));
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity mismatch")]
+    fn arity_checked() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(vec!["only-one".into()]);
+    }
+
+    #[test]
+    fn fnum_ranges() {
+        assert_eq!(fnum(0.0), "0");
+        assert_eq!(fnum(3.4567), "3.457");
+        assert_eq!(fnum(42.34), "42.3");
+        assert_eq!(fnum(12345.6), "12346");
+    }
+}

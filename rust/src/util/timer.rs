@@ -1,0 +1,92 @@
+//! Timing helpers for the bench harness and coordinator metrics.
+
+use std::time::{Duration, Instant};
+
+/// A simple stopwatch.
+#[derive(Debug, Clone)]
+pub struct Stopwatch {
+    start: Instant,
+}
+
+impl Stopwatch {
+    pub fn start() -> Stopwatch {
+        Stopwatch { start: Instant::now() }
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    pub fn elapsed_ms(&self) -> f64 {
+        self.start.elapsed().as_secs_f64() * 1e3
+    }
+
+    pub fn elapsed_us(&self) -> f64 {
+        self.start.elapsed().as_secs_f64() * 1e6
+    }
+
+    pub fn restart(&mut self) -> Duration {
+        let e = self.start.elapsed();
+        self.start = Instant::now();
+        e
+    }
+}
+
+/// Time a closure, returning (result, elapsed).
+pub fn time_it<T>(f: impl FnOnce() -> T) -> (T, Duration) {
+    let t = Instant::now();
+    let r = f();
+    (r, t.elapsed())
+}
+
+/// Human-readable duration (ns/µs/ms/s auto-scaled).
+pub fn human(d: Duration) -> String {
+    let ns = d.as_nanos() as f64;
+    if ns < 1e3 {
+        format!("{ns:.0}ns")
+    } else if ns < 1e6 {
+        format!("{:.2}µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2}ms", ns / 1e6)
+    } else {
+        format!("{:.2}s", ns / 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stopwatch_monotone() {
+        let sw = Stopwatch::start();
+        let a = sw.elapsed();
+        let b = sw.elapsed();
+        assert!(b >= a);
+        assert!(sw.elapsed_ms() >= 0.0);
+    }
+
+    #[test]
+    fn time_it_returns_result() {
+        let (v, d) = time_it(|| 2 + 2);
+        assert_eq!(v, 4);
+        assert!(d.as_nanos() > 0 || d.as_nanos() == 0);
+    }
+
+    #[test]
+    fn human_scales() {
+        assert_eq!(human(Duration::from_nanos(500)), "500ns");
+        assert!(human(Duration::from_micros(1500)).ends_with("ms"));
+        assert!(human(Duration::from_millis(2500)).ends_with('s'));
+        assert!(human(Duration::from_micros(12)).contains("µs"));
+    }
+
+    #[test]
+    fn restart_resets() {
+        let mut sw = Stopwatch::start();
+        std::thread::sleep(Duration::from_millis(1));
+        let first = sw.restart();
+        assert!(first >= Duration::from_millis(1));
+        assert!(sw.elapsed() < first);
+    }
+}

@@ -1,0 +1,176 @@
+//! Coordinator integration: batching correctness under concurrency, the
+//! TensorEngine propagator, and metrics accounting.  Self-skips when
+//! artifacts are missing.
+
+use std::path::{Path, PathBuf};
+use std::time::Duration;
+
+use rtac::ac::{Counters, Propagator};
+use rtac::coordinator::{BatchPolicy, Coordinator, CoordinatorConfig, TensorEngine};
+use rtac::core::State;
+use rtac::gen::queens;
+use rtac::gen::random::{random_csp, RandomSpec};
+use rtac::runtime::{encode_vars, STATUS_CONSISTENT};
+
+fn artifact_dir() -> Option<PathBuf> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    dir.join("manifest.json").exists().then_some(dir)
+}
+
+macro_rules! need_artifacts {
+    () => {
+        match artifact_dir() {
+            Some(d) => d,
+            None => {
+                eprintln!("skipping: run `make artifacts` first");
+                return;
+            }
+        }
+    };
+}
+
+fn config(dir: PathBuf, max_wait_us: u64) -> CoordinatorConfig {
+    CoordinatorConfig {
+        artifact_dir: dir,
+        policy: BatchPolicy { max_batch: 8, max_wait: Duration::from_micros(max_wait_us) },
+    }
+}
+
+#[test]
+fn single_request_roundtrip() {
+    let dir = need_artifacts!();
+    let p = queens(8);
+    let coord = Coordinator::start(&p, config(dir, 0)).unwrap();
+    let h = coord.handle();
+    let mut s = State::new(&p);
+    s.assign(0, 3);
+    let plane = encode_vars(&p, &s, h.bucket).unwrap();
+    let resp = h.enforce_blocking(plane).unwrap();
+    assert_eq!(resp.status, STATUS_CONSISTENT);
+    assert!(resp.iters >= 1);
+    assert_eq!(resp.batch_size, 1);
+    let m = h.metrics.snapshot();
+    assert_eq!(m.requests, 1);
+    assert_eq!(m.responses, 1);
+    drop(h);
+    coord.shutdown();
+}
+
+#[test]
+fn wrong_plane_size_rejected_client_side() {
+    let dir = need_artifacts!();
+    let p = queens(8);
+    let coord = Coordinator::start(&p, config(dir, 0)).unwrap();
+    let err = coord.handle().enforce_blocking(vec![1.0; 3]).unwrap_err();
+    assert!(format!("{err:#}").contains("bucket"));
+}
+
+#[test]
+fn oversized_problem_fails_at_start() {
+    let dir = need_artifacts!();
+    let p = random_csp(&RandomSpec::new(200, 4, 0.05, 0.3, 1));
+    let err = match Coordinator::start(&p, config(dir, 0)) {
+        Err(e) => e,
+        Ok(_) => panic!("200-var problem should not fit any bucket"),
+    };
+    assert!(format!("{err:#}").contains("no artifact bucket"));
+}
+
+#[test]
+fn concurrent_requests_coalesce_and_match_serial() {
+    let dir = need_artifacts!();
+    let p = queens(8);
+    // generous wait so the 8 threads below actually coalesce
+    let coord = Coordinator::start(&p, config(dir.clone(), 20_000)).unwrap();
+    let h = coord.handle();
+
+    // serial reference (no batching)
+    let coord_serial = Coordinator::start(&p, config(dir, 0)).unwrap();
+    let hs = coord_serial.handle();
+
+    let planes: Vec<Vec<f32>> = (0..8)
+        .map(|a| {
+            let mut s = State::new(&p);
+            s.assign(0, a % p.dom_size(0));
+            encode_vars(&p, &s, h.bucket).unwrap()
+        })
+        .collect();
+
+    let serial: Vec<_> = planes
+        .iter()
+        .map(|pl| hs.enforce_blocking(pl.clone()).unwrap())
+        .collect();
+
+    let batched: Vec<_> = std::thread::scope(|scope| {
+        let handles: Vec<_> = planes
+            .iter()
+            .map(|pl| {
+                let h = h.clone();
+                let pl = pl.clone();
+                scope.spawn(move || h.enforce_blocking(pl).unwrap())
+            })
+            .collect();
+        handles.into_iter().map(|j| j.join().unwrap()).collect()
+    });
+
+    for (i, (b, s)) in batched.iter().zip(&serial).enumerate() {
+        assert_eq!(b.status, s.status, "request {i}");
+        if b.status == STATUS_CONSISTENT {
+            assert_eq!(b.plane, s.plane, "request {i}");
+        }
+    }
+    let m = h.metrics.snapshot();
+    assert_eq!(m.responses, 8);
+    // with a 20ms window, 8 concurrent submissions should fuse into far
+    // fewer than 8 executions
+    assert!(m.batches < 8, "batches = {}", m.batches);
+    assert!(m.mean_batch_occupancy > 1.0);
+}
+
+#[test]
+fn tensor_engine_matches_native_closure() {
+    let dir = need_artifacts!();
+    for seed in [4u64, 8] {
+        let p = random_csp(&RandomSpec::new(14, 8, 0.6, 0.4, seed));
+        let coord = Coordinator::start(&p, config(dir.clone(), 0)).unwrap();
+        let mut tensor_engine = TensorEngine::new(coord.handle());
+        let mut s_tensor = State::new(&p);
+        let mut c_tensor = Counters::default();
+        let out_t = tensor_engine.enforce(&p, &mut s_tensor, &[], &mut c_tensor);
+
+        let mut native = rtac::ac::rtac::RtacNative::dense();
+        let mut s_native = State::new(&p);
+        let mut c_native = Counters::default();
+        let out_n = native.enforce(&p, &mut s_native, &[], &mut c_native);
+
+        assert_eq!(out_t.is_consistent(), out_n.is_consistent(), "seed {seed}");
+        assert_eq!(c_tensor.recurrences, c_native.recurrences, "seed {seed}");
+        if out_n.is_consistent() {
+            assert_eq!(s_tensor.snapshot(), s_native.snapshot(), "seed {seed}");
+            assert!(tensor_engine.failed.is_none());
+        }
+    }
+}
+
+#[test]
+fn tensor_engine_wipeout_leaves_state_restorable() {
+    let dir = need_artifacts!();
+    let p = rtac::gen::pigeonhole(5, 4);
+    let coord = Coordinator::start(&p, config(dir, 0)).unwrap();
+    let mut engine = TensorEngine::new(coord.handle());
+    let mut s = State::new(&p);
+    // root AC is consistent for pigeonhole (no singleton yet)
+    let mut c = Counters::default();
+    assert!(engine.enforce(&p, &mut s, &[], &mut c).is_consistent());
+    let before = s.snapshot();
+    s.push_level();
+    s.assign(0, 0);
+    s.assign(1, 1);
+    s.assign(2, 2);
+    s.assign(3, 3);
+    // pigeon 4 now has no hole: wipeout expected
+    let out = engine.enforce(&p, &mut s, &[], &mut c);
+    assert!(!out.is_consistent());
+    s.pop_level();
+    assert_eq!(s.snapshot(), before, "wipeout must not leak removals");
+}

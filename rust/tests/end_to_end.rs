@@ -1,0 +1,113 @@
+//! End-to-end: parallel portfolio search over the coordinator — the full
+//! stack (search → TensorEngine → batcher → PJRT → artifacts) on real
+//! problems.  Self-skips when artifacts are missing.
+
+use std::path::{Path, PathBuf};
+use std::time::Duration;
+
+use rtac::coordinator::{BatchPolicy, Coordinator, CoordinatorConfig};
+use rtac::gen::random::{random_csp, RandomSpec};
+use rtac::gen::{pigeonhole, queens};
+use rtac::search::parallel::solve_parallel;
+use rtac::search::{SolveResult, SolverConfig};
+
+fn artifact_dir() -> Option<PathBuf> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    dir.join("manifest.json").exists().then_some(dir)
+}
+
+macro_rules! need_artifacts {
+    () => {
+        match artifact_dir() {
+            Some(d) => d,
+            None => {
+                eprintln!("skipping: run `make artifacts` first");
+                return;
+            }
+        }
+    };
+}
+
+fn config(dir: PathBuf) -> CoordinatorConfig {
+    CoordinatorConfig {
+        artifact_dir: dir,
+        policy: BatchPolicy { max_batch: 8, max_wait: Duration::from_micros(500) },
+    }
+}
+
+#[test]
+fn parallel_queens_sat_and_verified() {
+    let dir = need_artifacts!();
+    let p = queens(8);
+    let coord = Coordinator::start(&p, config(dir)).unwrap();
+    let out = solve_parallel(&p, &coord, &SolverConfig::default(), 0, 4).unwrap();
+    match &out.result {
+        SolveResult::Sat(sol) => {
+            assert!(p.satisfies(sol), "solution {sol:?}");
+            assert!(out.winner.is_some());
+        }
+        other => panic!("queens(8) parallel -> {other:?}"),
+    }
+    let m = coord.metrics().snapshot();
+    assert!(m.requests > 0);
+    assert_eq!(m.requests, m.responses);
+}
+
+#[test]
+fn parallel_unsat_requires_all_workers_to_exhaust() {
+    let dir = need_artifacts!();
+    let p = pigeonhole(5, 4);
+    let coord = Coordinator::start(&p, config(dir)).unwrap();
+    let out = solve_parallel(&p, &coord, &SolverConfig::default(), 0, 3).unwrap();
+    assert_eq!(out.result, SolveResult::Unsat);
+    assert!(out.winner.is_none());
+    // every worker did some work
+    assert!(out.worker_stats.iter().map(|s| s.assignments).sum::<u64>() > 0);
+}
+
+#[test]
+fn parallel_matches_serial_verdict_on_random_instances() {
+    let _dir = need_artifacts!();
+    for seed in [3u64, 13] {
+        let p = random_csp(&RandomSpec::new(12, 6, 0.7, 0.45, seed));
+        // serial native verdict
+        let mut engine = rtac::ac::make_engine("rtac").unwrap();
+        let mut solver =
+            rtac::search::Solver::new(engine.as_mut(), SolverConfig::default());
+        let (serial, _) = solver.solve(&p);
+
+        let coord = Coordinator::start(&p, config(artifact_dir().unwrap())).unwrap();
+        let out = solve_parallel(&p, &coord, &SolverConfig::default(), 0, 3).unwrap();
+        assert_eq!(
+            out.result.is_sat(),
+            serial.is_sat(),
+            "seed {seed}: parallel vs serial verdict"
+        );
+        if let SolveResult::Sat(sol) = &out.result {
+            assert!(p.satisfies(sol), "seed {seed}");
+        }
+    }
+}
+
+#[test]
+fn batching_actually_happens_under_parallel_load() {
+    let dir = need_artifacts!();
+    let p = queens(8);
+    let coord = Coordinator::start(
+        &p,
+        CoordinatorConfig {
+            artifact_dir: dir,
+            policy: BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(2) },
+        },
+    )
+    .unwrap();
+    let out = solve_parallel(&p, &coord, &SolverConfig::default(), 0, 8).unwrap();
+    assert!(out.result.is_sat());
+    let m = coord.metrics().snapshot();
+    assert!(
+        m.mean_batch_occupancy > 1.05,
+        "expected some fusion under 8-way parallel search, got occ={:.3} over {} batches",
+        m.mean_batch_occupancy,
+        m.batches
+    );
+}

@@ -1,0 +1,176 @@
+//! Cross-engine integration: all native AC engines must agree — the AC
+//! closure is unique (paper Prop. 1) — across a broad randomized sweep,
+//! through search, and under incremental (touched-seeded) use.
+
+use rtac::ac::{make_engine, Counters, ALL_ENGINES};
+use rtac::core::State;
+use rtac::gen::random::{random_csp, RandomSpec};
+use rtac::gen::{coloring::random_graph_coloring, pigeonhole, queens};
+use rtac::search::{SolveResult, Solver, SolverConfig};
+use rtac::util::quickcheck::forall;
+use rtac::util::rng::Rng;
+
+fn closures_for(p: &rtac::core::Problem) -> Vec<(bool, Vec<Vec<usize>>)> {
+    ALL_ENGINES
+        .iter()
+        .map(|name| {
+            let mut engine = make_engine(name).unwrap();
+            let mut s = State::new(p);
+            let mut c = Counters::default();
+            let out = engine.enforce(p, &mut s, &[], &mut c);
+            (out.is_consistent(), s.snapshot())
+        })
+        .collect()
+}
+
+#[test]
+fn all_engines_same_closure_random_sweep() {
+    forall("all-engines-agree", 0xA11, 40, |rng: &mut Rng| {
+        let spec = RandomSpec::new(
+            2 + rng.gen_range(16),
+            1 + rng.gen_range(9),
+            rng.next_f64(),
+            rng.next_f64(),
+            rng.next_u64(),
+        );
+        let p = random_csp(&spec);
+        let results = closures_for(&p);
+        for (i, r) in results.iter().enumerate() {
+            if r.0 != results[0].0 {
+                return Err(format!("{}: verdict differs from {} on {spec:?}",
+                    ALL_ENGINES[i], ALL_ENGINES[0]));
+            }
+            if r.0 && r.1 != results[0].1 {
+                return Err(format!("{}: closure differs on {spec:?}", ALL_ENGINES[i]));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn all_engines_same_closure_structured() {
+    for p in [queens(8), pigeonhole(6, 5), random_graph_coloring(15, 3, 0.3, 2)] {
+        let results = closures_for(&p);
+        for (i, r) in results.iter().enumerate() {
+            assert_eq!(r.0, results[0].0, "{} on {}", ALL_ENGINES[i], p.name());
+            if r.0 {
+                assert_eq!(r.1, results[0].1, "{} on {}", ALL_ENGINES[i], p.name());
+            }
+        }
+    }
+}
+
+#[test]
+fn engines_agree_through_full_search() {
+    forall("search-agree", 0x5EA, 10, |rng: &mut Rng| {
+        let spec = RandomSpec::new(
+            4 + rng.gen_range(8),
+            2 + rng.gen_range(5),
+            0.3 + 0.7 * rng.next_f64(),
+            0.2 + 0.5 * rng.next_f64(),
+            rng.next_u64(),
+        );
+        let p = random_csp(&spec);
+        let verdicts: Vec<bool> = ALL_ENGINES
+            .iter()
+            .map(|name| {
+                let mut engine = make_engine(name).unwrap();
+                let mut solver = Solver::new(engine.as_mut(), SolverConfig::default());
+                solver.solve(&p).0.is_sat()
+            })
+            .collect();
+        if verdicts.iter().any(|&v| v != verdicts[0]) {
+            return Err(format!("SAT verdicts diverge on {spec:?}: {verdicts:?}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn incremental_use_equals_scratch_use() {
+    // after any consistent enforcement + one assignment, touched-seeded
+    // enforcement must equal from-scratch enforcement for every engine.
+    forall("incremental-equals-scratch", 0x1AC, 16, |rng: &mut Rng| {
+        let spec = RandomSpec::new(
+            4 + rng.gen_range(8),
+            2 + rng.gen_range(6),
+            rng.next_f64(),
+            0.6 * rng.next_f64(),
+            rng.next_u64(),
+        );
+        let p = random_csp(&spec);
+        for name in ALL_ENGINES {
+            let mut engine = make_engine(name).unwrap();
+            let mut c = Counters::default();
+            let mut s = State::new(&p);
+            if !engine.enforce(&p, &mut s, &[], &mut c).is_consistent() {
+                continue;
+            }
+            let v = rng.gen_range(p.n_vars());
+            let Some(a) = s.dom(v).first() else { continue };
+            s.assign(v, a);
+            let o_inc = engine.enforce(&p, &mut s, &[v], &mut c);
+
+            let mut s2 = State::new(&p);
+            s2.assign(v, a);
+            let mut fresh = make_engine(name).unwrap();
+            let o_scratch = fresh.enforce(&p, &mut s2, &[], &mut c);
+            if o_inc.is_consistent() != o_scratch.is_consistent() {
+                return Err(format!("{name}: outcome diverged on {spec:?}"));
+            }
+            if o_inc.is_consistent() && s.snapshot() != s2.snapshot() {
+                return Err(format!("{name}: closure diverged on {spec:?}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn table1_shape_revisions_grow_recurrences_flat() {
+    // miniature of the paper's Table 1 claim, as a regression guard:
+    // revisions grow superlinearly with density, recurrences stay ~flat.
+    let mut rev = Vec::new();
+    let mut rec = Vec::new();
+    for &density in &[0.1, 0.5, 1.0] {
+        let p = random_csp(&RandomSpec::new(40, 10, density, 0.25, 5));
+        let mut ac3 = make_engine("ac3").unwrap();
+        let mut solver = Solver::new(
+            ac3.as_mut(),
+            SolverConfig { max_assignments: 200, ..Default::default() },
+        );
+        let (_, s3) = solver.solve(&p);
+        rev.push(s3.revisions_per_call());
+
+        let mut rt = make_engine("rtac").unwrap();
+        let mut solver = Solver::new(
+            rt.as_mut(),
+            SolverConfig { max_assignments: 200, ..Default::default() },
+        );
+        let (_, sr) = solver.solve(&p);
+        rec.push(sr.recurrences_per_call());
+    }
+    assert!(rev[2] > 3.0 * rev[0], "revisions should grow with density: {rev:?}");
+    assert!(rec[2] < 2.0 * rec[0].max(2.0), "recurrences should stay flat: {rec:?}");
+    assert!(rec.iter().all(|&r| r < 10.0), "recurrences small: {rec:?}");
+}
+
+#[test]
+fn unsat_detection_consistency_sudoku_conflict() {
+    // a sudoku with two identical digits in one row is UNSAT for all engines
+    let mut grid = vec!['.'; 81];
+    grid[0] = '5';
+    grid[1] = '5';
+    let grid: String = grid.into_iter().collect();
+    let (p, givens) = rtac::gen::sudoku_from_givens(&grid).unwrap();
+    for name in ALL_ENGINES {
+        let mut engine = make_engine(name).unwrap();
+        let mut solver = Solver::new(
+            engine.as_mut(),
+            SolverConfig { max_assignments: 2000, ..Default::default() },
+        );
+        let (r, _) = solver.solve_with_assignments(&p, &givens);
+        assert_eq!(r, SolveResult::Unsat, "engine {name}");
+    }
+}

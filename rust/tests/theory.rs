@@ -1,0 +1,194 @@
+//! Property tests for the paper's theory (Lemma 1, Proposition 1,
+//! Proposition 2), checked empirically on random instances via the
+//! native recurrent engine's sweep trace.  These pin the *reasoning* the
+//! system is built on, not just the code.
+
+use rtac::ac::ac3bit::Ac3Bit;
+use rtac::ac::{Counters, Propagator};
+use rtac::core::{Problem, State};
+use rtac::gen::random::{random_csp, RandomSpec};
+use rtac::util::quickcheck::forall;
+use rtac::util::rng::Rng;
+
+/// Recompute the recurrence D~(k) of Eq. 1 explicitly (sets of (x, a)
+/// pairs), returning the per-iteration snapshots until the fixpoint.
+fn recurrence_trace(p: &Problem) -> Vec<Vec<(usize, usize)>> {
+    let n = p.n_vars();
+    // live[x][a]: current membership in D \ D~(k)
+    let mut live: Vec<Vec<bool>> = (0..n).map(|v| vec![true; p.dom_size(v)]).collect();
+    let mut removed: Vec<(usize, usize)> = Vec::new();
+    let mut trace = vec![removed.clone()]; // D~(0) = empty
+    loop {
+        // D~(k) = D~(k-1) ∪ {(x,a) | ∃c_xy with all supports inside D~(k-1)}
+        let mut next_removed = Vec::new();
+        for x in 0..n {
+            for a in 0..p.dom_size(x) {
+                if !live[x][a] {
+                    continue;
+                }
+                let dead = p.arcs_of(x).iter().any(|&arc| {
+                    let y = p.arc_other(arc);
+                    let row = p.arc_support_row(arc, a);
+                    !(0..p.dom_size(y)).any(|b| live[y][b] && row.get(b))
+                });
+                if dead {
+                    next_removed.push((x, a));
+                }
+            }
+        }
+        if next_removed.is_empty() {
+            break;
+        }
+        for &(x, a) in &next_removed {
+            live[x][a] = false;
+        }
+        removed.extend(next_removed);
+        let mut snap = removed.clone();
+        snap.sort();
+        trace.push(snap);
+    }
+    trace
+}
+
+fn spec_from(rng: &mut Rng) -> RandomSpec {
+    RandomSpec::new(
+        3 + rng.gen_range(9),
+        2 + rng.gen_range(5),
+        rng.next_f64(),
+        rng.next_f64() * 0.8,
+        rng.next_u64(),
+    )
+}
+
+#[test]
+fn proposition1_fixpoint_is_the_ac_closure() {
+    // D \ D~(K) must equal the closure any classic AC algorithm computes.
+    forall("prop1", 0x9901, 30, |rng| {
+        let p = random_csp(&spec_from(rng));
+        let trace = recurrence_trace(&p);
+        let final_removed: std::collections::BTreeSet<(usize, usize)> =
+            trace.last().unwrap().iter().copied().collect();
+
+        let mut s = State::new(&p);
+        let mut c = Counters::default();
+        let out = Ac3Bit::new().enforce(&p, &mut s, &[], &mut c);
+        if !out.is_consistent() {
+            // wipeout: the recurrence must have emptied some variable too
+            let wiped = (0..p.n_vars()).any(|x| {
+                (0..p.dom_size(x)).all(|a| final_removed.contains(&(x, a)))
+            });
+            return if wiped { Ok(()) } else { Err("AC wiped, recurrence did not".into()) };
+        }
+        for x in 0..p.n_vars() {
+            for a in 0..p.dom_size(x) {
+                let in_closure = s.contains(x, a);
+                let removed = final_removed.contains(&(x, a));
+                if in_closure == removed {
+                    return Err(format!("({x},{a}): closure={in_closure} removed={removed}"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn proposition1_monotone_growth_and_termination() {
+    // D~(0) ⊂ D~(1) ⊂ ... ⊂ D~(K), and K ≤ |D|.
+    forall("prop1-monotone", 0x9902, 30, |rng| {
+        let p = random_csp(&spec_from(rng));
+        let trace = recurrence_trace(&p);
+        let total: usize = (0..p.n_vars()).map(|v| p.dom_size(v)).sum();
+        if trace.len() > total + 1 {
+            return Err("more iterations than |D|".into());
+        }
+        for w in trace.windows(2) {
+            if w[1].len() <= w[0].len() {
+                return Err("removed-set did not strictly grow".into());
+            }
+            let prev: std::collections::BTreeSet<_> = w[0].iter().collect();
+            if !w[0].iter().all(|x| prev.contains(x)) {
+                return Err("removed-set not monotone".into());
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn lemma1_removed_values_are_arc_inconsistent() {
+    // every (x, a) the recurrence removes must be outside the AC closure.
+    forall("lemma1", 0x9903, 30, |rng| {
+        let p = random_csp(&spec_from(rng));
+        let trace = recurrence_trace(&p);
+        let mut s = State::new(&p);
+        let mut c = Counters::default();
+        if !Ac3Bit::new().enforce(&p, &mut s, &[], &mut c).is_consistent() {
+            return Ok(()); // wipeout: closure is empty-ish; prop1 covers it
+        }
+        for (x, a) in trace.last().unwrap() {
+            if s.contains(*x, *a) {
+                return Err(format!("({x},{a}) removed by Eq.1 but in the AC closure"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn proposition2_sweep_k_removals_caused_by_sweep_k_minus_1() {
+    // V(k) = D~(k) \ D~(k-1): every (x,a) ∈ V(k) must have a constraint
+    // whose supports outside D~(k-2) all fell inside V(k-1).
+    forall("prop2", 0x9904, 30, |rng| {
+        let p = random_csp(&spec_from(rng));
+        let trace = recurrence_trace(&p);
+        for k in 2..trace.len() {
+            let dk2: std::collections::BTreeSet<_> = trace[k - 2].iter().copied().collect();
+            let dk1: std::collections::BTreeSet<_> = trace[k - 1].iter().copied().collect();
+            let vk: Vec<_> = trace[k].iter().filter(|e| !dk1.contains(e)).collect();
+            let vk1: std::collections::BTreeSet<_> =
+                trace[k - 1].iter().filter(|e| !dk2.contains(*e)).copied().collect();
+            for &&(x, a) in &vk {
+                let witnessed = p.arcs_of(x).iter().any(|&arc| {
+                    let y = p.arc_other(arc);
+                    let row = p.arc_support_row(arc, a);
+                    // supports of (x,a) on c_xy outside D~(k-2)
+                    let outside: Vec<(usize, usize)> = (0..p.dom_size(y))
+                        .filter(|&b| row.get(b) && !dk2.contains(&(y, b)))
+                        .map(|b| (y, b))
+                        .collect();
+                    // Prop 2.1: non-empty; Prop 2.2: ⊆ V(k-1)
+                    !outside.is_empty() && outside.iter().all(|e| vk1.contains(e))
+                });
+                if !witnessed {
+                    return Err(format!("Prop.2 violated for ({x},{a}) at sweep {k}"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn native_engine_sweep_count_equals_explicit_recurrence() {
+    // the engine's #Recurrence == K+1 of the explicit Eq.1 trace (its
+    // final sweep discovers emptiness; wipeout runs abort earlier).
+    forall("sweep-count", 0x9905, 24, |rng| {
+        let p = random_csp(&spec_from(rng));
+        let trace = recurrence_trace(&p);
+        let mut s = State::new(&p);
+        let mut c = Counters::default();
+        let out = rtac::ac::rtac::RtacNative::dense().enforce(&p, &mut s, &[], &mut c);
+        if !out.is_consistent() {
+            return Ok(()); // abort semantics differ on wipeout by design
+        }
+        let expected = trace.len() as u64; // (K growth sweeps) + final empty sweep
+        if c.recurrences != expected {
+            return Err(format!(
+                "engine swept {} times, explicit recurrence says {}",
+                c.recurrences, expected
+            ));
+        }
+        Ok(())
+    });
+}

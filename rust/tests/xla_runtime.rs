@@ -1,0 +1,248 @@
+//! Integration: the AOT XLA artifacts must compute byte-identical
+//! closures (and sweep counts) to the native Rust RTAC engine — this is
+//! the bridge test that pins L1/L2 (python) to L3 (rust).
+//!
+//! Requires `make artifacts`; tests self-skip when artifacts are absent
+//! so plain `cargo test` still works in a fresh checkout.
+
+use std::path::{Path, PathBuf};
+
+use rtac::ac::{rtac::RtacNative, Counters, Propagator};
+use rtac::core::State;
+use rtac::gen::random::{random_csp, RandomSpec};
+use rtac::gen::{pigeonhole, queens};
+use rtac::runtime::{decode_vars, encode_cons, encode_vars, Bucket, Kind, Runtime};
+
+fn artifact_dir() -> Option<PathBuf> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    dir.join("manifest.json").exists().then_some(dir)
+}
+
+macro_rules! need_artifacts {
+    () => {
+        match artifact_dir() {
+            Some(d) => d,
+            None => {
+                eprintln!("skipping: run `make artifacts` first");
+                return;
+            }
+        }
+    };
+}
+
+fn runtime_small(dir: &Path) -> Runtime {
+    // only the small buckets: keeps compile time per test low
+    Runtime::load_filtered(dir, |e| e.n <= 16).expect("load artifacts")
+}
+
+#[test]
+fn step_artifact_matches_native_single_sweep() {
+    let dir = need_artifacts!();
+    let rt = runtime_small(&dir);
+    let bucket = Bucket { n: 8, d: 4 };
+    for seed in [3u64, 19, 77] {
+        let p = random_csp(&RandomSpec::new(7, 4, 0.8, 0.5, seed));
+        let cons = encode_cons(&p, bucket).unwrap();
+        let s = State::new(&p);
+        let vars = encode_vars(&p, &s, bucket).unwrap();
+        let out = rt.run_step("step_n8_d4", &cons, &vars).unwrap();
+
+        // native single sweep: snapshot semantics == Jacobi
+        let mut s_native = State::new(&p);
+        let mut engine = RtacNative::dense();
+        // run exactly one sweep by enforcing on a copy and stopping early
+        // is not exposed; emulate with the plane reference instead:
+        let mut expect = vars.clone();
+        for x in 0..bucket.n {
+            for a in 0..bucket.d {
+                if vars[x * bucket.d + a] == 0.0 {
+                    continue;
+                }
+                for y in 0..bucket.n {
+                    let mut supp = 0.0;
+                    for b in 0..bucket.d {
+                        supp += cons[((x * bucket.n + y) * bucket.d + a) * bucket.d + b]
+                            * vars[y * bucket.d + b];
+                    }
+                    if supp == 0.0 {
+                        expect[x * bucket.d + a] = 0.0;
+                        break;
+                    }
+                }
+            }
+        }
+        assert_eq!(out, expect, "seed {seed}");
+        // silence unused warnings for the emulation shortcut
+        let _ = (&mut s_native, &mut engine);
+    }
+}
+
+#[test]
+fn fixpoint_artifact_matches_native_closure_and_sweeps() {
+    let dir = need_artifacts!();
+    let rt = runtime_small(&dir);
+    let bucket = Bucket { n: 16, d: 8 };
+    for seed in [1u64, 5, 23, 101] {
+        let p = random_csp(&RandomSpec::new(12, 7, 0.7, 0.45, seed));
+        let cons = encode_cons(&p, bucket).unwrap();
+        let s0 = State::new(&p);
+        let vars = encode_vars(&p, &s0, bucket).unwrap();
+        let out = rt.run_fixpoint("fix_n16_d8", &cons, &vars).unwrap();
+
+        let mut s_native = State::new(&p);
+        let mut c = Counters::default();
+        let native = RtacNative::dense().enforce(&p, &mut s_native, &[], &mut c);
+
+        assert_eq!(
+            out.status[0] == rtac::runtime::STATUS_WIPEOUT,
+            !native.is_consistent(),
+            "seed {seed}: status"
+        );
+        assert_eq!(out.iters as u64, c.recurrences, "seed {seed}: sweep count");
+        if native.is_consistent() {
+            let mut s_dec = State::new(&p);
+            decode_vars(&p, &mut s_dec, &out.vars, bucket).unwrap();
+            assert_eq!(s_dec.snapshot(), s_native.snapshot(), "seed {seed}: closure");
+        }
+    }
+}
+
+#[test]
+fn fixpoint_detects_unsat_pigeonhole() {
+    let dir = need_artifacts!();
+    let rt = runtime_small(&dir);
+    let bucket = Bucket { n: 8, d: 4 };
+    // 5 pigeons, 4 holes; assign three pigeons to distinct holes, then
+    // pin the 4th and 5th to the same remaining hole via domains.
+    let p = pigeonhole(5, 4);
+    let cons = encode_cons(&p, bucket).unwrap();
+    let mut s = State::new(&p);
+    s.assign(0, 0);
+    s.assign(1, 1);
+    s.assign(2, 2);
+    let vars = encode_vars(&p, &s, bucket).unwrap();
+    let out = rt.run_fixpoint("fix_n8_d4", &cons, &vars).unwrap();
+    assert_eq!(out.status[0], rtac::runtime::STATUS_WIPEOUT);
+}
+
+#[test]
+fn batched_fixpoint_matches_per_request_runs() {
+    let dir = need_artifacts!();
+    let rt = runtime_small(&dir);
+    let bucket = Bucket { n: 16, d: 8 };
+    let p = queens(8);
+    let cons = encode_cons(&p, bucket).unwrap();
+
+    // four different search-node snapshots of the same problem
+    let mut planes = Vec::new();
+    for col in 0..4usize {
+        let mut s = State::new(&p);
+        s.assign(0, col + 1);
+        planes.push(encode_vars(&p, &s, bucket).unwrap());
+    }
+    let mut batch_in = Vec::new();
+    for pl in &planes {
+        batch_in.extend_from_slice(pl);
+    }
+    let out = rt.run_fixpoint("fixb4_n16_d8", &cons, &batch_in).unwrap();
+    assert_eq!(out.status.len(), 4);
+
+    let plane_len = bucket.vars_len();
+    for (i, pl) in planes.iter().enumerate() {
+        let single = rt.run_fixpoint("fix_n16_d8", &cons, pl).unwrap();
+        assert_eq!(out.status[i], single.status[0], "element {i}");
+        if single.status[0] == rtac::runtime::STATUS_CONSISTENT {
+            assert_eq!(
+                &out.vars[i * plane_len..(i + 1) * plane_len],
+                &single.vars[..],
+                "element {i} plane"
+            );
+        }
+    }
+}
+
+#[test]
+fn stepwise_fixpoint_identical_to_fused() {
+    // Rust-driven loop over the step artifact == the fused while_loop
+    // artifact (same closure, same sweep count) — the §Perf round-trip
+    // ablation rests on this equivalence.
+    let dir = need_artifacts!();
+    let rt = runtime_small(&dir);
+    let bucket = Bucket { n: 16, d: 8 };
+    for seed in [6u64, 31] {
+        let p = random_csp(&RandomSpec::new(13, 7, 0.7, 0.45, seed));
+        let cons = encode_cons(&p, bucket).unwrap();
+        let vars = encode_vars(&p, &State::new(&p), bucket).unwrap();
+        let fused = rt.run_fixpoint("fix_n16_d8", &cons, &vars).unwrap();
+        let stepped = rt.run_fixpoint_stepwise("step_n16_d8", &cons, &vars).unwrap();
+        assert_eq!(fused.status, stepped.status, "seed {seed}");
+        assert_eq!(fused.iters, stepped.iters, "seed {seed}");
+        if fused.status[0] == rtac::runtime::STATUS_CONSISTENT {
+            assert_eq!(fused.vars, stepped.vars, "seed {seed}");
+        }
+    }
+}
+
+#[test]
+fn incremental_artifact_agrees_with_dense() {
+    let dir = need_artifacts!();
+    let rt = runtime_small(&dir);
+    let bucket = Bucket { n: 16, d: 8 };
+    for seed in [2u64, 9] {
+        let p = random_csp(&RandomSpec::new(14, 8, 0.6, 0.4, seed));
+        let cons = encode_cons(&p, bucket).unwrap();
+        let vars = encode_vars(&p, &State::new(&p), bucket).unwrap();
+        let dense = rt.run_fixpoint("fix_n16_d8", &cons, &vars).unwrap();
+        let inc = rt.run_fixpoint("fixinc_n16_d8", &cons, &vars).unwrap();
+        assert_eq!(dense.status, inc.status, "seed {seed}");
+        assert_eq!(dense.iters, inc.iters, "seed {seed}");
+        if dense.status[0] == rtac::runtime::STATUS_CONSISTENT {
+            assert_eq!(dense.vars, inc.vars, "seed {seed}");
+        }
+    }
+}
+
+#[test]
+fn search_with_artifact_backed_enforcement_solves_queens() {
+    // full-circle: MAC search where every AC call goes through XLA.
+    let dir = need_artifacts!();
+    let rt = runtime_small(&dir);
+    let bucket = Bucket { n: 8, d: 8 };
+    // queens(8) has d=8 > bucket d? No: bucket (8,8) doesn't exist; use (16,8).
+    let bucket = Bucket { n: 16, d: 8 };
+    let p = queens(8);
+    let cons = encode_cons(&p, bucket).unwrap();
+
+    // hand-rolled DFS using the artifact for propagation
+    fn dfs(
+        rt: &Runtime,
+        p: &rtac::core::Problem,
+        cons: &[f32],
+        bucket: Bucket,
+        s: &mut State,
+    ) -> bool {
+        let var = (0..p.n_vars()).find(|&v| !s.is_singleton(v));
+        let Some(var) = var else { return true };
+        let vals: Vec<usize> = s.dom(var).iter_ones().collect();
+        for a in vals {
+            s.push_level();
+            s.assign(var, a);
+            let vars = encode_vars(p, s, bucket).unwrap();
+            let out = rt.run_fixpoint("fix_n16_d8", cons, &vars).unwrap();
+            if out.status[0] == rtac::runtime::STATUS_CONSISTENT {
+                decode_vars(p, s, &out.vars, bucket).unwrap();
+                if dfs(rt, p, cons, bucket, s) {
+                    return true;
+                }
+            }
+            s.pop_level();
+        }
+        false
+    }
+
+    let mut s = State::new(&p);
+    assert!(dfs(&rt, &p, &cons, bucket, &mut s), "queens(8) must be SAT");
+    let sol: Vec<usize> = (0..8).map(|v| s.value(v).unwrap()).collect();
+    assert!(p.satisfies(&sol), "solution {sol:?}");
+    let _ = Kind::Fixpoint;
+}
