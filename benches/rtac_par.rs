@@ -1,0 +1,25 @@
+//! `cargo bench` target for the native RTAC family: sequential dense vs
+//! Prop.-2 incremental vs thread-parallel plane sweeps, on the scaled
+//! grid.  Writes `BENCH_rtac.json` next to the working directory (set
+//! `RTAC_BENCH_JSON` to move it, empty to disable).
+
+use rtac::bench::rtac_bench;
+
+fn main() {
+    let spec = rtac_bench::default_spec();
+    eprintln!(
+        "rtac family: sizes={:?} densities={:?} dom={} tightness={} assignments={}",
+        spec.sizes, spec.densities, spec.dom_size, spec.tightness, spec.assignments
+    );
+    let results = rtac_bench::run(&spec, rtac_bench::ENGINES);
+    println!("{}", rtac_bench::render(&results, rtac_bench::ENGINES));
+
+    let path = std::env::var("RTAC_BENCH_JSON").unwrap_or_else(|_| "BENCH_rtac.json".to_string());
+    if !path.is_empty() {
+        let json = rtac_bench::to_json(&spec, &results);
+        match std::fs::write(&path, json.to_string()) {
+            Ok(()) => eprintln!("wrote {path}"),
+            Err(e) => eprintln!("writing {path}: {e}"),
+        }
+    }
+}

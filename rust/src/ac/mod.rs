@@ -1,6 +1,6 @@
 //! Arc consistency engines.
 //!
-//! Four interchangeable implementations behind the [`Propagator`] trait:
+//! Five interchangeable implementations behind the [`Propagator`] trait:
 //!
 //! * [`ac3::Ac3`] — the paper's baseline: queue of directed arcs,
 //!   value-by-value support scan (pluggable queue ordering).
@@ -12,6 +12,10 @@
 //!   synchronous Jacobi-style sweeps of Eq. 1 (exactly what the tensor
 //!   path computes), dense or Prop.-2 incremental.  Counts
 //!   `#Recurrence`; the queue engines count `#Revision`.
+//! * [`rtac_par::RtacParallel`] — the same dense recurrence with each
+//!   sweep partitioned across threads over the flat domain-plane arena
+//!   (`rtac-par` auto-sizes, `rtac-parN` pins N workers).  Bit-identical
+//!   to `rtac` in closure, outcome and `#Recurrence`.
 //!
 //! All engines compute the same unique closure (Prop. 1) — asserted
 //! pairwise by integration tests on random instances.
@@ -20,6 +24,7 @@ pub mod ac2001;
 pub mod ac3;
 pub mod ac3bit;
 pub mod rtac;
+pub mod rtac_par;
 pub mod sac;
 
 use crate::core::{Problem, State, VarId};
@@ -101,12 +106,29 @@ pub fn make_engine(name: &str) -> Result<Box<dyn Propagator>, String> {
         // solver for stronger-but-costlier propagation.
         "sac" => Ok(Box::new(sac::Sac1::new(ac3bit::Ac3Bit::new()))),
         "sac-rtac" => Ok(Box::new(sac::Sac1::new(rtac::RtacNative::incremental()))),
+        // "rtac-par" = auto worker count; "rtac-parN" pins N workers.
+        other if other.starts_with("rtac-par") => {
+            let suffix = &other["rtac-par".len()..];
+            let workers = if suffix.is_empty() {
+                0
+            } else {
+                suffix
+                    .parse::<usize>()
+                    .ok()
+                    .filter(|&w| w >= 1)
+                    .ok_or_else(|| format!("bad worker count in engine name {other:?}"))?
+            };
+            Ok(Box::new(rtac_par::RtacParallel::new(workers)))
+        }
         other => Err(format!(
-            "unknown engine {other:?} (try ac3 | ac3-lifo | ac3-dom | ac2001 | ac3bit | rtac | rtac-inc | sac | sac-rtac)"
+            "unknown engine {other:?} (try ac3 | ac3-lifo | ac3-dom | ac2001 | ac3bit | rtac | rtac-inc | rtac-par[N] | sac | sac-rtac)"
         )),
     }
 }
 
 /// All engine names (for cross-engine agreement tests and benches).
+/// `rtac-par` auto-sizes its workers (inline below ~16 vars/worker), so
+/// the small agreement-test instances stay cheap; pinned-worker
+/// bit-identity lives in `rtac_par`'s property suite.
 pub const ALL_ENGINES: &[&str] =
-    &["ac3", "ac3-lifo", "ac3-dom", "ac2001", "ac3bit", "rtac", "rtac-inc"];
+    &["ac3", "ac3-lifo", "ac3-dom", "ac2001", "ac3bit", "rtac", "rtac-inc", "rtac-par"];

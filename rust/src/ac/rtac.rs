@@ -16,21 +16,30 @@
 //!   neighbour whose domain changed in sweep k−1 (the paper's
 //!   `@changed` set).  Identical removals and sweep counts (asserted in
 //!   tests), strictly less CPU work.
+//!
+//! Domains snapshot into a flat [`DomainPlane`] arena, so taking the
+//! per-sweep snapshot is one memcpy over the whole network.  The
+//! thread-parallel variant of the same recurrence lives in
+//! [`super::rtac_par`].
 
 use crate::ac::{Counters, Outcome, Propagator};
-use crate::core::{Problem, State, VarId};
-use crate::util::bitset::BitSet;
+use crate::core::{DomainPlane, Problem, State, VarId};
 
 /// The native recurrent engine.
 pub struct RtacNative {
     incremental: bool,
-    /// Domains snapshot at sweep start (reused across calls).
-    snapshot: Vec<BitSet>,
+    /// Flat domain-plane snapshot at sweep start: refreshed by a single
+    /// memcpy from the state's arena (reused across calls).
+    snapshot: DomainPlane,
     /// Vars whose domain changed in the previous sweep.
-    changed: Vec<bool>,
     changed_list: Vec<VarId>,
-    /// Vars to re-check this sweep (incremental candidates).
+    /// Next sweep's changed list, built in place and swapped in.
+    scratch_list: Vec<VarId>,
+    /// Vars to re-check this sweep (incremental candidates).  The flag
+    /// vector is sized once per enforcement; per sweep only the entries
+    /// named by `affected_list` are reset.
     affected: Vec<bool>,
+    affected_list: Vec<VarId>,
     vals_buf: Vec<usize>,
 }
 
@@ -46,22 +55,20 @@ impl RtacNative {
     fn with_mode(incremental: bool) -> RtacNative {
         RtacNative {
             incremental,
-            snapshot: Vec::new(),
-            changed: Vec::new(),
+            snapshot: DomainPlane::empty(),
             changed_list: Vec::new(),
+            scratch_list: Vec::new(),
             affected: Vec::new(),
+            affected_list: Vec::new(),
             vals_buf: Vec::new(),
         }
     }
 
     fn take_snapshot(&mut self, state: &State) {
-        let n = state.n_vars();
-        if self.snapshot.len() != n {
-            self.snapshot = (0..n).map(|v| state.dom(v).clone()).collect();
+        if self.snapshot.same_layout(state.plane()) {
+            self.snapshot.copy_words_from(state.plane());
         } else {
-            for v in 0..n {
-                self.snapshot[v].clone_from(state.dom(v));
-            }
+            self.snapshot = state.plane().clone();
         }
     }
 
@@ -78,30 +85,35 @@ impl RtacNative {
         // Candidate set: in incremental mode, variables adjacent to a
         // change from the previous sweep; in dense mode, everyone.
         if self.incremental {
-            self.affected.clear();
-            self.affected.resize(n, false);
+            for &v in &self.affected_list {
+                self.affected[v] = false;
+            }
+            self.affected_list.clear();
             for &v in &self.changed_list {
                 for &arc in problem.arcs_of(v) {
-                    self.affected[problem.arc_other(arc)] = true;
+                    let other = problem.arc_other(arc);
+                    if !self.affected[other] {
+                        self.affected[other] = true;
+                        self.affected_list.push(other);
+                    }
                 }
             }
         }
 
-        let mut new_changed: Vec<VarId> = Vec::new();
+        self.scratch_list.clear();
         let mut wiped: Option<VarId> = None;
         for x in 0..n {
             if self.incremental && !self.affected[x] {
                 continue;
             }
             self.vals_buf.clear();
-            self.vals_buf.extend(self.snapshot[x].iter_ones());
-            let vals = std::mem::take(&mut self.vals_buf);
+            self.vals_buf.extend(self.snapshot.bits(x).iter_ones());
             let mut x_changed = false;
-            'vals: for &a in &vals {
+            'vals: for &a in &self.vals_buf {
                 for &arc in problem.arcs_of(x) {
                     counters.support_checks += 1;
                     let other = problem.arc_other(arc);
-                    if !problem.arc_support_row(arc, a).intersects(&self.snapshot[other]) {
+                    if !problem.arc_support_row(arc, a).intersects(self.snapshot.bits(other)) {
                         state.remove(x, a);
                         counters.removals += 1;
                         x_changed = true;
@@ -109,20 +121,14 @@ impl RtacNative {
                     }
                 }
             }
-            self.vals_buf = vals;
             if x_changed {
-                new_changed.push(x);
+                self.scratch_list.push(x);
                 if state.wiped(x) {
                     wiped = wiped.or(Some(x));
                 }
             }
         }
-        self.changed_list = new_changed;
-        self.changed.clear();
-        self.changed.resize(n, false);
-        for &v in &self.changed_list {
-            self.changed[v] = true;
-        }
+        std::mem::swap(&mut self.changed_list, &mut self.scratch_list);
         wiped
     }
 }
@@ -155,10 +161,14 @@ impl Propagator for RtacNative {
         } else {
             self.changed_list.extend_from_slice(touched);
         }
-        self.changed.clear();
-        self.changed.resize(n, false);
-        for &v in self.changed_list.clone().iter() {
-            self.changed[v] = true;
+        // Size the affected flags once per enforcement, not per sweep;
+        // each sweep resets only the entries it set (tracked by
+        // `affected_list`, whose invariant — it names exactly the true
+        // flags — holds across enforcements of the same problem).
+        if self.incremental && self.affected.len() != n {
+            self.affected.clear();
+            self.affected.resize(n, false);
+            self.affected_list.clear();
         }
         // Root enforcement must examine every variable once even in
         // incremental mode (a variable with an unsatisfiable relation

@@ -1,0 +1,430 @@
+//! `RtacParallel` — word-parallel AND thread-parallel RTAC sweeps.
+//!
+//! The paper's core claim is that each recurrence of Eq. 1 is *fully
+//! parallelizable*: every (variable, value) support test of sweep k
+//! reads only the sweep k−1 snapshot.  This engine exploits that Jacobi
+//! structure on CPU:
+//!
+//! * Domains live in the flat [`DomainPlane`] arena, double-buffered:
+//!   `cur` holds the k−1 snapshot, `next` starts each sweep as a memcpy
+//!   of `cur` and receives the sweep's removals as word-masked bit
+//!   clears.
+//! * Variables are partitioned into contiguous word ranges
+//!   ([`DomainPlane::partition`]); a `std::thread::scope` spawns one
+//!   worker per chunk, each owning a **disjoint `&mut [u64]` slice** of
+//!   the next plane (`split_at_mut` — no locks, no atomics on the hot
+//!   path).  Support tests stream the packed relation rows against the
+//!   shared `cur` plane.
+//! * Per-worker [`Counters`] and changed-variable lists are merged at
+//!   sweep end, in chunk order, so every merged quantity is
+//!   deterministic.  A shared wipeout [`AtomicBool`] lets the sweep
+//!   loop abort further recurrences (and skip trail replay past the
+//!   victim) the moment any worker wipes a domain.
+//!
+//! # Bit-identity contract
+//!
+//! `RtacParallel` is bit-identical to [`super::rtac::RtacNative::dense`]
+//! in outcome (including the wipeout victim) and `#Recurrence` count
+//! always, and — on consistent enforcements — in closure, trail order,
+//! and every counter, for every worker count (asserted by the property
+//! suite below).  Two design choices make this hold:
+//!
+//! 1. Workers always complete their full chunk from the shared
+//!    snapshot; the wipeout flag is consulted only *between* sweeps.
+//!    Aborting mid-sweep would save a little work but make the victim
+//!    (and the trail) depend on thread scheduling.
+//! 2. Removals are replayed into the search [`State`] by the
+//!    coordinator thread after the join, in ascending (variable, value)
+//!    order — exactly the order the sequential dense sweep produces —
+//!    so `pop_level` restores identically and `dom/wdeg` heuristics see
+//!    the same victims.
+//!
+//! On a *wipeout* sweep the replay deliberately stops at the victim
+//! (the sequential engine finishes applying that sweep's removals),
+//! so `removals` and the trail tail differ there: the search pops the
+//! level immediately, making the extra removals pure overhead.  Do not
+//! compare removal counts across the family on wipeout paths.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+
+use crate::ac::{Counters, Outcome, Propagator};
+use crate::core::{DomainPlane, PlaneChunk, Problem, State, VarId};
+
+/// Result of one worker's chunk revision.
+#[derive(Default)]
+struct ChunkOut {
+    /// Chunk-local changed variables, ascending.
+    changed: Vec<VarId>,
+    support_checks: u64,
+}
+
+/// The thread-parallel recurrent engine (dense sweeps only — the
+/// incremental candidate set is inherently sequential bookkeeping; see
+/// [`super::rtac::RtacNative::incremental`] for Prop. 2).
+pub struct RtacParallel {
+    /// Requested worker count; 0 = auto (available parallelism, scaled
+    /// down for small networks where spawn overhead would dominate).
+    workers: usize,
+    cur: DomainPlane,
+    next: DomainPlane,
+    chunks: Vec<PlaneChunk>,
+    /// Worker count the current `chunks` were planned for.
+    planned_workers: usize,
+}
+
+impl RtacParallel {
+    /// `workers == 0` picks a count automatically; an explicit count is
+    /// honoured exactly (the property tests rely on that).
+    pub fn new(workers: usize) -> RtacParallel {
+        RtacParallel {
+            workers,
+            cur: DomainPlane::empty(),
+            next: DomainPlane::empty(),
+            chunks: Vec::new(),
+            planned_workers: 0,
+        }
+    }
+
+    /// Worker count for an `n`-variable network.
+    fn effective_workers(&self, n: usize) -> usize {
+        if self.workers > 0 {
+            return self.workers.max(1);
+        }
+        let hw = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
+        // auto mode: at least ~16 variables per worker, else the scoped
+        // spawns cost more than the sweep
+        hw.min((n / 16).max(1))
+    }
+
+    fn ensure_planes(&mut self, state: &State) {
+        let n = state.n_vars();
+        let k = self.effective_workers(n);
+        if !self.cur.same_layout(state.plane()) {
+            self.cur = state.plane().clone();
+            self.next = state.plane().clone();
+            self.chunks = self.cur.partition(k);
+            self.planned_workers = k;
+        } else if self.planned_workers != k {
+            self.chunks = self.cur.partition(k);
+            self.planned_workers = k;
+        }
+    }
+
+    /// Revise every variable of `chunk` against the `cur` snapshot,
+    /// clearing unsupported bits in `slice` (the chunk's disjoint window
+    /// of the next plane).  Pure function of the snapshot — safe to run
+    /// on any thread.
+    fn revise_chunk(
+        problem: &Problem,
+        cur: &DomainPlane,
+        chunk: PlaneChunk,
+        slice: &mut [u64],
+        wipeout: &AtomicBool,
+    ) -> ChunkOut {
+        let mut out = ChunkOut::default();
+        for x in chunk.var_start..chunk.var_end {
+            let base = cur.offset(x) - chunk.word_start;
+            let mut x_changed = false;
+            'vals: for a in cur.bits(x).iter_ones() {
+                for &arc in problem.arcs_of(x) {
+                    out.support_checks += 1;
+                    let other = problem.arc_other(arc);
+                    if !problem.arc_support_row(arc, a).intersects(cur.bits(other)) {
+                        slice[base + a / 64] &= !(1u64 << (a % 64));
+                        x_changed = true;
+                        continue 'vals;
+                    }
+                }
+            }
+            if x_changed {
+                out.changed.push(x);
+                let row = &slice[base..base + cur.word_range(x).len()];
+                if row.iter().all(|&w| w == 0) {
+                    wipeout.store(true, Ordering::Relaxed);
+                }
+            }
+        }
+        out
+    }
+
+    /// One parallel Jacobi sweep: `next := revise(cur)`.  Returns the
+    /// per-chunk outputs in chunk (= ascending variable) order.
+    fn sweep(&mut self, problem: &Problem, wipeout: &AtomicBool) -> Vec<ChunkOut> {
+        self.next.copy_words_from(&self.cur);
+        let cur = &self.cur;
+        let chunks = &self.chunks;
+        let slices = split_windows(self.next.words_mut(), chunks);
+        // Empty chunks (more workers than variables) revise nothing:
+        // don't pay a thread spawn for them.
+        let work: Vec<(PlaneChunk, &mut [u64])> = chunks
+            .iter()
+            .copied()
+            .zip(slices)
+            .filter(|(c, _)| !c.is_empty())
+            .collect();
+
+        if work.len() <= 1 {
+            // single (or no) worker: skip the thread scope entirely
+            return work
+                .into_iter()
+                .map(|(chunk, slice)| Self::revise_chunk(problem, cur, chunk, slice, wipeout))
+                .collect();
+        }
+
+        std::thread::scope(|scope| {
+            let handles: Vec<_> = work
+                .into_iter()
+                .map(|(chunk, slice)| {
+                    scope.spawn(move || {
+                        Self::revise_chunk(problem, cur, chunk, slice, wipeout)
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().expect("sweep worker panicked")).collect()
+        })
+    }
+}
+
+/// Split a plane's word buffer into per-chunk disjoint mutable windows
+/// (`chunks` are contiguous and ordered, so this is a straight
+/// `split_at_mut` walk).
+fn split_windows<'a>(mut words: &'a mut [u64], chunks: &[PlaneChunk]) -> Vec<&'a mut [u64]> {
+    let mut out = Vec::with_capacity(chunks.len());
+    let mut consumed = 0usize;
+    for c in chunks {
+        let (head, tail) = words.split_at_mut(c.word_end - consumed);
+        out.push(head);
+        words = tail;
+        consumed = c.word_end;
+    }
+    out
+}
+
+impl Propagator for RtacParallel {
+    fn name(&self) -> &'static str {
+        "rtac-par"
+    }
+
+    fn reset(&mut self, _problem: &Problem) {
+        // force a re-plan on the next enforce (worker count may differ
+        // between problems in auto mode)
+        self.cur = DomainPlane::empty();
+        self.next = DomainPlane::empty();
+        self.chunks.clear();
+        self.planned_workers = 0;
+    }
+
+    fn enforce(
+        &mut self,
+        problem: &Problem,
+        state: &mut State,
+        _touched: &[VarId], // dense recurrence: the whole plane each sweep
+        counters: &mut Counters,
+    ) -> Outcome {
+        self.ensure_planes(state);
+        self.cur.copy_words_from(state.plane());
+        loop {
+            counters.recurrences += 1;
+            let wipeout = AtomicBool::new(false);
+            let outs = self.sweep(problem, &wipeout);
+            let wiped_somewhere = wipeout.load(Ordering::Relaxed);
+
+            // Merge at sweep end, in chunk order.  All support checks
+            // were performed regardless of where a wipeout lands, so
+            // account for every chunk before the replay can early-out.
+            counters.support_checks += outs.iter().map(|o| o.support_checks).sum::<u64>();
+            // Trail replay in ascending (var, value) order — identical
+            // to the sequential dense sweep's removal order.
+            let mut any_changed = false;
+            for out in &outs {
+                for &x in &out.changed {
+                    any_changed = true;
+                    for a in self.cur.bits(x).iter_ones() {
+                        if !self.next.get(x, a) {
+                            state.remove(x, a);
+                            counters.removals += 1;
+                        }
+                    }
+                    if wiped_somewhere && state.wiped(x) {
+                        // first wiped variable in ascending order: the
+                        // same victim the sequential sweep reports.
+                        // Later chunks' removals are not replayed — the
+                        // search pops this level immediately.
+                        return Outcome::Wipeout(x);
+                    }
+                }
+            }
+            if !any_changed {
+                return Outcome::Consistent;
+            }
+            std::mem::swap(&mut self.cur, &mut self.next);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ac::rtac::RtacNative;
+    use crate::gen::random::{random_csp, RandomSpec};
+    use crate::gen::{pigeonhole, queens};
+    use crate::util::quickcheck::forall;
+
+    fn enforce_with(
+        engine: &mut dyn Propagator,
+        p: &Problem,
+        touched: &[VarId],
+    ) -> (Outcome, State, Counters) {
+        let mut s = State::new(p);
+        let mut c = Counters::default();
+        let out = engine.enforce(p, &mut s, touched, &mut c);
+        (out, s, c)
+    }
+
+    #[test]
+    fn bit_identical_to_dense_across_worker_counts() {
+        // The tentpole contract: closures, outcomes (victims included)
+        // and #Recurrence identical to RtacNative::dense() for 1, 2 and
+        // 4 workers on random CSPs.
+        forall("rtac-par-vs-dense", 0x9A2, 32, |rng| {
+            let spec = RandomSpec::new(
+                2 + rng.gen_range(16),
+                1 + rng.gen_range(8),
+                rng.next_f64(),
+                rng.next_f64() * 0.9,
+                rng.next_u64(),
+            );
+            let p = random_csp(&spec);
+            let (o_ref, s_ref, c_ref) = enforce_with(&mut RtacNative::dense(), &p, &[]);
+            for workers in [1usize, 2, 4] {
+                let (o, s, c) = enforce_with(&mut RtacParallel::new(workers), &p, &[]);
+                if o != o_ref {
+                    return Err(format!("{workers}w: outcome {o:?} vs {o_ref:?} on {spec:?}"));
+                }
+                if c.recurrences != c_ref.recurrences {
+                    return Err(format!(
+                        "{workers}w: {} recurrences vs {} on {spec:?}",
+                        c.recurrences, c_ref.recurrences
+                    ));
+                }
+                if o_ref.is_consistent() && s.snapshot() != s_ref.snapshot() {
+                    return Err(format!("{workers}w: closure mismatch on {spec:?}"));
+                }
+                if o_ref.is_consistent()
+                    && (c.removals != c_ref.removals || c.support_checks != c_ref.support_checks)
+                {
+                    return Err(format!("{workers}w: counter mismatch on {spec:?}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn trail_replay_order_matches_dense() {
+        // Same removals in the same order => identical trail deltas.
+        forall("rtac-par-trail-order", 0x7A11, 16, |rng| {
+            let spec = RandomSpec::new(
+                3 + rng.gen_range(10),
+                2 + rng.gen_range(6),
+                0.3 + 0.7 * rng.next_f64(),
+                0.6 * rng.next_f64(),
+                rng.next_u64(),
+            );
+            let p = random_csp(&spec);
+            let run = |engine: &mut dyn Propagator| {
+                let mut s = State::new(&p);
+                let mut c = Counters::default();
+                let mark = s.trail_len();
+                let out = engine.enforce(&p, &mut s, &[], &mut c);
+                (out.is_consistent(), s.removals_since(mark).to_vec())
+            };
+            let (ok_ref, trail_ref) = run(&mut RtacNative::dense());
+            let (ok_par, trail_par) = run(&mut RtacParallel::new(3));
+            if ok_ref != ok_par {
+                return Err(format!("outcome mismatch on {spec:?}"));
+            }
+            if ok_ref && trail_ref != trail_par {
+                return Err(format!("trail order mismatch on {spec:?}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn plane_arena_state_survives_push_pop_around_parallel_enforce() {
+        // Trail/backtrack invariants on the plane-arena State with the
+        // parallel engine in the loop: pop_level must restore bit-exact.
+        let p = queens(8);
+        let mut engine = RtacParallel::new(4);
+        let mut s = State::new(&p);
+        let mut c = Counters::default();
+        assert!(engine.enforce(&p, &mut s, &[], &mut c).is_consistent());
+        let before = s.snapshot();
+        for col in 0..4 {
+            s.push_level();
+            s.assign(0, col);
+            let _ = engine.enforce(&p, &mut s, &[0], &mut c);
+            s.pop_level();
+            assert_eq!(s.snapshot(), before, "column {col} leaked removals");
+        }
+    }
+
+    #[test]
+    fn wipeout_victim_matches_dense() {
+        let p = pigeonhole(5, 4);
+        let prep = |s: &mut State| {
+            s.assign(0, 0);
+            s.assign(1, 1);
+            s.assign(2, 2);
+            s.assign(3, 3);
+        };
+        let mut s1 = State::new(&p);
+        prep(&mut s1);
+        let mut c1 = Counters::default();
+        let o1 = RtacNative::dense().enforce(&p, &mut s1, &[], &mut c1);
+        for workers in [1usize, 2, 4] {
+            let mut s2 = State::new(&p);
+            prep(&mut s2);
+            let mut c2 = Counters::default();
+            let o2 = RtacParallel::new(workers).enforce(&p, &mut s2, &[], &mut c2);
+            assert_eq!(o1, o2, "{workers} workers");
+            assert_eq!(c1.recurrences, c2.recurrences, "{workers} workers");
+        }
+        assert!(matches!(o1, Outcome::Wipeout(_)));
+    }
+
+    #[test]
+    fn engine_reuse_across_different_problems() {
+        // layouts differ (n and widths), planes must re-plan cleanly
+        let mut engine = RtacParallel::new(2);
+        for p in [queens(5), pigeonhole(6, 5), queens(9)] {
+            let (o, s, _) = {
+                let mut s = State::new(&p);
+                let mut c = Counters::default();
+                let o = engine.enforce(&p, &mut s, &[], &mut c);
+                (o, s, c)
+            };
+            let (o_ref, s_ref, _) = {
+                let mut s = State::new(&p);
+                let mut c = Counters::default();
+                let o = RtacNative::dense().enforce(&p, &mut s, &[], &mut c);
+                (o, s, c)
+            };
+            assert_eq!(o, o_ref, "{}", p.name());
+            if o.is_consistent() {
+                assert_eq!(s.snapshot(), s_ref.snapshot(), "{}", p.name());
+            }
+        }
+    }
+
+    #[test]
+    fn auto_mode_scales_workers_down_for_tiny_networks() {
+        let engine = RtacParallel::new(0);
+        assert_eq!(engine.effective_workers(4), 1);
+        let k = engine.effective_workers(10_000);
+        assert!(k >= 1);
+        let explicit = RtacParallel::new(7);
+        assert_eq!(explicit.effective_workers(4), 7);
+    }
+}

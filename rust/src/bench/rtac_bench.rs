@@ -1,0 +1,200 @@
+//! RTAC-family perf trajectory bench: `rtac` (sequential dense) vs
+//! `rtac-inc` (Prop. 2) vs `rtac-parN` (thread-parallel sweeps over the
+//! flat domain-plane arena) on the scaled paper grid.
+//!
+//! Emits `BENCH_rtac.json` — per (n, density, engine): ns per
+//! assignment and `#Recurrence` per AC call — so successive PRs can
+//! track the native hot path the way EXPERIMENTS.md tracks the tensor
+//! path.  The headline check is the densest cell (density 1.0, largest
+//! n): the parallel engine must beat the sequential dense engine there,
+//! since that is exactly the regime the paper's "fully parallelizable
+//! recurrence" claim targets.
+
+use crate::bench::workloads::{run_grid, CellResult, GridSpec};
+use crate::util::json::{num, obj, s, Json};
+use crate::util::table::{fnum, Table};
+
+/// Engine series for the RTAC trajectory (parallel with 2 and 4 pinned
+/// workers so results are machine-comparable).
+pub const ENGINES: &[&str] = &["rtac", "rtac-inc", "rtac-par2", "rtac-par4"];
+
+/// Default grid: the scaled paper grid, trimmed to the sizes where the
+/// dense engines dominate runtime.
+pub fn default_spec() -> GridSpec {
+    let mut spec = GridSpec::scaled();
+    spec.sizes = vec![50, 100, 200];
+    spec.densities = vec![0.1, 0.5, 1.0];
+    spec.assignments = 200;
+    spec
+}
+
+/// Run the grid for the RTAC engine family.
+pub fn run(spec: &GridSpec, engines: &[&str]) -> Vec<CellResult> {
+    run_grid(spec, engines)
+}
+
+/// Nanoseconds per assignment for a cell.
+fn ns_per_assignment(r: &CellResult) -> f64 {
+    r.mean_ac_ms * 1e6
+}
+
+/// The densest cell of the grid: (max n, max density).
+fn densest_key(results: &[CellResult]) -> Option<(usize, f64)> {
+    results
+        .iter()
+        .map(|r| (r.n, r.density))
+        .max_by(|a, b| (a.0, a.1).partial_cmp(&(b.0, b.1)).unwrap())
+}
+
+fn cell<'a>(results: &'a [CellResult], n: usize, density: f64, engine: &str) -> Option<&'a CellResult> {
+    results
+        .iter()
+        .find(|r| r.n == n && r.density == density && r.engine == engine)
+}
+
+/// Wall-clock verdict on the densest cell: best parallel engine vs the
+/// sequential dense engine.  Returns (speedup, winning engine name).
+pub fn densest_speedup(results: &[CellResult]) -> Option<(f64, String)> {
+    let (n, density) = densest_key(results)?;
+    let base = cell(results, n, density, "rtac")?;
+    let best_par = results
+        .iter()
+        .filter(|r| r.n == n && r.density == density && r.engine.starts_with("rtac-par"))
+        .min_by(|a, b| a.mean_ac_ms.partial_cmp(&b.mean_ac_ms).unwrap())?;
+    if best_par.mean_ac_ms <= 0.0 {
+        return None;
+    }
+    Some((base.mean_ac_ms / best_par.mean_ac_ms, best_par.engine.clone()))
+}
+
+/// Paper-style matrix: one row per (n, density), ns/assignment per
+/// engine plus the recurrence column (identical across the family by
+/// construction — printed once as a sanity signal).
+pub fn render(results: &[CellResult], engines: &[&str]) -> String {
+    let mut headers = vec!["#Variable".to_string(), "Density".to_string()];
+    headers.extend(engines.iter().map(|e| format!("{e} ns/assign")));
+    headers.push("#Recurrence".to_string());
+    let header_refs: Vec<&str> = headers.iter().map(|h| h.as_str()).collect();
+    let mut t = Table::new(&header_refs);
+    let mut keys: Vec<(usize, u64)> =
+        results.iter().map(|r| (r.n, r.density.to_bits())).collect();
+    keys.sort();
+    keys.dedup();
+    for (n, dbits) in keys {
+        let density = f64::from_bits(dbits);
+        let mut row = vec![n.to_string(), format!("{density:.2}")];
+        let mut recurrences = 0.0;
+        for &e in engines {
+            match cell(results, n, density, e) {
+                Some(c) => {
+                    row.push(fnum(ns_per_assignment(c)));
+                    recurrences = recurrences.max(c.recurrences_per_call);
+                }
+                None => row.push("-".into()),
+            }
+        }
+        row.push(format!("{recurrences:.2}"));
+        t.row(row);
+    }
+    let mut out = t.render();
+    if let Some((speedup, engine)) = densest_speedup(results) {
+        out.push_str(&format!(
+            "densest cell: {engine} is {speedup:.2}x vs sequential rtac -> {}\n",
+            if speedup > 1.0 { "PARALLEL WINS" } else { "parallel overhead dominates" }
+        ));
+    }
+    out
+}
+
+/// JSON export: grid metadata + one row per cell (BENCH_rtac.json).
+pub fn to_json(spec: &GridSpec, results: &[CellResult]) -> Json {
+    let rows = Json::Arr(
+        results
+            .iter()
+            .map(|r| {
+                obj(vec![
+                    ("n", num(r.n as f64)),
+                    ("density", num(r.density)),
+                    ("engine", s(&r.engine)),
+                    ("ns_per_assignment", num(ns_per_assignment(r))),
+                    ("recurrences_per_call", num(r.recurrences_per_call)),
+                    ("assignments", num(r.assignments as f64)),
+                ])
+            })
+            .collect(),
+    );
+    let mut fields = vec![
+        ("bench", s("rtac-family")),
+        ("dom_size", num(spec.dom_size as f64)),
+        ("tightness", num(spec.tightness)),
+        ("rows", rows),
+    ];
+    if let Some((speedup, engine)) = densest_speedup(results) {
+        fields.push(("densest_speedup", num(speedup)));
+        fields.push(("densest_winner", s(&engine)));
+    }
+    obj(fields)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_results() -> (GridSpec, Vec<CellResult>) {
+        let spec = GridSpec {
+            sizes: vec![10, 16],
+            densities: vec![0.3, 1.0],
+            dom_size: 5,
+            tightness: 0.3,
+            assignments: 25,
+            seed: 13,
+        };
+        let results = run(&spec, &["rtac", "rtac-par2"]);
+        (spec, results)
+    }
+
+    #[test]
+    fn family_recurrences_identical_per_cell() {
+        let (_, results) = tiny_results();
+        for r in &results {
+            let twin = cell(
+                &results,
+                r.n,
+                r.density,
+                if r.engine == "rtac" { "rtac-par2" } else { "rtac" },
+            )
+            .unwrap();
+            assert!(
+                (r.recurrences_per_call - twin.recurrences_per_call).abs() < 1e-9,
+                "sweep counts diverge at ({}, {}): {} vs {}",
+                r.n,
+                r.density,
+                r.recurrences_per_call,
+                twin.recurrences_per_call
+            );
+        }
+    }
+
+    #[test]
+    fn json_has_row_per_cell_and_parses_back() {
+        let (spec, results) = tiny_results();
+        let j = to_json(&spec, &results);
+        let parsed = crate::util::json::parse(&j.to_string()).unwrap();
+        assert_eq!(
+            parsed.get("rows").unwrap().as_arr().unwrap().len(),
+            results.len()
+        );
+        assert_eq!(parsed.get("bench").unwrap().as_str(), Some("rtac-family"));
+    }
+
+    #[test]
+    fn render_and_speedup_well_formed() {
+        let (_, results) = tiny_results();
+        let txt = render(&results, &["rtac", "rtac-par2"]);
+        assert!(txt.contains("#Recurrence"));
+        assert!(txt.contains("densest cell"));
+        let (speedup, winner) = densest_speedup(&results).unwrap();
+        assert!(speedup > 0.0);
+        assert!(winner.starts_with("rtac-par"));
+    }
+}

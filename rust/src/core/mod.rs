@@ -1,10 +1,13 @@
-//! CSP core: immutable problems (variables, domains, bit-matrix binary
-//! relations, arc adjacency) and mutable domain state with an undo trail.
+//! CSP core: immutable problems (variables, domains, packed bit-matrix
+//! binary relations, arc adjacency), the flat [`DomainPlane`] domain
+//! arena, and mutable domain state with an undo trail.
 
+pub mod plane;
 pub mod problem;
 pub mod relation;
 pub mod state;
 
+pub use plane::{DomainPlane, PlaneChunk};
 pub use problem::{Arc, Constraint, Problem, Val, VarId};
 pub use relation::Relation;
 pub use state::State;

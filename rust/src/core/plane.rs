@@ -1,0 +1,357 @@
+//! `DomainPlane` — the flat domain-plane arena.
+//!
+//! # Layout decision
+//!
+//! Every variable's domain bitset lives in **one contiguous `Vec<u64>`**;
+//! variable `v` owns the word range `[offset(v), offset(v) +
+//! words_for(width(v)))`, where `width(v)` is its domain size.  Rows are
+//! word-aligned (no bit packing across variables) so that:
+//!
+//! * a sweep **snapshot** of all domains is a single `memcpy`
+//!   ([`DomainPlane::copy_words_from`]) instead of n per-variable
+//!   `BitSet::clone_from` calls chasing n heap pointers;
+//! * the recurrent engines ([`crate::ac::rtac`], [`crate::ac::rtac_par`])
+//!   run Jacobi sweeps as **double-buffered plane swaps** — revise from
+//!   plane k−1, write plane k — exactly the tensor model's `while_loop`
+//!   body, but in words;
+//! * thread-parallel revision partitions variables into contiguous
+//!   *word ranges*, so workers receive disjoint `&mut [u64]` slices via
+//!   `split_at_mut` — no locks, no false sharing beyond one boundary
+//!   word per worker pair;
+//! * the layout mirrors the padded `vars` tensor plane of
+//!   `runtime::encode`, keeping a future device upload of the arena a
+//!   straight reinterpretation rather than a gather.
+//!
+//! Follow-ons recorded in ROADMAP.md: explicit SIMD intrinsics over the
+//! word rows, and reusing the arena as the staging buffer for GPU plane
+//! uploads in the coordinator.
+//!
+//! The mutable search state ([`crate::core::State`]) owns one
+//! `DomainPlane` plus the undo trail; engines keep private planes for
+//! snapshots and next-sweep buffers and never allocate per sweep.
+
+use crate::core::problem::{Problem, Val, VarId};
+use crate::util::bitset::{self, Bits};
+
+/// Flat arena of per-variable domain bit rows (see module docs).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct DomainPlane {
+    /// Word offset of each variable's row in `words`.
+    offsets: Vec<u32>,
+    /// Bit width (domain size) of each variable's row.
+    widths: Vec<u32>,
+    words: Vec<u64>,
+}
+
+impl DomainPlane {
+    /// An empty plane (no variables) — placeholder until an engine sees
+    /// its first problem.
+    pub fn empty() -> DomainPlane {
+        DomainPlane { offsets: Vec::new(), widths: Vec::new(), words: Vec::new() }
+    }
+
+    /// The arena for `problem` with every domain full.
+    pub fn full(problem: &Problem) -> DomainPlane {
+        let n = problem.n_vars();
+        let mut offsets = Vec::with_capacity(n);
+        let mut widths = Vec::with_capacity(n);
+        let mut total = 0usize;
+        for v in 0..n {
+            let w = problem.dom_size(v);
+            offsets.push(total as u32);
+            widths.push(w as u32);
+            total += bitset::words_for(w);
+        }
+        let mut words = vec![!0u64; total];
+        let plane = DomainPlane { offsets, widths, words: Vec::new() };
+        for v in 0..n {
+            let r = plane.word_range(v);
+            words[r.end - 1] &= bitset::tail_mask(plane.widths[v] as usize);
+        }
+        DomainPlane { words, ..plane }
+    }
+
+    #[inline]
+    pub fn n_vars(&self) -> usize {
+        self.widths.len()
+    }
+
+    /// Domain size (bit width) of variable `v`.
+    #[inline]
+    pub fn width(&self, v: VarId) -> usize {
+        self.widths[v] as usize
+    }
+
+    /// Word offset of `v`'s row.
+    #[inline]
+    pub fn offset(&self, v: VarId) -> usize {
+        self.offsets[v] as usize
+    }
+
+    /// Total words in the arena.
+    #[inline]
+    pub fn total_words(&self) -> usize {
+        self.words.len()
+    }
+
+    /// Word range of `v`'s row.
+    #[inline]
+    pub fn word_range(&self, v: VarId) -> std::ops::Range<usize> {
+        let start = self.offsets[v] as usize;
+        start..start + bitset::words_for(self.widths[v] as usize)
+    }
+
+    /// Same variable layout (offsets and widths) as `other`?
+    pub fn same_layout(&self, other: &DomainPlane) -> bool {
+        self.offsets == other.offsets && self.widths == other.widths
+    }
+
+    /// Overwrite this plane's bits from `other` — one `memcpy`.  This is
+    /// the whole-network domain snapshot of the recurrent engines.
+    #[inline]
+    pub fn copy_words_from(&mut self, other: &DomainPlane) {
+        debug_assert!(self.same_layout(other), "snapshot across different layouts");
+        self.words.copy_from_slice(&other.words);
+    }
+
+    /// Borrowed bit-row view of `v`'s domain.
+    #[inline]
+    pub fn bits(&self, v: VarId) -> Bits<'_> {
+        Bits::new(self.widths[v] as usize, &self.words[self.word_range(v)])
+    }
+
+    #[inline]
+    pub fn get(&self, v: VarId, a: Val) -> bool {
+        debug_assert!(a < self.width(v));
+        (self.words[self.offsets[v] as usize + a / 64] >> (a % 64)) & 1 == 1
+    }
+
+    #[inline]
+    pub fn set(&mut self, v: VarId, a: Val) {
+        debug_assert!(a < self.width(v));
+        self.words[self.offsets[v] as usize + a / 64] |= 1u64 << (a % 64);
+    }
+
+    #[inline]
+    pub fn clear(&mut self, v: VarId, a: Val) {
+        debug_assert!(a < self.width(v));
+        self.words[self.offsets[v] as usize + a / 64] &= !(1u64 << (a % 64));
+    }
+
+    /// Live values of `v`.
+    #[inline]
+    pub fn count(&self, v: VarId) -> usize {
+        self.words[self.word_range(v)].iter().map(|w| w.count_ones() as usize).sum()
+    }
+
+    /// True iff `v`'s row is all zeros (domain wipeout).
+    #[inline]
+    pub fn is_wiped(&self, v: VarId) -> bool {
+        self.words[self.word_range(v)].iter().all(|&w| w == 0)
+    }
+
+    /// Lowest live value of `v`, if any.
+    #[inline]
+    pub fn first(&self, v: VarId) -> Option<Val> {
+        self.bits(v).first()
+    }
+
+    /// Total live (var, value) pairs — tail bits are clear by invariant,
+    /// so one popcount pass over the arena suffices.
+    pub fn count_all(&self) -> usize {
+        self.words.iter().map(|w| w.count_ones() as usize).sum()
+    }
+
+    /// The raw arena words.
+    #[inline]
+    pub fn words(&self) -> &[u64] {
+        &self.words
+    }
+
+    /// Mutable raw arena words (parallel sweeps split this into
+    /// per-worker disjoint slices at variable boundaries).
+    #[inline]
+    pub fn words_mut(&mut self) -> &mut [u64] {
+        &mut self.words
+    }
+
+    /// Partition variables into `k` contiguous chunks of roughly equal
+    /// word count, each chunk owning a disjoint word range.  Chunks may
+    /// be empty (more workers than variables); concatenated they cover
+    /// exactly `[0, n)` / `[0, total_words)` in order.
+    pub fn partition(&self, k: usize) -> Vec<PlaneChunk> {
+        let k = k.max(1);
+        let n = self.n_vars();
+        let total = self.total_words();
+        let mut chunks = Vec::with_capacity(k);
+        let mut v = 0usize;
+        for i in 0..k {
+            let var_start = v;
+            let word_start = if v < n { self.offset(v) } else { total };
+            // advance until this chunk's share of the words is covered
+            let target = (total * (i + 1)) / k;
+            while v < n && self.word_range(v).end <= target {
+                v += 1;
+            }
+            // a row wider than the whole share must still go somewhere:
+            // take it rather than leaving this worker idle
+            if v == var_start && v < n {
+                v += 1;
+            }
+            if i == k - 1 {
+                v = n; // last chunk takes any rounding remainder
+            }
+            let word_end = if v < n { self.offset(v) } else { total };
+            chunks.push(PlaneChunk { var_start, var_end: v, word_start, word_end });
+        }
+        chunks
+    }
+}
+
+/// A contiguous (variables, words) slice of a plane partition.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PlaneChunk {
+    pub var_start: VarId,
+    pub var_end: VarId,
+    pub word_start: usize,
+    pub word_end: usize,
+}
+
+impl PlaneChunk {
+    #[inline]
+    pub fn n_words(&self) -> usize {
+        self.word_end - self.word_start
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.var_start == self.var_end
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::problem::Problem;
+
+    fn mixed_problem() -> Problem {
+        // widths 3, 70, 64, 1, 130: exercises tail masks and multi-word rows
+        Problem::with_domains("t", vec![3, 70, 64, 1, 130])
+    }
+
+    #[test]
+    fn full_plane_layout_and_counts() {
+        let p = mixed_problem();
+        let d = DomainPlane::full(&p);
+        assert_eq!(d.n_vars(), 5);
+        // word widths: 1, 2, 1, 1, 3 -> offsets 0,1,3,4,5, total 8
+        assert_eq!(d.total_words(), 8);
+        assert_eq!(d.word_range(1), 1..3);
+        assert_eq!(d.word_range(4), 5..8);
+        assert_eq!(d.count_all(), 3 + 70 + 64 + 1 + 130);
+        for v in 0..5 {
+            assert_eq!(d.count(v), d.width(v));
+            assert_eq!(d.bits(v).to_vec(), (0..d.width(v)).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn tail_bits_stay_clear() {
+        let p = mixed_problem();
+        let d = DomainPlane::full(&p);
+        // var 0 (width 3) shares no word with var 1: word 0 tail must be 0
+        assert_eq!(d.words()[0] >> 3, 0);
+        // var 4 (width 130): last word has 2 live bits
+        assert_eq!(d.words()[7] >> 2, 0);
+    }
+
+    #[test]
+    fn set_clear_get_first_wiped() {
+        let p = mixed_problem();
+        let mut d = DomainPlane::full(&p);
+        d.clear(1, 69);
+        assert!(!d.get(1, 69));
+        assert_eq!(d.count(1), 69);
+        d.set(1, 69);
+        assert!(d.get(1, 69));
+        for a in 0..3 {
+            d.clear(0, a);
+        }
+        assert!(d.is_wiped(0));
+        assert_eq!(d.first(0), None);
+        assert_eq!(d.first(1), Some(0));
+    }
+
+    #[test]
+    fn snapshot_is_exact() {
+        let p = mixed_problem();
+        let src = {
+            let mut d = DomainPlane::full(&p);
+            d.clear(4, 129);
+            d.clear(2, 0);
+            d
+        };
+        let mut dst = DomainPlane::full(&p);
+        assert!(dst.same_layout(&src));
+        dst.copy_words_from(&src);
+        assert_eq!(dst, src);
+    }
+
+    #[test]
+    fn partition_covers_everything_in_order() {
+        let p = mixed_problem();
+        let d = DomainPlane::full(&p);
+        for k in 1..=8 {
+            let chunks = d.partition(k);
+            assert_eq!(chunks.len(), k);
+            assert_eq!(chunks[0].var_start, 0);
+            assert_eq!(chunks[0].word_start, 0);
+            assert_eq!(chunks.last().unwrap().var_end, d.n_vars());
+            assert_eq!(chunks.last().unwrap().word_end, d.total_words());
+            for w in chunks.windows(2) {
+                assert_eq!(w[0].var_end, w[1].var_start);
+                assert_eq!(w[0].word_end, w[1].word_start);
+            }
+            // every chunk's word range matches its variables' rows
+            for c in &chunks {
+                if !c.is_empty() {
+                    assert_eq!(d.offset(c.var_start), c.word_start);
+                    assert_eq!(d.word_range(c.var_end - 1).end, c.word_end);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn partition_balances_words_roughly() {
+        let p = Problem::new("u", 64, 20); // 64 one-word rows
+        let d = DomainPlane::full(&p);
+        let chunks = d.partition(4);
+        for c in &chunks {
+            assert_eq!(c.n_words(), 16);
+        }
+    }
+
+    #[test]
+    fn partition_never_idles_a_worker_while_rows_remain() {
+        // one huge row followed by two tiny ones: every chunk must still
+        // receive a row (the huge one cannot starve the later workers)
+        let p = Problem::with_domains("skew", vec![640, 3, 5]); // 10, 1, 1 words
+        let d = DomainPlane::full(&p);
+        let chunks = d.partition(3);
+        assert!(chunks.iter().all(|c| !c.is_empty()), "{chunks:?}");
+        assert_eq!(chunks[0].var_start..chunks[0].var_end, 0..1);
+        assert_eq!(chunks.last().unwrap().var_end, 3);
+    }
+
+    #[test]
+    fn empty_plane() {
+        let d = DomainPlane::empty();
+        assert_eq!(d.n_vars(), 0);
+        assert_eq!(d.total_words(), 0);
+        assert_eq!(d.count_all(), 0);
+        let chunks = d.partition(3);
+        assert_eq!(chunks.len(), 3);
+        assert!(chunks.iter().all(|c| c.is_empty() && c.n_words() == 0));
+    }
+}

@@ -139,10 +139,11 @@ impl Problem {
         }
     }
 
-    /// Supports of value `val` of the revised variable, as a bitset over
-    /// the witness variable's domain.
+    /// Supports of value `val` of the revised variable, as a bit row
+    /// over the witness variable's domain (a borrowed view into the
+    /// relation's packed word buffer).
     #[inline]
-    pub fn arc_support_row(&self, a: Arc, val: Val) -> &crate::util::bitset::BitSet {
+    pub fn arc_support_row(&self, a: Arc, val: Val) -> crate::util::bitset::Bits<'_> {
         let c = &self.constraints[a.cons];
         if a.is_x {
             c.rel.row_fwd(val)

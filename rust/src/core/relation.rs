@@ -1,42 +1,70 @@
 //! Binary constraint relations as bit-matrices.
 //!
 //! A relation over domains of size `dx` × `dy` stores, for every value
-//! `a` of the first variable, the bitset of supporting values of the
+//! `a` of the first variable, the bit row of supporting values of the
 //! second (`row_fwd`), and the transpose (`row_rev`).  Both directions
 //! are maintained eagerly because every AC algorithm revises both arcs
 //! and the transpose would otherwise be recomputed O(#revisions) times —
 //! this is the "bidirectionality" exploited by AC-2001/AC3.2 [6].
+//!
+//! Rows are **packed into one contiguous word buffer per direction**
+//! (row-major, `words_for(dy)` / `words_for(dx)` words per row, tail
+//! bits clear) and handed out as borrowed [`Bits`] views.  A sweep that
+//! walks the values of a variable therefore streams its support rows
+//! linearly from one allocation — the same flat layout as the
+//! [`crate::core::DomainPlane`] domain arena, so `row & domain` support
+//! tests touch exactly two dense word runs.
 
-use crate::util::bitset::BitSet;
+use crate::util::bitset::{self, Bits};
 
-/// A bit-matrix relation between two domains.
+/// A bit-matrix relation between two domains, rows packed flat.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Relation {
     dx: usize,
     dy: usize,
-    fwd: Vec<BitSet>, // fwd[a] = supports of (x,a) among y's values
-    rev: Vec<BitSet>, // rev[b] = supports of (y,b) among x's values
+    /// Words per `fwd` row (`words_for(dy)`).
+    wy: usize,
+    /// Words per `rev` row (`words_for(dx)`).
+    wx: usize,
+    fwd: Vec<u64>, // dx rows of wy words: supports of (x,a) among y's values
+    rev: Vec<u64>, // dy rows of wx words: supports of (y,b) among x's values
 }
 
 impl Relation {
     /// The universal relation (every pair allowed) — AC-neutral.
     pub fn allow_all(dx: usize, dy: usize) -> Relation {
-        Relation {
-            dx,
-            dy,
-            fwd: (0..dx).map(|_| BitSet::ones(dy)).collect(),
-            rev: (0..dy).map(|_| BitSet::ones(dx)).collect(),
+        let mut r = Relation::forbid_all(dx, dy);
+        for w in r.fwd.iter_mut() {
+            *w = !0;
         }
+        for w in r.rev.iter_mut() {
+            *w = !0;
+        }
+        r.mask_tails();
+        r
     }
 
     /// The empty relation (nothing allowed) — instantly UNSAT if both
     /// variables have non-empty domains.
     pub fn forbid_all(dx: usize, dy: usize) -> Relation {
-        Relation {
-            dx,
-            dy,
-            fwd: (0..dx).map(|_| BitSet::zeros(dy)).collect(),
-            rev: (0..dy).map(|_| BitSet::zeros(dx)).collect(),
+        let wy = bitset::words_for(dy);
+        let wx = bitset::words_for(dx);
+        Relation { dx, dy, wy, wx, fwd: vec![0; dx * wy], rev: vec![0; dy * wx] }
+    }
+
+    /// Clear the bits beyond each row's width.
+    fn mask_tails(&mut self) {
+        if self.wy > 0 {
+            let m = bitset::tail_mask(self.dy);
+            for a in 0..self.dx {
+                self.fwd[(a + 1) * self.wy - 1] &= m;
+            }
+        }
+        if self.wx > 0 {
+            let m = bitset::tail_mask(self.dx);
+            for b in 0..self.dy {
+                self.rev[(b + 1) * self.wx - 1] &= m;
+            }
         }
     }
 
@@ -65,41 +93,45 @@ impl Relation {
 
     #[inline]
     pub fn allow(&mut self, a: usize, b: usize) {
-        self.fwd[a].set(b);
-        self.rev[b].set(a);
+        debug_assert!(a < self.dx && b < self.dy);
+        self.fwd[a * self.wy + b / 64] |= 1u64 << (b % 64);
+        self.rev[b * self.wx + a / 64] |= 1u64 << (a % 64);
     }
 
     #[inline]
     pub fn forbid(&mut self, a: usize, b: usize) {
-        self.fwd[a].clear(b);
-        self.rev[b].clear(a);
+        debug_assert!(a < self.dx && b < self.dy);
+        self.fwd[a * self.wy + b / 64] &= !(1u64 << (b % 64));
+        self.rev[b * self.wx + a / 64] &= !(1u64 << (a % 64));
     }
 
     #[inline]
     pub fn allows(&self, a: usize, b: usize) -> bool {
-        self.fwd[a].get(b)
+        debug_assert!(a < self.dx && b < self.dy);
+        (self.fwd[a * self.wy + b / 64] >> (b % 64)) & 1 == 1
     }
 
     /// Supports of value `a` of the first variable (bits over dy).
     #[inline]
-    pub fn row_fwd(&self, a: usize) -> &BitSet {
-        &self.fwd[a]
+    pub fn row_fwd(&self, a: usize) -> Bits<'_> {
+        Bits::new(self.dy, &self.fwd[a * self.wy..(a + 1) * self.wy])
     }
 
     /// Supports of value `b` of the second variable (bits over dx).
     #[inline]
-    pub fn row_rev(&self, b: usize) -> &BitSet {
-        &self.rev[b]
+    pub fn row_rev(&self, b: usize) -> Bits<'_> {
+        Bits::new(self.dx, &self.rev[b * self.wx..(b + 1) * self.wx])
     }
 
     /// True iff every pair is allowed (encodes "no constraint").
     pub fn is_universal(&self) -> bool {
-        self.fwd.iter().all(|r| r.count() == self.dy)
+        (0..self.dx).all(|a| self.row_fwd(a).count() == self.dy)
     }
 
-    /// Number of allowed pairs.
+    /// Number of allowed pairs (tail bits are clear, so one popcount
+    /// pass over the packed buffer suffices).
     pub fn cardinality(&self) -> usize {
-        self.fwd.iter().map(|r| r.count()).sum()
+        self.fwd.iter().map(|w| w.count_ones() as usize).sum()
     }
 
     /// Tightness = forbidden fraction.
@@ -109,7 +141,14 @@ impl Relation {
 
     /// The transposed relation (swap the two variables' roles).
     pub fn transposed(&self) -> Relation {
-        Relation { dx: self.dy, dy: self.dx, fwd: self.rev.clone(), rev: self.fwd.clone() }
+        Relation {
+            dx: self.dy,
+            dy: self.dx,
+            wy: self.wx,
+            wx: self.wy,
+            fwd: self.rev.clone(),
+            rev: self.fwd.clone(),
+        }
     }
 
     /// Internal consistency: fwd and rev agree (used by debug asserts
@@ -117,7 +156,7 @@ impl Relation {
     pub fn check_mirror(&self) -> bool {
         for a in 0..self.dx {
             for b in 0..self.dy {
-                if self.fwd[a].get(b) != self.rev[b].get(a) {
+                if self.allows(a, b) != self.row_rev(b).get(a) {
                     return false;
                 }
             }

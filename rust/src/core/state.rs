@@ -1,17 +1,20 @@
 //! Mutable domain state + trail for chronological backtracking.
 //!
-//! `State` owns one bitset per variable (current domain) and a trail of
+//! `State` owns all current domains in one flat [`DomainPlane`] arena
+//! (see `core/plane.rs` for the layout decision) plus a trail of
 //! removals.  Search pushes a level before each assignment and pops it on
 //! backtrack; popping replays the trail tail to restore exactly the
-//! pre-level domains (tested to be bit-exact).
+//! pre-level domains (tested to be bit-exact).  The recurrent engines
+//! snapshot the whole arena with a single memcpy via [`State::plane`].
 
+use crate::core::plane::DomainPlane;
 use crate::core::problem::{Problem, Val, VarId};
-use crate::util::bitset::BitSet;
+use crate::util::bitset::Bits;
 
 /// Mutable domains with an undo trail.
 #[derive(Clone, Debug)]
 pub struct State {
-    doms: Vec<BitSet>,
+    plane: DomainPlane,
     trail: Vec<(u32, u32)>, // (var, val) removals, in order
     levels: Vec<usize>,     // trail length at each level push
 }
@@ -19,42 +22,45 @@ pub struct State {
 impl State {
     /// Full initial domains of `problem`.
     pub fn new(problem: &Problem) -> State {
-        State {
-            doms: (0..problem.n_vars()).map(|v| BitSet::ones(problem.dom_size(v))).collect(),
-            trail: Vec::new(),
-            levels: Vec::new(),
-        }
+        State { plane: DomainPlane::full(problem), trail: Vec::new(), levels: Vec::new() }
     }
 
     #[inline]
     pub fn n_vars(&self) -> usize {
-        self.doms.len()
+        self.plane.n_vars()
     }
 
+    /// Borrowed bit-row view of `v`'s current domain.
     #[inline]
-    pub fn dom(&self, v: VarId) -> &BitSet {
-        &self.doms[v]
+    pub fn dom(&self, v: VarId) -> Bits<'_> {
+        self.plane.bits(v)
+    }
+
+    /// The whole domain arena (engines snapshot it with one memcpy).
+    #[inline]
+    pub fn plane(&self) -> &DomainPlane {
+        &self.plane
     }
 
     #[inline]
     pub fn dom_size(&self, v: VarId) -> usize {
-        self.doms[v].count()
+        self.plane.count(v)
     }
 
     #[inline]
     pub fn contains(&self, v: VarId, a: Val) -> bool {
-        self.doms[v].get(a)
+        self.plane.get(v, a)
     }
 
     #[inline]
     pub fn is_singleton(&self, v: VarId) -> bool {
-        self.doms[v].count() == 1
+        self.plane.count(v) == 1
     }
 
     /// The assigned value if the domain is a singleton.
     pub fn value(&self, v: VarId) -> Option<Val> {
         if self.is_singleton(v) {
-            self.doms[v].first()
+            self.plane.first(v)
         } else {
             None
         }
@@ -63,10 +69,10 @@ impl State {
     /// Remove value `a` from `v`'s domain (recorded on the trail).
     /// Returns false if it was already absent.
     pub fn remove(&mut self, v: VarId, a: Val) -> bool {
-        if !self.doms[v].get(a) {
+        if !self.plane.get(v, a) {
             return false;
         }
-        self.doms[v].clear(a);
+        self.plane.clear(v, a);
         self.trail.push((v as u32, a as u32));
         true
     }
@@ -74,18 +80,18 @@ impl State {
     /// True iff `v`'s domain is empty (wipeout).
     #[inline]
     pub fn wiped(&self, v: VarId) -> bool {
-        self.doms[v].none()
+        self.plane.is_wiped(v)
     }
 
     /// Any empty domain anywhere?
     pub fn any_wiped(&self) -> bool {
-        self.doms.iter().any(|d| d.none())
+        (0..self.n_vars()).any(|v| self.plane.is_wiped(v))
     }
 
     /// Reduce `v` to the singleton `{a}` (all removals trailed).
     pub fn assign(&mut self, v: VarId, a: Val) {
-        assert!(self.doms[v].get(a), "assigning a removed value");
-        let others: Vec<usize> = self.doms[v].iter_ones().filter(|&b| b != a).collect();
+        assert!(self.plane.get(v, a), "assigning a removed value");
+        let others: Vec<usize> = self.plane.bits(v).iter_ones().filter(|&b| b != a).collect();
         for b in others {
             self.remove(v, b);
         }
@@ -101,7 +107,7 @@ impl State {
         let mark = self.levels.pop().expect("pop without push");
         while self.trail.len() > mark {
             let (v, a) = self.trail.pop().unwrap();
-            self.doms[v as usize].set(a as usize);
+            self.plane.set(v as usize, a as usize);
         }
     }
 
@@ -124,12 +130,12 @@ impl State {
 
     /// Snapshot of all current domains as plain vecs (test/debug aid).
     pub fn snapshot(&self) -> Vec<Vec<Val>> {
-        self.doms.iter().map(|d| d.to_vec()).collect()
+        (0..self.n_vars()).map(|v| self.plane.bits(v).to_vec()).collect()
     }
 
     /// Total number of live (var, value) pairs.
     pub fn total_size(&self) -> usize {
-        self.doms.iter().map(|d| d.count()).sum()
+        self.plane.count_all()
     }
 }
 

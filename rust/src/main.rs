@@ -9,6 +9,8 @@
 //!   bench-fig3    reproduce Fig. 3 (time per assignment grid)
 //!   bench-table1  reproduce Table 1 (#Revision vs #Recurrence grid)
 //!   bench-ablate  ablations A-D (DESIGN.md §5)
+//!   bench-rtac    RTAC family (dense / incremental / parallel) grid,
+//!                 emits BENCH_rtac.json
 //!   info          artifact manifest + runtime info
 //!
 //! Run `rtac help` for flags.
@@ -16,7 +18,7 @@
 use std::time::Duration;
 
 use rtac::ac::make_engine;
-use rtac::bench::{ablations, fig3, table1, GridSpec};
+use rtac::bench::{ablations, fig3, rtac_bench, table1, GridSpec};
 use rtac::coordinator::{BatchPolicy, Coordinator, CoordinatorConfig};
 use rtac::core::Problem;
 use rtac::gen::random::{random_csp, RandomSpec};
@@ -41,6 +43,8 @@ SUBCOMMANDS
                --engines ac3,ac3bit,rtac,rtac-inc [--json FILE]
   bench-table1 same grid flags [--json FILE]
   bench-ablate --episodes 40
+  bench-rtac   --sizes 50,100,200 --densities 0.1,0.5,1.0 --assignments 200
+               --engines rtac,rtac-inc,rtac-par2,rtac-par4 [--json BENCH_rtac.json]
   info         --artifacts DIR
 ";
 
@@ -71,6 +75,7 @@ fn run(args: Args) -> Result<(), String> {
         Some("bench-fig3") => cmd_fig3(&args),
         Some("bench-table1") => cmd_table1(&args),
         Some("bench-ablate") => cmd_ablate(&args),
+        Some("bench-rtac") => cmd_bench_rtac(&args),
         Some("info") => cmd_info(&args),
         Some("help") | None => {
             print!("{HELP}");
@@ -238,8 +243,9 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
     Ok(())
 }
 
-fn grid_spec(args: &Args) -> Result<GridSpec, String> {
-    let mut spec = if args.has_flag("full") { GridSpec::paper_full() } else { GridSpec::scaled() };
+/// Apply the shared grid flags on top of a base spec (used by every
+/// grid-shaped bench subcommand).
+fn fill_grid_spec(args: &Args, mut spec: GridSpec) -> Result<GridSpec, String> {
     spec.sizes = args.get_usize_list("sizes", &spec.sizes)?;
     spec.densities = args.get_f64_list("densities", &spec.densities)?;
     spec.dom_size = args.get_usize("dom", spec.dom_size)?;
@@ -247,6 +253,11 @@ fn grid_spec(args: &Args) -> Result<GridSpec, String> {
     spec.assignments = args.get_u64("assignments", spec.assignments)?;
     spec.seed = args.get_u64("seed", spec.seed)?;
     Ok(spec)
+}
+
+fn grid_spec(args: &Args) -> Result<GridSpec, String> {
+    let base = if args.has_flag("full") { GridSpec::paper_full() } else { GridSpec::scaled() };
+    fill_grid_spec(args, base)
 }
 
 fn maybe_write_json(args: &Args, json: rtac::util::json::Json) -> Result<(), String> {
@@ -286,6 +297,25 @@ fn cmd_table1(args: &Args) -> Result<(), String> {
     if json_requested.is_some() {
         maybe_write_json(args, table1::to_json(&rows))?;
     }
+    Ok(())
+}
+
+fn cmd_bench_rtac(args: &Args) -> Result<(), String> {
+    let spec = fill_grid_spec(args, rtac_bench::default_spec())?;
+    let engines_arg =
+        args.get_or("engines", &rtac_bench::ENGINES.join(","));
+    let engines: Vec<&str> = engines_arg.split(',').collect();
+    let json_path = args.get_or("json", "BENCH_rtac.json");
+    args.finish()?;
+    eprintln!(
+        "rtac family grid: sizes={:?} densities={:?} dom={} t={} assignments={}",
+        spec.sizes, spec.densities, spec.dom_size, spec.tightness, spec.assignments
+    );
+    let results = rtac_bench::run(&spec, &engines);
+    println!("{}", rtac_bench::render(&results, &engines));
+    let json = rtac_bench::to_json(&spec, &results);
+    std::fs::write(&json_path, json.to_string()).map_err(|e| format!("{json_path}: {e}"))?;
+    eprintln!("wrote {json_path}");
     Ok(())
 }
 

@@ -1,6 +1,14 @@
 //! Dynamic bitset over `u64` words — the workhorse of the native AC
-//! engines (domains and relation rows are bitsets; support checks are
+//! engines (domains and relation rows are bit rows; support checks are
 //! word-wise AND + any-nonzero).
+//!
+//! Two types share one representation:
+//! * [`BitSet`] — an owning, growable-capacity bitset.
+//! * [`Bits`] — a borrowed, `Copy` view over a word slice.  This is the
+//!   currency of the flat-arena layout: domain rows live in one
+//!   contiguous [`crate::core::DomainPlane`] buffer and relation rows in
+//!   one packed buffer per direction, so accessors hand out `Bits` views
+//!   instead of `&BitSet`.
 //!
 //! The hot operations (`intersects`, `intersect_count`, `and_assign`) are
 //! branch-light loops over the word slice so LLVM auto-vectorises them.
@@ -12,14 +20,15 @@ pub struct BitSet {
     words: Vec<u64>,
 }
 
+/// Words needed to hold `len` bits.
 #[inline]
-fn word_count(len: usize) -> usize {
+pub fn words_for(len: usize) -> usize {
     (len + 63) / 64
 }
 
 /// Mask selecting the valid bits of the final word.
 #[inline]
-fn tail_mask(len: usize) -> u64 {
+pub fn tail_mask(len: usize) -> u64 {
     let r = len % 64;
     if r == 0 {
         !0
@@ -28,15 +37,100 @@ fn tail_mask(len: usize) -> u64 {
     }
 }
 
+/// A borrowed view of `len` bits over a `u64` word slice (tail bits
+/// beyond `len` are guaranteed clear by every producer in this crate).
+#[derive(Clone, Copy)]
+pub struct Bits<'a> {
+    len: usize,
+    words: &'a [u64],
+}
+
+impl<'a> Bits<'a> {
+    /// View `len` bits over `words` (must be exactly `words_for(len)`).
+    #[inline]
+    pub fn new(len: usize, words: &'a [u64]) -> Bits<'a> {
+        debug_assert_eq!(words.len(), words_for(len));
+        Bits { len, words }
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    #[inline]
+    pub fn words(&self) -> &'a [u64] {
+        self.words
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize) -> bool {
+        debug_assert!(i < self.len);
+        (self.words[i / 64] >> (i % 64)) & 1 == 1
+    }
+
+    /// Number of set bits.
+    #[inline]
+    pub fn count(&self) -> usize {
+        self.words.iter().map(|w| w.count_ones() as usize).sum()
+    }
+
+    /// True iff no bit is set.
+    #[inline]
+    pub fn none(&self) -> bool {
+        self.words.iter().all(|&w| w == 0)
+    }
+
+    /// True iff `self & other` has any set bit — the support test.
+    #[inline]
+    pub fn intersects(self, other: Bits<'_>) -> bool {
+        debug_assert_eq!(self.len, other.len);
+        self.words.iter().zip(other.words).any(|(&a, &b)| a & b != 0)
+    }
+
+    /// Index of the lowest set bit, if any.
+    #[inline]
+    pub fn first(&self) -> Option<usize> {
+        for (wi, &w) in self.words.iter().enumerate() {
+            if w != 0 {
+                return Some(wi * 64 + w.trailing_zeros() as usize);
+            }
+        }
+        None
+    }
+
+    /// Iterate indices of set bits in ascending order.
+    #[inline]
+    pub fn iter_ones(&self) -> OnesIter<'a> {
+        OnesIter::over(self.words)
+    }
+
+    /// Copy the set bits into a Vec (convenience for tests / tracing).
+    pub fn to_vec(&self) -> Vec<usize> {
+        self.iter_ones().collect()
+    }
+}
+
+impl std::fmt::Debug for Bits<'_> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Bits{{len:{}, ones:{:?}}}", self.len, self.to_vec())
+    }
+}
+
 impl BitSet {
     /// All-zeros bitset of capacity `len` bits.
     pub fn zeros(len: usize) -> Self {
-        BitSet { len, words: vec![0; word_count(len)] }
+        BitSet { len, words: vec![0; words_for(len)] }
     }
 
     /// All-ones bitset of capacity `len` bits.
     pub fn ones(len: usize) -> Self {
-        let mut s = BitSet { len, words: vec![!0u64; word_count(len)] };
+        let mut s = BitSet { len, words: vec![!0u64; words_for(len)] };
         if let Some(last) = s.words.last_mut() {
             *last &= tail_mask(len);
         }
@@ -166,9 +260,15 @@ impl BitSet {
         None
     }
 
+    /// Borrowed [`Bits`] view of this set.
+    #[inline]
+    pub fn bits(&self) -> Bits<'_> {
+        Bits { len: self.len, words: &self.words }
+    }
+
     /// Iterate indices of set bits in ascending order.
     pub fn iter_ones(&self) -> OnesIter<'_> {
-        OnesIter { set: self, wi: 0, cur: self.words.first().copied().unwrap_or(0) }
+        OnesIter::over(&self.words)
     }
 
     /// Copy the set bits into a Vec (convenience for tests / tracing).
@@ -183,11 +283,18 @@ impl std::fmt::Debug for BitSet {
     }
 }
 
-/// Iterator over set-bit indices.
+/// Iterator over set-bit indices of a word slice.
 pub struct OnesIter<'a> {
-    set: &'a BitSet,
+    words: &'a [u64],
     wi: usize,
     cur: u64,
+}
+
+impl<'a> OnesIter<'a> {
+    #[inline]
+    fn over(words: &'a [u64]) -> OnesIter<'a> {
+        OnesIter { words, wi: 0, cur: words.first().copied().unwrap_or(0) }
+    }
 }
 
 impl<'a> Iterator for OnesIter<'a> {
@@ -202,10 +309,10 @@ impl<'a> Iterator for OnesIter<'a> {
                 return Some(self.wi * 64 + b);
             }
             self.wi += 1;
-            if self.wi >= self.set.words.len() {
+            if self.wi >= self.words.len() {
                 return None;
             }
-            self.cur = self.set.words[self.wi];
+            self.cur = self.words[self.wi];
         }
     }
 }
@@ -284,5 +391,31 @@ mod tests {
         let b = BitSet::from_indices(80, [70]);
         a.or_assign(&b);
         assert_eq!(a.to_vec(), vec![1, 70]);
+    }
+
+    #[test]
+    fn bits_view_mirrors_owner() {
+        let s = BitSet::from_indices(130, [0, 64, 129]);
+        let v = s.bits();
+        assert_eq!(v.len(), 130);
+        assert_eq!(v.count(), 3);
+        assert!(v.get(64) && !v.get(65));
+        assert_eq!(v.first(), Some(0));
+        assert_eq!(v.to_vec(), s.to_vec());
+        assert!(!v.none());
+        let empty = BitSet::zeros(130);
+        assert!(empty.bits().none());
+        assert!(v.intersects(s.bits()));
+        assert!(!v.intersects(empty.bits()));
+    }
+
+    #[test]
+    fn bits_over_raw_words() {
+        let words = [0b1010u64, 0b1];
+        let v = Bits::new(65, &words);
+        assert_eq!(v.to_vec(), vec![1, 3, 64]);
+        assert_eq!(words_for(65), 2);
+        assert_eq!(tail_mask(65), 1);
+        assert_eq!(tail_mask(64), !0);
     }
 }

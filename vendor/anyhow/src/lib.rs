@@ -1,0 +1,161 @@
+//! Offline stand-in for the `anyhow` crate.
+//!
+//! The vendored crate set has no registry access, so this crate provides
+//! the small slice of anyhow's API the repo uses — `Error`, `Result`,
+//! `anyhow!`, `bail!`, and the `Context` extension trait — backed by a
+//! plain string context chain.  Semantics match anyhow where it matters
+//! here: `Display` shows the outermost context, `{:#}` (alternate) shows
+//! the whole chain joined by `": "`, and `?` converts any
+//! `std::error::Error` via the blanket `From` impl.
+
+use std::fmt;
+
+/// A context-chained error.  The last element of `chain` is the
+/// outermost (most recently attached) context.
+pub struct Error {
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Construct from a printable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { chain: vec![message.to_string()] }
+    }
+
+    /// Attach an outer context layer.
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Error {
+        self.chain.push(context.to_string());
+        self
+    }
+
+    /// The outermost message.
+    fn outer(&self) -> &str {
+        self.chain.last().map(String::as_str).unwrap_or("")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            // `{:#}`: outermost context first, then each cause.
+            for (i, layer) in self.chain.iter().rev().enumerate() {
+                if i > 0 {
+                    write!(f, ": ")?;
+                }
+                write!(f, "{layer}")?;
+            }
+            Ok(())
+        } else {
+            write!(f, "{}", self.outer())
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.outer())?;
+        if self.chain.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for layer in self.chain.iter().rev().skip(1) {
+                write!(f, "\n    {layer}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error::msg(e)
+    }
+}
+
+/// `anyhow::Result<T>` — `Result` with [`Error`] as the default error.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Extension trait adding `.context(...)` / `.with_context(...)` to
+/// `Result` and `Option`.
+pub trait Context<T> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T, Error>;
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E: Into<Error>> Context<T> for Result<T, E> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| e.into().context(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] built from a format string.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> Result<String> {
+        let text = std::fs::read_to_string("/definitely/not/a/file")
+            .with_context(|| "reading config".to_string())?;
+        Ok(text)
+    }
+
+    #[test]
+    fn context_chain_renders_outer_first() {
+        let err = io_fail().unwrap_err();
+        assert_eq!(format!("{err}"), "reading config");
+        let full = format!("{err:#}");
+        assert!(full.starts_with("reading config: "), "{full}");
+    }
+
+    #[test]
+    fn option_context_and_macros() {
+        let none: Option<u32> = None;
+        let err = none.context("missing value").unwrap_err();
+        assert_eq!(format!("{err}"), "missing value");
+
+        fn bails() -> Result<()> {
+            bail!("bad state {}", 7);
+        }
+        assert_eq!(format!("{}", bails().unwrap_err()), "bad state 7");
+        let e = anyhow!("x = {}", 1).context("outer");
+        assert_eq!(format!("{e:#}"), "outer: x = 1");
+    }
+}
