@@ -1,7 +1,8 @@
 //! `cargo bench` target for the native RTAC family: sequential dense vs
-//! Prop.-2 incremental vs thread-parallel plane sweeps, on the scaled
-//! grid.  Writes `BENCH_rtac.json` next to the working directory (set
-//! `RTAC_BENCH_JSON` to move it, empty to disable).
+//! Prop.-2 incremental vs pooled parallel plane sweeps (and the
+//! scoped-spawn baseline), on the scaled grid, plus the batched-SAC
+//! comparison cell.  Writes `BENCH_rtac.json` next to the working
+//! directory (set `RTAC_BENCH_JSON` to move it, empty to disable).
 
 use rtac::bench::rtac_bench;
 
@@ -13,10 +14,14 @@ fn main() {
     );
     let results = rtac_bench::run(&spec, rtac_bench::ENGINES);
     println!("{}", rtac_bench::render(&results, rtac_bench::ENGINES));
+    let sac = rtac_bench::sac_probe_comparison(&spec, 4);
+    if let Some(c) = &sac {
+        println!("{}", rtac_bench::render_sac(c));
+    }
 
     let path = std::env::var("RTAC_BENCH_JSON").unwrap_or_else(|_| "BENCH_rtac.json".to_string());
     if !path.is_empty() {
-        let json = rtac_bench::to_json(&spec, &results);
+        let json = rtac_bench::to_json(&spec, &results, sac.as_ref());
         match std::fs::write(&path, json.to_string()) {
             Ok(()) => eprintln!("wrote {path}"),
             Err(e) => eprintln!("writing {path}: {e}"),

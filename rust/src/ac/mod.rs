@@ -1,6 +1,7 @@
 //! Arc consistency engines.
 //!
-//! Five interchangeable implementations behind the [`Propagator`] trait:
+//! Six interchangeable AC implementations behind the [`Propagator`]
+//! trait, plus the SAC family layered on top:
 //!
 //! * [`ac3::Ac3`] — the paper's baseline: queue of directed arcs,
 //!   value-by-value support scan (pluggable queue ordering).
@@ -10,14 +11,31 @@
 //!   one `AND`+`any` per value instead of a value loop.
 //! * [`rtac::RtacNative`] — the paper's contribution in native form:
 //!   synchronous Jacobi-style sweeps of Eq. 1 (exactly what the tensor
-//!   path computes), dense or Prop.-2 incremental.  Counts
-//!   `#Recurrence`; the queue engines count `#Revision`.
-//! * [`rtac_par::RtacParallel`] — the same dense recurrence with each
-//!   sweep partitioned across threads over the flat domain-plane arena
-//!   (`rtac-par` auto-sizes, `rtac-parN` pins N workers).  Bit-identical
-//!   to `rtac` in closure, outcome and `#Recurrence`.
+//!   path computes), dense (`rtac`) or Prop.-2 incremental
+//!   (`rtac-inc`).  Counts `#Recurrence`; the queue engines count
+//!   `#Revision`.
+//! * [`rtac_par::RtacParallel`] — the same recurrence with each sweep
+//!   partitioned across a **persistent worker pool**
+//!   ([`crate::exec::WorkerPool`]) over the flat domain-plane arena:
+//!   `rtac-par[N]` dense, `rtac-par-inc[N]` with the Prop.-2
+//!   incremental candidate set (per-chunk changed lists merged at the
+//!   sweep barrier like counters).  `rtac-par-scoped[N]` keeps the old
+//!   per-sweep `std::thread::scope` spawning purely as the bench
+//!   baseline the pool amortises away.  All bit-identical to `rtac`
+//!   in closure, outcome and `#Recurrence`.
+//! * [`sac::Sac1`] / [`sac::SacParallel`] — singleton arc consistency,
+//!   a *stronger* consistency: `sac` / `sac-rtac` probe sequentially,
+//!   `sac-par[N]` runs N probes concurrently on the pool, each on a
+//!   scratch plane pair checked out of a
+//!   [`crate::core::PlaneSlab`].  Not interchangeable with the AC
+//!   engines in closure-equality tests, but plugs into the same
+//!   solver for stronger-but-costlier propagation.
 //!
-//! All engines compute the same unique closure (Prop. 1) — asserted
+//! Engine names take an optional worker-count suffix (`rtac-par4`,
+//! `sac-par2`); the bare name auto-sizes.  A `0` suffix is rejected at
+//! parse time — a zero-worker engine could never make progress.
+//!
+//! All AC engines compute the same unique closure (Prop. 1) — asserted
 //! pairwise by integration tests on random instances.
 
 pub mod ac2001;
@@ -91,6 +109,26 @@ pub trait Propagator {
     fn reset(&mut self, _problem: &Problem) {}
 }
 
+/// Parse the worker-count suffix of an engine name like `rtac-par4`
+/// (`prefix` = `"rtac-par"`).  Empty suffix = 0 = auto-size.  An
+/// explicit `0` is rejected here, at parse time: a zero-worker engine
+/// could never run a sweep or a probe, so constructing one would only
+/// defer the failure to the first enforcement.
+fn parse_worker_suffix(name: &str, prefix: &str) -> Result<usize, String> {
+    let suffix = &name[prefix.len()..];
+    if suffix.is_empty() {
+        return Ok(0); // auto
+    }
+    match suffix.parse::<usize>() {
+        Ok(0) => Err(format!(
+            "engine {name:?}: 0 workers is not runnable — use {prefix:?} for an \
+             auto-sized pool or {prefix}N with N >= 1"
+        )),
+        Ok(w) => Ok(w),
+        Err(_) => Err(format!("bad worker count in engine name {name:?}")),
+    }
+}
+
 /// Engine selection by name (CLI / bench wiring).
 pub fn make_engine(name: &str) -> Result<Box<dyn Propagator>, String> {
     match name {
@@ -106,29 +144,84 @@ pub fn make_engine(name: &str) -> Result<Box<dyn Propagator>, String> {
         // solver for stronger-but-costlier propagation.
         "sac" => Ok(Box::new(sac::Sac1::new(ac3bit::Ac3Bit::new()))),
         "sac-rtac" => Ok(Box::new(sac::Sac1::new(rtac::RtacNative::incremental()))),
-        // "rtac-par" = auto worker count; "rtac-parN" pins N workers.
+        // Pool-backed engines: bare name = auto worker count, an `N`
+        // suffix pins N workers.  Longest prefix first — `rtac-par4`
+        // must not shadow `rtac-par-inc4`.
+        other if other.starts_with("rtac-par-inc") => {
+            let workers = parse_worker_suffix(other, "rtac-par-inc")?;
+            Ok(Box::new(rtac_par::RtacParallel::incremental(workers)))
+        }
+        other if other.starts_with("rtac-par-scoped") => {
+            let workers = parse_worker_suffix(other, "rtac-par-scoped")?;
+            Ok(Box::new(rtac_par::RtacParallel::scoped_spawn(workers)))
+        }
         other if other.starts_with("rtac-par") => {
-            let suffix = &other["rtac-par".len()..];
-            let workers = if suffix.is_empty() {
-                0
-            } else {
-                suffix
-                    .parse::<usize>()
-                    .ok()
-                    .filter(|&w| w >= 1)
-                    .ok_or_else(|| format!("bad worker count in engine name {other:?}"))?
-            };
+            let workers = parse_worker_suffix(other, "rtac-par")?;
             Ok(Box::new(rtac_par::RtacParallel::new(workers)))
         }
+        other if other.starts_with("sac-par") => {
+            let workers = parse_worker_suffix(other, "sac-par")?;
+            Ok(Box::new(sac::SacParallel::new(workers)))
+        }
         other => Err(format!(
-            "unknown engine {other:?} (try ac3 | ac3-lifo | ac3-dom | ac2001 | ac3bit | rtac | rtac-inc | rtac-par[N] | sac | sac-rtac)"
+            "unknown engine {other:?} (try ac3 | ac3-lifo | ac3-dom | ac2001 | ac3bit | rtac | \
+             rtac-inc | rtac-par[N] | rtac-par-inc[N] | sac | sac-rtac | sac-par[N])"
         )),
     }
 }
 
-/// All engine names (for cross-engine agreement tests and benches).
-/// `rtac-par` auto-sizes its workers (inline below ~16 vars/worker), so
-/// the small agreement-test instances stay cheap; pinned-worker
-/// bit-identity lives in `rtac_par`'s property suite.
-pub const ALL_ENGINES: &[&str] =
-    &["ac3", "ac3-lifo", "ac3-dom", "ac2001", "ac3bit", "rtac", "rtac-inc", "rtac-par"];
+/// All AC engine names (for cross-engine agreement tests and benches;
+/// SAC engines are excluded — they compute a stronger closure).
+/// The pool engines auto-size their workers (inline below ~16
+/// vars/worker), so the small agreement-test instances stay cheap;
+/// pinned-worker bit-identity lives in `rtac_par`'s property suite.
+pub const ALL_ENGINES: &[&str] = &[
+    "ac3",
+    "ac3-lifo",
+    "ac3-dom",
+    "ac2001",
+    "ac3bit",
+    "rtac",
+    "rtac-inc",
+    "rtac-par",
+    "rtac-par-inc",
+];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_worker_engine_names_rejected_at_parse_time() {
+        for name in ["rtac-par0", "rtac-par-inc0", "rtac-par-scoped0", "sac-par0"] {
+            let err = make_engine(name).err().unwrap_or_else(|| {
+                panic!("{name} must be rejected at parse time")
+            });
+            assert!(err.contains("0 workers"), "{name}: unhelpful error {err:?}");
+        }
+    }
+
+    #[test]
+    fn pool_engine_names_parse_with_and_without_counts() {
+        for name in
+            ["rtac-par", "rtac-par3", "rtac-par-inc", "rtac-par-inc2", "rtac-par-scoped2",
+             "sac-par", "sac-par4"]
+        {
+            assert!(make_engine(name).is_ok(), "{name} must parse");
+        }
+        assert!(make_engine("rtac-parx").is_err());
+        assert!(make_engine("sac-par-1").is_err());
+    }
+
+    #[test]
+    fn engine_names_self_report() {
+        for (name, reported) in [
+            ("rtac-par2", "rtac-par"),
+            ("rtac-par-inc2", "rtac-par-inc"),
+            ("rtac-par-scoped2", "rtac-par-scoped"),
+            ("sac-par2", "sac-par"),
+        ] {
+            assert_eq!(make_engine(name).unwrap().name(), reported);
+        }
+    }
+}

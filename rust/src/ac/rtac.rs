@@ -25,6 +25,36 @@
 use crate::ac::{Counters, Outcome, Propagator};
 use crate::core::{DomainPlane, Problem, State, VarId};
 
+/// Derive the Prop.-2 candidate set for a sweep: reset the previously
+/// set `affected` flags (named exactly by `affected_list` — the
+/// invariant every caller maintains), then flag each neighbour of a
+/// variable whose domain changed in the previous sweep.
+///
+/// Shared by every engine that implements the incremental recurrence
+/// ([`RtacNative`], [`super::rtac_par::RtacParallel`], and the batched
+/// SAC probe fixpoint in `super::sac`), so the candidate-set semantics
+/// cannot silently diverge between them.
+pub(crate) fn derive_affected(
+    problem: &Problem,
+    changed: &[VarId],
+    affected: &mut [bool],
+    affected_list: &mut Vec<VarId>,
+) {
+    for &v in affected_list.iter() {
+        affected[v] = false;
+    }
+    affected_list.clear();
+    for &v in changed {
+        for &arc in problem.arcs_of(v) {
+            let other = problem.arc_other(arc);
+            if !affected[other] {
+                affected[other] = true;
+                affected_list.push(other);
+            }
+        }
+    }
+}
+
 /// The native recurrent engine.
 pub struct RtacNative {
     incremental: bool,
@@ -73,6 +103,11 @@ impl RtacNative {
     }
 
     /// One synchronous sweep.  Returns the first wiped variable, if any.
+    ///
+    /// Keep the revise loop semantically in sync with
+    /// `super::rtac_par::RtacParallel::revise_chunk` and
+    /// `super::sac::plane_fixpoint` — same support predicate and
+    /// counter accounting, different removal sinks.
     fn sweep(
         &mut self,
         problem: &Problem,
@@ -85,19 +120,12 @@ impl RtacNative {
         // Candidate set: in incremental mode, variables adjacent to a
         // change from the previous sweep; in dense mode, everyone.
         if self.incremental {
-            for &v in &self.affected_list {
-                self.affected[v] = false;
-            }
-            self.affected_list.clear();
-            for &v in &self.changed_list {
-                for &arc in problem.arcs_of(v) {
-                    let other = problem.arc_other(arc);
-                    if !self.affected[other] {
-                        self.affected[other] = true;
-                        self.affected_list.push(other);
-                    }
-                }
-            }
+            derive_affected(
+                problem,
+                &self.changed_list,
+                &mut self.affected,
+                &mut self.affected_list,
+            );
         }
 
         self.scratch_list.clear();

@@ -1,4 +1,5 @@
-//! `RtacParallel` — word-parallel AND thread-parallel RTAC sweeps.
+//! `RtacParallel` — word-parallel AND thread-parallel RTAC sweeps on
+//! the persistent worker pool.
 //!
 //! The paper's core claim is that each recurrence of Eq. 1 is *fully
 //! parallelizable*: every (variable, value) support test of sweep k
@@ -10,34 +11,51 @@
 //!   of `cur` and receives the sweep's removals as word-masked bit
 //!   clears.
 //! * Variables are partitioned into contiguous word ranges
-//!   ([`DomainPlane::partition`]); a `std::thread::scope` spawns one
-//!   worker per chunk, each owning a **disjoint `&mut [u64]` slice** of
-//!   the next plane (`split_at_mut` — no locks, no atomics on the hot
-//!   path).  Support tests stream the packed relation rows against the
-//!   shared `cur` plane.
+//!   ([`DomainPlane::partition`]); each sweep submits one task per
+//!   chunk to a persistent [`WorkerPool`], each task owning a
+//!   **disjoint `&mut [u64]` slice** of the next plane (`split_at_mut`
+//!   — no locks, no atomics on the hot path).  Support tests stream the
+//!   packed relation rows against the shared `cur` plane.  The pool is
+//!   spawned once and reused across every sweep, every enforcement and
+//!   every search node — the number of recurrences is small (3–5), so
+//!   per-sweep thread spawning is pure overhead; the old per-sweep
+//!   `std::thread::scope` path is kept behind
+//!   [`RtacParallel::scoped_spawn`] purely as the bench baseline for
+//!   that claim (`BENCH_rtac.json`'s pooled-vs-scoped row).
 //! * Per-worker [`Counters`] and changed-variable lists are merged at
-//!   sweep end, in chunk order, so every merged quantity is
+//!   the sweep barrier, in chunk order, so every merged quantity is
 //!   deterministic.  A shared wipeout [`AtomicBool`] lets the sweep
 //!   loop abort further recurrences (and skip trail replay past the
 //!   victim) the moment any worker wipes a domain.
+//! * **Prop.-2 incremental candidate set** ([`RtacParallel::incremental`],
+//!   engine name `rtac-par-inc`): sweep k only re-checks variables with
+//!   a neighbour whose domain changed in sweep k−1.  The per-chunk
+//!   changed lists merged at the barrier *are* the paper's `@changed`
+//!   set; the coordinator thread derives the next sweep's `affected`
+//!   flags from them (cheap: O(changed · degree)) and the workers read
+//!   the flags read-only.  Identical removals and sweep counts to the
+//!   dense engine (Prop. 2), strictly fewer support checks.
 //!
 //! # Bit-identity contract
 //!
 //! `RtacParallel` is bit-identical to [`super::rtac::RtacNative::dense`]
 //! in outcome (including the wipeout victim) and `#Recurrence` count
 //! always, and — on consistent enforcements — in closure, trail order,
-//! and every counter, for every worker count (asserted by the property
-//! suite below).  Two design choices make this hold:
+//! and every counter (the incremental mode matches
+//! [`super::rtac::RtacNative::incremental`]'s support-check count
+//! instead of the dense one), for every worker count and spawn mode
+//! (asserted by the property suite below).  Two design choices make
+//! this hold:
 //!
 //! 1. Workers always complete their full chunk from the shared
 //!    snapshot; the wipeout flag is consulted only *between* sweeps.
 //!    Aborting mid-sweep would save a little work but make the victim
 //!    (and the trail) depend on thread scheduling.
 //! 2. Removals are replayed into the search [`State`] by the
-//!    coordinator thread after the join, in ascending (variable, value)
-//!    order — exactly the order the sequential dense sweep produces —
-//!    so `pop_level` restores identically and `dom/wdeg` heuristics see
-//!    the same victims.
+//!    coordinator thread after the barrier, in ascending (variable,
+//!    value) order — exactly the order the sequential dense sweep
+//!    produces — so `pop_level` restores identically and `dom/wdeg`
+//!    heuristics see the same victims.
 //!
 //! On a *wipeout* sweep the replay deliberately stops at the victim
 //! (the sequential engine finishes applying that sweep's removals),
@@ -47,8 +65,10 @@
 
 use std::sync::atomic::{AtomicBool, Ordering};
 
+use crate::ac::rtac::derive_affected;
 use crate::ac::{Counters, Outcome, Propagator};
 use crate::core::{DomainPlane, PlaneChunk, Problem, State, VarId};
+use crate::exec::WorkerPool;
 
 /// Result of one worker's chunk revision.
 #[derive(Default)]
@@ -58,30 +78,72 @@ struct ChunkOut {
     support_checks: u64,
 }
 
-/// The thread-parallel recurrent engine (dense sweeps only — the
-/// incremental candidate set is inherently sequential bookkeeping; see
-/// [`super::rtac::RtacNative::incremental`] for Prop. 2).
+/// How sweep tasks reach the worker threads.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum SpawnMode {
+    /// Persistent [`WorkerPool`], spawned once per engine (default).
+    Pooled,
+    /// Per-sweep `std::thread::scope` — the pre-pool behaviour, kept
+    /// only as the bench baseline for spawn-overhead amortisation.
+    Scoped,
+}
+
+/// The thread-parallel recurrent engine (dense sweeps, or Prop.-2
+/// incremental via [`RtacParallel::incremental`]).
 pub struct RtacParallel {
     /// Requested worker count; 0 = auto (available parallelism, scaled
-    /// down for small networks where spawn overhead would dominate).
+    /// down for small networks where per-sweep coordination dominates).
     workers: usize,
+    incremental: bool,
+    spawn: SpawnMode,
+    pool: Option<WorkerPool>,
     cur: DomainPlane,
     next: DomainPlane,
     chunks: Vec<PlaneChunk>,
     /// Worker count the current `chunks` were planned for.
     planned_workers: usize,
+    /// Vars whose domain changed in the previous sweep (incremental
+    /// mode only) — the merged per-chunk changed lists.
+    changed_list: Vec<VarId>,
+    /// Prop.-2 candidate flags for the coming sweep, derived from
+    /// `changed_list`; workers read them immutably.
+    affected: Vec<bool>,
+    affected_list: Vec<VarId>,
 }
 
 impl RtacParallel {
-    /// `workers == 0` picks a count automatically; an explicit count is
-    /// honoured exactly (the property tests rely on that).
+    /// Dense sweeps on the persistent pool.  `workers == 0` picks a
+    /// count automatically; an explicit count is honoured exactly (the
+    /// property tests rely on that).
     pub fn new(workers: usize) -> RtacParallel {
+        Self::with_mode(workers, false, SpawnMode::Pooled)
+    }
+
+    /// Prop.-2 incremental candidate set on the persistent pool
+    /// (`rtac-par-inc`).
+    pub fn incremental(workers: usize) -> RtacParallel {
+        Self::with_mode(workers, true, SpawnMode::Pooled)
+    }
+
+    /// Dense sweeps with per-sweep scoped spawning — the bench baseline
+    /// the pool amortises away (`rtac-par-scoped`).
+    pub fn scoped_spawn(workers: usize) -> RtacParallel {
+        Self::with_mode(workers, false, SpawnMode::Scoped)
+    }
+
+    fn with_mode(workers: usize, incremental: bool, spawn: SpawnMode) -> RtacParallel {
         RtacParallel {
             workers,
+            incremental,
+            spawn,
+            pool: None,
             cur: DomainPlane::empty(),
             next: DomainPlane::empty(),
             chunks: Vec::new(),
             planned_workers: 0,
+            changed_list: Vec::new(),
+            affected: Vec::new(),
+            affected_list: Vec::new(),
         }
     }
 
@@ -91,8 +153,8 @@ impl RtacParallel {
             return self.workers.max(1);
         }
         let hw = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
-        // auto mode: at least ~16 variables per worker, else the scoped
-        // spawns cost more than the sweep
+        // auto mode: at least ~16 variables per worker, else the
+        // per-sweep coordination costs more than the sweep
         hw.min((n / 16).max(1))
     }
 
@@ -108,21 +170,49 @@ impl RtacParallel {
             self.chunks = self.cur.partition(k);
             self.planned_workers = k;
         }
+        // The pool outlives plane re-plans, resets and problem changes:
+        // it is only (re)spawned when the worker count itself changes.
+        if self.spawn == SpawnMode::Pooled && k > 1 {
+            let need = match &self.pool {
+                Some(p) => p.size() != k,
+                None => true,
+            };
+            if need {
+                self.pool = Some(WorkerPool::new(k));
+            }
+        }
+    }
+
+    /// Derive the Prop.-2 `affected` flags for the coming sweep from
+    /// the previous sweep's merged changed list.
+    fn compute_affected(&mut self, problem: &Problem) {
+        derive_affected(problem, &self.changed_list, &mut self.affected, &mut self.affected_list);
     }
 
     /// Revise every variable of `chunk` against the `cur` snapshot,
     /// clearing unsupported bits in `slice` (the chunk's disjoint window
-    /// of the next plane).  Pure function of the snapshot — safe to run
-    /// on any thread.
+    /// of the next plane).  In incremental mode only variables flagged
+    /// in `affected` are re-checked.  Pure function of the snapshot —
+    /// safe to run on any thread.
+    ///
+    /// Keep the revise loop semantically in sync with
+    /// `RtacNative::sweep` and `sac::plane_fixpoint` — same support
+    /// predicate and counter accounting, different removal sinks.
     fn revise_chunk(
         problem: &Problem,
         cur: &DomainPlane,
         chunk: PlaneChunk,
         slice: &mut [u64],
         wipeout: &AtomicBool,
+        affected: Option<&[bool]>,
     ) -> ChunkOut {
         let mut out = ChunkOut::default();
         for x in chunk.var_start..chunk.var_end {
+            if let Some(flags) = affected {
+                if !flags[x] {
+                    continue;
+                }
+            }
             let base = cur.offset(x) - chunk.word_start;
             let mut x_changed = false;
             'vals: for a in cur.bits(x).iter_ones() {
@@ -153,9 +243,11 @@ impl RtacParallel {
         self.next.copy_words_from(&self.cur);
         let cur = &self.cur;
         let chunks = &self.chunks;
+        let affected: Option<&[bool]> =
+            if self.incremental { Some(self.affected.as_slice()) } else { None };
         let slices = split_windows(self.next.words_mut(), chunks);
         // Empty chunks (more workers than variables) revise nothing:
-        // don't pay a thread spawn for them.
+        // don't pay a task submission for them.
         let work: Vec<(PlaneChunk, &mut [u64])> = chunks
             .iter()
             .copied()
@@ -164,24 +256,38 @@ impl RtacParallel {
             .collect();
 
         if work.len() <= 1 {
-            // single (or no) worker: skip the thread scope entirely
+            // single (or no) worker: skip the threads entirely
             return work
                 .into_iter()
-                .map(|(chunk, slice)| Self::revise_chunk(problem, cur, chunk, slice, wipeout))
+                .map(|(chunk, slice)| {
+                    Self::revise_chunk(problem, cur, chunk, slice, wipeout, affected)
+                })
                 .collect();
         }
 
-        std::thread::scope(|scope| {
-            let handles: Vec<_> = work
-                .into_iter()
-                .map(|(chunk, slice)| {
-                    scope.spawn(move || {
-                        Self::revise_chunk(problem, cur, chunk, slice, wipeout)
+        match self.spawn {
+            SpawnMode::Pooled => {
+                let pool = self.pool.as_mut().expect("pool sized in ensure_planes");
+                let tasks: Vec<_> = work
+                    .into_iter()
+                    .map(|(chunk, slice)| {
+                        move || Self::revise_chunk(problem, cur, chunk, slice, wipeout, affected)
                     })
-                })
-                .collect();
-            handles.into_iter().map(|h| h.join().expect("sweep worker panicked")).collect()
-        })
+                    .collect();
+                pool.run_collect(tasks)
+            }
+            SpawnMode::Scoped => std::thread::scope(|scope| {
+                let handles: Vec<_> = work
+                    .into_iter()
+                    .map(|(chunk, slice)| {
+                        scope.spawn(move || {
+                            Self::revise_chunk(problem, cur, chunk, slice, wipeout, affected)
+                        })
+                    })
+                    .collect();
+                handles.into_iter().map(|h| h.join().expect("sweep worker panicked")).collect()
+            }),
+        }
     }
 }
 
@@ -202,40 +308,74 @@ fn split_windows<'a>(mut words: &'a mut [u64], chunks: &[PlaneChunk]) -> Vec<&'a
 
 impl Propagator for RtacParallel {
     fn name(&self) -> &'static str {
-        "rtac-par"
+        match (self.incremental, self.spawn) {
+            (true, _) => "rtac-par-inc",
+            (false, SpawnMode::Pooled) => "rtac-par",
+            (false, SpawnMode::Scoped) => "rtac-par-scoped",
+        }
     }
 
     fn reset(&mut self, _problem: &Problem) {
         // force a re-plan on the next enforce (worker count may differ
-        // between problems in auto mode)
+        // between problems in auto mode) — but KEEP the worker pool:
+        // surviving reset is the whole point of the persistent runtime
+        // (MAC calls reset once per solve, then enforces per node).
         self.cur = DomainPlane::empty();
         self.next = DomainPlane::empty();
         self.chunks.clear();
         self.planned_workers = 0;
+        self.changed_list.clear();
+        self.affected.clear();
+        self.affected_list.clear();
     }
 
     fn enforce(
         &mut self,
         problem: &Problem,
         state: &mut State,
-        _touched: &[VarId], // dense recurrence: the whole plane each sweep
+        touched: &[VarId], // dense recurrence ignores this; incremental seeds from it
         counters: &mut Counters,
     ) -> Outcome {
+        let n = problem.n_vars();
         self.ensure_planes(state);
         self.cur.copy_words_from(state.plane());
+        if self.incremental {
+            // Seed the changed set: the paper's initial `@changed`
+            // queue, exactly as RtacNative::incremental seeds it.
+            self.changed_list.clear();
+            if touched.is_empty() {
+                self.changed_list.extend(0..n);
+            } else {
+                self.changed_list.extend_from_slice(touched);
+            }
+            if self.affected.len() != n {
+                self.affected.clear();
+                self.affected.resize(n, false);
+                self.affected_list.clear();
+            }
+        }
         loop {
             counters.recurrences += 1;
+            if self.incremental {
+                self.compute_affected(problem);
+            }
             let wipeout = AtomicBool::new(false);
             let outs = self.sweep(problem, &wipeout);
             let wiped_somewhere = wipeout.load(Ordering::Relaxed);
 
-            // Merge at sweep end, in chunk order.  All support checks
+            // Merge at the barrier, in chunk order.  All support checks
             // were performed regardless of where a wipeout lands, so
             // account for every chunk before the replay can early-out.
             counters.support_checks += outs.iter().map(|o| o.support_checks).sum::<u64>();
             // Trail replay in ascending (var, value) order — identical
-            // to the sequential dense sweep's removal order.
+            // to the sequential dense sweep's removal order.  The
+            // concatenated per-chunk changed lists (ascending within a
+            // chunk, chunks ordered) double as the next sweep's
+            // `@changed` set in incremental mode.
             let mut any_changed = false;
+            if self.incremental {
+                self.changed_list.clear();
+            }
             for out in &outs {
                 for &x in &out.changed {
                     any_changed = true;
@@ -251,6 +391,9 @@ impl Propagator for RtacParallel {
                         // Later chunks' removals are not replayed — the
                         // search pops this level immediately.
                         return Outcome::Wipeout(x);
+                    }
+                    if self.incremental {
+                        self.changed_list.push(x);
                     }
                 }
             }
@@ -321,6 +464,76 @@ mod tests {
     }
 
     #[test]
+    fn incremental_parallel_bit_identical_to_both_sequential_modes() {
+        // rtac-par-inc must match dense in closure/outcome/#Recurrence
+        // and rtac-inc in support-check count (same candidate sets).
+        forall("rtac-par-inc-vs-seq", 0x1AC, 24, |rng| {
+            let spec = RandomSpec::new(
+                2 + rng.gen_range(14),
+                1 + rng.gen_range(8),
+                rng.next_f64(),
+                rng.next_f64() * 0.9,
+                rng.next_u64(),
+            );
+            let p = random_csp(&spec);
+            let (o_dense, s_dense, c_dense) = enforce_with(&mut RtacNative::dense(), &p, &[]);
+            let (_, _, c_inc) = enforce_with(&mut RtacNative::incremental(), &p, &[]);
+            for workers in [1usize, 2, 4] {
+                let (o, s, c) = enforce_with(&mut RtacParallel::incremental(workers), &p, &[]);
+                if o != o_dense {
+                    return Err(format!("{workers}w: outcome {o:?} vs {o_dense:?} on {spec:?}"));
+                }
+                if c.recurrences != c_dense.recurrences {
+                    return Err(format!(
+                        "{workers}w: {} recurrences vs {} on {spec:?}",
+                        c.recurrences, c_dense.recurrences
+                    ));
+                }
+                if o_dense.is_consistent() {
+                    if s.snapshot() != s_dense.snapshot() {
+                        return Err(format!("{workers}w: closure mismatch on {spec:?}"));
+                    }
+                    if c.removals != c_dense.removals {
+                        return Err(format!("{workers}w: removal count mismatch on {spec:?}"));
+                    }
+                    if c.support_checks != c_inc.support_checks {
+                        return Err(format!(
+                            "{workers}w: {} support checks vs rtac-inc's {} on {spec:?}",
+                            c.support_checks, c_inc.support_checks
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn scoped_and_pooled_spawn_modes_identical() {
+        // the bench baseline must stay bit-identical to the pooled
+        // engine — only the spawn mechanism differs.
+        forall("rtac-par-scoped-vs-pooled", 0x5C0, 16, |rng| {
+            let spec = RandomSpec::new(
+                3 + rng.gen_range(12),
+                2 + rng.gen_range(6),
+                rng.next_f64(),
+                rng.next_f64() * 0.8,
+                rng.next_u64(),
+            );
+            let p = random_csp(&spec);
+            let (o1, s1, c1) = enforce_with(&mut RtacParallel::new(3), &p, &[]);
+            let (o2, s2, c2) = enforce_with(&mut RtacParallel::scoped_spawn(3), &p, &[]);
+            if o1 != o2 || c1.recurrences != c2.recurrences {
+                return Err(format!("spawn modes diverge on {spec:?}"));
+            }
+            if o1.is_consistent() && (s1.snapshot() != s2.snapshot() || c1 != c2) {
+                return Err(format!("spawn-mode closure/counter mismatch on {spec:?}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
     fn trail_replay_order_matches_dense() {
         // Same removals in the same order => identical trail deltas.
         forall("rtac-par-trail-order", 0x7A11, 16, |rng| {
@@ -340,12 +553,14 @@ mod tests {
                 (out.is_consistent(), s.removals_since(mark).to_vec())
             };
             let (ok_ref, trail_ref) = run(&mut RtacNative::dense());
-            let (ok_par, trail_par) = run(&mut RtacParallel::new(3));
-            if ok_ref != ok_par {
-                return Err(format!("outcome mismatch on {spec:?}"));
-            }
-            if ok_ref && trail_ref != trail_par {
-                return Err(format!("trail order mismatch on {spec:?}"));
+            for engine in [&mut RtacParallel::new(3), &mut RtacParallel::incremental(3)] {
+                let (ok_par, trail_par) = run(engine);
+                if ok_ref != ok_par {
+                    return Err(format!("outcome mismatch on {spec:?}"));
+                }
+                if ok_ref && trail_ref != trail_par {
+                    return Err(format!("trail order mismatch on {spec:?}"));
+                }
             }
             Ok(())
         });
@@ -384,12 +599,16 @@ mod tests {
         let mut c1 = Counters::default();
         let o1 = RtacNative::dense().enforce(&p, &mut s1, &[], &mut c1);
         for workers in [1usize, 2, 4] {
-            let mut s2 = State::new(&p);
-            prep(&mut s2);
-            let mut c2 = Counters::default();
-            let o2 = RtacParallel::new(workers).enforce(&p, &mut s2, &[], &mut c2);
-            assert_eq!(o1, o2, "{workers} workers");
-            assert_eq!(c1.recurrences, c2.recurrences, "{workers} workers");
+            for engine in
+                [&mut RtacParallel::new(workers), &mut RtacParallel::incremental(workers)]
+            {
+                let mut s2 = State::new(&p);
+                prep(&mut s2);
+                let mut c2 = Counters::default();
+                let o2 = engine.enforce(&p, &mut s2, &[], &mut c2);
+                assert_eq!(o1, o2, "{workers} workers ({})", engine.name());
+                assert_eq!(c1.recurrences, c2.recurrences, "{workers} workers");
+            }
         }
         assert!(matches!(o1, Outcome::Wipeout(_)));
     }
@@ -397,6 +616,7 @@ mod tests {
     #[test]
     fn engine_reuse_across_different_problems() {
         // layouts differ (n and widths), planes must re-plan cleanly
+        // while the pool survives the transitions
         let mut engine = RtacParallel::new(2);
         for p in [queens(5), pigeonhole(6, 5), queens(9)] {
             let (o, s, _) = {
@@ -415,6 +635,57 @@ mod tests {
             if o.is_consistent() {
                 assert_eq!(s.snapshot(), s_ref.snapshot(), "{}", p.name());
             }
+        }
+    }
+
+    #[test]
+    fn pooled_back_to_back_enforcements_bit_identical_to_rtac() {
+        // Satellite contract: ONE pool, many consecutive enforcements
+        // (the MAC pattern — root + per-assignment calls + resets) must
+        // stay bit-identical to a fresh sequential dense engine each
+        // time.
+        let p = queens(8);
+        let mut engine = RtacParallel::new(3);
+        for round in 0..3 {
+            // root enforcement
+            let (o, s, c) = {
+                let mut s = State::new(&p);
+                let mut c = Counters::default();
+                let o = engine.enforce(&p, &mut s, &[], &mut c);
+                (o, s, c)
+            };
+            let (o_ref, s_ref, c_ref) = {
+                let mut s = State::new(&p);
+                let mut c = Counters::default();
+                let o = RtacNative::dense().enforce(&p, &mut s, &[], &mut c);
+                (o, s, c)
+            };
+            assert_eq!(o, o_ref, "round {round}");
+            assert_eq!(s.snapshot(), s_ref.snapshot(), "round {round}");
+            assert_eq!(c, c_ref, "round {round}");
+            // assignment-shaped follow-up enforcements on a shared state
+            let mut sp = State::new(&p);
+            let mut sq = State::new(&p);
+            let mut cp = Counters::default();
+            let mut cq = Counters::default();
+            let mut fresh = RtacNative::dense();
+            assert!(engine.enforce(&p, &mut sp, &[], &mut cp).is_consistent());
+            assert!(fresh.enforce(&p, &mut sq, &[], &mut cq).is_consistent());
+            for col in [0usize, 3, 6] {
+                sp.push_level();
+                sq.push_level();
+                sp.assign(0, col);
+                sq.assign(0, col);
+                let op = engine.enforce(&p, &mut sp, &[0], &mut cp);
+                let oq = fresh.enforce(&p, &mut sq, &[0], &mut cq);
+                assert_eq!(op, oq, "round {round} col {col}");
+                if op.is_consistent() {
+                    assert_eq!(sp.snapshot(), sq.snapshot(), "round {round} col {col}");
+                }
+                sp.pop_level();
+                sq.pop_level();
+            }
+            engine.reset(&p); // MAC resets between solves; pool survives
         }
     }
 

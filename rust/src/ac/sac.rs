@@ -1,27 +1,49 @@
 //! Singleton arc consistency (SAC) — a stronger consistency built *on
 //! top of* any [`Propagator`]: value (x, a) is SAC iff the subproblem
 //! with x := a is arc consistent.  This is the natural "next level" the
-//! paper's recurrent formulation extends to (each singleton probe is an
-//! independent enforcement — massively parallel in the tensor setting,
-//! and a natural batch for the coordinator).
+//! paper's recurrent formulation extends to: each singleton probe is an
+//! **independent enforcement** — massively parallel in the tensor
+//! setting, and a natural batch for the coordinator
+//! ([`crate::coordinator::Handle::submit_batch`] is the tensor-route
+//! twin of the CPU batching below).
 //!
-//! Implementation: SAC-1 (Debruyne & Bessière).  Probes run on a scratch
-//! level of the trail; confirmed removals propagate through the inner
-//! engine until a fixpoint over all (var, value) pairs.
+//! Two enforcers:
+//!
+//! * [`Sac1`] — sequential SAC-1 (Debruyne & Bessière) wrapping any
+//!   inner AC engine.  Probes run on a scratch level of the trail;
+//!   confirmed removals propagate through the inner engine until a
+//!   fixpoint over all (var, value) pairs.
+//! * [`SacParallel`] (`sac-par[N]`) — batched SAC-1 on the persistent
+//!   [`WorkerPool`]: K probes run concurrently, each on a private
+//!   scratch plane pair checked out of a [`PlaneSlab`] (one memcpy
+//!   each), with the recurrent fixpoint run directly on the planes (no
+//!   trail — probe domains are discarded).  Sound because probe
+//!   failure is **monotone**: a probe that is AC-inconsistent against
+//!   the batch's launch domains stays inconsistent under the smaller
+//!   domains later removals produce, so every failed probe of a batch
+//!   can be removed; stale *successes* are caught by the outer
+//!   fixpoint loop re-probing until a full pass removes nothing.  The
+//!   SAC closure is unique, so the batched engine reaches bit-the-same
+//!   final domains as [`Sac1`] (property-tested at 1/2/4 workers).
 
+use crate::ac::rtac::{derive_affected, RtacNative};
 use crate::ac::{Counters, Outcome, Propagator};
-use crate::core::{Problem, State, VarId};
+use crate::core::{DomainPlane, PlaneSlab, Problem, State, Val, VarId};
+use crate::exec::WorkerPool;
 
 /// SAC-1 enforcer wrapping an inner AC engine.
 pub struct Sac1<E: Propagator> {
     inner: E,
     /// Probes performed (for the ablation bench).
     pub probes: u64,
+    /// Reusable value-collection buffer — hoisted out of the probe loop
+    /// so the hot path stops allocating one `Vec` per (pass, variable).
+    vals_buf: Vec<usize>,
 }
 
 impl<E: Propagator> Sac1<E> {
     pub fn new(inner: E) -> Sac1<E> {
-        Sac1 { inner, probes: 0 }
+        Sac1 { inner, probes: 0, vals_buf: Vec::new() }
     }
 
     /// Enforce SAC.  Returns the outcome; `counters` accumulates the
@@ -40,11 +62,12 @@ impl<E: Propagator> Sac1<E> {
         loop {
             let mut removed_any = false;
             for x in 0..problem.n_vars() {
-                let vals: Vec<usize> = state.dom(x).iter_ones().collect();
-                if vals.len() <= 1 {
+                self.vals_buf.clear();
+                self.vals_buf.extend(state.dom(x).iter_ones());
+                if self.vals_buf.len() <= 1 {
                     continue; // a singleton that survived AC is SAC
                 }
-                for a in vals {
+                for &a in &self.vals_buf {
                     if !state.contains(x, a) {
                         continue; // removed by an earlier probe's fallout
                     }
@@ -95,6 +118,269 @@ impl<E: Propagator> Propagator for Sac1<E> {
     }
 }
 
+/// Reusable per-probe fixpoint bookkeeping (changed lists + Prop.-2
+/// flags), pooled by [`SacParallel`] alongside the scratch planes so a
+/// steady-state probe performs no heap allocation at all.  The
+/// "`affected_list` names exactly the true flags" invariant carries
+/// across probes: [`derive_affected`] resets precisely those entries at
+/// each sweep start.
+#[derive(Default)]
+struct ProbeScratch {
+    changed: Vec<VarId>,
+    next_changed: Vec<VarId>,
+    affected: Vec<bool>,
+    affected_list: Vec<VarId>,
+}
+
+/// Run the recurrent AC fixpoint directly on a plane pair — the probe
+/// body of batched SAC.  `plane` holds the live domains (with the probe
+/// assignment already applied); `snap` is the per-sweep Jacobi snapshot
+/// buffer.  Prop.-2 incremental candidate sets, seeded from `seed`.
+/// No trail: probe domains are scratch and discarded.  Returns true iff
+/// the fixpoint is consistent (no domain wiped out).
+///
+/// The revise loop below must stay semantically in sync with its two
+/// siblings — `RtacNative::sweep` (removal sink: trailed
+/// `State::remove`) and `RtacParallel::revise_chunk` (removal sink:
+/// chunk-relative word masking); this one clears bits on the scratch
+/// plane.  Only the sink differs; the support predicate and counter
+/// accounting are the bit-identity contract.
+fn plane_fixpoint(
+    problem: &Problem,
+    plane: &mut DomainPlane,
+    snap: &mut DomainPlane,
+    seed: VarId,
+    scratch: &mut ProbeScratch,
+    counters: &mut Counters,
+) -> bool {
+    let n = problem.n_vars();
+    if scratch.affected.len() != n {
+        scratch.affected.clear();
+        scratch.affected.resize(n, false);
+        scratch.affected_list.clear();
+    }
+    scratch.changed.clear();
+    scratch.changed.push(seed);
+    loop {
+        counters.recurrences += 1;
+        snap.copy_words_from(plane);
+        derive_affected(
+            problem,
+            &scratch.changed,
+            &mut scratch.affected,
+            &mut scratch.affected_list,
+        );
+        scratch.next_changed.clear();
+        for x in 0..n {
+            if !scratch.affected[x] {
+                continue;
+            }
+            let mut x_changed = false;
+            'vals: for a in snap.bits(x).iter_ones() {
+                for &arc in problem.arcs_of(x) {
+                    counters.support_checks += 1;
+                    let other = problem.arc_other(arc);
+                    if !problem.arc_support_row(arc, a).intersects(snap.bits(other)) {
+                        plane.clear(x, a);
+                        counters.removals += 1;
+                        x_changed = true;
+                        continue 'vals;
+                    }
+                }
+            }
+            if x_changed {
+                scratch.next_changed.push(x);
+                if plane.is_wiped(x) {
+                    return false;
+                }
+            }
+        }
+        if scratch.next_changed.is_empty() {
+            return true;
+        }
+        std::mem::swap(&mut scratch.changed, &mut scratch.next_changed);
+    }
+}
+
+/// Batched SAC-1 on the persistent worker pool (`sac-par[N]`).
+pub struct SacParallel {
+    /// Requested probe workers; 0 = auto (available parallelism).
+    workers: usize,
+    /// State-level AC for the root closure and post-removal
+    /// re-propagation (the probes themselves run plane-level).
+    inner: RtacNative,
+    pool: Option<WorkerPool>,
+    slab: PlaneSlab,
+    /// Pooled per-probe fixpoint bookkeeping (see [`ProbeScratch`]).
+    scratch_pool: Vec<ProbeScratch>,
+    /// Probes performed (for the ablation bench).
+    pub probes: u64,
+    /// Candidate (var, value) pairs of the current pass.
+    pairs: Vec<(VarId, Val)>,
+}
+
+impl SacParallel {
+    pub fn new(workers: usize) -> SacParallel {
+        SacParallel {
+            workers,
+            inner: RtacNative::incremental(),
+            pool: None,
+            slab: PlaneSlab::new(),
+            scratch_pool: Vec::new(),
+            probes: 0,
+            pairs: Vec::new(),
+        }
+    }
+
+    fn effective_workers(&self) -> usize {
+        if self.workers > 0 {
+            return self.workers;
+        }
+        std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1)
+    }
+
+    /// Enforce SAC with batched probes.  Returns the outcome; `counters`
+    /// accumulates the work of every probe plus the state-level AC runs.
+    pub fn enforce_sac(
+        &mut self,
+        problem: &Problem,
+        state: &mut State,
+        counters: &mut Counters,
+    ) -> Outcome {
+        let out = self.inner.enforce(problem, state, &[], counters);
+        if !out.is_consistent() {
+            return out;
+        }
+        let k = self.effective_workers();
+        let need_pool = match &self.pool {
+            Some(p) => p.size() != k,
+            None => true,
+        };
+        if need_pool {
+            self.pool = Some(WorkerPool::new(k));
+        }
+        loop {
+            let mut removed_any = false;
+            // This pass's candidates: every live value of every
+            // non-singleton variable (SAC-1's probe set).
+            self.pairs.clear();
+            for x in 0..problem.n_vars() {
+                if state.dom_size(x) <= 1 {
+                    continue; // a singleton that survived AC is SAC
+                }
+                self.pairs.extend(state.dom(x).iter_ones().map(|a| (x, a)));
+            }
+            let mut start = 0usize;
+            while start < self.pairs.len() {
+                let end = (start + k).min(self.pairs.len());
+                // Launch up to k probes against the CURRENT domains,
+                // skipping values an earlier batch's fallout removed.
+                // Each probe checks out a plane pair and owns it for
+                // the probe's lifetime: the live plane is a memcpy of
+                // the current domains, the snapshot buffer is
+                // uninitialised scratch (the fixpoint overwrites it
+                // before reading).
+                let mut jobs: Vec<(VarId, Val, DomainPlane, DomainPlane, ProbeScratch)> =
+                    Vec::with_capacity(end - start);
+                for &(x, a) in &self.pairs[start..end] {
+                    // skip values already removed, and variables an
+                    // earlier removal's fallout reduced to a singleton
+                    // (a singleton that survived AC is SAC — the probe
+                    // outcome is known)
+                    if !state.contains(x, a) || state.dom_size(x) <= 1 {
+                        continue;
+                    }
+                    let cur = self.slab.checkout(state.plane());
+                    let snap = self.slab.checkout_scratch(state.plane());
+                    let scratch = self.scratch_pool.pop().unwrap_or_default();
+                    jobs.push((x, a, cur, snap, scratch));
+                }
+                start = end;
+                if jobs.is_empty() {
+                    continue;
+                }
+                self.probes += jobs.len() as u64;
+                let tasks: Vec<_> = jobs
+                    .into_iter()
+                    .map(|(x, a, mut cur, mut snap, mut scratch)| {
+                        move || {
+                            let mut c = Counters::default();
+                            cur.assign(x, a);
+                            let consistent = plane_fixpoint(
+                                problem,
+                                &mut cur,
+                                &mut snap,
+                                x,
+                                &mut scratch,
+                                &mut c,
+                            );
+                            (x, a, consistent, cur, snap, scratch, c)
+                        }
+                    })
+                    .collect();
+                let results = self.pool.as_mut().expect("pool sized above").run_collect(tasks);
+                // Merge in launch order: counters stay deterministic and
+                // the scratch buffers go back to their pools before any
+                // state-level propagation runs.
+                let mut failed: Vec<(VarId, Val)> = Vec::new();
+                for (x, a, consistent, cur, snap, scratch, c) in results {
+                    counters.add(&c);
+                    self.slab.checkin(cur);
+                    self.slab.checkin(snap);
+                    self.scratch_pool.push(scratch);
+                    if !consistent {
+                        failed.push((x, a));
+                    }
+                }
+                // Probe failure is monotone (see module docs): every
+                // failed probe's value goes, each followed by AC
+                // re-propagation — exactly SAC-1's confirmed-removal
+                // step, just k at a time.
+                for (x, a) in failed {
+                    if !state.contains(x, a) {
+                        continue; // an earlier removal's fallout got it
+                    }
+                    state.remove(x, a);
+                    removed_any = true;
+                    if state.wiped(x) {
+                        return Outcome::Wipeout(x);
+                    }
+                    let out = self.inner.enforce(problem, state, &[x], counters);
+                    if !out.is_consistent() {
+                        return out;
+                    }
+                }
+            }
+            if !removed_any {
+                return Outcome::Consistent;
+            }
+        }
+    }
+}
+
+impl Propagator for SacParallel {
+    fn name(&self) -> &'static str {
+        "sac-par"
+    }
+
+    fn reset(&mut self, problem: &Problem) {
+        self.inner.reset(problem);
+        self.probes = 0;
+        // pool and slab survive: the persistent runtime is the point
+        // (the slab drops stale-layout planes lazily on checkout)
+    }
+
+    fn enforce(
+        &mut self,
+        problem: &Problem,
+        state: &mut State,
+        _touched: &[VarId],
+        counters: &mut Counters,
+    ) -> Outcome {
+        self.enforce_sac(problem, state, counters)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -102,6 +388,7 @@ mod tests {
     use crate::ac::rtac::RtacNative;
     use crate::core::Relation;
     use crate::gen::random::{random_csp, RandomSpec};
+    use crate::util::quickcheck::forall;
 
     #[test]
     fn sac_strictly_stronger_than_ac_on_known_gadget() {
@@ -116,6 +403,10 @@ mod tests {
         let mut s_sac = State::new(&p);
         let out = Sac1::new(Ac3Bit::new()).enforce_sac(&p, &mut s_sac, &mut c);
         assert!(!out.is_consistent(), "SAC must refute pigeonhole(3,2)");
+
+        let mut s_par = State::new(&p);
+        let out_par = SacParallel::new(2).enforce_sac(&p, &mut s_par, &mut c);
+        assert!(!out_par.is_consistent(), "batched SAC must refute pigeonhole(3,2)");
     }
 
     #[test]
@@ -130,6 +421,11 @@ mod tests {
         let out = Sac1::new(RtacNative::dense()).enforce_sac(&p, &mut s, &mut c);
         assert!(out.is_consistent());
         assert_eq!(s.total_size(), 12); // equality chain: everything SAC
+
+        let mut s_par = State::new(&p);
+        let out_par = SacParallel::new(3).enforce_sac(&p, &mut s_par, &mut c);
+        assert!(out_par.is_consistent());
+        assert_eq!(s_par.total_size(), 12);
     }
 
     #[test]
@@ -166,5 +462,83 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn batched_sac_same_fixpoint_as_sequential_across_worker_counts() {
+        // Satellite contract: sac-par at 1/2/4 workers reaches the SAME
+        // fixpoint (final domains + outcome) as sequential SAC-1 on
+        // random dense instances — the SAC closure is unique, so probe
+        // batching must not change it.
+        forall("sac-par-vs-sac1", 0x5AC2, 12, |rng| {
+            let spec = RandomSpec::new(
+                4 + rng.gen_range(6),
+                2 + rng.gen_range(4),
+                0.6 + 0.4 * rng.next_f64(),
+                0.55 * rng.next_f64(),
+                rng.next_u64(),
+            );
+            let p = random_csp(&spec);
+            let mut s_ref = State::new(&p);
+            let mut c_ref = Counters::default();
+            let o_ref =
+                Sac1::new(RtacNative::incremental()).enforce_sac(&p, &mut s_ref, &mut c_ref);
+            for workers in [1usize, 2, 4] {
+                let mut s = State::new(&p);
+                let mut c = Counters::default();
+                let o = SacParallel::new(workers).enforce_sac(&p, &mut s, &mut c);
+                if o.is_consistent() != o_ref.is_consistent() {
+                    return Err(format!("{workers}w: outcome {o:?} vs {o_ref:?} on {spec:?}"));
+                }
+                if o_ref.is_consistent() && s.snapshot() != s_ref.snapshot() {
+                    return Err(format!("{workers}w: fixpoint mismatch on {spec:?}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn batched_sac_engine_reuse_across_problems() {
+        // one engine (one pool + slab) across layout changes: the slab
+        // must drop stale planes and the fixpoints must stay right.
+        let mut engine = SacParallel::new(2);
+        for p in [
+            crate::gen::pigeonhole(3, 2),
+            random_csp(&RandomSpec::new(7, 5, 0.8, 0.4, 23)),
+            crate::gen::pigeonhole(4, 3),
+        ] {
+            let mut s_par = State::new(&p);
+            let mut s_seq = State::new(&p);
+            let mut c = Counters::default();
+            let o_par = engine.enforce_sac(&p, &mut s_par, &mut c);
+            let o_seq = Sac1::new(RtacNative::incremental()).enforce_sac(&p, &mut s_seq, &mut c);
+            assert_eq!(o_par.is_consistent(), o_seq.is_consistent(), "{}", p.name());
+            if o_par.is_consistent() {
+                assert_eq!(s_par.snapshot(), s_seq.snapshot(), "{}", p.name());
+            }
+            engine.reset(&p);
+        }
+    }
+
+    #[test]
+    fn probe_counts_match_between_sequential_and_batched() {
+        // both engines probe the same (var, value) pairs per pass when
+        // no removals interleave; on an already-SAC instance the counts
+        // are exactly equal (one full pass each).
+        let mut p = Problem::new("chain", 4, 3);
+        let eq = Relation::from_fn(3, 3, |a, b| a == b);
+        for v in 0..3 {
+            p.add_constraint(v, v + 1, eq.clone());
+        }
+        let mut c = Counters::default();
+        let mut seq = Sac1::new(RtacNative::incremental());
+        let mut s1 = State::new(&p);
+        assert!(seq.enforce_sac(&p, &mut s1, &mut c).is_consistent());
+        let mut par = SacParallel::new(3);
+        let mut s2 = State::new(&p);
+        assert!(par.enforce_sac(&p, &mut s2, &mut c).is_consistent());
+        assert_eq!(seq.probes, par.probes);
+        assert!(par.probes > 0);
     }
 }

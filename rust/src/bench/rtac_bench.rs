@@ -1,22 +1,38 @@
 //! RTAC-family perf trajectory bench: `rtac` (sequential dense) vs
-//! `rtac-inc` (Prop. 2) vs `rtac-parN` (thread-parallel sweeps over the
-//! flat domain-plane arena) on the scaled paper grid.
+//! `rtac-inc` (Prop. 2) vs the pool-backed parallel engines
+//! (`rtac-parN`, `rtac-par-incN`) vs the per-sweep scoped-spawn
+//! baseline (`rtac-par-scopedN`) on the scaled paper grid, plus a
+//! one-shot batched-SAC comparison cell.
 //!
 //! Emits `BENCH_rtac.json` — per (n, density, engine): ns per
 //! assignment and `#Recurrence` per AC call — so successive PRs can
 //! track the native hot path the way EXPERIMENTS.md tracks the tensor
-//! path.  The headline check is the densest cell (density 1.0, largest
-//! n): the parallel engine must beat the sequential dense engine there,
-//! since that is exactly the regime the paper's "fully parallelizable
-//! recurrence" claim targets.
+//! path.  Headline checks on the densest cell (density 1.0, largest
+//! n), exactly the regime the paper's "fully parallelizable
+//! recurrence" claim targets:
+//!
+//! * best parallel engine vs sequential dense `rtac`;
+//! * pooled vs scoped-spawn at the same worker count — what the
+//!   persistent `exec::WorkerPool` amortises away;
+//! * batched `sac-par` vs sequential SAC-1 on the SAC comparison cell
+//!   (SAC probes every (var, value) pair, so it runs on a SAC-sized
+//!   instance derived from the grid rather than the full MAC cell).
 
+use crate::ac::rtac::RtacNative;
+use crate::ac::sac::{Sac1, SacParallel};
+use crate::ac::{Counters, Propagator};
 use crate::bench::workloads::{run_grid, CellResult, GridSpec};
+use crate::core::State;
+use crate::gen::random::{random_csp, RandomSpec};
 use crate::util::json::{num, obj, s, Json};
 use crate::util::table::{fnum, Table};
+use crate::util::timer::Stopwatch;
 
-/// Engine series for the RTAC trajectory (parallel with 2 and 4 pinned
-/// workers so results are machine-comparable).
-pub const ENGINES: &[&str] = &["rtac", "rtac-inc", "rtac-par2", "rtac-par4"];
+/// Engine series for the RTAC trajectory (pinned workers so results
+/// are machine-comparable; `rtac-par-scoped4` is the spawn-overhead
+/// baseline for the pooled `rtac-par4`).
+pub const ENGINES: &[&str] =
+    &["rtac", "rtac-inc", "rtac-par2", "rtac-par4", "rtac-par-inc4", "rtac-par-scoped4"];
 
 /// Default grid: the scaled paper grid, trimmed to the sizes where the
 /// dense engines dominate runtime.
@@ -59,12 +75,133 @@ pub fn densest_speedup(results: &[CellResult]) -> Option<(f64, String)> {
     let base = cell(results, n, density, "rtac")?;
     let best_par = results
         .iter()
-        .filter(|r| r.n == n && r.density == density && r.engine.starts_with("rtac-par"))
+        .filter(|r| {
+            // the scoped-spawn baseline exists only as pooled_vs_scoped's
+            // control; it must not win the parallel-vs-sequential headline
+            r.n == n
+                && r.density == density
+                && r.engine.starts_with("rtac-par")
+                && !r.engine.contains("-scoped")
+        })
         .min_by(|a, b| a.mean_ac_ms.partial_cmp(&b.mean_ac_ms).unwrap())?;
     if best_par.mean_ac_ms <= 0.0 {
         return None;
     }
     Some((base.mean_ac_ms / best_par.mean_ac_ms, best_par.engine.clone()))
+}
+
+/// Pooled vs per-sweep scoped-spawn on the densest cell, at matched
+/// worker counts (`rtac-parK` vs `rtac-par-scopedK`) — the persistent
+/// runtime's amortisation headline.  Returns (speedup of pooled over
+/// scoped, pooled engine name, scoped engine name).
+pub fn pooled_vs_scoped(results: &[CellResult]) -> Option<(f64, String, String)> {
+    let (n, density) = densest_key(results)?;
+    for pooled in results.iter().filter(|r| {
+        r.n == n
+            && r.density == density
+            && r.engine.starts_with("rtac-par")
+            && !r.engine.starts_with("rtac-par-scoped")
+            && !r.engine.starts_with("rtac-par-inc")
+    }) {
+        let k = &pooled.engine["rtac-par".len()..];
+        let scoped_name = format!("rtac-par-scoped{k}");
+        if let Some(scoped) = cell(results, n, density, &scoped_name) {
+            if pooled.mean_ac_ms > 0.0 {
+                return Some((
+                    scoped.mean_ac_ms / pooled.mean_ac_ms,
+                    pooled.engine.clone(),
+                    scoped_name,
+                ));
+            }
+        }
+    }
+    None
+}
+
+/// One-shot batched-SAC comparison: sequential SAC-1 vs `sac-par` wall
+/// time over a few instances of the SAC comparison cell.
+#[derive(Clone, Debug)]
+pub struct SacComparison {
+    pub n: usize,
+    pub density: f64,
+    pub dom: usize,
+    pub instances: u64,
+    pub workers: usize,
+    pub sac_ms: f64,
+    pub sac_par_ms: f64,
+    pub speedup: f64,
+    /// Probes the batched engine performed across all instances.
+    pub probes: u64,
+}
+
+/// Derive the SAC cell from the grid and measure both SAC engines on
+/// it.  SAC probes every (var, value) pair per pass — quadratic in the
+/// cell size next to one MAC assignment — so n and the domain size are
+/// capped to keep the one-shot comparison proportionate to the grid.
+pub fn sac_probe_comparison(spec: &GridSpec, workers: usize) -> Option<SacComparison> {
+    let n = spec.sizes.iter().copied().max()?.min(48);
+    let density = spec
+        .densities
+        .iter()
+        .copied()
+        .max_by(|a, b| a.partial_cmp(b).unwrap())?;
+    let dom = spec.dom_size.clamp(2, 10);
+    let instances = 3u64;
+    let mut sac_ms = 0.0;
+    let mut sac_par_ms = 0.0;
+    let mut probes = 0u64;
+    // One engine each across the instances: the batched engine's pool
+    // and slab persist by design, so the spawn cost amortises here just
+    // as it does across MAC nodes — timing a cold engine per instance
+    // would charge sac-par for overhead the runtime exists to avoid.
+    let mut seq = Sac1::new(RtacNative::incremental());
+    let mut par = SacParallel::new(workers);
+    for i in 0..instances {
+        let p = random_csp(&RandomSpec::new(
+            n,
+            dom,
+            density,
+            spec.tightness,
+            spec.seed.wrapping_add(i),
+        ));
+        seq.reset(&p);
+        par.reset(&p);
+        let mut s_seq = State::new(&p);
+        let mut c_seq = Counters::default();
+        let sw = Stopwatch::start();
+        let o_seq = seq.enforce_sac(&p, &mut s_seq, &mut c_seq);
+        sac_ms += sw.elapsed_ms();
+
+        let mut s_par = State::new(&p);
+        let mut c_par = Counters::default();
+        let sw = Stopwatch::start();
+        let o_par = par.enforce_sac(&p, &mut s_par, &mut c_par);
+        sac_par_ms += sw.elapsed_ms();
+        probes += par.probes;
+        debug_assert_eq!(o_seq.is_consistent(), o_par.is_consistent());
+    }
+    let speedup = if sac_par_ms > 0.0 { sac_ms / sac_par_ms } else { 0.0 };
+    Some(SacComparison {
+        n,
+        density,
+        dom,
+        instances,
+        workers,
+        sac_ms,
+        sac_par_ms,
+        speedup,
+        probes,
+    })
+}
+
+/// One-line report for the SAC comparison.
+pub fn render_sac(c: &SacComparison) -> String {
+    format!(
+        "sac cell (n={}, density={:.2}, dom={}, {} instances): sac-1 {:.1}ms vs sac-par{} \
+         {:.1}ms -> {:.2}x ({} probes)\n",
+        c.n, c.density, c.dom, c.instances, c.sac_ms, c.workers, c.sac_par_ms, c.speedup,
+        c.probes
+    )
 }
 
 /// Paper-style matrix: one row per (n, density), ns/assignment per
@@ -103,11 +240,19 @@ pub fn render(results: &[CellResult], engines: &[&str]) -> String {
             if speedup > 1.0 { "PARALLEL WINS" } else { "parallel overhead dominates" }
         ));
     }
+    if let Some((speedup, pooled, scoped)) = pooled_vs_scoped(results) {
+        out.push_str(&format!(
+            "densest cell: {pooled} (persistent pool) is {speedup:.2}x vs {scoped} \
+             (per-sweep spawns) -> {}\n",
+            if speedup > 1.0 { "POOL AMORTISES" } else { "spawn overhead not dominant here" }
+        ));
+    }
     out
 }
 
-/// JSON export: grid metadata + one row per cell (BENCH_rtac.json).
-pub fn to_json(spec: &GridSpec, results: &[CellResult]) -> Json {
+/// JSON export: grid metadata + one row per cell (BENCH_rtac.json),
+/// plus the densest-cell verdicts and the SAC comparison when run.
+pub fn to_json(spec: &GridSpec, results: &[CellResult], sac: Option<&SacComparison>) -> Json {
     let rows = Json::Arr(
         results
             .iter()
@@ -132,6 +277,21 @@ pub fn to_json(spec: &GridSpec, results: &[CellResult]) -> Json {
     if let Some((speedup, engine)) = densest_speedup(results) {
         fields.push(("densest_speedup", num(speedup)));
         fields.push(("densest_winner", s(&engine)));
+    }
+    if let Some((speedup, pooled, scoped)) = pooled_vs_scoped(results) {
+        fields.push(("pooled_vs_scoped_speedup", num(speedup)));
+        fields.push(("pooled_engine", s(&pooled)));
+        fields.push(("scoped_engine", s(&scoped)));
+    }
+    if let Some(c) = sac {
+        fields.push(("sac_n", num(c.n as f64)));
+        fields.push(("sac_density", num(c.density)));
+        fields.push(("sac_dom", num(c.dom as f64)));
+        fields.push(("sac_workers", num(c.workers as f64)));
+        fields.push(("sac_ms", num(c.sac_ms)));
+        fields.push(("sac_par_ms", num(c.sac_par_ms)));
+        fields.push(("sac_par_speedup", num(c.speedup)));
+        fields.push(("sac_probes", num(c.probes as f64)));
     }
     obj(fields)
 }
@@ -178,7 +338,7 @@ mod tests {
     #[test]
     fn json_has_row_per_cell_and_parses_back() {
         let (spec, results) = tiny_results();
-        let j = to_json(&spec, &results);
+        let j = to_json(&spec, &results, None);
         let parsed = crate::util::json::parse(&j.to_string()).unwrap();
         assert_eq!(
             parsed.get("rows").unwrap().as_arr().unwrap().len(),
@@ -196,5 +356,47 @@ mod tests {
         let (speedup, winner) = densest_speedup(&results).unwrap();
         assert!(speedup > 0.0);
         assert!(winner.starts_with("rtac-par"));
+    }
+
+    #[test]
+    fn pooled_vs_scoped_pairs_matching_worker_counts() {
+        let spec = GridSpec {
+            sizes: vec![12],
+            densities: vec![1.0],
+            dom_size: 4,
+            tightness: 0.3,
+            assignments: 15,
+            seed: 5,
+        };
+        let results = run(&spec, &["rtac", "rtac-par2", "rtac-par-scoped2"]);
+        let (speedup, pooled, scoped) = pooled_vs_scoped(&results).unwrap();
+        assert!(speedup > 0.0);
+        assert_eq!(pooled, "rtac-par2");
+        assert_eq!(scoped, "rtac-par-scoped2");
+        // no scoped twin measured -> no verdict, not a bogus pairing
+        let no_twin = run(&spec, &["rtac", "rtac-par2"]);
+        assert!(pooled_vs_scoped(&no_twin).is_none());
+    }
+
+    #[test]
+    fn sac_comparison_runs_and_exports() {
+        let spec = GridSpec {
+            sizes: vec![8],
+            densities: vec![1.0],
+            dom_size: 4,
+            tightness: 0.3,
+            assignments: 10,
+            seed: 3,
+        };
+        let c = sac_probe_comparison(&spec, 2).unwrap();
+        assert_eq!(c.n, 8);
+        assert_eq!(c.workers, 2);
+        assert!(c.sac_ms >= 0.0 && c.sac_par_ms >= 0.0);
+        let txt = render_sac(&c);
+        assert!(txt.contains("sac-par2"));
+        let j = to_json(&spec, &run(&spec, &["rtac"]), Some(&c));
+        let parsed = crate::util::json::parse(&j.to_string()).unwrap();
+        assert!(parsed.get("sac_par_speedup").is_some());
+        assert!(parsed.get("sac_probes").is_some());
     }
 }

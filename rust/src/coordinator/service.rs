@@ -105,10 +105,10 @@ impl Handle {
             );
         }
         let (rtx, rrx) = mpsc::channel();
-        self.metrics.on_submit();
         self.tx
             .send(Request { plane, submitted: Instant::now(), resp: rtx })
             .map_err(|_| anyhow!("coordinator is shut down"))?;
+        self.metrics.on_submit(); // count only planes that reached the queue
         Ok(rrx)
     }
 
@@ -116,6 +116,50 @@ impl Handle {
     pub fn enforce_blocking(&self, plane: Vec<f32>) -> Result<Response> {
         let rx = self.submit(plane)?;
         rx.recv().context("coordinator dropped the request (executor died?)")
+    }
+
+    /// Submit several planes back-to-back — the batched-probe path.
+    ///
+    /// A SAC enforcement produces K independent singleton probes at
+    /// once (see `ac/sac.rs`); submitting them through this path puts
+    /// them on the executor queue contiguously, so the dynamic batcher
+    /// coalesces them into as few fused executions as the compiled
+    /// batch sizes allow instead of gambling each probe against the
+    /// `max_wait` deadline separately.  Shape validation happens up
+    /// front, before anything is enqueued; a coordinator shutdown
+    /// mid-batch still returns `Err` with the earlier planes already
+    /// on the (dead) queue — their responses are simply never sent.
+    ///
+    /// Returns one response receiver per plane, in submission order.
+    pub fn submit_batch(&self, planes: Vec<Vec<f32>>) -> Result<Vec<mpsc::Receiver<Response>>> {
+        for (i, plane) in planes.iter().enumerate() {
+            if plane.len() != self.bucket.vars_len() {
+                bail!(
+                    "batch plane {i} has {} values, session bucket wants {}",
+                    plane.len(),
+                    self.bucket.vars_len()
+                );
+            }
+        }
+        let submitted = Instant::now();
+        let mut receivers = Vec::with_capacity(planes.len());
+        for plane in planes {
+            let (rtx, rrx) = mpsc::channel();
+            self.tx
+                .send(Request { plane, submitted, resp: rtx })
+                .map_err(|_| anyhow!("coordinator is shut down"))?;
+            self.metrics.on_submit(); // only planes that actually reached the queue
+            receivers.push(rrx);
+        }
+        Ok(receivers)
+    }
+
+    /// Submit a probe batch and block for every response, in order.
+    pub fn enforce_batch_blocking(&self, planes: Vec<Vec<f32>>) -> Result<Vec<Response>> {
+        self.submit_batch(planes)?
+            .into_iter()
+            .map(|rx| rx.recv().context("coordinator dropped a batched request (executor died?)"))
+            .collect()
     }
 }
 
@@ -352,5 +396,38 @@ mod tests {
         let p = BatchPolicy::default();
         assert!(p.max_batch >= 1);
         assert!(p.max_wait < Duration::from_millis(10));
+    }
+
+    fn test_handle() -> (Handle, mpsc::Receiver<Request>) {
+        let (tx, rx) = mpsc::channel();
+        let handle = Handle {
+            tx,
+            bucket: Bucket { n: 2, d: 2 },
+            metrics: Arc::new(Metrics::new()),
+        };
+        (handle, rx)
+    }
+
+    #[test]
+    fn submit_batch_validates_before_enqueuing_anything() {
+        let (h, rx) = test_handle();
+        let bad = vec![vec![1.0; h.bucket.vars_len()], vec![0.0; 3]];
+        assert!(h.submit_batch(bad).is_err());
+        assert!(rx.try_recv().is_err(), "no plane may be enqueued on a rejected batch");
+        assert_eq!(h.metrics.snapshot().requests, 0);
+    }
+
+    #[test]
+    fn submit_batch_enqueues_in_order() {
+        let (h, rx) = test_handle();
+        let len = h.bucket.vars_len();
+        let planes = vec![vec![1.0; len], vec![0.5; len], vec![0.0; len]];
+        let receivers = h.submit_batch(planes.clone()).unwrap();
+        assert_eq!(receivers.len(), 3);
+        for want in &planes {
+            let got = rx.try_recv().expect("plane enqueued");
+            assert_eq!(&got.plane, want);
+        }
+        assert_eq!(h.metrics.snapshot().requests, 3);
     }
 }

@@ -7,7 +7,7 @@ pub mod problem;
 pub mod relation;
 pub mod state;
 
-pub use plane::{DomainPlane, PlaneChunk};
+pub use plane::{DomainPlane, PlaneChunk, PlaneSlab};
 pub use problem::{Arc, Constraint, Problem, Val, VarId};
 pub use relation::Relation;
 pub use state::State;

@@ -138,6 +138,18 @@ impl DomainPlane {
         self.words[self.offsets[v] as usize + a / 64] &= !(1u64 << (a % 64));
     }
 
+    /// Reduce `v`'s row to the singleton `{a}`.  No trail — this is for
+    /// engine scratch planes (e.g. SAC probe snapshots); the trailed
+    /// assignment for search lives in [`crate::core::State::assign`].
+    pub fn assign(&mut self, v: VarId, a: Val) {
+        debug_assert!(a < self.width(v));
+        let range = self.word_range(v);
+        for w in &mut self.words[range] {
+            *w = 0;
+        }
+        self.set(v, a);
+    }
+
     /// Live values of `v`.
     #[inline]
     pub fn count(&self, v: VarId) -> usize {
@@ -205,6 +217,67 @@ impl DomainPlane {
             chunks.push(PlaneChunk { var_start, var_end: v, word_start, word_end });
         }
         chunks
+    }
+}
+
+/// A checkout/checkin slab of scratch planes sharing one layout.
+///
+/// Batched SAC runs K singleton probes concurrently; each probe needs a
+/// private snapshot of the current domains (plus a next-sweep buffer).
+/// Allocating those per probe would put two `Vec<u64>` allocations on
+/// every probe's critical path; the slab keeps returned planes around
+/// so a checkout is one memcpy ([`DomainPlane::copy_words_from`]) in
+/// the steady state.  Planes whose layout no longer matches (the engine
+/// moved to a different problem) are dropped lazily on checkout.
+#[derive(Debug, Default)]
+pub struct PlaneSlab {
+    free: Vec<DomainPlane>,
+}
+
+impl PlaneSlab {
+    pub fn new() -> PlaneSlab {
+        PlaneSlab { free: Vec::new() }
+    }
+
+    /// Pooled planes currently available.
+    pub fn len(&self) -> usize {
+        self.free.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.free.is_empty()
+    }
+
+    /// Take a scratch plane initialised to a copy of `src`: a memcpy
+    /// when a same-layout plane is pooled, a fresh clone otherwise.
+    pub fn checkout(&mut self, src: &DomainPlane) -> DomainPlane {
+        while let Some(mut plane) = self.free.pop() {
+            if plane.same_layout(src) {
+                plane.copy_words_from(src);
+                return plane;
+            }
+            // stale layout from a previous problem: drop it
+        }
+        src.clone()
+    }
+
+    /// Take a scratch plane that merely matches `layout` — the contents
+    /// are unspecified.  For buffers the caller overwrites wholesale
+    /// (e.g. per-sweep snapshot planes), this skips the checkout memcpy
+    /// that [`PlaneSlab::checkout`] pays.
+    pub fn checkout_scratch(&mut self, layout: &DomainPlane) -> DomainPlane {
+        while let Some(plane) = self.free.pop() {
+            if plane.same_layout(layout) {
+                return plane;
+            }
+            // stale layout from a previous problem: drop it
+        }
+        layout.clone()
+    }
+
+    /// Return a plane to the slab for reuse.
+    pub fn checkin(&mut self, plane: DomainPlane) {
+        self.free.push(plane);
     }
 }
 
@@ -342,6 +415,66 @@ mod tests {
         assert!(chunks.iter().all(|c| !c.is_empty()), "{chunks:?}");
         assert_eq!(chunks[0].var_start..chunks[0].var_end, 0..1);
         assert_eq!(chunks.last().unwrap().var_end, 3);
+    }
+
+    #[test]
+    fn assign_reduces_to_singleton() {
+        let p = mixed_problem();
+        let mut d = DomainPlane::full(&p);
+        d.assign(4, 127); // multi-word row: both other words must zero
+        assert_eq!(d.count(4), 1);
+        assert_eq!(d.first(4), Some(127));
+        d.assign(3, 0); // width-1 row stays itself
+        assert_eq!(d.count(3), 1);
+        // other rows untouched
+        assert_eq!(d.count(1), 70);
+    }
+
+    #[test]
+    fn slab_checkout_copies_and_reuses() {
+        let p = mixed_problem();
+        let mut src = DomainPlane::full(&p);
+        src.clear(1, 5);
+        let mut slab = PlaneSlab::new();
+        let a = slab.checkout(&src);
+        assert_eq!(a, src);
+        slab.checkin(a);
+        assert_eq!(slab.len(), 1);
+        // mutate src; the pooled plane must be re-initialised on checkout
+        src.clear(2, 7);
+        let b = slab.checkout(&src);
+        assert_eq!(b, src);
+        assert!(slab.is_empty());
+    }
+
+    #[test]
+    fn slab_checkout_scratch_matches_layout_only() {
+        let p = mixed_problem();
+        let src = DomainPlane::full(&p);
+        let mut slab = PlaneSlab::new();
+        let mut pooled = DomainPlane::full(&p);
+        pooled.clear(0, 1); // arbitrary stale contents are fine
+        slab.checkin(pooled);
+        let scratch = slab.checkout_scratch(&src);
+        assert!(scratch.same_layout(&src));
+        assert!(slab.is_empty());
+        // cold path: no pooled plane -> clone
+        let cold = slab.checkout_scratch(&src);
+        assert!(cold.same_layout(&src));
+    }
+
+    #[test]
+    fn slab_drops_stale_layouts() {
+        let p1 = mixed_problem();
+        let p2 = Problem::new("other", 3, 9);
+        let d1 = DomainPlane::full(&p1);
+        let d2 = DomainPlane::full(&p2);
+        let mut slab = PlaneSlab::new();
+        slab.checkin(d1.clone());
+        slab.checkin(d1);
+        let got = slab.checkout(&d2); // both stale planes discarded
+        assert_eq!(got, d2);
+        assert!(slab.is_empty());
     }
 
     #[test]

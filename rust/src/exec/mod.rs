@@ -1,0 +1,10 @@
+//! Execution substrate: the persistent propagation runtime.
+//!
+//! [`pool::WorkerPool`] owns long-lived worker threads that the
+//! parallel engines ([`crate::ac::rtac_par`], [`crate::ac::sac`])
+//! submit per-sweep / per-probe tasks to, amortising thread-spawn cost
+//! across the thousands of enforcements a MAC search performs.
+
+pub mod pool;
+
+pub use pool::WorkerPool;

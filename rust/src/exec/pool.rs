@@ -1,0 +1,252 @@
+//! `WorkerPool` — persistent, barrier-synchronized worker threads.
+//!
+//! The paper's recurrences are short (3–5 sweeps) and each sweep is
+//! small at CPU scale, so per-sweep `std::thread::scope` spawning —
+//! what `rtac-par` did before this subsystem existed — pays a full
+//! thread create/join round-trip per sweep, at exactly the small-n
+//! scale where the parallelism should win.  A MAC search performs one
+//! enforcement per assignment, i.e. thousands of sweeps per solve; the
+//! pool spawns its workers **once** and reuses them for every sweep
+//! (and every batched SAC probe) after that.
+//!
+//! # Design
+//!
+//! * One job channel per worker, assigned task-index round-robin, so
+//!   task→worker placement is deterministic (no work stealing — the
+//!   engines already balance their chunks by word count).
+//! * [`WorkerPool::run_scoped`] submits a set of borrowing closures and
+//!   **blocks until every one has completed** — the completion channel
+//!   is the barrier.  Because the caller cannot return before the
+//!   barrier, the closures' borrows outlive their execution, which is
+//!   what makes the (internal) lifetime erasure sound; the one `unsafe`
+//!   block below is the same contract `std::thread::scope` enforces
+//!   with its scope guard.
+//! * Worker panics are caught (`catch_unwind`), signalled through the
+//!   completion channel — so the barrier never hangs — and re-raised on
+//!   the caller thread after the full set has drained.
+//!
+//! `run_scoped` takes `&mut self`: a pool runs one task set at a time,
+//! and a task must never submit to its own pool (the borrow makes that
+//! unrepresentable for safe callers; it would deadlock otherwise).
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::thread::JoinHandle;
+
+/// A lifetime-erased job as stored on the channel.
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// Persistent worker threads with a blocking task-set barrier.
+pub struct WorkerPool {
+    senders: Vec<Sender<Job>>,
+    done_rx: Receiver<bool>,
+    /// Kept so worker-side completion sends cannot fail while the pool
+    /// is alive (workers hold clones).
+    _done_tx: Sender<bool>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+fn worker_loop(jobs: Receiver<Job>, done: Sender<bool>) {
+    while let Ok(job) = jobs.recv() {
+        let panicked = catch_unwind(AssertUnwindSafe(job)).is_err();
+        if done.send(panicked).is_err() {
+            break; // pool gone mid-send: nothing left to report to
+        }
+    }
+}
+
+impl WorkerPool {
+    /// Spawn `size` (min 1) persistent workers.
+    pub fn new(size: usize) -> WorkerPool {
+        let size = size.max(1);
+        let (done_tx, done_rx) = channel();
+        let mut senders = Vec::with_capacity(size);
+        let mut handles = Vec::with_capacity(size);
+        for i in 0..size {
+            let (tx, rx) = channel::<Job>();
+            let done = done_tx.clone();
+            let handle = std::thread::Builder::new()
+                .name(format!("rtac-pool-{i}"))
+                .spawn(move || worker_loop(rx, done))
+                .expect("spawning pool worker");
+            senders.push(tx);
+            handles.push(handle);
+        }
+        WorkerPool { senders, done_rx, _done_tx: done_tx, handles }
+    }
+
+    /// Number of worker threads.
+    pub fn size(&self) -> usize {
+        self.senders.len()
+    }
+
+    /// Run every task on the workers (task `i` goes to worker
+    /// `i % size`, queuing when there are more tasks than workers) and
+    /// block until all of them have completed.  Panics if any task
+    /// panicked — after the whole set has drained, so the pool stays
+    /// usable and no borrow escapes.
+    pub fn run_scoped<'scope>(&mut self, tasks: Vec<Box<dyn FnOnce() + Send + 'scope>>) {
+        let mut sent = 0usize;
+        for (i, task) in tasks.into_iter().enumerate() {
+            // SAFETY: this call blocks (below, and in the failure arm)
+            // until every job it submitted has signalled completion
+            // (panics included, via catch_unwind in the worker), so all
+            // `'scope` borrows captured by a job strictly outlive its
+            // execution and no job outlives this stack frame — the same
+            // guarantee `std::thread::scope` provides structurally.
+            let job: Job = unsafe {
+                std::mem::transmute::<Box<dyn FnOnce() + Send + 'scope>, Job>(task)
+            };
+            if self.senders[i % self.senders.len()].send(job).is_err() {
+                // A worker died (cannot happen short of the process
+                // being torn down, but never unwind while in-flight
+                // jobs may still borrow this frame): the failed job was
+                // dropped unexecuted; drain the submitted ones, then
+                // propagate.
+                for _ in 0..sent {
+                    let _ = self.done_rx.recv();
+                }
+                panic!("pool worker died");
+            }
+            sent += 1;
+        }
+        let mut panicked = false;
+        for _ in 0..sent {
+            match self.done_rx.recv() {
+                Ok(p) => panicked |= p,
+                Err(_) => unreachable!("pool owns a completion sender"),
+            }
+        }
+        if panicked {
+            panic!("pool worker task panicked");
+        }
+    }
+
+    /// Run closures that produce values; returns the results in task
+    /// order (deterministic regardless of completion order).
+    pub fn run_collect<T, F>(&mut self, tasks: Vec<F>) -> Vec<T>
+    where
+        T: Send,
+        F: FnOnce() -> T + Send,
+    {
+        let mut slots: Vec<Option<T>> = Vec::new();
+        slots.resize_with(tasks.len(), || None);
+        {
+            let mut boxed: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(slots.len());
+            for (f, slot) in tasks.into_iter().zip(slots.iter_mut()) {
+                boxed.push(Box::new(move || {
+                    *slot = Some(f());
+                }));
+            }
+            self.run_scoped(boxed);
+        }
+        slots.into_iter().map(|s| s.expect("pool task completed without a result")).collect()
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        // Disconnect the job channels; workers exit their recv loop.
+        self.senders.clear();
+        for handle in self.handles.drain(..) {
+            let _ = handle.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn results_come_back_in_task_order() {
+        let mut pool = WorkerPool::new(4);
+        let tasks: Vec<_> = (0..16usize).map(|i| move || i * i).collect();
+        let out = pool.run_collect(tasks);
+        assert_eq!(out, (0..16usize).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn tasks_may_borrow_the_caller_stack() {
+        let mut pool = WorkerPool::new(3);
+        let mut buf = vec![0u64; 9];
+        let chunks: Vec<&mut [u64]> = buf.chunks_mut(3).collect();
+        let tasks: Vec<_> = chunks
+            .into_iter()
+            .enumerate()
+            .map(|(i, chunk)| {
+                move || {
+                    for w in chunk.iter_mut() {
+                        *w = i as u64 + 1;
+                    }
+                }
+            })
+            .collect();
+        pool.run_collect(tasks);
+        assert_eq!(buf, vec![1, 1, 1, 2, 2, 2, 3, 3, 3]);
+    }
+
+    #[test]
+    fn pool_is_reusable_across_many_task_sets() {
+        let mut pool = WorkerPool::new(2);
+        let counter = AtomicUsize::new(0);
+        for round in 0..50 {
+            let tasks: Vec<_> = (0..4)
+                .map(|_| {
+                    let counter = &counter;
+                    move || {
+                        counter.fetch_add(1, Ordering::Relaxed);
+                    }
+                })
+                .collect();
+            pool.run_collect(tasks);
+            assert_eq!(counter.load(Ordering::Relaxed), (round + 1) * 4);
+        }
+    }
+
+    #[test]
+    fn more_tasks_than_workers_all_complete() {
+        let mut pool = WorkerPool::new(2);
+        let out = pool.run_collect((0..37usize).map(|i| move || i).collect());
+        assert_eq!(out.len(), 37);
+        assert_eq!(out[36], 36);
+    }
+
+    #[test]
+    fn zero_size_request_still_gets_one_worker() {
+        let pool = WorkerPool::new(0);
+        assert_eq!(pool.size(), 1);
+    }
+
+    #[test]
+    fn empty_task_set_is_a_no_op() {
+        let mut pool = WorkerPool::new(2);
+        let out: Vec<u32> = pool.run_collect(Vec::<fn() -> u32>::new());
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    #[should_panic(expected = "pool worker task panicked")]
+    fn task_panic_propagates_to_the_caller() {
+        let mut pool = WorkerPool::new(2);
+        let tasks: Vec<Box<dyn FnOnce() + Send>> = vec![
+            Box::new(|| {}),
+            Box::new(|| panic!("boom")),
+            Box::new(|| {}),
+        ];
+        pool.run_scoped(tasks);
+    }
+
+    #[test]
+    fn pool_survives_a_panicked_task_set() {
+        let mut pool = WorkerPool::new(2);
+        let r = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            pool.run_scoped(vec![Box::new(|| panic!("boom")) as Box<dyn FnOnce() + Send>]);
+        }));
+        assert!(r.is_err());
+        // the barrier drained fully, so the next set runs normally
+        let out = pool.run_collect((0..4usize).map(|i| move || i + 1).collect());
+        assert_eq!(out, vec![1, 2, 3, 4]);
+    }
+}

@@ -8,11 +8,12 @@
 //!   a Pallas kernel, AOT-lowered to HLO text.
 //! * **Layer 2** (`python/compile/model.py`) — the recurrent fixpoint
 //!   (`lax.while_loop`) around the kernel, per shape bucket.
-//! * **Layer 3** (this crate) — CSP substrates, four native AC engines
-//!   (AC-3 / AC-2001 / AC3bit / native RTAC), a MAC backtracking solver,
-//!   a PJRT runtime that executes the AOT artifacts, and a coordinator
-//!   that batches AC requests from parallel search workers into fused
-//!   tensor executions.
+//! * **Layer 3** (this crate) — CSP substrates, the native AC engines
+//!   (AC-3 / AC-2001 / AC3bit / native RTAC / pooled parallel RTAC /
+//!   batched SAC), a persistent worker-pool propagation runtime
+//!   (`exec`), a MAC backtracking solver, a PJRT runtime that executes
+//!   the AOT artifacts, and a coordinator that batches AC requests from
+//!   parallel search workers into fused tensor executions.
 //!
 //! See DESIGN.md for the architecture and EXPERIMENTS.md for the
 //! paper-reproduction results (Fig. 3, Table 1).
@@ -21,6 +22,7 @@ pub mod ac;
 pub mod bench;
 pub mod coordinator;
 pub mod core;
+pub mod exec;
 pub mod gen;
 pub mod parser;
 pub mod runtime;

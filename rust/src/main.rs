@@ -33,7 +33,8 @@ USAGE: rtac <subcommand> [options]
 
 SUBCOMMANDS
   gen          --n 50 --dom 20 --density 0.5 --tightness 0.3 --seed 1 --out FILE
-  solve        [FILE.csp] [--queens N | --n .. --density ..] --engine ac3|ac2001|ac3bit|rtac|rtac-inc
+  solve        [FILE.csp] [--queens N | --n .. --density ..]
+               --engine ac3|ac2001|ac3bit|rtac|rtac-inc|rtac-par[N]|rtac-par-inc[N]|sac|sac-par[N]
                --var-heuristic lex|mindom|domdeg|domwdeg --val-order lex|random
                --max-assignments K --seed S
   ac           same instance flags; runs one enforcement and prints counters
@@ -44,7 +45,8 @@ SUBCOMMANDS
   bench-table1 same grid flags [--json FILE]
   bench-ablate --episodes 40
   bench-rtac   --sizes 50,100,200 --densities 0.1,0.5,1.0 --assignments 200
-               --engines rtac,rtac-inc,rtac-par2,rtac-par4 [--json BENCH_rtac.json]
+               --engines rtac,rtac-inc,rtac-par2,rtac-par4,rtac-par-inc4,rtac-par-scoped4
+               --sac-workers 4 (0 skips the SAC cell) [--json BENCH_rtac.json]
   info         --artifacts DIR
 ";
 
@@ -306,6 +308,7 @@ fn cmd_bench_rtac(args: &Args) -> Result<(), String> {
         args.get_or("engines", &rtac_bench::ENGINES.join(","));
     let engines: Vec<&str> = engines_arg.split(',').collect();
     let json_path = args.get_or("json", "BENCH_rtac.json");
+    let sac_workers = args.get_usize("sac-workers", 4)?;
     args.finish()?;
     eprintln!(
         "rtac family grid: sizes={:?} densities={:?} dom={} t={} assignments={}",
@@ -313,7 +316,16 @@ fn cmd_bench_rtac(args: &Args) -> Result<(), String> {
     );
     let results = rtac_bench::run(&spec, &engines);
     println!("{}", rtac_bench::render(&results, &engines));
-    let json = rtac_bench::to_json(&spec, &results);
+    let sac = if sac_workers > 0 {
+        let sac = rtac_bench::sac_probe_comparison(&spec, sac_workers);
+        if let Some(c) = &sac {
+            println!("{}", rtac_bench::render_sac(c));
+        }
+        sac
+    } else {
+        None // --sac-workers 0 skips the SAC comparison cell
+    };
+    let json = rtac_bench::to_json(&spec, &results, sac.as_ref());
     std::fs::write(&json_path, json.to_string()).map_err(|e| format!("{json_path}: {e}"))?;
     eprintln!("wrote {json_path}");
     Ok(())

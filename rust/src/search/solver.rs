@@ -2,6 +2,12 @@
 //! Algorithm 2 (`dfs` + `assign` + `tensorAC`), generic over the AC
 //! engine so AC-3 and RTAC plug into the *same* search for Fig. 3's
 //! apples-to-apples per-assignment timing.
+//!
+//! The engine is borrowed, not owned, and `reset` is called exactly
+//! once per solve: the pool-backed engines (`rtac-par[-inc]`,
+//! `sac-par`) keep their persistent worker threads across the reset
+//! and across every per-node `enforce`, so a search amortises one
+//! thread-pool spawn over its whole tree (see `exec/pool.rs`).
 
 use std::time::{Duration, Instant};
 
@@ -326,6 +332,30 @@ mod tests {
             if let SolveResult::Sat(sol) = r {
                 assert!(p.satisfies(&sol), "engine {name}");
             }
+        }
+    }
+
+    #[test]
+    fn pooled_engines_reused_across_search_nodes() {
+        // One persistent pool serving every enforce of a search: the
+        // verdicts (and for SAT, the solutions) must match the
+        // sequential engines, across many nodes and a mid-test problem
+        // switch per engine instance.
+        for name in ["rtac-par2", "rtac-par-inc2", "sac-par2"] {
+            let p = queens(6);
+            let mut engine = make_engine(name).unwrap();
+            let mut solver = Solver::new(engine.as_mut(), SolverConfig::default());
+            let (r, stats) = solver.solve(&p);
+            match r {
+                SolveResult::Sat(sol) => assert!(p.satisfies(&sol), "{name}"),
+                other => panic!("{name}: queens(6) -> {other:?}"),
+            }
+            assert!(stats.ac_calls > 1, "{name}: pool must serve many nodes");
+            // same engine (same pool), different problem
+            let p2 = pigeonhole(5, 4);
+            let mut solver = Solver::new(engine.as_mut(), SolverConfig::default());
+            let (r2, _) = solver.solve(&p2);
+            assert_eq!(r2, SolveResult::Unsat, "{name}");
         }
     }
 
