@@ -30,6 +30,7 @@ fn main() {
                     policy: BatchPolicy {
                         max_batch: 8,
                         max_wait: Duration::from_micros(wait_us),
+                        adaptive: false,
                     },
                 },
             )

@@ -18,10 +18,15 @@ fn main() {
     if let Some(c) = &sac {
         println!("{}", rtac_bench::render_sac(c));
     }
+    // tensor-routed cell: self-skips without compiled artifacts
+    let sac_xla = rtac_bench::sac_xla_comparison(&spec, 4);
+    if let Some(c) = &sac_xla {
+        println!("{}", rtac_bench::render_sac_xla(c));
+    }
 
     let path = std::env::var("RTAC_BENCH_JSON").unwrap_or_else(|_| "BENCH_rtac.json".to_string());
     if !path.is_empty() {
-        let json = rtac_bench::to_json(&spec, &results, sac.as_ref());
+        let json = rtac_bench::to_json(&spec, &results, sac.as_ref(), sac_xla.as_ref());
         match std::fs::write(&path, json.to_string()) {
             Ok(()) => eprintln!("wrote {path}"),
             Err(e) => eprintln!("writing {path}: {e}"),

@@ -1,7 +1,8 @@
 //! Arc consistency engines.
 //!
-//! Six interchangeable AC implementations behind the [`Propagator`]
-//! trait, plus the SAC family layered on top:
+//! Seven interchangeable AC implementations behind the [`Propagator`]
+//! trait (five queue/sweep engines plus the pooled parallel pair), with
+//! the SAC family layered on top:
 //!
 //! * [`ac3::Ac3`] — the paper's baseline: queue of directed arcs,
 //!   value-by-value support scan (pluggable queue ordering).
@@ -23,16 +24,22 @@
 //!   per-sweep `std::thread::scope` spawning purely as the bench
 //!   baseline the pool amortises away.  All bit-identical to `rtac`
 //!   in closure, outcome and `#Recurrence`.
-//! * [`sac::Sac1`] / [`sac::SacParallel`] — singleton arc consistency,
-//!   a *stronger* consistency: `sac` / `sac-rtac` probe sequentially,
-//!   `sac-par[N]` runs N probes concurrently on the pool, each on a
-//!   scratch plane pair checked out of a
-//!   [`crate::core::PlaneSlab`].  Not interchangeable with the AC
-//!   engines in closure-equality tests, but plugs into the same
-//!   solver for stronger-but-costlier propagation.
+//! * [`sac::Sac1`] / [`sac::SacParallel`] / [`sac::SacXla`] —
+//!   singleton arc consistency, a *stronger* consistency: `sac` /
+//!   `sac-rtac` probe sequentially; the batched engines run K probes
+//!   per round behind the [`sac::ProbeBackend`] seam — `sac-par[N]`
+//!   on the worker pool (scratch plane pairs from a
+//!   [`crate::core::PlaneSlab`]), `sac-xla[N]` routed through the
+//!   coordinator onto the compiled `fixb*` tensor executables
+//!   (artifact-gated: it lazily starts a session and poisons itself
+//!   when none can start).  Not interchangeable with the AC engines in
+//!   closure-equality tests, but all SAC engines reach the same unique
+//!   SAC closure and plug into the same solver for
+//!   stronger-but-costlier propagation.
 //!
 //! Engine names take an optional worker-count suffix (`rtac-par4`,
-//! `sac-par2`); the bare name auto-sizes.  A `0` suffix is rejected at
+//! `sac-par2`, `sac-xla8` — for `sac-xla` the count is the probe batch
+//! per round); the bare name auto-sizes.  A `0` suffix is rejected at
 //! parse time — a zero-worker engine could never make progress.
 //!
 //! All AC engines compute the same unique closure (Prop. 1) — asserted
@@ -107,6 +114,16 @@ pub trait Propagator {
     /// Reset any per-problem caches (e.g. AC-2001 residues) — called when
     /// the engine is reused for a different problem instance.
     fn reset(&mut self, _problem: &Problem) {}
+
+    /// Infrastructure failure that poisoned the engine, if any.  The
+    /// tensor-routed engines ([`sac::SacXla`], [`sac::SacParallel`] on a
+    /// coordinator failure, `coordinator::TensorEngine`) report synthetic
+    /// wipeouts once poisoned so search terminates; callers that turn
+    /// outcomes into verdicts (the CLI) must check this afterwards —
+    /// a poisoned run is an *error*, not an UNSAT.
+    fn failure(&self) -> Option<&str> {
+        None
+    }
 }
 
 /// Parse the worker-count suffix of an engine name like `rtac-par4`
@@ -163,9 +180,17 @@ pub fn make_engine(name: &str) -> Result<Box<dyn Propagator>, String> {
             let workers = parse_worker_suffix(other, "sac-par")?;
             Ok(Box::new(sac::SacParallel::new(workers)))
         }
+        // Tensor-routed batched SAC: probes go through a lazily-started
+        // coordinator session onto the `fixb*` artifacts.  N is the
+        // probe batch per round (0 suffix rejected like the others).
+        other if other.starts_with("sac-xla") => {
+            let batch = parse_worker_suffix(other, "sac-xla")?;
+            Ok(Box::new(sac::SacXla::new(batch)))
+        }
         other => Err(format!(
             "unknown engine {other:?} (try ac3 | ac3-lifo | ac3-dom | ac2001 | ac3bit | rtac | \
-             rtac-inc | rtac-par[N] | rtac-par-inc[N] | sac | sac-rtac | sac-par[N])"
+             rtac-inc | rtac-par[N] | rtac-par-inc[N] | rtac-par-scoped[N] | sac | sac-rtac | \
+             sac-par[N] | sac-xla[N])"
         )),
     }
 }
@@ -193,7 +218,7 @@ mod tests {
 
     #[test]
     fn zero_worker_engine_names_rejected_at_parse_time() {
-        for name in ["rtac-par0", "rtac-par-inc0", "rtac-par-scoped0", "sac-par0"] {
+        for name in ["rtac-par0", "rtac-par-inc0", "rtac-par-scoped0", "sac-par0", "sac-xla0"] {
             let err = make_engine(name).err().unwrap_or_else(|| {
                 panic!("{name} must be rejected at parse time")
             });
@@ -205,12 +230,13 @@ mod tests {
     fn pool_engine_names_parse_with_and_without_counts() {
         for name in
             ["rtac-par", "rtac-par3", "rtac-par-inc", "rtac-par-inc2", "rtac-par-scoped2",
-             "sac-par", "sac-par4"]
+             "sac-par", "sac-par4", "sac-xla", "sac-xla8"]
         {
             assert!(make_engine(name).is_ok(), "{name} must parse");
         }
         assert!(make_engine("rtac-parx").is_err());
         assert!(make_engine("sac-par-1").is_err());
+        assert!(make_engine("sac-xlaq").is_err());
     }
 
     #[test]
@@ -220,8 +246,17 @@ mod tests {
             ("rtac-par-inc2", "rtac-par-inc"),
             ("rtac-par-scoped2", "rtac-par-scoped"),
             ("sac-par2", "sac-par"),
+            ("sac-xla4", "sac-xla"),
         ] {
             assert_eq!(make_engine(name).unwrap().name(), reported);
+        }
+    }
+
+    #[test]
+    fn unknown_engine_error_lists_the_full_family() {
+        let err = make_engine("nope").unwrap_err();
+        for name in ["rtac-par-scoped[N]", "sac-par[N]", "sac-xla[N]"] {
+            assert!(err.contains(name), "error string misses {name}: {err}");
         }
     }
 }

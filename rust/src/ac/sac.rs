@@ -7,29 +7,45 @@
 //! ([`crate::coordinator::Handle::submit_batch`] is the tensor-route
 //! twin of the CPU batching below).
 //!
-//! Two enforcers:
+//! Three enforcers:
 //!
 //! * [`Sac1`] — sequential SAC-1 (Debruyne & Bessière) wrapping any
 //!   inner AC engine.  Probes run on a scratch level of the trail;
 //!   confirmed removals propagate through the inner engine until a
 //!   fixpoint over all (var, value) pairs.
-//! * [`SacParallel`] (`sac-par[N]`) — batched SAC-1 on the persistent
-//!   [`WorkerPool`]: K probes run concurrently, each on a private
-//!   scratch plane pair checked out of a [`PlaneSlab`] (one memcpy
-//!   each), with the recurrent fixpoint run directly on the planes (no
-//!   trail — probe domains are discarded).  Sound because probe
-//!   failure is **monotone**: a probe that is AC-inconsistent against
-//!   the batch's launch domains stays inconsistent under the smaller
-//!   domains later removals produce, so every failed probe of a batch
-//!   can be removed; stale *successes* are caught by the outer
-//!   fixpoint loop re-probing until a full pass removes nothing.  The
-//!   SAC closure is unique, so the batched engine reaches bit-the-same
-//!   final domains as [`Sac1`] (property-tested at 1/2/4 workers).
+//! * [`SacParallel`] — batched SAC-1 behind the **probe-backend seam**
+//!   ([`ProbeBackend`]): the SAC-1 merge loop (launch K probes against
+//!   the current domains, remove every failed probe's value, AC
+//!   re-propagate, repeat until a full pass removes nothing) is
+//!   backend-independent; only *where* the probe fixpoints run differs.
+//!   Sound for any backend because probe failure is **monotone**: a
+//!   probe that is AC-inconsistent against the batch's launch domains
+//!   stays inconsistent under the smaller domains later removals
+//!   produce, so every failed probe of a batch can be removed; stale
+//!   *successes* are caught by the outer fixpoint loop re-probing until
+//!   a full pass removes nothing.  The SAC closure is unique, so every
+//!   backend reaches bit-the-same final domains as [`Sac1`].
+//!   - [`CpuProbeBackend`] (`sac-par[N]`) — K probes concurrently on
+//!     the persistent [`WorkerPool`], each on a private scratch plane
+//!     pair checked out of a [`PlaneSlab`] (one memcpy each), the
+//!     recurrent fixpoint run directly on the planes (no trail — probe
+//!     domains are discarded).  Property-tested at 1/2/4 workers.
+//!   - [`XlaProbeBackend`] (`sac-xla[N]`) — K probes staged straight
+//!     from the [`DomainPlane`] arena (`runtime::encode_vars_into`,
+//!     one base encoding per round + a single-row edit per probe) and
+//!     submitted through [`crate::coordinator::Handle::submit_batch`]
+//!     onto the compiled `fixb*` executables: the coordinator's dynamic
+//!     batcher fuses the round into as few executions as the compiled
+//!     batch sizes allow.  [`SacXla`] wraps this backend together with
+//!     a lazily-started coordinator session into a self-contained
+//!     engine for `make_engine("sac-xla[N]")`.
 
 use crate::ac::rtac::{derive_affected, RtacNative};
 use crate::ac::{Counters, Outcome, Propagator};
+use crate::coordinator::Handle;
 use crate::core::{DomainPlane, PlaneSlab, Problem, State, Val, VarId};
 use crate::exec::WorkerPool;
+use crate::runtime::encode_vars_into;
 
 /// SAC-1 enforcer wrapping an inner AC engine.
 pub struct Sac1<E: Propagator> {
@@ -202,41 +218,272 @@ fn plane_fixpoint(
     }
 }
 
-/// Batched SAC-1 on the persistent worker pool (`sac-par[N]`).
-pub struct SacParallel {
+/// The probe-execution seam of batched SAC (the probe-backend decision
+/// recorded in ROADMAP.md).  A backend runs one *round* of singleton
+/// probes — each asking "is the subproblem with x := a arc consistent?"
+/// — against the launch domains in `state` and reports, per probe,
+/// whether the probe's AC fixpoint stayed consistent.  The surrounding
+/// SAC-1 merge loop in [`SacParallel`] (monotone failed-probe removal +
+/// AC re-propagation until a clean pass) is backend-independent.
+pub trait ProbeBackend {
+    /// Probes submitted per round — the K of the batch loop.
+    fn batch(&self) -> usize;
+
+    /// Engine name the wrapping [`Propagator`] reports.
+    fn engine_name(&self) -> &'static str;
+
+    /// Run one round of probes against the domains in `state`.  The
+    /// caller has already filtered `probes` to live, non-singleton
+    /// (var, value) pairs.  Returns one verdict per probe, in order:
+    /// `true` iff the probe fixpoint is consistent.  `Err` poisons the
+    /// wrapping engine (tensor route: coordinator/session failure — the
+    /// CPU backend is infallible).
+    fn run_probes(
+        &mut self,
+        problem: &Problem,
+        state: &State,
+        probes: &[(VarId, Val)],
+        counters: &mut Counters,
+    ) -> anyhow::Result<Vec<bool>>;
+
+    /// Per-problem reset hook.
+    fn reset(&mut self, _problem: &Problem) {}
+}
+
+/// CPU probe backend (`sac-par[N]`): K probes concurrently on the
+/// persistent [`WorkerPool`], each on a private scratch plane pair from
+/// the [`PlaneSlab`], running [`plane_fixpoint`] (no trail).
+pub struct CpuProbeBackend {
     /// Requested probe workers; 0 = auto (available parallelism).
     workers: usize,
-    /// State-level AC for the root closure and post-removal
-    /// re-propagation (the probes themselves run plane-level).
-    inner: RtacNative,
     pool: Option<WorkerPool>,
     slab: PlaneSlab,
     /// Pooled per-probe fixpoint bookkeeping (see [`ProbeScratch`]).
     scratch_pool: Vec<ProbeScratch>,
-    /// Probes performed (for the ablation bench).
-    pub probes: u64,
-    /// Candidate (var, value) pairs of the current pass.
-    pairs: Vec<(VarId, Val)>,
 }
 
-impl SacParallel {
-    pub fn new(workers: usize) -> SacParallel {
-        SacParallel {
-            workers,
-            inner: RtacNative::incremental(),
-            pool: None,
-            slab: PlaneSlab::new(),
-            scratch_pool: Vec::new(),
-            probes: 0,
-            pairs: Vec::new(),
-        }
+impl CpuProbeBackend {
+    pub fn new(workers: usize) -> CpuProbeBackend {
+        CpuProbeBackend { workers, pool: None, slab: PlaneSlab::new(), scratch_pool: Vec::new() }
     }
+}
 
-    fn effective_workers(&self) -> usize {
+impl ProbeBackend for CpuProbeBackend {
+    fn batch(&self) -> usize {
         if self.workers > 0 {
             return self.workers;
         }
         std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1)
+    }
+
+    fn engine_name(&self) -> &'static str {
+        "sac-par"
+    }
+
+    fn run_probes(
+        &mut self,
+        problem: &Problem,
+        state: &State,
+        probes: &[(VarId, Val)],
+        counters: &mut Counters,
+    ) -> anyhow::Result<Vec<bool>> {
+        let k = self.batch();
+        let need_pool = match &self.pool {
+            Some(p) => p.size() != k,
+            None => true,
+        };
+        if need_pool {
+            self.pool = Some(WorkerPool::new(k));
+        }
+        // Each probe checks out a plane pair and owns it for the
+        // probe's lifetime: the live plane is a memcpy of the current
+        // domains, the snapshot buffer is uninitialised scratch (the
+        // fixpoint overwrites it before reading).
+        let mut jobs: Vec<(VarId, Val, DomainPlane, DomainPlane, ProbeScratch)> =
+            Vec::with_capacity(probes.len());
+        for &(x, a) in probes {
+            let cur = self.slab.checkout(state.plane());
+            let snap = self.slab.checkout_scratch(state.plane());
+            let scratch = self.scratch_pool.pop().unwrap_or_default();
+            jobs.push((x, a, cur, snap, scratch));
+        }
+        let tasks: Vec<_> = jobs
+            .into_iter()
+            .map(|(x, a, mut cur, mut snap, mut scratch)| {
+                move || {
+                    let mut c = Counters::default();
+                    cur.assign(x, a);
+                    let consistent =
+                        plane_fixpoint(problem, &mut cur, &mut snap, x, &mut scratch, &mut c);
+                    (consistent, cur, snap, scratch, c)
+                }
+            })
+            .collect();
+        let results = self.pool.as_mut().expect("pool sized above").run_collect(tasks);
+        // Merge in launch order: counters stay deterministic and the
+        // scratch buffers go back to their pools before any state-level
+        // propagation runs.
+        let mut verdicts = Vec::with_capacity(probes.len());
+        for (consistent, cur, snap, scratch, c) in results {
+            counters.add(&c);
+            self.slab.checkin(cur);
+            self.slab.checkin(snap);
+            self.scratch_pool.push(scratch);
+            verdicts.push(consistent);
+        }
+        Ok(verdicts)
+    }
+
+    // pool and slab survive reset: the persistent runtime is the point
+    // (the slab drops stale-layout planes lazily on checkout)
+}
+
+/// Default probe round size of the tensor route — the largest batch the
+/// AOT pipeline compiles (`python/compile/aot.py` BATCHES).
+pub const DEFAULT_TENSOR_PROBE_BATCH: usize = 8;
+
+/// Tensor probe backend (`sac-xla[N]`): probes are staged straight from
+/// the domain-plane arena and routed through the coordinator onto the
+/// compiled `fixb*` executables.  One [`encode_vars_into`] pass per
+/// round stages the launch domains; each probe plane is then the staged
+/// base with a single row edited to the singleton `{a}` — no per-probe
+/// re-gather.  A fused round goes through
+/// [`Handle::submit_batch`]/`enforce_batch_blocking`, putting all K
+/// planes on the executor queue contiguously so the dynamic batcher
+/// coalesces them; the `per_probe` variant submits them one blocking
+/// request at a time (the occupancy baseline `rtac serve --sac-probe`
+/// measures against).
+pub struct XlaProbeBackend {
+    handle: Handle,
+    /// Probes per round; 0 = auto ([`DEFAULT_TENSOR_PROBE_BATCH`]).
+    batch: usize,
+    /// Round staging buffer: the launch domains, encoded once per round.
+    staging: Vec<f32>,
+    /// Fused (`submit_batch`) vs per-probe (`enforce_blocking`) routing.
+    fused: bool,
+    /// Fingerprint of the problem this backend first probed.  The
+    /// session's constraint tensor is device-resident and per-problem,
+    /// so probing a *different* problem through the same handle would
+    /// silently evaluate against the wrong constraints — detected here
+    /// and surfaced as a poisoning error instead.
+    bound: Option<u64>,
+}
+
+impl XlaProbeBackend {
+    pub fn new(handle: Handle, batch: usize) -> XlaProbeBackend {
+        XlaProbeBackend { handle, batch, staging: Vec::new(), fused: true, bound: None }
+    }
+
+    /// The per-probe submission baseline: same backend, but every probe
+    /// gambles against the executor's `max_wait` deadline on its own.
+    pub fn per_probe(handle: Handle, batch: usize) -> XlaProbeBackend {
+        XlaProbeBackend { handle, batch, staging: Vec::new(), fused: false, bound: None }
+    }
+}
+
+impl ProbeBackend for XlaProbeBackend {
+    fn batch(&self) -> usize {
+        if self.batch > 0 {
+            self.batch
+        } else {
+            DEFAULT_TENSOR_PROBE_BATCH
+        }
+    }
+
+    fn engine_name(&self) -> &'static str {
+        "sac-xla"
+    }
+
+    fn run_probes(
+        &mut self,
+        problem: &Problem,
+        state: &State,
+        probes: &[(VarId, Val)],
+        counters: &mut Counters,
+    ) -> anyhow::Result<Vec<bool>> {
+        // the handle's session owns a device-resident constraint tensor
+        // for ONE problem; refuse to probe a different one (the
+        // fingerprint walk is microseconds next to an XLA round-trip)
+        let fp = problem_fingerprint(problem);
+        match self.bound {
+            None => self.bound = Some(fp),
+            Some(bound) if bound != fp => anyhow::bail!(
+                "tensor probe backend is bound to another problem's session (the \
+                 constraint tensor is device-resident) — build a new \
+                 SacParallel::tensor against a fresh session, or use SacXla which \
+                 restarts sessions on problem switches"
+            ),
+            Some(_) => {}
+        }
+        let bucket = self.handle.bucket;
+        encode_vars_into(state.plane(), bucket, &mut self.staging)?;
+        let planes: Vec<Vec<f32>> = probes
+            .iter()
+            .map(|&(x, a)| {
+                let mut plane = self.staging.clone();
+                let row = &mut plane[x * bucket.d..(x + 1) * bucket.d];
+                row.fill(0.0);
+                row[a] = 1.0;
+                plane
+            })
+            .collect();
+        let responses = if self.fused {
+            self.handle.enforce_batch_blocking(planes)?
+        } else {
+            planes
+                .into_iter()
+                .map(|p| self.handle.enforce_blocking(p))
+                .collect::<anyhow::Result<Vec<_>>>()?
+        };
+        Ok(responses
+            .into_iter()
+            .map(|r| {
+                // joint sweep count of the fused execution that served
+                // this probe — the tensor-side #Recurrence
+                counters.recurrences += r.iters.max(0) as u64;
+                !r.wiped()
+            })
+            .collect())
+    }
+}
+
+/// Batched SAC-1 over a [`ProbeBackend`] — `sac-par[N]` on the CPU
+/// pool, `sac-xla[N]` through the coordinator.
+pub struct SacParallel {
+    /// State-level AC for the root closure and post-removal
+    /// re-propagation (the probes themselves run backend-side).
+    inner: RtacNative,
+    backend: Box<dyn ProbeBackend>,
+    /// Probes performed (for the ablation bench).
+    pub probes: u64,
+    /// Candidate (var, value) pairs of the current pass.
+    pairs: Vec<(VarId, Val)>,
+    /// Set on a backend failure (tensor route only): the engine is then
+    /// poisoned and reports wipeouts, like `TensorEngine`.
+    pub failed: Option<String>,
+}
+
+impl SacParallel {
+    /// CPU-pool probes (`sac-par[N]`); `workers` 0 = auto.
+    pub fn new(workers: usize) -> SacParallel {
+        SacParallel::with_backend(Box::new(CpuProbeBackend::new(workers)))
+    }
+
+    /// Coordinator-routed probes (`sac-xla[N]`) against an existing
+    /// session; `batch` 0 = auto.
+    pub fn tensor(handle: Handle, batch: usize) -> SacParallel {
+        SacParallel::with_backend(Box::new(XlaProbeBackend::new(handle, batch)))
+    }
+
+    /// Any probe backend — the seam the tests and `rtac serve` use.
+    pub fn with_backend(backend: Box<dyn ProbeBackend>) -> SacParallel {
+        SacParallel {
+            inner: RtacNative::incremental(),
+            backend,
+            probes: 0,
+            pairs: Vec::new(),
+            failed: None,
+        }
     }
 
     /// Enforce SAC with batched probes.  Returns the outcome; `counters`
@@ -247,18 +494,14 @@ impl SacParallel {
         state: &mut State,
         counters: &mut Counters,
     ) -> Outcome {
+        if self.failed.is_some() {
+            return Outcome::Wipeout(0);
+        }
         let out = self.inner.enforce(problem, state, &[], counters);
         if !out.is_consistent() {
             return out;
         }
-        let k = self.effective_workers();
-        let need_pool = match &self.pool {
-            Some(p) => p.size() != k,
-            None => true,
-        };
-        if need_pool {
-            self.pool = Some(WorkerPool::new(k));
-        }
+        let k = self.backend.batch().max(1);
         loop {
             let mut removed_any = false;
             // This pass's candidates: every live value of every
@@ -274,69 +517,36 @@ impl SacParallel {
             while start < self.pairs.len() {
                 let end = (start + k).min(self.pairs.len());
                 // Launch up to k probes against the CURRENT domains,
-                // skipping values an earlier batch's fallout removed.
-                // Each probe checks out a plane pair and owns it for
-                // the probe's lifetime: the live plane is a memcpy of
-                // the current domains, the snapshot buffer is
-                // uninitialised scratch (the fixpoint overwrites it
-                // before reading).
-                let mut jobs: Vec<(VarId, Val, DomainPlane, DomainPlane, ProbeScratch)> =
-                    Vec::with_capacity(end - start);
-                for &(x, a) in &self.pairs[start..end] {
-                    // skip values already removed, and variables an
-                    // earlier removal's fallout reduced to a singleton
-                    // (a singleton that survived AC is SAC — the probe
-                    // outcome is known)
-                    if !state.contains(x, a) || state.dom_size(x) <= 1 {
-                        continue;
-                    }
-                    let cur = self.slab.checkout(state.plane());
-                    let snap = self.slab.checkout_scratch(state.plane());
-                    let scratch = self.scratch_pool.pop().unwrap_or_default();
-                    jobs.push((x, a, cur, snap, scratch));
-                }
+                // skipping values already removed by an earlier round's
+                // fallout, and variables that fallout reduced to a
+                // singleton (a singleton that survived AC is SAC — the
+                // probe outcome is known).
+                let round: Vec<(VarId, Val)> = self.pairs[start..end]
+                    .iter()
+                    .copied()
+                    .filter(|&(x, a)| state.contains(x, a) && state.dom_size(x) > 1)
+                    .collect();
                 start = end;
-                if jobs.is_empty() {
+                if round.is_empty() {
                     continue;
                 }
-                self.probes += jobs.len() as u64;
-                let tasks: Vec<_> = jobs
-                    .into_iter()
-                    .map(|(x, a, mut cur, mut snap, mut scratch)| {
-                        move || {
-                            let mut c = Counters::default();
-                            cur.assign(x, a);
-                            let consistent = plane_fixpoint(
-                                problem,
-                                &mut cur,
-                                &mut snap,
-                                x,
-                                &mut scratch,
-                                &mut c,
-                            );
-                            (x, a, consistent, cur, snap, scratch, c)
-                        }
-                    })
-                    .collect();
-                let results = self.pool.as_mut().expect("pool sized above").run_collect(tasks);
-                // Merge in launch order: counters stay deterministic and
-                // the scratch buffers go back to their pools before any
-                // state-level propagation runs.
-                let mut failed: Vec<(VarId, Val)> = Vec::new();
-                for (x, a, consistent, cur, snap, scratch, c) in results {
-                    counters.add(&c);
-                    self.slab.checkin(cur);
-                    self.slab.checkin(snap);
-                    self.scratch_pool.push(scratch);
-                    if !consistent {
-                        failed.push((x, a));
+                self.probes += round.len() as u64;
+                let verdicts = match self.backend.run_probes(problem, state, &round, counters) {
+                    Ok(v) => v,
+                    Err(e) => {
+                        self.failed = Some(format!("{e:#}"));
+                        return Outcome::Wipeout(0);
                     }
-                }
+                };
+                debug_assert_eq!(verdicts.len(), round.len());
                 // Probe failure is monotone (see module docs): every
                 // failed probe's value goes, each followed by AC
                 // re-propagation — exactly SAC-1's confirmed-removal
                 // step, just k at a time.
-                for (x, a) in failed {
+                for ((x, a), consistent) in round.into_iter().zip(verdicts) {
+                    if consistent {
+                        continue;
+                    }
                     if !state.contains(x, a) {
                         continue; // an earlier removal's fallout got it
                     }
@@ -360,14 +570,18 @@ impl SacParallel {
 
 impl Propagator for SacParallel {
     fn name(&self) -> &'static str {
-        "sac-par"
+        self.backend.engine_name()
     }
 
     fn reset(&mut self, problem: &Problem) {
         self.inner.reset(problem);
+        self.backend.reset(problem);
         self.probes = 0;
-        // pool and slab survive: the persistent runtime is the point
-        // (the slab drops stale-layout planes lazily on checkout)
+        self.failed = None;
+    }
+
+    fn failure(&self) -> Option<&str> {
+        self.failed.as_deref()
     }
 
     fn enforce(
@@ -378,6 +592,126 @@ impl Propagator for SacParallel {
         counters: &mut Counters,
     ) -> Outcome {
         self.enforce_sac(problem, state, counters)
+    }
+}
+
+/// `sac-xla[N]` as a self-contained engine: lazily starts — and owns —
+/// a coordinator session for the problem it enforces on, then runs
+/// [`SacParallel`] with the [`XlaProbeBackend`].  Sessions are
+/// per-problem (the constraint tensor is device-resident), so the
+/// session restarts when the problem changes (`reset`, or a different
+/// problem fingerprint at `enforce`).  Artifact-gated: without compiled
+/// artifacts the first enforcement poisons the engine (`failed`) and
+/// reports wipeout, like `TensorEngine` on a coordinator failure.
+pub struct SacXla {
+    /// Probes per round; 0 = auto.
+    batch: usize,
+    artifact_dir: std::path::PathBuf,
+    session: Option<(crate::coordinator::Coordinator, SacParallel)>,
+    /// Fingerprint of the problem the live session serves.
+    session_key: Option<u64>,
+    pub failed: Option<String>,
+}
+
+/// Content fingerprint of a problem: variable count, domain sizes, and
+/// every constraint's scope + relation bits.  Guards [`SacXla`]'s
+/// session reuse — the constraint tensor is device-resident, so reusing
+/// a session for a same-*shaped* but different problem would silently
+/// probe against the wrong constraints.  O(e·d²), but SacXla only
+/// serves bucket-sized problems, where that is microseconds.
+fn problem_fingerprint(problem: &Problem) -> u64 {
+    fn mix(h: u64, v: u64) -> u64 {
+        (h ^ v).wrapping_mul(0x0000_0100_0000_01b3) // FNV-1a step
+    }
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    h = mix(h, problem.n_vars() as u64);
+    for v in 0..problem.n_vars() {
+        h = mix(h, problem.dom_size(v) as u64);
+    }
+    for c in problem.constraints() {
+        h = mix(h, ((c.x as u64) << 32) | c.y as u64);
+        for a in 0..c.rel.dx() {
+            for b in c.rel.row_fwd(a).iter_ones() {
+                h = mix(h, ((a as u64) << 32) | b as u64);
+            }
+        }
+    }
+    h
+}
+
+impl SacXla {
+    /// Engine against `runtime::default_artifact_dir()` (what
+    /// `make_engine("sac-xla[N]")` constructs).
+    pub fn new(batch: usize) -> SacXla {
+        SacXla::with_artifact_dir(batch, crate::runtime::default_artifact_dir())
+    }
+
+    pub fn with_artifact_dir(batch: usize, artifact_dir: std::path::PathBuf) -> SacXla {
+        SacXla { batch, artifact_dir, session: None, session_key: None, failed: None }
+    }
+
+    fn ensure_session(&mut self, problem: &Problem) -> anyhow::Result<()> {
+        let key = problem_fingerprint(problem);
+        if self.session.is_some() && self.session_key == Some(key) {
+            return Ok(());
+        }
+        self.session = None;
+        self.session_key = None;
+        let config = crate::coordinator::CoordinatorConfig {
+            artifact_dir: self.artifact_dir.clone(),
+            // adaptive batching: probe rounds arrive as contiguous
+            // bursts, so the executor sizes its window from what it
+            // actually sees instead of a fixed policy
+            policy: crate::coordinator::BatchPolicy { adaptive: true, ..Default::default() },
+        };
+        let coordinator = crate::coordinator::Coordinator::start(problem, config)?;
+        let engine = SacParallel::tensor(coordinator.handle(), self.batch);
+        self.session = Some((coordinator, engine));
+        self.session_key = Some(key);
+        Ok(())
+    }
+}
+
+impl Propagator for SacXla {
+    fn name(&self) -> &'static str {
+        "sac-xla"
+    }
+
+    fn reset(&mut self, _problem: &Problem) {
+        // per-problem session: tear it down; the next enforcement
+        // starts a fresh one (and re-uploads the constraint tensor)
+        self.session = None;
+        self.session_key = None;
+        self.failed = None;
+    }
+
+    fn failure(&self) -> Option<&str> {
+        self.failed.as_deref()
+    }
+
+    fn enforce(
+        &mut self,
+        problem: &Problem,
+        state: &mut State,
+        _touched: &[VarId],
+        counters: &mut Counters,
+    ) -> Outcome {
+        if self.failed.is_some() {
+            return Outcome::Wipeout(0);
+        }
+        if let Err(e) = self.ensure_session(problem) {
+            let msg = format!("starting coordinator session: {e:#}");
+            eprintln!("sac-xla: {msg}");
+            self.failed = Some(msg);
+            return Outcome::Wipeout(0);
+        }
+        let (_, engine) = self.session.as_mut().expect("session ensured above");
+        let out = engine.enforce_sac(problem, state, counters);
+        if let Some(e) = engine.failed.clone() {
+            eprintln!("sac-xla: {e}");
+            self.failed = Some(e);
+        }
+        out
     }
 }
 
@@ -519,6 +853,130 @@ mod tests {
             }
             engine.reset(&p);
         }
+    }
+
+    /// Seam double: answers every probe "consistent" and records what it
+    /// was asked, so the merge loop's filtering contract is observable.
+    struct RecordingBackend {
+        rounds: std::rc::Rc<std::cell::RefCell<Vec<Vec<(VarId, Val)>>>>,
+        k: usize,
+        fail_after: Option<usize>,
+    }
+
+    impl ProbeBackend for RecordingBackend {
+        fn batch(&self) -> usize {
+            self.k
+        }
+        fn engine_name(&self) -> &'static str {
+            "sac-test"
+        }
+        fn run_probes(
+            &mut self,
+            _problem: &Problem,
+            state: &State,
+            probes: &[(VarId, Val)],
+            _counters: &mut Counters,
+        ) -> anyhow::Result<Vec<bool>> {
+            let mut rounds = self.rounds.borrow_mut();
+            if let Some(limit) = self.fail_after {
+                if rounds.len() >= limit {
+                    anyhow::bail!("backend exploded");
+                }
+            }
+            for &(x, a) in probes {
+                assert!(state.contains(x, a), "backend got a dead probe ({x}, {a})");
+                assert!(state.dom_size(x) > 1, "backend got a singleton probe ({x}, {a})");
+            }
+            rounds.push(probes.to_vec());
+            Ok(vec![true; probes.len()])
+        }
+    }
+
+    #[test]
+    fn merge_loop_hands_backends_filtered_rounds_of_at_most_k() {
+        // equality chain: root AC keeps every domain full, so the probe
+        // set is deterministic (12 pairs -> rounds of <= 3)
+        let mut p = Problem::new("chain", 4, 3);
+        let eq = Relation::from_fn(3, 3, |a, b| a == b);
+        for v in 0..3 {
+            p.add_constraint(v, v + 1, eq.clone());
+        }
+        let rounds = std::rc::Rc::new(std::cell::RefCell::new(Vec::new()));
+        let backend = RecordingBackend { rounds: rounds.clone(), k: 3, fail_after: None };
+        let mut engine = SacParallel::with_backend(Box::new(backend));
+        let mut s = State::new(&p);
+        let mut c = Counters::default();
+        let out = engine.enforce_sac(&p, &mut s, &mut c);
+        assert!(out.is_consistent(), "all-consistent verdicts cannot wipe anything");
+        assert_eq!(engine.name(), "sac-test");
+        let rounds = rounds.borrow();
+        assert!(!rounds.is_empty());
+        assert!(rounds.iter().all(|r| !r.is_empty() && r.len() <= 3), "round sizes: {rounds:?}");
+        let probed: u64 = rounds.iter().map(|r| r.len() as u64).sum();
+        assert_eq!(probed, engine.probes);
+    }
+
+    #[test]
+    fn backend_failure_poisons_the_engine() {
+        // pigeonhole(3,2) is AC-consistent with full domains: the merge
+        // loop reliably reaches a second probe round (6 pairs, k = 2)
+        let p = crate::gen::pigeonhole(3, 2);
+        let rounds = std::rc::Rc::new(std::cell::RefCell::new(Vec::new()));
+        let backend = RecordingBackend { rounds, k: 2, fail_after: Some(1) };
+        let mut engine = SacParallel::with_backend(Box::new(backend));
+        let mut s = State::new(&p);
+        let mut c = Counters::default();
+        let out = engine.enforce_sac(&p, &mut s, &mut c);
+        assert!(!out.is_consistent(), "a failed backend must not report consistent");
+        let msg = engine.failed.as_deref().expect("engine poisoned");
+        assert!(msg.contains("exploded"), "lost the backend error: {msg}");
+        // reachable through the trait too, so the CLI can refuse to turn
+        // a poisoned run into an UNSAT verdict
+        assert_eq!(engine.failure(), Some(msg));
+        // poisoned engines stay poisoned (like TensorEngine)
+        let mut s2 = State::new(&p);
+        assert!(!engine.enforce_sac(&p, &mut s2, &mut c).is_consistent());
+        // ...until reset
+        engine.reset(&p);
+        assert!(engine.failed.is_none());
+    }
+
+    #[test]
+    fn problem_fingerprint_distinguishes_same_shaped_problems() {
+        // same name, var count, domain sizes, and constraint scopes —
+        // only the relation bits differ.  SacXla must NOT reuse a
+        // session (and its device-resident constraint tensor) across
+        // these.
+        let mut eq_chain = Problem::new("chain", 4, 3);
+        let mut neq_chain = Problem::new("chain", 4, 3);
+        let eq = Relation::from_fn(3, 3, |a, b| a == b);
+        let ne = Relation::from_fn(3, 3, |a, b| a != b);
+        for v in 0..3 {
+            eq_chain.add_constraint(v, v + 1, eq.clone());
+            neq_chain.add_constraint(v, v + 1, ne.clone());
+        }
+        assert_ne!(problem_fingerprint(&eq_chain), problem_fingerprint(&neq_chain));
+        assert_eq!(problem_fingerprint(&eq_chain), problem_fingerprint(&eq_chain));
+    }
+
+    #[test]
+    fn sac_xla_without_artifacts_poisons_not_panics() {
+        // offline (no artifact dir): the lazy session start must fail
+        // cleanly — poisoned engine, wipeout outcome, clear message.
+        let mut engine = SacXla::with_artifact_dir(
+            4,
+            std::path::PathBuf::from("/nonexistent-artifact-dir"),
+        );
+        assert_eq!(engine.name(), "sac-xla");
+        let p = crate::gen::pigeonhole(3, 2);
+        let mut s = State::new(&p);
+        let mut c = Counters::default();
+        let out = engine.enforce(&p, &mut s, &[], &mut c);
+        assert!(!out.is_consistent());
+        let msg = engine.failed.as_deref().expect("offline sac-xla must poison");
+        assert!(msg.contains("coordinator session"), "unhelpful failure: {msg}");
+        engine.reset(&p);
+        assert!(engine.failed.is_none(), "reset must clear the poison for a retry");
     }
 
     #[test]

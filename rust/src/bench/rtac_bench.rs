@@ -204,6 +204,96 @@ pub fn render_sac(c: &SacComparison) -> String {
     )
 }
 
+/// Tensor-route cell: batched SAC probes through the coordinator onto
+/// the compiled `fixb*` executables (`sac-xla`) vs the CPU pool
+/// (`sac-par`), plus the fused-batch occupancy the coordinator achieved.
+#[derive(Clone, Debug)]
+pub struct SacXlaComparison {
+    pub n: usize,
+    pub density: f64,
+    pub dom: usize,
+    pub workers: usize,
+    pub sac_par_ms: f64,
+    pub sac_xla_ms: f64,
+    /// sac-par wall time over sac-xla wall time (>1 = tensor route wins).
+    pub speedup: f64,
+    /// The session's `MetricsSnapshot::mean_batch_occupancy`: mean
+    /// *count* of real requests per fused execution (e.g. 3.5), NOT a
+    /// 0..1 fraction like `Response::occupancy`.
+    pub mean_batch_occupancy: f64,
+    pub probes: u64,
+}
+
+/// Measure the tensor-routed SAC cell.  Self-skips (`None`) when the
+/// default artifact dir has no manifest or no bucket fits — mirroring
+/// the artifact-gated runtime suite — so offline bench runs lose only
+/// this cell.  The instance is capped to the compiled bucket range
+/// (the grid's MAC cells are far larger than any artifact bucket).
+pub fn sac_xla_comparison(spec: &GridSpec, workers: usize) -> Option<SacXlaComparison> {
+    use crate::coordinator::{BatchPolicy, Coordinator, CoordinatorConfig};
+
+    let dir = crate::runtime::default_artifact_dir();
+    if !dir.join("manifest.json").exists() {
+        return None;
+    }
+    let n = spec.sizes.iter().copied().max()?.min(14);
+    let density = spec
+        .densities
+        .iter()
+        .copied()
+        .max_by(|a, b| a.partial_cmp(b).unwrap())?;
+    let dom = spec.dom_size.clamp(2, 8);
+    let p = random_csp(&RandomSpec::new(n, dom, density, spec.tightness, spec.seed));
+    let coord = Coordinator::start(
+        &p,
+        CoordinatorConfig {
+            artifact_dir: dir,
+            policy: BatchPolicy { adaptive: true, ..Default::default() },
+        },
+    )
+    .ok()?; // no fitting bucket / broken artifacts: skip the cell
+
+    let mut par = SacParallel::new(workers);
+    let mut s_par = State::new(&p);
+    let mut c_par = Counters::default();
+    let sw = Stopwatch::start();
+    let o_par = par.enforce_sac(&p, &mut s_par, &mut c_par);
+    let sac_par_ms = sw.elapsed_ms();
+
+    let mut xla = SacParallel::tensor(coord.handle(), 0);
+    let mut s_xla = State::new(&p);
+    let mut c_xla = Counters::default();
+    let sw = Stopwatch::start();
+    let o_xla = xla.enforce_sac(&p, &mut s_xla, &mut c_xla);
+    let sac_xla_ms = sw.elapsed_ms();
+    if xla.failed.is_some() {
+        return None; // session died mid-run: no comparable numbers
+    }
+    debug_assert_eq!(o_par.is_consistent(), o_xla.is_consistent());
+    let mean_batch_occupancy = coord.metrics().snapshot().mean_batch_occupancy;
+    Some(SacXlaComparison {
+        n,
+        density,
+        dom,
+        workers,
+        sac_par_ms,
+        sac_xla_ms,
+        speedup: if sac_xla_ms > 0.0 { sac_par_ms / sac_xla_ms } else { 0.0 },
+        mean_batch_occupancy,
+        probes: xla.probes,
+    })
+}
+
+/// One-line report for the tensor-route SAC cell.
+pub fn render_sac_xla(c: &SacXlaComparison) -> String {
+    format!(
+        "sac tensor cell (n={}, density={:.2}, dom={}): sac-par{} {:.1}ms vs sac-xla \
+         {:.1}ms -> {:.2}x ({:.2} reqs/fused execution, {} probes)\n",
+        c.n, c.density, c.dom, c.workers, c.sac_par_ms, c.sac_xla_ms, c.speedup,
+        c.mean_batch_occupancy, c.probes
+    )
+}
+
 /// Paper-style matrix: one row per (n, density), ns/assignment per
 /// engine plus the recurrence column (identical across the family by
 /// construction — printed once as a sanity signal).
@@ -251,8 +341,13 @@ pub fn render(results: &[CellResult], engines: &[&str]) -> String {
 }
 
 /// JSON export: grid metadata + one row per cell (BENCH_rtac.json),
-/// plus the densest-cell verdicts and the SAC comparison when run.
-pub fn to_json(spec: &GridSpec, results: &[CellResult], sac: Option<&SacComparison>) -> Json {
+/// plus the densest-cell verdicts and the SAC comparisons when run.
+pub fn to_json(
+    spec: &GridSpec,
+    results: &[CellResult],
+    sac: Option<&SacComparison>,
+    sac_xla: Option<&SacXlaComparison>,
+) -> Json {
     let rows = Json::Arr(
         results
             .iter()
@@ -292,6 +387,16 @@ pub fn to_json(spec: &GridSpec, results: &[CellResult], sac: Option<&SacComparis
         fields.push(("sac_par_ms", num(c.sac_par_ms)));
         fields.push(("sac_par_speedup", num(c.speedup)));
         fields.push(("sac_probes", num(c.probes as f64)));
+    }
+    if let Some(c) = sac_xla {
+        fields.push(("sac_xla_n", num(c.n as f64)));
+        fields.push(("sac_xla_ms", num(c.sac_xla_ms)));
+        fields.push(("sac_xla_vs_par_ms", num(c.sac_par_ms)));
+        fields.push(("sac_xla_speedup", num(c.speedup)));
+        // the coordinator's occupancy metric: mean real requests per
+        // fused execution (a count, not a 0..1 fraction)
+        fields.push(("sac_xla_mean_batch_occupancy", num(c.mean_batch_occupancy)));
+        fields.push(("sac_xla_probes", num(c.probes as f64)));
     }
     obj(fields)
 }
@@ -338,7 +443,7 @@ mod tests {
     #[test]
     fn json_has_row_per_cell_and_parses_back() {
         let (spec, results) = tiny_results();
-        let j = to_json(&spec, &results, None);
+        let j = to_json(&spec, &results, None, None);
         let parsed = crate::util::json::parse(&j.to_string()).unwrap();
         assert_eq!(
             parsed.get("rows").unwrap().as_arr().unwrap().len(),
@@ -394,9 +499,43 @@ mod tests {
         assert!(c.sac_ms >= 0.0 && c.sac_par_ms >= 0.0);
         let txt = render_sac(&c);
         assert!(txt.contains("sac-par2"));
-        let j = to_json(&spec, &run(&spec, &["rtac"]), Some(&c));
+        let j = to_json(&spec, &run(&spec, &["rtac"]), Some(&c), None);
         let parsed = crate::util::json::parse(&j.to_string()).unwrap();
         assert!(parsed.get("sac_par_speedup").is_some());
         assert!(parsed.get("sac_probes").is_some());
+    }
+
+    #[test]
+    fn sac_xla_cell_exports_and_renders() {
+        let spec = GridSpec {
+            sizes: vec![8],
+            densities: vec![1.0],
+            dom_size: 4,
+            tightness: 0.3,
+            assignments: 10,
+            seed: 3,
+        };
+        // offline this self-skips; either way the JSON/render plumbing
+        // must hold up
+        let cell = sac_xla_comparison(&spec, 2);
+        let fake = SacXlaComparison {
+            n: 8,
+            density: 1.0,
+            dom: 4,
+            workers: 2,
+            sac_par_ms: 2.0,
+            sac_xla_ms: 1.0,
+            speedup: 2.0,
+            mean_batch_occupancy: 3.5,
+            probes: 40,
+        };
+        let c = cell.as_ref().unwrap_or(&fake);
+        let txt = render_sac_xla(c);
+        assert!(txt.contains("sac-xla"));
+        assert!(txt.contains("reqs/fused execution"));
+        let j = to_json(&spec, &run(&spec, &["rtac"]), None, Some(c));
+        let parsed = crate::util::json::parse(&j.to_string()).unwrap();
+        assert!(parsed.get("sac_xla_mean_batch_occupancy").is_some());
+        assert!(parsed.get("sac_xla_speedup").is_some());
     }
 }

@@ -32,6 +32,10 @@ impl Propagator for TensorEngine {
         "tensor-xla"
     }
 
+    fn failure(&self) -> Option<&str> {
+        self.failed.as_deref()
+    }
+
     fn enforce(
         &mut self,
         problem: &Problem,

@@ -1,5 +1,6 @@
 //! Coordinator metrics: request/batch counters, latency decomposition
-//! (queue wait vs execution), batch-occupancy histogram, padding waste.
+//! (queue wait vs execution), batch-occupancy histogram, padding waste,
+//! and failure accounting (failed fused executions, dropped requests).
 
 use std::sync::Mutex;
 use std::time::Duration;
@@ -17,6 +18,8 @@ struct Inner {
     requests: u64,
     responses: u64,
     batches: u64,
+    failed_batches: u64,
+    dropped_requests: u64,
     batch_occupancy_sum: u64,
     padded_slots: u64,
     wipeouts: u64,
@@ -31,7 +34,15 @@ struct Inner {
 pub struct MetricsSnapshot {
     pub requests: u64,
     pub responses: u64,
+    /// Successfully executed fused batches only — a failed XLA execution
+    /// counts in `failed_batches`, not here, so occupancy and exec stats
+    /// describe work that actually produced responses.
     pub batches: u64,
+    /// Fused executions that returned an error from the runtime.
+    pub failed_batches: u64,
+    /// Requests whose responders were dropped without a response (their
+    /// batch failed, or the executor shut down with them in flight).
+    pub dropped_requests: u64,
     pub mean_batch_occupancy: f64,
     pub padded_slots: u64,
     pub wipeouts: u64,
@@ -51,13 +62,24 @@ impl Metrics {
         self.inner.lock().unwrap().requests += 1;
     }
 
-    /// Record one executed batch: `real` occupied slots of `capacity`.
+    /// Record one *successfully executed* batch: `real` occupied slots of
+    /// `capacity`.  Must be called only after the runtime returned `Ok` —
+    /// failed executions go through [`Metrics::on_batch_failed`] so they
+    /// cannot skew occupancy or exec-latency stats.
     pub fn on_batch(&self, real: usize, capacity: usize, exec: Duration) {
         let mut m = self.inner.lock().unwrap();
         m.batches += 1;
         m.batch_occupancy_sum += real as u64;
         m.padded_slots += (capacity - real) as u64;
         m.exec_us.push(exec.as_secs_f64() * 1e6);
+    }
+
+    /// Record one failed fused execution: its `real` requests are dropped
+    /// (their responders never fire).
+    pub fn on_batch_failed(&self, real: usize) {
+        let mut m = self.inner.lock().unwrap();
+        m.failed_batches += 1;
+        m.dropped_requests += real as u64;
     }
 
     /// Record one completed request.
@@ -78,6 +100,8 @@ impl Metrics {
             requests: m.requests,
             responses: m.responses,
             batches: m.batches,
+            failed_batches: m.failed_batches,
+            dropped_requests: m.dropped_requests,
             mean_batch_occupancy: if m.batches == 0 {
                 0.0
             } else {
@@ -98,11 +122,13 @@ impl MetricsSnapshot {
     /// One-line human summary (served by `rtac serve` and the examples).
     pub fn summary(&self) -> String {
         format!(
-            "req={} resp={} batches={} occ={:.2} padded={} wipeouts={} \
-             queue={:.0}µs exec={:.0}µs total={:.0}µs iters={:.2}",
+            "req={} resp={} batches={} failed={} dropped={} occ={:.2} padded={} \
+             wipeouts={} queue={:.0}µs exec={:.0}µs total={:.0}µs iters={:.2}",
             self.requests,
             self.responses,
             self.batches,
+            self.failed_batches,
+            self.dropped_requests,
             self.mean_batch_occupancy,
             self.padded_slots,
             self.wipeouts,
@@ -111,6 +137,13 @@ impl MetricsSnapshot {
             self.mean_total_us,
             self.mean_iters,
         )
+    }
+
+    /// Conservation invariant at quiescence: every request that reached
+    /// the queue was either answered or explicitly dropped.  (Transiently
+    /// false while requests are in flight.)
+    pub fn conserved(&self) -> bool {
+        self.requests == self.responses + self.dropped_requests
     }
 }
 
@@ -130,11 +163,14 @@ mod tests {
         assert_eq!(s.requests, 2);
         assert_eq!(s.responses, 2);
         assert_eq!(s.batches, 1);
+        assert_eq!(s.failed_batches, 0);
+        assert_eq!(s.dropped_requests, 0);
         assert_eq!(s.padded_slots, 2);
         assert_eq!(s.wipeouts, 1);
         assert!((s.mean_batch_occupancy - 2.0).abs() < 1e-9);
         assert!((s.mean_iters - 4.5).abs() < 1e-9);
         assert!(s.mean_total_us > s.mean_queue_us);
+        assert!(s.conserved());
         assert!(!s.summary().is_empty());
     }
 
@@ -143,5 +179,27 @@ mod tests {
         let s = Metrics::new().snapshot();
         assert_eq!(s.requests, 0);
         assert_eq!(s.mean_batch_occupancy, 0.0);
+        assert!(s.conserved());
+    }
+
+    #[test]
+    fn failed_batches_do_not_skew_success_stats() {
+        let m = Metrics::new();
+        for _ in 0..3 {
+            m.on_submit();
+        }
+        // one successful batch of 2, one failed batch dropping 1 request
+        m.on_batch(2, 4, Duration::from_micros(100));
+        m.on_response(Duration::from_micros(10), Duration::from_micros(110), 3, false);
+        m.on_response(Duration::from_micros(12), Duration::from_micros(112), 3, false);
+        m.on_batch_failed(1);
+        let s = m.snapshot();
+        assert_eq!(s.batches, 1, "failed executions must not count as batches");
+        assert_eq!(s.failed_batches, 1);
+        assert_eq!(s.dropped_requests, 1);
+        assert!((s.mean_batch_occupancy - 2.0).abs() < 1e-9);
+        assert!(s.conserved(), "requests == responses + dropped at quiescence");
+        assert!(s.summary().contains("failed=1"));
+        assert!(s.summary().contains("dropped=1"));
     }
 }

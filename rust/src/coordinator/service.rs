@@ -30,16 +30,97 @@ use crate::runtime::{encode_cons, Bucket, Kind, Manifest, Runtime, STATUS_WIPEOU
 /// Batching policy.
 #[derive(Clone, Debug)]
 pub struct BatchPolicy {
-    /// Upper bound on fused requests (must be a compiled batch size).
+    /// Upper bound on fused requests.  Must be >= 1 (rejected at
+    /// [`Coordinator::start`]); values above the largest compiled
+    /// `fixb*` size are clamped by the executor.  User-facing callers
+    /// (`rtac serve --max-batch`) run [`Coordinator::validate_policy`]
+    /// first so an explicit out-of-range value fails fast at startup
+    /// instead of being silently clamped.
     pub max_batch: usize,
     /// How long the executor waits for batch-mates after the first
-    /// request arrives.  0 disables coalescing (batch == 1 always).
+    /// request arrives.  0 disables the wait — requests already sitting
+    /// on the queue (e.g. a contiguous [`Handle::submit_batch`] probe
+    /// batch) still fuse, because the executor drains the queue greedily
+    /// before executing.
     pub max_wait: Duration,
+    /// Derive the effective (max_batch, max_wait) from the observed
+    /// queue demand instead of the fixed values above: solo traffic
+    /// stops paying the coalescing wait, bursty traffic grows the batch
+    /// cap toward the largest compiled size.  `max_batch` stays the hard
+    /// upper bound; `max_wait` the longest wait.  See [`AdaptiveBatcher`].
+    pub adaptive: bool,
 }
 
 impl Default for BatchPolicy {
     fn default() -> Self {
-        BatchPolicy { max_batch: 8, max_wait: Duration::from_micros(300) }
+        BatchPolicy { max_batch: 8, max_wait: Duration::from_micros(300), adaptive: false }
+    }
+}
+
+/// §Adaptive batching: derives the effective batching knobs from the
+/// observed queue demand (an EWMA of how many requests were pending at
+/// each execute decision) instead of a fixed policy.
+///
+/// * `max_wait` — when the demand says requests arrive alone, waiting
+///   for batch-mates only adds latency, so the wait drops to zero; once
+///   fusible traffic shows up the configured wait comes back.
+/// * `max_batch` — aimed at [`AdaptiveBatcher::HEADROOM`]× the demand
+///   (rounded up to a compiled batch size) so the executor stops
+///   coalescing at a size traffic can actually fill, while bursts keep
+///   enough headroom to grow the cap back within a few observations.
+///
+/// Pure bookkeeping (no clock, no channel) so the policy is unit-tested
+/// independently of the executor loop.
+pub(crate) struct AdaptiveBatcher {
+    /// Hard caps from the configured policy.
+    cap_batch: usize,
+    cap_wait: Duration,
+    /// EWMA of queue demand at execute decisions; `None` before the
+    /// first observation (start wide open: largest batch, full wait).
+    demand: Option<f64>,
+}
+
+impl AdaptiveBatcher {
+    const ALPHA: f64 = 0.25;
+    const HEADROOM: f64 = 2.0;
+    /// Below this demand the traffic is effectively solo and the
+    /// coalescing wait is pure latency.
+    const SOLO_DEMAND: f64 = 1.5;
+
+    pub(crate) fn new(policy: &BatchPolicy) -> AdaptiveBatcher {
+        AdaptiveBatcher { cap_batch: policy.max_batch, cap_wait: policy.max_wait, demand: None }
+    }
+
+    /// Record the queue demand observed at one execute decision.
+    pub(crate) fn observe(&mut self, demand: usize) {
+        let d = demand as f64;
+        self.demand = Some(match self.demand {
+            None => d,
+            Some(prev) => Self::ALPHA * d + (1.0 - Self::ALPHA) * prev,
+        });
+    }
+
+    /// Effective batch cap given the compiled sizes (ascending, deduped).
+    pub(crate) fn max_batch(&self, compiled: &[usize]) -> usize {
+        let largest = compiled.last().copied().unwrap_or(1).min(self.cap_batch).max(1);
+        let Some(demand) = self.demand else {
+            return largest;
+        };
+        let want = (demand * Self::HEADROOM).ceil().max(1.0) as usize;
+        compiled
+            .iter()
+            .copied()
+            .find(|&b| b >= want)
+            .unwrap_or(largest)
+            .min(largest)
+    }
+
+    /// Effective coalescing wait.
+    pub(crate) fn max_wait(&self) -> Duration {
+        match self.demand {
+            Some(d) if d < Self::SOLO_DEMAND => Duration::ZERO,
+            _ => self.cap_wait,
+        }
     }
 }
 
@@ -74,8 +155,13 @@ pub struct Response {
     pub status: i32,
     /// Joint sweep count of the batch that served this request.
     pub iters: i32,
-    /// Requests fused into the same execution.
-    pub batch_size: usize,
+    /// *Real* requests fused into the execution that served this request
+    /// (padded slots excluded).
+    pub batch_real: usize,
+    /// Compiled capacity of that execution, padding included — so the
+    /// call site can compute fused-batch occupancy
+    /// ([`Response::occupancy`]) without access to the manifest.
+    pub batch_capacity: usize,
     pub queue_time: Duration,
     pub total_time: Duration,
 }
@@ -83,6 +169,11 @@ pub struct Response {
 impl Response {
     pub fn wiped(&self) -> bool {
         self.status == STATUS_WIPEOUT
+    }
+
+    /// Fraction of the serving execution's slots holding real requests.
+    pub fn occupancy(&self) -> f64 {
+        self.batch_real as f64 / self.batch_capacity.max(1) as f64
     }
 }
 
@@ -107,15 +198,52 @@ impl Handle {
         let (rtx, rrx) = mpsc::channel();
         self.tx
             .send(Request { plane, submitted: Instant::now(), resp: rtx })
-            .map_err(|_| anyhow!("coordinator is shut down"))?;
+            .map_err(|_| self.executor_gone_err())?;
         self.metrics.on_submit(); // count only planes that reached the queue
         Ok(rrx)
+    }
+
+    /// The executor's request channel is closed: it exited (or the
+    /// session was shut down).  Diagnose *why* from the shared metrics
+    /// so callers see more than a bare channel error.
+    fn executor_gone_err(&self) -> anyhow::Error {
+        let m = self.metrics.snapshot();
+        if m.failed_batches > 0 {
+            anyhow!(
+                "coordinator executor is gone after {} failed fused execution(s) \
+                 ({} request(s) dropped; see the rtac-executor log)",
+                m.failed_batches,
+                m.dropped_requests
+            )
+        } else {
+            anyhow!("coordinator is shut down (executor thread exited)")
+        }
+    }
+
+    /// A submitted request's responder was dropped without an answer:
+    /// its fused execution failed, or the executor exited with the
+    /// request in flight.
+    fn dropped_err(&self) -> anyhow::Error {
+        let m = self.metrics.snapshot();
+        if m.failed_batches > 0 {
+            anyhow!(
+                "coordinator dropped the request: {} fused execution(s) failed on the \
+                 executor ({} request(s) dropped; see the rtac-executor log)",
+                m.failed_batches,
+                m.dropped_requests
+            )
+        } else {
+            anyhow!(
+                "coordinator executor exited before answering (session shut down with \
+                 the request in flight)"
+            )
+        }
     }
 
     /// Submit and block for the result.
     pub fn enforce_blocking(&self, plane: Vec<f32>) -> Result<Response> {
         let rx = self.submit(plane)?;
-        rx.recv().context("coordinator dropped the request (executor died?)")
+        rx.recv().map_err(|_| self.dropped_err())
     }
 
     /// Submit several planes back-to-back — the batched-probe path.
@@ -147,7 +275,7 @@ impl Handle {
             let (rtx, rrx) = mpsc::channel();
             self.tx
                 .send(Request { plane, submitted, resp: rtx })
-                .map_err(|_| anyhow!("coordinator is shut down"))?;
+                .map_err(|_| self.executor_gone_err())?;
             self.metrics.on_submit(); // only planes that actually reached the queue
             receivers.push(rrx);
         }
@@ -158,7 +286,12 @@ impl Handle {
     pub fn enforce_batch_blocking(&self, planes: Vec<Vec<f32>>) -> Result<Vec<Response>> {
         self.submit_batch(planes)?
             .into_iter()
-            .map(|rx| rx.recv().context("coordinator dropped a batched request (executor died?)"))
+            .enumerate()
+            .map(|(i, rx)| {
+                rx.recv()
+                    .map_err(|_| self.dropped_err())
+                    .with_context(|| format!("batched probe {i}"))
+            })
             .collect()
     }
 }
@@ -171,18 +304,19 @@ pub struct Coordinator {
 
 impl Coordinator {
     /// Start a session for `problem`.  Blocks until the executor thread
-    /// has loaded the runtime and encoded the constraint tensor (so a
-    /// broken artifact dir fails fast, here, not on first request).
+    /// has loaded the runtime, compiled the artifacts AND uploaded the
+    /// constraint tensor (so a broken artifact dir — or a failed upload —
+    /// fails fast, here, not on first request).
     pub fn start(problem: &Problem, config: CoordinatorConfig) -> Result<Coordinator> {
         // pick the bucket from the manifest before spawning, so errors
-        // (problem too large for any artifact) surface synchronously.
-        let manifest = Manifest::load(&config.artifact_dir)?;
-        let n = problem.n_vars();
-        let d = problem.max_dom_size();
-        let entry = manifest
-            .pick(Kind::Fixpoint, n, d, 1)
-            .ok_or_else(|| anyhow!("no artifact bucket fits ({n} vars × {d} values)"))?;
-        let bucket = Bucket { n: entry.n, d: entry.d };
+        // (problem too large for any artifact, zero max_batch) surface
+        // synchronously.  An *oversized* max_batch is clamped to the
+        // largest compiled size by the executor (programmatic callers
+        // with the default policy must keep working on reduced artifact
+        // sets); callers with an explicit user-facing knob (`rtac serve
+        // --max-batch`) use [`Coordinator::validate_policy`] to fail
+        // fast instead.
+        let (_, bucket) = pick_bucket(problem, &config)?;
         let cons = encode_cons(problem, bucket)?;
 
         let metrics = Arc::new(Metrics::new());
@@ -204,6 +338,36 @@ impl Coordinator {
             .context("executor startup failed")?;
 
         Ok(Coordinator { handle: Handle { tx, bucket, metrics }, join: Some(join) })
+    }
+
+    /// Validate `config.policy` against the compiled artifacts for
+    /// `problem` *without* starting a session: picks the shape bucket
+    /// (the same way [`Coordinator::start`] will) and checks `max_batch`
+    /// against the compiled `fixb*` batch sizes.  `rtac serve` calls
+    /// this so an explicit `--max-batch` with no matching artifact fails
+    /// at startup with a clear message — the old behavior surfaced it
+    /// only on the first fused request, as a mid-run execution failure.
+    /// (Without this check, oversized caps are silently clamped by the
+    /// executor.)
+    pub fn validate_policy(problem: &Problem, config: &CoordinatorConfig) -> Result<()> {
+        let (manifest, bucket) = pick_bucket(problem, config)?;
+        let compiled = compiled_batch_sizes(&manifest, bucket);
+        let largest = compiled.last().copied().unwrap_or(1);
+        if config.policy.max_batch > largest {
+            bail!(
+                "max_batch {} exceeds the compiled batch sizes {:?} for bucket {}x{} \
+                 (largest fused executable is fixb{}_n{}_d{}; recompile the artifacts \
+                 or lower --max-batch)",
+                config.policy.max_batch,
+                compiled,
+                bucket.n,
+                bucket.d,
+                largest,
+                bucket.n,
+                bucket.d
+            );
+        }
+        Ok(())
     }
 
     pub fn handle(&self) -> Handle {
@@ -241,6 +405,60 @@ impl Drop for Coordinator {
     }
 }
 
+/// The shared session preamble of [`Coordinator::start`] and
+/// [`Coordinator::validate_policy`]: load the manifest, pick the shape
+/// bucket for `problem`, and reject a zero `max_batch` (which could
+/// never execute anything, for any caller).  Keeping this in one place
+/// guarantees validation and startup agree on the bucket.
+fn pick_bucket(problem: &Problem, config: &CoordinatorConfig) -> Result<(Manifest, Bucket)> {
+    let manifest = Manifest::load(&config.artifact_dir)?;
+    let n = problem.n_vars();
+    let d = problem.max_dom_size();
+    let entry = manifest
+        .pick(Kind::Fixpoint, n, d, 1)
+        .ok_or_else(|| anyhow!("no artifact bucket fits ({n} vars × {d} values)"))?;
+    let bucket = Bucket { n: entry.n, d: entry.d };
+    if config.policy.max_batch == 0 {
+        bail!("max_batch must be >= 1");
+    }
+    Ok((manifest, bucket))
+}
+
+/// Compiled batch sizes (ascending, deduped) of the fixpoint family at
+/// `bucket` — the capacities `executor_thread` can actually dispatch to.
+fn compiled_batch_sizes(manifest: &Manifest, bucket: Bucket) -> Vec<usize> {
+    let mut sizes: Vec<usize> = manifest
+        .entries
+        .iter()
+        .filter(|e| e.n == bucket.n && e.d == bucket.d)
+        .filter(|e| matches!(e.kind, Kind::Fixpoint | Kind::FixpointBatched))
+        .map(|e| e.batch)
+        .collect();
+    sizes.sort();
+    sizes.dedup();
+    sizes
+}
+
+/// The startup fence: the ONE place the ready signal is sent.  `init` is
+/// everything the executor needs before it can serve — runtime load,
+/// artifact compilation, the constraint-tensor upload — and the ready
+/// send happens strictly *after* it resolves.  `Coordinator::start`
+/// returning `Ok` therefore guarantees a live, fully-initialised
+/// executor; an upload failure surfaces there as `Err`, not as a dead
+/// session whose every later `submit` fails with "shut down".
+fn send_ready<T>(ready_tx: &mpsc::Sender<Result<()>>, init: Result<T>) -> Option<T> {
+    match init {
+        Ok(v) => {
+            let _ = ready_tx.send(Ok(()));
+            Some(v)
+        }
+        Err(e) => {
+            let _ = ready_tx.send(Err(e));
+            None
+        }
+    }
+}
+
 /// Executor main loop: owns all XLA state.
 fn executor_thread(
     config: CoordinatorConfig,
@@ -250,48 +468,31 @@ fn executor_thread(
     ready_tx: mpsc::Sender<Result<()>>,
     metrics: Arc<Metrics>,
 ) {
-    // Load only this session's bucket (all batch sizes + the unbatched
-    // fixpoint), keeping startup proportional to what we'll run.
-    let runtime = match Runtime::load_filtered(&config.artifact_dir, |e| {
-        e.n == bucket.n
-            && e.d == bucket.d
-            && matches!(e.kind, Kind::Fixpoint | Kind::FixpointBatched)
-    }) {
-        Ok(rt) => {
-            let _ = ready_tx.send(Ok(()));
-            rt
-        }
-        Err(e) => {
-            let _ = ready_tx.send(Err(e));
-            return;
-        }
-    };
-    let mut batch_sizes: Vec<usize> = runtime
-        .manifest()
-        .entries
-        .iter()
-        .filter(|e| e.n == bucket.n && e.d == bucket.d)
-        .filter(|e| matches!(e.kind, Kind::Fixpoint | Kind::FixpointBatched))
-        .map(|e| e.batch)
-        .collect();
-    batch_sizes.sort();
-    batch_sizes.dedup();
-    let max_batch = config
-        .policy
-        .max_batch
-        .min(batch_sizes.last().copied().unwrap_or(1));
-
-    // §Perf L3: upload the session's constraint tensor ONCE; every batch
-    // then moves only the small vars planes host→device.
-    let cons_dev = match runtime.upload(&cons, &[bucket.n, bucket.n, bucket.d, bucket.d]) {
-        Ok(b) => b,
-        Err(e) => {
-            eprintln!("rtac-executor: cons upload failed: {e:#}");
-            return;
-        }
+    let init = (|| -> Result<(Runtime, crate::runtime::DeviceTensor, Vec<usize>)> {
+        // Load only this session's bucket (all batch sizes + the
+        // unbatched fixpoint), keeping startup proportional to what
+        // we'll run.
+        let runtime = Runtime::load_filtered(&config.artifact_dir, |e| {
+            e.n == bucket.n
+                && e.d == bucket.d
+                && matches!(e.kind, Kind::Fixpoint | Kind::FixpointBatched)
+        })?;
+        let batch_sizes = compiled_batch_sizes(runtime.manifest(), bucket);
+        // §Perf L3: upload the session's constraint tensor ONCE; every
+        // batch then moves only the small vars planes host→device.
+        let cons_dev = runtime
+            .upload(&cons, &[bucket.n, bucket.n, bucket.d, bucket.d])
+            .context("uploading the session constraint tensor")?;
+        Ok((runtime, cons_dev, batch_sizes))
+    })();
+    let Some((runtime, cons_dev, batch_sizes)) = send_ready(&ready_tx, init) else {
+        return;
     };
     drop(cons);
 
+    let compiled_max = batch_sizes.last().copied().unwrap_or(1);
+    let mut adaptive =
+        if config.policy.adaptive { Some(AdaptiveBatcher::new(&config.policy)) } else { None };
     let mut pending: Vec<Request> = Vec::new();
     loop {
         // 1. block for the first request (or shut down)
@@ -301,18 +502,36 @@ fn executor_thread(
                 Err(_) => return, // all handles dropped
             }
         }
-        // 2. coalesce batch-mates until the deadline or capacity
-        let deadline = Instant::now() + config.policy.max_wait;
+        let (max_batch, max_wait) = match &adaptive {
+            Some(a) => (a.max_batch(&batch_sizes), a.max_wait()),
+            None => (config.policy.max_batch.min(compiled_max), config.policy.max_wait),
+        };
+        // 2a. drain already-queued requests greedily (no waiting): a
+        // contiguous `submit_batch` probe batch fuses even at
+        // max_wait == 0 — only *absent* batch-mates cost wall time.
         while pending.len() < max_batch {
-            let now = Instant::now();
-            if now >= deadline {
-                break;
-            }
-            match rx.recv_timeout(deadline - now) {
+            match rx.try_recv() {
                 Ok(r) => pending.push(r),
-                Err(mpsc::RecvTimeoutError::Timeout) => break,
-                Err(mpsc::RecvTimeoutError::Disconnected) => break,
+                Err(_) => break,
             }
+        }
+        // 2b. coalesce further batch-mates until the deadline or capacity
+        if !max_wait.is_zero() {
+            let deadline = Instant::now() + max_wait;
+            while pending.len() < max_batch {
+                let now = Instant::now();
+                if now >= deadline {
+                    break;
+                }
+                match rx.recv_timeout(deadline - now) {
+                    Ok(r) => pending.push(r),
+                    Err(mpsc::RecvTimeoutError::Timeout) => break,
+                    Err(mpsc::RecvTimeoutError::Disconnected) => break,
+                }
+            }
+        }
+        if let Some(a) = &mut adaptive {
+            a.observe(pending.len());
         }
         // 3. pick the smallest compiled batch that fits, pad, execute
         let real = pending.len();
@@ -342,10 +561,14 @@ fn executor_thread(
         let t_exec = Instant::now();
         let result = runtime.run_fixpoint_dev(&name, &cons_dev, &input);
         let exec = t_exec.elapsed();
-        metrics.on_batch(take, capacity, exec);
 
+        // Metrics are recorded only once the execution result is known:
+        // a failed XLA run counts as a failed batch with dropped
+        // requests, never as a served batch that would skew occupancy
+        // and exec stats.
         match result {
             Ok(out) => {
+                metrics.on_batch(take, capacity, exec);
                 for (i, req) in batch.into_iter().enumerate() {
                     let queue = t_exec.duration_since(req.submitted);
                     let total = req.submitted.elapsed();
@@ -353,7 +576,8 @@ fn executor_thread(
                         plane: out.vars[i * plane_len..(i + 1) * plane_len].to_vec(),
                         status: out.status[i],
                         iters: out.iters,
-                        batch_size: take,
+                        batch_real: take,
+                        batch_capacity: capacity,
                         queue_time: queue,
                         total_time: total,
                     };
@@ -362,9 +586,14 @@ fn executor_thread(
                 }
             }
             Err(e) => {
-                // drop the responders: receivers see RecvError and surface
-                // a coordinator failure; log once on this side.
-                eprintln!("rtac-executor: batch execution failed: {e:#}");
+                // drop the responders: receivers see a clear dropped-
+                // request error from `Handle` (backed by these counters);
+                // log once on this side.
+                metrics.on_batch_failed(take);
+                eprintln!(
+                    "rtac-executor: fused execution {name} failed ({take} request(s) \
+                     dropped): {e:#}"
+                );
             }
         }
     }
@@ -429,5 +658,197 @@ mod tests {
             assert_eq!(&got.plane, want);
         }
         assert_eq!(h.metrics.snapshot().requests, 3);
+    }
+
+    // ---- startup fence -------------------------------------------------
+
+    #[test]
+    fn startup_fence_failing_upload_reaches_start_not_a_dead_executor() {
+        // Regression: the ready signal used to be sent after the runtime
+        // load but BEFORE the constraint-tensor upload, so an upload
+        // failure left `Coordinator::start` returning Ok with a dead
+        // executor.  `send_ready` is the single send site, fed by the
+        // FULL init result; a failing-upload stub must surface as Err on
+        // the ready channel and abort the executor (None).
+        let (tx, rx) = mpsc::channel::<Result<()>>();
+        let init: Result<u32> = Err(anyhow!("xla: buffer_from_host_buffer failed"))
+            .context("uploading the session constraint tensor");
+        assert!(send_ready(&tx, init).is_none(), "a failed init must stop the executor");
+        let err = rx.recv().unwrap().unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("constraint tensor"), "unhelpful startup error: {msg}");
+    }
+
+    #[test]
+    fn startup_fence_sends_ready_only_on_success() {
+        let (tx, rx) = mpsc::channel::<Result<()>>();
+        let got = send_ready(&tx, Ok(42u32));
+        assert_eq!(got, Some(42));
+        assert!(rx.recv().unwrap().is_ok());
+    }
+
+    // ---- executor-death error surface ---------------------------------
+
+    #[test]
+    fn submit_after_executor_exit_names_the_executor() {
+        let (h, rx) = test_handle();
+        drop(rx); // the "executor" is gone
+        let err = h.submit(vec![1.0; h.bucket.vars_len()]).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("executor"), "bare channel error leaked: {msg}");
+    }
+
+    #[test]
+    fn dropped_request_error_blames_failed_batch_when_one_happened() {
+        let (h, rx) = test_handle();
+        let len = h.bucket.vars_len();
+        let metrics = h.metrics.clone();
+        let executor = std::thread::spawn(move || {
+            // fake executor: receive one request, fail its "execution",
+            // drop the responder without answering, then exit.
+            let req = rx.recv().unwrap();
+            metrics.on_batch_failed(1);
+            drop(req);
+            drop(rx);
+        });
+        let err = h.enforce_blocking(vec![1.0; len]).unwrap_err();
+        executor.join().unwrap();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("failed"), "error must mention the failed execution: {msg}");
+        let m = h.metrics.snapshot();
+        assert_eq!(m.failed_batches, 1);
+        assert!(m.conserved(), "requests == responses + dropped: {m:?}");
+    }
+
+    #[test]
+    fn dropped_batched_request_error_is_clear_and_indexed() {
+        let (h, rx) = test_handle();
+        let len = h.bucket.vars_len();
+        let metrics = h.metrics.clone();
+        let executor = std::thread::spawn(move || {
+            // answer the first probe, then die with the second in flight
+            let req = rx.recv().unwrap();
+            let resp = Response {
+                plane: req.plane.clone(),
+                status: 0,
+                iters: 1,
+                batch_real: 1,
+                batch_capacity: 4,
+                queue_time: Duration::ZERO,
+                total_time: Duration::ZERO,
+            };
+            metrics.on_batch(1, 4, Duration::from_micros(5));
+            metrics.on_response(Duration::ZERO, Duration::ZERO, 1, false);
+            let _ = req.resp.send(resp);
+            let second = rx.recv().unwrap();
+            metrics.on_batch_failed(1);
+            drop(second);
+            drop(rx);
+        });
+        let err = h
+            .enforce_batch_blocking(vec![vec![1.0; len], vec![0.5; len]])
+            .unwrap_err();
+        executor.join().unwrap();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("batched probe 1"), "which probe died? {msg}");
+        assert!(msg.contains("failed"), "why did it die? {msg}");
+        let m = h.metrics.snapshot();
+        assert_eq!(m.requests, 2);
+        assert_eq!(m.responses, 1);
+        assert_eq!(m.dropped_requests, 1);
+        assert!(m.conserved());
+    }
+
+    #[test]
+    fn metrics_conserved_across_mixed_single_and_batched_submissions() {
+        // requests == responses + dropped once the queue drains, across
+        // a mix of single submits, a fused probe batch, and a failure.
+        let (h, rx) = test_handle();
+        let len = h.bucket.vars_len();
+        let metrics = h.metrics.clone();
+        let thread_metrics = metrics.clone();
+        let executor = std::thread::spawn(move || {
+            let mut served = 0usize;
+            while let Ok(req) = rx.recv() {
+                if served == 3 {
+                    // fourth request: its fused execution "fails"
+                    thread_metrics.on_batch_failed(1);
+                    drop(req);
+                } else {
+                    thread_metrics.on_batch(1, 1, Duration::from_micros(3));
+                    thread_metrics.on_response(Duration::ZERO, Duration::ZERO, 1, false);
+                    let resp = Response {
+                        plane: req.plane.clone(),
+                        status: 0,
+                        iters: 1,
+                        batch_real: 1,
+                        batch_capacity: 1,
+                        queue_time: Duration::ZERO,
+                        total_time: Duration::ZERO,
+                    };
+                    let _ = req.resp.send(resp);
+                }
+                served += 1;
+            }
+        });
+        assert!(h.enforce_blocking(vec![1.0; len]).is_ok());
+        let batch = h.enforce_batch_blocking(vec![vec![1.0; len], vec![0.5; len]]).unwrap();
+        assert_eq!(batch.len(), 2);
+        assert!(h.enforce_blocking(vec![0.0; len]).is_err(), "dropped request must error");
+        drop(h); // last sender gone: the fake executor drains and exits
+        executor.join().unwrap();
+        let m = metrics.snapshot();
+        assert_eq!(m.requests, 4);
+        assert_eq!(m.responses, 3);
+        assert_eq!(m.dropped_requests, 1);
+        assert_eq!(m.failed_batches, 1);
+        assert!(m.conserved(), "requests == responses + dropped: {m:?}");
+    }
+
+    // ---- adaptive batching --------------------------------------------
+
+    #[test]
+    fn adaptive_starts_wide_open() {
+        let a = AdaptiveBatcher::new(&BatchPolicy::default());
+        assert_eq!(a.max_batch(&[1, 4, 8]), 8);
+        assert_eq!(a.max_wait(), BatchPolicy::default().max_wait);
+    }
+
+    #[test]
+    fn adaptive_solo_traffic_stops_waiting() {
+        let mut a = AdaptiveBatcher::new(&BatchPolicy::default());
+        for _ in 0..16 {
+            a.observe(1);
+        }
+        assert_eq!(a.max_wait(), Duration::ZERO, "solo traffic must not pay the wait");
+        // demand ~1 → aim at the smallest compiled size covering 2×demand
+        assert_eq!(a.max_batch(&[1, 4, 8]), 4);
+    }
+
+    #[test]
+    fn adaptive_bursty_traffic_keeps_the_window_and_grows_back() {
+        let mut a = AdaptiveBatcher::new(&BatchPolicy::default());
+        for _ in 0..16 {
+            a.observe(1);
+        }
+        assert_eq!(a.max_wait(), Duration::ZERO);
+        for _ in 0..16 {
+            a.observe(8);
+        }
+        assert_eq!(a.max_wait(), BatchPolicy::default().max_wait);
+        assert_eq!(a.max_batch(&[1, 4, 8]), 8, "bursts must grow the cap back");
+    }
+
+    #[test]
+    fn adaptive_never_exceeds_the_policy_cap() {
+        let mut a = AdaptiveBatcher::new(&BatchPolicy {
+            max_batch: 4,
+            max_wait: Duration::from_micros(100),
+            adaptive: true,
+        });
+        for _ in 0..8 {
+            a.observe(8);
+        }
+        assert_eq!(a.max_batch(&[1, 4, 8]), 4, "policy.max_batch is a hard cap");
     }
 }

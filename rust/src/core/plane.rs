@@ -94,6 +94,13 @@ impl DomainPlane {
         self.words.len()
     }
 
+    /// Largest row width in the arena — the plane-level twin of
+    /// `Problem::max_dom_size`, used to validate shape-bucket fits when
+    /// encoding straight from the arena (`runtime::encode_vars_into`).
+    pub fn max_width(&self) -> usize {
+        self.widths.iter().copied().max().unwrap_or(0) as usize
+    }
+
     /// Word range of `v`'s row.
     #[inline]
     pub fn word_range(&self, v: VarId) -> std::ops::Range<usize> {
@@ -310,6 +317,14 @@ mod tests {
     fn mixed_problem() -> Problem {
         // widths 3, 70, 64, 1, 130: exercises tail masks and multi-word rows
         Problem::with_domains("t", vec![3, 70, 64, 1, 130])
+    }
+
+    #[test]
+    fn max_width_tracks_widest_row() {
+        let p = mixed_problem();
+        let d = DomainPlane::full(&p);
+        assert_eq!(d.max_width(), 130);
+        assert_eq!(DomainPlane::empty().max_width(), 0);
     }
 
     #[test]

@@ -10,9 +10,10 @@
 //!   (`lax.while_loop`) around the kernel, per shape bucket.
 //! * **Layer 3** (this crate) — CSP substrates, the native AC engines
 //!   (AC-3 / AC-2001 / AC3bit / native RTAC / pooled parallel RTAC /
-//!   batched SAC), a persistent worker-pool propagation runtime
-//!   (`exec`), a MAC backtracking solver, a PJRT runtime that executes
-//!   the AOT artifacts, and a coordinator that batches AC requests from
+//!   batched SAC, CPU-pooled or coordinator-routed onto the artifacts),
+//!   a persistent worker-pool propagation runtime (`exec`), a MAC
+//!   backtracking solver, a PJRT runtime that executes the AOT
+//!   artifacts, and a coordinator that batches AC requests from
 //!   parallel search workers into fused tensor executions.
 //!
 //! See DESIGN.md for the architecture and EXPERIMENTS.md for the

@@ -34,12 +34,17 @@ USAGE: rtac <subcommand> [options]
 SUBCOMMANDS
   gen          --n 50 --dom 20 --density 0.5 --tightness 0.3 --seed 1 --out FILE
   solve        [FILE.csp] [--queens N | --n .. --density ..]
-               --engine ac3|ac2001|ac3bit|rtac|rtac-inc|rtac-par[N]|rtac-par-inc[N]|sac|sac-par[N]
+               --engine ac3|ac2001|ac3bit|rtac|rtac-inc|rtac-par[N]|rtac-par-inc[N]|
+                        sac|sac-par[N]|sac-xla[N]
                --var-heuristic lex|mindom|domdeg|domwdeg --val-order lex|random
                --max-assignments K --seed S
-  ac           same instance flags; runs one enforcement and prints counters
   serve        --queens 8 | --n .. --dom 8 ..; --workers 4 --max-wait-us 300
+               --max-batch 8 (validated against the compiled fixb* sizes)
+               --adaptive (occupancy-driven batching window)
                --artifacts DIR     (end-to-end batched tensor serving demo)
+               --sac-probe [--probe-batch K]  (SAC-probing client: fused
+               submit_batch vs per-probe submit, fused-batch occupancy report)
+  ac           same instance flags; runs one enforcement and prints counters
   bench-fig3   --full | --sizes 20,50 --densities 0.1,0.5 --assignments 300
                --engines ac3,ac3bit,rtac,rtac-inc [--json FILE]
   bench-table1 same grid flags [--json FILE]
@@ -153,6 +158,11 @@ fn cmd_solve(args: &Args) -> Result<(), String> {
     let mut engine = make_engine(&engine_name)?;
     let mut solver = Solver::new(engine.as_mut(), cfg);
     let (result, stats) = solver.solve(&p);
+    // a poisoned tensor engine reports synthetic wipeouts to stop the
+    // search — that is an error, not a verdict
+    if let Some(e) = engine.failure() {
+        return Err(format!("engine {engine_name}: {e}"));
+    }
     match &result {
         SolveResult::Sat(sol) => {
             println!("SAT {sol:?}");
@@ -184,6 +194,9 @@ fn cmd_ac(args: &Args) -> Result<(), String> {
     let mut c = rtac::ac::Counters::default();
     let sw = rtac::util::timer::Stopwatch::start();
     let out = engine.enforce(&p, &mut state, &[], &mut c);
+    if let Some(e) = engine.failure() {
+        return Err(format!("engine {engine_name}: {e}"));
+    }
     println!(
         "{} on {}: {:?} in {:.3}ms — revisions={} recurrences={} \
          support_checks={} removals={} live={}/{}",
@@ -205,25 +218,38 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
     let p = load_problem(args)?;
     let workers = args.get_usize("workers", 4)?;
     let max_wait = args.get_u64("max-wait-us", 300)?;
+    let max_batch_explicit = args.get_str("max-batch").is_some();
+    let max_batch = args.get_usize("max-batch", 8)?;
+    let adaptive = args.has_flag("adaptive");
+    let sac_probe = args.has_flag("sac-probe");
+    let probe_batch = args.get_usize("probe-batch", 0)?;
     let artifacts = args.get_or("artifacts", "artifacts");
     let cfg = solver_config(args)?;
     args.finish()?;
-    let coord = Coordinator::start(
-        &p,
-        CoordinatorConfig {
-            artifact_dir: artifacts.into(),
-            policy: BatchPolicy {
-                max_batch: 8,
-                max_wait: Duration::from_micros(max_wait),
-            },
-        },
-    )
-    .map_err(|e| format!("{e:#}"))?;
+    let policy = BatchPolicy {
+        max_batch,
+        max_wait: Duration::from_micros(max_wait),
+        adaptive,
+    };
+    let config = CoordinatorConfig { artifact_dir: artifacts.into(), policy };
+    // validate an EXPLICIT --max-batch against the compiled fixb*
+    // sizes, so a bad value fails here, not on the first fused request;
+    // the default cap is clamped by the executor instead, so serve
+    // keeps working on artifact sets compiled with smaller batches
+    if max_batch_explicit {
+        Coordinator::validate_policy(&p, &config).map_err(|e| format!("{e:#}"))?;
+    }
+    if sac_probe {
+        return serve_sac_probe(&p, config, probe_batch);
+    }
+    let coord = Coordinator::start(&p, config).map_err(|e| format!("{e:#}"))?;
     println!(
-        "session up: problem={} bucket={}x{} workers={workers} max_wait={max_wait}µs",
+        "session up: problem={} bucket={}x{} workers={workers} max_wait={max_wait}µs \
+         max_batch={max_batch}{}",
         p.name(),
         coord.bucket().n,
-        coord.bucket().d
+        coord.bucket().d,
+        if adaptive { " (adaptive)" } else { "" },
     );
     let sw = rtac::util::timer::Stopwatch::start();
     let out = solve_parallel(&p, &coord, &cfg, 0, workers).map_err(|e| format!("{e:#}"))?;
@@ -242,6 +268,75 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
         m.responses as f64 / (elapsed / 1e3),
         elapsed
     );
+    Ok(())
+}
+
+/// The SAC-probing client (ROADMAP "scale serving" item): one session,
+/// one SAC enforcement whose singleton probes are routed onto the
+/// `fixb*` artifacts — once through the fused `submit_batch` path and
+/// once as per-probe `submit`s — reporting the fused-batch occupancy
+/// each path achieved, plus a fixpoint cross-check against native SAC-1.
+fn serve_sac_probe(
+    p: &rtac::core::Problem,
+    config: CoordinatorConfig,
+    probe_batch: usize,
+) -> Result<(), String> {
+    use rtac::ac::sac::{Sac1, SacParallel, XlaProbeBackend};
+    use rtac::ac::Counters;
+    use rtac::core::State;
+
+    let run = |label: &str, fused: bool| -> Result<(State, String, bool, f64, u64), String> {
+        // a fresh session per path: the metrics isolate that path's
+        // occupancy instead of blending both
+        let coord = Coordinator::start(p, config.clone()).map_err(|e| format!("{e:#}"))?;
+        let backend = if fused {
+            XlaProbeBackend::new(coord.handle(), probe_batch)
+        } else {
+            XlaProbeBackend::per_probe(coord.handle(), probe_batch)
+        };
+        let mut engine = SacParallel::with_backend(Box::new(backend));
+        let mut state = State::new(p);
+        let mut counters = Counters::default();
+        let sw = rtac::util::timer::Stopwatch::start();
+        let out = engine.enforce_sac(p, &mut state, &mut counters);
+        let wall_ms = sw.elapsed_ms();
+        if let Some(e) = &engine.failed {
+            return Err(format!("{label}: {e}"));
+        }
+        let m = coord.metrics().snapshot();
+        println!("{label:<22} occ={:.2} wall={wall_ms:.1}ms {}", m.mean_batch_occupancy, m.summary());
+        Ok((state, format!("{out:?}"), out.is_consistent(), m.mean_batch_occupancy, engine.probes))
+    };
+
+    println!("sac-probe client: problem={} ({} vars)", p.name(), p.n_vars());
+    let (s_fused, out_fused, ok_fused, occ_fused, probes_fused) =
+        run("fused submit_batch", true)?;
+    let (s_per, out_per, _ok_per, occ_per, probes_per) = run("per-probe submit", false)?;
+
+    if out_fused != out_per {
+        return Err(format!("outcome mismatch: fused {out_fused} vs per-probe {out_per}"));
+    }
+    if ok_fused && s_fused.snapshot() != s_per.snapshot() {
+        return Err("fixpoint mismatch between fused and per-probe submission".into());
+    }
+    // cross-check against native sequential SAC-1 (the unique-closure
+    // acceptance contract)
+    let mut s_native = State::new(p);
+    let mut c = Counters::default();
+    let native = Sac1::new(rtac::ac::rtac::RtacNative::incremental())
+        .enforce_sac(p, &mut s_native, &mut c);
+    let native_agrees =
+        native.is_consistent() == ok_fused && (!ok_fused || s_native.snapshot() == s_fused.snapshot());
+    println!(
+        "fused-batch occupancy (mean reqs per fused execution): {occ_fused:.2} \
+         (submit_batch, {probes_fused} probes) vs {occ_per:.2} (per-probe, \
+         {probes_per} probes) -> {:.2}x; same SAC fixpoint as native sac-1: {}",
+        if occ_per > 0.0 { occ_fused / occ_per } else { 0.0 },
+        if native_agrees { "yes" } else { "NO" },
+    );
+    if !native_agrees {
+        return Err("sac-xla fixpoint diverges from native SAC-1".into());
+    }
     Ok(())
 }
 
@@ -316,16 +411,21 @@ fn cmd_bench_rtac(args: &Args) -> Result<(), String> {
     );
     let results = rtac_bench::run(&spec, &engines);
     println!("{}", rtac_bench::render(&results, &engines));
-    let sac = if sac_workers > 0 {
+    let (sac, sac_xla) = if sac_workers > 0 {
         let sac = rtac_bench::sac_probe_comparison(&spec, sac_workers);
         if let Some(c) = &sac {
             println!("{}", rtac_bench::render_sac(c));
         }
-        sac
+        // tensor-routed cell: self-skips without compiled artifacts
+        let sac_xla = rtac_bench::sac_xla_comparison(&spec, sac_workers);
+        if let Some(c) = &sac_xla {
+            println!("{}", rtac_bench::render_sac_xla(c));
+        }
+        (sac, sac_xla)
     } else {
-        None // --sac-workers 0 skips the SAC comparison cell
+        (None, None) // --sac-workers 0 skips the SAC comparison cells
     };
-    let json = rtac_bench::to_json(&spec, &results, sac.as_ref());
+    let json = rtac_bench::to_json(&spec, &results, sac.as_ref(), sac_xla.as_ref());
     std::fs::write(&json_path, json.to_string()).map_err(|e| format!("{json_path}: {e}"))?;
     eprintln!("wrote {json_path}");
     Ok(())

@@ -21,7 +21,7 @@
 
 use anyhow::{bail, Result};
 
-use crate::core::{Problem, State, VarId};
+use crate::core::{DomainPlane, Problem, State, VarId};
 
 /// A (n_vars, dom) shape bucket.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -83,20 +83,45 @@ pub fn encode_vars(problem: &Problem, state: &State, bucket: Bucket) -> Result<V
     if !bucket.fits(problem) {
         bail!("problem exceeds bucket");
     }
-    let (nn, dd) = (bucket.n, bucket.d);
-    let mut vars = vec![0.0f32; nn * dd];
-    for x in 0..problem.n_vars() {
-        for a in state.dom(x).iter_ones() {
-            vars[x * dd + a] = 1.0;
-        }
-    }
-    // padded variables: full dummy domains (all ones)
-    for x in problem.n_vars()..nn {
-        for a in 0..dd {
-            vars[x * dd + a] = 1.0;
-        }
-    }
+    let mut vars = Vec::new();
+    encode_vars_into(state.plane(), bucket, &mut vars)?;
     Ok(vars)
+}
+
+/// Encode a domain plane — the flat arena — into the padded f32 tensor
+/// layout, reusing `out` as the staging buffer (cleared and refilled; no
+/// allocation once it has reached bucket size).
+///
+/// This is the arena follow-on recorded in ROADMAP.md: the arena rows
+/// already mirror the tensor's `[n, d]` layout, so staging a plane for
+/// upload is one pass over the word rows instead of a per-variable
+/// re-gather through `Problem` + `State`.  The coordinator-routed SAC
+/// backend stages the launch domains ONCE per probe round and derives
+/// each probe's plane from the staging buffer with a single-row edit.
+pub fn encode_vars_into(plane: &DomainPlane, bucket: Bucket, out: &mut Vec<f32>) -> Result<()> {
+    let n = plane.n_vars();
+    if n > bucket.n || plane.max_width() > bucket.d {
+        bail!(
+            "plane ({} vars, dom {}) exceeds bucket ({}, {})",
+            n,
+            plane.max_width(),
+            bucket.n,
+            bucket.d
+        );
+    }
+    let dd = bucket.d;
+    out.clear();
+    out.resize(bucket.vars_len(), 0.0);
+    for x in 0..n {
+        let row = &mut out[x * dd..(x + 1) * dd];
+        for a in plane.bits(x).iter_ones() {
+            row[a] = 1.0;
+        }
+    }
+    // padded variables: full dummy domains (all ones) — AC-neutral, see
+    // the module docs.
+    out[n * dd..].fill(1.0);
+    Ok(())
 }
 
 /// Apply an output plane back onto `state`: every live value that the
@@ -178,6 +203,54 @@ mod tests {
         assert_eq!(vars[2 * 8 + 0], 1.0);
         assert_eq!(vars[0 * 8 + 5], 0.0); // padded value of real var
         assert_eq!(vars[10 * 8 + 7], 1.0); // padded var fully live
+    }
+
+    #[test]
+    fn encode_vars_into_matches_encode_vars_and_reuses_the_buffer() {
+        let p = random_csp(&RandomSpec::new(6, 5, 0.7, 0.4, 21));
+        let mut s = State::new(&p);
+        s.remove(1, 2);
+        s.remove(4, 0);
+        s.assign(3, 1);
+        let b = bucket();
+        let reference = encode_vars(&p, &s, b).unwrap();
+        let mut staged = vec![9.0f32; 3]; // stale content must be cleared
+        encode_vars_into(s.plane(), b, &mut staged).unwrap();
+        assert_eq!(staged, reference);
+        // staging a second state into the same buffer must not leak the
+        // first encoding
+        let s2 = State::new(&p);
+        encode_vars_into(s2.plane(), b, &mut staged).unwrap();
+        assert_eq!(staged, encode_vars(&p, &s2, b).unwrap());
+    }
+
+    #[test]
+    fn encode_vars_into_singleton_row_edit_matches_assigned_state() {
+        // the XLA probe backend derives each probe plane from the staged
+        // base by one row edit: that must equal encoding the assigned
+        // state from scratch.
+        let p = random_csp(&RandomSpec::new(5, 4, 0.6, 0.3, 8));
+        let s = State::new(&p);
+        let b = bucket();
+        let mut base = Vec::new();
+        encode_vars_into(s.plane(), b, &mut base).unwrap();
+        for (x, a) in [(0usize, 2usize), (4, 0)] {
+            let mut probe = base.clone();
+            let row = &mut probe[x * b.d..(x + 1) * b.d];
+            row.fill(0.0);
+            row[a] = 1.0;
+            let mut s_assigned = s.clone();
+            s_assigned.assign(x, a);
+            assert_eq!(probe, encode_vars(&p, &s_assigned, b).unwrap(), "probe ({x}, {a})");
+        }
+    }
+
+    #[test]
+    fn encode_vars_into_rejects_oversized_plane() {
+        let p = random_csp(&RandomSpec::new(20, 4, 0.1, 0.1, 1));
+        let s = State::new(&p);
+        let mut out = Vec::new();
+        assert!(encode_vars_into(s.plane(), bucket(), &mut out).is_err());
     }
 
     #[test]

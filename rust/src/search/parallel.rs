@@ -13,7 +13,7 @@
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{mpsc, Arc};
 
-use anyhow::Result;
+use anyhow::{anyhow, Result};
 
 use crate::coordinator::{Coordinator, TensorEngine};
 use crate::core::{Problem, Val, VarId};
@@ -46,7 +46,7 @@ pub fn solve_parallel(
     }
 
     let stop = Arc::new(AtomicBool::new(false));
-    let (tx, rx) = mpsc::channel::<(usize, SolveResult, SolveStats)>();
+    let (tx, rx) = mpsc::channel::<(usize, SolveResult, SolveStats, Option<String>)>();
 
     std::thread::scope(|scope| {
         for (wid, slice) in slices.into_iter().enumerate() {
@@ -60,6 +60,7 @@ pub fn solve_parallel(
             scope.spawn(move || {
                 let mut merged_stats = SolveStats::default();
                 let mut outcome = SolveResult::Unsat;
+                let mut failure: Option<String> = None;
                 for a in slice {
                     if stop.load(Ordering::Relaxed) {
                         outcome = SolveResult::Limit;
@@ -73,6 +74,12 @@ pub fn solve_parallel(
                     merged_stats.ac_calls += s.ac_calls;
                     merged_stats.ac.add(&s.ac);
                     merged_stats.ac_times_ms.extend(s.ac_times_ms);
+                    if let Some(e) = engine.failed.take() {
+                        // poisoned engine: its wipeouts were synthetic,
+                        // so this subtree's Unsat is NOT a verdict
+                        failure = Some(e);
+                        break;
+                    }
                     match r {
                         SolveResult::Sat(sol) => {
                             stop.store(true, Ordering::Relaxed);
@@ -86,7 +93,7 @@ pub fn solve_parallel(
                         SolveResult::Unsat => {}
                     }
                 }
-                let _ = tx.send((wid, outcome, merged_stats));
+                let _ = tx.send((wid, outcome, merged_stats, failure));
             });
         }
         drop(tx);
@@ -95,8 +102,12 @@ pub fn solve_parallel(
         let mut winner = None;
         let mut best: Option<SolveResult> = None;
         let mut any_limit = false;
-        for (wid, r, s) in rx.iter() {
+        let mut failures: Vec<(usize, String)> = Vec::new();
+        for (wid, r, s, failure) in rx.iter() {
             worker_stats[wid] = s;
+            if let Some(e) = failure {
+                failures.push((wid, e));
+            }
             match r {
                 SolveResult::Sat(sol) => {
                     if !matches!(best, Some(SolveResult::Sat(_))) {
@@ -109,7 +120,20 @@ pub fn solve_parallel(
             }
         }
         let result = match best {
+            // a found solution is independently verifiable (callers
+            // assert `problem.satisfies`), so it stands even if another
+            // worker's engine was poisoned
             Some(sat) => sat,
+            // without a solution, a poisoned worker means an unexplored
+            // subtree: UNSAT/LIMIT would be a wrong verdict — error out
+            None if !failures.is_empty() => {
+                let (wid, e) = &failures[0];
+                return Err(anyhow!(
+                    "{} search worker(s) lost their coordinator session \
+                     (first: worker {wid}: {e}) — verdict unavailable",
+                    failures.len()
+                ));
+            }
             None if any_limit => SolveResult::Limit,
             None => SolveResult::Unsat,
         };

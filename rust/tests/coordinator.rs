@@ -32,7 +32,11 @@ macro_rules! need_artifacts {
 fn config(dir: PathBuf, max_wait_us: u64) -> CoordinatorConfig {
     CoordinatorConfig {
         artifact_dir: dir,
-        policy: BatchPolicy { max_batch: 8, max_wait: Duration::from_micros(max_wait_us) },
+        policy: BatchPolicy {
+            max_batch: 8,
+            max_wait: Duration::from_micros(max_wait_us),
+            adaptive: false,
+        },
     }
 }
 
@@ -48,7 +52,9 @@ fn single_request_roundtrip() {
     let resp = h.enforce_blocking(plane).unwrap();
     assert_eq!(resp.status, STATUS_CONSISTENT);
     assert!(resp.iters >= 1);
-    assert_eq!(resp.batch_size, 1);
+    assert_eq!(resp.batch_real, 1);
+    assert!(resp.batch_capacity >= resp.batch_real);
+    assert!(resp.occupancy() > 0.0 && resp.occupancy() <= 1.0);
     let m = h.metrics.snapshot();
     assert_eq!(m.requests, 1);
     assert_eq!(m.responses, 1);
@@ -150,6 +156,190 @@ fn tensor_engine_matches_native_closure() {
             assert!(tensor_engine.failed.is_none());
         }
     }
+}
+
+// ---- startup behavior (no compiled artifacts needed: these exercise
+// the synchronous validation and the startup fence, which must resolve
+// *before* `Coordinator::start` returns Ok) ---------------------------
+
+/// A throwaway artifact dir whose manifest parses but whose artifacts
+/// cannot actually load: listed files exist on disk with dummy content.
+/// `Coordinator::start`'s synchronous phase (bucket pick, policy
+/// validation) succeeds; the executor's startup then fails at runtime
+/// load — exactly the shape of a mid-startup failure like a dead
+/// upload.
+fn fake_artifact_dir(batches: &[usize]) -> PathBuf {
+    let tag: Vec<String> = batches.iter().map(|b| b.to_string()).collect();
+    let dir = std::env::temp_dir().join(format!(
+        "rtac-test-artifacts-{}-b{}",
+        std::process::id(),
+        tag.join("-")
+    ));
+    std::fs::create_dir_all(&dir).unwrap();
+    let mut entries = vec![format!(
+        r#"{{"name": "fix_n8_d4", "file": "fix_n8_d4.hlo.txt", "kind": "fixpoint", "n": 8, "d": 4, "batch": 1}}"#
+    )];
+    std::fs::write(dir.join("fix_n8_d4.hlo.txt"), "HloModule dummy").unwrap();
+    for &b in batches {
+        entries.push(format!(
+            r#"{{"name": "fixb{b}_n8_d4", "file": "fixb{b}_n8_d4.hlo.txt", "kind": "fixpoint_batched", "n": 8, "d": 4, "batch": {b}}}"#
+        ));
+        std::fs::write(dir.join(format!("fixb{b}_n8_d4.hlo.txt")), "HloModule dummy").unwrap();
+    }
+    let manifest = format!(
+        r#"{{"format": 1, "block_x": 8, "entries": [{}]}}"#,
+        entries.join(", ")
+    );
+    std::fs::write(dir.join("manifest.json"), manifest).unwrap();
+    dir
+}
+
+#[test]
+fn start_never_returns_ok_with_a_dead_executor() {
+    // Regression for the ready-before-upload bug: when ANY stage of the
+    // executor's startup fails (here: loading/compiling the dummy
+    // artifacts — offline, even creating the PJRT client fails), start
+    // must return Err, never Ok with an executor that already exited.
+    let dir = fake_artifact_dir(&[4, 8]);
+    let p = queens(4); // fits the 8x4 bucket
+    match Coordinator::start(&p, config(dir, 0)) {
+        Err(e) => {
+            let msg = format!("{e:#}");
+            assert!(
+                msg.contains("executor startup failed") || msg.contains("executor thread died"),
+                "startup failure must be attributed: {msg}"
+            );
+        }
+        Ok(coord) => {
+            // only reachable with a real XLA runtime that somehow
+            // compiles dummy HLO — then the session must actually serve
+            drop(coord);
+            panic!("dummy artifacts must not produce a live session");
+        }
+    }
+}
+
+#[test]
+fn max_batch_validated_against_compiled_sizes_at_startup() {
+    // the bucket only compiles fixb4: `rtac serve --max-batch 8` must
+    // fail synchronously (via Coordinator::validate_policy, which serve
+    // calls before starting) with an error naming the available sizes,
+    // not on the first fused request
+    let dir = fake_artifact_dir(&[4]);
+    let p = queens(4);
+    let mut cfg = config(dir.clone(), 0);
+    cfg.policy.max_batch = 8;
+    let err = format!(
+        "{:#}",
+        Coordinator::validate_policy(&p, &cfg)
+            .expect_err("max_batch 8 with only fixb4 compiled must fail validation")
+    );
+    assert!(err.contains("compiled batch sizes"), "unhelpful error: {err}");
+    assert!(err.contains("fixb4"), "error must name the largest fused executable: {err}");
+
+    // an in-range max-batch passes validation on the same artifacts
+    let mut cfg_ok = config(dir.clone(), 0);
+    cfg_ok.policy.max_batch = 4;
+    Coordinator::validate_policy(&p, &cfg_ok).expect("max_batch 4 is compiled");
+
+    // a zero max_batch can never execute anything, for ANY caller:
+    // both validation and start reject it
+    let mut cfg = config(dir, 0);
+    cfg.policy.max_batch = 0;
+    let err = Coordinator::validate_policy(&p, &cfg).unwrap_err();
+    assert!(format!("{err:#}").contains("max_batch"), "{err:#}");
+    let err = Coordinator::start(&p, cfg).unwrap_err();
+    assert!(format!("{err:#}").contains("max_batch"), "{err:#}");
+}
+
+// ---- tensor-routed batched SAC (artifact-gated) ----------------------
+
+#[test]
+fn sac_xla_reaches_the_same_fixpoint_as_sac1() {
+    let dir = need_artifacts!();
+    use rtac::ac::sac::{Sac1, SacParallel};
+    for seed in [5u64, 9, 21] {
+        let p = random_csp(&RandomSpec::new(10, 6, 0.7, 0.4, seed));
+        let mut s_ref = State::new(&p);
+        let mut c_ref = Counters::default();
+        let o_ref = Sac1::new(rtac::ac::rtac::RtacNative::incremental())
+            .enforce_sac(&p, &mut s_ref, &mut c_ref);
+
+        let coord = Coordinator::start(&p, config(dir.clone(), 200)).unwrap();
+        let mut engine = SacParallel::tensor(coord.handle(), 0);
+        let mut s = State::new(&p);
+        let mut c = Counters::default();
+        let o = engine.enforce_sac(&p, &mut s, &mut c);
+        assert!(engine.failed.is_none(), "seed {seed}: {:?}", engine.failed);
+        assert_eq!(o.is_consistent(), o_ref.is_consistent(), "seed {seed}");
+        if o_ref.is_consistent() {
+            assert_eq!(s.snapshot(), s_ref.snapshot(), "seed {seed}: SAC closure is unique");
+        }
+        assert!(engine.probes > 0, "seed {seed}: no probes routed");
+        let m = coord.metrics().snapshot();
+        assert_eq!(m.requests, m.responses, "seed {seed}: lost probe requests");
+        assert_eq!(m.dropped_requests, 0, "seed {seed}");
+        assert!(m.conserved(), "seed {seed}");
+    }
+}
+
+#[test]
+fn sac_xla_lazy_session_engine_solves_end_to_end() {
+    let dir = need_artifacts!();
+    // the self-contained engine (lazy session) must behave like any
+    // other propagator; construct it against the test artifacts
+    // explicitly — make_engine("sac-xla[N]") builds the same engine
+    // against the default artifact dir (parse coverage lives in
+    // ac/mod.rs; no process-global env mutation here, tests run
+    // concurrently)
+    let p = rtac::gen::pigeonhole(3, 2);
+    let mut engine = rtac::ac::sac::SacXla::with_artifact_dir(4, dir);
+    let mut s = State::new(&p);
+    let mut c = Counters::default();
+    let out = engine.enforce(&p, &mut s, &[], &mut c);
+    assert!(engine.failed.is_none(), "{:?}", engine.failed);
+    assert!(!out.is_consistent(), "SAC must refute pigeonhole(3,2) on the tensor route");
+}
+
+#[test]
+fn fused_probe_batches_beat_per_probe_submission_on_occupancy() {
+    let dir = need_artifacts!();
+    use rtac::ac::sac::{SacParallel, XlaProbeBackend};
+    // queens(8): root AC keeps all 64 values, so both paths probe the
+    // same deterministic (var, value) set in rounds of 8
+    let p = queens(8);
+
+    let run = |fused: bool| {
+        let coord = Coordinator::start(&p, config(dir.clone(), 200)).unwrap();
+        let backend = if fused {
+            XlaProbeBackend::new(coord.handle(), 8)
+        } else {
+            XlaProbeBackend::per_probe(coord.handle(), 8)
+        };
+        let mut engine = SacParallel::with_backend(Box::new(backend));
+        let mut s = State::new(&p);
+        let mut c = Counters::default();
+        let out = engine.enforce_sac(&p, &mut s, &mut c);
+        assert!(engine.failed.is_none(), "{:?}", engine.failed);
+        (out.is_consistent(), s.snapshot(), coord.metrics().snapshot())
+    };
+
+    let (ok_fused, snap_fused, m_fused) = run(true);
+    let (ok_per, snap_per, m_per) = run(false);
+    assert_eq!(ok_fused, ok_per, "submission shape must not change the SAC closure");
+    if ok_fused {
+        assert_eq!(snap_fused, snap_per);
+    }
+    // the per-probe path submits sequentially-blocking: it can never
+    // fuse; the batched path enqueues rounds contiguously and must fuse
+    // at least some of them
+    assert!(
+        m_fused.mean_batch_occupancy > m_per.mean_batch_occupancy,
+        "fused occ {:.2} must beat per-probe occ {:.2}",
+        m_fused.mean_batch_occupancy,
+        m_per.mean_batch_occupancy
+    );
+    assert!(m_fused.batches < m_fused.responses, "some fusion must have happened");
 }
 
 #[test]

@@ -31,7 +31,7 @@ macro_rules! need_artifacts {
 fn config(dir: PathBuf) -> CoordinatorConfig {
     CoordinatorConfig {
         artifact_dir: dir,
-        policy: BatchPolicy { max_batch: 8, max_wait: Duration::from_micros(500) },
+        policy: BatchPolicy { max_batch: 8, max_wait: Duration::from_micros(500), adaptive: false },
     }
 }
 
@@ -97,7 +97,7 @@ fn batching_actually_happens_under_parallel_load() {
         &p,
         CoordinatorConfig {
             artifact_dir: dir,
-            policy: BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(2) },
+            policy: BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(2), adaptive: false },
         },
     )
     .unwrap();
