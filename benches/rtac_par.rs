@@ -14,19 +14,14 @@ fn main() {
     );
     let results = rtac_bench::run(&spec, rtac_bench::ENGINES);
     println!("{}", rtac_bench::render(&results, rtac_bench::ENGINES));
-    let sac = rtac_bench::sac_probe_comparison(&spec, 4);
-    if let Some(c) = &sac {
-        println!("{}", rtac_bench::render_sac(c));
-    }
-    // tensor-routed cell: self-skips without compiled artifacts
-    let sac_xla = rtac_bench::sac_xla_comparison(&spec, 4);
-    if let Some(c) = &sac_xla {
-        println!("{}", rtac_bench::render_sac_xla(c));
-    }
+    // the SAC comparison cells: artifact-gated ones are explicitly
+    // marked skipped instead of silently omitted
+    let cells = rtac_bench::run_sac_cells(&spec, 4);
+    println!("{}", rtac_bench::render_cells(&cells));
 
     let path = std::env::var("RTAC_BENCH_JSON").unwrap_or_else(|_| "BENCH_rtac.json".to_string());
     if !path.is_empty() {
-        let json = rtac_bench::to_json(&spec, &results, sac.as_ref(), sac_xla.as_ref());
+        let json = rtac_bench::to_json(&spec, &results, &cells);
         match std::fs::write(&path, json.to_string()) {
             Ok(()) => eprintln!("wrote {path}"),
             Err(e) => eprintln!("writing {path}: {e}"),

@@ -24,23 +24,27 @@
 //!   per-sweep `std::thread::scope` spawning purely as the bench
 //!   baseline the pool amortises away.  All bit-identical to `rtac`
 //!   in closure, outcome and `#Recurrence`.
-//! * [`sac::Sac1`] / [`sac::SacParallel`] / [`sac::SacXla`] —
-//!   singleton arc consistency, a *stronger* consistency: `sac` /
-//!   `sac-rtac` probe sequentially; the batched engines run K probes
-//!   per round behind the [`sac::ProbeBackend`] seam — `sac-par[N]`
-//!   on the worker pool (scratch plane pairs from a
-//!   [`crate::core::PlaneSlab`]), `sac-xla[N]` routed through the
-//!   coordinator onto the compiled `fixb*` tensor executables
-//!   (artifact-gated: it lazily starts a session and poisons itself
-//!   when none can start).  Not interchangeable with the AC engines in
+//! * [`sac::Sac1`] / [`sac::SacParallel`] / [`sac::SacXla`] /
+//!   [`sac::SacMixed`] — singleton arc consistency, a *stronger*
+//!   consistency: `sac` / `sac-rtac` probe sequentially; the batched
+//!   engines run K probes per round behind the [`sac::ProbeBackend`]
+//!   seam — `sac-par[N]` on the worker pool (scratch plane pairs from
+//!   a [`crate::core::PlaneSlab`]), `sac-xla[N]` routed through the
+//!   coordinator onto the compiled `fixb*` tensor executables in delta
+//!   form (artifact-gated: it lazily starts a session and poisons
+//!   itself when none can start), and `sac-mixed[N]` splitting each
+//!   round between the CPU pool and the tensor route by a latency cost
+//!   model ([`sac::MixedProbeBackend`]; runs CPU-only offline instead
+//!   of poisoning).  Not interchangeable with the AC engines in
 //!   closure-equality tests, but all SAC engines reach the same unique
 //!   SAC closure and plug into the same solver for
 //!   stronger-but-costlier propagation.
 //!
 //! Engine names take an optional worker-count suffix (`rtac-par4`,
 //! `sac-par2`, `sac-xla8` — for `sac-xla` the count is the probe batch
-//! per round); the bare name auto-sizes.  A `0` suffix is rejected at
-//! parse time — a zero-worker engine could never make progress.
+//! per round; for `sac-mixed` it is the CPU probe workers); the bare
+//! name auto-sizes.  A `0` suffix is rejected at parse time — a
+//! zero-worker engine could never make progress.
 //!
 //! All AC engines compute the same unique closure (Prop. 1) — asserted
 //! pairwise by integration tests on random instances.
@@ -130,8 +134,10 @@ pub trait Propagator {
 /// (`prefix` = `"rtac-par"`).  Empty suffix = 0 = auto-size.  An
 /// explicit `0` is rejected here, at parse time: a zero-worker engine
 /// could never run a sweep or a probe, so constructing one would only
-/// defer the failure to the first enforcement.
-fn parse_worker_suffix(name: &str, prefix: &str) -> Result<usize, String> {
+/// defer the failure to the first enforcement.  Public because every
+/// CLI surface that accepts an engine-shaped name (`--engine`,
+/// `rtac serve --worker-engine`) must parse the same grammar.
+pub fn parse_worker_suffix(name: &str, prefix: &str) -> Result<usize, String> {
     let suffix = &name[prefix.len()..];
     if suffix.is_empty() {
         return Ok(0); // auto
@@ -187,10 +193,17 @@ pub fn make_engine(name: &str) -> Result<Box<dyn Propagator>, String> {
             let batch = parse_worker_suffix(other, "sac-xla")?;
             Ok(Box::new(sac::SacXla::new(batch)))
         }
+        // Mixed CPU/tensor batched SAC: each round split between the
+        // pool and a lazily-started coordinator session by the cost
+        // model; CPU-only offline.  N is the CPU probe workers.
+        other if other.starts_with("sac-mixed") => {
+            let workers = parse_worker_suffix(other, "sac-mixed")?;
+            Ok(Box::new(sac::SacMixed::new(workers)))
+        }
         other => Err(format!(
             "unknown engine {other:?} (try ac3 | ac3-lifo | ac3-dom | ac2001 | ac3bit | rtac | \
              rtac-inc | rtac-par[N] | rtac-par-inc[N] | rtac-par-scoped[N] | sac | sac-rtac | \
-             sac-par[N] | sac-xla[N])"
+             sac-par[N] | sac-xla[N] | sac-mixed[N])"
         )),
     }
 }
@@ -218,7 +231,9 @@ mod tests {
 
     #[test]
     fn zero_worker_engine_names_rejected_at_parse_time() {
-        for name in ["rtac-par0", "rtac-par-inc0", "rtac-par-scoped0", "sac-par0", "sac-xla0"] {
+        for name in
+            ["rtac-par0", "rtac-par-inc0", "rtac-par-scoped0", "sac-par0", "sac-xla0", "sac-mixed0"]
+        {
             let err = make_engine(name).err().unwrap_or_else(|| {
                 panic!("{name} must be rejected at parse time")
             });
@@ -230,13 +245,14 @@ mod tests {
     fn pool_engine_names_parse_with_and_without_counts() {
         for name in
             ["rtac-par", "rtac-par3", "rtac-par-inc", "rtac-par-inc2", "rtac-par-scoped2",
-             "sac-par", "sac-par4", "sac-xla", "sac-xla8"]
+             "sac-par", "sac-par4", "sac-xla", "sac-xla8", "sac-mixed", "sac-mixed4"]
         {
             assert!(make_engine(name).is_ok(), "{name} must parse");
         }
         assert!(make_engine("rtac-parx").is_err());
         assert!(make_engine("sac-par-1").is_err());
         assert!(make_engine("sac-xlaq").is_err());
+        assert!(make_engine("sac-mixedy").is_err());
     }
 
     #[test]
@@ -247,6 +263,7 @@ mod tests {
             ("rtac-par-scoped2", "rtac-par-scoped"),
             ("sac-par2", "sac-par"),
             ("sac-xla4", "sac-xla"),
+            ("sac-mixed2", "sac-mixed"),
         ] {
             assert_eq!(make_engine(name).unwrap().name(), reported);
         }
@@ -255,7 +272,7 @@ mod tests {
     #[test]
     fn unknown_engine_error_lists_the_full_family() {
         let err = make_engine("nope").unwrap_err();
-        for name in ["rtac-par-scoped[N]", "sac-par[N]", "sac-xla[N]"] {
+        for name in ["rtac-par-scoped[N]", "sac-par[N]", "sac-xla[N]", "sac-mixed[N]"] {
             assert!(err.contains(name), "error string misses {name}: {err}");
         }
     }

@@ -7,7 +7,7 @@
 //! ([`crate::coordinator::Handle::submit_batch`] is the tensor-route
 //! twin of the CPU batching below).
 //!
-//! Three enforcers:
+//! Four enforcers:
 //!
 //! * [`Sac1`] — sequential SAC-1 (Debruyne & Bessière) wrapping any
 //!   inner AC engine.  Probes run on a scratch level of the trail;
@@ -33,19 +33,43 @@
 //!   - [`XlaProbeBackend`] (`sac-xla[N]`) — K probes staged straight
 //!     from the [`DomainPlane`] arena (`runtime::encode_vars_into`,
 //!     one base encoding per round + a single-row edit per probe) and
-//!     submitted through [`crate::coordinator::Handle::submit_batch`]
-//!     onto the compiled `fixb*` executables: the coordinator's dynamic
-//!     batcher fuses the round into as few executions as the compiled
-//!     batch sizes allow.  [`SacXla`] wraps this backend together with
-//!     a lazily-started coordinator session into a self-contained
+//!     submitted through the coordinator onto the compiled `fixb*`
+//!     executables: the coordinator's dynamic batcher fuses the round
+//!     into as few executions as the compiled batch sizes allow.  In
+//!     its default **delta mode** the round ships one base plane
+//!     ([`crate::coordinator::Handle::upload_base`]) plus one
+//!     [`crate::runtime::ProbeDelta`] row per probe
+//!     ([`crate::coordinator::Handle::submit_batch_delta`]) instead of
+//!     K full planes; [`XlaProbeBackend::full_plane`] keeps the PR-3
+//!     full-plane submission as the upload-volume baseline (and for
+//!     sessions with several base writers, where deltas would
+//!     invalidate each other).  [`SacXla`] wraps this backend together
+//!     with a lazily-started coordinator session into a self-contained
 //!     engine for `make_engine("sac-xla[N]")`.
+//!   - [`MixedProbeBackend`] (`sac-mixed[N]`) — each round is **split**
+//!     between the CPU and tensor backends by a cost model (see
+//!     [`MixedProbeBackend::auto_split`]): the tensor share is
+//!     submitted first (non-blocking), the CPU share runs on the pool
+//!     while the fused executions are in flight, and the verdicts are
+//!     merged in probe order.  Merging failed-probe sets from both
+//!     halves is sound because probe failure is monotone *regardless of
+//!     which backend observed it* — both probe the same launch domains.
+//!     A tensor-side failure falls back to re-probing that share on the
+//!     CPU (same launch domains ⇒ same verdicts), so the engine
+//!     degrades instead of poisoning.  [`SacMixed`] wraps it with a
+//!     lazily-started session and runs CPU-only when no artifacts are
+//!     available.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::Instant;
 
 use crate::ac::rtac::{derive_affected, RtacNative};
 use crate::ac::{Counters, Outcome, Propagator};
-use crate::coordinator::Handle;
+use crate::coordinator::{Handle, Response};
 use crate::core::{DomainPlane, PlaneSlab, Problem, State, Val, VarId};
 use crate::exec::WorkerPool;
-use crate::runtime::encode_vars_into;
+use crate::runtime::{encode_vars_into, plane_fingerprint, ProbeDelta};
 
 /// SAC-1 enforcer wrapping an inner AC engine.
 pub struct Sac1<E: Propagator> {
@@ -252,7 +276,8 @@ pub trait ProbeBackend {
 
 /// CPU probe backend (`sac-par[N]`): K probes concurrently on the
 /// persistent [`WorkerPool`], each on a private scratch plane pair from
-/// the [`PlaneSlab`], running [`plane_fixpoint`] (no trail).
+/// the [`PlaneSlab`], running the plane-level recurrent fixpoint
+/// (`plane_fixpoint`, no trail).
 pub struct CpuProbeBackend {
     /// Requested probe workers; 0 = auto (available parallelism).
     workers: usize,
@@ -347,12 +372,22 @@ pub const DEFAULT_TENSOR_PROBE_BATCH: usize = 8;
 /// compiled `fixb*` executables.  One [`encode_vars_into`] pass per
 /// round stages the launch domains; each probe plane is then the staged
 /// base with a single row edited to the singleton `{a}` — no per-probe
-/// re-gather.  A fused round goes through
-/// [`Handle::submit_batch`]/`enforce_batch_blocking`, putting all K
-/// planes on the executor queue contiguously so the dynamic batcher
-/// coalesces them; the `per_probe` variant submits them one blocking
-/// request at a time (the occupancy baseline `rtac serve --sac-probe`
-/// measures against).
+/// re-gather.
+///
+/// Three submission shapes:
+/// * **fused delta** ([`XlaProbeBackend::new`], the default) — the
+///   staged base is uploaded once per round
+///   ([`Handle::upload_base`]) and each probe ships only its
+///   [`ProbeDelta`] row through [`Handle::submit_batch_delta`]: a
+///   K-probe round moves one plane + K rows host→executor.
+/// * **fused full** ([`XlaProbeBackend::full_plane`]) — K full planes
+///   through [`Handle::submit_batch`]; the PR-3 behavior, kept as the
+///   upload-volume baseline and for shared sessions (several delta-base
+///   writers would invalidate each other's cache entries).
+/// * **per-probe** ([`XlaProbeBackend::per_probe`]) — one blocking
+///   full-plane request at a time: every probe gambles against the
+///   executor's `max_wait` deadline on its own (the occupancy baseline
+///   `rtac serve --sac-probe` measures against).
 pub struct XlaProbeBackend {
     handle: Handle,
     /// Probes per round; 0 = auto ([`DEFAULT_TENSOR_PROBE_BATCH`]).
@@ -361,6 +396,17 @@ pub struct XlaProbeBackend {
     staging: Vec<f32>,
     /// Fused (`submit_batch`) vs per-probe (`enforce_blocking`) routing.
     fused: bool,
+    /// Ship rounds as base + delta rows instead of full planes.
+    delta: bool,
+    /// Fingerprint of the last base plane this backend uploaded.  When
+    /// consecutive rounds launch from unchanged domains (the common
+    /// case on consistent instances: whole passes remove nothing), the
+    /// staged plane — and thus its fingerprint — is identical, so the
+    /// re-upload is skipped and a pass ships ONE base total.  Sound
+    /// because this backend is the session's only base writer (the
+    /// delta protocol's single-writer assumption) and the executor
+    /// cache is content-keyed.
+    last_base_fp: Option<u64>,
     /// Fingerprint of the problem this backend first probed.  The
     /// session's constraint tensor is device-resident and per-problem,
     /// so probing a *different* problem through the same handle would
@@ -370,15 +416,161 @@ pub struct XlaProbeBackend {
 }
 
 impl XlaProbeBackend {
+    /// Fused delta-mode backend — the default submission shape.
     pub fn new(handle: Handle, batch: usize) -> XlaProbeBackend {
-        XlaProbeBackend { handle, batch, staging: Vec::new(), fused: true, bound: None }
+        XlaProbeBackend {
+            handle,
+            batch,
+            staging: Vec::new(),
+            fused: true,
+            delta: true,
+            last_base_fp: None,
+            bound: None,
+        }
+    }
+
+    /// Fused full-plane backend: the upload-volume baseline, and the
+    /// safe shape when several clients upload delta bases on one
+    /// session.
+    pub fn full_plane(handle: Handle, batch: usize) -> XlaProbeBackend {
+        XlaProbeBackend {
+            handle,
+            batch,
+            staging: Vec::new(),
+            fused: true,
+            delta: false,
+            last_base_fp: None,
+            bound: None,
+        }
     }
 
     /// The per-probe submission baseline: same backend, but every probe
     /// gambles against the executor's `max_wait` deadline on its own.
     pub fn per_probe(handle: Handle, batch: usize) -> XlaProbeBackend {
-        XlaProbeBackend { handle, batch, staging: Vec::new(), fused: false, bound: None }
+        XlaProbeBackend {
+            handle,
+            batch,
+            staging: Vec::new(),
+            fused: false,
+            delta: false,
+            last_base_fp: None,
+            bound: None,
+        }
     }
+
+    /// Largest compiled `fixb*` capacity of the session — how many
+    /// probes one fused execution can amortise its dispatch over.  The
+    /// mixed scheduler's cost model reads this.
+    pub fn fused_capacity(&self) -> usize {
+        self.handle.compiled_batches.last().copied().unwrap_or(1)
+    }
+
+    /// One full probe plane derived from the staged base: row `x`
+    /// reduced to the singleton `{a}` — the single definition of the
+    /// probe shape shared by every full-plane submission path.
+    fn probe_plane(&self, x: VarId, a: Val) -> Vec<f32> {
+        let d = self.handle.bucket.d;
+        let mut plane = self.staging.clone();
+        let row = &mut plane[x * d..(x + 1) * d];
+        row.fill(0.0);
+        row[a] = 1.0;
+        plane
+    }
+
+    /// The handle's session owns a device-resident constraint tensor
+    /// for ONE problem; refuse to probe a different one (the
+    /// fingerprint walk is microseconds next to an XLA round-trip).
+    fn check_bound(&mut self, problem: &Problem) -> anyhow::Result<()> {
+        let fp = problem_fingerprint(problem);
+        match self.bound {
+            None => self.bound = Some(fp),
+            Some(bound) if bound != fp => anyhow::bail!(
+                "tensor probe backend is bound to another problem's session (the \
+                 constraint tensor is device-resident) — build a new \
+                 SacParallel::tensor against a fresh session, or use SacXla which \
+                 restarts sessions on problem switches"
+            ),
+            Some(_) => {}
+        }
+        Ok(())
+    }
+
+    /// Stage one fused round (encode the launch domains once, derive
+    /// each probe by a row edit — shipped as deltas or full planes) and
+    /// submit it without blocking.  Returns the response receivers in
+    /// probe order; [`XlaProbeBackend::collect_round`] turns them into
+    /// verdicts.  The split lets the mixed scheduler overlap the CPU
+    /// share of a round with the in-flight fused executions.
+    fn submit_round(
+        &mut self,
+        problem: &Problem,
+        state: &State,
+        probes: &[(VarId, Val)],
+    ) -> anyhow::Result<Vec<mpsc::Receiver<Response>>> {
+        debug_assert!(self.fused, "per-probe submission has no staged round");
+        self.check_bound(problem)?;
+        let bucket = self.handle.bucket;
+        encode_vars_into(state.plane(), bucket, &mut self.staging)?;
+        if self.delta {
+            let fp = plane_fingerprint(&self.staging);
+            if self.last_base_fp != Some(fp) {
+                let uploaded = self.handle.upload_base(self.staging.clone())?;
+                debug_assert_eq!(uploaded, fp);
+                self.last_base_fp = Some(fp);
+            }
+            let deltas: Vec<ProbeDelta> = probes
+                .iter()
+                .map(|&(x, a)| ProbeDelta::singleton(fp, x, a, bucket))
+                .collect();
+            self.handle.submit_batch_delta(deltas)
+        } else {
+            let planes: Vec<Vec<f32>> =
+                probes.iter().map(|&(x, a)| self.probe_plane(x, a)).collect();
+            self.handle.submit_batch(planes)
+        }
+    }
+
+    /// Block for a staged round's responses and fold them into
+    /// verdicts (`true` = the probe's fixpoint stayed consistent).
+    /// The round's work accounting comes back ALONGSIDE the verdicts
+    /// instead of being merged into the caller's counters directly, so
+    /// a round that fails mid-collect contributes nothing — the mixed
+    /// scheduler then re-probes the share on the CPU without
+    /// double-counting the partially-received tensor responses.
+    fn collect_round(
+        &self,
+        receivers: Vec<mpsc::Receiver<Response>>,
+    ) -> anyhow::Result<CollectedRound> {
+        let mut round = CollectedRound {
+            verdicts: Vec::with_capacity(receivers.len()),
+            recurrences: 0,
+            latency: std::time::Duration::ZERO,
+        };
+        for (i, rx) in receivers.into_iter().enumerate() {
+            let r = rx
+                .recv()
+                .map_err(|_| self.handle.dropped_err().context(format!("staged probe {i}")))?;
+            // joint sweep count of the fused execution that served
+            // this probe — the tensor-side #Recurrence
+            round.recurrences += r.iters.max(0) as u64;
+            // executor-side latency (submit → response), so the mixed
+            // scheduler's EWMA is not polluted by whatever the caller
+            // did between submit and collect
+            round.latency = round.latency.max(r.total_time);
+            round.verdicts.push(!r.wiped());
+        }
+        Ok(round)
+    }
+}
+
+/// One successfully collected fused probe round (see
+/// [`XlaProbeBackend`]'s `collect_round`).
+struct CollectedRound {
+    verdicts: Vec<bool>,
+    /// Summed tensor-side `#Recurrence` of the round's executions.
+    recurrences: u64,
+    /// Largest `Response::total_time` across the round.
+    latency: std::time::Duration,
 }
 
 impl ProbeBackend for XlaProbeBackend {
@@ -401,49 +593,370 @@ impl ProbeBackend for XlaProbeBackend {
         probes: &[(VarId, Val)],
         counters: &mut Counters,
     ) -> anyhow::Result<Vec<bool>> {
-        // the handle's session owns a device-resident constraint tensor
-        // for ONE problem; refuse to probe a different one (the
-        // fingerprint walk is microseconds next to an XLA round-trip)
-        let fp = problem_fingerprint(problem);
-        match self.bound {
-            None => self.bound = Some(fp),
-            Some(bound) if bound != fp => anyhow::bail!(
-                "tensor probe backend is bound to another problem's session (the \
-                 constraint tensor is device-resident) — build a new \
-                 SacParallel::tensor against a fresh session, or use SacXla which \
-                 restarts sessions on problem switches"
-            ),
-            Some(_) => {}
+        if self.fused {
+            let receivers = self.submit_round(problem, state, probes)?;
+            let round = self.collect_round(receivers)?;
+            counters.recurrences += round.recurrences;
+            return Ok(round.verdicts);
         }
+        self.check_bound(problem)?;
         let bucket = self.handle.bucket;
         encode_vars_into(state.plane(), bucket, &mut self.staging)?;
-        let planes: Vec<Vec<f32>> = probes
+        let responses = probes
             .iter()
-            .map(|&(x, a)| {
-                let mut plane = self.staging.clone();
-                let row = &mut plane[x * bucket.d..(x + 1) * bucket.d];
-                row.fill(0.0);
-                row[a] = 1.0;
-                plane
-            })
-            .collect();
-        let responses = if self.fused {
-            self.handle.enforce_batch_blocking(planes)?
-        } else {
-            planes
-                .into_iter()
-                .map(|p| self.handle.enforce_blocking(p))
-                .collect::<anyhow::Result<Vec<_>>>()?
-        };
+            .map(|&(x, a)| self.handle.enforce_blocking(self.probe_plane(x, a)))
+            .collect::<anyhow::Result<Vec<_>>>()?;
         Ok(responses
             .into_iter()
             .map(|r| {
-                // joint sweep count of the fused execution that served
-                // this probe — the tensor-side #Recurrence
                 counters.recurrences += r.iters.max(0) as u64;
                 !r.wiped()
             })
             .collect())
+    }
+}
+
+/// Exponentially weighted moving average of per-probe latency (µs) —
+/// the measured half of the mixed scheduler's cost model.
+struct Ewma {
+    value: Option<f64>,
+}
+
+impl Ewma {
+    const ALPHA: f64 = 0.3;
+
+    fn new() -> Ewma {
+        Ewma { value: None }
+    }
+
+    fn observe(&mut self, v: f64) {
+        self.value = Some(match self.value {
+            None => v,
+            Some(prev) => Self::ALPHA * v + (1.0 - Self::ALPHA) * prev,
+        });
+    }
+
+    fn get(&self) -> Option<f64> {
+        self.value
+    }
+}
+
+/// Routing counters of the [`MixedProbeBackend`], shared (`Arc`) so the
+/// bench and `rtac serve --sac-probe` can report how a run actually
+/// split after the engine is boxed behind the [`ProbeBackend`] seam.
+#[derive(Debug, Default)]
+pub struct MixedStats {
+    cpu_probes: AtomicU64,
+    tensor_probes: AtomicU64,
+    tensor_fallbacks: AtomicU64,
+}
+
+impl MixedStats {
+    /// Probes that ran on the CPU pool (including tensor-share probes
+    /// re-run on the CPU after a tensor-route failure).
+    pub fn cpu_probes(&self) -> u64 {
+        self.cpu_probes.load(Ordering::Relaxed)
+    }
+
+    /// Probes served by fused tensor executions.
+    pub fn tensor_probes(&self) -> u64 {
+        self.tensor_probes.load(Ordering::Relaxed)
+    }
+
+    /// Tensor-route failures that degraded the backend to CPU-only.
+    pub fn tensor_fallbacks(&self) -> u64 {
+        self.tensor_fallbacks.load(Ordering::Relaxed)
+    }
+}
+
+/// How a [`MixedProbeBackend`] divides each probe round.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MixedSplit {
+    /// Cost-model split (the default): see
+    /// [`MixedProbeBackend::auto_split`].
+    Auto,
+    /// Force every probe onto the CPU pool (also the effective mode
+    /// whenever no tensor session is available).
+    CpuOnly,
+    /// Force every probe onto the tensor route (testing/benching the
+    /// tensor half in isolation; still falls back on failure).
+    TensorOnly,
+}
+
+/// Probe-size-aware mixed CPU/tensor scheduling (`sac-mixed[N]`): each
+/// round is split between [`CpuProbeBackend`] and [`XlaProbeBackend`]
+/// by a cost model, the tensor share submitted first so its fused
+/// executions overlap the CPU share running on the pool.
+///
+/// The cost model estimates per-probe latency for each backend:
+/// * **CPU** — seeded from the domain-plane word count (a probe
+///   fixpoint sweeps the whole plane a few times), then replaced by a
+///   measured EWMA;
+/// * **tensor** — seeded from a fixed dispatch overhead amortised over
+///   the largest compiled `fixb*` capacity
+///   ([`XlaProbeBackend::fused_capacity`]), then replaced by a measured
+///   EWMA of fused round latency per probe.
+///
+/// Small planes therefore start CPU-heavy (dispatch overhead dominates
+/// — the Tardivo-style kernel-vs-host crossover), large planes start
+/// tensor-heavy, and the measured EWMAs correct both within a few
+/// rounds.  Merging the two halves' failed-probe sets is sound because
+/// probe failure is monotone regardless of which backend observed it;
+/// the SAC closure is unique, so any split reaches the same fixpoint.
+pub struct MixedProbeBackend {
+    cpu: CpuProbeBackend,
+    /// The tensor half; `None` = offline (or degraded after a failure):
+    /// every probe runs on the CPU.
+    tensor: Option<XlaProbeBackend>,
+    split: MixedSplit,
+    /// Measured per-probe latency (µs), one EWMA per backend.
+    cpu_ewma: Ewma,
+    tensor_ewma: Ewma,
+    /// Rounds since each route last received probes.  A route whose
+    /// share hits 0 stops producing latency observations, so one
+    /// anomalous measurement (a cold first execution, a transient
+    /// stall) could freeze its EWMA and starve it forever; after
+    /// [`MixedProbeBackend::EXPLORE_EVERY`] such rounds the starved
+    /// route gets one probe to re-measure with.
+    rounds_since_tensor: u32,
+    rounds_since_cpu: u32,
+    stats: Arc<MixedStats>,
+}
+
+impl MixedProbeBackend {
+    /// Cost-model seed: µs of CPU probe time per domain-plane word.
+    const SEED_CPU_US_PER_WORD: f64 = 0.05;
+    /// Cost-model seed: µs of fixed dispatch overhead per fused tensor
+    /// execution (amortised over the compiled batch capacity).
+    const SEED_TENSOR_DISPATCH_US: f64 = 200.0;
+    /// Auto-split exploration cadence: a route that has been starved
+    /// for this many consecutive rounds gets one probe to refresh its
+    /// latency EWMA (see `rounds_since_tensor`/`rounds_since_cpu`).
+    const EXPLORE_EVERY: u32 = 8;
+
+    /// CPU-only backend (`workers` 0 = auto) — what `sac-mixed[N]`
+    /// degrades to without compiled artifacts.
+    pub fn cpu_only(workers: usize) -> MixedProbeBackend {
+        MixedProbeBackend {
+            cpu: CpuProbeBackend::new(workers),
+            tensor: None,
+            split: MixedSplit::Auto,
+            cpu_ewma: Ewma::new(),
+            tensor_ewma: Ewma::new(),
+            rounds_since_tensor: 0,
+            rounds_since_cpu: 0,
+            stats: Arc::new(MixedStats::default()),
+        }
+    }
+
+    /// Mixed backend over an existing session, tensor rounds shipped as
+    /// **full planes** — safe when the session is shared by several
+    /// clients (parallel search workers), where delta-base uploads
+    /// would invalidate each other.
+    pub fn with_tensor(workers: usize, handle: Handle, tensor_batch: usize) -> MixedProbeBackend {
+        MixedProbeBackend {
+            tensor: Some(XlaProbeBackend::full_plane(handle, tensor_batch)),
+            ..MixedProbeBackend::cpu_only(workers)
+        }
+    }
+
+    /// Mixed backend over an **exclusively owned** session, tensor
+    /// rounds shipped in delta form (one base + K rows) — what
+    /// [`SacMixed`] builds.
+    pub fn with_tensor_delta(
+        workers: usize,
+        handle: Handle,
+        tensor_batch: usize,
+    ) -> MixedProbeBackend {
+        MixedProbeBackend {
+            tensor: Some(XlaProbeBackend::new(handle, tensor_batch)),
+            ..MixedProbeBackend::cpu_only(workers)
+        }
+    }
+
+    /// Pin the split policy (builder-style); [`MixedSplit::Auto`] is
+    /// the default.
+    pub fn with_split(mut self, split: MixedSplit) -> MixedProbeBackend {
+        self.split = split;
+        self
+    }
+
+    /// Shared routing counters (clone before boxing the backend).
+    pub fn stats(&self) -> Arc<MixedStats> {
+        self.stats.clone()
+    }
+
+    /// The pure split rule: given per-probe latency estimates (µs) for
+    /// the two concurrent backends, send each a share inversely
+    /// proportional to its latency, so both halves of the round finish
+    /// together.  Returns the tensor share of `len` probes.
+    pub fn auto_split(cpu_probe_us: f64, tensor_probe_us: f64, len: usize) -> usize {
+        if len == 0 {
+            return 0;
+        }
+        let total = cpu_probe_us + tensor_probe_us;
+        if !total.is_finite() || total <= 0.0 {
+            return len / 2; // degenerate estimates: split evenly
+        }
+        let tensor_frac = cpu_probe_us / total;
+        (((len as f64) * tensor_frac).round() as usize).min(len)
+    }
+
+    /// Tensor share of the next `len`-probe round against `state`.
+    fn tensor_share(&self, state: &State, len: usize) -> usize {
+        let Some(tensor) = &self.tensor else { return 0 };
+        match self.split {
+            MixedSplit::CpuOnly => 0,
+            MixedSplit::TensorOnly => len,
+            MixedSplit::Auto => {
+                let words = state.plane().total_words().max(1) as f64;
+                let cpu_us =
+                    self.cpu_ewma.get().unwrap_or(words * Self::SEED_CPU_US_PER_WORD);
+                let tensor_us = self.tensor_ewma.get().unwrap_or(
+                    Self::SEED_TENSOR_DISPATCH_US / tensor.fused_capacity().max(1) as f64,
+                );
+                Self::auto_split(cpu_us, tensor_us, len)
+            }
+        }
+    }
+
+    /// Drop the tensor half after a failure: the backend degrades to
+    /// CPU-only instead of poisoning the engine (the CPU route answers
+    /// every probe the tensor route would have).
+    fn degrade(&mut self, stage: &str, e: &anyhow::Error) {
+        eprintln!("sac-mixed: tensor route failed at {stage}, degrading to CPU-only: {e:#}");
+        self.stats.tensor_fallbacks.fetch_add(1, Ordering::Relaxed);
+        self.tensor = None;
+    }
+}
+
+impl ProbeBackend for MixedProbeBackend {
+    fn batch(&self) -> usize {
+        match (&self.tensor, self.split) {
+            (None, _) | (Some(_), MixedSplit::CpuOnly) => self.cpu.batch(),
+            (Some(t), MixedSplit::TensorOnly) => t.batch(),
+            // a mixed round keeps both backends busy at once
+            (Some(t), MixedSplit::Auto) => self.cpu.batch() + t.batch(),
+        }
+    }
+
+    fn engine_name(&self) -> &'static str {
+        "sac-mixed"
+    }
+
+    fn run_probes(
+        &mut self,
+        problem: &Problem,
+        state: &State,
+        probes: &[(VarId, Val)],
+        counters: &mut Counters,
+    ) -> anyhow::Result<Vec<bool>> {
+        let mut n_tensor = self.tensor_share(state, probes.len());
+        // exploration: a route starved for EXPLORE_EVERY rounds gets one
+        // probe back so its latency EWMA can recover from an anomalous
+        // observation (otherwise a share of 0 is self-perpetuating)
+        if self.tensor.is_some() && self.split == MixedSplit::Auto && probes.len() > 1 {
+            if n_tensor == 0 && self.rounds_since_tensor >= Self::EXPLORE_EVERY {
+                n_tensor = 1;
+            } else if n_tensor == probes.len() && self.rounds_since_cpu >= Self::EXPLORE_EVERY {
+                n_tensor = probes.len() - 1;
+            }
+        }
+        if n_tensor == 0 {
+            self.rounds_since_tensor += 1;
+        } else {
+            self.rounds_since_tensor = 0;
+        }
+        if n_tensor == probes.len() {
+            self.rounds_since_cpu += 1;
+        } else {
+            self.rounds_since_cpu = 0;
+        }
+        let (tensor_probes, cpu_probes) = probes.split_at(n_tensor);
+        // 1. submit the tensor share without blocking
+        let staged = if tensor_probes.is_empty() {
+            None
+        } else {
+            let submitted = self
+                .tensor
+                .as_mut()
+                .expect("tensor_share > 0 implies a tensor half")
+                .submit_round(problem, state, tensor_probes);
+            match submitted {
+                Ok(receivers) => Some(receivers),
+                Err(e) => {
+                    self.degrade("submit", &e);
+                    None
+                }
+            }
+        };
+        // 2. the CPU share runs while the fused executions are in flight
+        let t_cpu = Instant::now();
+        let mut cpu_verdicts = if cpu_probes.is_empty() {
+            Vec::new()
+        } else {
+            self.cpu.run_probes(problem, state, cpu_probes, counters)?
+        };
+        if !cpu_probes.is_empty() {
+            let us = t_cpu.elapsed().as_secs_f64() * 1e6;
+            self.cpu_ewma.observe(us / cpu_probes.len() as f64);
+            self.stats.cpu_probes.fetch_add(cpu_probes.len() as u64, Ordering::Relaxed);
+        }
+        // 3. collect the tensor share; on failure (or a failed submit),
+        // re-probe that share on the CPU — same launch domains, same
+        // verdicts, so the merge loop never notices
+        let mut tensor_verdicts = match staged {
+            Some(receivers) => {
+                let collected = self
+                    .tensor
+                    .as_ref()
+                    .expect("tensor half still present")
+                    .collect_round(receivers);
+                match collected {
+                    Ok(round) => {
+                        // the round's work counts only on success: a
+                        // failed collect re-probes on the CPU below, and
+                        // merging partial tensor responses too would
+                        // double-count #Recurrence for those probes
+                        counters.recurrences += round.recurrences;
+                        // executor-side round latency (max submit→response
+                        // across the share): unlike wall time here, it does
+                        // NOT include the CPU share that ran in between, so
+                        // the cost model is not biased against the tensor
+                        // route when the CPU share is the slow half
+                        let us = round.latency.as_secs_f64() * 1e6;
+                        self.tensor_ewma.observe(us / tensor_probes.len() as f64);
+                        self.stats
+                            .tensor_probes
+                            .fetch_add(tensor_probes.len() as u64, Ordering::Relaxed);
+                        round.verdicts
+                    }
+                    Err(e) => {
+                        self.degrade("collect", &e);
+                        self.stats
+                            .cpu_probes
+                            .fetch_add(tensor_probes.len() as u64, Ordering::Relaxed);
+                        self.cpu.run_probes(problem, state, tensor_probes, counters)?
+                    }
+                }
+            }
+            None if !tensor_probes.is_empty() => {
+                // submit failed above: the share still must be answered
+                self.stats.cpu_probes.fetch_add(tensor_probes.len() as u64, Ordering::Relaxed);
+                self.cpu.run_probes(problem, state, tensor_probes, counters)?
+            }
+            None => Vec::new(),
+        };
+        // 4. merge in probe order: [tensor share | cpu share]
+        tensor_verdicts.append(&mut cpu_verdicts);
+        Ok(tensor_verdicts)
+    }
+
+    fn reset(&mut self, problem: &Problem) {
+        self.cpu.reset(problem);
+        if let Some(t) = &mut self.tensor {
+            t.reset(problem);
+        }
     }
 }
 
@@ -715,6 +1228,130 @@ impl Propagator for SacXla {
     }
 }
 
+/// `sac-mixed[N]` as a self-contained engine: lazily starts — and owns
+/// — a coordinator session for the problem it enforces on, then runs
+/// [`SacParallel`] with a [`MixedProbeBackend`] whose tensor half ships
+/// delta rounds over that exclusive session.  Without compiled
+/// artifacts (or after a session start failure) the engine runs
+/// **CPU-only instead of poisoning**: the mixed scheduler's contract is
+/// that the CPU route can always answer every probe, so offline
+/// environments get `sac-par`-equivalent behavior under the same name.
+/// Sessions are per-problem (the constraint tensor is device-resident),
+/// so the session restarts when the problem changes.
+pub struct SacMixed {
+    /// CPU probe workers (0 = auto) — the N of `sac-mixed[N]`.
+    workers: usize,
+    artifact_dir: std::path::PathBuf,
+    /// The owned session backing the tensor half (None offline).
+    session: Option<crate::coordinator::Coordinator>,
+    engine: Option<SacParallel>,
+    /// Fingerprint of the problem the live engine serves.
+    session_key: Option<u64>,
+    /// Routing counters of the live backend (None before first use).
+    stats: Option<Arc<MixedStats>>,
+    pub failed: Option<String>,
+}
+
+impl SacMixed {
+    /// Engine against `runtime::default_artifact_dir()` (what
+    /// `make_engine("sac-mixed[N]")` constructs).
+    pub fn new(workers: usize) -> SacMixed {
+        SacMixed::with_artifact_dir(workers, crate::runtime::default_artifact_dir())
+    }
+
+    pub fn with_artifact_dir(workers: usize, artifact_dir: std::path::PathBuf) -> SacMixed {
+        SacMixed {
+            workers,
+            artifact_dir,
+            session: None,
+            engine: None,
+            session_key: None,
+            stats: None,
+            failed: None,
+        }
+    }
+
+    /// Routing counters of the current problem's backend, if any round
+    /// ran (how many probes went to each half, and whether the tensor
+    /// route degraded).
+    pub fn stats(&self) -> Option<Arc<MixedStats>> {
+        self.stats.clone()
+    }
+
+    fn ensure_engine(&mut self, problem: &Problem) {
+        let key = problem_fingerprint(problem);
+        if self.engine.is_some() && self.session_key == Some(key) {
+            return;
+        }
+        self.session = None;
+        let config = crate::coordinator::CoordinatorConfig {
+            artifact_dir: self.artifact_dir.clone(),
+            policy: crate::coordinator::BatchPolicy { adaptive: true, ..Default::default() },
+        };
+        let backend = match crate::coordinator::Coordinator::start(problem, config) {
+            Ok(coord) => {
+                // exclusive session: the delta protocol's single-writer
+                // assumption holds, so ship base + rows per round
+                let backend =
+                    MixedProbeBackend::with_tensor_delta(self.workers, coord.handle(), 0);
+                self.session = Some(coord);
+                backend
+            }
+            Err(e) => {
+                // offline is a designed mode, not an error: note it once
+                // per session and serve from the CPU pool
+                eprintln!("sac-mixed: no tensor session ({e:#}); running CPU-only");
+                MixedProbeBackend::cpu_only(self.workers)
+            }
+        };
+        self.stats = Some(backend.stats());
+        self.engine = Some(SacParallel::with_backend(Box::new(backend)));
+        self.session_key = Some(key);
+    }
+}
+
+impl Propagator for SacMixed {
+    fn name(&self) -> &'static str {
+        "sac-mixed"
+    }
+
+    fn reset(&mut self, _problem: &Problem) {
+        // per-problem session: tear everything down; the next
+        // enforcement rebuilds (and re-uploads the constraint tensor)
+        self.session = None;
+        self.engine = None;
+        self.session_key = None;
+        self.stats = None;
+        self.failed = None;
+    }
+
+    fn failure(&self) -> Option<&str> {
+        self.failed.as_deref()
+    }
+
+    fn enforce(
+        &mut self,
+        problem: &Problem,
+        state: &mut State,
+        _touched: &[VarId],
+        counters: &mut Counters,
+    ) -> Outcome {
+        if self.failed.is_some() {
+            return Outcome::Wipeout(0);
+        }
+        self.ensure_engine(problem);
+        let engine = self.engine.as_mut().expect("engine ensured above");
+        let out = engine.enforce_sac(problem, state, counters);
+        if let Some(e) = engine.failed.clone() {
+            // only reachable if the CPU route itself errored — the
+            // tensor half degrades instead of failing
+            eprintln!("sac-mixed: {e}");
+            self.failed = Some(e);
+        }
+        out
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -977,6 +1614,152 @@ mod tests {
         assert!(msg.contains("coordinator session"), "unhelpful failure: {msg}");
         engine.reset(&p);
         assert!(engine.failed.is_none(), "reset must clear the poison for a retry");
+    }
+
+    // ---- mixed CPU/tensor scheduling ----------------------------------
+
+    #[test]
+    fn mixed_cpu_only_reaches_the_sac1_fixpoint_across_worker_counts() {
+        // the forced-CPU leg of the satellite property test: sac-mixed
+        // with no tensor session must reach the same (unique) SAC
+        // closure as sequential SAC-1 at 1/2/4 workers.  (Forced
+        // tensor-only and auto splits run in coordinator/service.rs
+        // against the CPU-reference executor and, artifact-gated, in
+        // tests/coordinator.rs against the real one.)
+        forall("sac-mixed-cpu-vs-sac1", 0x51AC, 10, |rng| {
+            let spec = RandomSpec::new(
+                4 + rng.gen_range(6),
+                2 + rng.gen_range(4),
+                0.6 + 0.4 * rng.next_f64(),
+                0.55 * rng.next_f64(),
+                rng.next_u64(),
+            );
+            let p = random_csp(&spec);
+            let mut s_ref = State::new(&p);
+            let mut c_ref = Counters::default();
+            let o_ref =
+                Sac1::new(RtacNative::incremental()).enforce_sac(&p, &mut s_ref, &mut c_ref);
+            for workers in [1usize, 2, 4] {
+                let backend = MixedProbeBackend::cpu_only(workers);
+                let stats = backend.stats();
+                let mut engine = SacParallel::with_backend(Box::new(backend));
+                let mut s = State::new(&p);
+                let mut c = Counters::default();
+                let o = engine.enforce_sac(&p, &mut s, &mut c);
+                if o.is_consistent() != o_ref.is_consistent() {
+                    return Err(format!("{workers}w: outcome {o:?} vs {o_ref:?} on {spec:?}"));
+                }
+                if o_ref.is_consistent() && s.snapshot() != s_ref.snapshot() {
+                    return Err(format!("{workers}w: fixpoint mismatch on {spec:?}"));
+                }
+                if stats.tensor_probes() != 0 {
+                    return Err(format!("{workers}w: offline backend routed to a tensor half"));
+                }
+                if engine.probes > 0 && stats.cpu_probes() != engine.probes {
+                    return Err(format!(
+                        "{workers}w: stats {} != probes {}",
+                        stats.cpu_probes(),
+                        engine.probes
+                    ));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn mixed_engine_name_and_forced_cpu_split() {
+        let p = crate::gen::pigeonhole(3, 2);
+        let backend = MixedProbeBackend::cpu_only(2).with_split(MixedSplit::CpuOnly);
+        let mut engine = SacParallel::with_backend(Box::new(backend));
+        assert_eq!(engine.name(), "sac-mixed");
+        let mut s = State::new(&p);
+        let mut c = Counters::default();
+        assert!(!engine.enforce_sac(&p, &mut s, &mut c).is_consistent());
+        assert!(engine.failed.is_none());
+    }
+
+    #[test]
+    fn auto_split_is_inverse_latency_proportional() {
+        use MixedProbeBackend as M;
+        // equal latency: half and half
+        assert_eq!(M::auto_split(10.0, 10.0, 8), 4);
+        // CPU 3x slower per probe: the tensor half takes ~3/4
+        assert_eq!(M::auto_split(30.0, 10.0, 8), 6);
+        // tensor dominated by dispatch overhead: nearly everything CPU
+        assert_eq!(M::auto_split(1.0, 99.0, 8), 0);
+        // clamps and degenerate cases
+        assert_eq!(M::auto_split(10.0, 0.0, 8), 8);
+        assert_eq!(M::auto_split(10.0, 10.0, 0), 0);
+        assert_eq!(M::auto_split(0.0, 0.0, 8), 4);
+        assert_eq!(M::auto_split(f64::NAN, 10.0, 8), 4);
+    }
+
+    #[test]
+    fn ewma_tracks_observations() {
+        let mut e = Ewma::new();
+        assert_eq!(e.get(), None);
+        e.observe(100.0);
+        assert_eq!(e.get(), Some(100.0));
+        e.observe(0.0);
+        let v = e.get().unwrap();
+        assert!(v < 100.0 && v > 0.0, "EWMA must move toward new observations: {v}");
+    }
+
+    #[test]
+    fn sac_mixed_engine_runs_cpu_only_offline_without_poisoning() {
+        // unlike sac-xla, the mixed engine must DEGRADE offline: same
+        // closure as SAC-1, no failure reported
+        let mut engine = SacMixed::with_artifact_dir(
+            2,
+            std::path::PathBuf::from("/nonexistent-artifact-dir"),
+        );
+        assert_eq!(engine.name(), "sac-mixed");
+        let p = crate::gen::pigeonhole(3, 2);
+        let mut s = State::new(&p);
+        let mut c = Counters::default();
+        let out = engine.enforce(&p, &mut s, &[], &mut c);
+        assert!(!out.is_consistent(), "SAC must still refute pigeonhole(3,2)");
+        assert!(engine.failed.is_none(), "offline sac-mixed must not poison: {:?}", engine.failed);
+        assert_eq!(engine.failure(), None);
+        let stats = engine.stats().expect("a round ran");
+        assert!(stats.cpu_probes() > 0);
+        assert_eq!(stats.tensor_probes(), 0);
+        // a consistent instance too, cross-checked against SAC-1
+        let p2 = random_csp(&RandomSpec::new(7, 4, 0.7, 0.35, 13));
+        engine.reset(&p2);
+        let mut s_mixed = State::new(&p2);
+        let o_mixed = engine.enforce(&p2, &mut s_mixed, &[], &mut c);
+        let mut s_ref = State::new(&p2);
+        let o_ref = Sac1::new(RtacNative::incremental()).enforce_sac(&p2, &mut s_ref, &mut c);
+        assert_eq!(o_mixed.is_consistent(), o_ref.is_consistent());
+        if o_ref.is_consistent() {
+            assert_eq!(s_mixed.snapshot(), s_ref.snapshot());
+        }
+    }
+
+    #[test]
+    fn sac_mixed_engine_reuse_across_problems() {
+        let mut engine = SacMixed::with_artifact_dir(
+            2,
+            std::path::PathBuf::from("/nonexistent-artifact-dir"),
+        );
+        for p in [
+            crate::gen::pigeonhole(3, 2),
+            random_csp(&RandomSpec::new(7, 5, 0.8, 0.4, 23)),
+            crate::gen::pigeonhole(4, 3),
+        ] {
+            let mut s_mixed = State::new(&p);
+            let mut s_seq = State::new(&p);
+            let mut c = Counters::default();
+            let o_mixed = engine.enforce(&p, &mut s_mixed, &[], &mut c);
+            let o_seq = Sac1::new(RtacNative::incremental()).enforce_sac(&p, &mut s_seq, &mut c);
+            assert_eq!(o_mixed.is_consistent(), o_seq.is_consistent(), "{}", p.name());
+            if o_mixed.is_consistent() {
+                assert_eq!(s_mixed.snapshot(), s_seq.snapshot(), "{}", p.name());
+            }
+            engine.reset(&p);
+        }
     }
 
     #[test]

@@ -16,10 +16,18 @@
 //!   persistent `exec::WorkerPool` amortises away;
 //! * batched `sac-par` vs sequential SAC-1 on the SAC comparison cell
 //!   (SAC probes every (var, value) pair, so it runs on a SAC-sized
-//!   instance derived from the grid rather than the full MAC cell).
+//!   instance derived from the grid rather than the full MAC cell);
+//! * the artifact-gated tensor cells: `sac-par` vs `sac-xla`,
+//!   delta-vs-full upload volume, and `sac-mixed` vs the best single
+//!   backend.
+//!
+//! Cells that cannot run are **explicitly marked** in the JSON
+//! (`*_skipped: "<reason>"` — e.g. `"no-artifacts"`) instead of being
+//! silently omitted, so the per-PR perf trajectory can tell "not run"
+//! apart from "not measured".
 
 use crate::ac::rtac::RtacNative;
-use crate::ac::sac::{Sac1, SacParallel};
+use crate::ac::sac::{MixedProbeBackend, Sac1, SacParallel};
 use crate::ac::{Counters, Propagator};
 use crate::bench::workloads::{run_grid, CellResult, GridSpec};
 use crate::core::State;
@@ -224,13 +232,23 @@ pub struct SacXlaComparison {
     pub probes: u64,
 }
 
-/// Measure the tensor-routed SAC cell.  Self-skips (`None`) when the
-/// default artifact dir has no manifest or no bucket fits — mirroring
-/// the artifact-gated runtime suite — so offline bench runs lose only
-/// this cell.  The instance is capped to the compiled bucket range
+/// The one tensor-cell instance of a bench run: every artifact-gated
+/// cell (`sac-xla`, delta, mixed) derives the SAME capped instance and
+/// session config from the grid, so their numbers are comparable and
+/// the derivation cannot drift between cells.  `None` when the default
+/// artifact dir has no manifest or the grid is empty.
+struct TensorCell {
+    p: crate::core::Problem,
+    config: crate::coordinator::CoordinatorConfig,
+    n: usize,
+    density: f64,
+    dom: usize,
+}
+
+/// Derive the tensor-cell instance: capped to the compiled bucket range
 /// (the grid's MAC cells are far larger than any artifact bucket).
-pub fn sac_xla_comparison(spec: &GridSpec, workers: usize) -> Option<SacXlaComparison> {
-    use crate::coordinator::{BatchPolicy, Coordinator, CoordinatorConfig};
+fn tensor_cell(spec: &GridSpec) -> Option<TensorCell> {
+    use crate::coordinator::{BatchPolicy, CoordinatorConfig};
 
     let dir = crate::runtime::default_artifact_dir();
     if !dir.join("manifest.json").exists() {
@@ -244,27 +262,40 @@ pub fn sac_xla_comparison(spec: &GridSpec, workers: usize) -> Option<SacXlaCompa
         .max_by(|a, b| a.partial_cmp(b).unwrap())?;
     let dom = spec.dom_size.clamp(2, 8);
     let p = random_csp(&RandomSpec::new(n, dom, density, spec.tightness, spec.seed));
-    let coord = Coordinator::start(
-        &p,
-        CoordinatorConfig {
-            artifact_dir: dir,
-            policy: BatchPolicy { adaptive: true, ..Default::default() },
-        },
-    )
-    .ok()?; // no fitting bucket / broken artifacts: skip the cell
+    let config = CoordinatorConfig {
+        artifact_dir: dir,
+        policy: BatchPolicy { adaptive: true, ..Default::default() },
+    };
+    Some(TensorCell { p, config, n, density, dom })
+}
+
+/// Measure the tensor-routed SAC cell.  Self-skips (`None`) when the
+/// default artifact dir has no manifest or no bucket fits — mirroring
+/// the artifact-gated runtime suite — so offline bench runs lose only
+/// this cell.
+pub fn sac_xla_comparison(spec: &GridSpec, workers: usize) -> Option<SacXlaComparison> {
+    sac_xla_comparison_on(&tensor_cell(spec)?, workers)
+}
+
+fn sac_xla_comparison_on(cell: &TensorCell, workers: usize) -> Option<SacXlaComparison> {
+    use crate::coordinator::Coordinator;
+
+    let (p, n, density, dom) = (&cell.p, cell.n, cell.density, cell.dom);
+    let coord = Coordinator::start(p, cell.config.clone()).ok()?;
+    // ^ no fitting bucket / broken artifacts: skip the cell
 
     let mut par = SacParallel::new(workers);
-    let mut s_par = State::new(&p);
+    let mut s_par = State::new(p);
     let mut c_par = Counters::default();
     let sw = Stopwatch::start();
-    let o_par = par.enforce_sac(&p, &mut s_par, &mut c_par);
+    let o_par = par.enforce_sac(p, &mut s_par, &mut c_par);
     let sac_par_ms = sw.elapsed_ms();
 
     let mut xla = SacParallel::tensor(coord.handle(), 0);
-    let mut s_xla = State::new(&p);
+    let mut s_xla = State::new(p);
     let mut c_xla = Counters::default();
     let sw = Stopwatch::start();
-    let o_xla = xla.enforce_sac(&p, &mut s_xla, &mut c_xla);
+    let o_xla = xla.enforce_sac(p, &mut s_xla, &mut c_xla);
     let sac_xla_ms = sw.elapsed_ms();
     if xla.failed.is_some() {
         return None; // session died mid-run: no comparable numbers
@@ -292,6 +323,373 @@ pub fn render_sac_xla(c: &SacXlaComparison) -> String {
         c.n, c.density, c.dom, c.workers, c.sac_par_ms, c.sac_xla_ms, c.speedup,
         c.mean_batch_occupancy, c.probes
     )
+}
+
+/// Why a bench cell carries no measurement — serialised verbatim into
+/// `BENCH_rtac.json` as the cell's `*_skipped` marker, so the perf
+/// trajectory distinguishes "not run" from "not measured".
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SkipReason {
+    /// The operator disabled the SAC cells (`--sac-workers 0`).
+    Disabled,
+    /// No compiled `fixb*` artifacts: the tensor route cannot run.
+    NoArtifacts,
+    /// A session could not be established for the derived instance
+    /// (no compiled bucket fits it, broken artifacts, executor died)
+    /// or the measurement failed mid-run — distinct from
+    /// `NoArtifacts`, where the gate is the missing manifest itself.
+    SessionUnavailable,
+    /// The grid spec had no sizes/densities to derive the cell from.
+    EmptyGrid,
+}
+
+impl SkipReason {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            SkipReason::Disabled => "disabled",
+            SkipReason::NoArtifacts => "no-artifacts",
+            SkipReason::SessionUnavailable => "session-unavailable",
+            SkipReason::EmptyGrid => "empty-grid",
+        }
+    }
+}
+
+/// A bench cell: measured, or explicitly skipped with a reason.
+#[derive(Clone, Debug)]
+pub enum CellOutcome<T> {
+    Measured(T),
+    Skipped(SkipReason),
+}
+
+impl<T> CellOutcome<T> {
+    pub fn measured(&self) -> Option<&T> {
+        match self {
+            CellOutcome::Measured(c) => Some(c),
+            CellOutcome::Skipped(_) => None,
+        }
+    }
+}
+
+/// The four SAC comparison cells of one bench run.
+#[derive(Clone, Debug)]
+pub struct SacCells {
+    /// Sequential SAC-1 vs `sac-par` (CPU; always runnable).
+    pub sac: CellOutcome<SacComparison>,
+    /// `sac-par` vs `sac-xla` (artifact-gated).
+    pub sac_xla: CellOutcome<SacXlaComparison>,
+    /// Delta vs full-plane probe upload volume (artifact-gated).
+    pub delta: CellOutcome<DeltaComparison>,
+    /// `sac-mixed` vs the best single backend (artifact-gated).
+    pub mixed: CellOutcome<MixedComparison>,
+}
+
+impl SacCells {
+    pub fn all_skipped(reason: SkipReason) -> SacCells {
+        SacCells {
+            sac: CellOutcome::Skipped(reason),
+            sac_xla: CellOutcome::Skipped(reason),
+            delta: CellOutcome::Skipped(reason),
+            mixed: CellOutcome::Skipped(reason),
+        }
+    }
+}
+
+/// Do the default artifacts exist?  The gate for the tensor cells —
+/// when false they are marked `"no-artifacts"` rather than omitted.
+pub fn artifacts_available() -> bool {
+    crate::runtime::default_artifact_dir().join("manifest.json").exists()
+}
+
+/// Run every SAC comparison cell the environment permits, marking the
+/// rest with their skip reason (the satellite fix: `bench-rtac` used to
+/// silently omit artifact-gated cells).
+pub fn run_sac_cells(spec: &GridSpec, workers: usize) -> SacCells {
+    if workers == 0 {
+        return SacCells::all_skipped(SkipReason::Disabled);
+    }
+    let sac = match sac_probe_comparison(spec, workers) {
+        Some(c) => CellOutcome::Measured(c),
+        None => CellOutcome::Skipped(SkipReason::EmptyGrid),
+    };
+    if !artifacts_available() {
+        return SacCells {
+            sac,
+            sac_xla: CellOutcome::Skipped(SkipReason::NoArtifacts),
+            delta: CellOutcome::Skipped(SkipReason::NoArtifacts),
+            mixed: CellOutcome::Skipped(SkipReason::NoArtifacts),
+        };
+    }
+    // derive the tensor-cell instance ONCE and share it across the
+    // three artifact-gated cells: no redundant instance generation, no
+    // chance of the cells' derivations drifting apart.  With artifacts
+    // present, the only way the derivation fails is an empty grid —
+    // don't let that masquerade as a session problem.
+    let Some(cell) = tensor_cell(spec) else {
+        return SacCells {
+            sac,
+            sac_xla: CellOutcome::Skipped(SkipReason::EmptyGrid),
+            delta: CellOutcome::Skipped(SkipReason::EmptyGrid),
+            mixed: CellOutcome::Skipped(SkipReason::EmptyGrid),
+        };
+    };
+    let sac_xla = match sac_xla_comparison_on(&cell, workers) {
+        Some(c) => CellOutcome::Measured(c),
+        None => CellOutcome::Skipped(SkipReason::SessionUnavailable),
+    };
+    let delta = match delta_comparison_on(&cell) {
+        Some(c) => CellOutcome::Measured(c),
+        None => CellOutcome::Skipped(SkipReason::SessionUnavailable),
+    };
+    // reuse the sac-xla cell's baselines (same instance) instead of
+    // re-enforcing them on fresh sessions
+    let mixed = match mixed_comparison_on(&cell, workers, sac_xla.measured()) {
+        Some(c) => CellOutcome::Measured(c),
+        None => CellOutcome::Skipped(SkipReason::SessionUnavailable),
+    };
+    SacCells { sac, sac_xla, delta, mixed }
+}
+
+/// Tensor-route upload-volume cell: the same SAC enforcement routed
+/// through the coordinator twice — once shipping full probe planes
+/// (the PR-3 baseline), once in delta form (base + rows) — comparing
+/// wall time and the f32 volume that crossed the client→executor
+/// channel.
+#[derive(Clone, Debug)]
+pub struct DeltaComparison {
+    pub n: usize,
+    pub density: f64,
+    pub dom: usize,
+    pub full_ms: f64,
+    pub delta_ms: f64,
+    pub full_shipped_f32: u64,
+    pub delta_shipped_f32: u64,
+    /// delta volume / full volume (< 1 is the delta win).
+    pub upload_ratio: f64,
+    pub probes: u64,
+}
+
+/// Measure the delta-vs-full upload cell.  Self-skips (`None`) when no
+/// session can start or either run fails.
+pub fn delta_comparison(spec: &GridSpec) -> Option<DeltaComparison> {
+    delta_comparison_on(&tensor_cell(spec)?)
+}
+
+fn delta_comparison_on(cell: &TensorCell) -> Option<DeltaComparison> {
+    use crate::ac::sac::XlaProbeBackend;
+    use crate::coordinator::Coordinator;
+
+    let p = &cell.p;
+
+    // a fresh session per mode so each one's metrics isolate its volume
+    let run = |delta: bool| -> Option<(f64, u64, u64, bool)> {
+        let coord = Coordinator::start(p, cell.config.clone()).ok()?;
+        let backend = if delta {
+            XlaProbeBackend::new(coord.handle(), 0)
+        } else {
+            XlaProbeBackend::full_plane(coord.handle(), 0)
+        };
+        let mut engine = SacParallel::with_backend(Box::new(backend));
+        let mut s = State::new(p);
+        let mut c = Counters::default();
+        let sw = Stopwatch::start();
+        let out = engine.enforce_sac(p, &mut s, &mut c);
+        let ms = sw.elapsed_ms();
+        if engine.failed.is_some() {
+            return None;
+        }
+        let shipped = coord.metrics().snapshot().shipped_f32;
+        Some((ms, shipped, engine.probes, out.is_consistent()))
+    };
+
+    let (full_ms, full_shipped_f32, probes, ok_full) = run(false)?;
+    let (delta_ms, delta_shipped_f32, _, ok_delta) = run(true)?;
+    if ok_full != ok_delta {
+        // a real check (not a debug_assert): benches run in release, and
+        // an outcome divergence between submission modes means the cell
+        // would compare two non-equivalent computations — skip it loudly
+        eprintln!("sac delta cell: outcome diverged between full and delta modes — skipping");
+        return None;
+    }
+    Some(DeltaComparison {
+        n: cell.n,
+        density: cell.density,
+        dom: cell.dom,
+        full_ms,
+        delta_ms,
+        full_shipped_f32,
+        delta_shipped_f32,
+        upload_ratio: if full_shipped_f32 > 0 {
+            delta_shipped_f32 as f64 / full_shipped_f32 as f64
+        } else {
+            0.0
+        },
+        probes,
+    })
+}
+
+/// One-line report for the delta-vs-full upload cell.
+pub fn render_delta(c: &DeltaComparison) -> String {
+    format!(
+        "sac delta cell (n={}, density={:.2}, dom={}): full {:.1}ms/{} f32 vs delta \
+         {:.1}ms/{} f32 -> {:.2}x upload volume ({} probes)\n",
+        c.n, c.density, c.dom, c.full_ms, c.full_shipped_f32, c.delta_ms,
+        c.delta_shipped_f32, c.upload_ratio, c.probes
+    )
+}
+
+/// Mixed-scheduling cell: `sac-mixed` (cost-model split, delta rounds)
+/// against the best *single* backend on the same instance.
+#[derive(Clone, Debug)]
+pub struct MixedComparison {
+    pub n: usize,
+    pub density: f64,
+    pub dom: usize,
+    pub workers: usize,
+    pub sac_par_ms: f64,
+    pub sac_xla_ms: f64,
+    pub mixed_ms: f64,
+    /// Name of the faster single backend (`sac-par` or `sac-xla`).
+    pub best_single: String,
+    pub best_single_ms: f64,
+    /// best single wall / mixed wall (> 1 = mixed beats both).
+    pub speedup: f64,
+    /// How the mixed run actually routed its probes.
+    pub cpu_probes: u64,
+    pub tensor_probes: u64,
+}
+
+/// Measure the mixed-vs-best-single cell.  Self-skips (`None`) when no
+/// session can start or a tensor-side run fails.  When `baseline` is
+/// the run's already-measured [`SacXlaComparison`] (same
+/// [`tensor_cell`] instance by construction), its `sac-par`/`sac-xla`
+/// wall times are reused instead of re-enforcing both on fresh
+/// sessions; pass `None` to measure standalone.
+pub fn mixed_comparison(
+    spec: &GridSpec,
+    workers: usize,
+    baseline: Option<&SacXlaComparison>,
+) -> Option<MixedComparison> {
+    mixed_comparison_on(&tensor_cell(spec)?, workers, baseline)
+}
+
+fn mixed_comparison_on(
+    cell: &TensorCell,
+    workers: usize,
+    baseline: Option<&SacXlaComparison>,
+) -> Option<MixedComparison> {
+    use crate::coordinator::Coordinator;
+
+    let p = &cell.p;
+
+    let (sac_par_ms, sac_xla_ms) = match baseline.filter(|b| b.workers == workers) {
+        Some(b) => (b.sac_par_ms, b.sac_xla_ms),
+        None => {
+            // CPU-only baseline
+            let mut par = SacParallel::new(workers);
+            let mut s_par = State::new(p);
+            let mut c_par = Counters::default();
+            let sw = Stopwatch::start();
+            let o_par = par.enforce_sac(p, &mut s_par, &mut c_par);
+            let sac_par_ms = sw.elapsed_ms();
+
+            // tensor-only baseline (own session)
+            let coord_xla = Coordinator::start(p, cell.config.clone()).ok()?;
+            let mut xla = SacParallel::tensor(coord_xla.handle(), 0);
+            let mut s_xla = State::new(p);
+            let mut c_xla = Counters::default();
+            let sw = Stopwatch::start();
+            let o_xla = xla.enforce_sac(p, &mut s_xla, &mut c_xla);
+            let sac_xla_ms = sw.elapsed_ms();
+            if xla.failed.is_some() || o_par.is_consistent() != o_xla.is_consistent() {
+                return None; // dead session or diverged outcomes: not comparable
+            }
+            (sac_par_ms, sac_xla_ms)
+        }
+    };
+
+    // mixed (own session, delta rounds, auto split)
+    let coord_mixed = Coordinator::start(p, cell.config.clone()).ok()?;
+    let backend = MixedProbeBackend::with_tensor_delta(workers, coord_mixed.handle(), 0);
+    let stats = backend.stats();
+    let mut mixed = SacParallel::with_backend(Box::new(backend));
+    let mut s_mixed = State::new(p);
+    let mut c_mixed = Counters::default();
+    let sw = Stopwatch::start();
+    let o_mixed = mixed.enforce_sac(p, &mut s_mixed, &mut c_mixed);
+    let mixed_ms = sw.elapsed_ms();
+    if mixed.failed.is_some() {
+        return None;
+    }
+    // outcome cross-check against untimed sequential SAC-1 (cheap at
+    // this cell size): a diverging mixed run must skip the cell loudly,
+    // never publish a speedup comparing non-equivalent computations
+    let mut s_ref = State::new(p);
+    let mut c_ref = Counters::default();
+    let o_ref = Sac1::new(RtacNative::incremental()).enforce_sac(p, &mut s_ref, &mut c_ref);
+    if o_mixed.is_consistent() != o_ref.is_consistent() {
+        eprintln!("sac mixed cell: outcome diverged from SAC-1 — skipping");
+        return None;
+    }
+
+    let (best_single, best_single_ms) = if sac_par_ms <= sac_xla_ms {
+        (format!("sac-par{workers}"), sac_par_ms)
+    } else {
+        ("sac-xla".to_string(), sac_xla_ms)
+    };
+    Some(MixedComparison {
+        n: cell.n,
+        density: cell.density,
+        dom: cell.dom,
+        workers,
+        sac_par_ms,
+        sac_xla_ms,
+        mixed_ms,
+        best_single,
+        best_single_ms,
+        speedup: if mixed_ms > 0.0 { best_single_ms / mixed_ms } else { 0.0 },
+        cpu_probes: stats.cpu_probes(),
+        tensor_probes: stats.tensor_probes(),
+    })
+}
+
+/// One-line report for the mixed-vs-best-single cell.
+pub fn render_mixed(c: &MixedComparison) -> String {
+    format!(
+        "sac mixed cell (n={}, density={:.2}, dom={}): sac-mixed{} {:.1}ms vs best single \
+         {} {:.1}ms -> {:.2}x (split: {} cpu / {} tensor probes)\n",
+        c.n, c.density, c.dom, c.workers, c.mixed_ms, c.best_single, c.best_single_ms,
+        c.speedup, c.cpu_probes, c.tensor_probes
+    )
+}
+
+/// Human report of all four SAC cells, including explicit skip notes.
+pub fn render_cells(cells: &SacCells) -> String {
+    let mut out = String::new();
+    match &cells.sac {
+        CellOutcome::Measured(c) => out.push_str(&render_sac(c)),
+        CellOutcome::Skipped(r) => {
+            out.push_str(&format!("sac cell: skipped ({})\n", r.as_str()))
+        }
+    }
+    match &cells.sac_xla {
+        CellOutcome::Measured(c) => out.push_str(&render_sac_xla(c)),
+        CellOutcome::Skipped(r) => {
+            out.push_str(&format!("sac tensor cell: skipped ({})\n", r.as_str()))
+        }
+    }
+    match &cells.delta {
+        CellOutcome::Measured(c) => out.push_str(&render_delta(c)),
+        CellOutcome::Skipped(r) => {
+            out.push_str(&format!("sac delta cell: skipped ({})\n", r.as_str()))
+        }
+    }
+    match &cells.mixed {
+        CellOutcome::Measured(c) => out.push_str(&render_mixed(c)),
+        CellOutcome::Skipped(r) => {
+            out.push_str(&format!("sac mixed cell: skipped ({})\n", r.as_str()))
+        }
+    }
+    out
 }
 
 /// Paper-style matrix: one row per (n, density), ns/assignment per
@@ -341,13 +739,10 @@ pub fn render(results: &[CellResult], engines: &[&str]) -> String {
 }
 
 /// JSON export: grid metadata + one row per cell (BENCH_rtac.json),
-/// plus the densest-cell verdicts and the SAC comparisons when run.
-pub fn to_json(
-    spec: &GridSpec,
-    results: &[CellResult],
-    sac: Option<&SacComparison>,
-    sac_xla: Option<&SacXlaComparison>,
-) -> Json {
+/// plus the densest-cell verdicts and the four SAC comparison cells —
+/// measured fields when run, an explicit `*_skipped: "<reason>"`
+/// marker when not (never silently absent).
+pub fn to_json(spec: &GridSpec, results: &[CellResult], cells: &SacCells) -> Json {
     let rows = Json::Arr(
         results
             .iter()
@@ -378,25 +773,55 @@ pub fn to_json(
         fields.push(("pooled_engine", s(&pooled)));
         fields.push(("scoped_engine", s(&scoped)));
     }
-    if let Some(c) = sac {
-        fields.push(("sac_n", num(c.n as f64)));
-        fields.push(("sac_density", num(c.density)));
-        fields.push(("sac_dom", num(c.dom as f64)));
-        fields.push(("sac_workers", num(c.workers as f64)));
-        fields.push(("sac_ms", num(c.sac_ms)));
-        fields.push(("sac_par_ms", num(c.sac_par_ms)));
-        fields.push(("sac_par_speedup", num(c.speedup)));
-        fields.push(("sac_probes", num(c.probes as f64)));
+    match &cells.sac {
+        CellOutcome::Measured(c) => {
+            fields.push(("sac_n", num(c.n as f64)));
+            fields.push(("sac_density", num(c.density)));
+            fields.push(("sac_dom", num(c.dom as f64)));
+            fields.push(("sac_workers", num(c.workers as f64)));
+            fields.push(("sac_ms", num(c.sac_ms)));
+            fields.push(("sac_par_ms", num(c.sac_par_ms)));
+            fields.push(("sac_par_speedup", num(c.speedup)));
+            fields.push(("sac_probes", num(c.probes as f64)));
+        }
+        CellOutcome::Skipped(r) => fields.push(("sac_skipped", s(r.as_str()))),
     }
-    if let Some(c) = sac_xla {
-        fields.push(("sac_xla_n", num(c.n as f64)));
-        fields.push(("sac_xla_ms", num(c.sac_xla_ms)));
-        fields.push(("sac_xla_vs_par_ms", num(c.sac_par_ms)));
-        fields.push(("sac_xla_speedup", num(c.speedup)));
-        // the coordinator's occupancy metric: mean real requests per
-        // fused execution (a count, not a 0..1 fraction)
-        fields.push(("sac_xla_mean_batch_occupancy", num(c.mean_batch_occupancy)));
-        fields.push(("sac_xla_probes", num(c.probes as f64)));
+    match &cells.sac_xla {
+        CellOutcome::Measured(c) => {
+            fields.push(("sac_xla_n", num(c.n as f64)));
+            fields.push(("sac_xla_ms", num(c.sac_xla_ms)));
+            fields.push(("sac_xla_vs_par_ms", num(c.sac_par_ms)));
+            fields.push(("sac_xla_speedup", num(c.speedup)));
+            // the coordinator's occupancy metric: mean real requests per
+            // fused execution (a count, not a 0..1 fraction)
+            fields.push(("sac_xla_mean_batch_occupancy", num(c.mean_batch_occupancy)));
+            fields.push(("sac_xla_probes", num(c.probes as f64)));
+        }
+        CellOutcome::Skipped(r) => fields.push(("sac_xla_skipped", s(r.as_str()))),
+    }
+    match &cells.delta {
+        CellOutcome::Measured(c) => {
+            fields.push(("sac_delta_n", num(c.n as f64)));
+            fields.push(("sac_delta_ms", num(c.delta_ms)));
+            fields.push(("sac_delta_full_ms", num(c.full_ms)));
+            fields.push(("sac_delta_shipped_f32", num(c.delta_shipped_f32 as f64)));
+            fields.push(("sac_delta_full_shipped_f32", num(c.full_shipped_f32 as f64)));
+            fields.push(("sac_delta_upload_ratio", num(c.upload_ratio)));
+            fields.push(("sac_delta_probes", num(c.probes as f64)));
+        }
+        CellOutcome::Skipped(r) => fields.push(("sac_delta_skipped", s(r.as_str()))),
+    }
+    match &cells.mixed {
+        CellOutcome::Measured(c) => {
+            fields.push(("sac_mixed_n", num(c.n as f64)));
+            fields.push(("sac_mixed_ms", num(c.mixed_ms)));
+            fields.push(("sac_mixed_best_single_ms", num(c.best_single_ms)));
+            fields.push(("sac_mixed_best_single", s(&c.best_single)));
+            fields.push(("sac_mixed_vs_best_speedup", num(c.speedup)));
+            fields.push(("sac_mixed_cpu_probes", num(c.cpu_probes as f64)));
+            fields.push(("sac_mixed_tensor_probes", num(c.tensor_probes as f64)));
+        }
+        CellOutcome::Skipped(r) => fields.push(("sac_mixed_skipped", s(r.as_str()))),
     }
     obj(fields)
 }
@@ -443,13 +868,59 @@ mod tests {
     #[test]
     fn json_has_row_per_cell_and_parses_back() {
         let (spec, results) = tiny_results();
-        let j = to_json(&spec, &results, None, None);
+        let j = to_json(&spec, &results, &SacCells::all_skipped(SkipReason::Disabled));
         let parsed = crate::util::json::parse(&j.to_string()).unwrap();
         assert_eq!(
             parsed.get("rows").unwrap().as_arr().unwrap().len(),
             results.len()
         );
         assert_eq!(parsed.get("bench").unwrap().as_str(), Some("rtac-family"));
+    }
+
+    #[test]
+    fn skipped_cells_are_marked_not_omitted() {
+        // the satellite fix: every un-run cell leaves an explicit marker
+        let (spec, results) = tiny_results();
+        let j = to_json(&spec, &results, &SacCells::all_skipped(SkipReason::Disabled));
+        let parsed = crate::util::json::parse(&j.to_string()).unwrap();
+        for key in ["sac_skipped", "sac_xla_skipped", "sac_delta_skipped", "sac_mixed_skipped"] {
+            assert_eq!(parsed.get(key).unwrap().as_str(), Some("disabled"), "{key}");
+        }
+        // and the no-artifacts reason serialises as the documented token
+        let j = to_json(&spec, &results, &SacCells::all_skipped(SkipReason::NoArtifacts));
+        let parsed = crate::util::json::parse(&j.to_string()).unwrap();
+        assert_eq!(parsed.get("sac_xla_skipped").unwrap().as_str(), Some("no-artifacts"));
+        assert!(parsed.get("sac_xla_ms").is_none(), "skipped cells must carry no numbers");
+    }
+
+    #[test]
+    fn run_sac_cells_gates_and_marks() {
+        let spec = GridSpec {
+            sizes: vec![6],
+            densities: vec![1.0],
+            dom_size: 3,
+            tightness: 0.3,
+            assignments: 5,
+            seed: 2,
+        };
+        // workers == 0: everything disabled
+        let cells = run_sac_cells(&spec, 0);
+        assert!(matches!(cells.sac, CellOutcome::Skipped(SkipReason::Disabled)));
+        assert!(matches!(cells.mixed, CellOutcome::Skipped(SkipReason::Disabled)));
+        // workers > 0: the CPU cell always measures; the tensor cells
+        // either measure (artifacts present) or carry the gate marker
+        let cells = run_sac_cells(&spec, 2);
+        assert!(cells.sac.measured().is_some(), "the CPU cell needs no artifacts");
+        if !artifacts_available() {
+            assert!(matches!(cells.sac_xla, CellOutcome::Skipped(SkipReason::NoArtifacts)));
+            assert!(matches!(cells.delta, CellOutcome::Skipped(SkipReason::NoArtifacts)));
+            assert!(matches!(cells.mixed, CellOutcome::Skipped(SkipReason::NoArtifacts)));
+        }
+        // render always mentions all four cells
+        let txt = render_cells(&cells);
+        for needle in ["sac cell", "sac tensor cell", "sac delta cell", "sac mixed cell"] {
+            assert!(txt.contains(needle), "render_cells misses {needle}: {txt}");
+        }
     }
 
     #[test]
@@ -499,10 +970,15 @@ mod tests {
         assert!(c.sac_ms >= 0.0 && c.sac_par_ms >= 0.0);
         let txt = render_sac(&c);
         assert!(txt.contains("sac-par2"));
-        let j = to_json(&spec, &run(&spec, &["rtac"]), Some(&c), None);
+        let cells = SacCells {
+            sac: CellOutcome::Measured(c),
+            ..SacCells::all_skipped(SkipReason::NoArtifacts)
+        };
+        let j = to_json(&spec, &run(&spec, &["rtac"]), &cells);
         let parsed = crate::util::json::parse(&j.to_string()).unwrap();
         assert!(parsed.get("sac_par_speedup").is_some());
         assert!(parsed.get("sac_probes").is_some());
+        assert!(parsed.get("sac_skipped").is_none(), "a measured cell carries no marker");
     }
 
     #[test]
@@ -533,9 +1009,67 @@ mod tests {
         let txt = render_sac_xla(c);
         assert!(txt.contains("sac-xla"));
         assert!(txt.contains("reqs/fused execution"));
-        let j = to_json(&spec, &run(&spec, &["rtac"]), None, Some(c));
+        let cells = SacCells {
+            sac_xla: CellOutcome::Measured(c.clone()),
+            ..SacCells::all_skipped(SkipReason::Disabled)
+        };
+        let j = to_json(&spec, &run(&spec, &["rtac"]), &cells);
         let parsed = crate::util::json::parse(&j.to_string()).unwrap();
         assert!(parsed.get("sac_xla_mean_batch_occupancy").is_some());
         assert!(parsed.get("sac_xla_speedup").is_some());
+    }
+
+    #[test]
+    fn delta_and_mixed_cells_export_and_render() {
+        let spec = GridSpec {
+            sizes: vec![8],
+            densities: vec![1.0],
+            dom_size: 4,
+            tightness: 0.3,
+            assignments: 10,
+            seed: 3,
+        };
+        // offline these self-skip; the JSON/render plumbing must hold
+        // up either way, so fall back to fake measurements
+        let delta = delta_comparison(&spec).unwrap_or(DeltaComparison {
+            n: 8,
+            density: 1.0,
+            dom: 4,
+            full_ms: 4.0,
+            delta_ms: 3.0,
+            full_shipped_f32: 4096,
+            delta_shipped_f32: 640,
+            upload_ratio: 640.0 / 4096.0,
+            probes: 32,
+        });
+        let mixed = mixed_comparison(&spec, 2, None).unwrap_or(MixedComparison {
+            n: 8,
+            density: 1.0,
+            dom: 4,
+            workers: 2,
+            sac_par_ms: 2.0,
+            sac_xla_ms: 3.0,
+            mixed_ms: 1.5,
+            best_single: "sac-par2".into(),
+            best_single_ms: 2.0,
+            speedup: 2.0 / 1.5,
+            cpu_probes: 20,
+            tensor_probes: 12,
+        });
+        assert!(render_delta(&delta).contains("upload volume"));
+        assert!(render_mixed(&mixed).contains("best single"));
+        let cells = SacCells {
+            delta: CellOutcome::Measured(delta),
+            mixed: CellOutcome::Measured(mixed),
+            ..SacCells::all_skipped(SkipReason::Disabled)
+        };
+        let j = to_json(&spec, &run(&spec, &["rtac"]), &cells);
+        let parsed = crate::util::json::parse(&j.to_string()).unwrap();
+        assert!(parsed.get("sac_delta_upload_ratio").is_some());
+        assert!(parsed.get("sac_delta_shipped_f32").is_some());
+        assert!(parsed.get("sac_mixed_vs_best_speedup").is_some());
+        assert!(parsed.get("sac_mixed_best_single").is_some());
+        assert!(parsed.get("sac_delta_skipped").is_none());
+        assert!(parsed.get("sac_mixed_skipped").is_none());
     }
 }

@@ -1,6 +1,24 @@
 //! Coordinator metrics: request/batch counters, latency decomposition
 //! (queue wait vs execution), batch-occupancy histogram, padding waste,
-//! and failure accounting (failed fused executions, dropped requests).
+//! upload volume (f32 values shipped client→executor, the quantity the
+//! delta-probe encoding shrinks), and failure accounting (failed fused
+//! executions, dropped requests, stale delta probes).
+//!
+//! The session-level conservation invariant, checked by every
+//! quiescent-state test: `requests == responses + dropped_requests`.
+//! Every plane that reached the queue is either answered or explicitly
+//! accounted as dropped — nothing vanishes.
+//!
+//! ```
+//! use rtac::coordinator::Metrics;
+//!
+//! let m = Metrics::new();
+//! m.on_submit(128);     // a full plane: 128 f32 values shipped
+//! m.on_stale_delta();   // a rejected delta probe counts as dropped
+//! let s = m.snapshot();
+//! assert_eq!(s.shipped_f32, 128);
+//! assert!(s.conserved(), "requests == responses + dropped");
+//! ```
 
 use std::sync::Mutex;
 use std::time::Duration;
@@ -20,6 +38,9 @@ struct Inner {
     batches: u64,
     failed_batches: u64,
     dropped_requests: u64,
+    stale_deltas: u64,
+    shipped_f32: u64,
+    base_uploads: u64,
     batch_occupancy_sum: u64,
     padded_slots: u64,
     wipeouts: u64,
@@ -41,8 +62,20 @@ pub struct MetricsSnapshot {
     /// Fused executions that returned an error from the runtime.
     pub failed_batches: u64,
     /// Requests whose responders were dropped without a response (their
-    /// batch failed, or the executor shut down with them in flight).
+    /// batch failed, the executor shut down with them in flight, or a
+    /// delta probe referenced a stale base — see `stale_deltas`).
     pub dropped_requests: u64,
+    /// Delta probes rejected because their base fingerprint missed the
+    /// executor's cached base plane (counted in `dropped_requests` too,
+    /// so conservation holds).
+    pub stale_deltas: u64,
+    /// Total f32 values shipped client→executor: full planes, delta
+    /// rows, and base uploads.  The delta-vs-full bench cell compares
+    /// this across submission modes.
+    pub shipped_f32: u64,
+    /// Delta base planes uploaded (each re-upload invalidates the
+    /// previous cached base).
+    pub base_uploads: u64,
     pub mean_batch_occupancy: f64,
     pub padded_slots: u64,
     pub wipeouts: u64,
@@ -58,8 +91,31 @@ impl Metrics {
         Metrics::default()
     }
 
-    pub fn on_submit(&self) {
-        self.inner.lock().unwrap().requests += 1;
+    /// Record one request reaching the executor queue, shipping `f32s`
+    /// values (a full plane's `vars_len`, or just the row length `d`
+    /// for a delta probe).
+    pub fn on_submit(&self, f32s: usize) {
+        let mut m = self.inner.lock().unwrap();
+        m.requests += 1;
+        m.shipped_f32 += f32s as u64;
+    }
+
+    /// Record one delta-base upload of `f32s` values.  Not a request —
+    /// the base produces no response of its own; it only feeds later
+    /// delta reconstructions.
+    pub fn on_base_upload(&self, f32s: usize) {
+        let mut m = self.inner.lock().unwrap();
+        m.base_uploads += 1;
+        m.shipped_f32 += f32s as u64;
+    }
+
+    /// Record one delta probe rejected for referencing a stale/unknown
+    /// base plane: its responder is dropped, so it also counts as a
+    /// dropped request (conservation).
+    pub fn on_stale_delta(&self) {
+        let mut m = self.inner.lock().unwrap();
+        m.stale_deltas += 1;
+        m.dropped_requests += 1;
     }
 
     /// Record one *successfully executed* batch: `real` occupied slots of
@@ -102,6 +158,9 @@ impl Metrics {
             batches: m.batches,
             failed_batches: m.failed_batches,
             dropped_requests: m.dropped_requests,
+            stale_deltas: m.stale_deltas,
+            shipped_f32: m.shipped_f32,
+            base_uploads: m.base_uploads,
             mean_batch_occupancy: if m.batches == 0 {
                 0.0
             } else {
@@ -122,13 +181,17 @@ impl MetricsSnapshot {
     /// One-line human summary (served by `rtac serve` and the examples).
     pub fn summary(&self) -> String {
         format!(
-            "req={} resp={} batches={} failed={} dropped={} occ={:.2} padded={} \
+            "req={} resp={} batches={} failed={} dropped={} stale_deltas={} \
+             shipped={}f32 bases={} occ={:.2} padded={} \
              wipeouts={} queue={:.0}µs exec={:.0}µs total={:.0}µs iters={:.2}",
             self.requests,
             self.responses,
             self.batches,
             self.failed_batches,
             self.dropped_requests,
+            self.stale_deltas,
+            self.shipped_f32,
+            self.base_uploads,
             self.mean_batch_occupancy,
             self.padded_slots,
             self.wipeouts,
@@ -154,8 +217,8 @@ mod tests {
     #[test]
     fn counters_accumulate() {
         let m = Metrics::new();
-        m.on_submit();
-        m.on_submit();
+        m.on_submit(16);
+        m.on_submit(16);
         m.on_batch(2, 4, Duration::from_micros(100));
         m.on_response(Duration::from_micros(10), Duration::from_micros(110), 4, false);
         m.on_response(Duration::from_micros(20), Duration::from_micros(120), 5, true);
@@ -167,6 +230,9 @@ mod tests {
         assert_eq!(s.dropped_requests, 0);
         assert_eq!(s.padded_slots, 2);
         assert_eq!(s.wipeouts, 1);
+        assert_eq!(s.shipped_f32, 32);
+        assert_eq!(s.base_uploads, 0);
+        assert_eq!(s.stale_deltas, 0);
         assert!((s.mean_batch_occupancy - 2.0).abs() < 1e-9);
         assert!((s.mean_iters - 4.5).abs() < 1e-9);
         assert!(s.mean_total_us > s.mean_queue_us);
@@ -183,10 +249,34 @@ mod tests {
     }
 
     #[test]
+    fn delta_accounting_preserves_conservation_and_tracks_volume() {
+        let m = Metrics::new();
+        // a delta round: one base upload + 3 delta rows (d = 8)
+        m.on_base_upload(128);
+        for _ in 0..3 {
+            m.on_submit(8);
+        }
+        // two served, one stale-rejected
+        m.on_batch(2, 4, Duration::from_micros(50));
+        m.on_response(Duration::ZERO, Duration::from_micros(60), 2, false);
+        m.on_response(Duration::ZERO, Duration::from_micros(60), 2, false);
+        m.on_stale_delta();
+        let s = m.snapshot();
+        assert_eq!(s.requests, 3, "a base upload is not a request");
+        assert_eq!(s.base_uploads, 1);
+        assert_eq!(s.shipped_f32, 128 + 3 * 8);
+        assert_eq!(s.stale_deltas, 1);
+        assert_eq!(s.dropped_requests, 1);
+        assert!(s.conserved(), "stale deltas must count as dropped: {s:?}");
+        assert!(s.summary().contains("stale_deltas=1"));
+        assert!(s.summary().contains("bases=1"));
+    }
+
+    #[test]
     fn failed_batches_do_not_skew_success_stats() {
         let m = Metrics::new();
         for _ in 0..3 {
-            m.on_submit();
+            m.on_submit(4);
         }
         // one successful batch of 2, one failed batch dropping 1 request
         m.on_batch(2, 4, Duration::from_micros(100));

@@ -3,6 +3,29 @@
 //! (parallel search workers, the `serve` CLI loop, benches) into fused
 //! XLA executions — router + dynamic batcher + executor, vLLM-style but
 //! for constraint propagation.
+//!
+//! Three pieces:
+//!
+//! * [`service`] — the [`Coordinator`] session itself: the startup
+//!   fence, the dynamic batcher (fixed or adaptive [`BatchPolicy`]),
+//!   the delta-probe base cache, and the cloneable client [`Handle`]
+//!   (full planes via [`Handle::submit`]/[`Handle::submit_batch`],
+//!   delta probes via [`Handle::upload_base`] +
+//!   [`Handle::submit_batch_delta`]).
+//! * [`metrics`] — shared counters with the session conservation
+//!   invariant `requests == responses + dropped_requests` and the
+//!   upload-volume accounting the delta encoding is measured by.
+//! * [`engine`] — [`TensorEngine`], the [`crate::ac::Propagator`] that
+//!   routes a MAC solver's AC calls through a session.
+//!
+//! ```
+//! use rtac::coordinator::BatchPolicy;
+//!
+//! // an adaptive session policy: the executor derives its effective
+//! // batching window from observed queue demand, capped by these knobs
+//! let policy = BatchPolicy { adaptive: true, ..Default::default() };
+//! assert!(policy.max_batch >= 1);
+//! ```
 
 pub mod engine;
 pub mod metrics;

@@ -1,6 +1,6 @@
 //! The coordination service — the L3 system contribution.
 //!
-//! One `Coordinator` serves one CSP instance ("session").  Parallel
+//! One [`Coordinator`] serves one CSP instance ("session").  Parallel
 //! search workers (or remote callers via `rtac serve`) submit
 //! arc-consistency requests — a domains plane at the session's shape
 //! bucket — and the coordinator **dynamically batches** concurrent
@@ -16,6 +16,69 @@
 //! on the executor thread between `recv`s — there is no separate batcher
 //! thread to hand off through, which keeps p50 latency at one channel
 //! hop.
+//!
+//! # Session contracts
+//!
+//! * **Startup fence.**  [`Coordinator::start`] returning `Ok` means the
+//!   executor thread finished its *entire* init — runtime load, artifact
+//!   compilation, and the constraint-tensor upload — because the single
+//!   ready-send site (`send_ready`) fires strictly after init resolves.
+//!   A broken artifact dir or a failed upload surfaces there as `Err`,
+//!   never as a dead session whose every later submit mysteriously
+//!   fails.
+//! * **Occupancy.**  Every [`Response`] carries `batch_real` (real
+//!   requests fused into the serving execution) and `batch_capacity`
+//!   (the compiled slot count, padding included), so callers can compute
+//!   [`Response::occupancy`] without manifest access.
+//! * **Conservation.**  At quiescence, `requests == responses +
+//!   dropped_requests` ([`crate::coordinator::MetricsSnapshot::conserved`]):
+//!   each submitted plane is either answered or explicitly accounted as
+//!   dropped by one of the two counted causes — a failed fused
+//!   execution, or a stale delta (see below).  A graceful shutdown
+//!   cannot strand requests (the executor's channel drains buffered
+//!   messages before disconnecting); the only uncounted path is an
+//!   executor panic, which aborts the session.
+//!
+//! # Delta probes
+//!
+//! A batched-SAC probe round submits K planes that differ from a common
+//! base in one variable row each.  [`Handle::upload_base`] ships the
+//! base once; [`Handle::submit_batch_delta`] then ships one
+//! [`ProbeDelta`] (fingerprint + edited row) per probe, and the
+//! executor reconstructs each full plane against its cached base before
+//! fusing — so a K-probe round moves one plane + K rows instead of K
+//! planes.  Cache rules:
+//!
+//! * the cache holds **one** base per session, keyed by the base's
+//!   content fingerprint ([`crate::runtime::plane_fingerprint`]);
+//! * every `upload_base` **replaces** the cached base — re-uploading
+//!   invalidates all deltas derived from the previous one;
+//! * a delta whose fingerprint misses the cache is **dropped** (counted
+//!   as `stale_deltas` *and* `dropped_requests`, so conservation holds)
+//!   rather than silently applied to the wrong base;
+//! * consequently the protocol assumes **one delta-base writer per
+//!   session** (the engines that own a session exclusively, like
+//!   `sac-xla`/`sac-mixed`, use deltas; multi-writer clients such as
+//!   parallel search workers submit full planes).
+//!
+//! ```
+//! use rtac::coordinator::Response;
+//! use std::time::Duration;
+//!
+//! // what a client sees back from a fused execution: 6 real probes
+//! // served from an 8-slot compiled batch
+//! let r = Response {
+//!     plane: vec![1.0, 0.0],
+//!     status: 0,
+//!     iters: 3,
+//!     batch_real: 6,
+//!     batch_capacity: 8,
+//!     queue_time: Duration::ZERO,
+//!     total_time: Duration::ZERO,
+//! };
+//! assert!(!r.wiped());
+//! assert_eq!(r.occupancy(), 0.75);
+//! ```
 
 use std::sync::mpsc;
 use std::sync::Arc;
@@ -25,7 +88,7 @@ use anyhow::{anyhow, bail, Context, Result};
 
 use crate::coordinator::metrics::Metrics;
 use crate::core::Problem;
-use crate::runtime::{encode_cons, Bucket, Kind, Manifest, Runtime, STATUS_WIPEOUT};
+use crate::runtime::{encode_cons, Bucket, Kind, Manifest, ProbeDelta, Runtime, STATUS_WIPEOUT};
 
 /// Batching policy.
 #[derive(Clone, Debug)]
@@ -47,7 +110,8 @@ pub struct BatchPolicy {
     /// queue demand instead of the fixed values above: solo traffic
     /// stops paying the coalescing wait, bursty traffic grows the batch
     /// cap toward the largest compiled size.  `max_batch` stays the hard
-    /// upper bound; `max_wait` the longest wait.  See [`AdaptiveBatcher`].
+    /// upper bound; `max_wait` the longest wait.  (Implemented by the
+    /// executor-internal `AdaptiveBatcher`, an EWMA over queue demand.)
     pub adaptive: bool,
 }
 
@@ -140,11 +204,64 @@ impl Default for CoordinatorConfig {
     }
 }
 
+/// Client→executor message.
+enum Msg {
+    /// One enforcement request (full plane or delta probe).
+    Req(Request),
+    /// Cache `plane` as the session's delta base under fingerprint
+    /// `fp`, replacing any previously cached base (the invalidation
+    /// rule of the delta protocol — see the module docs).  Produces no
+    /// response of its own.
+    Base { fp: u64, plane: Vec<f32> },
+}
+
 /// A request: one domains plane to enforce.
 struct Request {
-    plane: Vec<f32>,
+    payload: Payload,
     submitted: Instant,
     resp: mpsc::Sender<Response>,
+}
+
+/// The plane a request carries: materialised, or in delta form against
+/// the executor's cached base plane.
+enum Payload {
+    Full(Vec<f32>),
+    Delta(ProbeDelta),
+}
+
+/// Resolve a request payload into a full plane against the cached
+/// delta base.  `None` means the payload is a delta whose base
+/// fingerprint misses the cache (stale or never uploaded) or is
+/// malformed — the request must be dropped, never guessed at.  Shared
+/// by the executor thread and the offline protocol tests, so both
+/// resolve identically.
+///
+/// The base was fingerprinted once at upload and the cached key is
+/// compared here, so the row is spliced directly instead of going
+/// through [`ProbeDelta::apply`] (which would re-hash the whole cached
+/// plane per probe — K redundant O(n·d) passes per round on the
+/// executor's serving path).
+fn resolve_payload(
+    payload: Payload,
+    base: Option<&(u64, Vec<f32>)>,
+    bucket: Bucket,
+) -> Option<Vec<f32>> {
+    match payload {
+        Payload::Full(plane) => Some(plane),
+        Payload::Delta(delta) => match base {
+            Some((fp, base_plane))
+                if *fp == delta.base_fp
+                    && delta.validate(bucket).is_ok()
+                    && base_plane.len() == bucket.vars_len() =>
+            {
+                let mut plane = base_plane.clone();
+                plane[delta.var * bucket.d..(delta.var + 1) * bucket.d]
+                    .copy_from_slice(&delta.row);
+                Some(plane)
+            }
+            _ => None,
+        },
+    }
 }
 
 /// A response: the enforced plane plus run metadata.
@@ -180,9 +297,14 @@ impl Response {
 /// Cloneable client handle to a running coordinator.
 #[derive(Clone)]
 pub struct Handle {
-    tx: mpsc::Sender<Request>,
+    tx: mpsc::Sender<Msg>,
     pub bucket: Bucket,
     pub metrics: Arc<Metrics>,
+    /// Batch sizes the session's `fixb*` artifacts were compiled for
+    /// (ascending, deduped) — the capacities a fused round can actually
+    /// occupy.  Cost models (the mixed probe scheduler) read the largest
+    /// entry as the tensor route's amortisation ceiling.
+    pub compiled_batches: Vec<usize>,
 }
 
 impl Handle {
@@ -195,11 +317,16 @@ impl Handle {
                 self.bucket.vars_len()
             );
         }
+        let shipped = plane.len();
         let (rtx, rrx) = mpsc::channel();
         self.tx
-            .send(Request { plane, submitted: Instant::now(), resp: rtx })
+            .send(Msg::Req(Request {
+                payload: Payload::Full(plane),
+                submitted: Instant::now(),
+                resp: rtx,
+            }))
             .map_err(|_| self.executor_gone_err())?;
-        self.metrics.on_submit(); // count only planes that reached the queue
+        self.metrics.on_submit(shipped); // count only planes that reached the queue
         Ok(rrx)
     }
 
@@ -221,21 +348,38 @@ impl Handle {
     }
 
     /// A submitted request's responder was dropped without an answer:
-    /// its fused execution failed, or the executor exited with the
-    /// request in flight.
-    fn dropped_err(&self) -> anyhow::Error {
+    /// its fused execution failed, it was a delta probe against a stale
+    /// base, or the executor exited with the request in flight.  The
+    /// counters are cumulative over the session, so when more than one
+    /// cause has ever occurred the error lists every candidate instead
+    /// of guessing which one claimed *this* request.
+    pub(crate) fn dropped_err(&self) -> anyhow::Error {
         let m = self.metrics.snapshot();
+        let mut causes = Vec::new();
         if m.failed_batches > 0 {
-            anyhow!(
-                "coordinator dropped the request: {} fused execution(s) failed on the \
-                 executor ({} request(s) dropped; see the rtac-executor log)",
-                m.failed_batches,
-                m.dropped_requests
-            )
-        } else {
+            causes.push(format!(
+                "{} fused execution(s) failed on the executor (see the rtac-executor log)",
+                m.failed_batches
+            ));
+        }
+        if m.stale_deltas > 0 {
+            causes.push(format!(
+                "{} delta probe(s) referenced a stale/unknown base plane (another \
+                 client re-uploaded the base? the delta protocol assumes one base \
+                 writer per session)",
+                m.stale_deltas
+            ));
+        }
+        if causes.is_empty() {
             anyhow!(
                 "coordinator executor exited before answering (session shut down with \
                  the request in flight)"
+            )
+        } else {
+            anyhow!(
+                "coordinator dropped the request ({} dropped so far this session): {}",
+                m.dropped_requests,
+                causes.join("; ")
             )
         }
     }
@@ -272,14 +416,84 @@ impl Handle {
         let submitted = Instant::now();
         let mut receivers = Vec::with_capacity(planes.len());
         for plane in planes {
+            let shipped = plane.len();
             let (rtx, rrx) = mpsc::channel();
             self.tx
-                .send(Request { plane, submitted, resp: rtx })
+                .send(Msg::Req(Request { payload: Payload::Full(plane), submitted, resp: rtx }))
                 .map_err(|_| self.executor_gone_err())?;
-            self.metrics.on_submit(); // only planes that actually reached the queue
+            self.metrics.on_submit(shipped); // only planes that actually reached the queue
             receivers.push(rrx);
         }
         Ok(receivers)
+    }
+
+    /// Upload (and cache) the delta base plane for subsequent
+    /// [`Handle::submit_batch_delta`] probes, replacing any previously
+    /// cached base.  Returns the base's content fingerprint — the key
+    /// every delta derived from this plane must carry.
+    ///
+    /// The cache holds one base per session: callers interleaving base
+    /// uploads from several threads will invalidate each other (their
+    /// deltas are then dropped as stale, never misapplied) — ship full
+    /// planes instead when the session is shared.
+    pub fn upload_base(&self, plane: Vec<f32>) -> Result<u64> {
+        if plane.len() != self.bucket.vars_len() {
+            bail!(
+                "base plane has {} values, session bucket wants {}",
+                plane.len(),
+                self.bucket.vars_len()
+            );
+        }
+        let shipped = plane.len();
+        let fp = crate::runtime::plane_fingerprint(&plane);
+        self.tx.send(Msg::Base { fp, plane }).map_err(|_| self.executor_gone_err())?;
+        self.metrics.on_base_upload(shipped);
+        Ok(fp)
+    }
+
+    /// Submit a probe round in delta form: one [`ProbeDelta`] (edited
+    /// row) per probe, reconstructed executor-side against the base
+    /// cached by [`Handle::upload_base`].  Like
+    /// [`Handle::submit_batch`], the round is enqueued contiguously so
+    /// the dynamic batcher fuses it, and shape validation happens up
+    /// front, before anything is enqueued.  A delta whose base
+    /// fingerprint no longer matches the cache is dropped executor-side
+    /// (its receiver errors with a stale-base explanation).
+    ///
+    /// Returns one response receiver per delta, in submission order.
+    pub fn submit_batch_delta(
+        &self,
+        deltas: Vec<ProbeDelta>,
+    ) -> Result<Vec<mpsc::Receiver<Response>>> {
+        for (i, delta) in deltas.iter().enumerate() {
+            delta.validate(self.bucket).with_context(|| format!("delta probe {i}"))?;
+        }
+        let submitted = Instant::now();
+        let mut receivers = Vec::with_capacity(deltas.len());
+        for delta in deltas {
+            let shipped = delta.row.len();
+            let (rtx, rrx) = mpsc::channel();
+            self.tx
+                .send(Msg::Req(Request { payload: Payload::Delta(delta), submitted, resp: rtx }))
+                .map_err(|_| self.executor_gone_err())?;
+            self.metrics.on_submit(shipped); // a delta ships only its row
+            receivers.push(rrx);
+        }
+        Ok(receivers)
+    }
+
+    /// Submit a delta probe round and block for every response, in
+    /// order.
+    pub fn enforce_batch_delta_blocking(&self, deltas: Vec<ProbeDelta>) -> Result<Vec<Response>> {
+        self.submit_batch_delta(deltas)?
+            .into_iter()
+            .enumerate()
+            .map(|(i, rx)| {
+                rx.recv()
+                    .map_err(|_| self.dropped_err())
+                    .with_context(|| format!("delta probe {i}"))
+            })
+            .collect()
     }
 
     /// Submit a probe batch and block for every response, in order.
@@ -316,11 +530,12 @@ impl Coordinator {
         // sets); callers with an explicit user-facing knob (`rtac serve
         // --max-batch`) use [`Coordinator::validate_policy`] to fail
         // fast instead.
-        let (_, bucket) = pick_bucket(problem, &config)?;
+        let (manifest, bucket) = pick_bucket(problem, &config)?;
+        let compiled_batches = compiled_batch_sizes(&manifest, bucket);
         let cons = encode_cons(problem, bucket)?;
 
         let metrics = Arc::new(Metrics::new());
-        let (tx, rx) = mpsc::channel::<Request>();
+        let (tx, rx) = mpsc::channel::<Msg>();
         let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
 
         let cfg = config.clone();
@@ -337,7 +552,10 @@ impl Coordinator {
             .context("executor thread died during startup")?
             .context("executor startup failed")?;
 
-        Ok(Coordinator { handle: Handle { tx, bucket, metrics }, join: Some(join) })
+        Ok(Coordinator {
+            handle: Handle { tx, bucket, metrics, compiled_batches },
+            join: Some(join),
+        })
     }
 
     /// Validate `config.policy` against the compiled artifacts for
@@ -459,12 +677,13 @@ fn send_ready<T>(ready_tx: &mpsc::Sender<Result<()>>, init: Result<T>) -> Option
     }
 }
 
-/// Executor main loop: owns all XLA state.
+/// Executor main loop: owns all XLA state, plus the session's cached
+/// delta base plane (see the module docs for the cache rules).
 fn executor_thread(
     config: CoordinatorConfig,
     bucket: Bucket,
     cons: Vec<f32>,
-    rx: mpsc::Receiver<Request>,
+    rx: mpsc::Receiver<Msg>,
     ready_tx: mpsc::Sender<Result<()>>,
     metrics: Arc<Metrics>,
 ) {
@@ -494,11 +713,16 @@ fn executor_thread(
     let mut adaptive =
         if config.policy.adaptive { Some(AdaptiveBatcher::new(&config.policy)) } else { None };
     let mut pending: Vec<Request> = Vec::new();
+    // the session's cached delta base (fingerprint, plane) — one slot,
+    // replaced on every Msg::Base (see the module docs)
+    let mut base: Option<(u64, Vec<f32>)> = None;
     loop {
-        // 1. block for the first request (or shut down)
-        if pending.is_empty() {
+        // 1. block for the first request (or shut down); base uploads
+        // are applied inline — they never open a batching window
+        while pending.is_empty() {
             match rx.recv() {
-                Ok(r) => pending.push(r),
+                Ok(Msg::Req(r)) => pending.push(r),
+                Ok(Msg::Base { fp, plane }) => base = Some((fp, plane)),
                 Err(_) => return, // all handles dropped
             }
         }
@@ -511,7 +735,8 @@ fn executor_thread(
         // max_wait == 0 — only *absent* batch-mates cost wall time.
         while pending.len() < max_batch {
             match rx.try_recv() {
-                Ok(r) => pending.push(r),
+                Ok(Msg::Req(r)) => pending.push(r),
+                Ok(Msg::Base { fp, plane }) => base = Some((fp, plane)),
                 Err(_) => break,
             }
         }
@@ -524,7 +749,8 @@ fn executor_thread(
                     break;
                 }
                 match rx.recv_timeout(deadline - now) {
-                    Ok(r) => pending.push(r),
+                    Ok(Msg::Req(r)) => pending.push(r),
+                    Ok(Msg::Base { fp, plane }) => base = Some((fp, plane)),
                     Err(mpsc::RecvTimeoutError::Timeout) => break,
                     Err(mpsc::RecvTimeoutError::Disconnected) => break,
                 }
@@ -533,28 +759,52 @@ fn executor_thread(
         if let Some(a) = &mut adaptive {
             a.observe(pending.len());
         }
-        // 3. pick the smallest compiled batch that fits, pad, execute
-        let real = pending.len();
+        // 3. take up to the largest compiled capacity off the queue and
+        // resolve each payload (reconstructing delta probes against the
+        // cached base).  A delta whose base is stale/unknown is dropped
+        // here — its responder goes away and the client sees a clear
+        // stale-base error backed by the metrics.
+        let take = pending.len().min(compiled_max);
+        let mut planes: Vec<Vec<f32>> = Vec::with_capacity(take);
+        let mut served: Vec<(Instant, mpsc::Sender<Response>)> = Vec::with_capacity(take);
+        for r in pending.drain(..take) {
+            match resolve_payload(r.payload, base.as_ref(), bucket) {
+                Some(plane) => {
+                    planes.push(plane);
+                    served.push((r.submitted, r.resp));
+                }
+                None => {
+                    metrics.on_stale_delta();
+                    eprintln!(
+                        "rtac-executor: dropping delta probe against a stale/unknown \
+                         base plane (cached: {})",
+                        match &base {
+                            Some((fp, _)) => format!("{fp:016x}"),
+                            None => "none".into(),
+                        }
+                    );
+                }
+            }
+        }
+        if planes.is_empty() {
+            continue; // the whole drain was stale deltas
+        }
+        // 4. pick the smallest compiled batch that fits, pad, execute
+        let real = planes.len();
         let capacity = batch_sizes
             .iter()
             .copied()
             .find(|&b| b >= real)
-            .unwrap_or_else(|| *batch_sizes.last().unwrap());
-        let (capacity, take) = if capacity >= real {
-            (capacity, real)
-        } else {
-            (capacity, capacity) // more pending than largest batch: split
-        };
-        let batch: Vec<Request> = pending.drain(..take).collect();
+            .unwrap_or(compiled_max);
         let plane_len = bucket.vars_len();
         let mut input = Vec::with_capacity(capacity * plane_len);
-        for r in &batch {
-            input.extend_from_slice(&r.plane);
+        for p in &planes {
+            input.extend_from_slice(p);
         }
         // padding: replicate the first plane — it converges in the same
         // sweeps as its twin, adding no extra joint iterations.
-        for _ in take..capacity {
-            input.extend_from_slice(&batch[0].plane);
+        for _ in real..capacity {
+            input.extend_from_slice(&planes[0]);
         }
 
         let name = artifact_name(capacity, bucket);
@@ -568,30 +818,30 @@ fn executor_thread(
         // and exec stats.
         match result {
             Ok(out) => {
-                metrics.on_batch(take, capacity, exec);
-                for (i, req) in batch.into_iter().enumerate() {
-                    let queue = t_exec.duration_since(req.submitted);
-                    let total = req.submitted.elapsed();
+                metrics.on_batch(real, capacity, exec);
+                for (i, (submitted, resp_tx)) in served.into_iter().enumerate() {
+                    let queue = t_exec.duration_since(submitted);
+                    let total = submitted.elapsed();
                     let resp = Response {
                         plane: out.vars[i * plane_len..(i + 1) * plane_len].to_vec(),
                         status: out.status[i],
                         iters: out.iters,
-                        batch_real: take,
+                        batch_real: real,
                         batch_capacity: capacity,
                         queue_time: queue,
                         total_time: total,
                     };
                     metrics.on_response(queue, total, out.iters, resp.wiped());
-                    let _ = req.resp.send(resp); // receiver may have gone
+                    let _ = resp_tx.send(resp); // receiver may have gone
                 }
             }
             Err(e) => {
                 // drop the responders: receivers see a clear dropped-
                 // request error from `Handle` (backed by these counters);
                 // log once on this side.
-                metrics.on_batch_failed(take);
+                metrics.on_batch_failed(real);
                 eprintln!(
-                    "rtac-executor: fused execution {name} failed ({take} request(s) \
+                    "rtac-executor: fused execution {name} failed ({real} request(s) \
                      dropped): {e:#}"
                 );
             }
@@ -627,14 +877,35 @@ mod tests {
         assert!(p.max_wait < Duration::from_millis(10));
     }
 
-    fn test_handle() -> (Handle, mpsc::Receiver<Request>) {
+    fn handle_at(bucket: Bucket) -> (Handle, mpsc::Receiver<Msg>) {
         let (tx, rx) = mpsc::channel();
         let handle = Handle {
             tx,
-            bucket: Bucket { n: 2, d: 2 },
+            bucket,
             metrics: Arc::new(Metrics::new()),
+            compiled_batches: vec![1, 2, 4],
         };
         (handle, rx)
+    }
+
+    fn test_handle() -> (Handle, mpsc::Receiver<Msg>) {
+        handle_at(Bucket { n: 2, d: 2 })
+    }
+
+    /// Unwrap a queue message as a request (panics on a base upload).
+    fn expect_req(msg: Msg) -> Request {
+        match msg {
+            Msg::Req(r) => r,
+            Msg::Base { .. } => panic!("expected a request, got a base upload"),
+        }
+    }
+
+    /// Unwrap a request payload as a full plane.
+    fn full_plane(payload: Payload) -> Vec<f32> {
+        match payload {
+            Payload::Full(p) => p,
+            Payload::Delta(_) => panic!("expected a full plane, got a delta"),
+        }
     }
 
     #[test]
@@ -654,10 +925,81 @@ mod tests {
         let receivers = h.submit_batch(planes.clone()).unwrap();
         assert_eq!(receivers.len(), 3);
         for want in &planes {
-            let got = rx.try_recv().expect("plane enqueued");
-            assert_eq!(&got.plane, want);
+            let got = expect_req(rx.try_recv().expect("plane enqueued"));
+            assert_eq!(&full_plane(got.payload), want);
         }
-        assert_eq!(h.metrics.snapshot().requests, 3);
+        let m = h.metrics.snapshot();
+        assert_eq!(m.requests, 3);
+        assert_eq!(m.shipped_f32, 3 * len as u64);
+    }
+
+    // ---- delta protocol (client side + payload resolution) -------------
+
+    #[test]
+    fn submit_batch_delta_validates_before_enqueuing_anything() {
+        let (h, rx) = test_handle();
+        let d = h.bucket.d;
+        let base = vec![1.0; h.bucket.vars_len()];
+        let fp = crate::runtime::plane_fingerprint(&base);
+        let bad = vec![
+            ProbeDelta::singleton(fp, 0, 0, h.bucket),
+            ProbeDelta { base_fp: fp, var: 0, row: vec![1.0; d + 1] },
+        ];
+        let err = h.submit_batch_delta(bad).unwrap_err();
+        assert!(format!("{err:#}").contains("delta probe 1"), "{err:#}");
+        assert!(rx.try_recv().is_err(), "no delta may be enqueued on a rejected batch");
+        assert_eq!(h.metrics.snapshot().requests, 0);
+    }
+
+    #[test]
+    fn upload_base_ships_once_and_deltas_ship_only_rows() {
+        let (h, rx) = test_handle();
+        let len = h.bucket.vars_len();
+        let base = vec![1.0; len];
+        let fp = h.upload_base(base.clone()).unwrap();
+        assert_eq!(fp, crate::runtime::plane_fingerprint(&base));
+        let deltas = vec![
+            ProbeDelta::singleton(fp, 0, 1, h.bucket),
+            ProbeDelta::singleton(fp, 1, 0, h.bucket),
+        ];
+        let receivers = h.submit_batch_delta(deltas).unwrap();
+        assert_eq!(receivers.len(), 2);
+        // queue order: base first, then the deltas
+        match rx.try_recv().unwrap() {
+            Msg::Base { fp: got_fp, plane } => {
+                assert_eq!(got_fp, fp);
+                assert_eq!(plane, base);
+            }
+            Msg::Req(_) => panic!("base upload must precede the deltas"),
+        }
+        for _ in 0..2 {
+            let req = expect_req(rx.try_recv().unwrap());
+            assert!(matches!(req.payload, Payload::Delta(_)));
+        }
+        let m = h.metrics.snapshot();
+        assert_eq!(m.base_uploads, 1);
+        assert_eq!(m.requests, 2, "a base upload is not a request");
+        // one full plane + two rows, instead of three full planes
+        assert_eq!(m.shipped_f32, (len + 2 * h.bucket.d) as u64);
+    }
+
+    #[test]
+    fn resolve_payload_reconstructs_matching_deltas_and_refuses_stale_ones() {
+        let bucket = Bucket { n: 2, d: 2 };
+        let base = vec![1.0, 1.0, 1.0, 0.0];
+        let fp = crate::runtime::plane_fingerprint(&base);
+        let cached = Some((fp, base.clone()));
+        // full planes pass through untouched
+        let full = resolve_payload(Payload::Full(vec![0.5; 4]), cached.as_ref(), bucket);
+        assert_eq!(full, Some(vec![0.5; 4]));
+        // a matching delta reconstructs base + row edit
+        let delta = ProbeDelta::singleton(fp, 0, 1, bucket);
+        let got = resolve_payload(Payload::Delta(delta.clone()), cached.as_ref(), bucket);
+        assert_eq!(got, Some(vec![0.0, 1.0, 1.0, 0.0]));
+        // no cached base, or a different fingerprint: refused
+        assert_eq!(resolve_payload(Payload::Delta(delta.clone()), None, bucket), None);
+        let other = Some((fp ^ 1, base));
+        assert_eq!(resolve_payload(Payload::Delta(delta), other.as_ref(), bucket), None);
     }
 
     // ---- startup fence -------------------------------------------------
@@ -706,7 +1048,7 @@ mod tests {
         let executor = std::thread::spawn(move || {
             // fake executor: receive one request, fail its "execution",
             // drop the responder without answering, then exit.
-            let req = rx.recv().unwrap();
+            let req = expect_req(rx.recv().unwrap());
             metrics.on_batch_failed(1);
             drop(req);
             drop(rx);
@@ -727,9 +1069,9 @@ mod tests {
         let metrics = h.metrics.clone();
         let executor = std::thread::spawn(move || {
             // answer the first probe, then die with the second in flight
-            let req = rx.recv().unwrap();
+            let req = expect_req(rx.recv().unwrap());
             let resp = Response {
-                plane: req.plane.clone(),
+                plane: full_plane(req.payload),
                 status: 0,
                 iters: 1,
                 batch_real: 1,
@@ -769,7 +1111,8 @@ mod tests {
         let thread_metrics = metrics.clone();
         let executor = std::thread::spawn(move || {
             let mut served = 0usize;
-            while let Ok(req) = rx.recv() {
+            while let Ok(msg) = rx.recv() {
+                let req = expect_req(msg);
                 if served == 3 {
                     // fourth request: its fused execution "fails"
                     thread_metrics.on_batch_failed(1);
@@ -778,7 +1121,7 @@ mod tests {
                     thread_metrics.on_batch(1, 1, Duration::from_micros(3));
                     thread_metrics.on_response(Duration::ZERO, Duration::ZERO, 1, false);
                     let resp = Response {
-                        plane: req.plane.clone(),
+                        plane: full_plane(req.payload),
                         status: 0,
                         iters: 1,
                         batch_real: 1,
@@ -803,6 +1146,262 @@ mod tests {
         assert_eq!(m.dropped_requests, 1);
         assert_eq!(m.failed_batches, 1);
         assert!(m.conserved(), "requests == responses + dropped: {m:?}");
+    }
+
+    // ---- delta protocol end-to-end (offline CPU-reference executor) ----
+
+    /// A stand-in executor thread that serves the session protocol with
+    /// the native CPU engine instead of XLA: each request's payload is
+    /// resolved exactly like the real executor (same [`resolve_payload`]),
+    /// decoded, enforced with dense RTAC, and re-encoded.  Lets the
+    /// delta protocol — and clients built on it — run end-to-end with no
+    /// compiled artifacts.
+    fn cpu_reference_executor(
+        problem: crate::core::Problem,
+        bucket: Bucket,
+        rx: mpsc::Receiver<Msg>,
+        metrics: Arc<Metrics>,
+    ) -> std::thread::JoinHandle<()> {
+        std::thread::spawn(move || {
+            use crate::ac::{rtac::RtacNative, Counters, Propagator};
+            use crate::runtime::{decode_vars, encode_vars};
+            let mut base: Option<(u64, Vec<f32>)> = None;
+            let mut engine = RtacNative::dense();
+            while let Ok(msg) = rx.recv() {
+                let req = match msg {
+                    Msg::Base { fp, plane } => {
+                        base = Some((fp, plane));
+                        continue;
+                    }
+                    Msg::Req(r) => r,
+                };
+                let Some(plane) = resolve_payload(req.payload, base.as_ref(), bucket) else {
+                    metrics.on_stale_delta();
+                    continue; // responder dropped, like the real executor
+                };
+                let mut state = crate::core::State::new(&problem);
+                decode_vars(&problem, &mut state, &plane, bucket).expect("monotone input plane");
+                let mut c = Counters::default();
+                engine.reset(&problem);
+                let out = engine.enforce(&problem, &mut state, &[], &mut c);
+                let status = if out.is_consistent() { 0 } else { STATUS_WIPEOUT };
+                let out_plane = encode_vars(&problem, &state, bucket).expect("fits the bucket");
+                metrics.on_batch(1, 1, Duration::from_micros(1));
+                metrics.on_response(
+                    Duration::ZERO,
+                    Duration::ZERO,
+                    c.recurrences as i32,
+                    status == STATUS_WIPEOUT,
+                );
+                let _ = req.resp.send(Response {
+                    plane: out_plane,
+                    status,
+                    iters: c.recurrences as i32,
+                    batch_real: 1,
+                    batch_capacity: 1,
+                    queue_time: Duration::ZERO,
+                    total_time: Duration::ZERO,
+                });
+            }
+        })
+    }
+
+    /// Session fixture around [`cpu_reference_executor`].
+    fn reference_session(
+        problem: &crate::core::Problem,
+        bucket: Bucket,
+    ) -> (Handle, std::thread::JoinHandle<()>) {
+        let (h, rx) = handle_at(bucket);
+        let join = cpu_reference_executor(problem.clone(), bucket, rx, h.metrics.clone());
+        (h, join)
+    }
+
+    #[test]
+    fn delta_round_matches_full_round_through_the_protocol() {
+        use crate::gen::random::{random_csp, RandomSpec};
+        use crate::runtime::encode_vars;
+        let bucket = Bucket { n: 8, d: 4 };
+        let p = random_csp(&RandomSpec::new(6, 4, 0.7, 0.4, 11));
+        let s = crate::core::State::new(&p);
+        let base = encode_vars(&p, &s, bucket).unwrap();
+        let probes: Vec<(usize, usize)> = vec![(0, 1), (2, 0), (5, 3)];
+
+        // full-plane round on one session
+        let (h_full, j_full) = reference_session(&p, bucket);
+        let planes: Vec<Vec<f32>> = probes
+            .iter()
+            .map(|&(x, a)| {
+                let mut plane = base.clone();
+                plane[x * bucket.d..(x + 1) * bucket.d].fill(0.0);
+                plane[x * bucket.d + a] = 1.0;
+                plane
+            })
+            .collect();
+        let full = h_full.enforce_batch_blocking(planes).unwrap();
+
+        // delta round on a second session (separate metrics)
+        let (h_delta, j_delta) = reference_session(&p, bucket);
+        let fp = h_delta.upload_base(base.clone()).unwrap();
+        let deltas: Vec<ProbeDelta> =
+            probes.iter().map(|&(x, a)| ProbeDelta::singleton(fp, x, a, bucket)).collect();
+        let delta = h_delta.enforce_batch_delta_blocking(deltas).unwrap();
+
+        assert_eq!(full.len(), delta.len());
+        for (i, (f, d)) in full.iter().zip(&delta).enumerate() {
+            assert_eq!(f.status, d.status, "probe {i}");
+            assert_eq!(f.plane, d.plane, "probe {i}: reconstruction must be exact");
+        }
+        // the tentpole's point: the delta round ships one plane + K rows
+        let m_full = h_full.metrics.snapshot();
+        let m_delta = h_delta.metrics.snapshot();
+        assert_eq!(m_full.shipped_f32, (3 * bucket.vars_len()) as u64);
+        assert_eq!(m_delta.shipped_f32, (bucket.vars_len() + 3 * bucket.d) as u64);
+        assert!(m_delta.shipped_f32 < m_full.shipped_f32);
+        assert!(m_full.conserved() && m_delta.conserved());
+        drop(h_full);
+        drop(h_delta);
+        j_full.join().unwrap();
+        j_delta.join().unwrap();
+    }
+
+    #[test]
+    fn base_reupload_invalidates_previous_deltas() {
+        use crate::gen::random::{random_csp, RandomSpec};
+        use crate::runtime::encode_vars;
+        let bucket = Bucket { n: 8, d: 4 };
+        let p = random_csp(&RandomSpec::new(5, 4, 0.5, 0.3, 7));
+        let (h, join) = reference_session(&p, bucket);
+        let s = crate::core::State::new(&p);
+        let base_a = encode_vars(&p, &s, bucket).unwrap();
+        let fp_a = h.upload_base(base_a.clone()).unwrap();
+        // a second upload replaces the cache (different content)
+        let mut s_b = s.clone();
+        s_b.remove(1, 1);
+        let base_b = encode_vars(&p, &s_b, bucket).unwrap();
+        let fp_b = h.upload_base(base_b).unwrap();
+        assert_ne!(fp_a, fp_b);
+        // deltas against the OLD base must be dropped with a clear error
+        let err = h
+            .enforce_batch_delta_blocking(vec![ProbeDelta::singleton(fp_a, 0, 0, bucket)])
+            .unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("stale"), "unhelpful stale-delta error: {msg}");
+        // deltas against the CURRENT base are served
+        let ok = h
+            .enforce_batch_delta_blocking(vec![ProbeDelta::singleton(fp_b, 0, 0, bucket)])
+            .unwrap();
+        assert_eq!(ok.len(), 1);
+        let m = h.metrics.snapshot();
+        assert_eq!(m.stale_deltas, 1);
+        assert_eq!(m.base_uploads, 2);
+        assert!(m.conserved(), "stale delta must be accounted as dropped: {m:?}");
+        drop(h);
+        join.join().unwrap();
+    }
+
+    #[test]
+    fn mixed_backend_reaches_sac1_fixpoint_under_all_forced_splits() {
+        // the mixed-splits leg of the satellite property test, offline:
+        // the tensor half speaks the real session protocol (delta mode
+        // included) to the CPU-reference executor, so forced CPU-only,
+        // forced tensor-only, AND auto splits all run end-to-end and
+        // must reach the unique SAC closure of sequential SAC-1.
+        use crate::ac::sac::{MixedProbeBackend, MixedSplit, Sac1, SacParallel};
+        use crate::ac::{rtac::RtacNative, Counters};
+        use crate::gen::random::{random_csp, RandomSpec};
+        let bucket = Bucket { n: 16, d: 8 };
+        for seed in [3u64, 14, 41] {
+            let p = random_csp(&RandomSpec::new(8, 5, 0.75, 0.4, seed));
+            let mut s_ref = crate::core::State::new(&p);
+            let mut c_ref = Counters::default();
+            let o_ref =
+                Sac1::new(RtacNative::incremental()).enforce_sac(&p, &mut s_ref, &mut c_ref);
+            for (label, split, delta) in [
+                ("cpu-only", MixedSplit::CpuOnly, true),
+                ("tensor-only-delta", MixedSplit::TensorOnly, true),
+                ("tensor-only-full", MixedSplit::TensorOnly, false),
+                ("auto", MixedSplit::Auto, true),
+            ] {
+                let (h, join) = reference_session(&p, bucket);
+                let backend = if delta {
+                    MixedProbeBackend::with_tensor_delta(2, h.clone(), 4)
+                } else {
+                    MixedProbeBackend::with_tensor(2, h.clone(), 4)
+                }
+                .with_split(split);
+                let stats = backend.stats();
+                let mut engine = SacParallel::with_backend(Box::new(backend));
+                let mut s = crate::core::State::new(&p);
+                let mut c = Counters::default();
+                let o = engine.enforce_sac(&p, &mut s, &mut c);
+                assert!(
+                    engine.failed.is_none(),
+                    "seed {seed} {label}: {:?}",
+                    engine.failed
+                );
+                assert_eq!(
+                    o.is_consistent(),
+                    o_ref.is_consistent(),
+                    "seed {seed} {label}: outcome"
+                );
+                if o_ref.is_consistent() {
+                    assert_eq!(
+                        s.snapshot(),
+                        s_ref.snapshot(),
+                        "seed {seed} {label}: the SAC closure is unique"
+                    );
+                }
+                match split {
+                    MixedSplit::CpuOnly => {
+                        assert_eq!(stats.tensor_probes(), 0, "seed {seed} {label}")
+                    }
+                    MixedSplit::TensorOnly => {
+                        assert_eq!(stats.cpu_probes(), 0, "seed {seed} {label}");
+                        assert!(stats.tensor_probes() > 0, "seed {seed} {label}");
+                    }
+                    MixedSplit::Auto => {
+                        assert!(
+                            stats.cpu_probes() + stats.tensor_probes() > 0,
+                            "seed {seed} {label}"
+                        );
+                    }
+                }
+                assert_eq!(stats.tensor_fallbacks(), 0, "seed {seed} {label}");
+                let m = h.metrics.snapshot();
+                assert!(m.conserved(), "seed {seed} {label}: {m:?}");
+                assert_eq!(m.stale_deltas, 0, "seed {seed} {label}");
+                drop(engine); // drops the backend's Handle clone
+                drop(h);
+                join.join().unwrap();
+            }
+        }
+    }
+
+    #[test]
+    fn mixed_backend_degrades_to_cpu_when_the_executor_dies() {
+        // kill the "session" mid-run: the tensor share must fall back
+        // to the CPU (same verdicts) and the engine must NOT poison —
+        // the degradation contract of sac-mixed.
+        use crate::ac::sac::{MixedProbeBackend, MixedSplit, Sac1, SacParallel};
+        use crate::ac::{rtac::RtacNative, Counters};
+        let bucket = Bucket { n: 8, d: 4 };
+        let p = crate::gen::pigeonhole(3, 2);
+        let (h, rx) = handle_at(bucket);
+        drop(rx); // executor gone before the first round
+        let backend =
+            MixedProbeBackend::with_tensor_delta(2, h, 4).with_split(MixedSplit::TensorOnly);
+        let stats = backend.stats();
+        let mut engine = SacParallel::with_backend(Box::new(backend));
+        let mut s = crate::core::State::new(&p);
+        let mut c = Counters::default();
+        let o = engine.enforce_sac(&p, &mut s, &mut c);
+        assert!(engine.failed.is_none(), "degradation must not poison: {:?}", engine.failed);
+        assert!(stats.tensor_fallbacks() >= 1, "the fallback must be recorded");
+        assert!(stats.cpu_probes() > 0, "the tensor share must have re-run on the CPU");
+        // and the result still matches sequential SAC-1
+        let mut s_ref = crate::core::State::new(&p);
+        let o_ref = Sac1::new(RtacNative::incremental()).enforce_sac(&p, &mut s_ref, &mut c);
+        assert_eq!(o.is_consistent(), o_ref.is_consistent());
     }
 
     // ---- adaptive batching --------------------------------------------

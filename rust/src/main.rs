@@ -22,7 +22,7 @@ use rtac::bench::{ablations, fig3, rtac_bench, table1, GridSpec};
 use rtac::coordinator::{BatchPolicy, Coordinator, CoordinatorConfig};
 use rtac::core::Problem;
 use rtac::gen::random::{random_csp, RandomSpec};
-use rtac::search::parallel::solve_parallel;
+use rtac::search::parallel::{solve_parallel_with, WorkerEngine};
 use rtac::search::{SolveResult, Solver, SolverConfig, ValOrder, VarHeuristic};
 use rtac::util::cli::Args;
 
@@ -35,15 +35,17 @@ SUBCOMMANDS
   gen          --n 50 --dom 20 --density 0.5 --tightness 0.3 --seed 1 --out FILE
   solve        [FILE.csp] [--queens N | --n .. --density ..]
                --engine ac3|ac2001|ac3bit|rtac|rtac-inc|rtac-par[N]|rtac-par-inc[N]|
-                        sac|sac-par[N]|sac-xla[N]
+                        sac|sac-par[N]|sac-xla[N]|sac-mixed[N]
                --var-heuristic lex|mindom|domdeg|domwdeg --val-order lex|random
                --max-assignments K --seed S
   serve        --queens 8 | --n .. --dom 8 ..; --workers 4 --max-wait-us 300
                --max-batch 8 (validated against the compiled fixb* sizes)
                --adaptive (occupancy-driven batching window)
+               --worker-engine tensor|sac-mixed[N] (per-worker propagator)
                --artifacts DIR     (end-to-end batched tensor serving demo)
                --sac-probe [--probe-batch K]  (SAC-probing client: fused
-               submit_batch vs per-probe submit, fused-batch occupancy report)
+               delta vs fused full-plane vs per-probe submission, plus the
+               sac-mixed split — occupancy + upload-volume report)
   ac           same instance flags; runs one enforcement and prints counters
   bench-fig3   --full | --sizes 20,50 --densities 0.1,0.5 --assignments 300
                --engines ac3,ac3bit,rtac,rtac-inc [--json FILE]
@@ -51,7 +53,9 @@ SUBCOMMANDS
   bench-ablate --episodes 40
   bench-rtac   --sizes 50,100,200 --densities 0.1,0.5,1.0 --assignments 200
                --engines rtac,rtac-inc,rtac-par2,rtac-par4,rtac-par-inc4,rtac-par-scoped4
-               --sac-workers 4 (0 skips the SAC cell) [--json BENCH_rtac.json]
+               --sac-workers 4 (0 skips the SAC cells; artifact-gated cells
+               are marked "skipped": "no-artifacts" in the JSON, never
+               silently omitted) [--json BENCH_rtac.json]
   info         --artifacts DIR
 ";
 
@@ -214,6 +218,22 @@ fn cmd_ac(args: &Args) -> Result<(), String> {
     Ok(())
 }
 
+/// Parse `--worker-engine tensor | sac-mixed[N]` (N = CPU probe
+/// workers per search worker; empty = auto).  The `sac-mixed[N]`
+/// suffix follows the same grammar as `--engine` names
+/// (`ac::parse_worker_suffix`), so the two surfaces cannot drift.
+fn parse_worker_engine(spec: &str) -> Result<WorkerEngine, String> {
+    if spec == "tensor" {
+        return Ok(WorkerEngine::Tensor);
+    }
+    if spec.starts_with("sac-mixed") {
+        let cpu_workers = rtac::ac::parse_worker_suffix(spec, "sac-mixed")
+            .map_err(|e| format!("--worker-engine: {e}"))?;
+        return Ok(WorkerEngine::MixedSac { cpu_workers, probe_batch: 0 });
+    }
+    Err(format!("--worker-engine {spec:?}: expected tensor or sac-mixed[N]"))
+}
+
 fn cmd_serve(args: &Args) -> Result<(), String> {
     let p = load_problem(args)?;
     let workers = args.get_usize("workers", 4)?;
@@ -223,6 +243,7 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
     let adaptive = args.has_flag("adaptive");
     let sac_probe = args.has_flag("sac-probe");
     let probe_batch = args.get_usize("probe-batch", 0)?;
+    let worker_engine = parse_worker_engine(&args.get_or("worker-engine", "tensor"))?;
     let artifacts = args.get_or("artifacts", "artifacts");
     let cfg = solver_config(args)?;
     args.finish()?;
@@ -245,14 +266,15 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
     let coord = Coordinator::start(&p, config).map_err(|e| format!("{e:#}"))?;
     println!(
         "session up: problem={} bucket={}x{} workers={workers} max_wait={max_wait}µs \
-         max_batch={max_batch}{}",
+         max_batch={max_batch}{} worker_engine={worker_engine:?}",
         p.name(),
         coord.bucket().n,
         coord.bucket().d,
         if adaptive { " (adaptive)" } else { "" },
     );
     let sw = rtac::util::timer::Stopwatch::start();
-    let out = solve_parallel(&p, &coord, &cfg, 0, workers).map_err(|e| format!("{e:#}"))?;
+    let out = solve_parallel_with(&p, &coord, &cfg, 0, workers, worker_engine)
+        .map_err(|e| format!("{e:#}"))?;
     let elapsed = sw.elapsed_ms();
     match &out.result {
         SolveResult::Sat(sol) => {
@@ -271,30 +293,39 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
     Ok(())
 }
 
-/// The SAC-probing client (ROADMAP "scale serving" item): one session,
-/// one SAC enforcement whose singleton probes are routed onto the
-/// `fixb*` artifacts — once through the fused `submit_batch` path and
-/// once as per-probe `submit`s — reporting the fused-batch occupancy
-/// each path achieved, plus a fixpoint cross-check against native SAC-1.
+/// The SAC-probing client: one SAC enforcement whose singleton probes
+/// are routed onto the `fixb*` artifacts through each submission shape
+/// — fused delta (base + rows), fused full-plane, and per-probe — each
+/// on its own session, reporting the fused-batch occupancy and the
+/// upload volume (`shipped_f32`) per shape; then a `sac-mixed` run on a
+/// fourth session reporting how its cost model split the probes.  All
+/// fixpoints are cross-checked against native SAC-1 (the unique-closure
+/// acceptance contract).
 fn serve_sac_probe(
     p: &rtac::core::Problem,
     config: CoordinatorConfig,
     probe_batch: usize,
 ) -> Result<(), String> {
-    use rtac::ac::sac::{Sac1, SacParallel, XlaProbeBackend};
+    use rtac::ac::sac::{MixedProbeBackend, ProbeBackend, Sac1, SacParallel, XlaProbeBackend};
     use rtac::ac::Counters;
     use rtac::core::State;
 
-    let run = |label: &str, fused: bool| -> Result<(State, String, bool, f64, u64), String> {
+    struct ProbeRun {
+        state: State,
+        outcome: String,
+        consistent: bool,
+        occupancy: f64,
+        shipped_f32: u64,
+        probes: u64,
+    }
+
+    let run = |label: &str,
+               mk: &dyn Fn(rtac::coordinator::Handle) -> Box<dyn ProbeBackend>|
+     -> Result<ProbeRun, String> {
         // a fresh session per path: the metrics isolate that path's
-        // occupancy instead of blending both
+        // occupancy and upload volume instead of blending them
         let coord = Coordinator::start(p, config.clone()).map_err(|e| format!("{e:#}"))?;
-        let backend = if fused {
-            XlaProbeBackend::new(coord.handle(), probe_batch)
-        } else {
-            XlaProbeBackend::per_probe(coord.handle(), probe_batch)
-        };
-        let mut engine = SacParallel::with_backend(Box::new(backend));
+        let mut engine = SacParallel::with_backend(mk(coord.handle()));
         let mut state = State::new(p);
         let mut counters = Counters::default();
         let sw = rtac::util::timer::Stopwatch::start();
@@ -304,20 +335,40 @@ fn serve_sac_probe(
             return Err(format!("{label}: {e}"));
         }
         let m = coord.metrics().snapshot();
-        println!("{label:<22} occ={:.2} wall={wall_ms:.1}ms {}", m.mean_batch_occupancy, m.summary());
-        Ok((state, format!("{out:?}"), out.is_consistent(), m.mean_batch_occupancy, engine.probes))
+        println!(
+            "{label:<22} occ={:.2} wall={wall_ms:.1}ms {}",
+            m.mean_batch_occupancy,
+            m.summary()
+        );
+        Ok(ProbeRun {
+            state,
+            outcome: format!("{out:?}"),
+            consistent: out.is_consistent(),
+            occupancy: m.mean_batch_occupancy,
+            shipped_f32: m.shipped_f32,
+            probes: engine.probes,
+        })
     };
 
     println!("sac-probe client: problem={} ({} vars)", p.name(), p.n_vars());
-    let (s_fused, out_fused, ok_fused, occ_fused, probes_fused) =
-        run("fused submit_batch", true)?;
-    let (s_per, out_per, _ok_per, occ_per, probes_per) = run("per-probe submit", false)?;
+    let delta = run("fused delta", &|h| Box::new(XlaProbeBackend::new(h, probe_batch)))?;
+    let full = run("fused full-plane", &|h| {
+        Box::new(XlaProbeBackend::full_plane(h, probe_batch))
+    })?;
+    let per = run("per-probe submit", &|h| {
+        Box::new(XlaProbeBackend::per_probe(h, probe_batch))
+    })?;
 
-    if out_fused != out_per {
-        return Err(format!("outcome mismatch: fused {out_fused} vs per-probe {out_per}"));
-    }
-    if ok_fused && s_fused.snapshot() != s_per.snapshot() {
-        return Err("fixpoint mismatch between fused and per-probe submission".into());
+    for (label, other) in [("fused full-plane", &full), ("per-probe", &per)] {
+        if delta.outcome != other.outcome {
+            return Err(format!(
+                "outcome mismatch: fused delta {} vs {label} {}",
+                delta.outcome, other.outcome
+            ));
+        }
+        if delta.consistent && delta.state.snapshot() != other.state.snapshot() {
+            return Err(format!("fixpoint mismatch between fused delta and {label}"));
+        }
     }
     // cross-check against native sequential SAC-1 (the unique-closure
     // acceptance contract)
@@ -325,18 +376,58 @@ fn serve_sac_probe(
     let mut c = Counters::default();
     let native = Sac1::new(rtac::ac::rtac::RtacNative::incremental())
         .enforce_sac(p, &mut s_native, &mut c);
-    let native_agrees =
-        native.is_consistent() == ok_fused && (!ok_fused || s_native.snapshot() == s_fused.snapshot());
+    let native_agrees = native.is_consistent() == delta.consistent
+        && (!delta.consistent || s_native.snapshot() == delta.state.snapshot());
     println!(
-        "fused-batch occupancy (mean reqs per fused execution): {occ_fused:.2} \
-         (submit_batch, {probes_fused} probes) vs {occ_per:.2} (per-probe, \
-         {probes_per} probes) -> {:.2}x; same SAC fixpoint as native sac-1: {}",
-        if occ_per > 0.0 { occ_fused / occ_per } else { 0.0 },
+        "fused-batch occupancy (mean reqs per fused execution): {:.2} (delta, {} probes) \
+         vs {:.2} (full-plane) vs {:.2} (per-probe) -> fused/per-probe {:.2}x",
+        delta.occupancy,
+        delta.probes,
+        full.occupancy,
+        per.occupancy,
+        if per.occupancy > 0.0 { full.occupancy / per.occupancy } else { 0.0 },
+    );
+    println!(
+        "upload volume: {} f32 (delta) vs {} f32 (full-plane) -> {:.2}x; same SAC \
+         fixpoint as native sac-1: {}",
+        delta.shipped_f32,
+        full.shipped_f32,
+        if full.shipped_f32 > 0 {
+            delta.shipped_f32 as f64 / full.shipped_f32 as f64
+        } else {
+            0.0
+        },
         if native_agrees { "yes" } else { "NO" },
     );
     if !native_agrees {
         return Err("sac-xla fixpoint diverges from native SAC-1".into());
     }
+
+    // sac-mixed on its own session: same closure, cost-model split
+    let coord = Coordinator::start(p, config).map_err(|e| format!("{e:#}"))?;
+    let backend = MixedProbeBackend::with_tensor_delta(0, coord.handle(), probe_batch);
+    let stats = backend.stats();
+    let mut mixed = SacParallel::with_backend(Box::new(backend));
+    let mut s_mixed = State::new(p);
+    let mut c_mixed = Counters::default();
+    let sw = rtac::util::timer::Stopwatch::start();
+    let out_mixed = mixed.enforce_sac(p, &mut s_mixed, &mut c_mixed);
+    let wall_ms = sw.elapsed_ms();
+    if let Some(e) = &mixed.failed {
+        return Err(format!("sac-mixed: {e}"));
+    }
+    if out_mixed.is_consistent() != delta.consistent
+        || (delta.consistent && s_mixed.snapshot() != delta.state.snapshot())
+    {
+        return Err("sac-mixed fixpoint diverges from the tensor route".into());
+    }
+    println!(
+        "sac-mixed              wall={wall_ms:.1}ms split: {} cpu / {} tensor probes \
+         ({} fallbacks) — same fixpoint: yes",
+        stats.cpu_probes(),
+        stats.tensor_probes(),
+        stats.tensor_fallbacks(),
+    );
     Ok(())
 }
 
@@ -411,21 +502,11 @@ fn cmd_bench_rtac(args: &Args) -> Result<(), String> {
     );
     let results = rtac_bench::run(&spec, &engines);
     println!("{}", rtac_bench::render(&results, &engines));
-    let (sac, sac_xla) = if sac_workers > 0 {
-        let sac = rtac_bench::sac_probe_comparison(&spec, sac_workers);
-        if let Some(c) = &sac {
-            println!("{}", rtac_bench::render_sac(c));
-        }
-        // tensor-routed cell: self-skips without compiled artifacts
-        let sac_xla = rtac_bench::sac_xla_comparison(&spec, sac_workers);
-        if let Some(c) = &sac_xla {
-            println!("{}", rtac_bench::render_sac_xla(c));
-        }
-        (sac, sac_xla)
-    } else {
-        (None, None) // --sac-workers 0 skips the SAC comparison cells
-    };
-    let json = rtac_bench::to_json(&spec, &results, sac.as_ref(), sac_xla.as_ref());
+    // the four SAC comparison cells: measured where the environment
+    // permits, explicitly marked skipped (e.g. "no-artifacts") where not
+    let cells = rtac_bench::run_sac_cells(&spec, sac_workers);
+    println!("{}", rtac_bench::render_cells(&cells));
+    let json = rtac_bench::to_json(&spec, &results, &cells);
     std::fs::write(&json_path, json.to_string()).map_err(|e| format!("{json_path}: {e}"))?;
     eprintln!("wrote {json_path}");
     Ok(())

@@ -18,10 +18,38 @@
 //!
 //! Neutrality is proven by `python/tests/test_model.py
 //! TestPaddingNeutrality` and re-checked here against the native engine.
+//!
+//! # Delta probe encoding
+//!
+//! A batched-SAC probe round submits K planes that are all the *same*
+//! launch plane with one variable row replaced by a singleton.  Shipping
+//! K full planes re-sends the identical base K times; a [`ProbeDelta`]
+//! instead names the base by content fingerprint
+//! ([`plane_fingerprint`]) and carries only the edited row, so a round
+//! moves one base plane + K rows.  The consumer (the coordinator
+//! executor) caches the most recent base per session, keyed by that
+//! fingerprint, and reconstructs each probe with [`ProbeDelta::apply`];
+//! a re-upload replaces (invalidates) the cached base, and a delta
+//! whose fingerprint misses the cache is rejected rather than silently
+//! applied to the wrong base.
+//!
+//! ```
+//! use rtac::runtime::{plane_fingerprint, Bucket, ProbeDelta};
+//!
+//! let bucket = Bucket { n: 2, d: 2 };
+//! let base = vec![1.0, 1.0, 1.0, 1.0]; // both vars fully live
+//! let fp = plane_fingerprint(&base);
+//! // probe "x0 := 1": same plane, row 0 reduced to the singleton {1}
+//! let probe = ProbeDelta::singleton(fp, 0, 1, bucket);
+//! assert_eq!(probe.apply(&base, bucket).unwrap(), vec![0.0, 1.0, 1.0, 1.0]);
+//! // a delta against a different base is refused, not misapplied
+//! let other = vec![1.0, 0.0, 1.0, 1.0];
+//! assert!(probe.apply(&other, bucket).is_err());
+//! ```
 
 use anyhow::{bail, Result};
 
-use crate::core::{DomainPlane, Problem, State, VarId};
+use crate::core::{DomainPlane, Problem, State, Val, VarId};
 
 /// A (n_vars, dom) shape bucket.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -122,6 +150,91 @@ pub fn encode_vars_into(plane: &DomainPlane, bucket: Bucket, out: &mut Vec<f32>)
     // the module docs.
     out[n * dd..].fill(1.0);
     Ok(())
+}
+
+/// Content fingerprint of an encoded f32 plane (FNV-1a over the raw bit
+/// patterns) — the cache key of the delta-probe protocol (see the
+/// module docs).  Two planes share a fingerprint iff they are
+/// bit-identical (modulo the astronomically unlikely 64-bit collision),
+/// so `-0.0` vs `0.0` differ — irrelevant here because every encoder in
+/// this module writes literal `0.0`/`1.0`.
+pub fn plane_fingerprint(plane: &[f32]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for v in plane {
+        h = (h ^ v.to_bits() as u64).wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// A probe plane in delta form: the identity of a base plane plus the
+/// single variable row that differs.  This is what a batched-SAC round
+/// ships per probe instead of a full `[N, D]` plane — one base upload +
+/// K rows per round (see the module docs for the protocol and
+/// [`crate::coordinator::Handle::submit_batch_delta`] for the
+/// client-side entry point).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ProbeDelta {
+    /// [`plane_fingerprint`] of the base plane this delta edits.
+    pub base_fp: u64,
+    /// The edited variable (row index in the `[N, D]` layout).
+    pub var: VarId,
+    /// The replacement row, exactly `bucket.d` values.
+    pub row: Vec<f32>,
+}
+
+impl ProbeDelta {
+    /// The delta of a singleton probe `var := val`: a one-hot row.  The
+    /// SAC probe shape — reducing one variable to `{val}` and leaving
+    /// every other row of the base untouched.
+    pub fn singleton(base_fp: u64, var: VarId, val: Val, bucket: Bucket) -> ProbeDelta {
+        debug_assert!(var < bucket.n && val < bucket.d);
+        let mut row = vec![0.0; bucket.d];
+        row[val] = 1.0;
+        ProbeDelta { base_fp, var, row }
+    }
+
+    /// Shape-check this delta against `bucket` without a base plane —
+    /// what [`crate::coordinator::Handle::submit_batch_delta`] runs
+    /// before enqueuing anything.
+    pub fn validate(&self, bucket: Bucket) -> Result<()> {
+        if self.var >= bucket.n {
+            bail!("delta edits var {} but the bucket has {} rows", self.var, bucket.n);
+        }
+        if self.row.len() != bucket.d {
+            bail!("delta row has {} values, bucket rows hold {}", self.row.len(), bucket.d);
+        }
+        Ok(())
+    }
+
+    /// Reconstruct the full probe plane into `out` (cleared and
+    /// refilled): the base with row `var` replaced.  Refuses a base
+    /// whose shape or fingerprint does not match — a delta must never
+    /// be applied to a plane other than the one it was derived from.
+    pub fn apply_into(&self, base: &[f32], bucket: Bucket, out: &mut Vec<f32>) -> Result<()> {
+        self.validate(bucket)?;
+        if base.len() != bucket.vars_len() {
+            bail!("base plane has {} values, bucket wants {}", base.len(), bucket.vars_len());
+        }
+        let fp = plane_fingerprint(base);
+        if fp != self.base_fp {
+            bail!(
+                "delta was derived from base {:016x} but got base {fp:016x} \
+                 (stale or unknown base plane)",
+                self.base_fp
+            );
+        }
+        out.clear();
+        out.extend_from_slice(base);
+        out[self.var * bucket.d..(self.var + 1) * bucket.d].copy_from_slice(&self.row);
+        Ok(())
+    }
+
+    /// [`ProbeDelta::apply_into`] into a fresh buffer.
+    pub fn apply(&self, base: &[f32], bucket: Bucket) -> Result<Vec<f32>> {
+        let mut out = Vec::new();
+        self.apply_into(base, bucket, &mut out)?;
+        Ok(out)
+    }
 }
 
 /// Apply an output plane back onto `state`: every live value that the
@@ -243,6 +356,83 @@ mod tests {
             s_assigned.assign(x, a);
             assert_eq!(probe, encode_vars(&p, &s_assigned, b).unwrap(), "probe ({x}, {a})");
         }
+    }
+
+    #[test]
+    fn delta_reconstruction_equals_full_plane_encoding_for_random_edits() {
+        // the satellite contract: for random instances and random
+        // singleton edits, base + ProbeDelta must be bit-identical to
+        // encoding the edited state from scratch.
+        let b = bucket();
+        for seed in [3u64, 19, 77] {
+            let p = random_csp(&RandomSpec::new(6, 5, 0.7, 0.4, seed));
+            let mut s = State::new(&p);
+            // a non-trivial base: knock out a few values first
+            s.remove(0, 1);
+            s.remove(3, 2);
+            let base = encode_vars(&p, &s, b).unwrap();
+            let fp = plane_fingerprint(&base);
+            let mut rng = crate::util::rng::Rng::new(seed);
+            for _ in 0..8 {
+                let x = rng.gen_range(p.n_vars());
+                let a = rng.gen_range(p.dom_size(x));
+                if !s.contains(x, a) {
+                    continue;
+                }
+                let delta = ProbeDelta::singleton(fp, x, a, b);
+                let mut s_assigned = s.clone();
+                s_assigned.assign(x, a);
+                let reference = encode_vars(&p, &s_assigned, b).unwrap();
+                assert_eq!(delta.apply(&base, b).unwrap(), reference, "probe ({x}, {a})");
+            }
+        }
+    }
+
+    #[test]
+    fn delta_apply_reuses_the_buffer() {
+        let b = bucket();
+        let base = vec![1.0; b.vars_len()];
+        let fp = plane_fingerprint(&base);
+        let mut out = vec![9.0f32; 3]; // stale content must be cleared
+        ProbeDelta::singleton(fp, 2, 1, b).apply_into(&base, b, &mut out).unwrap();
+        assert_eq!(out.len(), b.vars_len());
+        assert_eq!(out[2 * b.d + 1], 1.0);
+        assert_eq!(out[2 * b.d], 0.0);
+        // second apply into the same buffer must not leak the first
+        ProbeDelta::singleton(fp, 0, 0, b).apply_into(&base, b, &mut out).unwrap();
+        assert_eq!(out[2 * b.d], 1.0, "row 2 must be back to the base");
+    }
+
+    #[test]
+    fn delta_rejects_stale_base_and_bad_shapes() {
+        let b = bucket();
+        let base = vec![1.0; b.vars_len()];
+        let fp = plane_fingerprint(&base);
+        // stale base: same shape, different content
+        let mut other = base.clone();
+        other[5] = 0.0;
+        let err = ProbeDelta::singleton(fp, 0, 0, b).apply(&other, b).unwrap_err();
+        assert!(format!("{err:#}").contains("stale"), "{err:#}");
+        // row length mismatch
+        let bad_row = ProbeDelta { base_fp: fp, var: 0, row: vec![1.0; b.d + 1] };
+        assert!(bad_row.validate(b).is_err());
+        assert!(bad_row.apply(&base, b).is_err());
+        // var out of the bucket
+        let bad_var = ProbeDelta::singleton(fp, b.n - 1, 0, b);
+        let bad_var = ProbeDelta { var: b.n, ..bad_var };
+        assert!(bad_var.validate(b).is_err());
+        // base of the wrong length
+        assert!(ProbeDelta::singleton(fp, 0, 0, b).apply(&base[1..], b).is_err());
+    }
+
+    #[test]
+    fn plane_fingerprint_is_content_keyed() {
+        let a = vec![1.0, 0.0, 1.0];
+        let b = vec![1.0, 0.0, 1.0];
+        let c = vec![0.0, 1.0, 1.0]; // same multiset, different positions
+        assert_eq!(plane_fingerprint(&a), plane_fingerprint(&b));
+        assert_ne!(plane_fingerprint(&a), plane_fingerprint(&c));
+        assert_ne!(plane_fingerprint(&a), plane_fingerprint(&a[..2]));
     }
 
     #[test]

@@ -8,7 +8,9 @@ pub mod encode;
 pub mod executor;
 pub mod manifest;
 
-pub use encode::{decode_vars, encode_cons, encode_vars, encode_vars_into, Bucket};
+pub use encode::{
+    decode_vars, encode_cons, encode_vars, encode_vars_into, plane_fingerprint, Bucket, ProbeDelta,
+};
 pub use executor::{DeviceTensor, FixpointOut, Runtime, STATUS_CONSISTENT, STATUS_WIPEOUT};
 pub use manifest::{Entry, Kind, Manifest};
 

@@ -2,10 +2,22 @@
 //!
 //! The first branching variable's values are partitioned across K worker
 //! threads; each worker runs the standard MAC solver on its sub-space
-//! with a [`TensorEngine`], so every AC call flows through the
-//! coordinator and coalesces with the other workers' calls into batched
-//! XLA executions.  First SAT answer wins (cooperative stop flag); if
-//! every worker exhausts its slice, the instance is UNSAT.
+//! with a propagator chosen by [`WorkerEngine`]:
+//!
+//! * [`WorkerEngine::Tensor`] (the default, [`solve_parallel`]) — a
+//!   [`TensorEngine`] per worker, so every AC call flows through the
+//!   coordinator and coalesces with the other workers' calls into
+//!   batched XLA executions.
+//! * [`WorkerEngine::MixedSac`] — a
+//!   [`crate::ac::sac::MixedProbeBackend`]-backed SAC engine per
+//!   worker: stronger (singleton) propagation whose probe rounds are
+//!   split between each worker's CPU pool and the shared session by
+//!   the mixed cost model.  Workers share the session, so the tensor
+//!   shares ship **full planes** (the delta base cache is single-writer
+//!   — see `coordinator::service`).
+//!
+//! First SAT answer wins (cooperative stop flag); if every worker
+//! exhausts its slice, the instance is UNSAT.
 //!
 //! This is the system story of the paper's GPU pitch: one resident
 //! constraint tensor, many in-flight domain planes.
@@ -15,9 +27,22 @@ use std::sync::{mpsc, Arc};
 
 use anyhow::{anyhow, Result};
 
+use crate::ac::sac::{MixedProbeBackend, SacParallel};
+use crate::ac::Propagator;
 use crate::coordinator::{Coordinator, TensorEngine};
 use crate::core::{Problem, Val, VarId};
 use crate::search::solver::{SolveResult, SolveStats, Solver, SolverConfig};
+
+/// Which propagator each portfolio worker runs on the shared session.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WorkerEngine {
+    /// Full-plane AC through the session ([`TensorEngine`]).
+    Tensor,
+    /// Batched SAC with mixed CPU/tensor probe scheduling
+    /// (`sac-mixed`): `cpu_workers` pool threads per search worker
+    /// (0 = auto), `probe_batch` tensor probes per round (0 = auto).
+    MixedSac { cpu_workers: usize, probe_batch: usize },
+}
 
 /// Result of a parallel run.
 #[derive(Debug)]
@@ -30,7 +55,8 @@ pub struct ParallelOutcome {
 }
 
 /// Split variable `split_var`'s values round-robin across `k` workers
-/// and race them on the shared `coordinator` session.
+/// and race them on the shared `coordinator` session with
+/// [`WorkerEngine::Tensor`] propagators.
 pub fn solve_parallel(
     problem: &Problem,
     coordinator: &Coordinator,
@@ -38,7 +64,32 @@ pub fn solve_parallel(
     split_var: VarId,
     k: usize,
 ) -> Result<ParallelOutcome> {
+    solve_parallel_with(problem, coordinator, base_config, split_var, k, WorkerEngine::Tensor)
+}
+
+/// [`solve_parallel`] with an explicit per-worker propagator choice.
+pub fn solve_parallel_with(
+    problem: &Problem,
+    coordinator: &Coordinator,
+    base_config: &SolverConfig,
+    split_var: VarId,
+    k: usize,
+    engine_kind: WorkerEngine,
+) -> Result<ParallelOutcome> {
     assert!(k >= 1);
+    // Resolve the mixed engine's auto pool size HERE, where k is known:
+    // each search worker gets its own probe pool, so auto-sizing each
+    // pool to the full machine would oversubscribe it k-fold (k search
+    // threads x k·cores probe threads) and skew the cost model's CPU
+    // EWMA with thrashing.  Share the cores across workers instead.
+    let engine_kind = match engine_kind {
+        WorkerEngine::MixedSac { cpu_workers: 0, probe_batch } => {
+            let cores =
+                std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
+            WorkerEngine::MixedSac { cpu_workers: (cores / k).max(1), probe_batch }
+        }
+        other => other,
+    };
     let d = problem.dom_size(split_var);
     let mut slices: Vec<Vec<Val>> = vec![Vec::new(); k];
     for a in 0..d {
@@ -58,6 +109,23 @@ pub fn solve_parallel(
             config.seed = base_config.seed.wrapping_add(wid as u64);
             let problem = &*problem;
             scope.spawn(move || {
+                // one engine per worker: the solver resets it per value,
+                // and the pool-backed engines keep their threads across
+                // resets (the persistent-runtime amortisation)
+                let mut engine: Box<dyn Propagator> = match engine_kind {
+                    WorkerEngine::Tensor => Box::new(TensorEngine::new(handle.clone())),
+                    WorkerEngine::MixedSac { cpu_workers, probe_batch } => {
+                        // shared session: full-plane tensor shares (the
+                        // delta base cache is single-writer)
+                        Box::new(SacParallel::with_backend(Box::new(
+                            MixedProbeBackend::with_tensor(
+                                cpu_workers,
+                                handle.clone(),
+                                probe_batch,
+                            ),
+                        )))
+                    }
+                };
                 let mut merged_stats = SolveStats::default();
                 let mut outcome = SolveResult::Unsat;
                 let mut failure: Option<String> = None;
@@ -66,18 +134,17 @@ pub fn solve_parallel(
                         outcome = SolveResult::Limit;
                         break;
                     }
-                    let mut engine = TensorEngine::new(handle.clone());
-                    let mut solver = Solver::new(&mut engine, config.clone());
+                    let mut solver = Solver::new(engine.as_mut(), config.clone());
                     let (r, s) = solver.solve_with_assignments(problem, &[(split_var, a)]);
                     merged_stats.assignments += s.assignments;
                     merged_stats.backtracks += s.backtracks;
                     merged_stats.ac_calls += s.ac_calls;
                     merged_stats.ac.add(&s.ac);
                     merged_stats.ac_times_ms.extend(s.ac_times_ms);
-                    if let Some(e) = engine.failed.take() {
+                    if let Some(e) = engine.failure() {
                         // poisoned engine: its wipeouts were synthetic,
                         // so this subtree's Unsat is NOT a verdict
-                        failure = Some(e);
+                        failure = Some(e.to_string());
                         break;
                     }
                     match r {

@@ -343,6 +343,95 @@ fn fused_probe_batches_beat_per_probe_submission_on_occupancy() {
 }
 
 #[test]
+fn delta_probes_reach_the_full_plane_fixpoint_with_less_upload() {
+    let dir = need_artifacts!();
+    use rtac::ac::sac::{SacParallel, XlaProbeBackend};
+    // the tentpole contract on the REAL executor: delta-form rounds are
+    // bit-identical in fixpoint to full-plane rounds and ship fewer f32
+    // values (one base + K rows vs K planes per round)
+    for seed in [6u64, 18] {
+        let p = random_csp(&RandomSpec::new(10, 6, 0.7, 0.4, seed));
+        let run = |delta: bool| {
+            let coord = Coordinator::start(&p, config(dir.clone(), 200)).unwrap();
+            let backend = if delta {
+                XlaProbeBackend::new(coord.handle(), 8)
+            } else {
+                XlaProbeBackend::full_plane(coord.handle(), 8)
+            };
+            let mut engine = SacParallel::with_backend(Box::new(backend));
+            let mut s = State::new(&p);
+            let mut c = Counters::default();
+            let out = engine.enforce_sac(&p, &mut s, &mut c);
+            assert!(engine.failed.is_none(), "seed {seed}: {:?}", engine.failed);
+            (out.is_consistent(), s.snapshot(), coord.metrics().snapshot())
+        };
+        let (ok_full, snap_full, m_full) = run(false);
+        let (ok_delta, snap_delta, m_delta) = run(true);
+        assert_eq!(ok_full, ok_delta, "seed {seed}: submission shape changed the outcome");
+        if ok_full {
+            assert_eq!(snap_full, snap_delta, "seed {seed}: the SAC closure is unique");
+        }
+        assert_eq!(m_delta.stale_deltas, 0, "seed {seed}: single-writer session");
+        assert!(m_full.conserved() && m_delta.conserved(), "seed {seed}");
+        assert!(
+            m_delta.shipped_f32 < m_full.shipped_f32,
+            "seed {seed}: delta must ship less ({} vs {} f32)",
+            m_delta.shipped_f32,
+            m_full.shipped_f32
+        );
+        assert!(m_delta.base_uploads > 0, "seed {seed}: no base was uploaded");
+    }
+}
+
+#[test]
+fn sac_mixed_reaches_the_same_fixpoint_as_sac1_and_sac_xla() {
+    let dir = need_artifacts!();
+    use rtac::ac::sac::{MixedProbeBackend, MixedSplit, Sac1, SacMixed, SacParallel};
+    for seed in [5u64, 9] {
+        let p = random_csp(&RandomSpec::new(10, 6, 0.7, 0.4, seed));
+        let mut s_ref = State::new(&p);
+        let mut c_ref = Counters::default();
+        let o_ref = Sac1::new(rtac::ac::rtac::RtacNative::incremental())
+            .enforce_sac(&p, &mut s_ref, &mut c_ref);
+
+        // the tensor-only and auto splits against the real executor
+        for split in [MixedSplit::TensorOnly, MixedSplit::Auto] {
+            let coord = Coordinator::start(&p, config(dir.clone(), 200)).unwrap();
+            let backend =
+                MixedProbeBackend::with_tensor_delta(2, coord.handle(), 0).with_split(split);
+            let stats = backend.stats();
+            let mut engine = SacParallel::with_backend(Box::new(backend));
+            let mut s = State::new(&p);
+            let mut c = Counters::default();
+            let o = engine.enforce_sac(&p, &mut s, &mut c);
+            assert!(engine.failed.is_none(), "seed {seed} {split:?}: {:?}", engine.failed);
+            assert_eq!(o.is_consistent(), o_ref.is_consistent(), "seed {seed} {split:?}");
+            if o_ref.is_consistent() {
+                assert_eq!(s.snapshot(), s_ref.snapshot(), "seed {seed} {split:?}");
+            }
+            assert_eq!(stats.tensor_fallbacks(), 0, "seed {seed} {split:?}: route degraded");
+            if split == MixedSplit::TensorOnly {
+                assert!(stats.tensor_probes() > 0, "seed {seed}: nothing went tensor-side");
+                assert_eq!(stats.cpu_probes(), 0, "seed {seed}");
+            }
+            let m = coord.metrics().snapshot();
+            assert!(m.conserved(), "seed {seed} {split:?}: {m:?}");
+        }
+
+        // and the self-contained engine (lazy session) end to end
+        let mut engine = SacMixed::with_artifact_dir(2, dir.clone());
+        let mut s = State::new(&p);
+        let mut c = Counters::default();
+        let o = engine.enforce(&p, &mut s, &[], &mut c);
+        assert!(engine.failed.is_none(), "seed {seed}: {:?}", engine.failed);
+        assert_eq!(o.is_consistent(), o_ref.is_consistent(), "seed {seed}: SacMixed");
+        if o_ref.is_consistent() {
+            assert_eq!(s.snapshot(), s_ref.snapshot(), "seed {seed}: SacMixed closure");
+        }
+    }
+}
+
+#[test]
 fn tensor_engine_wipeout_leaves_state_restorable() {
     let dir = need_artifacts!();
     let p = rtac::gen::pigeonhole(5, 4);
