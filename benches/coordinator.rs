@@ -31,6 +31,7 @@ fn main() {
                         max_batch: 8,
                         max_wait: Duration::from_micros(wait_us),
                         adaptive: false,
+                        ..Default::default()
                     },
                 },
             )

@@ -38,7 +38,7 @@ fn drive(name: &str, p: &Problem, workers: usize, max_wait: Duration) -> RunRow 
         p,
         CoordinatorConfig {
             artifact_dir: rtac::runtime::default_artifact_dir(),
-            policy: BatchPolicy { max_batch: 8, max_wait, adaptive: false },
+            policy: BatchPolicy { max_batch: 8, max_wait, adaptive: false, ..Default::default() },
         },
     )
     .expect("coordinator start (did you run `make artifacts`?)");

@@ -36,16 +36,21 @@
 //!     submitted through the coordinator onto the compiled `fixb*`
 //!     executables: the coordinator's dynamic batcher fuses the round
 //!     into as few executions as the compiled batch sizes allow.  In
-//!     its default **delta mode** the round ships one base plane
-//!     ([`crate::coordinator::Handle::upload_base`]) plus one
-//!     [`crate::runtime::ProbeDelta`] row per probe
+//!     its default **delta mode** the backend attaches a session
+//!     client ([`crate::coordinator::Handle::attach`]) and each round
+//!     ships one base plane
+//!     ([`crate::coordinator::Handle::upload_base`], skipped while the
+//!     launch domains are unchanged) plus one single-row
+//!     [`crate::runtime::PlaneDelta`] per probe
 //!     ([`crate::coordinator::Handle::submit_batch_delta`]) instead of
-//!     K full planes; [`XlaProbeBackend::full_plane`] keeps the PR-3
-//!     full-plane submission as the upload-volume baseline (and for
-//!     sessions with several base writers, where deltas would
-//!     invalidate each other).  [`SacXla`] wraps this backend together
-//!     with a lazily-started coordinator session into a self-contained
-//!     engine for `make_engine("sac-xla[N]")`.
+//!     K full planes.  Per-client base slots keep several delta
+//!     writers on one session independent; if this client's slot is
+//!     nonetheless evicted under the session's `base_slots` cap, the
+//!     dropped round is retried once with a fresh base upload.
+//!     [`XlaProbeBackend::full_plane`] keeps the PR-3 full-plane
+//!     submission as the upload-volume baseline.  [`SacXla`] wraps
+//!     this backend together with a lazily-started coordinator session
+//!     into a self-contained engine for `make_engine("sac-xla[N]")`.
 //!   - [`MixedProbeBackend`] (`sac-mixed[N]`) — each round is **split**
 //!     between the CPU and tensor backends by a cost model (see
 //!     [`MixedProbeBackend::auto_split`]): the tensor share is
@@ -66,10 +71,10 @@ use std::time::Instant;
 
 use crate::ac::rtac::{derive_affected, RtacNative};
 use crate::ac::{Counters, Outcome, Propagator};
-use crate::coordinator::{Handle, Response};
+use crate::coordinator::{Handle, Response, StaleTracker};
 use crate::core::{DomainPlane, PlaneSlab, Problem, State, Val, VarId};
 use crate::exec::WorkerPool;
-use crate::runtime::{encode_vars_into, plane_fingerprint, ProbeDelta};
+use crate::runtime::{encode_vars_into, plane_fingerprint, PlaneDelta};
 
 /// SAC-1 enforcer wrapping an inner AC engine.
 pub struct Sac1<E: Propagator> {
@@ -376,20 +381,28 @@ pub const DEFAULT_TENSOR_PROBE_BATCH: usize = 8;
 ///
 /// Three submission shapes:
 /// * **fused delta** ([`XlaProbeBackend::new`], the default) — the
-///   staged base is uploaded once per round
-///   ([`Handle::upload_base`]) and each probe ships only its
-///   [`ProbeDelta`] row through [`Handle::submit_batch_delta`]: a
-///   K-probe round moves one plane + K rows host→executor.
+///   backend attaches its own session client; the staged base is
+///   uploaded into that client's slot once per round
+///   ([`Handle::upload_base`], skipped while unchanged) and each probe
+///   ships only its single-row [`PlaneDelta`] through
+///   [`Handle::submit_batch_delta`]: a K-probe round moves one plane +
+///   K rows host→executor, and concurrent delta writers on the same
+///   session stay independent (per-client base slots).
 /// * **fused full** ([`XlaProbeBackend::full_plane`]) — K full planes
 ///   through [`Handle::submit_batch`]; the PR-3 behavior, kept as the
-///   upload-volume baseline and for shared sessions (several delta-base
-///   writers would invalidate each other's cache entries).
+///   upload-volume baseline.
 /// * **per-probe** ([`XlaProbeBackend::per_probe`]) — one blocking
 ///   full-plane request at a time: every probe gambles against the
 ///   executor's `max_wait` deadline on its own (the occupancy baseline
 ///   `rtac serve --sac-probe` measures against).
 pub struct XlaProbeBackend {
     handle: Handle,
+    /// This backend's session client + its stale-drop watermark (the
+    /// shared stale-vs-fatal classifier,
+    /// [`crate::coordinator::StaleTracker`]).  `Some` iff this backend
+    /// ships deltas; the full-plane/per-probe baselines attach nothing
+    /// ([`Handle::attach`] is for delta writers).
+    client: Option<StaleTracker>,
     /// Probes per round; 0 = auto ([`DEFAULT_TENSOR_PROBE_BATCH`]).
     batch: usize,
     /// Round staging buffer: the launch domains, encoded once per round.
@@ -403,9 +416,10 @@ pub struct XlaProbeBackend {
     /// case on consistent instances: whole passes remove nothing), the
     /// staged plane — and thus its fingerprint — is identical, so the
     /// re-upload is skipped and a pass ships ONE base total.  Sound
-    /// because this backend is the session's only base writer (the
-    /// delta protocol's single-writer assumption) and the executor
-    /// cache is content-keyed.
+    /// because the slot is keyed to this backend's client (no other
+    /// writer replaces it) and content-fingerprinted; if the slot is
+    /// *evicted* under the session's cap, the stale round is retried
+    /// once with a fresh upload (see `run_probes`).
     last_base_fp: Option<u64>,
     /// Fingerprint of the problem this backend first probed.  The
     /// session's constraint tensor is device-resident and per-problem,
@@ -417,9 +431,30 @@ pub struct XlaProbeBackend {
 
 impl XlaProbeBackend {
     /// Fused delta-mode backend — the default submission shape.
+    /// Attaches a fresh session client for its base slot.
     pub fn new(handle: Handle, batch: usize) -> XlaProbeBackend {
+        let tracker = StaleTracker::attach(&handle);
+        XlaProbeBackend { client: Some(tracker), ..XlaProbeBackend::shape(handle, batch) }
+    }
+
+    /// Fused full-plane backend: the upload-volume baseline (no session
+    /// client — nothing delta-shaped is shipped).
+    pub fn full_plane(handle: Handle, batch: usize) -> XlaProbeBackend {
+        XlaProbeBackend { delta: false, ..XlaProbeBackend::shape(handle, batch) }
+    }
+
+    /// The per-probe submission baseline: same backend, but every probe
+    /// gambles against the executor's `max_wait` deadline on its own.
+    pub fn per_probe(handle: Handle, batch: usize) -> XlaProbeBackend {
+        XlaProbeBackend { fused: false, delta: false, ..XlaProbeBackend::shape(handle, batch) }
+    }
+
+    /// The common field layout (fused delta shape, no client attached —
+    /// the public constructors override from here).
+    fn shape(handle: Handle, batch: usize) -> XlaProbeBackend {
         XlaProbeBackend {
             handle,
+            client: None,
             batch,
             staging: Vec::new(),
             fused: true,
@@ -429,32 +464,14 @@ impl XlaProbeBackend {
         }
     }
 
-    /// Fused full-plane backend: the upload-volume baseline, and the
-    /// safe shape when several clients upload delta bases on one
-    /// session.
-    pub fn full_plane(handle: Handle, batch: usize) -> XlaProbeBackend {
-        XlaProbeBackend {
-            handle,
-            batch,
-            staging: Vec::new(),
-            fused: true,
-            delta: false,
-            last_base_fp: None,
-            bound: None,
-        }
-    }
-
-    /// The per-probe submission baseline: same backend, but every probe
-    /// gambles against the executor's `max_wait` deadline on its own.
-    pub fn per_probe(handle: Handle, batch: usize) -> XlaProbeBackend {
-        XlaProbeBackend {
-            handle,
-            batch,
-            staging: Vec::new(),
-            fused: false,
-            delta: false,
-            last_base_fp: None,
-            bound: None,
+    /// Did the last failed round die because OUR base slot went stale
+    /// (evicted/out of sync) rather than because the session is gone?
+    /// Delegates to the shared [`StaleTracker`]; always false for the
+    /// non-delta baselines (no client attached).
+    fn absorb_stale_drop(&mut self) -> bool {
+        match &mut self.client {
+            Some(tracker) => tracker.absorb_stale_drop(&self.handle),
+            None => false,
         }
     }
 
@@ -512,17 +529,22 @@ impl XlaProbeBackend {
         let bucket = self.handle.bucket;
         encode_vars_into(state.plane(), bucket, &mut self.staging)?;
         if self.delta {
+            let client = self
+                .client
+                .as_ref()
+                .expect("delta backends attach at construction")
+                .client();
             let fp = plane_fingerprint(&self.staging);
             if self.last_base_fp != Some(fp) {
-                let uploaded = self.handle.upload_base(self.staging.clone())?;
+                let uploaded = self.handle.upload_base(client, self.staging.clone())?;
                 debug_assert_eq!(uploaded, fp);
                 self.last_base_fp = Some(fp);
             }
-            let deltas: Vec<ProbeDelta> = probes
+            let deltas: Vec<PlaneDelta> = probes
                 .iter()
-                .map(|&(x, a)| ProbeDelta::singleton(fp, x, a, bucket))
+                .map(|&(x, a)| PlaneDelta::singleton(fp, x, a, bucket))
                 .collect();
-            self.handle.submit_batch_delta(deltas)
+            self.handle.submit_batch_delta(client, deltas)
         } else {
             let planes: Vec<Vec<f32>> =
                 probes.iter().map(|&(x, a)| self.probe_plane(x, a)).collect();
@@ -595,7 +617,30 @@ impl ProbeBackend for XlaProbeBackend {
     ) -> anyhow::Result<Vec<bool>> {
         if self.fused {
             let receivers = self.submit_round(problem, state, probes)?;
-            let round = self.collect_round(receivers)?;
+            let round = match self.collect_round(receivers) {
+                Ok(round) => round,
+                Err(e) => {
+                    if !self.absorb_stale_drop() {
+                        return Err(e);
+                    }
+                    // our base slot was evicted under the session's cap
+                    // (another writer's upload) while we were skipping
+                    // re-uploads: the dropped round is retried ONCE with
+                    // a fresh base — degradation to one extra plane, not
+                    // a poisoned engine
+                    self.last_base_fp = None;
+                    let receivers = self.submit_round(problem, state, probes)?;
+                    let round = self.collect_round(receivers)?;
+                    // the old round's TAIL deltas (behind the one whose
+                    // drop we observed) were also dropped stale, after
+                    // the first absorb — absorb them too, or the next
+                    // fatal failure would be misclassified as a stale
+                    // slot.  Safe here: the retried round completed, so
+                    // no delta of ours is in flight.
+                    let _ = self.absorb_stale_drop();
+                    round
+                }
+            };
             counters.recurrences += round.recurrences;
             return Ok(round.verdicts);
         }
@@ -750,9 +795,8 @@ impl MixedProbeBackend {
     }
 
     /// Mixed backend over an existing session, tensor rounds shipped as
-    /// **full planes** — safe when the session is shared by several
-    /// clients (parallel search workers), where delta-base uploads
-    /// would invalidate each other.
+    /// **full planes** — the upload-volume baseline (and the shape to
+    /// force when comparing against delta rounds).
     pub fn with_tensor(workers: usize, handle: Handle, tensor_batch: usize) -> MixedProbeBackend {
         MixedProbeBackend {
             tensor: Some(XlaProbeBackend::full_plane(handle, tensor_batch)),
@@ -760,9 +804,11 @@ impl MixedProbeBackend {
         }
     }
 
-    /// Mixed backend over an **exclusively owned** session, tensor
-    /// rounds shipped in delta form (one base + K rows) — what
-    /// [`SacMixed`] builds.
+    /// Mixed backend over any session, tensor rounds shipped in delta
+    /// form (one base + K rows) on the backend's own session client —
+    /// what [`SacMixed`] and the `sac-mixed` search workers build.
+    /// Per-client base slots keep concurrent writers on a shared
+    /// session from invalidating each other.
     pub fn with_tensor_delta(
         workers: usize,
         handle: Handle,
@@ -877,12 +923,8 @@ impl ProbeBackend for MixedProbeBackend {
         let staged = if tensor_probes.is_empty() {
             None
         } else {
-            let submitted = self
-                .tensor
-                .as_mut()
-                .expect("tensor_share > 0 implies a tensor half")
-                .submit_round(problem, state, tensor_probes);
-            match submitted {
+            let tensor = self.tensor.as_mut().expect("tensor_share > 0 implies a tensor half");
+            match tensor.submit_round(problem, state, tensor_probes) {
                 Ok(receivers) => Some(receivers),
                 Err(e) => {
                     self.degrade("submit", &e);
@@ -902,16 +944,29 @@ impl ProbeBackend for MixedProbeBackend {
             self.cpu_ewma.observe(us / cpu_probes.len() as f64);
             self.stats.cpu_probes.fetch_add(cpu_probes.len() as u64, Ordering::Relaxed);
         }
-        // 3. collect the tensor share; on failure (or a failed submit),
-        // re-probe that share on the CPU — same launch domains, same
-        // verdicts, so the merge loop never notices
+        // 3. collect the tensor share; an eviction-induced stale drop
+        // is retried once with a fresh base upload (same recovery as
+        // the standalone backend, so sac-mixed on a crowded session
+        // does not shed its tensor half permanently); on any other
+        // failure (or a failed submit), re-probe that share on the CPU
+        // — same launch domains, same verdicts, so the merge loop
+        // never notices
         let mut tensor_verdicts = match staged {
             Some(receivers) => {
-                let collected = self
-                    .tensor
-                    .as_ref()
-                    .expect("tensor half still present")
-                    .collect_round(receivers);
+                let tensor = self.tensor.as_mut().expect("tensor half still present");
+                let mut collected = tensor.collect_round(receivers);
+                if collected.is_err() && tensor.absorb_stale_drop() {
+                    tensor.last_base_fp = None;
+                    collected = tensor
+                        .submit_round(problem, state, tensor_probes)
+                        .and_then(|receivers| tensor.collect_round(receivers));
+                    if collected.is_ok() {
+                        // absorb the old round's tail drops (counted
+                        // after the first absorb) so the next failure
+                        // is classified against a clean baseline
+                        let _ = tensor.absorb_stale_drop();
+                    }
+                }
                 match collected {
                     Ok(round) => {
                         // the round's work counts only on success: a
@@ -1231,7 +1286,7 @@ impl Propagator for SacXla {
 /// `sac-mixed[N]` as a self-contained engine: lazily starts — and owns
 /// — a coordinator session for the problem it enforces on, then runs
 /// [`SacParallel`] with a [`MixedProbeBackend`] whose tensor half ships
-/// delta rounds over that exclusive session.  Without compiled
+/// delta rounds on its own session client.  Without compiled
 /// artifacts (or after a session start failure) the engine runs
 /// **CPU-only instead of poisoning**: the mixed scheduler's contract is
 /// that the CPU route can always answer every probe, so offline
@@ -1290,8 +1345,9 @@ impl SacMixed {
         };
         let backend = match crate::coordinator::Coordinator::start(problem, config) {
             Ok(coord) => {
-                // exclusive session: the delta protocol's single-writer
-                // assumption holds, so ship base + rows per round
+                // delta rounds on this engine's own session client
+                // (base + rows per round; per-client slots make this
+                // safe even if the session were shared)
                 let backend =
                     MixedProbeBackend::with_tensor_delta(self.workers, coord.handle(), 0);
                 self.session = Some(coord);

@@ -18,8 +18,10 @@
 //!   (SAC probes every (var, value) pair, so it runs on a SAC-sized
 //!   instance derived from the grid rather than the full MAC cell);
 //! * the artifact-gated tensor cells: `sac-par` vs `sac-xla`,
-//!   delta-vs-full upload volume, and `sac-mixed` vs the best single
-//!   backend.
+//!   delta-vs-full probe upload volume, `sac-mixed` vs the best single
+//!   backend, and the *search*-delta cell (a MAC search over a tensor
+//!   worker shipping per-node row diffs vs full planes — the PR-5
+//!   serving-protocol headline).
 //!
 //! Cells that cannot run are **explicitly marked** in the JSON
 //! (`*_skipped: "<reason>"` — e.g. `"no-artifacts"`) instead of being
@@ -370,7 +372,7 @@ impl<T> CellOutcome<T> {
     }
 }
 
-/// The four SAC comparison cells of one bench run.
+/// The five SAC/search comparison cells of one bench run.
 #[derive(Clone, Debug)]
 pub struct SacCells {
     /// Sequential SAC-1 vs `sac-par` (CPU; always runnable).
@@ -381,6 +383,9 @@ pub struct SacCells {
     pub delta: CellOutcome<DeltaComparison>,
     /// `sac-mixed` vs the best single backend (artifact-gated).
     pub mixed: CellOutcome<MixedComparison>,
+    /// Search-plane delta vs full-plane upload volume over a MAC run
+    /// (artifact-gated).
+    pub search_delta: CellOutcome<SearchDeltaComparison>,
 }
 
 impl SacCells {
@@ -390,6 +395,7 @@ impl SacCells {
             sac_xla: CellOutcome::Skipped(reason),
             delta: CellOutcome::Skipped(reason),
             mixed: CellOutcome::Skipped(reason),
+            search_delta: CellOutcome::Skipped(reason),
         }
     }
 }
@@ -427,9 +433,7 @@ pub fn run_sac_cells(spec: &GridSpec, workers: usize) -> SacCells {
     let Some(cell) = tensor_cell(spec) else {
         return SacCells {
             sac,
-            sac_xla: CellOutcome::Skipped(SkipReason::EmptyGrid),
-            delta: CellOutcome::Skipped(SkipReason::EmptyGrid),
-            mixed: CellOutcome::Skipped(SkipReason::EmptyGrid),
+            ..SacCells::all_skipped(SkipReason::EmptyGrid)
         };
     };
     let sac_xla = match sac_xla_comparison_on(&cell, workers) {
@@ -446,7 +450,11 @@ pub fn run_sac_cells(spec: &GridSpec, workers: usize) -> SacCells {
         Some(c) => CellOutcome::Measured(c),
         None => CellOutcome::Skipped(SkipReason::SessionUnavailable),
     };
-    SacCells { sac, sac_xla, delta, mixed }
+    let search_delta = match search_delta_comparison_on(&cell) {
+        Some(c) => CellOutcome::Measured(c),
+        None => CellOutcome::Skipped(SkipReason::SessionUnavailable),
+    };
+    SacCells { sac, sac_xla, delta, mixed, search_delta }
 }
 
 /// Tensor-route upload-volume cell: the same SAC enforcement routed
@@ -662,7 +670,94 @@ pub fn render_mixed(c: &MixedComparison) -> String {
     )
 }
 
-/// Human report of all four SAC cells, including explicit skip notes.
+/// Search-plane upload cell: the same (deterministic, single-worker)
+/// MAC search routed through the coordinator twice — once with the
+/// delta-shipping tensor worker (base once + per-node row diffs, PR-5)
+/// and once with the full-plane baseline — comparing wall time and the
+/// f32 volume that crossed the client→executor channel.
+#[derive(Clone, Debug)]
+pub struct SearchDeltaComparison {
+    pub n: usize,
+    pub density: f64,
+    pub dom: usize,
+    pub full_ms: f64,
+    pub delta_ms: f64,
+    pub full_shipped_f32: u64,
+    pub delta_shipped_f32: u64,
+    /// delta volume / full volume (< 1 is the delta win).
+    pub upload_ratio: f64,
+    /// AC enforcements the search performed (identical across modes:
+    /// one worker, same responses, same trajectory).
+    pub ac_calls: u64,
+    /// Base planes the delta run uploaded (1 + one per slot fallback).
+    pub base_uploads: u64,
+}
+
+/// Measure the search-delta-vs-full upload cell.  Self-skips (`None`)
+/// when no session can start, a worker poisons, or the two modes
+/// somehow diverge (one worker makes the search deterministic, so
+/// divergence means the runs are not comparable).
+pub fn search_delta_comparison(spec: &GridSpec) -> Option<SearchDeltaComparison> {
+    search_delta_comparison_on(&tensor_cell(spec)?)
+}
+
+fn search_delta_comparison_on(cell: &TensorCell) -> Option<SearchDeltaComparison> {
+    use crate::coordinator::Coordinator;
+    use crate::search::parallel::{solve_parallel_with, WorkerEngine};
+    use crate::search::solver::SolverConfig;
+
+    let p = &cell.p;
+    // a bounded, deterministic search: ONE worker (so both modes visit
+    // the same nodes and volumes compare like for like) and an
+    // assignment budget proportionate to the cell
+    let config = SolverConfig { max_assignments: 400, ..SolverConfig::default() };
+
+    let run = |engine: WorkerEngine| -> Option<(f64, u64, u64, u64, String)> {
+        let coord = Coordinator::start(p, cell.config.clone()).ok()?;
+        let sw = Stopwatch::start();
+        let out = solve_parallel_with(p, &coord.handle(), &config, 0, 1, engine).ok()?;
+        let ms = sw.elapsed_ms();
+        let m = coord.metrics().snapshot();
+        Some((ms, m.shipped_f32, m.requests, m.base_uploads, format!("{:?}", out.result)))
+    };
+
+    let (full_ms, full_shipped_f32, full_reqs, _, out_full) = run(WorkerEngine::TensorFull)?;
+    let (delta_ms, delta_shipped_f32, delta_reqs, base_uploads, out_delta) =
+        run(WorkerEngine::Tensor)?;
+    if full_reqs != delta_reqs || out_full != out_delta {
+        eprintln!("search delta cell: modes diverged — skipping");
+        return None;
+    }
+    Some(SearchDeltaComparison {
+        n: cell.n,
+        density: cell.density,
+        dom: cell.dom,
+        full_ms,
+        delta_ms,
+        full_shipped_f32,
+        delta_shipped_f32,
+        upload_ratio: if full_shipped_f32 > 0 {
+            delta_shipped_f32 as f64 / full_shipped_f32 as f64
+        } else {
+            0.0
+        },
+        ac_calls: full_reqs,
+        base_uploads,
+    })
+}
+
+/// One-line report for the search-delta upload cell.
+pub fn render_search_delta(c: &SearchDeltaComparison) -> String {
+    format!(
+        "search delta cell (n={}, density={:.2}, dom={}): full {:.1}ms/{} f32 vs delta \
+         {:.1}ms/{} f32 -> {:.2}x upload volume ({} AC calls, {} base upload(s))\n",
+        c.n, c.density, c.dom, c.full_ms, c.full_shipped_f32, c.delta_ms,
+        c.delta_shipped_f32, c.upload_ratio, c.ac_calls, c.base_uploads
+    )
+}
+
+/// Human report of all five SAC/search cells, including explicit skip
+/// notes.
 pub fn render_cells(cells: &SacCells) -> String {
     let mut out = String::new();
     match &cells.sac {
@@ -687,6 +782,12 @@ pub fn render_cells(cells: &SacCells) -> String {
         CellOutcome::Measured(c) => out.push_str(&render_mixed(c)),
         CellOutcome::Skipped(r) => {
             out.push_str(&format!("sac mixed cell: skipped ({})\n", r.as_str()))
+        }
+    }
+    match &cells.search_delta {
+        CellOutcome::Measured(c) => out.push_str(&render_search_delta(c)),
+        CellOutcome::Skipped(r) => {
+            out.push_str(&format!("search delta cell: skipped ({})\n", r.as_str()))
         }
     }
     out
@@ -739,7 +840,7 @@ pub fn render(results: &[CellResult], engines: &[&str]) -> String {
 }
 
 /// JSON export: grid metadata + one row per cell (BENCH_rtac.json),
-/// plus the densest-cell verdicts and the four SAC comparison cells —
+/// plus the densest-cell verdicts and the five SAC/search comparison cells —
 /// measured fields when run, an explicit `*_skipped: "<reason>"`
 /// marker when not (never silently absent).
 pub fn to_json(spec: &GridSpec, results: &[CellResult], cells: &SacCells) -> Json {
@@ -823,6 +924,19 @@ pub fn to_json(spec: &GridSpec, results: &[CellResult], cells: &SacCells) -> Jso
         }
         CellOutcome::Skipped(r) => fields.push(("sac_mixed_skipped", s(r.as_str()))),
     }
+    match &cells.search_delta {
+        CellOutcome::Measured(c) => {
+            fields.push(("search_delta_n", num(c.n as f64)));
+            fields.push(("search_delta_ms", num(c.delta_ms)));
+            fields.push(("search_delta_full_ms", num(c.full_ms)));
+            fields.push(("search_delta_shipped_f32", num(c.delta_shipped_f32 as f64)));
+            fields.push(("search_delta_full_shipped_f32", num(c.full_shipped_f32 as f64)));
+            fields.push(("search_delta_upload_ratio", num(c.upload_ratio)));
+            fields.push(("search_delta_ac_calls", num(c.ac_calls as f64)));
+            fields.push(("search_delta_base_uploads", num(c.base_uploads as f64)));
+        }
+        CellOutcome::Skipped(r) => fields.push(("search_delta_skipped", s(r.as_str()))),
+    }
     obj(fields)
 }
 
@@ -883,7 +997,13 @@ mod tests {
         let (spec, results) = tiny_results();
         let j = to_json(&spec, &results, &SacCells::all_skipped(SkipReason::Disabled));
         let parsed = crate::util::json::parse(&j.to_string()).unwrap();
-        for key in ["sac_skipped", "sac_xla_skipped", "sac_delta_skipped", "sac_mixed_skipped"] {
+        for key in [
+            "sac_skipped",
+            "sac_xla_skipped",
+            "sac_delta_skipped",
+            "sac_mixed_skipped",
+            "search_delta_skipped",
+        ] {
             assert_eq!(parsed.get(key).unwrap().as_str(), Some("disabled"), "{key}");
         }
         // and the no-artifacts reason serialises as the documented token
@@ -915,10 +1035,20 @@ mod tests {
             assert!(matches!(cells.sac_xla, CellOutcome::Skipped(SkipReason::NoArtifacts)));
             assert!(matches!(cells.delta, CellOutcome::Skipped(SkipReason::NoArtifacts)));
             assert!(matches!(cells.mixed, CellOutcome::Skipped(SkipReason::NoArtifacts)));
+            assert!(matches!(
+                cells.search_delta,
+                CellOutcome::Skipped(SkipReason::NoArtifacts)
+            ));
         }
-        // render always mentions all four cells
+        // render always mentions all five cells
         let txt = render_cells(&cells);
-        for needle in ["sac cell", "sac tensor cell", "sac delta cell", "sac mixed cell"] {
+        for needle in [
+            "sac cell",
+            "sac tensor cell",
+            "sac delta cell",
+            "sac mixed cell",
+            "search delta cell",
+        ] {
             assert!(txt.contains(needle), "render_cells misses {needle}: {txt}");
         }
     }
@@ -1056,11 +1186,25 @@ mod tests {
             cpu_probes: 20,
             tensor_probes: 12,
         });
+        let search_delta = search_delta_comparison(&spec).unwrap_or(SearchDeltaComparison {
+            n: 8,
+            density: 1.0,
+            dom: 4,
+            full_ms: 5.0,
+            delta_ms: 4.0,
+            full_shipped_f32: 8192,
+            delta_shipped_f32: 900,
+            upload_ratio: 900.0 / 8192.0,
+            ac_calls: 128,
+            base_uploads: 1,
+        });
         assert!(render_delta(&delta).contains("upload volume"));
         assert!(render_mixed(&mixed).contains("best single"));
+        assert!(render_search_delta(&search_delta).contains("base upload"));
         let cells = SacCells {
             delta: CellOutcome::Measured(delta),
             mixed: CellOutcome::Measured(mixed),
+            search_delta: CellOutcome::Measured(search_delta),
             ..SacCells::all_skipped(SkipReason::Disabled)
         };
         let j = to_json(&spec, &run(&spec, &["rtac"]), &cells);
@@ -1069,7 +1213,10 @@ mod tests {
         assert!(parsed.get("sac_delta_shipped_f32").is_some());
         assert!(parsed.get("sac_mixed_vs_best_speedup").is_some());
         assert!(parsed.get("sac_mixed_best_single").is_some());
+        assert!(parsed.get("search_delta_upload_ratio").is_some());
+        assert!(parsed.get("search_delta_base_uploads").is_some());
         assert!(parsed.get("sac_delta_skipped").is_none());
         assert!(parsed.get("sac_mixed_skipped").is_none());
+        assert!(parsed.get("search_delta_skipped").is_none());
     }
 }

@@ -4,32 +4,147 @@
 //! AC call encodes the current domains, submits them to the session, and
 //! decodes the enforced plane back through the trail.
 //!
+//! By default the engine ships **search-plane deltas**: it attaches a
+//! [`ClientId`] to the session, uploads its first encoded plane as that
+//! client's base, and from then on ships only the rows that changed
+//! since the previous node ([`PlaneDelta::diff`] +
+//! [`Handle::submit_delta`], which advances the client's base slot to
+//! the reconstructed plane).  Consecutive MAC nodes differ in the few
+//! rows the last assignment/backtrack/propagation touched, so a K-node
+//! run moves one base plane plus per-node row diffs instead of K full
+//! planes.  If the client's slot goes stale (evicted under the
+//! `base_slots` cap by other writers), the engine falls back to
+//! re-uploading the current plane as a fresh base and continues —
+//! deltas degrade to full planes, never to wrong answers.
+//! [`TensorEngine::full_plane`] keeps the ship-everything baseline
+//! (what the upload-volume bench cells compare against).
+//!
 //! When several search workers share one coordinator session, their AC
 //! calls coalesce into batched executions — the end-to-end system the
 //! paper's GPU experiments point at (DESIGN.md §3, examples/serve_demo).
 
 use crate::ac::{Counters, Outcome, Propagator};
-use crate::coordinator::service::Handle;
+use crate::coordinator::service::{Handle, Response, StaleTracker};
 use crate::core::{Problem, State, VarId};
-use crate::runtime::{decode_vars, encode_vars};
+use crate::runtime::{decode_vars, encode_vars, plane_fingerprint, PlaneDelta};
+
+/// The delta-shipping state of one engine (one session client).
+struct DeltaState {
+    /// The session client + its stale-drop watermark (the shared
+    /// stale-vs-fatal classifier — see [`StaleTracker`]).
+    tracker: StaleTracker,
+    /// The full plane this client last chained onto the session — the
+    /// mirror of the executor's base slot.  `None` until the first
+    /// upload (or after a reset).
+    last: Option<Vec<f32>>,
+}
 
 /// Propagator that routes enforcement through a coordinator session.
 pub struct TensorEngine {
     handle: Handle,
+    /// `Some` = delta shipping (the default); `None` = full planes.
+    delta: Option<DeltaState>,
     /// Set on coordinator failure: the engine is then poisoned and
     /// reports wipeouts to force search termination.
     pub failed: Option<String>,
 }
 
 impl TensorEngine {
+    /// Delta-shipping engine (the default): base once, then per-node
+    /// row diffs, with automatic full-plane fallback on slot
+    /// invalidation.
     pub fn new(handle: Handle) -> TensorEngine {
-        TensorEngine { handle, failed: None }
+        let tracker = StaleTracker::attach(&handle);
+        TensorEngine { handle, delta: Some(DeltaState { tracker, last: None }), failed: None }
+    }
+
+    /// Full-plane engine: every AC call ships the whole encoded plane.
+    /// The upload-volume baseline (`bench-rtac`'s search-delta cell,
+    /// `rtac serve --worker-engine tensor-full`).
+    pub fn full_plane(handle: Handle) -> TensorEngine {
+        TensorEngine { handle, delta: None, failed: None }
+    }
+
+    /// Ship `plane` and block for its enforcement response, in whatever
+    /// mode this engine runs.
+    ///
+    /// Delta mode: diff against the previous node's plane and chain
+    /// ([`Handle::submit_delta`] advances the client's slot to `plane`).
+    /// When there is no previous plane — first call, after `reset`, or
+    /// after the executor reported our slot stale (evicted) — upload
+    /// `plane` as a fresh base and chase it with an empty delta, which
+    /// reconstructs to the base itself and carries the enforcement
+    /// request.  A stale drop is detected by the client's `stale_deltas`
+    /// metric ticking during the failed call, and retried with a fresh
+    /// base a bounded number of times.
+    fn enforce_plane(&mut self, plane: Vec<f32>) -> anyhow::Result<Response> {
+        let bucket = self.handle.bucket;
+        let Some(ds) = &mut self.delta else {
+            return self.handle.enforce_blocking(plane);
+        };
+        let client = ds.tracker.client();
+        if let Some(last) = &ds.last {
+            let delta = PlaneDelta::diff(last, &plane, bucket)?;
+            match self.handle.enforce_delta_blocking(client, delta) {
+                Ok(resp) => {
+                    ds.last = Some(plane);
+                    return Ok(resp);
+                }
+                // a stale drop means our slot was evicted/invalidated:
+                // fall through to a fresh base upload (the full-plane
+                // fallback); any other failure is fatal
+                Err(e) => {
+                    if !ds.tracker.absorb_stale_drop(&self.handle) {
+                        return Err(e);
+                    }
+                }
+            }
+        }
+        // fresh-base fallback: under heavy slot churn (more concurrent
+        // writers than base_slots) even a just-uploaded base can be
+        // evicted before its first delta resolves, so retry a bounded
+        // number of times before giving up
+        for _ in 0..3 {
+            let fp = self.handle.upload_base(client, plane.clone())?;
+            debug_assert_eq!(fp, plane_fingerprint(&plane));
+            match self.handle.enforce_delta_blocking(client, PlaneDelta::empty(fp)) {
+                Ok(resp) => {
+                    if let Some(ds) = &mut self.delta {
+                        ds.last = Some(plane);
+                    }
+                    return Ok(resp);
+                }
+                Err(e) => {
+                    let ds = self.delta.as_mut().expect("delta mode");
+                    if !ds.tracker.absorb_stale_drop(&self.handle) {
+                        return Err(e);
+                    }
+                    // evicted again: loop with a fresh upload
+                }
+            }
+        }
+        anyhow::bail!(
+            "delta base slot evicted repeatedly — the session's base_slots cap looks \
+             too small for the number of concurrent delta writers (raise --base-slots \
+             or use the full-plane worker engine)"
+        )
     }
 }
 
 impl Propagator for TensorEngine {
     fn name(&self) -> &'static str {
         "tensor-xla"
+    }
+
+    fn reset(&mut self, _problem: &Problem) {
+        // the delta chain SURVIVES resets on purpose: a diff is purely
+        // content-based (diff(last, next) applied to last is next,
+        // whatever search produced either plane), so the next solve's
+        // first plane diffs against the previous solve's head and a
+        // whole portfolio run ships one base per worker.  Only the
+        // poison is cleared; a stale slot is recovered by the fallback
+        // in `enforce_plane`, not here.
+        self.failed = None;
     }
 
     fn failure(&self) -> Option<&str> {
@@ -54,7 +169,7 @@ impl Propagator for TensorEngine {
                 return Outcome::Wipeout(0);
             }
         };
-        let resp = match self.handle.enforce_blocking(plane) {
+        let resp = match self.enforce_plane(plane) {
             Ok(r) => r,
             Err(e) => {
                 self.failed = Some(format!("submit: {e:#}"));

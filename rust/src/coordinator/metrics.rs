@@ -1,28 +1,34 @@
 //! Coordinator metrics: request/batch counters, latency decomposition
 //! (queue wait vs execution), batch-occupancy histogram, padding waste,
 //! upload volume (f32 values shipped client→executor, the quantity the
-//! delta-probe encoding shrinks), and failure accounting (failed fused
-//! executions, dropped requests, stale delta probes).
+//! delta-plane encoding shrinks), and failure accounting (failed fused
+//! executions, dropped requests, stale deltas, base-slot evictions) —
+//! in aggregate *and* per delta client
+//! ([`MetricsSnapshot::clients`]).
 //!
-//! The session-level conservation invariant, checked by every
-//! quiescent-state test: `requests == responses + dropped_requests`.
-//! Every plane that reached the queue is either answered or explicitly
-//! accounted as dropped — nothing vanishes.
+//! The conservation invariant, checked by every quiescent-state test at
+//! the session level and per client: `requests == responses +
+//! dropped_requests`.  Every plane that reached the queue is either
+//! answered or explicitly accounted as dropped — nothing vanishes.
 //!
 //! ```
 //! use rtac::coordinator::Metrics;
+//! use std::time::Duration;
 //!
 //! let m = Metrics::new();
-//! m.on_submit(128);     // a full plane: 128 f32 values shipped
-//! m.on_stale_delta();   // a rejected delta probe counts as dropped
+//! m.on_submit(None, 128, false); // a full plane: 128 f32 values shipped
+//! m.on_batch(1, 4, Duration::from_micros(50));
+//! m.on_response(None, Duration::ZERO, Duration::from_micros(60), 3, false);
 //! let s = m.snapshot();
 //! assert_eq!(s.shipped_f32, 128);
 //! assert!(s.conserved(), "requests == responses + dropped");
 //! ```
 
+use std::collections::HashMap;
 use std::sync::Mutex;
 use std::time::Duration;
 
+use crate::coordinator::service::ClientId;
 use crate::util::stats::Online;
 
 /// Shared, thread-safe metrics sink.
@@ -34,6 +40,7 @@ pub struct Metrics {
 #[derive(Debug, Default)]
 struct Inner {
     requests: u64,
+    delta_requests: u64,
     responses: u64,
     batches: u64,
     failed_batches: u64,
@@ -41,6 +48,7 @@ struct Inner {
     stale_deltas: u64,
     shipped_f32: u64,
     base_uploads: u64,
+    base_evictions: u64,
     batch_occupancy_sum: u64,
     padded_slots: u64,
     wipeouts: u64,
@@ -48,12 +56,93 @@ struct Inner {
     exec_us: Online,
     total_us: Online,
     iters: Online,
+    clients: HashMap<u64, ClientMetrics>,
+}
+
+impl Inner {
+    fn client(&mut self, client: ClientId) -> &mut ClientMetrics {
+        self.clients
+            .entry(client.id())
+            .or_insert_with(|| ClientMetrics { client: client.id(), ..Default::default() })
+    }
+}
+
+/// Per-client upload-volume and conservation accounting: one row per
+/// [`ClientId`] that ever touched the delta path.  Full-plane
+/// submissions are unattributed (aggregate only); everything a delta
+/// client ships — bases, delta rows — and every response/drop it
+/// receives is recorded here, so `requests == responses +
+/// dropped_requests` holds per client too.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ClientMetrics {
+    /// The [`ClientId::id`] this row belongs to.
+    pub client: u64,
+    /// Requests this client enqueued (all delta-path; the client id is
+    /// only carried by delta submissions).
+    pub requests: u64,
+    /// The subset of `requests` that shipped in delta form (currently
+    /// all of them — kept separate so a future client-attributed full
+    /// path keeps the hit-rate denominator honest).
+    pub delta_requests: u64,
+    pub responses: u64,
+    pub dropped_requests: u64,
+    /// Deltas dropped because this client's base slot was stale,
+    /// evicted, or never uploaded (a subset of `dropped_requests`).
+    pub stale_deltas: u64,
+    /// f32 values this client shipped (bases + delta rows).
+    pub shipped_f32: u64,
+    /// Base planes this client uploaded (first attach + every
+    /// invalidation/eviction fallback).
+    pub base_uploads: u64,
+}
+
+/// Fraction of `deltas` submissions that applied against a live base
+/// slot (1.0 with no delta traffic) — the ONE definition of the hit
+/// rate, shared by the per-client and session-aggregate views.
+fn hit_rate(deltas: u64, stale: u64) -> f64 {
+    if deltas == 0 {
+        return 1.0;
+    }
+    (deltas - stale.min(deltas)) as f64 / deltas as f64
+}
+
+impl ClientMetrics {
+    /// Per-client conservation at quiescence.
+    pub fn conserved(&self) -> bool {
+        self.requests == self.responses + self.dropped_requests
+    }
+
+    /// Fraction of this client's delta submissions that applied against
+    /// a live base slot (1.0 = no stale drops).  The per-worker number
+    /// `rtac serve` reports.
+    pub fn delta_hit_rate(&self) -> f64 {
+        hit_rate(self.delta_requests, self.stale_deltas)
+    }
+
+    /// One-line per-client summary (the `rtac serve` delta report).
+    pub fn summary(&self) -> String {
+        format!(
+            "client c{}: deltas={} hit={:.0}% bases={} stale={} shipped={}f32 \
+             req={} resp={} dropped={}",
+            self.client,
+            self.delta_requests,
+            self.delta_hit_rate() * 100.0,
+            self.base_uploads,
+            self.stale_deltas,
+            self.shipped_f32,
+            self.requests,
+            self.responses,
+            self.dropped_requests,
+        )
+    }
 }
 
 /// A snapshot for reporting.
 #[derive(Clone, Debug)]
 pub struct MetricsSnapshot {
     pub requests: u64,
+    /// The subset of `requests` submitted in delta form.
+    pub delta_requests: u64,
     pub responses: u64,
     /// Successfully executed fused batches only — a failed XLA execution
     /// counts in `failed_batches`, not here, so occupancy and exec stats
@@ -63,19 +152,23 @@ pub struct MetricsSnapshot {
     pub failed_batches: u64,
     /// Requests whose responders were dropped without a response (their
     /// batch failed, the executor shut down with them in flight, or a
-    /// delta probe referenced a stale base — see `stale_deltas`).
+    /// delta referenced a stale base — see `stale_deltas`).
     pub dropped_requests: u64,
-    /// Delta probes rejected because their base fingerprint missed the
-    /// executor's cached base plane (counted in `dropped_requests` too,
-    /// so conservation holds).
+    /// Deltas rejected because their base fingerprint missed the
+    /// submitting client's base slot (counted in `dropped_requests`
+    /// too, so conservation holds).
     pub stale_deltas: u64,
     /// Total f32 values shipped client→executor: full planes, delta
-    /// rows, and base uploads.  The delta-vs-full bench cell compares
+    /// rows, and base uploads.  The delta-vs-full bench cells compare
     /// this across submission modes.
     pub shipped_f32: u64,
-    /// Delta base planes uploaded (each re-upload invalidates the
-    /// previous cached base).
+    /// Delta base planes uploaded (each re-upload replaces the
+    /// uploading client's slot).
     pub base_uploads: u64,
+    /// Base slots evicted under the `base_slots` cap to admit a new
+    /// client's upload (the evicted client's next delta drops as
+    /// stale).
+    pub base_evictions: u64,
     pub mean_batch_occupancy: f64,
     pub padded_slots: u64,
     pub wipeouts: u64,
@@ -84,6 +177,9 @@ pub struct MetricsSnapshot {
     pub mean_total_us: f64,
     pub max_total_us: f64,
     pub mean_iters: f64,
+    /// Per-client rows, ascending by client id (empty when no client
+    /// ever attached to the delta path).
+    pub clients: Vec<ClientMetrics>,
 }
 
 impl Metrics {
@@ -92,30 +188,55 @@ impl Metrics {
     }
 
     /// Record one request reaching the executor queue, shipping `f32s`
-    /// values (a full plane's `vars_len`, or just the row length `d`
-    /// for a delta probe).
-    pub fn on_submit(&self, f32s: usize) {
+    /// values (a full plane's `vars_len`, or just the replaced rows for
+    /// a delta).  `client` attributes the request to a delta client's
+    /// per-client row (`None` for the unattributed full-plane paths);
+    /// `delta` marks delta-form submissions for hit-rate accounting.
+    pub fn on_submit(&self, client: Option<ClientId>, f32s: usize, delta: bool) {
         let mut m = self.inner.lock().unwrap();
         m.requests += 1;
         m.shipped_f32 += f32s as u64;
+        if delta {
+            m.delta_requests += 1;
+        }
+        if let Some(client) = client {
+            let c = m.client(client);
+            c.requests += 1;
+            c.shipped_f32 += f32s as u64;
+            if delta {
+                c.delta_requests += 1;
+            }
+        }
     }
 
-    /// Record one delta-base upload of `f32s` values.  Not a request —
-    /// the base produces no response of its own; it only feeds later
-    /// delta reconstructions.
-    pub fn on_base_upload(&self, f32s: usize) {
+    /// Record one delta-base upload of `f32s` values by `client`.  Not
+    /// a request — the base produces no response of its own; it only
+    /// feeds later delta reconstructions.
+    pub fn on_base_upload(&self, client: ClientId, f32s: usize) {
         let mut m = self.inner.lock().unwrap();
         m.base_uploads += 1;
         m.shipped_f32 += f32s as u64;
+        let c = m.client(client);
+        c.base_uploads += 1;
+        c.shipped_f32 += f32s as u64;
     }
 
-    /// Record one delta probe rejected for referencing a stale/unknown
-    /// base plane: its responder is dropped, so it also counts as a
-    /// dropped request (conservation).
-    pub fn on_stale_delta(&self) {
+    /// Record one base slot evicted under the cap (executor-side).
+    pub fn on_base_evicted(&self) {
+        self.inner.lock().unwrap().base_evictions += 1;
+    }
+
+    /// Record one delta from `client` rejected for referencing a
+    /// stale/evicted/unknown base slot: its responder is dropped, so it
+    /// also counts as a dropped request — per client and in aggregate
+    /// (conservation).
+    pub fn on_stale_delta(&self, client: ClientId) {
         let mut m = self.inner.lock().unwrap();
         m.stale_deltas += 1;
         m.dropped_requests += 1;
+        let c = m.client(client);
+        c.stale_deltas += 1;
+        c.dropped_requests += 1;
     }
 
     /// Record one *successfully executed* batch: `real` occupied slots of
@@ -130,16 +251,27 @@ impl Metrics {
         m.exec_us.push(exec.as_secs_f64() * 1e6);
     }
 
-    /// Record one failed fused execution: its `real` requests are dropped
-    /// (their responders never fire).
-    pub fn on_batch_failed(&self, real: usize) {
+    /// Record one failed fused execution: every request it carried is
+    /// dropped (the responders never fire), attributed per client where
+    /// the request was client-submitted.
+    pub fn on_batch_failed(&self, dropped: &[Option<ClientId>]) {
         let mut m = self.inner.lock().unwrap();
         m.failed_batches += 1;
-        m.dropped_requests += real as u64;
+        m.dropped_requests += dropped.len() as u64;
+        for client in dropped.iter().flatten() {
+            m.client(*client).dropped_requests += 1;
+        }
     }
 
-    /// Record one completed request.
-    pub fn on_response(&self, queue: Duration, total: Duration, iters: i32, wiped: bool) {
+    /// Record one completed request (`client` for delta-path requests).
+    pub fn on_response(
+        &self,
+        client: Option<ClientId>,
+        queue: Duration,
+        total: Duration,
+        iters: i32,
+        wiped: bool,
+    ) {
         let mut m = self.inner.lock().unwrap();
         m.responses += 1;
         m.queue_us.push(queue.as_secs_f64() * 1e6);
@@ -148,12 +280,28 @@ impl Metrics {
         if wiped {
             m.wipeouts += 1;
         }
+        if let Some(client) = client {
+            m.client(client).responses += 1;
+        }
+    }
+
+    /// `client`'s cumulative stale-delta count — a targeted read for
+    /// the serving hot path (the delta clients poll this around every
+    /// submission to distinguish "slot evicted: re-upload" from
+    /// "session dead: fail"), so it must not pay
+    /// [`Metrics::snapshot`]'s full clone of every counter.
+    pub fn client_stale_deltas(&self, client: ClientId) -> u64 {
+        let m = self.inner.lock().unwrap();
+        m.clients.get(&client.id()).map_or(0, |c| c.stale_deltas)
     }
 
     pub fn snapshot(&self) -> MetricsSnapshot {
         let m = self.inner.lock().unwrap();
+        let mut clients: Vec<ClientMetrics> = m.clients.values().cloned().collect();
+        clients.sort_by_key(|c| c.client);
         MetricsSnapshot {
             requests: m.requests,
+            delta_requests: m.delta_requests,
             responses: m.responses,
             batches: m.batches,
             failed_batches: m.failed_batches,
@@ -161,6 +309,7 @@ impl Metrics {
             stale_deltas: m.stale_deltas,
             shipped_f32: m.shipped_f32,
             base_uploads: m.base_uploads,
+            base_evictions: m.base_evictions,
             mean_batch_occupancy: if m.batches == 0 {
                 0.0
             } else {
@@ -173,6 +322,7 @@ impl Metrics {
             mean_total_us: m.total_us.mean(),
             max_total_us: m.total_us.max(),
             mean_iters: m.iters.mean(),
+            clients,
         }
     }
 }
@@ -181,10 +331,11 @@ impl MetricsSnapshot {
     /// One-line human summary (served by `rtac serve` and the examples).
     pub fn summary(&self) -> String {
         format!(
-            "req={} resp={} batches={} failed={} dropped={} stale_deltas={} \
-             shipped={}f32 bases={} occ={:.2} padded={} \
+            "req={} (delta={}) resp={} batches={} failed={} dropped={} stale_deltas={} \
+             shipped={}f32 bases={} evicted={} occ={:.2} padded={} \
              wipeouts={} queue={:.0}µs exec={:.0}µs total={:.0}µs iters={:.2}",
             self.requests,
+            self.delta_requests,
             self.responses,
             self.batches,
             self.failed_batches,
@@ -192,6 +343,7 @@ impl MetricsSnapshot {
             self.stale_deltas,
             self.shipped_f32,
             self.base_uploads,
+            self.base_evictions,
             self.mean_batch_occupancy,
             self.padded_slots,
             self.wipeouts,
@@ -208,22 +360,49 @@ impl MetricsSnapshot {
     pub fn conserved(&self) -> bool {
         self.requests == self.responses + self.dropped_requests
     }
+
+    /// Per-client conservation at quiescence: [`conserved`] for every
+    /// client row (vacuously true with no delta clients).
+    ///
+    /// [`conserved`]: ClientMetrics::conserved
+    pub fn clients_conserved(&self) -> bool {
+        self.clients.iter().all(|c| c.conserved())
+    }
+
+    /// Session-wide delta hit rate — the aggregate twin of
+    /// [`ClientMetrics::delta_hit_rate`] (same definition, session
+    /// counters).
+    pub fn delta_hit_rate(&self) -> f64 {
+        hit_rate(self.delta_requests, self.stale_deltas)
+    }
+
+    /// The per-client row for `client` ([`ClientId::id`]), if that
+    /// client ever touched the delta path.
+    pub fn client(&self, client: u64) -> Option<&ClientMetrics> {
+        self.clients.iter().find(|c| c.client == client)
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
 
+    /// Fabricate client ids (sessions mint them via `Handle::attach`).
+    fn two_clients() -> (ClientId, ClientId) {
+        (ClientId::test(0), ClientId::test(1))
+    }
+
     #[test]
     fn counters_accumulate() {
         let m = Metrics::new();
-        m.on_submit(16);
-        m.on_submit(16);
+        m.on_submit(None, 16, false);
+        m.on_submit(None, 16, false);
         m.on_batch(2, 4, Duration::from_micros(100));
-        m.on_response(Duration::from_micros(10), Duration::from_micros(110), 4, false);
-        m.on_response(Duration::from_micros(20), Duration::from_micros(120), 5, true);
+        m.on_response(None, Duration::from_micros(10), Duration::from_micros(110), 4, false);
+        m.on_response(None, Duration::from_micros(20), Duration::from_micros(120), 5, true);
         let s = m.snapshot();
         assert_eq!(s.requests, 2);
+        assert_eq!(s.delta_requests, 0);
         assert_eq!(s.responses, 2);
         assert_eq!(s.batches, 1);
         assert_eq!(s.failed_batches, 0);
@@ -233,10 +412,12 @@ mod tests {
         assert_eq!(s.shipped_f32, 32);
         assert_eq!(s.base_uploads, 0);
         assert_eq!(s.stale_deltas, 0);
+        assert!(s.clients.is_empty(), "unattributed traffic opens no client rows");
         assert!((s.mean_batch_occupancy - 2.0).abs() < 1e-9);
         assert!((s.mean_iters - 4.5).abs() < 1e-9);
         assert!(s.mean_total_us > s.mean_queue_us);
         assert!(s.conserved());
+        assert!(s.clients_conserved());
         assert!(!s.summary().is_empty());
     }
 
@@ -246,43 +427,94 @@ mod tests {
         assert_eq!(s.requests, 0);
         assert_eq!(s.mean_batch_occupancy, 0.0);
         assert!(s.conserved());
+        assert!(s.clients_conserved());
     }
 
     #[test]
     fn delta_accounting_preserves_conservation_and_tracks_volume() {
         let m = Metrics::new();
-        // a delta round: one base upload + 3 delta rows (d = 8)
-        m.on_base_upload(128);
+        let (a, _) = two_clients();
+        // a delta round from one client: a base upload + 3 delta rows
+        m.on_base_upload(a, 128);
         for _ in 0..3 {
-            m.on_submit(8);
+            m.on_submit(Some(a), 8, true);
         }
         // two served, one stale-rejected
         m.on_batch(2, 4, Duration::from_micros(50));
-        m.on_response(Duration::ZERO, Duration::from_micros(60), 2, false);
-        m.on_response(Duration::ZERO, Duration::from_micros(60), 2, false);
-        m.on_stale_delta();
+        m.on_response(Some(a), Duration::ZERO, Duration::from_micros(60), 2, false);
+        m.on_response(Some(a), Duration::ZERO, Duration::from_micros(60), 2, false);
+        m.on_stale_delta(a);
         let s = m.snapshot();
         assert_eq!(s.requests, 3, "a base upload is not a request");
+        assert_eq!(s.delta_requests, 3);
         assert_eq!(s.base_uploads, 1);
         assert_eq!(s.shipped_f32, 128 + 3 * 8);
         assert_eq!(s.stale_deltas, 1);
         assert_eq!(s.dropped_requests, 1);
         assert!(s.conserved(), "stale deltas must count as dropped: {s:?}");
+        // ...and the same numbers per client
+        let c = s.client(a.id()).expect("client row opened");
+        assert_eq!(c.requests, 3);
+        assert_eq!(c.delta_requests, 3);
+        assert_eq!(c.responses, 2);
+        assert_eq!(c.dropped_requests, 1);
+        assert_eq!(c.stale_deltas, 1);
+        assert_eq!(c.base_uploads, 1);
+        assert_eq!(c.shipped_f32, 128 + 3 * 8);
+        assert!(c.conserved());
+        assert!((c.delta_hit_rate() - 2.0 / 3.0).abs() < 1e-9);
+        assert!(s.clients_conserved());
         assert!(s.summary().contains("stale_deltas=1"));
         assert!(s.summary().contains("bases=1"));
+        assert!(c.summary().contains("bases=1"));
+    }
+
+    #[test]
+    fn per_client_rows_stay_isolated() {
+        let m = Metrics::new();
+        let (a, b) = two_clients();
+        m.on_base_upload(a, 64);
+        m.on_base_upload(b, 64);
+        m.on_submit(Some(a), 4, true);
+        m.on_submit(Some(b), 4, true);
+        m.on_batch(2, 2, Duration::from_micros(10));
+        m.on_response(Some(a), Duration::ZERO, Duration::ZERO, 1, false);
+        // b's request is dropped by a failed batch — a must not see it
+        m.on_batch_failed(&[Some(b)]);
+        let s = m.snapshot();
+        assert_eq!(s.clients.len(), 2);
+        let ca = s.client(a.id()).unwrap();
+        let cb = s.client(b.id()).unwrap();
+        assert_eq!(ca.responses, 1);
+        assert_eq!(ca.dropped_requests, 0);
+        assert_eq!(cb.responses, 0);
+        assert_eq!(cb.dropped_requests, 1);
+        assert!(ca.conserved() && cb.conserved(), "{s:?}");
+        assert_eq!(ca.delta_hit_rate(), 1.0);
+        assert!(s.conserved());
+    }
+
+    #[test]
+    fn eviction_counter_accumulates() {
+        let m = Metrics::new();
+        m.on_base_evicted();
+        m.on_base_evicted();
+        let s = m.snapshot();
+        assert_eq!(s.base_evictions, 2);
+        assert!(s.summary().contains("evicted=2"));
     }
 
     #[test]
     fn failed_batches_do_not_skew_success_stats() {
         let m = Metrics::new();
         for _ in 0..3 {
-            m.on_submit(4);
+            m.on_submit(None, 4, false);
         }
         // one successful batch of 2, one failed batch dropping 1 request
         m.on_batch(2, 4, Duration::from_micros(100));
-        m.on_response(Duration::from_micros(10), Duration::from_micros(110), 3, false);
-        m.on_response(Duration::from_micros(12), Duration::from_micros(112), 3, false);
-        m.on_batch_failed(1);
+        m.on_response(None, Duration::from_micros(10), Duration::from_micros(110), 3, false);
+        m.on_response(None, Duration::from_micros(12), Duration::from_micros(112), 3, false);
+        m.on_batch_failed(&[None]);
         let s = m.snapshot();
         assert_eq!(s.batches, 1, "failed executions must not count as batches");
         assert_eq!(s.failed_batches, 1);

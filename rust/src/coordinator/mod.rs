@@ -8,15 +8,20 @@
 //!
 //! * [`service`] — the [`Coordinator`] session itself: the startup
 //!   fence, the dynamic batcher (fixed or adaptive [`BatchPolicy`]),
-//!   the delta-probe base cache, and the cloneable client [`Handle`]
-//!   (full planes via [`Handle::submit`]/[`Handle::submit_batch`],
-//!   delta probes via [`Handle::upload_base`] +
-//!   [`Handle::submit_batch_delta`]).
-//! * [`metrics`] — shared counters with the session conservation
-//!   invariant `requests == responses + dropped_requests` and the
-//!   upload-volume accounting the delta encoding is measured by.
+//!   the per-client delta base slots (capped + LRU, see
+//!   `BatchPolicy::base_slots`), and the cloneable client [`Handle`]
+//!   (client ids via [`Handle::attach`]; full planes via
+//!   [`Handle::submit`]/[`Handle::submit_batch`], probe-round deltas
+//!   via [`Handle::upload_base`] + [`Handle::submit_batch_delta`],
+//!   chained search-node deltas via [`Handle::submit_delta`]).  The
+//!   wire protocol is documented end-to-end in `docs/PROTOCOL.md`.
+//! * [`metrics`] — shared counters with the conservation invariant
+//!   `requests == responses + dropped_requests` (aggregate and per
+//!   client) and the upload-volume accounting the delta encoding is
+//!   measured by.
 //! * [`engine`] — [`TensorEngine`], the [`crate::ac::Propagator`] that
-//!   routes a MAC solver's AC calls through a session.
+//!   routes a MAC solver's AC calls through a session (shipping
+//!   base-once-then-row-diffs by default).
 //!
 //! ```
 //! use rtac::coordinator::BatchPolicy;
@@ -32,5 +37,7 @@ pub mod metrics;
 pub mod service;
 
 pub use engine::TensorEngine;
-pub use metrics::{Metrics, MetricsSnapshot};
-pub use service::{BatchPolicy, Coordinator, CoordinatorConfig, Handle, Response};
+pub use metrics::{ClientMetrics, Metrics, MetricsSnapshot};
+pub use service::{
+    BatchPolicy, ClientId, Coordinator, CoordinatorConfig, Handle, Response, StaleTracker,
+};

@@ -39,27 +39,41 @@
 //!   messages before disconnecting); the only uncounted path is an
 //!   executor panic, which aborts the session.
 //!
-//! # Delta probes
+//! # Delta planes and per-client base slots
 //!
-//! A batched-SAC probe round submits K planes that differ from a common
-//! base in one variable row each.  [`Handle::upload_base`] ships the
-//! base once; [`Handle::submit_batch_delta`] then ships one
-//! [`ProbeDelta`] (fingerprint + edited row) per probe, and the
-//! executor reconstructs each full plane against its cached base before
-//! fusing — so a K-probe round moves one plane + K rows instead of K
-//! planes.  Cache rules:
+//! Two workloads re-ship planes that differ from a plane the executor
+//! already holds in only a few rows: a batched-SAC probe round (K
+//! planes = one launch plane with one row replaced each) and a MAC
+//! search worker (consecutive nodes differ in the rows the last
+//! assignment/backtrack touched).  Delta submission ships only the
+//! changed rows ([`crate::runtime::PlaneDelta`]); the executor
+//! reconstructs full planes against a cached base before fusing.
 //!
-//! * the cache holds **one** base per session, keyed by the base's
-//!   content fingerprint ([`crate::runtime::plane_fingerprint`]);
-//! * every `upload_base` **replaces** the cached base — re-uploading
-//!   invalidates all deltas derived from the previous one;
-//! * a delta whose fingerprint misses the cache is **dropped** (counted
-//!   as `stale_deltas` *and* `dropped_requests`, so conservation holds)
-//!   rather than silently applied to the wrong base;
-//! * consequently the protocol assumes **one delta-base writer per
-//!   session** (the engines that own a session exclusively, like
-//!   `sac-xla`/`sac-mixed`, use deltas; multi-writer clients such as
-//!   parallel search workers submit full planes).
+//! The base cache is a **per-client slot map** (see `BaseSlots`).  A
+//! client identity ([`ClientId`]) is issued by [`Handle::attach`] at
+//! session attach; every delta-path call carries it:
+//!
+//! * [`Handle::upload_base`] caches a base in the *calling client's*
+//!   slot, keyed by the base's content fingerprint
+//!   ([`crate::runtime::plane_fingerprint`]).  Re-uploading replaces
+//!   that slot only — other clients' slots are untouched, so several
+//!   delta writers coexist on one session without cross-invalidating.
+//! * [`Handle::submit_batch_delta`] ships a probe round (K deltas
+//!   against the client's cached base; the slot is left unchanged).
+//! * [`Handle::submit_delta`] ships one **chained** delta (a search
+//!   node): after reconstruction the client's slot *advances* to the
+//!   reconstructed plane, so the next node diffs against this one —
+//!   base once, then row diffs for the rest of the search.
+//! * A delta whose fingerprint misses its client's slot (never
+//!   uploaded, evicted, or out of sync) is **dropped** (counted as
+//!   `stale_deltas` *and* `dropped_requests`, per client and in
+//!   aggregate, so conservation holds) rather than silently applied to
+//!   the wrong base.  Clients fall back to re-uploading a full base.
+//! * The slot map is bounded: `BatchPolicy::base_slots` caps resident
+//!   bases (validated `>= 1` at startup, alongside `max_batch`); when a
+//!   *new* client uploads into a full map the least-recently-used other
+//!   slot is evicted (counted as `base_evictions`).  An evicted
+//!   client's next delta drops as stale and the client re-uploads.
 //!
 //! ```
 //! use rtac::coordinator::Response;
@@ -80,6 +94,7 @@
 //! assert_eq!(r.occupancy(), 0.75);
 //! ```
 
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -88,7 +103,35 @@ use anyhow::{anyhow, bail, Context, Result};
 
 use crate::coordinator::metrics::Metrics;
 use crate::core::Problem;
-use crate::runtime::{encode_cons, Bucket, Kind, Manifest, ProbeDelta, Runtime, STATUS_WIPEOUT};
+use crate::runtime::{encode_cons, Bucket, Kind, Manifest, PlaneDelta, Runtime, STATUS_WIPEOUT};
+
+/// Identity of one delta-writing client on a session, issued by
+/// [`Handle::attach`].  Keys that client's base slot in the executor's
+/// slot map and its per-client row in
+/// [`crate::coordinator::MetricsSnapshot::clients`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct ClientId(u64);
+
+impl ClientId {
+    /// The raw id (stable for the session's lifetime; also the
+    /// per-client metrics key).
+    pub fn id(&self) -> u64 {
+        self.0
+    }
+
+    /// Test-only constructor — production ids come from
+    /// [`Handle::attach`] so they are session-unique.
+    #[cfg(test)]
+    pub(crate) fn test(id: u64) -> ClientId {
+        ClientId(id)
+    }
+}
+
+impl std::fmt::Display for ClientId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "c{}", self.0)
+    }
+}
 
 /// Batching policy.
 #[derive(Clone, Debug)]
@@ -113,11 +156,73 @@ pub struct BatchPolicy {
     /// upper bound; `max_wait` the longest wait.  (Implemented by the
     /// executor-internal `AdaptiveBatcher`, an EWMA over queue demand.)
     pub adaptive: bool,
+    /// Cap on resident delta-base planes (one slot per delta-writing
+    /// client; see the module docs).  Bounds executor memory at
+    /// `base_slots × vars_len × 4` bytes.  Must be >= 1 — validated at
+    /// [`Coordinator::start`] alongside `max_batch`; when a new client
+    /// uploads into a full map, the least-recently-used other slot is
+    /// evicted.
+    pub base_slots: usize,
 }
 
 impl Default for BatchPolicy {
     fn default() -> Self {
-        BatchPolicy { max_batch: 8, max_wait: Duration::from_micros(300), adaptive: false }
+        BatchPolicy {
+            max_batch: 8,
+            max_wait: Duration::from_micros(300),
+            adaptive: false,
+            base_slots: 8,
+        }
+    }
+}
+
+/// The executor's per-client delta-base cache: at most `cap` resident
+/// `(client, fingerprint, plane)` slots, least-recently-used first.
+/// One slot per client; an upload for a client that already holds a
+/// slot *replaces* it (the invalidation rule), an upload for a new
+/// client under a full map evicts the LRU slot of some other client.
+/// Lookups and uploads both refresh recency.  `Vec`-based on purpose:
+/// `cap` is single digits to low tens, where a scan beats a map.
+pub(crate) struct BaseSlots {
+    cap: usize,
+    /// `(client, fingerprint, plane)`, most-recently-used LAST.
+    slots: Vec<(ClientId, u64, Vec<f32>)>,
+}
+
+impl BaseSlots {
+    pub(crate) fn new(cap: usize) -> BaseSlots {
+        BaseSlots { cap: cap.max(1), slots: Vec::new() }
+    }
+
+    /// Cache `plane` as `client`'s base.  Returns `true` when another
+    /// client's LRU slot was evicted to make room (the caller counts it
+    /// as `base_evictions`).
+    pub(crate) fn insert(&mut self, client: ClientId, fp: u64, plane: Vec<f32>) -> bool {
+        if let Some(i) = self.slots.iter().position(|(c, _, _)| *c == client) {
+            self.slots.remove(i);
+            self.slots.push((client, fp, plane));
+            return false;
+        }
+        let evicted = self.slots.len() >= self.cap;
+        if evicted {
+            self.slots.remove(0);
+        }
+        self.slots.push((client, fp, plane));
+        evicted
+    }
+
+    /// Look up `client`'s slot and refresh its recency.  `None` when the
+    /// client never uploaded a base or its slot was evicted.
+    pub(crate) fn get(&mut self, client: ClientId) -> Option<&(ClientId, u64, Vec<f32>)> {
+        let i = self.slots.iter().position(|(c, _, _)| *c == client)?;
+        let slot = self.slots.remove(i);
+        self.slots.push(slot);
+        self.slots.last()
+    }
+
+    /// Resident slots (for tests and reporting).
+    pub(crate) fn len(&self) -> usize {
+        self.slots.len()
     }
 }
 
@@ -206,13 +311,13 @@ impl Default for CoordinatorConfig {
 
 /// Client→executor message.
 enum Msg {
-    /// One enforcement request (full plane or delta probe).
+    /// One enforcement request (full plane or delta).
     Req(Request),
-    /// Cache `plane` as the session's delta base under fingerprint
-    /// `fp`, replacing any previously cached base (the invalidation
-    /// rule of the delta protocol — see the module docs).  Produces no
-    /// response of its own.
-    Base { fp: u64, plane: Vec<f32> },
+    /// Cache `plane` as `client`'s delta base under fingerprint `fp`,
+    /// replacing that client's previous slot (the invalidation rule of
+    /// the delta protocol — see the module docs).  Produces no response
+    /// of its own.
+    Base { client: ClientId, fp: u64, plane: Vec<f32> },
 }
 
 /// A request: one domains plane to enforce.
@@ -223,44 +328,109 @@ struct Request {
 }
 
 /// The plane a request carries: materialised, or in delta form against
-/// the executor's cached base plane.
+/// the submitting client's cached base plane.
 enum Payload {
     Full(Vec<f32>),
-    Delta(ProbeDelta),
+    Delta {
+        client: ClientId,
+        delta: PlaneDelta,
+        /// Chain semantics ([`Handle::submit_delta`]): after
+        /// reconstruction the client's slot advances to the
+        /// reconstructed plane, so the *next* delta diffs against this
+        /// one.  Probe rounds ([`Handle::submit_batch_delta`]) leave
+        /// the slot unchanged — every probe edits the same base.
+        advance: bool,
+    },
 }
 
-/// Resolve a request payload into a full plane against the cached
-/// delta base.  `None` means the payload is a delta whose base
-/// fingerprint misses the cache (stale or never uploaded) or is
-/// malformed — the request must be dropped, never guessed at.  Shared
-/// by the executor thread and the offline protocol tests, so both
-/// resolve identically.
+impl Payload {
+    /// The submitting client, for per-client drop/response accounting
+    /// (full planes are unattributed).
+    fn client(&self) -> Option<ClientId> {
+        match self {
+            Payload::Full(_) => None,
+            Payload::Delta { client, .. } => Some(*client),
+        }
+    }
+}
+
+/// Resolve a request payload into a full plane against the per-client
+/// base slots.  `None` means the payload is a delta whose base
+/// fingerprint misses its client's slot (stale, evicted, or never
+/// uploaded) or is malformed — the request must be dropped, never
+/// guessed at.  Shared by the executor thread and the offline protocol
+/// tests, so both resolve identically.
 ///
 /// The base was fingerprinted once at upload and the cached key is
-/// compared here, so the row is spliced directly instead of going
-/// through [`ProbeDelta::apply`] (which would re-hash the whole cached
-/// plane per probe — K redundant O(n·d) passes per round on the
-/// executor's serving path).
-fn resolve_payload(
-    payload: Payload,
-    base: Option<&(u64, Vec<f32>)>,
-    bucket: Bucket,
-) -> Option<Vec<f32>> {
+/// compared here, so rows are spliced directly instead of going
+/// through [`PlaneDelta::apply`] (which would re-hash the whole cached
+/// plane per request — K redundant O(n·d) passes per probe round on
+/// the executor's serving path).  An advancing delta re-fingerprints
+/// only its *reconstructed* plane, once, to key the client's new slot.
+fn resolve_payload(payload: Payload, slots: &mut BaseSlots, bucket: Bucket) -> Option<Vec<f32>> {
     match payload {
         Payload::Full(plane) => Some(plane),
-        Payload::Delta(delta) => match base {
-            Some((fp, base_plane))
-                if *fp == delta.base_fp
-                    && delta.validate(bucket).is_ok()
-                    && base_plane.len() == bucket.vars_len() =>
+        Payload::Delta { client, delta, advance } => {
+            let (_, fp, base_plane) = slots.get(client)?;
+            if *fp != delta.base_fp
+                || delta.validate(bucket).is_err()
+                || base_plane.len() != bucket.vars_len()
             {
-                let mut plane = base_plane.clone();
-                plane[delta.var * bucket.d..(delta.var + 1) * bucket.d]
-                    .copy_from_slice(&delta.row);
-                Some(plane)
+                return None;
             }
-            _ => None,
-        },
+            let mut plane = base_plane.clone();
+            for (var, row) in &delta.rows {
+                let start = var * bucket.d;
+                plane[start..start + bucket.d].copy_from_slice(row);
+            }
+            if advance {
+                let next_fp = crate::runtime::plane_fingerprint(&plane);
+                slots.insert(client, next_fp, plane.clone());
+            }
+            Some(plane)
+        }
+    }
+}
+
+/// Client-side stale-drop watermark: mirrors one client's
+/// `stale_deltas` metrics counter so the serving hot path never locks
+/// the metrics on success.  [`StaleTracker::absorb_stale_drop`] is
+/// read only in error branches and classifies a failed delta call as
+/// "my slot went stale/evicted: re-upload and retry" vs "the session
+/// failed: fatal".  The counter only advances when one of the owning
+/// client's own deltas drops, and every such drop surfaces to that
+/// client as an error, so the watermark stays exact — both delta
+/// clients ([`crate::coordinator::TensorEngine`] and the SAC probe
+/// backend) embed this one implementation.
+pub struct StaleTracker {
+    client: ClientId,
+    seen: u64,
+}
+
+impl StaleTracker {
+    /// Attach a fresh client on `handle` and track its drops.
+    pub fn attach(handle: &Handle) -> StaleTracker {
+        StaleTracker { client: handle.attach(), seen: 0 }
+    }
+
+    /// The tracked client id (what the delta-path [`Handle`] calls
+    /// take).
+    pub fn client(&self) -> ClientId {
+        self.client
+    }
+
+    /// True iff the client's stale counter advanced past the watermark
+    /// — i.e. the just-failed call (or a tail of the just-retried
+    /// round) died to a stale/evicted base slot.  Absorbs the advance,
+    /// so the next failure is classified against the new baseline.
+    pub fn absorb_stale_drop(&mut self, handle: &Handle) -> bool {
+        let now = handle.client_stale_deltas(self.client);
+        if now > self.seen {
+            self.seen = now;
+            true
+        } else {
+            false
+        }
     }
 }
 
@@ -305,9 +475,28 @@ pub struct Handle {
     /// occupy.  Cost models (the mixed probe scheduler) read the largest
     /// entry as the tensor route's amortisation ceiling.
     pub compiled_batches: Vec<usize>,
+    /// The session's resident delta-base cap
+    /// ([`BatchPolicy::base_slots`]) — how many delta-writing clients
+    /// can coexist without LRU eviction.  Multi-client callers
+    /// (`search::parallel`) read this to decide between delta and
+    /// full-plane shipping up front instead of thrashing the slot map.
+    pub base_slots: usize,
+    /// Issues session-unique [`ClientId`]s ([`Handle::attach`]); shared
+    /// by every clone of this handle.
+    next_client: Arc<AtomicU64>,
 }
 
 impl Handle {
+    /// Attach a delta-writing client to the session: issues a fresh,
+    /// session-unique [`ClientId`] that keys the client's base slot and
+    /// its per-client metrics row.  Attach once per logical writer (a
+    /// probe backend, a search worker's engine) and pass the id to
+    /// every [`Handle::upload_base`] / [`Handle::submit_delta`] /
+    /// [`Handle::submit_batch_delta`] call.
+    pub fn attach(&self) -> ClientId {
+        ClientId(self.next_client.fetch_add(1, Ordering::Relaxed))
+    }
+
     /// Submit a plane; returns a receiver for the response.
     pub fn submit(&self, plane: Vec<f32>) -> Result<mpsc::Receiver<Response>> {
         if plane.len() != self.bucket.vars_len() {
@@ -326,7 +515,8 @@ impl Handle {
                 resp: rtx,
             }))
             .map_err(|_| self.executor_gone_err())?;
-        self.metrics.on_submit(shipped); // count only planes that reached the queue
+        // count only planes that reached the queue
+        self.metrics.on_submit(None, shipped, false);
         Ok(rrx)
     }
 
@@ -364,9 +554,9 @@ impl Handle {
         }
         if m.stale_deltas > 0 {
             causes.push(format!(
-                "{} delta probe(s) referenced a stale/unknown base plane (another \
-                 client re-uploaded the base? the delta protocol assumes one base \
-                 writer per session)",
+                "{} delta(s) referenced a stale/unknown base plane (slot evicted \
+                 under the base_slots cap, or the client re-uploaded/advanced past \
+                 it — re-upload the base and resubmit)",
                 m.stale_deltas
             ));
         }
@@ -421,22 +611,25 @@ impl Handle {
             self.tx
                 .send(Msg::Req(Request { payload: Payload::Full(plane), submitted, resp: rtx }))
                 .map_err(|_| self.executor_gone_err())?;
-            self.metrics.on_submit(shipped); // only planes that actually reached the queue
+            // only planes that actually reached the queue
+            self.metrics.on_submit(None, shipped, false);
             receivers.push(rrx);
         }
         Ok(receivers)
     }
 
-    /// Upload (and cache) the delta base plane for subsequent
-    /// [`Handle::submit_batch_delta`] probes, replacing any previously
-    /// cached base.  Returns the base's content fingerprint — the key
-    /// every delta derived from this plane must carry.
+    /// Upload (and cache) `client`'s delta base plane for its
+    /// subsequent [`Handle::submit_delta`] /
+    /// [`Handle::submit_batch_delta`] calls, replacing that client's
+    /// previously cached base.  Returns the base's content fingerprint
+    /// — the key every delta derived from this plane must carry.
     ///
-    /// The cache holds one base per session: callers interleaving base
-    /// uploads from several threads will invalidate each other (their
-    /// deltas are then dropped as stale, never misapplied) — ship full
-    /// planes instead when the session is shared.
-    pub fn upload_base(&self, plane: Vec<f32>) -> Result<u64> {
+    /// Slots are per client, so concurrent delta writers on one session
+    /// do not invalidate each other; the slot map is bounded by
+    /// [`BatchPolicy::base_slots`], and a new client's upload into a
+    /// full map evicts the least-recently-used other slot (the evicted
+    /// client's next delta drops as stale and it re-uploads).
+    pub fn upload_base(&self, client: ClientId, plane: Vec<f32>) -> Result<u64> {
         if plane.len() != self.bucket.vars_len() {
             bail!(
                 "base plane has {} values, session bucket wants {}",
@@ -446,24 +639,26 @@ impl Handle {
         }
         let shipped = plane.len();
         let fp = crate::runtime::plane_fingerprint(&plane);
-        self.tx.send(Msg::Base { fp, plane }).map_err(|_| self.executor_gone_err())?;
-        self.metrics.on_base_upload(shipped);
+        self.tx.send(Msg::Base { client, fp, plane }).map_err(|_| self.executor_gone_err())?;
+        self.metrics.on_base_upload(client, shipped);
         Ok(fp)
     }
 
-    /// Submit a probe round in delta form: one [`ProbeDelta`] (edited
-    /// row) per probe, reconstructed executor-side against the base
-    /// cached by [`Handle::upload_base`].  Like
-    /// [`Handle::submit_batch`], the round is enqueued contiguously so
-    /// the dynamic batcher fuses it, and shape validation happens up
-    /// front, before anything is enqueued.  A delta whose base
-    /// fingerprint no longer matches the cache is dropped executor-side
-    /// (its receiver errors with a stale-base explanation).
+    /// Submit a probe round in delta form: one [`PlaneDelta`] per
+    /// probe, reconstructed executor-side against `client`'s cached
+    /// base — which is left **unchanged** (every probe edits the same
+    /// launch base).  Like [`Handle::submit_batch`], the round is
+    /// enqueued contiguously so the dynamic batcher fuses it, and shape
+    /// validation happens up front, before anything is enqueued.  A
+    /// delta whose base fingerprint no longer matches the client's slot
+    /// is dropped executor-side (its receiver errors with a stale-base
+    /// explanation).
     ///
     /// Returns one response receiver per delta, in submission order.
     pub fn submit_batch_delta(
         &self,
-        deltas: Vec<ProbeDelta>,
+        client: ClientId,
+        deltas: Vec<PlaneDelta>,
     ) -> Result<Vec<mpsc::Receiver<Response>>> {
         for (i, delta) in deltas.iter().enumerate() {
             delta.validate(self.bucket).with_context(|| format!("delta probe {i}"))?;
@@ -471,21 +666,69 @@ impl Handle {
         let submitted = Instant::now();
         let mut receivers = Vec::with_capacity(deltas.len());
         for delta in deltas {
-            let shipped = delta.row.len();
+            let shipped = delta.shipped_f32();
             let (rtx, rrx) = mpsc::channel();
             self.tx
-                .send(Msg::Req(Request { payload: Payload::Delta(delta), submitted, resp: rtx }))
+                .send(Msg::Req(Request {
+                    payload: Payload::Delta { client, delta, advance: false },
+                    submitted,
+                    resp: rtx,
+                }))
                 .map_err(|_| self.executor_gone_err())?;
-            self.metrics.on_submit(shipped); // a delta ships only its row
+            // a delta ships only its rows
+            self.metrics.on_submit(Some(client), shipped, true);
             receivers.push(rrx);
         }
         Ok(receivers)
     }
 
+    /// Submit one **chained** delta — the search-node shape: the plane
+    /// to enforce is `client`'s cached base with `delta.rows` replaced,
+    /// and after reconstruction the client's slot *advances* to that
+    /// plane, so the next call diffs against it
+    /// ([`PlaneDelta::diff`] between consecutive planes).  A search
+    /// worker therefore ships its base once and row diffs per node.
+    ///
+    /// If the slot was evicted or is out of sync the delta drops as
+    /// stale (the receiver errors); re-upload via
+    /// [`Handle::upload_base`] and resubmit — [`TensorEngine`] does
+    /// this fallback automatically.
+    ///
+    /// [`TensorEngine`]: crate::coordinator::TensorEngine
+    pub fn submit_delta(
+        &self,
+        client: ClientId,
+        delta: PlaneDelta,
+    ) -> Result<mpsc::Receiver<Response>> {
+        delta.validate(self.bucket).context("chained delta")?;
+        let shipped = delta.shipped_f32();
+        let (rtx, rrx) = mpsc::channel();
+        self.tx
+            .send(Msg::Req(Request {
+                payload: Payload::Delta { client, delta, advance: true },
+                submitted: Instant::now(),
+                resp: rtx,
+            }))
+            .map_err(|_| self.executor_gone_err())?;
+        self.metrics.on_submit(Some(client), shipped, true);
+        Ok(rrx)
+    }
+
+    /// Submit one chained delta ([`Handle::submit_delta`]) and block
+    /// for the response.
+    pub fn enforce_delta_blocking(&self, client: ClientId, delta: PlaneDelta) -> Result<Response> {
+        let rx = self.submit_delta(client, delta)?;
+        rx.recv().map_err(|_| self.dropped_err())
+    }
+
     /// Submit a delta probe round and block for every response, in
     /// order.
-    pub fn enforce_batch_delta_blocking(&self, deltas: Vec<ProbeDelta>) -> Result<Vec<Response>> {
-        self.submit_batch_delta(deltas)?
+    pub fn enforce_batch_delta_blocking(
+        &self,
+        client: ClientId,
+        deltas: Vec<PlaneDelta>,
+    ) -> Result<Vec<Response>> {
+        self.submit_batch_delta(client, deltas)?
             .into_iter()
             .enumerate()
             .map(|(i, rx)| {
@@ -494,6 +737,15 @@ impl Handle {
                     .with_context(|| format!("delta probe {i}"))
             })
             .collect()
+    }
+
+    /// `client`'s cumulative stale-delta count so far — what the delta
+    /// clients compare before/after a failed call to decide between
+    /// "my base went stale: re-upload and retry" and "the session is
+    /// gone: fail".  (A targeted counter read, not a full snapshot —
+    /// this sits on the per-enforcement hot path.)
+    pub fn client_stale_deltas(&self, client: ClientId) -> u64 {
+        self.metrics.client_stale_deltas(client)
     }
 
     /// Submit a probe batch and block for every response, in order.
@@ -553,7 +805,14 @@ impl Coordinator {
             .context("executor startup failed")?;
 
         Ok(Coordinator {
-            handle: Handle { tx, bucket, metrics, compiled_batches },
+            handle: Handle {
+                tx,
+                bucket,
+                metrics,
+                compiled_batches,
+                base_slots: config.policy.base_slots,
+                next_client: Arc::new(AtomicU64::new(0)),
+            },
             join: Some(join),
         })
     }
@@ -625,9 +884,10 @@ impl Drop for Coordinator {
 
 /// The shared session preamble of [`Coordinator::start`] and
 /// [`Coordinator::validate_policy`]: load the manifest, pick the shape
-/// bucket for `problem`, and reject a zero `max_batch` (which could
-/// never execute anything, for any caller).  Keeping this in one place
-/// guarantees validation and startup agree on the bucket.
+/// bucket for `problem`, and reject a zero `max_batch` or zero
+/// `base_slots` (neither could serve anything, for any caller).
+/// Keeping this in one place guarantees validation and startup agree on
+/// the bucket.
 fn pick_bucket(problem: &Problem, config: &CoordinatorConfig) -> Result<(Manifest, Bucket)> {
     let manifest = Manifest::load(&config.artifact_dir)?;
     let n = problem.n_vars();
@@ -638,6 +898,9 @@ fn pick_bucket(problem: &Problem, config: &CoordinatorConfig) -> Result<(Manifes
     let bucket = Bucket { n: entry.n, d: entry.d };
     if config.policy.max_batch == 0 {
         bail!("max_batch must be >= 1");
+    }
+    if config.policy.base_slots == 0 {
+        bail!("base_slots must be >= 1 (every delta client needs a resident base slot)");
     }
     Ok((manifest, bucket))
 }
@@ -677,8 +940,9 @@ fn send_ready<T>(ready_tx: &mpsc::Sender<Result<()>>, init: Result<T>) -> Option
     }
 }
 
-/// Executor main loop: owns all XLA state, plus the session's cached
-/// delta base plane (see the module docs for the cache rules).
+/// Executor main loop: owns all XLA state, plus the session's
+/// per-client delta base slots (see the module docs for the cache
+/// rules).
 fn executor_thread(
     config: CoordinatorConfig,
     bucket: Bucket,
@@ -713,16 +977,23 @@ fn executor_thread(
     let mut adaptive =
         if config.policy.adaptive { Some(AdaptiveBatcher::new(&config.policy)) } else { None };
     let mut pending: Vec<Request> = Vec::new();
-    // the session's cached delta base (fingerprint, plane) — one slot,
-    // replaced on every Msg::Base (see the module docs)
-    let mut base: Option<(u64, Vec<f32>)> = None;
+    // the session's per-client delta base slots, LRU-bounded by the
+    // policy cap (see the module docs)
+    let mut slots = BaseSlots::new(config.policy.base_slots);
+    let apply_base = |slots: &mut BaseSlots, client: ClientId, fp: u64, plane: Vec<f32>| {
+        if slots.insert(client, fp, plane) {
+            metrics.on_base_evicted();
+        }
+    };
     loop {
         // 1. block for the first request (or shut down); base uploads
         // are applied inline — they never open a batching window
         while pending.is_empty() {
             match rx.recv() {
                 Ok(Msg::Req(r)) => pending.push(r),
-                Ok(Msg::Base { fp, plane }) => base = Some((fp, plane)),
+                Ok(Msg::Base { client, fp, plane }) => {
+                    apply_base(&mut slots, client, fp, plane)
+                }
                 Err(_) => return, // all handles dropped
             }
         }
@@ -736,7 +1007,9 @@ fn executor_thread(
         while pending.len() < max_batch {
             match rx.try_recv() {
                 Ok(Msg::Req(r)) => pending.push(r),
-                Ok(Msg::Base { fp, plane }) => base = Some((fp, plane)),
+                Ok(Msg::Base { client, fp, plane }) => {
+                    apply_base(&mut slots, client, fp, plane)
+                }
                 Err(_) => break,
             }
         }
@@ -750,7 +1023,9 @@ fn executor_thread(
                 }
                 match rx.recv_timeout(deadline - now) {
                     Ok(Msg::Req(r)) => pending.push(r),
-                    Ok(Msg::Base { fp, plane }) => base = Some((fp, plane)),
+                    Ok(Msg::Base { client, fp, plane }) => {
+                        apply_base(&mut slots, client, fp, plane)
+                    }
                     Err(mpsc::RecvTimeoutError::Timeout) => break,
                     Err(mpsc::RecvTimeoutError::Disconnected) => break,
                 }
@@ -760,28 +1035,30 @@ fn executor_thread(
             a.observe(pending.len());
         }
         // 3. take up to the largest compiled capacity off the queue and
-        // resolve each payload (reconstructing delta probes against the
-        // cached base).  A delta whose base is stale/unknown is dropped
-        // here — its responder goes away and the client sees a clear
-        // stale-base error backed by the metrics.
+        // resolve each payload (reconstructing deltas against the
+        // submitting client's base slot).  A delta whose base is
+        // stale/evicted/unknown is dropped here — its responder goes
+        // away and the client sees a clear stale-base error backed by
+        // the per-client metrics.
         let take = pending.len().min(compiled_max);
         let mut planes: Vec<Vec<f32>> = Vec::with_capacity(take);
-        let mut served: Vec<(Instant, mpsc::Sender<Response>)> = Vec::with_capacity(take);
+        let mut served: Vec<(Instant, mpsc::Sender<Response>, Option<ClientId>)> =
+            Vec::with_capacity(take);
         for r in pending.drain(..take) {
-            match resolve_payload(r.payload, base.as_ref(), bucket) {
+            let client = r.payload.client();
+            match resolve_payload(r.payload, &mut slots, bucket) {
                 Some(plane) => {
                     planes.push(plane);
-                    served.push((r.submitted, r.resp));
+                    served.push((r.submitted, r.resp, client));
                 }
                 None => {
-                    metrics.on_stale_delta();
+                    let client = client.expect("only deltas can fail to resolve");
+                    metrics.on_stale_delta(client);
                     eprintln!(
-                        "rtac-executor: dropping delta probe against a stale/unknown \
-                         base plane (cached: {})",
-                        match &base {
-                            Some((fp, _)) => format!("{fp:016x}"),
-                            None => "none".into(),
-                        }
+                        "rtac-executor: dropping delta from client {client} against a \
+                         stale/evicted/unknown base plane ({} of {} slots resident)",
+                        slots.len(),
+                        config.policy.base_slots,
                     );
                 }
             }
@@ -819,7 +1096,7 @@ fn executor_thread(
         match result {
             Ok(out) => {
                 metrics.on_batch(real, capacity, exec);
-                for (i, (submitted, resp_tx)) in served.into_iter().enumerate() {
+                for (i, (submitted, resp_tx, client)) in served.into_iter().enumerate() {
                     let queue = t_exec.duration_since(submitted);
                     let total = submitted.elapsed();
                     let resp = Response {
@@ -831,7 +1108,7 @@ fn executor_thread(
                         queue_time: queue,
                         total_time: total,
                     };
-                    metrics.on_response(queue, total, out.iters, resp.wiped());
+                    metrics.on_response(client, queue, total, out.iters, resp.wiped());
                     let _ = resp_tx.send(resp); // receiver may have gone
                 }
             }
@@ -839,7 +1116,9 @@ fn executor_thread(
                 // drop the responders: receivers see a clear dropped-
                 // request error from `Handle` (backed by these counters);
                 // log once on this side.
-                metrics.on_batch_failed(real);
+                let dropped: Vec<Option<ClientId>> =
+                    served.iter().map(|(_, _, client)| *client).collect();
+                metrics.on_batch_failed(&dropped);
                 eprintln!(
                     "rtac-executor: fused execution {name} failed ({real} request(s) \
                      dropped): {e:#}"
@@ -875,6 +1154,7 @@ mod tests {
         let p = BatchPolicy::default();
         assert!(p.max_batch >= 1);
         assert!(p.max_wait < Duration::from_millis(10));
+        assert!(p.base_slots >= 1);
     }
 
     fn handle_at(bucket: Bucket) -> (Handle, mpsc::Receiver<Msg>) {
@@ -884,6 +1164,8 @@ mod tests {
             bucket,
             metrics: Arc::new(Metrics::new()),
             compiled_batches: vec![1, 2, 4],
+            base_slots: BatchPolicy::default().base_slots,
+            next_client: Arc::new(AtomicU64::new(0)),
         };
         (handle, rx)
     }
@@ -904,8 +1186,67 @@ mod tests {
     fn full_plane(payload: Payload) -> Vec<f32> {
         match payload {
             Payload::Full(p) => p,
-            Payload::Delta(_) => panic!("expected a full plane, got a delta"),
+            Payload::Delta { .. } => panic!("expected a full plane, got a delta"),
         }
+    }
+
+    // ---- base-slot map (cap + LRU) --------------------------------------
+
+    #[test]
+    fn base_slots_replace_within_client_and_evict_lru_across_clients() {
+        let (a, b, c) = (ClientId::test(0), ClientId::test(1), ClientId::test(2));
+        let mut slots = BaseSlots::new(2);
+        assert!(!slots.insert(a, 1, vec![1.0]));
+        assert!(!slots.insert(b, 2, vec![2.0]));
+        assert_eq!(slots.len(), 2);
+        // same-client re-upload replaces in place: no eviction
+        assert!(!slots.insert(a, 3, vec![3.0]));
+        assert_eq!(slots.len(), 2);
+        assert_eq!(slots.get(a).map(|(_, fp, _)| *fp), Some(3));
+        assert_eq!(slots.get(b).map(|(_, fp, _)| *fp), Some(2));
+        // a third client under cap 2 evicts the LRU (a: touched less
+        // recently than b just above)
+        assert!(slots.insert(c, 4, vec![4.0]));
+        assert_eq!(slots.len(), 2);
+        assert!(slots.get(a).is_none(), "LRU slot must be gone");
+        assert_eq!(slots.get(b).map(|(_, fp, _)| *fp), Some(2));
+        assert_eq!(slots.get(c).map(|(_, fp, _)| *fp), Some(4));
+    }
+
+    #[test]
+    fn base_slots_get_refreshes_recency() {
+        let (a, b, c) = (ClientId::test(0), ClientId::test(1), ClientId::test(2));
+        let mut slots = BaseSlots::new(2);
+        slots.insert(a, 1, vec![1.0]);
+        slots.insert(b, 2, vec![2.0]);
+        // touch a: b becomes the LRU
+        assert!(slots.get(a).is_some());
+        assert!(slots.insert(c, 3, vec![3.0]), "insert over a full map must evict");
+        assert!(slots.get(b).is_none(), "the untouched slot is the one evicted");
+        assert!(slots.get(a).is_some());
+    }
+
+    #[test]
+    fn base_slots_zero_cap_clamps_to_one() {
+        let a = ClientId::test(0);
+        let mut slots = BaseSlots::new(0);
+        slots.insert(a, 1, vec![1.0]);
+        assert_eq!(slots.len(), 1);
+        assert!(slots.get(a).is_some());
+    }
+
+    // ---- client-side submission paths -----------------------------------
+
+    #[test]
+    fn attach_issues_unique_ids_across_handle_clones() {
+        let (h, _rx) = test_handle();
+        let h2 = h.clone();
+        let mut seen = std::collections::HashSet::new();
+        for _ in 0..4 {
+            assert!(seen.insert(h.attach()));
+            assert!(seen.insert(h2.attach()));
+        }
+        assert_eq!(seen.len(), 8, "ids must be session-unique, not per-clone");
     }
 
     #[test]
@@ -931,6 +1272,7 @@ mod tests {
         let m = h.metrics.snapshot();
         assert_eq!(m.requests, 3);
         assert_eq!(m.shipped_f32, 3 * len as u64);
+        assert!(m.clients.is_empty(), "full planes are unattributed");
     }
 
     // ---- delta protocol (client side + payload resolution) -------------
@@ -939,13 +1281,14 @@ mod tests {
     fn submit_batch_delta_validates_before_enqueuing_anything() {
         let (h, rx) = test_handle();
         let d = h.bucket.d;
+        let client = h.attach();
         let base = vec![1.0; h.bucket.vars_len()];
         let fp = crate::runtime::plane_fingerprint(&base);
         let bad = vec![
-            ProbeDelta::singleton(fp, 0, 0, h.bucket),
-            ProbeDelta { base_fp: fp, var: 0, row: vec![1.0; d + 1] },
+            PlaneDelta::singleton(fp, 0, 0, h.bucket),
+            PlaneDelta { base_fp: fp, rows: vec![(0, vec![1.0; d + 1])] },
         ];
-        let err = h.submit_batch_delta(bad).unwrap_err();
+        let err = h.submit_batch_delta(client, bad).unwrap_err();
         assert!(format!("{err:#}").contains("delta probe 1"), "{err:#}");
         assert!(rx.try_recv().is_err(), "no delta may be enqueued on a rejected batch");
         assert_eq!(h.metrics.snapshot().requests, 0);
@@ -955,18 +1298,20 @@ mod tests {
     fn upload_base_ships_once_and_deltas_ship_only_rows() {
         let (h, rx) = test_handle();
         let len = h.bucket.vars_len();
+        let client = h.attach();
         let base = vec![1.0; len];
-        let fp = h.upload_base(base.clone()).unwrap();
+        let fp = h.upload_base(client, base.clone()).unwrap();
         assert_eq!(fp, crate::runtime::plane_fingerprint(&base));
         let deltas = vec![
-            ProbeDelta::singleton(fp, 0, 1, h.bucket),
-            ProbeDelta::singleton(fp, 1, 0, h.bucket),
+            PlaneDelta::singleton(fp, 0, 1, h.bucket),
+            PlaneDelta::singleton(fp, 1, 0, h.bucket),
         ];
-        let receivers = h.submit_batch_delta(deltas).unwrap();
+        let receivers = h.submit_batch_delta(client, deltas).unwrap();
         assert_eq!(receivers.len(), 2);
         // queue order: base first, then the deltas
         match rx.try_recv().unwrap() {
-            Msg::Base { fp: got_fp, plane } => {
+            Msg::Base { client: got_client, fp: got_fp, plane } => {
+                assert_eq!(got_client, client);
                 assert_eq!(got_fp, fp);
                 assert_eq!(plane, base);
             }
@@ -974,32 +1319,135 @@ mod tests {
         }
         for _ in 0..2 {
             let req = expect_req(rx.try_recv().unwrap());
-            assert!(matches!(req.payload, Payload::Delta(_)));
+            match req.payload {
+                Payload::Delta { client: c, advance, .. } => {
+                    assert_eq!(c, client);
+                    assert!(!advance, "probe rounds must not advance the slot");
+                }
+                Payload::Full(_) => panic!("expected deltas"),
+            }
         }
         let m = h.metrics.snapshot();
         assert_eq!(m.base_uploads, 1);
         assert_eq!(m.requests, 2, "a base upload is not a request");
+        assert_eq!(m.delta_requests, 2);
         // one full plane + two rows, instead of three full planes
         assert_eq!(m.shipped_f32, (len + 2 * h.bucket.d) as u64);
+        // mirrored on the client's own row
+        let c = m.client(client.id()).unwrap();
+        assert_eq!(c.base_uploads, 1);
+        assert_eq!(c.delta_requests, 2);
+        assert_eq!(c.shipped_f32, (len + 2 * h.bucket.d) as u64);
     }
 
     #[test]
-    fn resolve_payload_reconstructs_matching_deltas_and_refuses_stale_ones() {
+    fn submit_delta_marks_the_chain_advance() {
+        let (h, rx) = test_handle();
+        let client = h.attach();
+        let base = vec![1.0; h.bucket.vars_len()];
+        let fp = h.upload_base(client, base).unwrap();
+        let _rx_resp = h.submit_delta(client, PlaneDelta::empty(fp)).unwrap();
+        let _ = rx.try_recv().unwrap(); // the base
+        let req = expect_req(rx.try_recv().unwrap());
+        match req.payload {
+            Payload::Delta { advance, .. } => assert!(advance, "search deltas must chain"),
+            Payload::Full(_) => panic!("expected a delta"),
+        }
+        let m = h.metrics.snapshot();
+        assert_eq!(m.delta_requests, 1);
+        assert_eq!(m.shipped_f32, (h.bucket.vars_len()) as u64, "an empty delta ships 0 rows");
+    }
+
+    #[test]
+    fn resolve_payload_reconstructs_per_client_and_refuses_stale_ones() {
         let bucket = Bucket { n: 2, d: 2 };
-        let base = vec![1.0, 1.0, 1.0, 0.0];
-        let fp = crate::runtime::plane_fingerprint(&base);
-        let cached = Some((fp, base.clone()));
+        let (a, b) = (ClientId::test(0), ClientId::test(1));
+        let base_a = vec![1.0, 1.0, 1.0, 0.0];
+        let base_b = vec![1.0, 0.0, 1.0, 1.0];
+        let fp_a = crate::runtime::plane_fingerprint(&base_a);
+        let fp_b = crate::runtime::plane_fingerprint(&base_b);
+        let mut slots = BaseSlots::new(4);
+        slots.insert(a, fp_a, base_a.clone());
+        slots.insert(b, fp_b, base_b.clone());
         // full planes pass through untouched
-        let full = resolve_payload(Payload::Full(vec![0.5; 4]), cached.as_ref(), bucket);
+        let full = resolve_payload(Payload::Full(vec![0.5; 4]), &mut slots, bucket);
         assert_eq!(full, Some(vec![0.5; 4]));
-        // a matching delta reconstructs base + row edit
-        let delta = ProbeDelta::singleton(fp, 0, 1, bucket);
-        let got = resolve_payload(Payload::Delta(delta.clone()), cached.as_ref(), bucket);
+        // each client's delta resolves against ITS base
+        let delta_a = PlaneDelta::singleton(fp_a, 0, 1, bucket);
+        let got = resolve_payload(
+            Payload::Delta { client: a, delta: delta_a.clone(), advance: false },
+            &mut slots,
+            bucket,
+        );
         assert_eq!(got, Some(vec![0.0, 1.0, 1.0, 0.0]));
-        // no cached base, or a different fingerprint: refused
-        assert_eq!(resolve_payload(Payload::Delta(delta.clone()), None, bucket), None);
-        let other = Some((fp ^ 1, base));
-        assert_eq!(resolve_payload(Payload::Delta(delta), other.as_ref(), bucket), None);
+        let delta_b = PlaneDelta::singleton(fp_b, 1, 0, bucket);
+        let got = resolve_payload(
+            Payload::Delta { client: b, delta: delta_b, advance: false },
+            &mut slots,
+            bucket,
+        );
+        assert_eq!(got, Some(vec![1.0, 0.0, 1.0, 0.0]));
+        // a's delta against b's slot (cross-client): refused
+        let got = resolve_payload(
+            Payload::Delta { client: b, delta: delta_a.clone(), advance: false },
+            &mut slots,
+            bucket,
+        );
+        assert_eq!(got, None, "a fingerprint must only match its own client's slot");
+        // unknown client: refused
+        let got = resolve_payload(
+            Payload::Delta { client: ClientId::test(9), delta: delta_a, advance: false },
+            &mut slots,
+            bucket,
+        );
+        assert_eq!(got, None);
+    }
+
+    #[test]
+    fn resolve_payload_advance_chains_the_slot() {
+        let bucket = Bucket { n: 2, d: 2 };
+        let a = ClientId::test(0);
+        let base = vec![1.0, 1.0, 1.0, 1.0];
+        let fp = crate::runtime::plane_fingerprint(&base);
+        let mut slots = BaseSlots::new(2);
+        slots.insert(a, fp, base.clone());
+        // step 1: advance to base-with-row-0-assigned
+        let step1 = PlaneDelta::singleton(fp, 0, 0, bucket);
+        let plane1 = resolve_payload(
+            Payload::Delta { client: a, delta: step1.clone(), advance: true },
+            &mut slots,
+            bucket,
+        )
+        .unwrap();
+        assert_eq!(plane1, vec![1.0, 0.0, 1.0, 1.0]);
+        // the slot advanced: the ORIGINAL fingerprint is now stale...
+        let stale = resolve_payload(
+            Payload::Delta { client: a, delta: step1, advance: true },
+            &mut slots,
+            bucket,
+        );
+        assert_eq!(stale, None, "after an advance the old fp must be stale");
+        // ...and a delta against the advanced plane resolves
+        let fp1 = crate::runtime::plane_fingerprint(&plane1);
+        let step2 = PlaneDelta::singleton(fp1, 1, 1, bucket);
+        let plane2 = resolve_payload(
+            Payload::Delta { client: a, delta: step2, advance: true },
+            &mut slots,
+            bucket,
+        )
+        .unwrap();
+        assert_eq!(plane2, vec![1.0, 0.0, 0.0, 1.0]);
+        // non-advancing rounds leave the chain head in place
+        let fp2 = crate::runtime::plane_fingerprint(&plane2);
+        let probe = PlaneDelta::singleton(fp2, 0, 1, bucket);
+        for _ in 0..2 {
+            let got = resolve_payload(
+                Payload::Delta { client: a, delta: probe.clone(), advance: false },
+                &mut slots,
+                bucket,
+            );
+            assert_eq!(got, Some(vec![0.0, 1.0, 0.0, 1.0]), "probes must not move the base");
+        }
     }
 
     // ---- startup fence -------------------------------------------------
@@ -1049,7 +1497,7 @@ mod tests {
             // fake executor: receive one request, fail its "execution",
             // drop the responder without answering, then exit.
             let req = expect_req(rx.recv().unwrap());
-            metrics.on_batch_failed(1);
+            metrics.on_batch_failed(&[None]);
             drop(req);
             drop(rx);
         });
@@ -1080,10 +1528,10 @@ mod tests {
                 total_time: Duration::ZERO,
             };
             metrics.on_batch(1, 4, Duration::from_micros(5));
-            metrics.on_response(Duration::ZERO, Duration::ZERO, 1, false);
+            metrics.on_response(None, Duration::ZERO, Duration::ZERO, 1, false);
             let _ = req.resp.send(resp);
             let second = rx.recv().unwrap();
-            metrics.on_batch_failed(1);
+            metrics.on_batch_failed(&[None]);
             drop(second);
             drop(rx);
         });
@@ -1115,11 +1563,11 @@ mod tests {
                 let req = expect_req(msg);
                 if served == 3 {
                     // fourth request: its fused execution "fails"
-                    thread_metrics.on_batch_failed(1);
+                    thread_metrics.on_batch_failed(&[None]);
                     drop(req);
                 } else {
                     thread_metrics.on_batch(1, 1, Duration::from_micros(3));
-                    thread_metrics.on_response(Duration::ZERO, Duration::ZERO, 1, false);
+                    thread_metrics.on_response(None, Duration::ZERO, Duration::ZERO, 1, false);
                     let resp = Response {
                         plane: full_plane(req.payload),
                         status: 0,
@@ -1152,31 +1600,37 @@ mod tests {
 
     /// A stand-in executor thread that serves the session protocol with
     /// the native CPU engine instead of XLA: each request's payload is
-    /// resolved exactly like the real executor (same [`resolve_payload`]),
-    /// decoded, enforced with dense RTAC, and re-encoded.  Lets the
-    /// delta protocol — and clients built on it — run end-to-end with no
+    /// resolved exactly like the real executor (same [`resolve_payload`]
+    /// over the same [`BaseSlots`]), decoded, enforced with dense RTAC,
+    /// and re-encoded.  Lets the delta protocol — and clients built on
+    /// it, up to whole parallel searches — run end-to-end with no
     /// compiled artifacts.
     fn cpu_reference_executor(
         problem: crate::core::Problem,
         bucket: Bucket,
+        base_slots: usize,
         rx: mpsc::Receiver<Msg>,
         metrics: Arc<Metrics>,
     ) -> std::thread::JoinHandle<()> {
         std::thread::spawn(move || {
             use crate::ac::{rtac::RtacNative, Counters, Propagator};
             use crate::runtime::{decode_vars, encode_vars};
-            let mut base: Option<(u64, Vec<f32>)> = None;
+            let mut slots = BaseSlots::new(base_slots);
             let mut engine = RtacNative::dense();
             while let Ok(msg) = rx.recv() {
                 let req = match msg {
-                    Msg::Base { fp, plane } => {
-                        base = Some((fp, plane));
+                    Msg::Base { client, fp, plane } => {
+                        if slots.insert(client, fp, plane) {
+                            metrics.on_base_evicted();
+                        }
                         continue;
                     }
                     Msg::Req(r) => r,
                 };
-                let Some(plane) = resolve_payload(req.payload, base.as_ref(), bucket) else {
-                    metrics.on_stale_delta();
+                let client = req.payload.client();
+                let Some(plane) = resolve_payload(req.payload, &mut slots, bucket) else {
+                    let client = client.expect("only deltas can fail to resolve");
+                    metrics.on_stale_delta(client);
                     continue; // responder dropped, like the real executor
                 };
                 let mut state = crate::core::State::new(&problem);
@@ -1188,6 +1642,7 @@ mod tests {
                 let out_plane = encode_vars(&problem, &state, bucket).expect("fits the bucket");
                 metrics.on_batch(1, 1, Duration::from_micros(1));
                 metrics.on_response(
+                    client,
                     Duration::ZERO,
                     Duration::ZERO,
                     c.recurrences as i32,
@@ -1206,14 +1661,27 @@ mod tests {
         })
     }
 
-    /// Session fixture around [`cpu_reference_executor`].
+    /// Session fixture around [`cpu_reference_executor`] with an
+    /// explicit base-slot cap (mirrored onto the handle, like
+    /// `Coordinator::start` does from the policy).
+    fn reference_session_with_slots(
+        problem: &crate::core::Problem,
+        bucket: Bucket,
+        base_slots: usize,
+    ) -> (Handle, std::thread::JoinHandle<()>) {
+        let (mut h, rx) = handle_at(bucket);
+        h.base_slots = base_slots;
+        let join =
+            cpu_reference_executor(problem.clone(), bucket, base_slots, rx, h.metrics.clone());
+        (h, join)
+    }
+
+    /// Session fixture at the default slot cap.
     fn reference_session(
         problem: &crate::core::Problem,
         bucket: Bucket,
     ) -> (Handle, std::thread::JoinHandle<()>) {
-        let (h, rx) = handle_at(bucket);
-        let join = cpu_reference_executor(problem.clone(), bucket, rx, h.metrics.clone());
-        (h, join)
+        reference_session_with_slots(problem, bucket, BatchPolicy::default().base_slots)
     }
 
     #[test]
@@ -1241,23 +1709,25 @@ mod tests {
 
         // delta round on a second session (separate metrics)
         let (h_delta, j_delta) = reference_session(&p, bucket);
-        let fp = h_delta.upload_base(base.clone()).unwrap();
-        let deltas: Vec<ProbeDelta> =
-            probes.iter().map(|&(x, a)| ProbeDelta::singleton(fp, x, a, bucket)).collect();
-        let delta = h_delta.enforce_batch_delta_blocking(deltas).unwrap();
+        let client = h_delta.attach();
+        let fp = h_delta.upload_base(client, base.clone()).unwrap();
+        let deltas: Vec<PlaneDelta> =
+            probes.iter().map(|&(x, a)| PlaneDelta::singleton(fp, x, a, bucket)).collect();
+        let delta = h_delta.enforce_batch_delta_blocking(client, deltas).unwrap();
 
         assert_eq!(full.len(), delta.len());
         for (i, (f, d)) in full.iter().zip(&delta).enumerate() {
             assert_eq!(f.status, d.status, "probe {i}");
             assert_eq!(f.plane, d.plane, "probe {i}: reconstruction must be exact");
         }
-        // the tentpole's point: the delta round ships one plane + K rows
+        // the delta round ships one plane + K rows
         let m_full = h_full.metrics.snapshot();
         let m_delta = h_delta.metrics.snapshot();
         assert_eq!(m_full.shipped_f32, (3 * bucket.vars_len()) as u64);
         assert_eq!(m_delta.shipped_f32, (bucket.vars_len() + 3 * bucket.d) as u64);
         assert!(m_delta.shipped_f32 < m_full.shipped_f32);
         assert!(m_full.conserved() && m_delta.conserved());
+        assert!(m_delta.clients_conserved());
         drop(h_full);
         drop(h_delta);
         j_full.join().unwrap();
@@ -1265,36 +1735,267 @@ mod tests {
     }
 
     #[test]
-    fn base_reupload_invalidates_previous_deltas() {
+    fn base_reupload_invalidates_own_slot_only() {
         use crate::gen::random::{random_csp, RandomSpec};
         use crate::runtime::encode_vars;
         let bucket = Bucket { n: 8, d: 4 };
         let p = random_csp(&RandomSpec::new(5, 4, 0.5, 0.3, 7));
         let (h, join) = reference_session(&p, bucket);
+        let writer = h.attach();
+        let bystander = h.attach();
         let s = crate::core::State::new(&p);
         let base_a = encode_vars(&p, &s, bucket).unwrap();
-        let fp_a = h.upload_base(base_a.clone()).unwrap();
-        // a second upload replaces the cache (different content)
+        let fp_a = h.upload_base(writer, base_a.clone()).unwrap();
+        // the bystander caches the same content under ITS OWN slot
+        let fp_by = h.upload_base(bystander, base_a.clone()).unwrap();
+        assert_eq!(fp_a, fp_by, "fingerprints are content-keyed");
+        // the writer re-uploads different content: only ITS slot moves
         let mut s_b = s.clone();
         s_b.remove(1, 1);
         let base_b = encode_vars(&p, &s_b, bucket).unwrap();
-        let fp_b = h.upload_base(base_b).unwrap();
+        let fp_b = h.upload_base(writer, base_b).unwrap();
         assert_ne!(fp_a, fp_b);
-        // deltas against the OLD base must be dropped with a clear error
+        // writer deltas against the OLD base must be dropped with a
+        // clear error...
         let err = h
-            .enforce_batch_delta_blocking(vec![ProbeDelta::singleton(fp_a, 0, 0, bucket)])
+            .enforce_batch_delta_blocking(writer, vec![PlaneDelta::singleton(fp_a, 0, 0, bucket)])
             .unwrap_err();
         let msg = format!("{err:#}");
         assert!(msg.contains("stale"), "unhelpful stale-delta error: {msg}");
-        // deltas against the CURRENT base are served
+        // ...while the bystander's same-fingerprint delta still serves
+        // (per-client slots: no cross-invalidation)
         let ok = h
-            .enforce_batch_delta_blocking(vec![ProbeDelta::singleton(fp_b, 0, 0, bucket)])
+            .enforce_batch_delta_blocking(
+                bystander,
+                vec![PlaneDelta::singleton(fp_by, 0, 0, bucket)],
+            )
+            .unwrap();
+        assert_eq!(ok.len(), 1);
+        // and the writer's CURRENT base serves too
+        let ok = h
+            .enforce_batch_delta_blocking(writer, vec![PlaneDelta::singleton(fp_b, 0, 0, bucket)])
             .unwrap();
         assert_eq!(ok.len(), 1);
         let m = h.metrics.snapshot();
         assert_eq!(m.stale_deltas, 1);
-        assert_eq!(m.base_uploads, 2);
+        assert_eq!(m.base_uploads, 3);
         assert!(m.conserved(), "stale delta must be accounted as dropped: {m:?}");
+        assert!(m.clients_conserved(), "{m:?}");
+        let mw = m.client(writer.id()).unwrap();
+        assert_eq!(mw.stale_deltas, 1);
+        assert_eq!(mw.base_uploads, 2);
+        let mb = m.client(bystander.id()).unwrap();
+        assert_eq!(mb.stale_deltas, 0, "the bystander must never see a stale drop");
+        drop(h);
+        join.join().unwrap();
+    }
+
+    #[test]
+    fn eviction_under_cap_drops_the_lru_writer_and_conserves() {
+        use crate::gen::random::{random_csp, RandomSpec};
+        use crate::runtime::encode_vars;
+        let bucket = Bucket { n: 8, d: 4 };
+        let p = random_csp(&RandomSpec::new(5, 4, 0.5, 0.3, 19));
+        // ONE base slot: the second client's upload evicts the first's
+        let (h, join) = reference_session_with_slots(&p, bucket, 1);
+        let (a, b) = (h.attach(), h.attach());
+        let s = crate::core::State::new(&p);
+        let base = encode_vars(&p, &s, bucket).unwrap();
+        let fp_a = h.upload_base(a, base.clone()).unwrap();
+        // a's delta serves while its slot is resident
+        assert_eq!(
+            h.enforce_batch_delta_blocking(a, vec![PlaneDelta::singleton(fp_a, 0, 0, bucket)])
+                .unwrap()
+                .len(),
+            1
+        );
+        // b's upload evicts a (cap 1)
+        let fp_b = h.upload_base(b, base.clone()).unwrap();
+        let err = h
+            .enforce_batch_delta_blocking(a, vec![PlaneDelta::singleton(fp_a, 0, 0, bucket)])
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("stale"), "{err:#}");
+        // b serves; a re-uploads and serves again — degradation, not a
+        // dead end
+        assert_eq!(
+            h.enforce_batch_delta_blocking(b, vec![PlaneDelta::singleton(fp_b, 1, 0, bucket)])
+                .unwrap()
+                .len(),
+            1
+        );
+        let fp_a2 = h.upload_base(a, base).unwrap();
+        assert_eq!(
+            h.enforce_batch_delta_blocking(a, vec![PlaneDelta::singleton(fp_a2, 2, 0, bucket)])
+                .unwrap()
+                .len(),
+            1
+        );
+        let m = h.metrics.snapshot();
+        assert!(m.base_evictions >= 2, "evictions must be counted: {m:?}");
+        assert_eq!(m.stale_deltas, 1);
+        assert!(m.conserved() && m.clients_conserved(), "{m:?}");
+        let ma = m.client(a.id()).unwrap();
+        assert_eq!(ma.stale_deltas, 1);
+        assert_eq!(ma.base_uploads, 2, "the evicted writer re-uploaded once");
+        assert!(ma.delta_hit_rate() < 1.0);
+        let mb = m.client(b.id()).unwrap();
+        assert_eq!(mb.stale_deltas, 0);
+        drop(h);
+        join.join().unwrap();
+    }
+
+    #[test]
+    fn two_concurrent_delta_clients_never_cross_invalidate() {
+        // the tentpole's multi-writer e2e, offline: two threads each
+        // drive their own delta-shipping TensorEngine over ONE session
+        // (interleaved uploads + chained deltas at the executor queue),
+        // and every enforcement must equal the native closure computed
+        // on the same states — with zero stale drops, because the slots
+        // are per client.
+        use crate::ac::{rtac::RtacNative, Counters, Propagator};
+        use crate::coordinator::TensorEngine;
+        use crate::gen::random::{random_csp, RandomSpec};
+        let bucket = Bucket { n: 8, d: 4 };
+        let p = random_csp(&RandomSpec::new(6, 4, 0.7, 0.4, 31));
+        let (h, join) = reference_session(&p, bucket);
+        std::thread::scope(|scope| {
+            for t in 0..2u64 {
+                let handle = h.clone();
+                let problem = &p;
+                scope.spawn(move || {
+                    let mut engine = TensorEngine::new(handle);
+                    for round in 0..4u64 {
+                        // per-thread, per-round launch states (distinct
+                        // across threads so the chains diverge)
+                        let mut s = crate::core::State::new(problem);
+                        let x = ((t + round) % problem.n_vars() as u64) as usize;
+                        let a = (t % problem.dom_size(x) as u64) as usize;
+                        s.assign(x, a);
+                        let mut c = Counters::default();
+                        let out = engine.enforce(problem, &mut s, &[], &mut c);
+                        assert!(engine.failed.is_none(), "t{t} r{round}: {:?}", engine.failed);
+                        // native reference on the same launch state
+                        let mut s_ref = crate::core::State::new(problem);
+                        s_ref.assign(x, a);
+                        let mut c_ref = Counters::default();
+                        let out_ref =
+                            RtacNative::dense().enforce(problem, &mut s_ref, &[], &mut c_ref);
+                        assert_eq!(
+                            out.is_consistent(),
+                            out_ref.is_consistent(),
+                            "t{t} r{round}"
+                        );
+                        if out.is_consistent() {
+                            assert_eq!(s.snapshot(), s_ref.snapshot(), "t{t} r{round}");
+                        }
+                    }
+                });
+            }
+        });
+        let m = h.metrics.snapshot();
+        assert_eq!(m.stale_deltas, 0, "per-client slots must not cross-invalidate: {m:?}");
+        assert_eq!(m.base_evictions, 0);
+        assert_eq!(m.clients.len(), 2, "each engine attached its own client");
+        assert!(m.conserved() && m.clients_conserved(), "{m:?}");
+        for c in &m.clients {
+            assert!(c.base_uploads >= 1, "every writer ships its base once: {c:?}");
+            assert_eq!(c.delta_hit_rate(), 1.0, "{c:?}");
+        }
+        drop(h);
+        join.join().unwrap();
+    }
+
+    #[test]
+    fn search_run_ships_one_base_then_row_diffs() {
+        // the acceptance criterion, offline: a K-node MAC search over a
+        // delta-shipping tensor worker moves 1 base plane + per-node row
+        // diffs — strictly less f32 volume than the full-plane baseline
+        // on the same search, with identical results.
+        use crate::search::parallel::{solve_parallel_with, WorkerEngine};
+        use crate::search::solver::{SolveResult, SolverConfig};
+        let bucket = Bucket { n: 8, d: 8 };
+        let p = crate::gen::queens(6);
+
+        // ONE worker: the search is deterministic, so both modes visit
+        // the same nodes and the volumes compare like for like (the
+        // multi-writer side is covered by the two-client tests)
+        let run = |engine: WorkerEngine| {
+            let (h, join) = reference_session(&p, bucket);
+            let out =
+                solve_parallel_with(&p, &h, &SolverConfig::default(), 0, 1, engine).unwrap();
+            let m = h.metrics.snapshot();
+            drop(h);
+            join.join().unwrap();
+            (out, m)
+        };
+
+        let (out_full, m_full) = run(WorkerEngine::TensorFull);
+        let (out_delta, m_delta) = run(WorkerEngine::Tensor);
+        match (&out_full.result, &out_delta.result) {
+            (SolveResult::Sat(a), SolveResult::Sat(b)) => {
+                assert!(p.satisfies(a) && p.satisfies(b));
+            }
+            (f, d) => panic!("queens(6) must be SAT on both modes: {f:?} vs {d:?}"),
+        }
+        // the same searched planes, radically less volume
+        assert!(m_delta.requests >= 4, "a real multi-node search ran: {m_delta:?}");
+        assert!(
+            m_delta.shipped_f32 < m_full.shipped_f32,
+            "delta search must ship strictly less ({} vs {} f32)",
+            m_delta.shipped_f32,
+            m_full.shipped_f32
+        );
+        assert_eq!(m_full.base_uploads, 0);
+        assert_eq!(m_full.delta_requests, 0);
+        // same deterministic search in both modes
+        assert_eq!(m_delta.requests, m_full.requests, "modes must visit the same nodes");
+        assert_eq!(m_delta.clients.len(), 1, "one client for the one worker");
+        for c in &m_delta.clients {
+            assert_eq!(c.base_uploads, 1, "base once, then diffs: {c:?}");
+            assert_eq!(c.stale_deltas, 0, "{c:?}");
+            assert_eq!(c.delta_hit_rate(), 1.0);
+        }
+        assert_eq!(m_delta.stale_deltas, 0);
+        assert!(m_full.conserved() && m_delta.conserved());
+        assert!(m_delta.clients_conserved(), "{m_delta:?}");
+    }
+
+    #[test]
+    fn tensor_engine_recovers_from_eviction_via_full_reupload() {
+        // two delta-shipping engines on a ONE-slot session: every
+        // enforcement evicts the other's chain, so the engines must
+        // transparently fall back to re-uploading a fresh base — wrong
+        // answers or poisoned engines are not acceptable degradations.
+        use crate::ac::{rtac::RtacNative, Counters, Propagator};
+        use crate::coordinator::TensorEngine;
+        use crate::gen::random::{random_csp, RandomSpec};
+        let bucket = Bucket { n: 8, d: 4 };
+        let p = random_csp(&RandomSpec::new(6, 4, 0.6, 0.35, 43));
+        let (h, join) = reference_session_with_slots(&p, bucket, 1);
+        let mut engines = [TensorEngine::new(h.clone()), TensorEngine::new(h.clone())];
+        for round in 0..3 {
+            for (i, engine) in engines.iter_mut().enumerate() {
+                let mut s = crate::core::State::new(&p);
+                let x = (round + i) % p.n_vars();
+                s.assign(x, 0);
+                let mut c = Counters::default();
+                let out = engine.enforce(&p, &mut s, &[], &mut c);
+                assert!(engine.failed.is_none(), "e{i} r{round}: {:?}", engine.failed);
+                let mut s_ref = crate::core::State::new(&p);
+                s_ref.assign(x, 0);
+                let mut c_ref = Counters::default();
+                let out_ref = RtacNative::dense().enforce(&p, &mut s_ref, &[], &mut c_ref);
+                assert_eq!(out.is_consistent(), out_ref.is_consistent(), "e{i} r{round}");
+                if out.is_consistent() {
+                    assert_eq!(s.snapshot(), s_ref.snapshot(), "e{i} r{round}");
+                }
+            }
+        }
+        let m = h.metrics.snapshot();
+        assert!(m.base_evictions > 0, "the 1-slot session must have evicted: {m:?}");
+        assert!(m.stale_deltas > 0, "evictions must surface as counted stale drops");
+        assert!(m.conserved() && m.clients_conserved(), "{m:?}");
+        drop(engines);
         drop(h);
         join.join().unwrap();
     }
@@ -1369,6 +2070,7 @@ mod tests {
                 assert_eq!(stats.tensor_fallbacks(), 0, "seed {seed} {label}");
                 let m = h.metrics.snapshot();
                 assert!(m.conserved(), "seed {seed} {label}: {m:?}");
+                assert!(m.clients_conserved(), "seed {seed} {label}: {m:?}");
                 assert_eq!(m.stale_deltas, 0, "seed {seed} {label}");
                 drop(engine); // drops the backend's Handle clone
                 drop(h);
@@ -1444,6 +2146,7 @@ mod tests {
             max_batch: 4,
             max_wait: Duration::from_micros(100),
             adaptive: true,
+            ..Default::default()
         });
         for _ in 0..8 {
             a.observe(8);

@@ -29,6 +29,27 @@
 //! The mutable search state ([`crate::core::State`]) owns one
 //! `DomainPlane` plus the undo trail; engines keep private planes for
 //! snapshots and next-sweep buffers and never allocate per sweep.
+//!
+//! ```
+//! use rtac::core::{DomainPlane, PlaneSlab, Problem};
+//!
+//! let p = Problem::new("demo", 4, 10); // 4 vars, domains {0..9}
+//! let mut plane = DomainPlane::full(&p);
+//! plane.assign(0, 3); // scratch-plane singleton (no trail)
+//! assert_eq!(plane.count(0), 1);
+//! assert_eq!(plane.count_all(), 1 + 3 * 10);
+//! // a snapshot is one memcpy over the whole arena
+//! let mut snap = DomainPlane::full(&p);
+//! snap.copy_words_from(&plane);
+//! assert_eq!(snap, plane);
+//! // probe engines check scratch pairs out of a slab (memcpy, no alloc
+//! // in the steady state)
+//! let mut slab = PlaneSlab::new();
+//! let scratch = slab.checkout(&plane);
+//! assert_eq!(scratch, plane);
+//! slab.checkin(scratch);
+//! assert_eq!(slab.len(), 1);
+//! ```
 
 use crate::core::problem::{Problem, Val, VarId};
 use crate::util::bitset::{self, Bits};

@@ -28,6 +28,19 @@
 //! `run_scoped` takes `&mut self`: a pool runs one task set at a time,
 //! and a task must never submit to its own pool (the borrow makes that
 //! unrepresentable for safe callers; it would deadlock otherwise).
+//!
+//! ```
+//! use rtac::exec::WorkerPool;
+//!
+//! let mut pool = WorkerPool::new(2);
+//! // run_collect is the barrier: it returns once every task finished,
+//! // results in task order regardless of completion order
+//! let squares = pool.run_collect((0..4usize).map(|i| move || i * i).collect());
+//! assert_eq!(squares, vec![0, 1, 4, 9]);
+//! // ...and the same threads serve the next set (no respawn)
+//! let sums = pool.run_collect((0..3usize).map(|i| move || i + 10).collect());
+//! assert_eq!(sums, vec![10, 11, 12]);
+//! ```
 
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::mpsc::{channel, Receiver, Sender};

@@ -41,7 +41,12 @@ SUBCOMMANDS
   serve        --queens 8 | --n .. --dom 8 ..; --workers 4 --max-wait-us 300
                --max-batch 8 (validated against the compiled fixb* sizes)
                --adaptive (occupancy-driven batching window)
-               --worker-engine tensor|sac-mixed[N] (per-worker propagator)
+               --base-slots 8 (resident delta-base cap, LRU-evicted;
+               validated >= 1 at startup)
+               --worker-engine tensor|tensor-full|sac-mixed[N] (per-worker
+               propagator; tensor ships per-node row diffs and reports
+               per-worker delta hit rates, tensor-full is the upload
+               baseline)
                --artifacts DIR     (end-to-end batched tensor serving demo)
                --sac-probe [--probe-batch K]  (SAC-probing client: fused
                delta vs fused full-plane vs per-probe submission, plus the
@@ -218,20 +223,25 @@ fn cmd_ac(args: &Args) -> Result<(), String> {
     Ok(())
 }
 
-/// Parse `--worker-engine tensor | sac-mixed[N]` (N = CPU probe
-/// workers per search worker; empty = auto).  The `sac-mixed[N]`
-/// suffix follows the same grammar as `--engine` names
+/// Parse `--worker-engine tensor | tensor-full | sac-mixed[N]` (N =
+/// CPU probe workers per search worker; empty = auto).  The
+/// `sac-mixed[N]` suffix follows the same grammar as `--engine` names
 /// (`ac::parse_worker_suffix`), so the two surfaces cannot drift.
 fn parse_worker_engine(spec: &str) -> Result<WorkerEngine, String> {
     if spec == "tensor" {
         return Ok(WorkerEngine::Tensor);
+    }
+    if spec == "tensor-full" {
+        return Ok(WorkerEngine::TensorFull);
     }
     if spec.starts_with("sac-mixed") {
         let cpu_workers = rtac::ac::parse_worker_suffix(spec, "sac-mixed")
             .map_err(|e| format!("--worker-engine: {e}"))?;
         return Ok(WorkerEngine::MixedSac { cpu_workers, probe_batch: 0 });
     }
-    Err(format!("--worker-engine {spec:?}: expected tensor or sac-mixed[N]"))
+    Err(format!(
+        "--worker-engine {spec:?}: expected tensor, tensor-full, or sac-mixed[N]"
+    ))
 }
 
 fn cmd_serve(args: &Args) -> Result<(), String> {
@@ -240,6 +250,8 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
     let max_wait = args.get_u64("max-wait-us", 300)?;
     let max_batch_explicit = args.get_str("max-batch").is_some();
     let max_batch = args.get_usize("max-batch", 8)?;
+    let base_slots_explicit = args.get_str("base-slots").is_some();
+    let mut base_slots = args.get_usize("base-slots", 8)?;
     let adaptive = args.has_flag("adaptive");
     let sac_probe = args.has_flag("sac-probe");
     let probe_batch = args.get_usize("probe-batch", 0)?;
@@ -247,16 +259,39 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
     let artifacts = args.get_or("artifacts", "artifacts");
     let cfg = solver_config(args)?;
     args.finish()?;
+    // Every delta-shipping worker engine attaches one session client,
+    // and a client without a resident base slot thrashes the LRU map
+    // (every node: stale drop + full re-upload — worse than tensor-full
+    // and, under adverse interleavings, a poisoned worker).  Size the
+    // default cap to the workers; reject an explicit cap that cannot
+    // hold them, the same fail-fast contract as --max-batch.
+    let delta_writers = match worker_engine {
+        WorkerEngine::TensorFull => 0,
+        WorkerEngine::Tensor | WorkerEngine::MixedSac { .. } => workers,
+    };
+    if !sac_probe && delta_writers > base_slots {
+        if base_slots_explicit {
+            return Err(format!(
+                "--base-slots {base_slots} is below --workers {workers}: every \
+                 delta-shipping worker ({worker_engine:?}) needs a resident base slot, \
+                 or the slot map thrashes — raise --base-slots, or use \
+                 --worker-engine tensor-full"
+            ));
+        }
+        base_slots = delta_writers;
+    }
     let policy = BatchPolicy {
         max_batch,
         max_wait: Duration::from_micros(max_wait),
         adaptive,
+        base_slots,
     };
     let config = CoordinatorConfig { artifact_dir: artifacts.into(), policy };
     // validate an EXPLICIT --max-batch against the compiled fixb*
     // sizes, so a bad value fails here, not on the first fused request;
     // the default cap is clamped by the executor instead, so serve
-    // keeps working on artifact sets compiled with smaller batches
+    // keeps working on artifact sets compiled with smaller batches.
+    // (--base-slots 0 is rejected by start/validate either way.)
     if max_batch_explicit {
         Coordinator::validate_policy(&p, &config).map_err(|e| format!("{e:#}"))?;
     }
@@ -266,14 +301,14 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
     let coord = Coordinator::start(&p, config).map_err(|e| format!("{e:#}"))?;
     println!(
         "session up: problem={} bucket={}x{} workers={workers} max_wait={max_wait}µs \
-         max_batch={max_batch}{} worker_engine={worker_engine:?}",
+         max_batch={max_batch}{} base_slots={base_slots} worker_engine={worker_engine:?}",
         p.name(),
         coord.bucket().n,
         coord.bucket().d,
         if adaptive { " (adaptive)" } else { "" },
     );
     let sw = rtac::util::timer::Stopwatch::start();
-    let out = solve_parallel_with(&p, &coord, &cfg, 0, workers, worker_engine)
+    let out = solve_parallel_with(&p, &coord.handle(), &cfg, 0, workers, worker_engine)
         .map_err(|e| format!("{e:#}"))?;
     let elapsed = sw.elapsed_ms();
     match &out.result {
@@ -285,6 +320,22 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
     }
     let m = coord.metrics().snapshot();
     println!("metrics: {}", m.summary());
+    // the per-worker delta report: one row per session client (each
+    // delta-shipping worker engine attaches one), with its hit rate —
+    // how many of its deltas applied against a live base slot
+    for c in &m.clients {
+        println!("  {}", c.summary());
+    }
+    if !m.clients.is_empty() {
+        println!(
+            "  delta hit rate: {:.1}% over {} delta request(s), {} base upload(s), \
+             {} eviction(s)",
+            m.delta_hit_rate() * 100.0,
+            m.delta_requests,
+            m.base_uploads,
+            m.base_evictions,
+        );
+    }
     println!(
         "throughput: {:.0} enforcements/s over {:.1}ms wall",
         m.responses as f64 / (elapsed / 1e3),
@@ -502,8 +553,9 @@ fn cmd_bench_rtac(args: &Args) -> Result<(), String> {
     );
     let results = rtac_bench::run(&spec, &engines);
     println!("{}", rtac_bench::render(&results, &engines));
-    // the four SAC comparison cells: measured where the environment
-    // permits, explicitly marked skipped (e.g. "no-artifacts") where not
+    // the five SAC/search comparison cells: measured where the
+    // environment permits, explicitly marked skipped (e.g.
+    // "no-artifacts") where not — see docs/BENCHMARKS.md for the schema
     let cells = rtac_bench::run_sac_cells(&spec, sac_workers);
     println!("{}", rtac_bench::render_cells(&cells));
     let json = rtac_bench::to_json(&spec, &results, &cells);

@@ -19,32 +19,46 @@
 //! Neutrality is proven by `python/tests/test_model.py
 //! TestPaddingNeutrality` and re-checked here against the native engine.
 //!
-//! # Delta probe encoding
+//! # Delta plane encoding
 //!
-//! A batched-SAC probe round submits K planes that are all the *same*
-//! launch plane with one variable row replaced by a singleton.  Shipping
-//! K full planes re-sends the identical base K times; a [`ProbeDelta`]
-//! instead names the base by content fingerprint
-//! ([`plane_fingerprint`]) and carries only the edited row, so a round
-//! moves one base plane + K rows.  The consumer (the coordinator
-//! executor) caches the most recent base per session, keyed by that
-//! fingerprint, and reconstructs each probe with [`ProbeDelta::apply`];
-//! a re-upload replaces (invalidates) the cached base, and a delta
-//! whose fingerprint misses the cache is rejected rather than silently
-//! applied to the wrong base.
+//! Two serving workloads re-ship planes that differ from a plane the
+//! executor has already seen in only a few rows:
+//!
+//! * a batched-SAC probe round submits K planes that are all the *same*
+//!   launch plane with one variable row replaced by a singleton;
+//! * consecutive MAC search nodes submit planes that differ from the
+//!   previous node's plane in the handful of rows the last assignment,
+//!   backtrack, and propagation touched.
+//!
+//! Shipping full planes re-sends the unchanged rows every time; a
+//! [`PlaneDelta`] instead names the base plane by content fingerprint
+//! ([`plane_fingerprint`]) and carries only the replaced rows.  A probe
+//! is the 1-row case ([`PlaneDelta::singleton`]); a search step is the
+//! general case ([`PlaneDelta::diff`] between the consecutive planes).
+//! The consumer (the coordinator executor) caches one base per
+//! *client*, keyed by that fingerprint, and reconstructs full planes
+//! with [`PlaneDelta::apply`]; a re-upload replaces (invalidates) that
+//! client's base, and a delta whose fingerprint misses the cache is
+//! rejected rather than silently applied to the wrong base.
 //!
 //! ```
-//! use rtac::runtime::{plane_fingerprint, Bucket, ProbeDelta};
+//! use rtac::runtime::{plane_fingerprint, Bucket, PlaneDelta};
 //!
 //! let bucket = Bucket { n: 2, d: 2 };
 //! let base = vec![1.0, 1.0, 1.0, 1.0]; // both vars fully live
 //! let fp = plane_fingerprint(&base);
 //! // probe "x0 := 1": same plane, row 0 reduced to the singleton {1}
-//! let probe = ProbeDelta::singleton(fp, 0, 1, bucket);
+//! let probe = PlaneDelta::singleton(fp, 0, 1, bucket);
 //! assert_eq!(probe.apply(&base, bucket).unwrap(), vec![0.0, 1.0, 1.0, 1.0]);
 //! // a delta against a different base is refused, not misapplied
 //! let other = vec![1.0, 0.0, 1.0, 1.0];
 //! assert!(probe.apply(&other, bucket).is_err());
+//! // the search-step case: diff two consecutive planes row-wise
+//! let next = vec![1.0, 1.0, 0.0, 1.0]; // only row 1 changed
+//! let step = PlaneDelta::diff(&base, &next, bucket).unwrap();
+//! assert_eq!(step.n_rows(), 1);
+//! assert_eq!(step.shipped_f32(), bucket.d);
+//! assert_eq!(step.apply(&base, bucket).unwrap(), next);
 //! ```
 
 use anyhow::{bail, Result};
@@ -166,50 +180,112 @@ pub fn plane_fingerprint(plane: &[f32]) -> u64 {
     h
 }
 
-/// A probe plane in delta form: the identity of a base plane plus the
-/// single variable row that differs.  This is what a batched-SAC round
-/// ships per probe instead of a full `[N, D]` plane — one base upload +
-/// K rows per round (see the module docs for the protocol and
-/// [`crate::coordinator::Handle::submit_batch_delta`] for the
-/// client-side entry point).
+/// A plane in delta form: the identity of a base plane plus the
+/// variable rows that differ.  Two producers ship these instead of full
+/// `[N, D]` planes (see the module docs for the protocol,
+/// [`crate::coordinator::Handle::submit_batch_delta`] and
+/// [`crate::coordinator::Handle::submit_delta`] for the client-side
+/// entry points):
+///
+/// * a batched-SAC probe round — one base upload + K single-row
+///   ([`PlaneDelta::singleton`]) deltas per round;
+/// * a MAC search worker — one base upload per session (or per
+///   invalidation), then a [`PlaneDelta::diff`] of changed rows per
+///   search node.
 #[derive(Clone, Debug, PartialEq)]
-pub struct ProbeDelta {
+pub struct PlaneDelta {
     /// [`plane_fingerprint`] of the base plane this delta edits.
     pub base_fp: u64,
-    /// The edited variable (row index in the `[N, D]` layout).
-    pub var: VarId,
-    /// The replacement row, exactly `bucket.d` values.
-    pub row: Vec<f32>,
+    /// The replaced rows: `(row index, replacement row)` pairs in
+    /// strictly ascending row order, each row exactly `bucket.d`
+    /// values.  Empty is legal — the plane *is* the base (how a client
+    /// re-synchronizes right after uploading a fresh base).
+    pub rows: Vec<(VarId, Vec<f32>)>,
 }
 
-impl ProbeDelta {
+impl PlaneDelta {
     /// The delta of a singleton probe `var := val`: a one-hot row.  The
     /// SAC probe shape — reducing one variable to `{val}` and leaving
     /// every other row of the base untouched.
-    pub fn singleton(base_fp: u64, var: VarId, val: Val, bucket: Bucket) -> ProbeDelta {
+    pub fn singleton(base_fp: u64, var: VarId, val: Val, bucket: Bucket) -> PlaneDelta {
         debug_assert!(var < bucket.n && val < bucket.d);
         let mut row = vec![0.0; bucket.d];
         row[val] = 1.0;
-        ProbeDelta { base_fp, var, row }
+        PlaneDelta { base_fp, rows: vec![(var, row)] }
+    }
+
+    /// The empty delta: reconstructs to the base itself.  What a client
+    /// submits right after [`PlaneDelta::diff`] found nothing to ship,
+    /// or right after uploading a fresh base (the request still needs
+    /// an enforcement response; it just carries no rows).
+    pub fn empty(base_fp: u64) -> PlaneDelta {
+        PlaneDelta { base_fp, rows: Vec::new() }
+    }
+
+    /// The row-wise difference between two consecutive planes of the
+    /// same bucket: every `[N, D]` row where `next` differs from
+    /// `base`, keyed by `base`'s fingerprint.  Applying the result to
+    /// `base` reconstructs `next` bit-exactly — the search-plane delta
+    /// the MAC workers ship per node.
+    pub fn diff(base: &[f32], next: &[f32], bucket: Bucket) -> Result<PlaneDelta> {
+        if base.len() != bucket.vars_len() || next.len() != bucket.vars_len() {
+            bail!(
+                "diff planes have {} / {} values, bucket wants {}",
+                base.len(),
+                next.len(),
+                bucket.vars_len()
+            );
+        }
+        let d = bucket.d;
+        let rows = (0..bucket.n)
+            .filter(|&x| base[x * d..(x + 1) * d] != next[x * d..(x + 1) * d])
+            .map(|x| (x, next[x * d..(x + 1) * d].to_vec()))
+            .collect();
+        Ok(PlaneDelta { base_fp: plane_fingerprint(base), rows })
+    }
+
+    /// Number of replaced rows.
+    pub fn n_rows(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// f32 values this delta ships client→executor (its rows; the base
+    /// fingerprint and row indices are metadata) — the quantity
+    /// [`crate::coordinator::Metrics`] accounts under `shipped_f32`.
+    pub fn shipped_f32(&self) -> usize {
+        self.rows.iter().map(|(_, row)| row.len()).sum()
     }
 
     /// Shape-check this delta against `bucket` without a base plane —
     /// what [`crate::coordinator::Handle::submit_batch_delta`] runs
-    /// before enqueuing anything.
+    /// before enqueuing anything.  Rows must be strictly ascending (so
+    /// no row is replaced twice) and exactly `bucket.d` wide.
     pub fn validate(&self, bucket: Bucket) -> Result<()> {
-        if self.var >= bucket.n {
-            bail!("delta edits var {} but the bucket has {} rows", self.var, bucket.n);
-        }
-        if self.row.len() != bucket.d {
-            bail!("delta row has {} values, bucket rows hold {}", self.row.len(), bucket.d);
+        let mut prev: Option<VarId> = None;
+        for (var, row) in &self.rows {
+            let var = *var;
+            if var >= bucket.n {
+                bail!("delta edits var {var} but the bucket has {} rows", bucket.n);
+            }
+            if row.len() != bucket.d {
+                bail!(
+                    "delta row for var {var} has {} values, bucket rows hold {}",
+                    row.len(),
+                    bucket.d
+                );
+            }
+            if prev.is_some_and(|p| p >= var) {
+                bail!("delta rows must be strictly ascending by var (saw {var} after {prev:?})");
+            }
+            prev = Some(var);
         }
         Ok(())
     }
 
-    /// Reconstruct the full probe plane into `out` (cleared and
-    /// refilled): the base with row `var` replaced.  Refuses a base
-    /// whose shape or fingerprint does not match — a delta must never
-    /// be applied to a plane other than the one it was derived from.
+    /// Reconstruct the full plane into `out` (cleared and refilled):
+    /// the base with every delta row replaced.  Refuses a base whose
+    /// shape or fingerprint does not match — a delta must never be
+    /// applied to a plane other than the one it was derived from.
     pub fn apply_into(&self, base: &[f32], bucket: Bucket, out: &mut Vec<f32>) -> Result<()> {
         self.validate(bucket)?;
         if base.len() != bucket.vars_len() {
@@ -225,11 +301,14 @@ impl ProbeDelta {
         }
         out.clear();
         out.extend_from_slice(base);
-        out[self.var * bucket.d..(self.var + 1) * bucket.d].copy_from_slice(&self.row);
+        for (var, row) in &self.rows {
+            let start = var * bucket.d;
+            out[start..start + bucket.d].copy_from_slice(row);
+        }
         Ok(())
     }
 
-    /// [`ProbeDelta::apply_into`] into a fresh buffer.
+    /// [`PlaneDelta::apply_into`] into a fresh buffer.
     pub fn apply(&self, base: &[f32], bucket: Bucket) -> Result<Vec<f32>> {
         let mut out = Vec::new();
         self.apply_into(base, bucket, &mut out)?;
@@ -361,7 +440,7 @@ mod tests {
     #[test]
     fn delta_reconstruction_equals_full_plane_encoding_for_random_edits() {
         // the satellite contract: for random instances and random
-        // singleton edits, base + ProbeDelta must be bit-identical to
+        // singleton edits, base + PlaneDelta must be bit-identical to
         // encoding the edited state from scratch.
         let b = bucket();
         for seed in [3u64, 19, 77] {
@@ -379,7 +458,7 @@ mod tests {
                 if !s.contains(x, a) {
                     continue;
                 }
-                let delta = ProbeDelta::singleton(fp, x, a, b);
+                let delta = PlaneDelta::singleton(fp, x, a, b);
                 let mut s_assigned = s.clone();
                 s_assigned.assign(x, a);
                 let reference = encode_vars(&p, &s_assigned, b).unwrap();
@@ -389,17 +468,85 @@ mod tests {
     }
 
     #[test]
+    fn diff_reconstructs_consecutive_search_planes_exactly() {
+        // the search-plane contract: for consecutive states along a MAC
+        // path (assign, propagate-ish removals, backtrack), diff(prev,
+        // next) applied to prev is bit-identical to next, and ships
+        // only the changed rows.
+        let b = bucket();
+        for seed in [4u64, 23, 61] {
+            let p = random_csp(&RandomSpec::new(7, 5, 0.6, 0.35, seed));
+            let mut s = State::new(&p);
+            let mut prev = encode_vars(&p, &s, b).unwrap();
+            let mut rng = crate::util::rng::Rng::new(seed);
+            for step in 0..6 {
+                // mutate a couple of rows, like one search node does
+                let x = rng.gen_range(p.n_vars());
+                if s.dom_size(x) > 1 {
+                    let a = s.dom(x).iter_ones().next().unwrap();
+                    s.remove(x, a);
+                }
+                let y = rng.gen_range(p.n_vars());
+                if s.dom_size(y) > 1 {
+                    let a = s.dom(y).iter_ones().next().unwrap();
+                    s.assign(y, a);
+                }
+                let next = encode_vars(&p, &s, b).unwrap();
+                let delta = PlaneDelta::diff(&prev, &next, b).unwrap();
+                assert!(delta.n_rows() <= 2, "seed {seed} step {step}: at most 2 rows changed");
+                assert_eq!(delta.shipped_f32(), delta.n_rows() * b.d);
+                assert_eq!(delta.apply(&prev, b).unwrap(), next, "seed {seed} step {step}");
+                prev = next;
+            }
+            // identical planes diff to the empty delta
+            let noop = PlaneDelta::diff(&prev, &prev, b).unwrap();
+            assert_eq!(noop.n_rows(), 0);
+            assert_eq!(noop, PlaneDelta::empty(plane_fingerprint(&prev)));
+            assert_eq!(noop.apply(&prev, b).unwrap(), prev);
+        }
+    }
+
+    #[test]
+    fn multi_row_delta_applies_all_rows() {
+        let b = Bucket { n: 4, d: 3 };
+        let base = vec![1.0; b.vars_len()];
+        let fp = plane_fingerprint(&base);
+        let delta = PlaneDelta {
+            base_fp: fp,
+            rows: vec![(0, vec![0.0, 1.0, 0.0]), (2, vec![1.0, 0.0, 0.0])],
+        };
+        assert_eq!(delta.n_rows(), 2);
+        assert_eq!(delta.shipped_f32(), 6);
+        let got = delta.apply(&base, b).unwrap();
+        assert_eq!(got[0..3], [0.0, 1.0, 0.0]);
+        assert_eq!(got[3..6], [1.0; 3]);
+        assert_eq!(got[6..9], [1.0, 0.0, 0.0]);
+        assert_eq!(got[9..12], [1.0; 3]);
+    }
+
+    #[test]
+    fn delta_rejects_unordered_or_duplicate_rows() {
+        let b = Bucket { n: 4, d: 3 };
+        let row = vec![1.0, 0.0, 0.0];
+        let unordered =
+            PlaneDelta { base_fp: 1, rows: vec![(2, row.clone()), (0, row.clone())] };
+        assert!(unordered.validate(b).is_err());
+        let duplicate = PlaneDelta { base_fp: 1, rows: vec![(2, row.clone()), (2, row)] };
+        assert!(duplicate.validate(b).is_err());
+    }
+
+    #[test]
     fn delta_apply_reuses_the_buffer() {
         let b = bucket();
         let base = vec![1.0; b.vars_len()];
         let fp = plane_fingerprint(&base);
         let mut out = vec![9.0f32; 3]; // stale content must be cleared
-        ProbeDelta::singleton(fp, 2, 1, b).apply_into(&base, b, &mut out).unwrap();
+        PlaneDelta::singleton(fp, 2, 1, b).apply_into(&base, b, &mut out).unwrap();
         assert_eq!(out.len(), b.vars_len());
         assert_eq!(out[2 * b.d + 1], 1.0);
         assert_eq!(out[2 * b.d], 0.0);
         // second apply into the same buffer must not leak the first
-        ProbeDelta::singleton(fp, 0, 0, b).apply_into(&base, b, &mut out).unwrap();
+        PlaneDelta::singleton(fp, 0, 0, b).apply_into(&base, b, &mut out).unwrap();
         assert_eq!(out[2 * b.d], 1.0, "row 2 must be back to the base");
     }
 
@@ -411,18 +558,17 @@ mod tests {
         // stale base: same shape, different content
         let mut other = base.clone();
         other[5] = 0.0;
-        let err = ProbeDelta::singleton(fp, 0, 0, b).apply(&other, b).unwrap_err();
+        let err = PlaneDelta::singleton(fp, 0, 0, b).apply(&other, b).unwrap_err();
         assert!(format!("{err:#}").contains("stale"), "{err:#}");
         // row length mismatch
-        let bad_row = ProbeDelta { base_fp: fp, var: 0, row: vec![1.0; b.d + 1] };
+        let bad_row = PlaneDelta { base_fp: fp, rows: vec![(0, vec![1.0; b.d + 1])] };
         assert!(bad_row.validate(b).is_err());
         assert!(bad_row.apply(&base, b).is_err());
         // var out of the bucket
-        let bad_var = ProbeDelta::singleton(fp, b.n - 1, 0, b);
-        let bad_var = ProbeDelta { var: b.n, ..bad_var };
+        let bad_var = PlaneDelta { base_fp: fp, rows: vec![(b.n, vec![1.0; b.d])] };
         assert!(bad_var.validate(b).is_err());
         // base of the wrong length
-        assert!(ProbeDelta::singleton(fp, 0, 0, b).apply(&base[1..], b).is_err());
+        assert!(PlaneDelta::singleton(fp, 0, 0, b).apply(&base[1..], b).is_err());
     }
 
     #[test]

@@ -9,7 +9,7 @@ pub mod executor;
 pub mod manifest;
 
 pub use encode::{
-    decode_vars, encode_cons, encode_vars, encode_vars_into, plane_fingerprint, Bucket, ProbeDelta,
+    decode_vars, encode_cons, encode_vars, encode_vars_into, plane_fingerprint, Bucket, PlaneDelta,
 };
 pub use executor::{DeviceTensor, FixpointOut, Runtime, STATUS_CONSISTENT, STATUS_WIPEOUT};
 pub use manifest::{Entry, Kind, Manifest};

@@ -1,26 +1,45 @@
 //! Parallel portfolio MAC search over a shared coordinator session.
 //!
 //! The first branching variable's values are partitioned across K worker
-//! threads; each worker runs the standard MAC solver on its sub-space
-//! with a propagator chosen by [`WorkerEngine`]:
+//! threads ([`split_values`]); each worker runs the standard MAC solver
+//! on its sub-space with a propagator chosen by [`WorkerEngine`]:
 //!
 //! * [`WorkerEngine::Tensor`] (the default, [`solve_parallel`]) — a
 //!   [`TensorEngine`] per worker, so every AC call flows through the
 //!   coordinator and coalesces with the other workers' calls into
-//!   batched XLA executions.
+//!   batched XLA executions.  Each worker attaches its own session
+//!   client and ships **base-once-then-row-diffs**: consecutive MAC
+//!   nodes differ in few rows, and the per-client base slots
+//!   (`coordinator::service`) keep concurrent workers' deltas from
+//!   invalidating each other.  When `k` exceeds the session's
+//!   `base_slots` cap (so the slots would thrash), the workers ship
+//!   full planes instead — decided once in [`solve_parallel_with`].
+//! * [`WorkerEngine::TensorFull`] — the same engine shipping full
+//!   planes every call; the upload-volume baseline the search-delta
+//!   bench cell compares against.
 //! * [`WorkerEngine::MixedSac`] — a
 //!   [`crate::ac::sac::MixedProbeBackend`]-backed SAC engine per
 //!   worker: stronger (singleton) propagation whose probe rounds are
 //!   split between each worker's CPU pool and the shared session by
-//!   the mixed cost model.  Workers share the session, so the tensor
-//!   shares ship **full planes** (the delta base cache is single-writer
-//!   — see `coordinator::service`).
+//!   the mixed cost model, the tensor share shipped in delta form on
+//!   the worker's own session client.
 //!
 //! First SAT answer wins (cooperative stop flag); if every worker
 //! exhausts its slice, the instance is UNSAT.
 //!
 //! This is the system story of the paper's GPU pitch: one resident
-//! constraint tensor, many in-flight domain planes.
+//! constraint tensor, many in-flight domain planes — and, per client,
+//! mostly *rows* of planes on the wire.
+//!
+//! ```
+//! use rtac::search::parallel::{split_values, WorkerEngine};
+//!
+//! // 5 values of the split variable, raced by 2 workers
+//! assert_eq!(split_values(5, 2), vec![vec![0, 2, 4], vec![1, 3]]);
+//! // engine selection is data, so `rtac serve --worker-engine` and the
+//! // bench cells pick per-worker propagators without new entry points
+//! assert_ne!(WorkerEngine::Tensor, WorkerEngine::TensorFull);
+//! ```
 
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{mpsc, Arc};
@@ -29,15 +48,19 @@ use anyhow::{anyhow, Result};
 
 use crate::ac::sac::{MixedProbeBackend, SacParallel};
 use crate::ac::Propagator;
-use crate::coordinator::{Coordinator, TensorEngine};
+use crate::coordinator::{Coordinator, Handle, TensorEngine};
 use crate::core::{Problem, Val, VarId};
 use crate::search::solver::{SolveResult, SolveStats, Solver, SolverConfig};
 
 /// Which propagator each portfolio worker runs on the shared session.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum WorkerEngine {
-    /// Full-plane AC through the session ([`TensorEngine`]).
+    /// AC through the session ([`TensorEngine`]), shipping per-node
+    /// row diffs against a per-worker base slot (the default).
     Tensor,
+    /// AC through the session shipping full planes — the upload-volume
+    /// baseline.
+    TensorFull,
     /// Batched SAC with mixed CPU/tensor probe scheduling
     /// (`sac-mixed`): `cpu_workers` pool threads per search worker
     /// (0 = auto), `probe_batch` tensor probes per round (0 = auto).
@@ -54,6 +77,24 @@ pub struct ParallelOutcome {
     pub winner: Option<usize>,
 }
 
+/// Partition `d` values of the split variable round-robin across `k`
+/// workers (worker `w` takes values `w, w + k, w + 2k, …`).  Slices may
+/// be empty when `k > d`; concatenated and sorted they cover exactly
+/// `0..d`.
+///
+/// ```
+/// use rtac::search::parallel::split_values;
+/// assert_eq!(split_values(4, 4), vec![vec![0], vec![1], vec![2], vec![3]]);
+/// assert_eq!(split_values(2, 3), vec![vec![0], vec![1], vec![]]);
+/// ```
+pub fn split_values(d: usize, k: usize) -> Vec<Vec<Val>> {
+    let mut slices: Vec<Vec<Val>> = vec![Vec::new(); k];
+    for a in 0..d {
+        slices[a % k].push(a);
+    }
+    slices
+}
+
 /// Split variable `split_var`'s values round-robin across `k` workers
 /// and race them on the shared `coordinator` session with
 /// [`WorkerEngine::Tensor`] propagators.
@@ -64,13 +105,23 @@ pub fn solve_parallel(
     split_var: VarId,
     k: usize,
 ) -> Result<ParallelOutcome> {
-    solve_parallel_with(problem, coordinator, base_config, split_var, k, WorkerEngine::Tensor)
+    solve_parallel_with(
+        problem,
+        &coordinator.handle(),
+        base_config,
+        split_var,
+        k,
+        WorkerEngine::Tensor,
+    )
 }
 
-/// [`solve_parallel`] with an explicit per-worker propagator choice.
+/// [`solve_parallel`] with an explicit per-worker propagator choice,
+/// over any session [`Handle`] — a live [`Coordinator`]'s, or a
+/// protocol-compatible stand-in (the offline e2e tests drive this with
+/// a CPU-reference executor).
 pub fn solve_parallel_with(
     problem: &Problem,
-    coordinator: &Coordinator,
+    handle: &Handle,
     base_config: &SolverConfig,
     split_var: VarId,
     k: usize,
@@ -90,18 +141,31 @@ pub fn solve_parallel_with(
         }
         other => other,
     };
-    let d = problem.dom_size(split_var);
-    let mut slices: Vec<Vec<Val>> = vec![Vec::new(); k];
-    for a in 0..d {
-        slices[a % k].push(a);
+    // Delta-shipping engines attach one session client each, and a
+    // client without a resident base slot thrashes the executor's LRU
+    // map (every node: stale drop + full re-upload — strictly worse
+    // than full planes, and able to exhaust the retry bound).  When the
+    // session's cap cannot hold one slot per worker, ship full planes
+    // instead — decided HERE, the shared layer, so every caller is
+    // protected, not just `rtac serve` (which additionally auto-sizes
+    // its default `--base-slots` up to `--workers`).
+    let use_delta = k <= handle.base_slots;
+    if !use_delta && !matches!(engine_kind, WorkerEngine::TensorFull) {
+        eprintln!(
+            "solve_parallel: {k} delta-shipping workers exceed the session's {} base \
+             slot(s); shipping full planes instead (raise BatchPolicy::base_slots to \
+             keep per-node deltas)",
+            handle.base_slots
+        );
     }
+    let slices = split_values(problem.dom_size(split_var), k);
 
     let stop = Arc::new(AtomicBool::new(false));
     let (tx, rx) = mpsc::channel::<(usize, SolveResult, SolveStats, Option<String>)>();
 
     std::thread::scope(|scope| {
         for (wid, slice) in slices.into_iter().enumerate() {
-            let handle = coordinator.handle();
+            let handle = handle.clone();
             let stop = stop.clone();
             let tx = tx.clone();
             let mut config = base_config.clone();
@@ -111,19 +175,32 @@ pub fn solve_parallel_with(
             scope.spawn(move || {
                 // one engine per worker: the solver resets it per value,
                 // and the pool-backed engines keep their threads across
-                // resets (the persistent-runtime amortisation)
+                // resets (the persistent-runtime amortisation).  Each
+                // delta-shipping engine attaches its own session client,
+                // so per-client base slots keep the workers' delta
+                // chains independent.
                 let mut engine: Box<dyn Propagator> = match engine_kind {
-                    WorkerEngine::Tensor => Box::new(TensorEngine::new(handle.clone())),
+                    WorkerEngine::Tensor if use_delta => {
+                        Box::new(TensorEngine::new(handle.clone()))
+                    }
+                    WorkerEngine::Tensor | WorkerEngine::TensorFull => {
+                        Box::new(TensorEngine::full_plane(handle.clone()))
+                    }
                     WorkerEngine::MixedSac { cpu_workers, probe_batch } => {
-                        // shared session: full-plane tensor shares (the
-                        // delta base cache is single-writer)
-                        Box::new(SacParallel::with_backend(Box::new(
+                        let backend = if use_delta {
+                            MixedProbeBackend::with_tensor_delta(
+                                cpu_workers,
+                                handle.clone(),
+                                probe_batch,
+                            )
+                        } else {
                             MixedProbeBackend::with_tensor(
                                 cpu_workers,
                                 handle.clone(),
                                 probe_batch,
-                            ),
-                        )))
+                            )
+                        };
+                        Box::new(SacParallel::with_backend(Box::new(backend)))
                     }
                 };
                 let mut merged_stats = SolveStats::default();

@@ -36,6 +36,7 @@ fn config(dir: PathBuf, max_wait_us: u64) -> CoordinatorConfig {
             max_batch: 8,
             max_wait: Duration::from_micros(max_wait_us),
             adaptive: false,
+            ..Default::default()
         },
     }
 }
@@ -244,12 +245,21 @@ fn max_batch_validated_against_compiled_sizes_at_startup() {
 
     // a zero max_batch can never execute anything, for ANY caller:
     // both validation and start reject it
-    let mut cfg = config(dir, 0);
+    let mut cfg = config(dir.clone(), 0);
     cfg.policy.max_batch = 0;
     let err = Coordinator::validate_policy(&p, &cfg).unwrap_err();
     assert!(format!("{err:#}").contains("max_batch"), "{err:#}");
     let err = Coordinator::start(&p, cfg).unwrap_err();
     assert!(format!("{err:#}").contains("max_batch"), "{err:#}");
+
+    // base_slots is validated alongside max_batch: zero slots could
+    // never serve a delta client (`rtac serve --base-slots 0`)
+    let mut cfg = config(dir, 0);
+    cfg.policy.base_slots = 0;
+    let err = Coordinator::validate_policy(&p, &cfg).unwrap_err();
+    assert!(format!("{err:#}").contains("base_slots"), "{err:#}");
+    let err = Coordinator::start(&p, cfg).unwrap_err();
+    assert!(format!("{err:#}").contains("base_slots"), "{err:#}");
 }
 
 // ---- tensor-routed batched SAC (artifact-gated) ----------------------
@@ -371,7 +381,7 @@ fn delta_probes_reach_the_full_plane_fixpoint_with_less_upload() {
         if ok_full {
             assert_eq!(snap_full, snap_delta, "seed {seed}: the SAC closure is unique");
         }
-        assert_eq!(m_delta.stale_deltas, 0, "seed {seed}: single-writer session");
+        assert_eq!(m_delta.stale_deltas, 0, "seed {seed}: sole client, nothing evicts it");
         assert!(m_full.conserved() && m_delta.conserved(), "seed {seed}");
         assert!(
             m_delta.shipped_f32 < m_full.shipped_f32,
@@ -429,6 +439,43 @@ fn sac_mixed_reaches_the_same_fixpoint_as_sac1_and_sac_xla() {
             assert_eq!(s.snapshot(), s_ref.snapshot(), "seed {seed}: SacMixed closure");
         }
     }
+}
+
+#[test]
+fn search_delta_ships_less_than_full_planes_on_the_real_executor() {
+    let dir = need_artifacts!();
+    use rtac::search::parallel::{solve_parallel_with, WorkerEngine};
+    use rtac::search::{SolveResult, SolverConfig};
+    // the PR-5 acceptance contract on the REAL executor: a single
+    // deterministic MAC worker shipping chained deltas uploads one base
+    // + per-node row diffs, strictly less f32 volume than the same
+    // search shipping full planes, with identical results
+    let p = queens(8);
+    let cfg = SolverConfig { max_assignments: 300, ..SolverConfig::default() };
+    let run = |engine: WorkerEngine| {
+        let coord = Coordinator::start(&p, config(dir.clone(), 0)).unwrap();
+        let out = solve_parallel_with(&p, &coord.handle(), &cfg, 0, 1, engine).unwrap();
+        (out.result, coord.metrics().snapshot())
+    };
+    let (out_full, m_full) = run(WorkerEngine::TensorFull);
+    let (out_delta, m_delta) = run(WorkerEngine::Tensor);
+    match (&out_full, &out_delta) {
+        (SolveResult::Sat(a), SolveResult::Sat(b)) => {
+            assert!(p.satisfies(a) && p.satisfies(b));
+        }
+        (f, d) => assert_eq!(format!("{f:?}"), format!("{d:?}"), "modes must agree"),
+    }
+    assert_eq!(m_full.requests, m_delta.requests, "one worker: same deterministic search");
+    assert!(
+        m_delta.shipped_f32 < m_full.shipped_f32,
+        "delta search must ship strictly less ({} vs {} f32)",
+        m_delta.shipped_f32,
+        m_full.shipped_f32
+    );
+    assert_eq!(m_delta.stale_deltas, 0, "single client: nothing can evict its slot");
+    assert!(m_delta.conserved() && m_delta.clients_conserved());
+    let c = &m_delta.clients[0];
+    assert_eq!(c.base_uploads, 1, "base once, then row diffs: {c:?}");
 }
 
 #[test]

@@ -31,7 +31,12 @@ macro_rules! need_artifacts {
 fn config(dir: PathBuf) -> CoordinatorConfig {
     CoordinatorConfig {
         artifact_dir: dir,
-        policy: BatchPolicy { max_batch: 8, max_wait: Duration::from_micros(500), adaptive: false },
+        policy: BatchPolicy {
+            max_batch: 8,
+            max_wait: Duration::from_micros(500),
+            adaptive: false,
+            ..Default::default()
+        },
     }
 }
 
@@ -97,7 +102,12 @@ fn batching_actually_happens_under_parallel_load() {
         &p,
         CoordinatorConfig {
             artifact_dir: dir,
-            policy: BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(2), adaptive: false },
+            policy: BatchPolicy {
+                max_batch: 8,
+                max_wait: Duration::from_millis(2),
+                adaptive: false,
+                ..Default::default()
+            },
         },
     )
     .unwrap();

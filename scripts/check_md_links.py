@@ -1,0 +1,78 @@
+#!/usr/bin/env python3
+"""Fail on broken relative links in the repo's Markdown files.
+
+The CI `docs` job runs this so README/ARCHITECTURE/docs/* can't rot
+silently: every inline Markdown link `[text](target)` whose target is a
+relative path must resolve to an existing file or directory.  External
+links (http/https/mailto), pure anchors (`#...`), and absolute paths
+are skipped — this is a filesystem check, not a crawler.
+
+Usage: python3 scripts/check_md_links.py [repo_root]
+Exit status: 0 when every relative link resolves, 1 otherwise (broken
+links are listed as `file:line: target`).
+"""
+
+import os
+import re
+import sys
+
+# inline links only, [text](target "optional title"); reference-style
+# definitions are rare here and would need a second pass
+LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+SKIP_DIRS = {".git", "target", "vendor", "node_modules", ".venv"}
+SKIP_PREFIXES = ("http://", "https://", "mailto:", "#")
+
+
+def md_files(root):
+    for dirpath, dirnames, filenames in os.walk(root):
+        dirnames[:] = [d for d in dirnames if d not in SKIP_DIRS]
+        for name in filenames:
+            if name.endswith(".md"):
+                yield os.path.join(dirpath, name)
+
+
+def check_file(path, root):
+    broken = []
+    with open(path, encoding="utf-8") as fh:
+        in_code_fence = False
+        for lineno, line in enumerate(fh, 1):
+            if line.lstrip().startswith("```"):
+                in_code_fence = not in_code_fence
+                continue
+            if in_code_fence:
+                continue
+            for match in LINK.finditer(line):
+                target = match.group(1)
+                if target.startswith(SKIP_PREFIXES) or os.path.isabs(target):
+                    continue
+                # drop any #anchor; an empty remainder means same-file
+                target_path = target.split("#", 1)[0]
+                if not target_path:
+                    continue
+                resolved = os.path.normpath(
+                    os.path.join(os.path.dirname(path), target_path)
+                )
+                if not os.path.exists(resolved):
+                    rel = os.path.relpath(path, root)
+                    broken.append(f"{rel}:{lineno}: {target}")
+    return broken
+
+
+def main():
+    root = sys.argv[1] if len(sys.argv) > 1 else "."
+    broken = []
+    checked = 0
+    for path in sorted(md_files(root)):
+        checked += 1
+        broken.extend(check_file(path, root))
+    if broken:
+        print(f"broken relative links ({len(broken)}):")
+        for b in broken:
+            print(f"  {b}")
+        return 1
+    print(f"ok: all relative links resolve across {checked} Markdown file(s)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
