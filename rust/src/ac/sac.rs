@@ -46,7 +46,9 @@
 //!     K full planes.  Per-client base slots keep several delta
 //!     writers on one session independent; if this client's slot is
 //!     nonetheless evicted under the session's `base_slots` cap, the
-//!     dropped round is retried once with a fresh base upload.
+//!     dropped round is retried with fresh base uploads through the
+//!     shared session [`RetryPolicy`] (bounded attempts, never a wrong
+//!     verdict — the budget exhausting surfaces as an error).
 //!     [`XlaProbeBackend::full_plane`] keeps the PR-3 full-plane
 //!     submission as the upload-volume baseline.  [`SacXla`] wraps
 //!     this backend together with a lazily-started coordinator session
@@ -71,7 +73,7 @@ use std::time::Instant;
 
 use crate::ac::rtac::{derive_affected, RtacNative};
 use crate::ac::{Counters, Outcome, Propagator};
-use crate::coordinator::{Handle, Response, StaleTracker};
+use crate::coordinator::{Handle, Response, Retry, RetryPolicy, StaleTracker};
 use crate::core::{DomainPlane, PlaneSlab, Problem, State, Val, VarId};
 use crate::exec::WorkerPool;
 use crate::runtime::{encode_vars_into, plane_fingerprint, PlaneDelta};
@@ -419,8 +421,13 @@ pub struct XlaProbeBackend {
     /// because the slot is keyed to this backend's client (no other
     /// writer replaces it) and content-fingerprinted; if the slot is
     /// *evicted* under the session's cap, the stale round is retried
-    /// once with a fresh upload (see `run_probes`).
+    /// with fresh uploads under `retry`'s bounded budget (see
+    /// `collect_round_with_recovery`).
     last_base_fp: Option<u64>,
+    /// The shared session retry policy behind the fresh-base recovery:
+    /// bounded resubmission attempts, stale drops classified transient,
+    /// everything else fatal (see `coordinator::retry`).
+    retry: RetryPolicy,
     /// Fingerprint of the problem this backend first probed.  The
     /// session's constraint tensor is device-resident and per-problem,
     /// so probing a *different* problem through the same handle would
@@ -460,6 +467,7 @@ impl XlaProbeBackend {
             fused: true,
             delta: true,
             last_base_fp: None,
+            retry: RetryPolicy::no_backoff(3),
             bound: None,
         }
     }
@@ -583,6 +591,68 @@ impl XlaProbeBackend {
         }
         Ok(round)
     }
+
+    /// Collect a staged round, recovering base-slot evictions through
+    /// the session [`RetryPolicy`]: attempt 0 collects the receivers
+    /// already in flight; each later attempt re-uploads a fresh base
+    /// (`last_base_fp = None`) and restages the whole round.  A failure
+    /// the [`StaleTracker`] attributes to OUR slot going stale is
+    /// classified [`Retry::Transient`] (an eviction under the session's
+    /// cap — re-upload and go again); anything else is
+    /// [`Retry::Fatal`] (the session is dead, moribund, or past its
+    /// deadline).  Shared by the standalone fused path and the mixed
+    /// scheduler's tensor share, replacing their former one-shot
+    /// ad-hoc retries.
+    fn collect_round_with_recovery(
+        &mut self,
+        problem: &Problem,
+        state: &State,
+        probes: &[(VarId, Val)],
+        receivers: Vec<mpsc::Receiver<Response>>,
+    ) -> anyhow::Result<CollectedRound> {
+        let retry = self.retry;
+        let mut staged = Some(receivers);
+        let mut recovered = false;
+        let round = retry.run(
+            "fused probe round kept dying to base-slot eviction — more concurrent \
+             delta writers than the session's base_slots cap (raise --base-slots \
+             or shrink the writer count)",
+            |attempt| {
+                let receivers = match staged.take() {
+                    Some(receivers) => receivers,
+                    None => {
+                        // a previous attempt observed a stale drop:
+                        // force a fresh base upload and restage
+                        self.last_base_fp = None;
+                        self.submit_round(problem, state, probes).map_err(Retry::Fatal)?
+                    }
+                };
+                match self.collect_round(receivers) {
+                    Ok(round) => {
+                        recovered = attempt > 0;
+                        Ok(round)
+                    }
+                    Err(e) => {
+                        if self.absorb_stale_drop() {
+                            Err(Retry::Transient(e))
+                        } else {
+                            Err(Retry::Fatal(e))
+                        }
+                    }
+                }
+            },
+        )?;
+        if recovered {
+            // the failed round's TAIL deltas (behind the one whose drop
+            // we observed) were also dropped stale, after the absorb
+            // that classified the failure — absorb them too, or the
+            // next fatal failure would be misclassified as a stale
+            // slot.  Safe here: the retried round completed, so no
+            // delta of ours is in flight.
+            let _ = self.absorb_stale_drop();
+        }
+        Ok(round)
+    }
 }
 
 /// One successfully collected fused probe round (see
@@ -616,31 +686,13 @@ impl ProbeBackend for XlaProbeBackend {
         counters: &mut Counters,
     ) -> anyhow::Result<Vec<bool>> {
         if self.fused {
+            // stale drops (our base slot evicted under the session's
+            // cap by another writer's upload while we were skipping
+            // re-uploads) are recovered with fresh bases under the
+            // bounded session RetryPolicy — degradation to a few extra
+            // planes, never a poisoned engine or a wrong verdict
             let receivers = self.submit_round(problem, state, probes)?;
-            let round = match self.collect_round(receivers) {
-                Ok(round) => round,
-                Err(e) => {
-                    if !self.absorb_stale_drop() {
-                        return Err(e);
-                    }
-                    // our base slot was evicted under the session's cap
-                    // (another writer's upload) while we were skipping
-                    // re-uploads: the dropped round is retried ONCE with
-                    // a fresh base — degradation to one extra plane, not
-                    // a poisoned engine
-                    self.last_base_fp = None;
-                    let receivers = self.submit_round(problem, state, probes)?;
-                    let round = self.collect_round(receivers)?;
-                    // the old round's TAIL deltas (behind the one whose
-                    // drop we observed) were also dropped stale, after
-                    // the first absorb — absorb them too, or the next
-                    // fatal failure would be misclassified as a stale
-                    // slot.  Safe here: the retried round completed, so
-                    // no delta of ours is in flight.
-                    let _ = self.absorb_stale_drop();
-                    round
-                }
-            };
+            let round = self.collect_round_with_recovery(problem, state, probes, receivers)?;
             counters.recurrences += round.recurrences;
             return Ok(round.verdicts);
         }
@@ -944,29 +996,19 @@ impl ProbeBackend for MixedProbeBackend {
             self.cpu_ewma.observe(us / cpu_probes.len() as f64);
             self.stats.cpu_probes.fetch_add(cpu_probes.len() as u64, Ordering::Relaxed);
         }
-        // 3. collect the tensor share; an eviction-induced stale drop
-        // is retried once with a fresh base upload (same recovery as
-        // the standalone backend, so sac-mixed on a crowded session
-        // does not shed its tensor half permanently); on any other
-        // failure (or a failed submit), re-probe that share on the CPU
-        // — same launch domains, same verdicts, so the merge loop
+        // 3. collect the tensor share; eviction-induced stale drops are
+        // recovered with fresh base uploads under the shared session
+        // RetryPolicy (the exact recovery loop of the standalone
+        // backend, so sac-mixed on a crowded session does not shed its
+        // tensor half permanently); on a fatal failure or an exhausted
+        // retry budget (or a failed submit), re-probe that share on the
+        // CPU — same launch domains, same verdicts, so the merge loop
         // never notices
         let mut tensor_verdicts = match staged {
             Some(receivers) => {
                 let tensor = self.tensor.as_mut().expect("tensor half still present");
-                let mut collected = tensor.collect_round(receivers);
-                if collected.is_err() && tensor.absorb_stale_drop() {
-                    tensor.last_base_fp = None;
-                    collected = tensor
-                        .submit_round(problem, state, tensor_probes)
-                        .and_then(|receivers| tensor.collect_round(receivers));
-                    if collected.is_ok() {
-                        // absorb the old round's tail drops (counted
-                        // after the first absorb) so the next failure
-                        // is classified against a clean baseline
-                        let _ = tensor.absorb_stale_drop();
-                    }
-                }
+                let collected =
+                    tensor.collect_round_with_recovery(problem, state, tensor_probes, receivers);
                 match collected {
                     Ok(round) => {
                         // the round's work counts only on success: a

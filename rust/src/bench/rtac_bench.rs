@@ -19,9 +19,11 @@
 //!   instance derived from the grid rather than the full MAC cell);
 //! * the artifact-gated tensor cells: `sac-par` vs `sac-xla`,
 //!   delta-vs-full probe upload volume, `sac-mixed` vs the best single
-//!   backend, and the *search*-delta cell (a MAC search over a tensor
+//!   backend, the *search*-delta cell (a MAC search over a tensor
 //!   worker shipping per-node row diffs vs full planes — the PR-5
-//!   serving-protocol headline).
+//!   serving-protocol headline), and the *recovery*-restart cell
+//!   (steady-state enforcement vs the first enforcement after a forced
+//!   supervised restart — what a crash costs a live session).
 //!
 //! Cells that cannot run are **explicitly marked** in the JSON
 //! (`*_skipped: "<reason>"` — e.g. `"no-artifacts"`) instead of being
@@ -372,7 +374,7 @@ impl<T> CellOutcome<T> {
     }
 }
 
-/// The five SAC/search comparison cells of one bench run.
+/// The six SAC/search comparison cells of one bench run.
 #[derive(Clone, Debug)]
 pub struct SacCells {
     /// Sequential SAC-1 vs `sac-par` (CPU; always runnable).
@@ -386,6 +388,12 @@ pub struct SacCells {
     /// Search-plane delta vs full-plane upload volume over a MAC run
     /// (artifact-gated).
     pub search_delta: CellOutcome<SearchDeltaComparison>,
+    /// Cost of a supervised executor restart: steady-state enforcement
+    /// vs the first enforcement after [`Handle::force_restart`]
+    /// (artifact-gated; `recovery_restart_skipped` offline).
+    ///
+    /// [`Handle::force_restart`]: crate::coordinator::Handle::force_restart
+    pub recovery: CellOutcome<RecoveryComparison>,
 }
 
 impl SacCells {
@@ -396,6 +404,7 @@ impl SacCells {
             delta: CellOutcome::Skipped(reason),
             mixed: CellOutcome::Skipped(reason),
             search_delta: CellOutcome::Skipped(reason),
+            recovery: CellOutcome::Skipped(reason),
         }
     }
 }
@@ -420,9 +429,7 @@ pub fn run_sac_cells(spec: &GridSpec, workers: usize) -> SacCells {
     if !artifacts_available() {
         return SacCells {
             sac,
-            sac_xla: CellOutcome::Skipped(SkipReason::NoArtifacts),
-            delta: CellOutcome::Skipped(SkipReason::NoArtifacts),
-            mixed: CellOutcome::Skipped(SkipReason::NoArtifacts),
+            ..SacCells::all_skipped(SkipReason::NoArtifacts)
         };
     }
     // derive the tensor-cell instance ONCE and share it across the
@@ -454,7 +461,11 @@ pub fn run_sac_cells(spec: &GridSpec, workers: usize) -> SacCells {
         Some(c) => CellOutcome::Measured(c),
         None => CellOutcome::Skipped(SkipReason::SessionUnavailable),
     };
-    SacCells { sac, sac_xla, delta, mixed, search_delta }
+    let recovery = match recovery_comparison_on(&cell) {
+        Some(c) => CellOutcome::Measured(c),
+        None => CellOutcome::Skipped(SkipReason::SessionUnavailable),
+    };
+    SacCells { sac, sac_xla, delta, mixed, search_delta, recovery }
 }
 
 /// Tensor-route upload-volume cell: the same SAC enforcement routed
@@ -756,7 +767,95 @@ pub fn render_search_delta(c: &SearchDeltaComparison) -> String {
     )
 }
 
-/// Human report of all five SAC/search cells, including explicit skip
+/// Recovery-restart cell: what an executor crash costs a live session.
+/// One warm-up enforcement (pays the base upload and any lazy
+/// compilation), one timed steady-state enforcement, then
+/// [`Handle::force_restart`] followed by a timed enforcement — the
+/// restarted executor must re-hydrate the session (reload artifacts,
+/// re-upload the constraint tensor, replay the base slots) before it
+/// can answer, and that re-hydration is what the second timing
+/// captures.
+///
+/// [`Handle::force_restart`]: crate::coordinator::Handle::force_restart
+#[derive(Clone, Debug)]
+pub struct RecoveryComparison {
+    pub n: usize,
+    pub density: f64,
+    pub dom: usize,
+    /// Wall time of one enforcement on a warm, healthy session.
+    pub steady_ms: f64,
+    /// Wall time of the first enforcement after the forced restart
+    /// (includes the executor's session re-hydration).
+    pub restart_ms: f64,
+    /// restart_ms / steady_ms — the crash-cost multiplier.
+    pub restart_cost_ratio: f64,
+    /// Restarts the session's supervisor performed (expect 1).
+    pub executor_restarts: u64,
+    /// Base planes replayed during re-hydration.
+    pub replayed_bases: u64,
+}
+
+/// Measure the recovery-restart cell.  Self-skips (`None`) when no
+/// session can start, any enforcement poisons the engine, or the
+/// outcome diverges across the restart (recovery must be semantically
+/// invisible — a diverging run has nothing comparable to publish).
+pub fn recovery_comparison(spec: &GridSpec) -> Option<RecoveryComparison> {
+    recovery_comparison_on(&tensor_cell(spec)?)
+}
+
+fn recovery_comparison_on(cell: &TensorCell) -> Option<RecoveryComparison> {
+    use crate::coordinator::{Coordinator, TensorEngine};
+
+    let p = &cell.p;
+    let coord = Coordinator::start(p, cell.config.clone()).ok()?;
+    let handle = coord.handle();
+    let mut engine = TensorEngine::new(handle.clone());
+
+    let run_once = |engine: &mut TensorEngine| -> Option<(f64, bool)> {
+        let mut s = State::new(p);
+        let mut c = Counters::default();
+        let sw = Stopwatch::start();
+        let out = engine.enforce(p, &mut s, &[], &mut c);
+        let ms = sw.elapsed_ms();
+        if engine.failure().is_some() {
+            return None;
+        }
+        Some((ms, out.is_consistent()))
+    };
+
+    let (_, ok_warm) = run_once(&mut engine)?;
+    let (steady_ms, ok_steady) = run_once(&mut engine)?;
+    handle.force_restart().ok()?;
+    let (restart_ms, ok_restart) = run_once(&mut engine)?;
+    if ok_warm != ok_steady || ok_steady != ok_restart {
+        eprintln!("recovery restart cell: outcome diverged across the restart — skipping");
+        return None;
+    }
+    let m = coord.metrics().snapshot();
+    Some(RecoveryComparison {
+        n: cell.n,
+        density: cell.density,
+        dom: cell.dom,
+        steady_ms,
+        restart_ms,
+        restart_cost_ratio: if steady_ms > 0.0 { restart_ms / steady_ms } else { 0.0 },
+        executor_restarts: m.executor_restarts,
+        replayed_bases: m.replayed_bases,
+    })
+}
+
+/// One-line report for the recovery-restart cell.
+pub fn render_recovery(c: &RecoveryComparison) -> String {
+    format!(
+        "recovery restart cell (n={}, density={:.2}, dom={}): steady {:.1}ms vs \
+         first-after-restart {:.1}ms -> {:.2}x restart cost ({} restart(s), {} base(s) \
+         replayed)\n",
+        c.n, c.density, c.dom, c.steady_ms, c.restart_ms, c.restart_cost_ratio,
+        c.executor_restarts, c.replayed_bases
+    )
+}
+
+/// Human report of all six SAC/search cells, including explicit skip
 /// notes.
 pub fn render_cells(cells: &SacCells) -> String {
     let mut out = String::new();
@@ -788,6 +887,12 @@ pub fn render_cells(cells: &SacCells) -> String {
         CellOutcome::Measured(c) => out.push_str(&render_search_delta(c)),
         CellOutcome::Skipped(r) => {
             out.push_str(&format!("search delta cell: skipped ({})\n", r.as_str()))
+        }
+    }
+    match &cells.recovery {
+        CellOutcome::Measured(c) => out.push_str(&render_recovery(c)),
+        CellOutcome::Skipped(r) => {
+            out.push_str(&format!("recovery restart cell: skipped ({})\n", r.as_str()))
         }
     }
     out
@@ -840,7 +945,7 @@ pub fn render(results: &[CellResult], engines: &[&str]) -> String {
 }
 
 /// JSON export: grid metadata + one row per cell (BENCH_rtac.json),
-/// plus the densest-cell verdicts and the five SAC/search comparison cells —
+/// plus the densest-cell verdicts and the six SAC/search comparison cells —
 /// measured fields when run, an explicit `*_skipped: "<reason>"`
 /// marker when not (never silently absent).
 pub fn to_json(spec: &GridSpec, results: &[CellResult], cells: &SacCells) -> Json {
@@ -937,6 +1042,17 @@ pub fn to_json(spec: &GridSpec, results: &[CellResult], cells: &SacCells) -> Jso
         }
         CellOutcome::Skipped(r) => fields.push(("search_delta_skipped", s(r.as_str()))),
     }
+    match &cells.recovery {
+        CellOutcome::Measured(c) => {
+            fields.push(("recovery_restart_n", num(c.n as f64)));
+            fields.push(("recovery_restart_steady_ms", num(c.steady_ms)));
+            fields.push(("recovery_restart_ms", num(c.restart_ms)));
+            fields.push(("recovery_restart_cost_ratio", num(c.restart_cost_ratio)));
+            fields.push(("recovery_restart_executor_restarts", num(c.executor_restarts as f64)));
+            fields.push(("recovery_restart_replayed_bases", num(c.replayed_bases as f64)));
+        }
+        CellOutcome::Skipped(r) => fields.push(("recovery_restart_skipped", s(r.as_str()))),
+    }
     obj(fields)
 }
 
@@ -1003,6 +1119,7 @@ mod tests {
             "sac_delta_skipped",
             "sac_mixed_skipped",
             "search_delta_skipped",
+            "recovery_restart_skipped",
         ] {
             assert_eq!(parsed.get(key).unwrap().as_str(), Some("disabled"), "{key}");
         }
@@ -1039,8 +1156,9 @@ mod tests {
                 cells.search_delta,
                 CellOutcome::Skipped(SkipReason::NoArtifacts)
             ));
+            assert!(matches!(cells.recovery, CellOutcome::Skipped(SkipReason::NoArtifacts)));
         }
-        // render always mentions all five cells
+        // render always mentions all six cells
         let txt = render_cells(&cells);
         for needle in [
             "sac cell",
@@ -1048,6 +1166,7 @@ mod tests {
             "sac delta cell",
             "sac mixed cell",
             "search delta cell",
+            "recovery restart cell",
         ] {
             assert!(txt.contains(needle), "render_cells misses {needle}: {txt}");
         }
@@ -1198,13 +1317,25 @@ mod tests {
             ac_calls: 128,
             base_uploads: 1,
         });
+        let recovery = recovery_comparison(&spec).unwrap_or(RecoveryComparison {
+            n: 8,
+            density: 1.0,
+            dom: 4,
+            steady_ms: 1.0,
+            restart_ms: 9.0,
+            restart_cost_ratio: 9.0,
+            executor_restarts: 1,
+            replayed_bases: 1,
+        });
         assert!(render_delta(&delta).contains("upload volume"));
         assert!(render_mixed(&mixed).contains("best single"));
         assert!(render_search_delta(&search_delta).contains("base upload"));
+        assert!(render_recovery(&recovery).contains("restart cost"));
         let cells = SacCells {
             delta: CellOutcome::Measured(delta),
             mixed: CellOutcome::Measured(mixed),
             search_delta: CellOutcome::Measured(search_delta),
+            recovery: CellOutcome::Measured(recovery),
             ..SacCells::all_skipped(SkipReason::Disabled)
         };
         let j = to_json(&spec, &run(&spec, &["rtac"]), &cells);
@@ -1215,8 +1346,11 @@ mod tests {
         assert!(parsed.get("sac_mixed_best_single").is_some());
         assert!(parsed.get("search_delta_upload_ratio").is_some());
         assert!(parsed.get("search_delta_base_uploads").is_some());
+        assert!(parsed.get("recovery_restart_cost_ratio").is_some());
+        assert!(parsed.get("recovery_restart_replayed_bases").is_some());
         assert!(parsed.get("sac_delta_skipped").is_none());
         assert!(parsed.get("sac_mixed_skipped").is_none());
         assert!(parsed.get("search_delta_skipped").is_none());
+        assert!(parsed.get("recovery_restart_skipped").is_none());
     }
 }

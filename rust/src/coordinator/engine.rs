@@ -24,6 +24,7 @@
 //! paper's GPU experiments point at (DESIGN.md §3, examples/serve_demo).
 
 use crate::ac::{Counters, Outcome, Propagator};
+use crate::coordinator::retry::{Retry, RetryPolicy};
 use crate::coordinator::service::{Handle, Response, StaleTracker};
 use crate::core::{Problem, State, VarId};
 use crate::runtime::{decode_vars, encode_vars, plane_fingerprint, PlaneDelta};
@@ -44,6 +45,10 @@ pub struct TensorEngine {
     handle: Handle,
     /// `Some` = delta shipping (the default); `None` = full planes.
     delta: Option<DeltaState>,
+    /// The shared session retry policy (see `coordinator::retry`)
+    /// behind the fresh-base fallback: bounded re-upload attempts,
+    /// stale drops classified transient, everything else fatal.
+    retry: RetryPolicy,
     /// Set on coordinator failure: the engine is then poisoned and
     /// reports wipeouts to force search termination.
     pub failed: Option<String>,
@@ -55,14 +60,24 @@ impl TensorEngine {
     /// invalidation.
     pub fn new(handle: Handle) -> TensorEngine {
         let tracker = StaleTracker::attach(&handle);
-        TensorEngine { handle, delta: Some(DeltaState { tracker, last: None }), failed: None }
+        TensorEngine {
+            handle,
+            delta: Some(DeltaState { tracker, last: None }),
+            retry: RetryPolicy::no_backoff(3),
+            failed: None,
+        }
     }
 
     /// Full-plane engine: every AC call ships the whole encoded plane.
     /// The upload-volume baseline (`bench-rtac`'s search-delta cell,
     /// `rtac serve --worker-engine tensor-full`).
     pub fn full_plane(handle: Handle) -> TensorEngine {
-        TensorEngine { handle, delta: None, failed: None }
+        TensorEngine {
+            handle,
+            delta: None,
+            retry: RetryPolicy::no_backoff(3),
+            failed: None,
+        }
     }
 
     /// Ship `plane` and block for its enforcement response, in whatever
@@ -102,32 +117,39 @@ impl TensorEngine {
         }
         // fresh-base fallback: under heavy slot churn (more concurrent
         // writers than base_slots) even a just-uploaded base can be
-        // evicted before its first delta resolves, so retry a bounded
-        // number of times before giving up
-        for _ in 0..3 {
-            let fp = self.handle.upload_base(client, plane.clone())?;
-            debug_assert_eq!(fp, plane_fingerprint(&plane));
-            match self.handle.enforce_delta_blocking(client, PlaneDelta::empty(fp)) {
-                Ok(resp) => {
-                    if let Some(ds) = &mut self.delta {
-                        ds.last = Some(plane);
+        // evicted before its first delta resolves.  The shared session
+        // RetryPolicy bounds the re-upload attempts; a stale drop is
+        // Transient (re-upload and go again), anything else — session
+        // dead, moribund, deadline expired — is Fatal.
+        let retry = self.retry;
+        let handle = &self.handle;
+        let delta = &mut self.delta;
+        let resp = retry.run(
+            "fresh-base re-upload kept dying to eviction — the session's base_slots \
+             cap looks too small for the number of concurrent delta writers (raise \
+             --base-slots or use the full-plane worker engine)",
+            |_| {
+                let fp =
+                    handle.upload_base(client, plane.clone()).map_err(Retry::Fatal)?;
+                debug_assert_eq!(fp, plane_fingerprint(&plane));
+                match handle.enforce_delta_blocking(client, PlaneDelta::empty(fp)) {
+                    Ok(resp) => Ok(resp),
+                    Err(e) => {
+                        let ds = delta.as_mut().expect("delta mode");
+                        if ds.tracker.absorb_stale_drop(handle) {
+                            // evicted again: the next attempt re-uploads
+                            Err(Retry::Transient(e))
+                        } else {
+                            Err(Retry::Fatal(e))
+                        }
                     }
-                    return Ok(resp);
                 }
-                Err(e) => {
-                    let ds = self.delta.as_mut().expect("delta mode");
-                    if !ds.tracker.absorb_stale_drop(&self.handle) {
-                        return Err(e);
-                    }
-                    // evicted again: loop with a fresh upload
-                }
-            }
+            },
+        )?;
+        if let Some(ds) = delta.as_mut() {
+            ds.last = Some(plane);
         }
-        anyhow::bail!(
-            "delta base slot evicted repeatedly — the session's base_slots cap looks \
-             too small for the number of concurrent delta writers (raise --base-slots \
-             or use the full-plane worker engine)"
-        )
+        Ok(resp)
     }
 }
 

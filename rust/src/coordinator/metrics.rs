@@ -46,6 +46,10 @@ struct Inner {
     failed_batches: u64,
     dropped_requests: u64,
     stale_deltas: u64,
+    timed_out_requests: u64,
+    restart_dropped_requests: u64,
+    executor_restarts: u64,
+    replayed_bases: u64,
     shipped_f32: u64,
     base_uploads: u64,
     base_evictions: u64,
@@ -89,6 +93,13 @@ pub struct ClientMetrics {
     /// Deltas dropped because this client's base slot was stale,
     /// evicted, or never uploaded (a subset of `dropped_requests`).
     pub stale_deltas: u64,
+    /// Requests dropped past the per-request deadline
+    /// (`BatchPolicy::request_timeout`) — a subset of
+    /// `dropped_requests`.
+    pub timed_out_requests: u64,
+    /// Requests dropped by a moribund session (restart budget
+    /// exhausted) — a subset of `dropped_requests`.
+    pub restart_dropped_requests: u64,
     /// f32 values this client shipped (bases + delta rows).
     pub shipped_f32: u64,
     /// Base planes this client uploaded (first attach + every
@@ -158,6 +169,22 @@ pub struct MetricsSnapshot {
     /// submitting client's base slot (counted in `dropped_requests`
     /// too, so conservation holds).
     pub stale_deltas: u64,
+    /// Requests dropped executor-side past the per-request deadline
+    /// (`BatchPolicy::request_timeout`) — queued through a hang or a
+    /// restart backoff.  Counted in `dropped_requests` too.
+    pub timed_out_requests: u64,
+    /// Requests dropped by a *moribund* session: the restart budget
+    /// (`BatchPolicy::max_restarts`) was exhausted, so every further
+    /// request is dropped and counted here (and in `dropped_requests`)
+    /// to keep conservation exact through total executor loss.
+    pub restart_dropped_requests: u64,
+    /// Executor restarts performed by the supervisor (§Supervision &
+    /// recovery), each followed by a full session re-hydration.
+    pub executor_restarts: u64,
+    /// Base slots replayed across restarts (the host-resident,
+    /// content-fingerprinted slot map survives the runtime's death;
+    /// each retained slot counts once per restart).
+    pub replayed_bases: u64,
     /// Total f32 values shipped client→executor: full planes, delta
     /// rows, and base uploads.  The delta-vs-full bench cells compare
     /// this across submission modes.
@@ -239,6 +266,45 @@ impl Metrics {
         c.dropped_requests += 1;
     }
 
+    /// Record one request dropped past the per-request deadline
+    /// (executor-side expiry: the client's `recv_timeout` fired — or
+    /// will fire — against the same deadline).  A counted drop cause,
+    /// per client and in aggregate, so conservation holds.
+    pub fn on_request_timeout(&self, client: Option<ClientId>) {
+        let mut m = self.inner.lock().unwrap();
+        m.timed_out_requests += 1;
+        m.dropped_requests += 1;
+        if let Some(client) = client {
+            let c = m.client(client);
+            c.timed_out_requests += 1;
+            c.dropped_requests += 1;
+        }
+    }
+
+    /// Record one request dropped by a moribund session (restart budget
+    /// exhausted) — the last counted drop cause, so conservation holds
+    /// even through total executor loss.
+    pub fn on_restart_dropped(&self, client: Option<ClientId>) {
+        let mut m = self.inner.lock().unwrap();
+        m.restart_dropped_requests += 1;
+        m.dropped_requests += 1;
+        if let Some(client) = client {
+            let c = m.client(client);
+            c.restart_dropped_requests += 1;
+            c.dropped_requests += 1;
+        }
+    }
+
+    /// Record one supervised executor restart (after re-init succeeded).
+    pub fn on_executor_restart(&self) {
+        self.inner.lock().unwrap().executor_restarts += 1;
+    }
+
+    /// Record one base slot replayed through a restart's re-hydration.
+    pub fn on_base_replayed(&self) {
+        self.inner.lock().unwrap().replayed_bases += 1;
+    }
+
     /// Record one *successfully executed* batch: `real` occupied slots of
     /// `capacity`.  Must be called only after the runtime returned `Ok` —
     /// failed executions go through [`Metrics::on_batch_failed`] so they
@@ -307,6 +373,10 @@ impl Metrics {
             failed_batches: m.failed_batches,
             dropped_requests: m.dropped_requests,
             stale_deltas: m.stale_deltas,
+            timed_out_requests: m.timed_out_requests,
+            restart_dropped_requests: m.restart_dropped_requests,
+            executor_restarts: m.executor_restarts,
+            replayed_bases: m.replayed_bases,
             shipped_f32: m.shipped_f32,
             base_uploads: m.base_uploads,
             base_evictions: m.base_evictions,
@@ -332,6 +402,7 @@ impl MetricsSnapshot {
     pub fn summary(&self) -> String {
         format!(
             "req={} (delta={}) resp={} batches={} failed={} dropped={} stale_deltas={} \
+             timed_out={} restart_dropped={} restarts={} replayed_bases={} \
              shipped={}f32 bases={} evicted={} occ={:.2} padded={} \
              wipeouts={} queue={:.0}µs exec={:.0}µs total={:.0}µs iters={:.2}",
             self.requests,
@@ -341,6 +412,10 @@ impl MetricsSnapshot {
             self.failed_batches,
             self.dropped_requests,
             self.stale_deltas,
+            self.timed_out_requests,
+            self.restart_dropped_requests,
+            self.executor_restarts,
+            self.replayed_bases,
             self.shipped_f32,
             self.base_uploads,
             self.base_evictions,
@@ -492,6 +567,50 @@ mod tests {
         assert!(ca.conserved() && cb.conserved(), "{s:?}");
         assert_eq!(ca.delta_hit_rate(), 1.0);
         assert!(s.conserved());
+    }
+
+    #[test]
+    fn timeout_and_moribund_drops_preserve_conservation() {
+        let m = Metrics::new();
+        let (a, _) = two_clients();
+        // three client requests: one served, one expired past the
+        // deadline, one dropped by the moribund session
+        for _ in 0..3 {
+            m.on_submit(Some(a), 8, true);
+        }
+        m.on_batch(1, 1, Duration::from_micros(10));
+        m.on_response(Some(a), Duration::ZERO, Duration::from_micros(20), 2, false);
+        m.on_request_timeout(Some(a));
+        m.on_restart_dropped(Some(a));
+        // plus one unattributed full-plane request expiring
+        m.on_submit(None, 64, false);
+        m.on_request_timeout(None);
+        let s = m.snapshot();
+        assert_eq!(s.timed_out_requests, 2);
+        assert_eq!(s.restart_dropped_requests, 1);
+        assert_eq!(s.dropped_requests, 3, "both causes count into dropped");
+        assert!(s.conserved(), "{s:?}");
+        assert!(s.clients_conserved(), "{s:?}");
+        let c = s.client(a.id()).unwrap();
+        assert_eq!(c.timed_out_requests, 1);
+        assert_eq!(c.restart_dropped_requests, 1);
+        assert_eq!(c.dropped_requests, 2);
+        assert!(s.summary().contains("timed_out=2"));
+        assert!(s.summary().contains("restart_dropped=1"));
+    }
+
+    #[test]
+    fn restart_and_replay_counters_accumulate() {
+        let m = Metrics::new();
+        m.on_executor_restart();
+        m.on_base_replayed();
+        m.on_base_replayed();
+        let s = m.snapshot();
+        assert_eq!(s.executor_restarts, 1);
+        assert_eq!(s.replayed_bases, 2);
+        assert!(s.summary().contains("restarts=1"));
+        assert!(s.summary().contains("replayed_bases=2"));
+        assert!(s.conserved(), "restarts/replays are not requests");
     }
 
     #[test]

@@ -22,6 +22,11 @@
 //! * [`engine`] — [`TensorEngine`], the [`crate::ac::Propagator`] that
 //!   routes a MAC solver's AC calls through a session (shipping
 //!   base-once-then-row-diffs by default).
+//! * [`retry`] — the shared [`RetryPolicy`] (bounded attempts,
+//!   exponential backoff, transient-vs-fatal classification) behind
+//!   every client-side recovery loop, and the executor-side supervision
+//!   story's client-facing half: a restarted session answers retried
+//!   calls, a moribund one fails them fatally.
 //!
 //! ```
 //! use rtac::coordinator::BatchPolicy;
@@ -34,10 +39,12 @@
 
 pub mod engine;
 pub mod metrics;
+pub mod retry;
 pub mod service;
 
 pub use engine::TensorEngine;
 pub use metrics::{ClientMetrics, Metrics, MetricsSnapshot};
+pub use retry::{Retry, RetryPolicy};
 pub use service::{
     BatchPolicy, ClientId, Coordinator, CoordinatorConfig, Handle, Response, StaleTracker,
 };

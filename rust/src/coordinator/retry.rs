@@ -1,0 +1,209 @@
+//! The session-wide retry policy (§Unified retry policy).
+//!
+//! Before this module, recovery logic lived in per-call-site ad-hoc
+//! forms: a hard-coded *one-shot* stale-delta retry in the SAC probe
+//! backend (`ac/sac.rs`), a magic-constant `0..3` re-upload loop in the
+//! delta engine (`coordinator/engine.rs`), and nothing at all in the
+//! mixed backend's tensor share.  [`RetryPolicy`] replaces all three
+//! with one bounded-attempt, exponential-backoff loop plus an explicit
+//! transient-vs-fatal classification ([`Retry`]) made *by the call
+//! site*, which is the only place that can tell "my base slot was
+//! evicted: re-upload and go again" from "the session is dead: stop".
+//!
+//! ```
+//! use rtac::coordinator::{Retry, RetryPolicy};
+//!
+//! let policy = RetryPolicy::no_backoff(3);
+//! let mut calls = 0;
+//! let out: anyhow::Result<u32> = policy.run("demo op", |attempt| {
+//!     calls += 1;
+//!     if attempt < 2 {
+//!         Err(Retry::Transient(anyhow::anyhow!("slot evicted")))
+//!     } else {
+//!         Ok(attempt)
+//!     }
+//! });
+//! assert_eq!(out.unwrap(), 2);
+//! assert_eq!(calls, 3, "attempts 0 and 1 were transient failures");
+//! ```
+
+use std::time::Duration;
+
+use anyhow::Result;
+
+/// A failed attempt, classified by the call site.
+pub enum Retry {
+    /// Worth another attempt within the budget: a stale/evicted base
+    /// slot, a dropped request on a session that still answers, a
+    /// mid-restart timeout.
+    Transient(anyhow::Error),
+    /// Retrying cannot help (the session is gone, the input is
+    /// malformed): fail now, budget notwithstanding.
+    Fatal(anyhow::Error),
+}
+
+/// Bounded attempts + exponential backoff + the caller's
+/// transient-vs-fatal classification.  `Copy` on purpose: callers store
+/// one on `self` and run `self.retry.run(|..| self.method(..))` without
+/// a double borrow.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RetryPolicy {
+    /// Total attempts (first try included).  Clamped to >= 1.
+    pub max_attempts: u32,
+    /// Sleep before attempt N+1 is `base_backoff * 2^N`, capped at
+    /// `max_backoff`.  `Duration::ZERO` disables sleeping — the right
+    /// setting when the "backoff" is itself a blocking round-trip
+    /// through the executor (the stale-delta re-upload path).
+    pub base_backoff: Duration,
+    pub max_backoff: Duration,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy {
+            max_attempts: 3,
+            base_backoff: Duration::from_millis(1),
+            max_backoff: Duration::from_millis(100),
+        }
+    }
+}
+
+impl RetryPolicy {
+    /// A policy of `max_attempts` immediate attempts (no sleeping) —
+    /// for retries whose recovery action (a base re-upload, a fresh
+    /// submission) already blocks on the executor.
+    pub fn no_backoff(max_attempts: u32) -> RetryPolicy {
+        RetryPolicy {
+            max_attempts,
+            base_backoff: Duration::ZERO,
+            max_backoff: Duration::ZERO,
+        }
+    }
+
+    /// The backoff slept before attempt `next_attempt` (0-based; the
+    /// first attempt never sleeps).
+    pub fn backoff(&self, next_attempt: u32) -> Duration {
+        if next_attempt == 0 || self.base_backoff.is_zero() {
+            return Duration::ZERO;
+        }
+        self.base_backoff
+            .saturating_mul(2u32.saturating_pow(next_attempt - 1))
+            .min(self.max_backoff)
+    }
+
+    /// Run `op` until it succeeds, fails fatally, or the attempt budget
+    /// is spent.  `op` receives the 0-based attempt number so call
+    /// sites can vary the recovery action (attempt 0 = the cheap path,
+    /// attempts >= 1 = re-upload and resubmit).  The last transient
+    /// error is annotated with the spent budget — the "retry bound
+    /// exhausted" diagnosis the old ad-hoc loops buried in per-site
+    /// prose.
+    pub fn run<T>(
+        &self,
+        what: &str,
+        mut op: impl FnMut(u32) -> std::result::Result<T, Retry>,
+    ) -> Result<T> {
+        let attempts = self.max_attempts.max(1);
+        let mut last: Option<anyhow::Error> = None;
+        for attempt in 0..attempts {
+            let pause = self.backoff(attempt);
+            if !pause.is_zero() {
+                std::thread::sleep(pause);
+            }
+            match op(attempt) {
+                Ok(v) => return Ok(v),
+                Err(Retry::Fatal(e)) => return Err(e),
+                Err(Retry::Transient(e)) => last = Some(e),
+            }
+        }
+        let e = last.expect("attempts >= 1, so at least one error was recorded");
+        Err(e.context(format!(
+            "{what}: retry budget exhausted after {attempts} attempt(s)"
+        )))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use anyhow::anyhow;
+
+    #[test]
+    fn first_success_needs_one_attempt() {
+        let mut calls = 0;
+        let out: Result<u32> = RetryPolicy::default().run("op", |_| {
+            calls += 1;
+            Ok(7)
+        });
+        assert_eq!(out.unwrap(), 7);
+        assert_eq!(calls, 1);
+    }
+
+    #[test]
+    fn transient_failures_spend_the_budget_then_surface_the_last_error() {
+        let policy = RetryPolicy::no_backoff(3);
+        let mut calls = 0;
+        let out: Result<u32> = policy.run("re-upload base", |attempt| {
+            calls += 1;
+            Err(Retry::Transient(anyhow!("evicted on attempt {attempt}")))
+        });
+        assert_eq!(calls, 3);
+        let msg = format!("{:#}", out.unwrap_err());
+        assert!(msg.contains("retry budget exhausted after 3 attempt(s)"), "{msg}");
+        assert!(msg.contains("re-upload base"), "{msg}");
+        assert!(msg.contains("attempt 2"), "last transient error kept: {msg}");
+    }
+
+    #[test]
+    fn fatal_failures_stop_immediately() {
+        let policy = RetryPolicy::no_backoff(5);
+        let mut calls = 0;
+        let out: Result<u32> = policy.run("op", |_| {
+            calls += 1;
+            Err(Retry::Fatal(anyhow!("session is gone")))
+        });
+        assert_eq!(calls, 1, "fatal must not retry");
+        let msg = format!("{:#}", out.unwrap_err());
+        assert!(msg.contains("session is gone"), "{msg}");
+        assert!(!msg.contains("retry budget"), "fatal keeps the raw error: {msg}");
+    }
+
+    #[test]
+    fn recovery_on_a_later_attempt_succeeds() {
+        let policy = RetryPolicy::no_backoff(4);
+        let out: Result<u32> = policy.run("op", |attempt| {
+            if attempt < 2 {
+                Err(Retry::Transient(anyhow!("not yet")))
+            } else {
+                Ok(attempt)
+            }
+        });
+        assert_eq!(out.unwrap(), 2);
+    }
+
+    #[test]
+    fn backoff_doubles_and_caps() {
+        let policy = RetryPolicy {
+            max_attempts: 10,
+            base_backoff: Duration::from_millis(4),
+            max_backoff: Duration::from_millis(10),
+        };
+        assert_eq!(policy.backoff(0), Duration::ZERO, "first attempt never sleeps");
+        assert_eq!(policy.backoff(1), Duration::from_millis(4));
+        assert_eq!(policy.backoff(2), Duration::from_millis(8));
+        assert_eq!(policy.backoff(3), Duration::from_millis(10), "capped");
+        assert_eq!(policy.backoff(9), Duration::from_millis(10), "still capped");
+        assert_eq!(RetryPolicy::no_backoff(3).backoff(2), Duration::ZERO);
+    }
+
+    #[test]
+    fn zero_attempts_clamps_to_one() {
+        let mut calls = 0;
+        let out: Result<()> = RetryPolicy::no_backoff(0).run("op", |_| {
+            calls += 1;
+            Err(Retry::Transient(anyhow!("nope")))
+        });
+        assert!(out.is_err());
+        assert_eq!(calls, 1);
+    }
+}

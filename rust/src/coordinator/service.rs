@@ -33,11 +33,30 @@
 //! * **Conservation.**  At quiescence, `requests == responses +
 //!   dropped_requests` ([`crate::coordinator::MetricsSnapshot::conserved`]):
 //!   each submitted plane is either answered or explicitly accounted as
-//!   dropped by one of the two counted causes — a failed fused
-//!   execution, or a stale delta (see below).  A graceful shutdown
+//!   dropped by one of the counted causes — a failed fused execution, a
+//!   stale delta (see below), an expired per-request deadline
+//!   (`timed_out_requests`), or a moribund session drop
+//!   (`restart_dropped_requests`).  The invariant holds **across
+//!   executor restarts** (§Supervision below).  A graceful shutdown
 //!   cannot strand requests (the executor's channel drains buffered
 //!   messages before disconnecting); the only uncounted path is an
 //!   executor panic, which aborts the session.
+//! * **Supervision & recovery.**  A failed-execution streak (or
+//!   [`Handle::force_restart`]) restarts the executor's XLA state up to
+//!   [`BatchPolicy::max_restarts`] times with exponential backoff, then
+//!   re-hydrates the session deterministically: the constraint tensor
+//!   is re-uploaded, the host-resident (content-fingerprinted)
+//!   base-slot map is replayed (`replayed_bases`), and in-flight
+//!   requests are re-enqueued — except those past their deadline, which
+//!   are dropped and counted.  An exhausted budget turns the session
+//!   *moribund*: every further request is dropped and counted, so
+//!   conservation survives even total executor loss, and clients
+//!   degrade to CPU engines.
+//! * **Deadlines.**  No `Handle` blocking call waits forever: every
+//!   `enforce_*_blocking` wait is bounded by
+//!   [`BatchPolicy::request_timeout`], and the executor drops (and
+//!   counts) queued requests that outlive the same deadline, so the two
+//!   sides agree on the accounting.
 //!
 //! # Delta planes and per-client base slots
 //!
@@ -163,6 +182,25 @@ pub struct BatchPolicy {
     /// uploads into a full map, the least-recently-used other slot is
     /// evicted.
     pub base_slots: usize,
+    /// Per-request deadline (`rtac serve --request-timeout`).  Every
+    /// [`Handle`] blocking wait (`enforce_blocking`,
+    /// `enforce_delta_blocking`, both batch variants) is bounded by it
+    /// and returns a named timeout error when it expires; the executor
+    /// independently drops — and counts as `timed_out_requests`, a
+    /// counted drop cause — any queued request whose deadline passed
+    /// (e.g. while a restart backoff ran), so `requests == responses +
+    /// dropped` holds whichever side notices first.
+    pub request_timeout: Duration,
+    /// Executor restarts the supervisor may spend over the session's
+    /// lifetime (`rtac serve --max-restarts`).  A failed-execution
+    /// streak (or [`Handle::force_restart`]) triggers a restart with
+    /// exponential backoff and a full session re-hydration (constraint
+    /// tensor re-upload, base-slot replay, in-flight re-enqueue).  Once
+    /// the budget is exhausted the session goes *moribund*: every
+    /// remaining and future request is dropped and counted
+    /// (`restart_dropped_requests`) so conservation still holds, and
+    /// serve workers degrade to CPU engines.
+    pub max_restarts: u32,
 }
 
 impl Default for BatchPolicy {
@@ -172,6 +210,8 @@ impl Default for BatchPolicy {
             max_wait: Duration::from_micros(300),
             adaptive: false,
             base_slots: 8,
+            request_timeout: Duration::from_secs(30),
+            max_restarts: 3,
         }
     }
 }
@@ -223,6 +263,73 @@ impl BaseSlots {
     /// Resident slots (for tests and reporting).
     pub(crate) fn len(&self) -> usize {
         self.slots.len()
+    }
+
+    /// Drop every resident slot — the fault-injection "base-cache
+    /// wipe".  After it, every client's next delta drops as stale and
+    /// the client re-uploads (the same observable state as a restart
+    /// that lost the cache).  Returns how many slots were wiped.
+    #[cfg(test)]
+    pub(crate) fn wipe(&mut self) -> usize {
+        let n = self.slots.len();
+        self.slots.clear();
+        n
+    }
+}
+
+/// Supervision bookkeeping (§Supervision & recovery): restart budget,
+/// failed-execution streak, and exponential backoff.  Pure state — no
+/// clock, no channel — shared by the real executor thread and the
+/// chaos-wrapped CPU-reference executor in the tests, so the fault
+/// harness exercises the *same* restart decisions production takes.
+pub(crate) struct Supervisor {
+    max_restarts: u32,
+    restarts: u32,
+    failed_streak: u32,
+}
+
+impl Supervisor {
+    /// Consecutive failed fused executions that trigger a restart.  One
+    /// failure can be a transient input problem; a streak means the
+    /// executor itself is sick.
+    pub(crate) const FAILED_STREAK_LIMIT: u32 = 2;
+    /// Backoff before the first restart; doubles per spent restart so a
+    /// crash-looping executor backs off instead of thrashing.
+    pub(crate) const BASE_BACKOFF: Duration = Duration::from_millis(10);
+
+    pub(crate) fn new(max_restarts: u32) -> Supervisor {
+        Supervisor { max_restarts, restarts: 0, failed_streak: 0 }
+    }
+
+    /// A fused execution succeeded: the streak resets (only
+    /// *consecutive* failures indicate executor sickness).
+    pub(crate) fn on_batch_ok(&mut self) {
+        self.failed_streak = 0;
+    }
+
+    /// A fused execution failed.  True when the streak has reached the
+    /// restart threshold.
+    pub(crate) fn on_batch_failed(&mut self) -> bool {
+        self.failed_streak += 1;
+        self.failed_streak >= Self::FAILED_STREAK_LIMIT
+    }
+
+    /// Spend one restart from the budget: returns the backoff to sleep
+    /// before re-initialising, or `None` when the budget is exhausted
+    /// (the session goes moribund).
+    pub(crate) fn begin_restart(&mut self) -> Option<Duration> {
+        if self.restarts >= self.max_restarts {
+            return None;
+        }
+        let backoff = Self::BASE_BACKOFF * 2u32.saturating_pow(self.restarts);
+        self.restarts += 1;
+        self.failed_streak = 0;
+        Some(backoff)
+    }
+
+    /// Restarts spent so far.
+    pub(crate) fn restarts(&self) -> u32 {
+        self.restarts
     }
 }
 
@@ -318,6 +425,11 @@ enum Msg {
     /// the delta protocol — see the module docs).  Produces no response
     /// of its own.
     Base { client: ClientId, fp: u64, plane: Vec<f32> },
+    /// Restart and re-hydrate the session as if the executor had just
+    /// crashed ([`Handle::force_restart`]) — the live measurement hook
+    /// behind the `recovery_restart` bench cell.  Spends one unit of
+    /// the restart budget; produces no response of its own.
+    ForceRestart,
 }
 
 /// A request: one domains plane to enforce.
@@ -481,6 +593,12 @@ pub struct Handle {
     /// (`search::parallel`) read this to decide between delta and
     /// full-plane shipping up front instead of thrashing the slot map.
     pub base_slots: usize,
+    /// The session's per-request deadline
+    /// ([`BatchPolicy::request_timeout`]): every blocking wait on this
+    /// handle is bounded by it, and the executor drops (and counts)
+    /// queued requests that outlive it — no `Handle` blocking call
+    /// waits forever.
+    pub request_timeout: Duration,
     /// Issues session-unique [`ClientId`]s ([`Handle::attach`]); shared
     /// by every clone of this handle.
     next_client: Arc<AtomicU64>,
@@ -539,7 +657,9 @@ impl Handle {
 
     /// A submitted request's responder was dropped without an answer:
     /// its fused execution failed, it was a delta probe against a stale
-    /// base, or the executor exited with the request in flight.  The
+    /// base, it outlived its deadline executor-side, the session went
+    /// moribund (restart budget exhausted), or the executor exited with
+    /// the request in flight.  The
     /// counters are cumulative over the session, so when more than one
     /// cause has ever occurred the error lists every candidate instead
     /// of guessing which one claimed *this* request.
@@ -560,6 +680,21 @@ impl Handle {
                 m.stale_deltas
             ));
         }
+        if m.timed_out_requests > 0 {
+            causes.push(format!(
+                "{} request(s) outlived the {:?} request_timeout deadline on the \
+                 executor (queued through a hang or a restart backoff)",
+                m.timed_out_requests, self.request_timeout
+            ));
+        }
+        if m.restart_dropped_requests > 0 {
+            causes.push(format!(
+                "{} request(s) dropped with the executor's restart budget exhausted \
+                 after {} restart(s) — the session is moribund; degrade to a CPU \
+                 engine or start a fresh session",
+                m.restart_dropped_requests, m.executor_restarts
+            ));
+        }
         if causes.is_empty() {
             anyhow!(
                 "coordinator executor exited before answering (session shut down with \
@@ -574,10 +709,45 @@ impl Handle {
         }
     }
 
-    /// Submit and block for the result.
+    /// Deadline-bounded response wait shared by every
+    /// `enforce_*_blocking` call: no `Handle` blocking call may wait
+    /// past the session's per-request deadline
+    /// ([`BatchPolicy::request_timeout`]).  A disconnected responder is
+    /// a *dropped* request (the executor accounted for it); an expired
+    /// deadline is a *timed-out* wait — the executor will drop and
+    /// count the request as `timed_out_requests` when it reaches it, or
+    /// answer into the abandoned receiver, so conservation holds either
+    /// way.
+    fn recv_deadline(&self, rx: &mpsc::Receiver<Response>, deadline: Instant) -> Result<Response> {
+        let left = deadline.saturating_duration_since(Instant::now());
+        match rx.recv_timeout(left) {
+            Ok(resp) => Ok(resp),
+            Err(mpsc::RecvTimeoutError::Disconnected) => Err(self.dropped_err()),
+            Err(mpsc::RecvTimeoutError::Timeout) => Err(anyhow!(
+                "request timed out after {:?} (BatchPolicy::request_timeout): the \
+                 executor did not answer before the per-request deadline — it is \
+                 hung, mid-restart, or the queue outgrew the deadline",
+                self.request_timeout
+            )),
+        }
+    }
+
+    /// Ask the executor to restart and re-hydrate its session as if it
+    /// had just crashed (§Supervision & recovery) — the live
+    /// measurement hook behind the `recovery_restart` bench cell.
+    /// Spends one unit of the session's restart budget
+    /// ([`BatchPolicy::max_restarts`]).  Returns once the message is
+    /// queued; the next enforcement blocks until the restarted session
+    /// serves it, which is exactly what the bench times.
+    pub fn force_restart(&self) -> Result<()> {
+        self.tx.send(Msg::ForceRestart).map_err(|_| self.executor_gone_err())
+    }
+
+    /// Submit and block (deadline-bounded) for the result.
     pub fn enforce_blocking(&self, plane: Vec<f32>) -> Result<Response> {
+        let deadline = Instant::now() + self.request_timeout;
         let rx = self.submit(plane)?;
-        rx.recv().map_err(|_| self.dropped_err())
+        self.recv_deadline(&rx, deadline)
     }
 
     /// Submit several planes back-to-back — the batched-probe path.
@@ -715,25 +885,28 @@ impl Handle {
     }
 
     /// Submit one chained delta ([`Handle::submit_delta`]) and block
-    /// for the response.
+    /// (deadline-bounded) for the response.
     pub fn enforce_delta_blocking(&self, client: ClientId, delta: PlaneDelta) -> Result<Response> {
+        let deadline = Instant::now() + self.request_timeout;
         let rx = self.submit_delta(client, delta)?;
-        rx.recv().map_err(|_| self.dropped_err())
+        self.recv_deadline(&rx, deadline)
     }
 
     /// Submit a delta probe round and block for every response, in
-    /// order.
+    /// order.  The whole round shares one deadline anchored at
+    /// submission — a round is one logical request, so its last probe
+    /// must not extend the wait by K deadlines.
     pub fn enforce_batch_delta_blocking(
         &self,
         client: ClientId,
         deltas: Vec<PlaneDelta>,
     ) -> Result<Vec<Response>> {
+        let deadline = Instant::now() + self.request_timeout;
         self.submit_batch_delta(client, deltas)?
             .into_iter()
             .enumerate()
             .map(|(i, rx)| {
-                rx.recv()
-                    .map_err(|_| self.dropped_err())
+                self.recv_deadline(&rx, deadline)
                     .with_context(|| format!("delta probe {i}"))
             })
             .collect()
@@ -749,13 +922,15 @@ impl Handle {
     }
 
     /// Submit a probe batch and block for every response, in order.
+    /// Like the delta round, the batch shares one deadline anchored at
+    /// submission.
     pub fn enforce_batch_blocking(&self, planes: Vec<Vec<f32>>) -> Result<Vec<Response>> {
+        let deadline = Instant::now() + self.request_timeout;
         self.submit_batch(planes)?
             .into_iter()
             .enumerate()
             .map(|(i, rx)| {
-                rx.recv()
-                    .map_err(|_| self.dropped_err())
+                self.recv_deadline(&rx, deadline)
                     .with_context(|| format!("batched probe {i}"))
             })
             .collect()
@@ -799,10 +974,7 @@ impl Coordinator {
             })
             .context("spawning executor thread")?;
 
-        ready_rx
-            .recv()
-            .context("executor thread died during startup")?
-            .context("executor startup failed")?;
+        await_ready(&ready_rx, STARTUP_FENCE_TIMEOUT)?;
 
         Ok(Coordinator {
             handle: Handle {
@@ -811,6 +983,7 @@ impl Coordinator {
                 metrics,
                 compiled_batches,
                 base_slots: config.policy.base_slots,
+                request_timeout: config.policy.request_timeout,
                 next_client: Arc::new(AtomicU64::new(0)),
             },
             join: Some(join),
@@ -940,9 +1113,126 @@ fn send_ready<T>(ready_tx: &mpsc::Sender<Result<()>>, init: Result<T>) -> Option
     }
 }
 
+/// How long [`Coordinator::start`] waits on the startup fence.
+/// Generous — the executor's init compiles every artifact of the
+/// session's bucket, which is seconds, not minutes — but *bounded*: a
+/// wedged init must surface as a named startup error, never as a
+/// forever-blocked `start`.
+pub(crate) const STARTUP_FENCE_TIMEOUT: Duration = Duration::from_secs(120);
+
+/// Client half of the startup fence: wait (bounded) for the executor's
+/// ready signal.  The deadline turns a *hung* executor init — a stuck
+/// artifact compile, a wedged device — into a named startup error
+/// instead of blocking [`Coordinator::start`] forever; a *dead* init
+/// thread and a *failed* init keep their established error texts.
+fn await_ready(ready_rx: &mpsc::Receiver<Result<()>>, timeout: Duration) -> Result<()> {
+    match ready_rx.recv_timeout(timeout) {
+        Ok(init) => init.context("executor startup failed"),
+        Err(mpsc::RecvTimeoutError::Disconnected) => {
+            Err(anyhow!("executor thread died during startup"))
+        }
+        Err(mpsc::RecvTimeoutError::Timeout) => Err(anyhow!(
+            "executor startup timed out after {timeout:?} (startup fence deadline): \
+             init hung mid runtime-load/compile/upload — the thread is detached, \
+             not joined; fix the artifact dir or the device before retrying"
+        )),
+    }
+}
+
+/// Executor-side session state that dies with the runtime and is
+/// rebuilt by a restart: the PJRT runtime (compiled artifacts included)
+/// and the device-resident constraint tensor, plus the compiled batch
+/// sizes re-read from the freshly loaded manifest.
+type ExecState = (Runtime, crate::runtime::DeviceTensor, Vec<usize>);
+
+/// Re-hydrate a restarted session (§Supervision & recovery): spend one
+/// restart from the budget, sleep its backoff, re-run the full init
+/// (runtime load + artifact compilation + constraint-tensor re-upload),
+/// then replay the session state the runtime's death could not reach —
+/// the base-slot map is host-resident and content-fingerprinted, so its
+/// replay is a deterministic retention, counted per slot as
+/// `replayed_bases` — and re-enqueue the in-flight requests, dropping
+/// (and counting as timed-out) those whose deadline passed while the
+/// executor was down, so conservation holds across the restart.  A
+/// failed re-init spends further restarts until the budget runs out;
+/// `None` means the budget is exhausted and the caller must go
+/// moribund.
+fn restart_session(
+    init: &dyn Fn() -> Result<ExecState>,
+    supervisor: &mut Supervisor,
+    slots: &BaseSlots,
+    pending: &mut Vec<Request>,
+    request_timeout: Duration,
+    metrics: &Metrics,
+    why: &str,
+) -> Option<ExecState> {
+    loop {
+        let backoff = supervisor.begin_restart()?;
+        std::thread::sleep(backoff);
+        match init() {
+            Ok(state) => {
+                metrics.on_executor_restart();
+                for _ in 0..slots.len() {
+                    metrics.on_base_replayed();
+                }
+                let before = pending.len();
+                pending.retain(|r| {
+                    if r.submitted.elapsed() > request_timeout {
+                        metrics.on_request_timeout(r.payload.client());
+                        false
+                    } else {
+                        true
+                    }
+                });
+                eprintln!(
+                    "rtac-executor: restart {} after {why}: session re-hydrated \
+                     ({} base slot(s) replayed, {} in-flight request(s) re-enqueued, \
+                     {} dropped past their deadline)",
+                    supervisor.restarts(),
+                    slots.len(),
+                    pending.len(),
+                    before - pending.len(),
+                );
+                return Some(state);
+            }
+            Err(e) => {
+                eprintln!(
+                    "rtac-executor: restart {} after {why} failed to re-init: {e:#}",
+                    supervisor.restarts()
+                );
+            }
+        }
+    }
+}
+
+/// The restart budget is exhausted: the session can no longer execute,
+/// but conservation must hold and [`Coordinator::shutdown`] must still
+/// join — so stay on the channel, dropping (and counting as
+/// `restart_dropped_requests`) every in-flight and future request until
+/// all handles disconnect.  Clients see the moribund cause through
+/// `Handle::dropped_err` and degrade to CPU engines
+/// (`search::parallel`).
+fn drain_moribund(rx: &mpsc::Receiver<Msg>, pending: &mut Vec<Request>, metrics: &Metrics) {
+    eprintln!(
+        "rtac-executor: restart budget exhausted — session is moribund; dropping \
+         all in-flight and future requests (clients degrade to CPU engines)"
+    );
+    for r in pending.drain(..) {
+        metrics.on_restart_dropped(r.payload.client());
+    }
+    loop {
+        match rx.recv() {
+            Ok(Msg::Req(r)) => metrics.on_restart_dropped(r.payload.client()),
+            Ok(Msg::Base { .. }) | Ok(Msg::ForceRestart) => {}
+            Err(_) => return, // all handles dropped
+        }
+    }
+}
+
 /// Executor main loop: owns all XLA state, plus the session's
 /// per-client delta base slots (see the module docs for the cache
-/// rules).
+/// rules) and the supervision state (§Supervision & recovery: restart
+/// budget, failed-execution streak, per-request deadlines).
 fn executor_thread(
     config: CoordinatorConfig,
     bucket: Bucket,
@@ -951,15 +1241,12 @@ fn executor_thread(
     ready_tx: mpsc::Sender<Result<()>>,
     metrics: Arc<Metrics>,
 ) {
-    let init = (|| -> Result<(Runtime, crate::runtime::DeviceTensor, Vec<usize>)> {
+    let init = || -> Result<ExecState> {
         // Load only this session's bucket (all batch sizes + the
         // unbatched fixpoint), keeping startup proportional to what
         // we'll run.
-        let runtime = Runtime::load_filtered(&config.artifact_dir, |e| {
-            e.n == bucket.n
-                && e.d == bucket.d
-                && matches!(e.kind, Kind::Fixpoint | Kind::FixpointBatched)
-        })?;
+        let runtime =
+            Runtime::load_fixpoint_bucket(&config.artifact_dir, bucket.n, bucket.d)?;
         let batch_sizes = compiled_batch_sizes(runtime.manifest(), bucket);
         // §Perf L3: upload the session's constraint tensor ONCE; every
         // batch then moves only the small vars planes host→device.
@@ -967,13 +1254,19 @@ fn executor_thread(
             .upload(&cons, &[bucket.n, bucket.n, bucket.d, bucket.d])
             .context("uploading the session constraint tensor")?;
         Ok((runtime, cons_dev, batch_sizes))
-    })();
-    let Some((runtime, cons_dev, batch_sizes)) = send_ready(&ready_tx, init) else {
+    };
+    let Some((mut runtime, mut cons_dev, mut batch_sizes)) = send_ready(&ready_tx, init())
+    else {
         return;
     };
-    drop(cons);
+    // `cons` stays resident on this thread for the session's lifetime
+    // (it is deliberately NOT dropped after the first upload): a
+    // restart re-runs `init`, which re-uploads it — the re-hydration
+    // half of §Supervision & recovery.
 
-    let compiled_max = batch_sizes.last().copied().unwrap_or(1);
+    let request_timeout = config.policy.request_timeout;
+    let mut supervisor = Supervisor::new(config.policy.max_restarts);
+    let mut compiled_max = batch_sizes.last().copied().unwrap_or(1);
     let mut adaptive =
         if config.policy.adaptive { Some(AdaptiveBatcher::new(&config.policy)) } else { None };
     let mut pending: Vec<Request> = Vec::new();
@@ -985,17 +1278,44 @@ fn executor_thread(
             metrics.on_base_evicted();
         }
     };
+    let mut force_restart = false;
     loop {
+        // 0. a requested restart happens BETWEEN batches, never
+        // mid-execution (a thread cannot preempt its own XLA call)
+        if force_restart {
+            force_restart = false;
+            match restart_session(
+                &init,
+                &mut supervisor,
+                &slots,
+                &mut pending,
+                request_timeout,
+                &metrics,
+                "a forced restart",
+            ) {
+                Some((r, c, b)) => {
+                    runtime = r;
+                    cons_dev = c;
+                    batch_sizes = b;
+                    compiled_max = batch_sizes.last().copied().unwrap_or(1);
+                }
+                None => return drain_moribund(&rx, &mut pending, &metrics),
+            }
+        }
         // 1. block for the first request (or shut down); base uploads
         // are applied inline — they never open a batching window
-        while pending.is_empty() {
+        while pending.is_empty() && !force_restart {
             match rx.recv() {
                 Ok(Msg::Req(r)) => pending.push(r),
                 Ok(Msg::Base { client, fp, plane }) => {
                     apply_base(&mut slots, client, fp, plane)
                 }
+                Ok(Msg::ForceRestart) => force_restart = true,
                 Err(_) => return, // all handles dropped
             }
+        }
+        if force_restart {
+            continue;
         }
         let (max_batch, max_wait) = match &adaptive {
             Some(a) => (a.max_batch(&batch_sizes), a.max_wait()),
@@ -1010,11 +1330,17 @@ fn executor_thread(
                 Ok(Msg::Base { client, fp, plane }) => {
                     apply_base(&mut slots, client, fp, plane)
                 }
+                Ok(Msg::ForceRestart) => {
+                    // serve what's already fused first, restart at the
+                    // top of the next iteration
+                    force_restart = true;
+                    break;
+                }
                 Err(_) => break,
             }
         }
         // 2b. coalesce further batch-mates until the deadline or capacity
-        if !max_wait.is_zero() {
+        if !max_wait.is_zero() && !force_restart {
             let deadline = Instant::now() + max_wait;
             while pending.len() < max_batch {
                 let now = Instant::now();
@@ -1025,6 +1351,10 @@ fn executor_thread(
                     Ok(Msg::Req(r)) => pending.push(r),
                     Ok(Msg::Base { client, fp, plane }) => {
                         apply_base(&mut slots, client, fp, plane)
+                    }
+                    Ok(Msg::ForceRestart) => {
+                        force_restart = true;
+                        break;
                     }
                     Err(mpsc::RecvTimeoutError::Timeout) => break,
                     Err(mpsc::RecvTimeoutError::Disconnected) => break,
@@ -1046,6 +1376,19 @@ fn executor_thread(
             Vec::with_capacity(take);
         for r in pending.drain(..take) {
             let client = r.payload.client();
+            // executor half of the per-request deadline: a request that
+            // outlived `request_timeout` on the queue (a hang, a long
+            // restart backoff, a queue that outgrew the deadline) is
+            // dropped and *counted*, matching the client's already-fired
+            // recv_timeout — conservation holds whichever side noticed.
+            if r.submitted.elapsed() > request_timeout {
+                metrics.on_request_timeout(client);
+                eprintln!(
+                    "rtac-executor: dropping request past its {request_timeout:?} \
+                     deadline (client {client:?})"
+                );
+                continue;
+            }
             match resolve_payload(r.payload, &mut slots, bucket) {
                 Some(plane) => {
                     planes.push(plane);
@@ -1064,7 +1407,7 @@ fn executor_thread(
             }
         }
         if planes.is_empty() {
-            continue; // the whole drain was stale deltas
+            continue; // the whole drain was stale deltas or expired
         }
         // 4. pick the smallest compiled batch that fits, pad, execute
         let real = planes.len();
@@ -1095,6 +1438,7 @@ fn executor_thread(
         // and exec stats.
         match result {
             Ok(out) => {
+                supervisor.on_batch_ok();
                 metrics.on_batch(real, capacity, exec);
                 for (i, (submitted, resp_tx, client)) in served.into_iter().enumerate() {
                     let queue = t_exec.duration_since(submitted);
@@ -1123,6 +1467,28 @@ fn executor_thread(
                     "rtac-executor: fused execution {name} failed ({real} request(s) \
                      dropped): {e:#}"
                 );
+                // §Supervision: a failed-execution STREAK (not one
+                // failure) means the executor itself is sick — restart
+                // and re-hydrate, within the budget.
+                if supervisor.on_batch_failed() {
+                    match restart_session(
+                        &init,
+                        &mut supervisor,
+                        &slots,
+                        &mut pending,
+                        request_timeout,
+                        &metrics,
+                        "a failed-execution streak",
+                    ) {
+                        Some((r, c, b)) => {
+                            runtime = r;
+                            cons_dev = c;
+                            batch_sizes = b;
+                            compiled_max = batch_sizes.last().copied().unwrap_or(1);
+                        }
+                        None => return drain_moribund(&rx, &mut pending, &metrics),
+                    }
+                }
             }
         }
     }
@@ -1155,6 +1521,8 @@ mod tests {
         assert!(p.max_batch >= 1);
         assert!(p.max_wait < Duration::from_millis(10));
         assert!(p.base_slots >= 1);
+        assert!(p.request_timeout >= Duration::from_secs(1), "deadline must not strangle XLA");
+        assert!(p.max_restarts >= 1, "a session should survive at least one crash");
     }
 
     fn handle_at(bucket: Bucket) -> (Handle, mpsc::Receiver<Msg>) {
@@ -1165,6 +1533,7 @@ mod tests {
             metrics: Arc::new(Metrics::new()),
             compiled_batches: vec![1, 2, 4],
             base_slots: BatchPolicy::default().base_slots,
+            request_timeout: BatchPolicy::default().request_timeout,
             next_client: Arc::new(AtomicU64::new(0)),
         };
         (handle, rx)
@@ -1174,11 +1543,12 @@ mod tests {
         handle_at(Bucket { n: 2, d: 2 })
     }
 
-    /// Unwrap a queue message as a request (panics on a base upload).
+    /// Unwrap a queue message as a request (panics on anything else).
     fn expect_req(msg: Msg) -> Request {
         match msg {
             Msg::Req(r) => r,
             Msg::Base { .. } => panic!("expected a request, got a base upload"),
+            Msg::ForceRestart => panic!("expected a request, got a restart"),
         }
     }
 
@@ -1315,7 +1685,7 @@ mod tests {
                 assert_eq!(got_fp, fp);
                 assert_eq!(plane, base);
             }
-            Msg::Req(_) => panic!("base upload must precede the deltas"),
+            Msg::Req(_) | Msg::ForceRestart => panic!("base upload must precede the deltas"),
         }
         for _ in 0..2 {
             let req = expect_req(rx.try_recv().unwrap());
@@ -1598,35 +1968,190 @@ mod tests {
 
     // ---- delta protocol end-to-end (offline CPU-reference executor) ----
 
-    /// A stand-in executor thread that serves the session protocol with
-    /// the native CPU engine instead of XLA: each request's payload is
-    /// resolved exactly like the real executor (same [`resolve_payload`]
-    /// over the same [`BaseSlots`]), decoded, enforced with dense RTAC,
-    /// and re-encoded.  Lets the delta protocol — and clients built on
-    /// it, up to whole parallel searches — run end-to-end with no
-    /// compiled artifacts.
-    fn cpu_reference_executor(
+    /// §Fault injection: one deterministic chaos plan for the
+    /// supervised CPU-reference executor
+    /// ([`chaos_reference_executor`]).  Fault sites are *request
+    /// indices* — the Nth enforcement request the executor receives
+    /// (base uploads and restart messages do not count) — so a plan
+    /// replays bit-identically for a deterministic client.
+    #[derive(Clone, Debug, Default)]
+    struct FaultPlan {
+        /// Simulated executor crashes: before serving request N the
+        /// session state dies and the supervisor restarts it — same
+        /// [`Supervisor`] budget/backoff decisions, same re-hydration
+        /// accounting (base replay + in-flight re-enqueue) as the
+        /// production executor thread.
+        crash_at: Vec<u64>,
+        /// Hangs: serving request N stalls until past the per-request
+        /// deadline, so the client's `recv_deadline` fires and the
+        /// executor counts the expired request when it reaches it.
+        hang_at: Vec<u64>,
+        /// Failed fused executions: requests N and N+1 both fail — a
+        /// streak of [`Supervisor::FAILED_STREAK_LIMIT`], driving the
+        /// streak→restart path.
+        fail_streak_at: Vec<u64>,
+        /// Base-cache wipes ([`BaseSlots::wipe`]) before request N:
+        /// every delta client's next round drops stale and must recover
+        /// through its bounded fresh-base retry.
+        wipe_bases_at: Vec<u64>,
+    }
+
+    impl FaultPlan {
+        /// Deterministic plan derived from `seed` (xorshift64 — no
+        /// external RNG dependency): 1–3 faults of mixed kinds spread
+        /// over the first ~12 requests.
+        fn seeded(seed: u64) -> FaultPlan {
+            let mut s = seed.wrapping_mul(0x9E37_79B9_7F4A_7C15) | 1;
+            let mut next = move || {
+                s ^= s << 13;
+                s ^= s >> 7;
+                s ^= s << 17;
+                s
+            };
+            let mut plan = FaultPlan::default();
+            let n_faults = 1 + next() % 3;
+            for i in 0..n_faults {
+                let at = 1 + i * 4 + next() % 3;
+                match next() % 4 {
+                    0 => plan.crash_at.push(at),
+                    1 => plan.hang_at.push(at),
+                    2 => plan.fail_streak_at.push(at),
+                    _ => plan.wipe_bases_at.push(at),
+                }
+            }
+            plan
+        }
+
+        /// Does request `i` fall in a failed-execution streak?
+        fn fails(&self, i: u64) -> bool {
+            self.fail_streak_at.iter().any(|&at| i == at || i == at + 1)
+        }
+    }
+
+    /// The CPU-reference executor wrapped in deterministic fault
+    /// injection: serves the session protocol with the native CPU
+    /// engine (same [`resolve_payload`] over the same [`BaseSlots`] as
+    /// the real executor) while a [`FaultPlan`] injects crashes, hangs,
+    /// failed executions, and base-cache wipes — supervised by the SAME
+    /// [`Supervisor`] state machine the production executor thread
+    /// runs, so the offline e2e tests exercise production's
+    /// restart/deadline/drop decisions with no compiled artifacts.
+    /// With an empty plan this *is* the plain CPU-reference executor.
+    #[allow(clippy::too_many_arguments)]
+    fn chaos_reference_executor(
         problem: crate::core::Problem,
         bucket: Bucket,
         base_slots: usize,
+        request_timeout: Duration,
+        max_restarts: u32,
+        plan: FaultPlan,
         rx: mpsc::Receiver<Msg>,
         metrics: Arc<Metrics>,
     ) -> std::thread::JoinHandle<()> {
+        /// Spend one restart (mirroring `restart_session`): true when
+        /// the session re-hydrated, false when the budget is exhausted
+        /// and the session must go moribund (`drain_moribund`).
+        fn restart(
+            supervisor: &mut Supervisor,
+            slots: &BaseSlots,
+            metrics: &Metrics,
+            why: &str,
+        ) -> bool {
+            match supervisor.begin_restart() {
+                Some(backoff) => {
+                    std::thread::sleep(backoff);
+                    metrics.on_executor_restart();
+                    for _ in 0..slots.len() {
+                        metrics.on_base_replayed();
+                    }
+                    eprintln!(
+                        "chaos-executor: restart {} after {why} ({} base slot(s) replayed)",
+                        supervisor.restarts(),
+                        slots.len()
+                    );
+                    true
+                }
+                None => {
+                    eprintln!(
+                        "chaos-executor: restart budget exhausted after {why} — moribund"
+                    );
+                    false
+                }
+            }
+        }
         std::thread::spawn(move || {
             use crate::ac::{rtac::RtacNative, Counters, Propagator};
             use crate::runtime::{decode_vars, encode_vars};
             let mut slots = BaseSlots::new(base_slots);
             let mut engine = RtacNative::dense();
+            let mut supervisor = Supervisor::new(max_restarts);
+            let mut idx: u64 = 0;
+            let mut moribund = false;
             while let Ok(msg) = rx.recv() {
                 let req = match msg {
                     Msg::Base { client, fp, plane } => {
-                        if slots.insert(client, fp, plane) {
+                        if !moribund && slots.insert(client, fp, plane) {
                             metrics.on_base_evicted();
+                        }
+                        continue;
+                    }
+                    Msg::ForceRestart => {
+                        if !moribund
+                            && !restart(&mut supervisor, &slots, &metrics, "a forced restart")
+                        {
+                            moribund = true;
                         }
                         continue;
                     }
                     Msg::Req(r) => r,
                 };
+                if moribund {
+                    // the drain_moribund contract: drop AND count every
+                    // remaining request until all handles disconnect
+                    metrics.on_restart_dropped(req.payload.client());
+                    continue;
+                }
+                let i = idx;
+                idx += 1;
+                if plan.wipe_bases_at.contains(&i) {
+                    let n = slots.wipe();
+                    eprintln!("chaos-executor: wiped {n} base slot(s) before request {i}");
+                }
+                if plan.crash_at.contains(&i) {
+                    // the crash kills the exec state with request i in
+                    // flight; after the restart the request is served
+                    // from the re-enqueued pending set (the
+                    // `restart_session` replay)
+                    if !restart(&mut supervisor, &slots, &metrics, "a crash") {
+                        moribund = true;
+                        metrics.on_restart_dropped(req.payload.client());
+                        continue;
+                    }
+                }
+                if plan.hang_at.contains(&i) {
+                    std::thread::sleep(request_timeout + Duration::from_millis(20));
+                }
+                // the executor half of the per-request deadline
+                // (mirrors the real drain loop)
+                if req.submitted.elapsed() > request_timeout {
+                    metrics.on_request_timeout(req.payload.client());
+                    continue;
+                }
+                if plan.fails(i) {
+                    metrics.on_batch_failed(&[req.payload.client()]);
+                    drop(req); // responder gone: the client sees dropped_err
+                    if supervisor.on_batch_failed()
+                        && !restart(
+                            &mut supervisor,
+                            &slots,
+                            &metrics,
+                            "a failed-execution streak",
+                        )
+                    {
+                        moribund = true;
+                    }
+                    continue;
+                }
                 let client = req.payload.client();
                 let Some(plane) = resolve_payload(req.payload, &mut slots, bucket) else {
                     let client = client.expect("only deltas can fail to resolve");
@@ -1638,6 +2163,7 @@ mod tests {
                 let mut c = Counters::default();
                 engine.reset(&problem);
                 let out = engine.enforce(&problem, &mut state, &[], &mut c);
+                supervisor.on_batch_ok();
                 let status = if out.is_consistent() { 0 } else { STATUS_WIPEOUT };
                 let out_plane = encode_vars(&problem, &state, bucket).expect("fits the bucket");
                 metrics.on_batch(1, 1, Duration::from_micros(1));
@@ -1659,6 +2185,56 @@ mod tests {
                 });
             }
         })
+    }
+
+    /// A stand-in executor thread that serves the session protocol with
+    /// the native CPU engine instead of XLA — the fault-free
+    /// specialisation of [`chaos_reference_executor`].  Lets the delta
+    /// protocol — and clients built on it, up to whole parallel
+    /// searches — run end-to-end with no compiled artifacts.
+    fn cpu_reference_executor(
+        problem: crate::core::Problem,
+        bucket: Bucket,
+        base_slots: usize,
+        rx: mpsc::Receiver<Msg>,
+        metrics: Arc<Metrics>,
+    ) -> std::thread::JoinHandle<()> {
+        let policy = BatchPolicy::default();
+        chaos_reference_executor(
+            problem,
+            bucket,
+            base_slots,
+            policy.request_timeout,
+            policy.max_restarts,
+            FaultPlan::default(),
+            rx,
+            metrics,
+        )
+    }
+
+    /// Session fixture around [`chaos_reference_executor`] with an
+    /// explicit fault plan, deadline, and restart budget (all mirrored
+    /// onto the handle like `Coordinator::start` does from the policy).
+    fn chaos_session(
+        problem: &crate::core::Problem,
+        bucket: Bucket,
+        plan: FaultPlan,
+        request_timeout: Duration,
+        max_restarts: u32,
+    ) -> (Handle, std::thread::JoinHandle<()>) {
+        let (mut h, rx) = handle_at(bucket);
+        h.request_timeout = request_timeout;
+        let join = chaos_reference_executor(
+            problem.clone(),
+            bucket,
+            h.base_slots,
+            request_timeout,
+            max_restarts,
+            plan,
+            rx,
+            h.metrics.clone(),
+        );
+        (h, join)
     }
 
     /// Session fixture around [`cpu_reference_executor`] with an
@@ -2104,6 +2680,301 @@ mod tests {
         let mut s_ref = crate::core::State::new(&p);
         let o_ref = Sac1::new(RtacNative::incremental()).enforce_sac(&p, &mut s_ref, &mut c);
         assert_eq!(o.is_consistent(), o_ref.is_consistent());
+    }
+
+    // ---- supervisor (restart budget + backoff) ------------------------
+
+    #[test]
+    fn supervisor_restarts_on_streaks_not_single_failures() {
+        let mut s = Supervisor::new(3);
+        assert!(!s.on_batch_failed(), "one failure is not a streak");
+        s.on_batch_ok(); // recovery resets the streak
+        assert!(!s.on_batch_failed());
+        assert!(s.on_batch_failed(), "FAILED_STREAK_LIMIT consecutive failures restart");
+    }
+
+    #[test]
+    fn supervisor_backoff_doubles_and_budget_exhausts() {
+        let mut s = Supervisor::new(2);
+        assert_eq!(s.begin_restart(), Some(Supervisor::BASE_BACKOFF));
+        assert_eq!(s.begin_restart(), Some(Supervisor::BASE_BACKOFF * 2));
+        assert_eq!(s.begin_restart(), None, "the third restart exceeds the budget");
+        assert_eq!(s.restarts(), 2, "a refused restart spends nothing");
+    }
+
+    #[test]
+    fn supervisor_restart_resets_the_streak() {
+        let mut s = Supervisor::new(4);
+        s.on_batch_failed();
+        assert!(s.on_batch_failed());
+        s.begin_restart().expect("budget available");
+        assert!(!s.on_batch_failed(), "the streak must not survive a restart");
+    }
+
+    // ---- startup fence deadline (satellite: bounded ready-wait) -------
+
+    #[test]
+    fn await_ready_timeout_names_the_startup_fence() {
+        let (tx, rx) = mpsc::channel::<Result<()>>();
+        let e = await_ready(&rx, Duration::from_millis(20)).unwrap_err();
+        let msg = format!("{e:#}");
+        assert!(msg.contains("startup"), "must name startup: {msg}");
+        assert!(msg.contains("timed out"), "must name the deadline: {msg}");
+        drop(tx); // the init was merely hung, not dead, until here
+    }
+
+    #[test]
+    fn await_ready_disconnect_names_the_dead_thread() {
+        let (tx, rx) = mpsc::channel::<Result<()>>();
+        drop(tx);
+        let e = await_ready(&rx, Duration::from_secs(1)).unwrap_err();
+        assert!(format!("{e:#}").contains("executor thread died during startup"));
+    }
+
+    #[test]
+    fn await_ready_surfaces_the_init_error() {
+        let (tx, rx) = mpsc::channel::<Result<()>>();
+        tx.send(Err(anyhow!("boom"))).unwrap();
+        let e = await_ready(&rx, Duration::from_secs(1)).unwrap_err();
+        let msg = format!("{e:#}");
+        assert!(msg.contains("executor startup failed"), "{msg}");
+        assert!(msg.contains("boom"), "the root cause must survive: {msg}");
+    }
+
+    #[test]
+    fn await_ready_passes_a_successful_init() {
+        let (tx, rx) = mpsc::channel::<Result<()>>();
+        tx.send(Ok(())).unwrap();
+        await_ready(&rx, Duration::from_secs(1)).unwrap();
+    }
+
+    // ---- request deadlines --------------------------------------------
+
+    #[test]
+    fn blocking_calls_respect_the_request_deadline() {
+        // an executor that never answers (we hold rx but don't serve):
+        // every blocking wait must return a named timeout, bounded by
+        // the handle's request_timeout — never block forever.
+        let (mut h, rx) = test_handle();
+        h.request_timeout = Duration::from_millis(30);
+        let plane = vec![1.0; h.bucket.vars_len()];
+        let start = Instant::now();
+        let e = h.enforce_blocking(plane.clone()).unwrap_err();
+        let msg = format!("{e:#}");
+        assert!(msg.contains("timed out"), "{msg}");
+        assert!(msg.contains("request_timeout"), "must name the knob: {msg}");
+        // a batch shares ONE deadline across its waits: two unanswered
+        // planes return in ~one timeout, not a timeout per plane
+        let e = h.enforce_batch_blocking(vec![plane.clone(), plane]).unwrap_err();
+        assert!(format!("{e:#}").contains("timed out"));
+        assert!(
+            start.elapsed() < Duration::from_millis(500),
+            "deadlines must bound the waits, elapsed {:?}",
+            start.elapsed()
+        );
+        drop(rx);
+    }
+
+    // ---- fault injection: supervised recovery e2e ---------------------
+
+    /// When `RTAC_CHAOS_SNAPSHOT_DIR` is set (the CI chaos job), dump
+    /// each seed's final [`MetricsSnapshot`] there as an artifact.
+    fn dump_chaos_snapshot(seed: u64, m: &crate::coordinator::MetricsSnapshot) {
+        let Ok(dir) = std::env::var("RTAC_CHAOS_SNAPSHOT_DIR") else { return };
+        let path = std::path::Path::new(&dir).join(format!("chaos_seed_{seed}.txt"));
+        if let Err(e) = std::fs::write(&path, format!("{}\n\n{m:#?}\n", m.summary())) {
+            eprintln!("chaos snapshot: could not write {path:?}: {e}");
+        }
+    }
+
+    #[test]
+    fn chaos_plans_conserve_and_reach_the_native_fixpoint() {
+        // the tentpole e2e: for every seeded FaultPlan — crashes, hangs,
+        // failed-execution streaks, base-cache wipes — a delta-shipping
+        // TensorEngine retried under the shared RetryPolicy must reach
+        // the SAME fixpoints as the native CPU propagator, and the
+        // session metrics must conserve across all restarts.
+        use crate::ac::{rtac::RtacNative, Counters, Propagator};
+        use crate::coordinator::{Retry, RetryPolicy, TensorEngine};
+        use crate::gen::random::{random_csp, RandomSpec};
+        let bucket = Bucket { n: 8, d: 4 };
+        let p = random_csp(&RandomSpec::new(6, 4, 0.7, 0.4, 11));
+        let timeout = Duration::from_millis(250);
+        for seed in 1..=8u64 {
+            let plan = FaultPlan::seeded(seed);
+            eprintln!("chaos seed {seed}: {plan:?}");
+            let (h, join) = chaos_session(&p, bucket, plan, timeout, 8);
+            let metrics = h.metrics.clone();
+            // client-side driver: the same bounded-retry discipline a
+            // degrading caller uses — a poisoned engine is reset and
+            // retried, never trusted for a verdict
+            let retry = RetryPolicy {
+                max_attempts: 6,
+                base_backoff: Duration::from_millis(5),
+                max_backoff: Duration::from_millis(40),
+            };
+            let mut engine = TensorEngine::new(h.clone());
+            for round in 0..6usize {
+                let x = round % p.n_vars();
+                // the native reference fixpoint for this node
+                let mut want = crate::core::State::new(&p);
+                want.assign(x, 0);
+                let mut reference = RtacNative::dense();
+                reference.reset(&p);
+                let out_ref =
+                    reference.enforce(&p, &mut want, &[], &mut Counters::default());
+                // the session path, retried through the injected faults
+                let (out, got) = retry
+                    .run("chaos round kept dying", |_| {
+                        let mut s = crate::core::State::new(&p);
+                        s.assign(x, 0);
+                        engine.reset(&p);
+                        let o = engine.enforce(&p, &mut s, &[], &mut Counters::default());
+                        if let Some(e) = engine.failure() {
+                            return Err(Retry::Transient(anyhow!(
+                                "seed {seed} round {round}: {e}"
+                            )));
+                        }
+                        Ok((o, s))
+                    })
+                    .unwrap_or_else(|e| panic!("seed {seed} round {round}: {e:#}"));
+                assert_eq!(
+                    out.is_consistent(),
+                    out_ref.is_consistent(),
+                    "seed {seed} round {round}: verdicts must agree"
+                );
+                if out.is_consistent() {
+                    assert_eq!(
+                        got.snapshot(),
+                        want.snapshot(),
+                        "seed {seed} round {round}: fixpoints must be bit-identical"
+                    );
+                }
+            }
+            drop(engine);
+            drop(h);
+            join.join().unwrap();
+            let m = metrics.snapshot();
+            assert!(m.conserved(), "seed {seed}: {}", m.summary());
+            assert!(m.clients_conserved(), "seed {seed}: {m:?}");
+            assert!(m.executor_restarts <= 8, "seed {seed}: {}", m.summary());
+            dump_chaos_snapshot(seed, &m);
+        }
+    }
+
+    #[test]
+    fn exhausted_restart_budget_turns_the_session_moribund_not_wrong() {
+        // crash on every request with a budget of 1: the first request
+        // survives (one restart), every later one is dropped AND
+        // counted — the moribund contract, conservation included.
+        use crate::runtime::encode_vars;
+        let bucket = Bucket { n: 8, d: 4 };
+        let p = crate::gen::random::random_csp(&crate::gen::random::RandomSpec::new(
+            6, 4, 0.7, 0.4, 11,
+        ));
+        let plan = FaultPlan { crash_at: (0..8).collect(), ..FaultPlan::default() };
+        let (h, join) = chaos_session(&p, bucket, plan, Duration::from_secs(5), 1);
+        let metrics = h.metrics.clone();
+        let s = crate::core::State::new(&p);
+        let plane = encode_vars(&p, &s, bucket).unwrap();
+        h.enforce_blocking(plane.clone())
+            .expect("the first crash is inside the restart budget");
+        let e = h.enforce_blocking(plane.clone()).unwrap_err();
+        let msg = format!("{e:#}");
+        assert!(
+            msg.contains("moribund") || msg.contains("restart budget"),
+            "the drop causes must name the moribund session: {msg}"
+        );
+        let e = h.enforce_blocking(plane).unwrap_err();
+        assert!(format!("{e:#}").contains("dropped"), "{e:#}");
+        drop(h);
+        join.join().unwrap();
+        let m = metrics.snapshot();
+        assert_eq!(m.executor_restarts, 1, "{}", m.summary());
+        assert_eq!(m.restart_dropped_requests, 2, "{}", m.summary());
+        assert!(m.conserved(), "{}", m.summary());
+    }
+
+    #[test]
+    fn forced_restart_replays_the_base_slots() {
+        // Handle::force_restart: the session restarts on demand and the
+        // re-hydration replays every resident base slot, so a delta
+        // client's chain survives WITHOUT a stale drop.
+        use crate::runtime::encode_vars;
+        let bucket = Bucket { n: 8, d: 4 };
+        let p = crate::gen::random::random_csp(&crate::gen::random::RandomSpec::new(
+            6, 4, 0.7, 0.4, 11,
+        ));
+        let (h, join) =
+            chaos_session(&p, bucket, FaultPlan::default(), Duration::from_secs(5), 2);
+        let metrics = h.metrics.clone();
+        let client = h.attach();
+        let s = crate::core::State::new(&p);
+        let fp = h.upload_base(client, encode_vars(&p, &s, bucket).unwrap()).unwrap();
+        h.enforce_delta_blocking(client, PlaneDelta::empty(fp)).unwrap();
+        h.force_restart().unwrap();
+        // the SAME fingerprint still resolves: the slot was replayed
+        h.enforce_delta_blocking(client, PlaneDelta::empty(fp))
+            .expect("a replayed base slot must serve post-restart deltas");
+        drop(h);
+        join.join().unwrap();
+        let m = metrics.snapshot();
+        assert_eq!(m.executor_restarts, 1, "{}", m.summary());
+        assert_eq!(m.replayed_bases, 1, "{}", m.summary());
+        assert_eq!(m.stale_deltas, 0, "replay must prevent the stale drop");
+        assert!(m.conserved() && m.clients_conserved(), "{}", m.summary());
+    }
+
+    #[test]
+    fn exhausted_reupload_retry_surfaces_an_error_not_a_wrong_verdict() {
+        // satellite: wipe the base cache before EVERY request, so each
+        // fresh-base re-upload goes stale before its delta resolves.
+        // The bounded RetryPolicy must exhaust into a NAMED engine
+        // failure — and a whole search over the same pathology must
+        // still end SAT via the CPU degradation, never a wrong UNSAT.
+        use crate::ac::{Counters, Propagator};
+        use crate::coordinator::TensorEngine;
+        use crate::search::parallel::{solve_parallel_with, WorkerEngine};
+        use crate::search::solver::{SolveResult, SolverConfig};
+        let wipe_everything =
+            || FaultPlan { wipe_bases_at: (0..512).collect(), ..FaultPlan::default() };
+        let bucket = Bucket { n: 8, d: 8 };
+        let p = crate::gen::queens(6);
+        let (h, join) =
+            chaos_session(&p, bucket, wipe_everything(), Duration::from_secs(5), 3);
+        let mut engine = TensorEngine::new(h.clone());
+        let mut s = crate::core::State::new(&p);
+        let out = engine.enforce(&p, &mut s, &[], &mut Counters::default());
+        assert!(!out.is_consistent(), "a failed engine must not report consistency");
+        let failure = engine.failure().expect("the exhausted retry must poison");
+        assert!(
+            failure.contains("retry budget exhausted"),
+            "the failure must name the exhausted budget: {failure}"
+        );
+        drop(engine);
+        drop(h);
+        join.join().unwrap();
+        // the search layer on the same pathology: worker degrades to
+        // the CPU propagator and still proves 6-queens SAT
+        let (h2, join2) =
+            chaos_session(&p, bucket, wipe_everything(), Duration::from_secs(5), 3);
+        let outcome = solve_parallel_with(
+            &p,
+            &h2,
+            &SolverConfig::default(),
+            0,
+            1,
+            WorkerEngine::Tensor,
+        )
+        .expect("degradation must keep the verdict available");
+        match outcome.result {
+            SolveResult::Sat(sol) => {
+                assert!(p.satisfies(&sol), "the degraded solution must be real")
+            }
+            other => panic!("6-queens is SAT; degraded search said {other:?}"),
+        }
+        drop(h2);
+        join2.join().unwrap();
     }
 
     // ---- adaptive batching --------------------------------------------

@@ -23,7 +23,10 @@
 //!   with its scope guard.
 //! * Worker panics are caught (`catch_unwind`), signalled through the
 //!   completion channel — so the barrier never hangs — and re-raised on
-//!   the caller thread after the full set has drained.
+//!   the caller thread after the full set has drained, carrying the
+//!   original panic payload's message (a bare "a worker panicked" with
+//!   the real assertion text lost to a worker thread's stderr is
+//!   undebuggable in CI logs).
 //!
 //! `run_scoped` takes `&mut self`: a pool runs one task set at a time,
 //! and a task must never submit to its own pool (the borrow makes that
@@ -52,16 +55,32 @@ type Job = Box<dyn FnOnce() + Send + 'static>;
 /// Persistent worker threads with a blocking task-set barrier.
 pub struct WorkerPool {
     senders: Vec<Sender<Job>>,
-    done_rx: Receiver<bool>,
+    /// Per-task completion: `Some(payload)` when the task panicked (the
+    /// payload's text, so the re-raise on the caller thread keeps the
+    /// original message), `None` on success.
+    done_rx: Receiver<Option<String>>,
     /// Kept so worker-side completion sends cannot fail while the pool
     /// is alive (workers hold clones).
-    _done_tx: Sender<bool>,
+    _done_tx: Sender<Option<String>>,
     handles: Vec<JoinHandle<()>>,
 }
 
-fn worker_loop(jobs: Receiver<Job>, done: Sender<bool>) {
+/// Render a caught panic payload (`&str` and `String` payloads cover
+/// everything `panic!` produces; anything else — a custom
+/// `panic_any` value — is named as opaque rather than dropped).
+fn payload_text(payload: Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "<non-string panic payload>".to_string()
+    }
+}
+
+fn worker_loop(jobs: Receiver<Job>, done: Sender<Option<String>>) {
     while let Ok(job) = jobs.recv() {
-        let panicked = catch_unwind(AssertUnwindSafe(job)).is_err();
+        let panicked = catch_unwind(AssertUnwindSafe(job)).err().map(payload_text);
         if done.send(panicked).is_err() {
             break; // pool gone mid-send: nothing left to report to
         }
@@ -123,15 +142,17 @@ impl WorkerPool {
             }
             sent += 1;
         }
-        let mut panicked = false;
+        let mut panicked: Option<String> = None;
         for _ in 0..sent {
             match self.done_rx.recv() {
-                Ok(p) => panicked |= p,
+                // keep the FIRST payload (the re-raise can carry one);
+                // later ones were already printed by the panic hook
+                Ok(p) => panicked = panicked.or(p),
                 Err(_) => unreachable!("pool owns a completion sender"),
             }
         }
-        if panicked {
-            panic!("pool worker task panicked");
+        if let Some(payload) = panicked {
+            panic!("pool worker task panicked: {payload}");
         }
     }
 
@@ -249,6 +270,19 @@ mod tests {
             Box::new(|| {}),
         ];
         pool.run_scoped(tasks);
+    }
+
+    #[test]
+    fn task_panic_keeps_the_original_payload_message() {
+        let mut pool = WorkerPool::new(2);
+        let r = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            pool.run_scoped(vec![Box::new(|| panic!("boom at probe 7"))
+                as Box<dyn FnOnce() + Send>]);
+        }));
+        let payload = r.unwrap_err();
+        let msg = payload.downcast_ref::<String>().expect("formatted panic message");
+        assert!(msg.contains("pool worker task panicked"), "{msg}");
+        assert!(msg.contains("boom at probe 7"), "the payload text must survive: {msg}");
     }
 
     #[test]

@@ -43,6 +43,12 @@ SUBCOMMANDS
                --adaptive (occupancy-driven batching window)
                --base-slots 8 (resident delta-base cap, LRU-evicted;
                validated >= 1 at startup)
+               --request-timeout 30000 (per-request deadline, ms; every
+               blocking wait is bounded by it and expired requests are
+               dropped AND counted — timed_out_requests)
+               --max-restarts 3 (supervised executor restarts before the
+               session goes moribund; restarts re-upload the constraint
+               tensor and replay every client's base slot)
                --worker-engine tensor|tensor-full|sac-mixed[N] (per-worker
                propagator; tensor ships per-node row diffs and reports
                per-worker delta hit rates, tensor-full is the upload
@@ -252,6 +258,13 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
     let max_batch = args.get_usize("max-batch", 8)?;
     let base_slots_explicit = args.get_str("base-slots").is_some();
     let mut base_slots = args.get_usize("base-slots", 8)?;
+    let request_timeout_ms = args.get_u64("request-timeout", 30_000)?;
+    if request_timeout_ms == 0 {
+        return Err("--request-timeout must be >= 1 ms (every blocking wait needs \
+                    a finite deadline)"
+            .into());
+    }
+    let max_restarts = args.get_u64("max-restarts", 3)? as u32;
     let adaptive = args.has_flag("adaptive");
     let sac_probe = args.has_flag("sac-probe");
     let probe_batch = args.get_usize("probe-batch", 0)?;
@@ -285,6 +298,8 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
         max_wait: Duration::from_micros(max_wait),
         adaptive,
         base_slots,
+        request_timeout: Duration::from_millis(request_timeout_ms),
+        max_restarts,
     };
     let config = CoordinatorConfig { artifact_dir: artifacts.into(), policy };
     // validate an EXPLICIT --max-batch against the compiled fixb*

@@ -55,6 +55,19 @@ impl Runtime {
         Self::load_filtered(artifact_dir, |_| true)
     }
 
+    /// Load one `(n, d)` bucket's fixpoint artifacts — the unbatched
+    /// `fix*` plus every compiled `fixb*` batch size — and nothing
+    /// else.  This is the coordinator session's init (and *re-init*:
+    /// the supervised executor rebuilds its whole PJRT state through
+    /// this exact call when it restarts after a crash, so recovery is
+    /// deterministic by construction — same artifacts, same compile).
+    pub fn load_fixpoint_bucket(artifact_dir: &Path, n: usize, d: usize) -> Result<Runtime> {
+        Self::load_filtered(artifact_dir, |e| {
+            e.n == n && e.d == d && matches!(e.kind, Kind::Fixpoint | Kind::FixpointBatched)
+        })
+        .with_context(|| format!("loading the fixpoint artifacts of bucket {n}x{d}"))
+    }
+
     /// Load the manifest and compile the entries `keep` accepts
     /// (compilation is the expensive part; benches load only what they
     /// exercise).

@@ -27,6 +27,15 @@
 //! First SAT answer wins (cooperative stop flag); if every worker
 //! exhausts its slice, the instance is UNSAT.
 //!
+//! **Degradation** (§Supervision & recovery): when a worker's tensor
+//! engine fails — the session timed out, went moribund after its
+//! restart budget, or died outright — the worker swaps in a CPU
+//! propagator ([`RtacNative`]) ONCE and re-runs the value whose attempt
+//! was poisoned (its wipeouts were synthetic, so that attempt's verdict
+//! is discarded, never merged).  Only a second failure poisons the
+//! worker, and a poisoned worker without a SAT answer fails the whole
+//! run — a verdict is never fabricated from unexplored subtrees.
+//!
 //! This is the system story of the paper's GPU pitch: one resident
 //! constraint tensor, many in-flight domain planes — and, per client,
 //! mostly *rows* of planes on the wire.
@@ -46,6 +55,7 @@ use std::sync::{mpsc, Arc};
 
 use anyhow::{anyhow, Result};
 
+use crate::ac::rtac::RtacNative;
 use crate::ac::sac::{MixedProbeBackend, SacParallel};
 use crate::ac::Propagator;
 use crate::coordinator::{Coordinator, Handle, TensorEngine};
@@ -93,6 +103,15 @@ pub fn split_values(d: usize, k: usize) -> Vec<Vec<Val>> {
         slices[a % k].push(a);
     }
     slices
+}
+
+/// Fold one attempt's stats into a worker's running totals.
+fn merge_stats(into: &mut SolveStats, s: SolveStats) {
+    into.assignments += s.assignments;
+    into.backtracks += s.backtracks;
+    into.ac_calls += s.ac_calls;
+    into.ac.add(&s.ac);
+    into.ac_times_ms.extend(s.ac_times_ms);
 }
 
 /// Split variable `split_var`'s values round-robin across `k` workers
@@ -206,23 +225,42 @@ pub fn solve_parallel_with(
                 let mut merged_stats = SolveStats::default();
                 let mut outcome = SolveResult::Unsat;
                 let mut failure: Option<String> = None;
+                let mut degraded = false;
                 for a in slice {
                     if stop.load(Ordering::Relaxed) {
                         outcome = SolveResult::Limit;
                         break;
                     }
                     let mut solver = Solver::new(engine.as_mut(), config.clone());
-                    let (r, s) = solver.solve_with_assignments(problem, &[(split_var, a)]);
-                    merged_stats.assignments += s.assignments;
-                    merged_stats.backtracks += s.backtracks;
-                    merged_stats.ac_calls += s.ac_calls;
-                    merged_stats.ac.add(&s.ac);
-                    merged_stats.ac_times_ms.extend(s.ac_times_ms);
+                    let (mut r, s) = solver.solve_with_assignments(problem, &[(split_var, a)]);
+                    merge_stats(&mut merged_stats, s);
                     if let Some(e) = engine.failure() {
                         // poisoned engine: its wipeouts were synthetic,
-                        // so this subtree's Unsat is NOT a verdict
-                        failure = Some(e.to_string());
-                        break;
+                        // so this attempt's verdict is NOT usable.
+                        // Degrade ONCE to the CPU propagator and re-run
+                        // this value (the tensor session is gone —
+                        // timed out, moribund, or dead — but the CPU
+                        // answers the same questions); a second failure
+                        // poisons the worker for real.
+                        if degraded {
+                            failure = Some(e.to_string());
+                            break;
+                        }
+                        eprintln!(
+                            "solve_parallel: worker {wid} lost its tensor engine ({e}); \
+                             degrading to the CPU propagator and re-running value {a}"
+                        );
+                        degraded = true;
+                        engine = Box::new(RtacNative::incremental());
+                        let mut solver = Solver::new(engine.as_mut(), config.clone());
+                        let (r2, s2) =
+                            solver.solve_with_assignments(problem, &[(split_var, a)]);
+                        merge_stats(&mut merged_stats, s2);
+                        r = r2;
+                        if let Some(e) = engine.failure() {
+                            failure = Some(e.to_string());
+                            break;
+                        }
                     }
                     match r {
                         SolveResult::Sat(sol) => {
@@ -268,8 +306,10 @@ pub fn solve_parallel_with(
             // assert `problem.satisfies`), so it stands even if another
             // worker's engine was poisoned
             Some(sat) => sat,
-            // without a solution, a poisoned worker means an unexplored
-            // subtree: UNSAT/LIMIT would be a wrong verdict — error out
+            // without a solution, a poisoned worker (one that failed
+            // even after its one-shot CPU degradation) means an
+            // unexplored subtree: UNSAT/LIMIT would be a wrong verdict
+            // — error out
             None if !failures.is_empty() => {
                 let (wid, e) = &failures[0];
                 return Err(anyhow!(
