@@ -1,15 +1,96 @@
 //! `cargo bench` target for the XLA executable latencies: per-bucket,
 //! per-batch fixpoint timings plus the step kernel — the L1/L2 half of
 //! the §Perf profile (the numbers that stand in for the paper's GPU
-//! kernel timings on this CPU-PJRT testbed).  Self-skips without
-//! artifacts.
+//! kernel timings on this CPU-PJRT testbed).  The XLA section
+//! self-skips without artifacts; the native SIMD word-kernel section
+//! always runs.
 
-use rtac::bench::{bench, BenchConfig};
+use std::hint::black_box;
+
+use rtac::bench::{bench, bench_batch, BenchConfig};
 use rtac::core::State;
 use rtac::gen::random::{random_csp, RandomSpec};
 use rtac::runtime::{encode_cons, encode_vars, Bucket, Kind, Runtime};
+use rtac::util::bitset::{tail_mask, words_for};
+use rtac::util::simd::{self, isa_name, Isa};
+
+/// Microbench the three word kernels on the densest-grid-cell shapes
+/// (`bench::rtac_bench::default_spec()`: n=200, density 1.0), scalar
+/// oracle vs runtime dispatch.  No artifacts needed — this is the
+/// native half of the kernel profile.
+fn simd_kernel_benches(cfg: &BenchConfig) {
+    let spec = rtac::bench::rtac_bench::default_spec();
+    let n = spec.sizes.iter().copied().max().unwrap_or(200);
+    let density = spec
+        .densities
+        .iter()
+        .copied()
+        .fold(f64::NEG_INFINITY, f64::max);
+    let dom = spec.dom_size;
+    let p = random_csp(&RandomSpec::new(n, dom, density, spec.tightness, spec.seed));
+    let isa = simd::active_isa();
+    eprintln!(
+        "simd kernels on densest cell shapes (n={n}, density={density:.2}, dom={dom}); \
+         dispatching to {}",
+        isa_name(isa)
+    );
+
+    // supported_mask: one revise window's support intersection — the
+    // packed rows of a real arc against a fully-alive domain run
+    let arc = (0..p.n_vars())
+        .find_map(|x| p.arcs_of(x).first().copied())
+        .expect("dense cell has arcs");
+    let (rows, rw) = p.arc_support_rows(arc);
+    let n_rows = dom.min(64);
+    let window = &rows[..n_rows * rw];
+    let mut domv = vec![!0u64; rw];
+    domv[rw - 1] &= tail_mask(dom);
+    let mask = tail_mask(n_rows);
+    const INNER: usize = 1024;
+    for (leg, leg_isa) in [("scalar", Isa::Scalar), ("dispatched", isa)] {
+        let m = bench_batch(&format!("simd supported_mask {leg}"), cfg, INNER, || {
+            for _ in 0..INNER {
+                black_box(simd::supported_mask(
+                    leg_isa,
+                    black_box(mask),
+                    black_box(window),
+                    rw,
+                    black_box(&domv),
+                ));
+            }
+        });
+        println!("{}", m.line());
+    }
+
+    // row_delta + zero/or: whole-plane shapes (the barrier merge and
+    // trail replay paths walk one word per variable window)
+    let plane_words = n * words_for(dom);
+    let cur: Vec<u64> = (0..plane_words as u64).map(|i| !0u64 >> (i % 17)).collect();
+    let mut next = cur.clone();
+    for w in next.iter_mut().skip(3).step_by(7) {
+        *w &= 0x5555_5555_5555_5555;
+    }
+    let mut dst = vec![0u64; words_for(n)];
+    let src: Vec<u64> = (0..words_for(n) as u64).map(|i| i.wrapping_mul(0x9E37)).collect();
+    for (leg, leg_isa) in [("scalar", Isa::Scalar), ("dispatched", isa)] {
+        let m = bench(&format!("simd row_delta {leg} ({plane_words} words)"), cfg, || {
+            black_box(simd::row_delta(leg_isa, black_box(&cur), black_box(&next)));
+        });
+        println!("{}", m.line());
+        let m = bench_batch(&format!("simd zero+or {leg}"), cfg, INNER, || {
+            for _ in 0..INNER {
+                simd::zero_words(leg_isa, black_box(&mut dst));
+                simd::or_words(leg_isa, black_box(&mut dst), black_box(&src));
+            }
+        });
+        println!("{}", m.line());
+    }
+}
 
 fn main() {
+    let cfg = BenchConfig { warmup: 3, samples: 30, max_time: std::time::Duration::from_secs(5) };
+    simd_kernel_benches(&cfg);
+
     let dir = rtac::runtime::default_artifact_dir();
     if !dir.join("manifest.json").exists() {
         eprintln!("kernels bench skipped: run `make artifacts` first");
@@ -17,7 +98,6 @@ fn main() {
     }
     let rt = Runtime::load(&dir).expect("load artifacts");
     eprintln!("platform: {}; artifacts: {:?}", rt.platform(), rt.loaded_names());
-    let cfg = BenchConfig { warmup: 3, samples: 30, max_time: std::time::Duration::from_secs(5) };
 
     for (n, d) in rt.manifest().buckets(Kind::Fixpoint) {
         let bucket = Bucket { n, d };

@@ -1,0 +1,33 @@
+// Probe the compiler version to decide whether the AVX-512 kernel path in
+// `util/simd.rs` can be compiled at all.  The AVX-512 intrinsics and the
+// corresponding `is_x86_feature_detected!` tokens were stabilized in Rust
+// 1.89; this crate's MSRV is older, so the AVX-512 arm is gated behind a
+// `rtac_avx512` cfg that only appears on new-enough compilers.  Runtime
+// dispatch still decides per-process whether the CPU actually has AVX-512.
+
+use std::process::Command;
+
+fn rustc_minor() -> Option<(u32, u32)> {
+    let rustc = std::env::var("RUSTC").unwrap_or_else(|_| "rustc".to_string());
+    let out = Command::new(rustc).arg("--version").output().ok()?;
+    let text = String::from_utf8(out.stdout).ok()?;
+    // "rustc 1.89.0 (…)" — take the second whitespace token.
+    let ver = text.split_whitespace().nth(1)?;
+    let mut parts = ver.split(['.', '-', '+']);
+    let major: u32 = parts.next()?.parse().ok()?;
+    let minor: u32 = parts.next()?.parse().ok()?;
+    Some((major, minor))
+}
+
+fn main() {
+    println!("cargo:rerun-if-changed=build.rs");
+    // Declare the cfg so `-D warnings` builds don't trip check-cfg lints on
+    // compilers where we never emit it.  Older rustc ignores unknown
+    // `cargo:` directives, so this line is safe everywhere.
+    println!("cargo:rustc-check-cfg=cfg(rtac_avx512)");
+    if let Some((major, minor)) = rustc_minor() {
+        if (major, minor) >= (1, 89) {
+            println!("cargo:rustc-cfg=rtac_avx512");
+        }
+    }
+}

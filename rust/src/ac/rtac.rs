@@ -18,41 +18,105 @@
 //!   tests), strictly less CPU work.
 //!
 //! Domains snapshot into a flat [`DomainPlane`] arena, so taking the
-//! per-sweep snapshot is one memcpy over the whole network.  The
-//! thread-parallel variant of the same recurrence lives in
+//! per-sweep snapshot is one memcpy over the whole network.  The sweep
+//! itself is *fused*: `revise_var_fused` revises a 64-value window of
+//! a variable's row per iteration through the runtime-dispatched word
+//! kernels in [`crate::util::simd`] (AVX-512/AVX2/scalar), and the
+//! Prop.-2 candidate set is expanded word-parallel from precomputed
+//! adjacency bitsets (`expand_affected`) instead of per-var arc scans.
+//! The thread-parallel variant of the same recurrence lives in
 //! [`super::rtac_par`].
 
 use crate::ac::{Counters, Outcome, Propagator};
 use crate::core::{DomainPlane, Problem, State, VarId};
+use crate::util::bitset::{tail_mask, words_for};
+use crate::util::simd::{self, Isa};
 
-/// Derive the Prop.-2 candidate set for a sweep: reset the previously
-/// set `affected` flags (named exactly by `affected_list` — the
-/// invariant every caller maintains), then flag each neighbour of a
-/// variable whose domain changed in the previous sweep.
+/// Derive the Prop.-2 candidate set for a sweep, word-parallel: clear
+/// `affected`, then OR in the precomputed neighbour bitset
+/// ([`Problem::neighbor_words`]) of every variable whose domain changed
+/// in the previous sweep.
 ///
 /// Shared by every engine that implements the incremental recurrence
 /// ([`RtacNative`], [`super::rtac_par::RtacParallel`], and the batched
 /// SAC probe fixpoint in `super::sac`), so the candidate-set semantics
-/// cannot silently diverge between them.
-pub(crate) fn derive_affected(
-    problem: &Problem,
-    changed: &[VarId],
-    affected: &mut [bool],
-    affected_list: &mut Vec<VarId>,
-) {
-    for &v in affected_list.iter() {
-        affected[v] = false;
+/// cannot silently diverge between them.  Both bitsets are
+/// `words_for(n_vars)` words.
+pub(crate) fn expand_affected(isa: Isa, problem: &Problem, changed: &[u64], affected: &mut [u64]) {
+    simd::zero_words(isa, affected);
+    let mut wi = 0usize;
+    for &w in changed {
+        let mut word = w;
+        while word != 0 {
+            let v = wi * 64 + word.trailing_zeros() as usize;
+            word &= word - 1;
+            simd::or_words(isa, affected, problem.neighbor_words(v));
+        }
+        wi += 1;
     }
-    affected_list.clear();
-    for &v in changed {
-        for &arc in problem.arcs_of(v) {
+}
+
+/// Revise one variable against a domain snapshot with the fused word
+/// kernels: for each 64-value window of `x`'s row, run the arc loop on
+/// the whole window via [`simd::supported_mask`] — `still` starts as the
+/// snapshot word and loses the bits an arc leaves unsupported, with the
+/// classic early exit once it empties.
+///
+/// `support_checks` accounting is bit-compatible with the per-value
+/// scalar loop: each arc adds `popcount(still)` *before* filtering, so a
+/// value that fails at arc `j` contributes `j+1` checks and a survivor
+/// contributes one per arc — exactly the scalar early-exit totals.
+///
+/// `sink(wi, alive, still)` is invoked for every window that changed
+/// (`still != alive`), in ascending window order; the caller applies the
+/// removals to its own buffer (trailed state, next-sweep plane slice, or
+/// probe plane).  Returns `(changed, wiped)` — `wiped` means the row has
+/// no surviving value, equivalent to a post-pass `is_wiped(x)` rescan
+/// but computed in the same pass.
+pub(crate) fn revise_var_fused(
+    isa: Isa,
+    problem: &Problem,
+    snap: &DomainPlane,
+    x: VarId,
+    support_checks: &mut u64,
+    mut sink: impl FnMut(usize, u64, u64),
+) -> (bool, bool) {
+    let arcs = problem.arcs_of(x);
+    let width = snap.width(x);
+    let words = snap.words();
+    let mut x_changed = false;
+    let mut any_alive = 0u64;
+    for (wi, w) in snap.word_range(x).enumerate() {
+        let alive = words[w];
+        if alive == 0 {
+            continue;
+        }
+        let mut still = alive;
+        let base = wi * 64;
+        let n_rows = (width - base).min(64);
+        for &arc in arcs {
+            *support_checks += still.count_ones() as u64;
+            let (rows, rw) = problem.arc_support_rows(arc);
             let other = problem.arc_other(arc);
-            if !affected[other] {
-                affected[other] = true;
-                affected_list.push(other);
+            let dom = &words[snap.word_range(other)];
+            still = simd::supported_mask(
+                isa,
+                still,
+                &rows[base * rw..(base + n_rows) * rw],
+                rw,
+                dom,
+            );
+            if still == 0 {
+                break;
             }
         }
+        any_alive |= still;
+        if still != alive {
+            x_changed = true;
+            sink(wi, alive, still);
+        }
     }
+    (x_changed, x_changed && any_alive == 0)
 }
 
 /// The native recurrent engine.
@@ -61,16 +125,12 @@ pub struct RtacNative {
     /// Flat domain-plane snapshot at sweep start: refreshed by a single
     /// memcpy from the state's arena (reused across calls).
     snapshot: DomainPlane,
-    /// Vars whose domain changed in the previous sweep.
-    changed_list: Vec<VarId>,
-    /// Next sweep's changed list, built in place and swapped in.
-    scratch_list: Vec<VarId>,
-    /// Vars to re-check this sweep (incremental candidates).  The flag
-    /// vector is sized once per enforcement; per sweep only the entries
-    /// named by `affected_list` are reset.
-    affected: Vec<bool>,
-    affected_list: Vec<VarId>,
-    vals_buf: Vec<usize>,
+    /// Vars whose domain changed in the previous sweep, as a
+    /// `words_for(n)`-word bitset.
+    changed_bits: Vec<u64>,
+    /// Vars to re-check this sweep (incremental candidates), expanded
+    /// word-parallel from `changed_bits` via the adjacency bitsets.
+    affected_bits: Vec<u64>,
 }
 
 impl RtacNative {
@@ -83,14 +143,12 @@ impl RtacNative {
     }
 
     fn with_mode(incremental: bool) -> RtacNative {
+        simd::announce_isa_once();
         RtacNative {
             incremental,
             snapshot: DomainPlane::empty(),
-            changed_list: Vec::new(),
-            scratch_list: Vec::new(),
-            affected: Vec::new(),
-            affected_list: Vec::new(),
-            vals_buf: Vec::new(),
+            changed_bits: Vec::new(),
+            affected_bits: Vec::new(),
         }
     }
 
@@ -104,59 +162,55 @@ impl RtacNative {
 
     /// One synchronous sweep.  Returns the first wiped variable, if any.
     ///
-    /// Keep the revise loop semantically in sync with
+    /// The revise loop is [`revise_var_fused`] — shared verbatim with
     /// `super::rtac_par::RtacParallel::revise_chunk` and
-    /// `super::sac::plane_fixpoint` — same support predicate and
-    /// counter accounting, different removal sinks.
+    /// `super::sac::plane_fixpoint`, which differ only in their removal
+    /// sinks (this one trails removals into the search state).
     fn sweep(
         &mut self,
+        isa: Isa,
         problem: &Problem,
         state: &mut State,
         counters: &mut Counters,
     ) -> Option<VarId> {
         self.take_snapshot(state);
         let n = problem.n_vars();
+        let nw = words_for(n);
 
         // Candidate set: in incremental mode, variables adjacent to a
         // change from the previous sweep; in dense mode, everyone.
         if self.incremental {
-            derive_affected(
-                problem,
-                &self.changed_list,
-                &mut self.affected,
-                &mut self.affected_list,
-            );
+            expand_affected(isa, problem, &self.changed_bits, &mut self.affected_bits);
         }
+        simd::zero_words(isa, &mut self.changed_bits);
 
-        self.scratch_list.clear();
+        let Counters { support_checks, removals, .. } = counters;
         let mut wiped: Option<VarId> = None;
-        for x in 0..n {
-            if self.incremental && !self.affected[x] {
-                continue;
-            }
-            self.vals_buf.clear();
-            self.vals_buf.extend(self.snapshot.bits(x).iter_ones());
-            let mut x_changed = false;
-            'vals: for &a in &self.vals_buf {
-                for &arc in problem.arcs_of(x) {
-                    counters.support_checks += 1;
-                    let other = problem.arc_other(arc);
-                    if !problem.arc_support_row(arc, a).intersects(self.snapshot.bits(other)) {
-                        state.remove(x, a);
-                        counters.removals += 1;
-                        x_changed = true;
-                        continue 'vals;
+        for wi in 0..nw {
+            let full = if wi == nw - 1 { tail_mask(n) } else { !0u64 };
+            let mut word = if self.incremental { self.affected_bits[wi] } else { full };
+            while word != 0 {
+                let x = wi * 64 + word.trailing_zeros() as usize;
+                word &= word - 1;
+                let sink = |vw: usize, alive: u64, still: u64| {
+                    let mut removed = alive & !still;
+                    while removed != 0 {
+                        let b = removed.trailing_zeros() as usize;
+                        removed &= removed - 1;
+                        state.remove(x, vw * 64 + b);
+                        *removals += 1;
+                    }
+                };
+                let (x_changed, x_wiped) =
+                    revise_var_fused(isa, problem, &self.snapshot, x, support_checks, sink);
+                if x_changed {
+                    self.changed_bits[wi] |= 1u64 << (x % 64);
+                    if x_wiped {
+                        wiped = wiped.or(Some(x));
                     }
                 }
             }
-            if x_changed {
-                self.scratch_list.push(x);
-                if state.wiped(x) {
-                    wiped = wiped.or(Some(x));
-                }
-            }
         }
-        std::mem::swap(&mut self.changed_list, &mut self.scratch_list);
         wiped
     }
 }
@@ -178,37 +232,33 @@ impl Propagator for RtacNative {
         counters: &mut Counters,
     ) -> Outcome {
         let n = problem.n_vars();
+        let nw = words_for(n);
+        let isa = simd::active_isa();
+        if self.changed_bits.len() != nw {
+            self.changed_bits = vec![0; nw];
+            self.affected_bits = vec![0; nw];
+        }
         // Seed the changed set: the paper's initial `@changed` queue.
-        self.changed_list.clear();
+        simd::zero_words(isa, &mut self.changed_bits);
         if touched.is_empty() {
-            self.changed_list.extend(0..n);
             // dense first sweep in incremental mode too: mark everyone
             // affected by seeding `changed` with all vars; `affected`
-            // is derived from neighbours, so ALSO check isolated vars by
-            // the dense path below.
+            // is derived from neighbours, so unconstrained vars (which
+            // can never lose values) are correctly never revised.
+            for (wi, w) in self.changed_bits.iter_mut().enumerate() {
+                *w = if wi == nw - 1 { tail_mask(n) } else { !0u64 };
+            }
         } else {
-            self.changed_list.extend_from_slice(touched);
+            for &v in touched {
+                self.changed_bits[v / 64] |= 1u64 << (v % 64);
+            }
         }
-        // Size the affected flags once per enforcement, not per sweep;
-        // each sweep resets only the entries it set (tracked by
-        // `affected_list`, whose invariant — it names exactly the true
-        // flags — holds across enforcements of the same problem).
-        if self.incremental && self.affected.len() != n {
-            self.affected.clear();
-            self.affected.resize(n, false);
-            self.affected_list.clear();
-        }
-        // Root enforcement must examine every variable once even in
-        // incremental mode (a variable with an unsatisfiable relation
-        // pair needs no prior change to lose values).  `affected` from
-        // "neighbours of everyone" covers exactly the constrained vars,
-        // which is sufficient: unconstrained vars can never lose values.
         loop {
             counters.recurrences += 1;
-            if let Some(w) = self.sweep(problem, state, counters) {
+            if let Some(w) = self.sweep(isa, problem, state, counters) {
                 return Outcome::Wipeout(w);
             }
-            if self.changed_list.is_empty() {
+            if self.changed_bits.iter().all(|&w| w == 0) {
                 return Outcome::Consistent;
             }
         }

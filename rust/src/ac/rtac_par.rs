@@ -22,19 +22,28 @@
 //!   `std::thread::scope` path is kept behind
 //!   [`RtacParallel::scoped_spawn`] purely as the bench baseline for
 //!   that claim (`BENCH_rtac.json`'s pooled-vs-scoped row).
-//! * Per-worker [`Counters`] and changed-variable lists are merged at
-//!   the sweep barrier, in chunk order, so every merged quantity is
-//!   deterministic.  A shared wipeout [`AtomicBool`] lets the sweep
-//!   loop abort further recurrences (and skip trail replay past the
-//!   victim) the moment any worker wipes a domain.
+//! * Within a chunk, each variable is revised a 64-value word at a
+//!   time through the runtime-dispatched SIMD kernels
+//!   ([`crate::util::simd`], shared with the sequential engine via
+//!   `revise_var_fused`): one [`crate::util::simd::supported_mask`]
+//!   call per (word, arc) instead of a per-value scan, with fused
+//!   changed/wipeout detection replacing the old all-zero row rescan.
+//! * Per-worker support counts and changed-variable **bitsets** are
+//!   merged at the sweep barrier, in chunk order, so every merged
+//!   quantity is deterministic.  The per-worker `ChunkOut` scratch
+//!   (one changed bitset each) is pooled on the engine and reused
+//!   across sweeps and enforcements.  A shared wipeout [`AtomicBool`]
+//!   lets the sweep loop abort further recurrences (and skip trail
+//!   replay past the victim) the moment any worker wipes a domain.
 //! * **Prop.-2 incremental candidate set** ([`RtacParallel::incremental`],
 //!   engine name `rtac-par-inc`): sweep k only re-checks variables with
-//!   a neighbour whose domain changed in sweep k−1.  The per-chunk
-//!   changed lists merged at the barrier *are* the paper's `@changed`
-//!   set; the coordinator thread derives the next sweep's `affected`
-//!   flags from them (cheap: O(changed · degree)) and the workers read
-//!   the flags read-only.  Identical removals and sweep counts to the
-//!   dense engine (Prop. 2), strictly fewer support checks.
+//!   a neighbour whose domain changed in sweep k−1.  The OR-merged
+//!   per-chunk changed bitsets *are* the paper's `@changed` set; the
+//!   coordinator thread expands them word-parallel through the
+//!   precomputed adjacency bitsets (`expand_affected`) and the
+//!   workers read the resulting `affected` bitset read-only.
+//!   Identical removals and sweep counts to the dense engine (Prop. 2),
+//!   strictly fewer support checks.
 //!
 //! # Bit-identity contract
 //!
@@ -65,17 +74,46 @@
 
 use std::sync::atomic::{AtomicBool, Ordering};
 
-use crate::ac::rtac::derive_affected;
+use crate::ac::rtac::{expand_affected, revise_var_fused};
 use crate::ac::{Counters, Outcome, Propagator};
 use crate::core::{DomainPlane, PlaneChunk, Problem, State, VarId};
 use crate::exec::WorkerPool;
+use crate::util::bitset::{ones_in_range, tail_mask, words_for};
+use crate::util::simd::{self, Isa};
 
-/// Result of one worker's chunk revision.
+/// Result of one worker's chunk revision.  Pooled on the engine
+/// (`out_pool`) and reused across sweeps — a sweep pops one per chunk,
+/// the barrier merge pushes them back.
 #[derive(Default)]
 struct ChunkOut {
-    /// Chunk-local changed variables, ascending.
-    changed: Vec<VarId>,
+    /// Changed-variable bitset over the whole network (`words_for(n)`
+    /// words); a worker only ever sets bits in its chunk's var range.
+    changed_bits: Vec<u64>,
     support_checks: u64,
+}
+
+impl ChunkOut {
+    /// Make the scratch ready for a sweep over an `n_words`-word
+    /// changed bitset.
+    fn reset(&mut self, n_words: usize) {
+        self.changed_bits.clear();
+        self.changed_bits.resize(n_words, 0);
+        self.support_checks = 0;
+    }
+}
+
+/// Shared read-only context of one parallel sweep, passed to every
+/// chunk task (bundling it keeps [`RtacParallel::revise_chunk`]'s
+/// signature small).
+#[derive(Clone, Copy)]
+struct SweepCtx<'a> {
+    isa: Isa,
+    problem: &'a Problem,
+    /// The sweep k−1 snapshot plane.
+    cur: &'a DomainPlane,
+    wipeout: &'a AtomicBool,
+    /// Prop.-2 candidate bitset (incremental mode only).
+    affected: Option<&'a [u64]>,
 }
 
 /// How sweep tasks reach the worker threads.
@@ -102,13 +140,17 @@ pub struct RtacParallel {
     chunks: Vec<PlaneChunk>,
     /// Worker count the current `chunks` were planned for.
     planned_workers: usize,
-    /// Vars whose domain changed in the previous sweep (incremental
-    /// mode only) — the merged per-chunk changed lists.
-    changed_list: Vec<VarId>,
-    /// Prop.-2 candidate flags for the coming sweep, derived from
-    /// `changed_list`; workers read them immutably.
-    affected: Vec<bool>,
-    affected_list: Vec<VarId>,
+    /// Vars whose domain changed in the previous sweep — the OR-merge
+    /// of the per-chunk changed bitsets (`words_for(n)` words).  Both
+    /// the trail-replay set and, in incremental mode, the paper's
+    /// `@changed` seed for the next sweep.
+    changed_bits: Vec<u64>,
+    /// Prop.-2 candidate bitset for the coming sweep, expanded from
+    /// `changed_bits`; workers read it immutably.
+    affected_bits: Vec<u64>,
+    /// Reusable per-worker [`ChunkOut`] scratch: popped per sweep,
+    /// pushed back at the barrier merge (before any wipeout return).
+    out_pool: Vec<ChunkOut>,
 }
 
 impl RtacParallel {
@@ -132,6 +174,7 @@ impl RtacParallel {
     }
 
     fn with_mode(workers: usize, incremental: bool, spawn: SpawnMode) -> RtacParallel {
+        simd::announce_isa_once();
         RtacParallel {
             workers,
             incremental,
@@ -141,9 +184,9 @@ impl RtacParallel {
             next: DomainPlane::empty(),
             chunks: Vec::new(),
             planned_workers: 0,
-            changed_list: Vec::new(),
-            affected: Vec::new(),
-            affected_list: Vec::new(),
+            changed_bits: Vec::new(),
+            affected_bits: Vec::new(),
+            out_pool: Vec::new(),
         }
     }
 
@@ -183,54 +226,45 @@ impl RtacParallel {
         }
     }
 
-    /// Derive the Prop.-2 `affected` flags for the coming sweep from
-    /// the previous sweep's merged changed list.
-    fn compute_affected(&mut self, problem: &Problem) {
-        derive_affected(problem, &self.changed_list, &mut self.affected, &mut self.affected_list);
-    }
-
-    /// Revise every variable of `chunk` against the `cur` snapshot,
+    /// Revise every variable of `chunk` against the `ctx.cur` snapshot,
     /// clearing unsupported bits in `slice` (the chunk's disjoint window
-    /// of the next plane).  In incremental mode only variables flagged
-    /// in `affected` are re-checked.  Pure function of the snapshot —
-    /// safe to run on any thread.
-    ///
-    /// Keep the revise loop semantically in sync with
-    /// `RtacNative::sweep` and `sac::plane_fixpoint` — same support
-    /// predicate and counter accounting, different removal sinks.
+    /// of the next plane) a 64-value word at a time via
+    /// [`revise_var_fused`].  In incremental mode only variables set in
+    /// the `ctx.affected` bitset are re-checked — walked word-parallel
+    /// within the chunk's range by [`ones_in_range`].  Pure function of
+    /// the snapshot — safe to run on any thread.
     fn revise_chunk(
-        problem: &Problem,
-        cur: &DomainPlane,
+        ctx: SweepCtx<'_>,
         chunk: PlaneChunk,
         slice: &mut [u64],
-        wipeout: &AtomicBool,
-        affected: Option<&[bool]>,
+        mut out: ChunkOut,
     ) -> ChunkOut {
-        let mut out = ChunkOut::default();
-        for x in chunk.var_start..chunk.var_end {
-            if let Some(flags) = affected {
-                if !flags[x] {
-                    continue;
-                }
-            }
-            let base = cur.offset(x) - chunk.word_start;
-            let mut x_changed = false;
-            'vals: for a in cur.bits(x).iter_ones() {
-                for &arc in problem.arcs_of(x) {
-                    out.support_checks += 1;
-                    let other = problem.arc_other(arc);
-                    if !problem.arc_support_row(arc, a).intersects(cur.bits(other)) {
-                        slice[base + a / 64] &= !(1u64 << (a % 64));
-                        x_changed = true;
-                        continue 'vals;
-                    }
-                }
-            }
+        let mut revise_one = |x: VarId, slice: &mut [u64], out: &mut ChunkOut| {
+            let base = ctx.cur.offset(x) - chunk.word_start;
+            let (x_changed, x_wiped) = revise_var_fused(
+                ctx.isa,
+                ctx.problem,
+                ctx.cur,
+                x,
+                &mut out.support_checks,
+                |wi, _alive, still| slice[base + wi] = still,
+            );
             if x_changed {
-                out.changed.push(x);
-                let row = &slice[base..base + cur.word_range(x).len()];
-                if row.iter().all(|&w| w == 0) {
-                    wipeout.store(true, Ordering::Relaxed);
+                out.changed_bits[x / 64] |= 1u64 << (x % 64);
+                if x_wiped {
+                    ctx.wipeout.store(true, Ordering::Relaxed);
+                }
+            }
+        };
+        match ctx.affected {
+            Some(aff) => {
+                for x in ones_in_range(aff, chunk.var_start, chunk.var_end) {
+                    revise_one(x, slice, &mut out);
+                }
+            }
+            None => {
+                for x in chunk.var_start..chunk.var_end {
+                    revise_one(x, slice, &mut out);
                 }
             }
         }
@@ -239,12 +273,14 @@ impl RtacParallel {
 
     /// One parallel Jacobi sweep: `next := revise(cur)`.  Returns the
     /// per-chunk outputs in chunk (= ascending variable) order.
-    fn sweep(&mut self, problem: &Problem, wipeout: &AtomicBool) -> Vec<ChunkOut> {
+    fn sweep(&mut self, isa: Isa, problem: &Problem, wipeout: &AtomicBool) -> Vec<ChunkOut> {
         self.next.copy_words_from(&self.cur);
+        let n_words = words_for(self.cur.n_vars());
         let cur = &self.cur;
         let chunks = &self.chunks;
-        let affected: Option<&[bool]> =
-            if self.incremental { Some(self.affected.as_slice()) } else { None };
+        let affected: Option<&[u64]> =
+            if self.incremental { Some(self.affected_bits.as_slice()) } else { None };
+        let ctx = SweepCtx { isa, problem, cur, wipeout, affected };
         let slices = split_windows(self.next.words_mut(), chunks);
         // Empty chunks (more workers than variables) revise nothing:
         // don't pay a task submission for them.
@@ -255,13 +291,23 @@ impl RtacParallel {
             .filter(|(c, _)| !c.is_empty())
             .collect();
 
+        // One pooled scratch per task, reset for this sweep (allocates
+        // only until the pool has seen this many chunks at this size).
+        let outs: Vec<ChunkOut> = work
+            .iter()
+            .map(|_| {
+                let mut o = self.out_pool.pop().unwrap_or_default();
+                o.reset(n_words);
+                o
+            })
+            .collect();
+
         if work.len() <= 1 {
             // single (or no) worker: skip the threads entirely
             return work
                 .into_iter()
-                .map(|(chunk, slice)| {
-                    Self::revise_chunk(problem, cur, chunk, slice, wipeout, affected)
-                })
+                .zip(outs)
+                .map(|((chunk, slice), out)| Self::revise_chunk(ctx, chunk, slice, out))
                 .collect();
         }
 
@@ -270,8 +316,9 @@ impl RtacParallel {
                 let pool = self.pool.as_mut().expect("pool sized in ensure_planes");
                 let tasks: Vec<_> = work
                     .into_iter()
-                    .map(|(chunk, slice)| {
-                        move || Self::revise_chunk(problem, cur, chunk, slice, wipeout, affected)
+                    .zip(outs)
+                    .map(|((chunk, slice), out)| {
+                        move || Self::revise_chunk(ctx, chunk, slice, out)
                     })
                     .collect();
                 pool.run_collect(tasks)
@@ -279,10 +326,9 @@ impl RtacParallel {
             SpawnMode::Scoped => std::thread::scope(|scope| {
                 let handles: Vec<_> = work
                     .into_iter()
-                    .map(|(chunk, slice)| {
-                        scope.spawn(move || {
-                            Self::revise_chunk(problem, cur, chunk, slice, wipeout, affected)
-                        })
+                    .zip(outs)
+                    .map(|((chunk, slice), out)| {
+                        scope.spawn(move || Self::revise_chunk(ctx, chunk, slice, out))
                     })
                     .collect();
                 handles.into_iter().map(|h| h.join().expect("sweep worker panicked")).collect()
@@ -317,16 +363,16 @@ impl Propagator for RtacParallel {
 
     fn reset(&mut self, _problem: &Problem) {
         // force a re-plan on the next enforce (worker count may differ
-        // between problems in auto mode) — but KEEP the worker pool:
-        // surviving reset is the whole point of the persistent runtime
-        // (MAC calls reset once per solve, then enforces per node).
+        // between problems in auto mode) — but KEEP the worker pool and
+        // the ChunkOut scratch pool: surviving reset is the whole point
+        // of the persistent runtime (MAC calls reset once per solve,
+        // then enforces per node; the scratch resizes itself per sweep).
         self.cur = DomainPlane::empty();
         self.next = DomainPlane::empty();
         self.chunks.clear();
         self.planned_workers = 0;
-        self.changed_list.clear();
-        self.affected.clear();
-        self.affected_list.clear();
+        self.changed_bits.clear();
+        self.affected_bits.clear();
     }
 
     fn enforce(
@@ -337,63 +383,78 @@ impl Propagator for RtacParallel {
         counters: &mut Counters,
     ) -> Outcome {
         let n = problem.n_vars();
+        let n_words = words_for(n);
+        let isa = simd::active_isa();
         self.ensure_planes(state);
         self.cur.copy_words_from(state.plane());
+        if self.changed_bits.len() != n_words {
+            self.changed_bits = vec![0; n_words];
+            self.affected_bits = vec![0; n_words];
+        }
         if self.incremental {
             // Seed the changed set: the paper's initial `@changed`
             // queue, exactly as RtacNative::incremental seeds it.
-            self.changed_list.clear();
+            simd::zero_words(isa, &mut self.changed_bits);
             if touched.is_empty() {
-                self.changed_list.extend(0..n);
+                for (wi, w) in self.changed_bits.iter_mut().enumerate() {
+                    *w = if wi == n_words - 1 { tail_mask(n) } else { !0u64 };
+                }
             } else {
-                self.changed_list.extend_from_slice(touched);
-            }
-            if self.affected.len() != n {
-                self.affected.clear();
-                self.affected.resize(n, false);
-                self.affected_list.clear();
+                for &v in touched {
+                    self.changed_bits[v / 64] |= 1u64 << (v % 64);
+                }
             }
         }
         loop {
             counters.recurrences += 1;
             if self.incremental {
-                self.compute_affected(problem);
+                expand_affected(isa, problem, &self.changed_bits, &mut self.affected_bits);
             }
             let wipeout = AtomicBool::new(false);
-            let outs = self.sweep(problem, &wipeout);
+            let outs = self.sweep(isa, problem, &wipeout);
             let wiped_somewhere = wipeout.load(Ordering::Relaxed);
 
             // Merge at the barrier, in chunk order.  All support checks
             // were performed regardless of where a wipeout lands, so
             // account for every chunk before the replay can early-out.
             counters.support_checks += outs.iter().map(|o| o.support_checks).sum::<u64>();
-            // Trail replay in ascending (var, value) order — identical
-            // to the sequential dense sweep's removal order.  The
-            // concatenated per-chunk changed lists (ascending within a
-            // chunk, chunks ordered) double as the next sweep's
-            // `@changed` set in incremental mode.
-            let mut any_changed = false;
-            if self.incremental {
-                self.changed_list.clear();
+            // OR-merge the per-chunk changed bitsets (word-parallel) and
+            // hand the scratch back to the pool — before the replay, so
+            // a wipeout early-return cannot leak the buffers.  The
+            // merged set is both the replay set and, in incremental
+            // mode, the next sweep's `@changed`.
+            simd::zero_words(isa, &mut self.changed_bits);
+            for out in outs {
+                simd::or_words(isa, &mut self.changed_bits, &out.changed_bits);
+                self.out_pool.push(out);
             }
-            for out in &outs {
-                for &x in &out.changed {
+            // Trail replay in ascending (var, value) order — identical
+            // to the sequential dense sweep's removal order.
+            let mut any_changed = false;
+            for wi in 0..n_words {
+                let mut word = self.changed_bits[wi];
+                while word != 0 {
+                    let x = wi * 64 + word.trailing_zeros() as usize;
+                    word &= word - 1;
                     any_changed = true;
-                    for a in self.cur.bits(x).iter_ones() {
-                        if !self.next.get(x, a) {
-                            state.remove(x, a);
+                    let range = self.cur.word_range(x);
+                    let cur_row = &self.cur.words()[range.clone()];
+                    let next_row = &self.next.words()[range];
+                    for (vw, (&c, &nx)) in cur_row.iter().zip(next_row).enumerate() {
+                        let mut removed = c & !nx;
+                        while removed != 0 {
+                            let b = removed.trailing_zeros() as usize;
+                            removed &= removed - 1;
+                            state.remove(x, vw * 64 + b);
                             counters.removals += 1;
                         }
                     }
-                    if wiped_somewhere && state.wiped(x) {
+                    if wiped_somewhere && simd::row_delta(isa, cur_row, next_row).wiped {
                         // first wiped variable in ascending order: the
                         // same victim the sequential sweep reports.
-                        // Later chunks' removals are not replayed — the
-                        // search pops this level immediately.
+                        // Later removals are not replayed — the search
+                        // pops this level immediately.
                         return Outcome::Wipeout(x);
-                    }
-                    if self.incremental {
-                        self.changed_list.push(x);
                     }
                 }
             }

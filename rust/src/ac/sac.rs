@@ -71,12 +71,14 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc};
 use std::time::Instant;
 
-use crate::ac::rtac::{derive_affected, RtacNative};
+use crate::ac::rtac::{expand_affected, revise_var_fused, RtacNative};
 use crate::ac::{Counters, Outcome, Propagator};
 use crate::coordinator::{Handle, Response, Retry, RetryPolicy, StaleTracker};
 use crate::core::{DomainPlane, PlaneSlab, Problem, State, Val, VarId};
 use crate::exec::WorkerPool;
 use crate::runtime::{encode_vars_into, plane_fingerprint, PlaneDelta};
+use crate::util::bitset::words_for;
+use crate::util::simd;
 
 /// SAC-1 enforcer wrapping an inner AC engine.
 pub struct Sac1<E: Propagator> {
@@ -165,18 +167,16 @@ impl<E: Propagator> Propagator for Sac1<E> {
     }
 }
 
-/// Reusable per-probe fixpoint bookkeeping (changed lists + Prop.-2
-/// flags), pooled by [`SacParallel`] alongside the scratch planes so a
-/// steady-state probe performs no heap allocation at all.  The
-/// "`affected_list` names exactly the true flags" invariant carries
-/// across probes: [`derive_affected`] resets precisely those entries at
-/// each sweep start.
+/// Reusable per-probe fixpoint bookkeeping (changed / Prop.-2 affected
+/// var bitsets, one bit per variable), pooled by [`SacParallel`]
+/// alongside the scratch planes so a steady-state probe performs no
+/// heap allocation at all.  [`expand_affected`] rebuilds `affected_bits`
+/// from `changed_bits` at each sweep start by OR-ing precomputed
+/// arc-adjacency rows, so neither buffer needs clearing between probes.
 #[derive(Default)]
 struct ProbeScratch {
-    changed: Vec<VarId>,
-    next_changed: Vec<VarId>,
-    affected: Vec<bool>,
-    affected_list: Vec<VarId>,
+    changed_bits: Vec<u64>,
+    affected_bits: Vec<u64>,
 }
 
 /// Run the recurrent AC fixpoint directly on a plane pair — the probe
@@ -186,12 +186,13 @@ struct ProbeScratch {
 /// No trail: probe domains are scratch and discarded.  Returns true iff
 /// the fixpoint is consistent (no domain wiped out).
 ///
-/// The revise loop below must stay semantically in sync with its two
-/// siblings — `RtacNative::sweep` (removal sink: trailed
-/// `State::remove`) and `RtacParallel::revise_chunk` (removal sink:
-/// chunk-relative word masking); this one clears bits on the scratch
+/// The revise loop shares [`revise_var_fused`] with its two siblings —
+/// `RtacNative::sweep` (removal sink: trailed `State::remove`) and
+/// `RtacParallel::revise_chunk` (removal sink: chunk-relative word
+/// masking); this one writes surviving words straight onto the scratch
 /// plane.  Only the sink differs; the support predicate and counter
-/// accounting are the bit-identity contract.
+/// accounting live in the shared kernel and are the bit-identity
+/// contract.
 fn plane_fixpoint(
     problem: &Problem,
     plane: &mut DomainPlane,
@@ -201,51 +202,47 @@ fn plane_fixpoint(
     counters: &mut Counters,
 ) -> bool {
     let n = problem.n_vars();
-    if scratch.affected.len() != n {
-        scratch.affected.clear();
-        scratch.affected.resize(n, false);
-        scratch.affected_list.clear();
+    let nw = words_for(n);
+    let isa = simd::active_isa();
+    if scratch.changed_bits.len() != nw {
+        scratch.changed_bits.clear();
+        scratch.changed_bits.resize(nw, 0);
+        scratch.affected_bits.clear();
+        scratch.affected_bits.resize(nw, 0);
     }
-    scratch.changed.clear();
-    scratch.changed.push(seed);
+    simd::zero_words(isa, &mut scratch.changed_bits);
+    scratch.changed_bits[seed / 64] |= 1u64 << (seed % 64);
     loop {
         counters.recurrences += 1;
         snap.copy_words_from(plane);
-        derive_affected(
-            problem,
-            &scratch.changed,
-            &mut scratch.affected,
-            &mut scratch.affected_list,
-        );
-        scratch.next_changed.clear();
-        for x in 0..n {
-            if !scratch.affected[x] {
-                continue;
-            }
-            let mut x_changed = false;
-            'vals: for a in snap.bits(x).iter_ones() {
-                for &arc in problem.arcs_of(x) {
-                    counters.support_checks += 1;
-                    let other = problem.arc_other(arc);
-                    if !problem.arc_support_row(arc, a).intersects(snap.bits(other)) {
-                        plane.clear(x, a);
-                        counters.removals += 1;
-                        x_changed = true;
-                        continue 'vals;
+        expand_affected(isa, problem, &scratch.changed_bits, &mut scratch.affected_bits);
+        simd::zero_words(isa, &mut scratch.changed_bits);
+        let Counters { support_checks, removals, .. } = counters;
+        let mut any_changed = false;
+        let pw = plane.words_mut();
+        for wi in 0..nw {
+            let mut word = scratch.affected_bits[wi];
+            while word != 0 {
+                let x = wi * 64 + word.trailing_zeros() as usize;
+                word &= word - 1;
+                let off = snap.offset(x);
+                let (x_changed, x_wiped) =
+                    revise_var_fused(isa, problem, snap, x, support_checks, |vw, alive, still| {
+                        *removals += (alive & !still).count_ones() as u64;
+                        pw[off + vw] = still;
+                    });
+                if x_changed {
+                    scratch.changed_bits[x / 64] |= 1u64 << (x % 64);
+                    any_changed = true;
+                    if x_wiped {
+                        return false;
                     }
                 }
             }
-            if x_changed {
-                scratch.next_changed.push(x);
-                if plane.is_wiped(x) {
-                    return false;
-                }
-            }
         }
-        if scratch.next_changed.is_empty() {
+        if !any_changed {
             return true;
         }
-        std::mem::swap(&mut scratch.changed, &mut scratch.next_changed);
     }
 }
 
@@ -296,6 +293,7 @@ pub struct CpuProbeBackend {
 
 impl CpuProbeBackend {
     pub fn new(workers: usize) -> CpuProbeBackend {
+        simd::announce_isa_once();
         CpuProbeBackend { workers, pool: None, slab: PlaneSlab::new(), scratch_pool: Vec::new() }
     }
 }

@@ -17,6 +17,9 @@
 //! * batched `sac-par` vs sequential SAC-1 on the SAC comparison cell
 //!   (SAC probes every (var, value) pair, so it runs on a SAC-sized
 //!   instance derived from the grid rather than the full MAC cell);
+//! * the dispatched word kernels vs the forced-scalar oracle on the
+//!   densest cell (`simd_*`): the `supported_mask` micro-kernel and one
+//!   full fused AC pass, with the dispatched ISA recorded;
 //! * the artifact-gated tensor cells: `sac-par` vs `sac-xla`,
 //!   delta-vs-full probe upload volume, `sac-mixed` vs the best single
 //!   backend, the *search*-delta cell (a MAC search over a tensor
@@ -216,6 +219,134 @@ pub fn render_sac(c: &SacComparison) -> String {
     )
 }
 
+/// CPU word-kernel cell: the dispatched SIMD sweep kernels
+/// ([`crate::util::simd`]) against the scalar reference oracle on the
+/// densest grid cell — the per-window `supported_mask` micro-kernel
+/// plus one full fused dense AC pass (`RtacNative`), both shapes the
+/// paper's recurrence sweeps spend their time in.
+#[derive(Clone, Debug)]
+pub struct SimdComparison {
+    pub n: usize,
+    pub density: f64,
+    pub dom: usize,
+    /// ISA the dispatched leg actually ran (`"scalar"` under
+    /// `RTAC_FORCE_SCALAR` or on non-x86_64 builds).
+    pub isa: &'static str,
+    /// Mean ns per `supported_mask` call, scalar oracle.
+    pub kernel_scalar_ns: f64,
+    /// Mean ns per `supported_mask` call, runtime-dispatched.
+    pub kernel_ns: f64,
+    /// kernel_scalar_ns / kernel_ns (> 1 = the SIMD kernel wins).
+    pub kernel_speedup: f64,
+    /// Mean ms per dense AC enforcement, forced scalar.
+    pub pass_scalar_ms: f64,
+    /// Mean ms per dense AC enforcement, runtime-dispatched.
+    pub pass_ms: f64,
+    /// pass_scalar_ms / pass_ms (> 1 = the fused SIMD pass wins).
+    pub pass_speedup: f64,
+}
+
+/// Measure the SIMD-vs-scalar cell on the densest grid cell.  CPU-only
+/// and engine-independent, so it runs even when the probe cells are
+/// disabled; `None` only when the grid is empty or the derived instance
+/// has no constraints.  Under `RTAC_FORCE_SCALAR` both legs dispatch to
+/// the scalar oracle: the speedups read ~1.0 and `isa` records
+/// `"scalar"` — the cell stays honest instead of skipping.
+pub fn simd_kernel_comparison(spec: &GridSpec) -> Option<SimdComparison> {
+    use crate::util::bitset::tail_mask;
+    use crate::util::simd::{self, isa_name};
+    use std::hint::black_box;
+
+    let n = spec.sizes.iter().copied().max()?;
+    let density = spec
+        .densities
+        .iter()
+        .copied()
+        .max_by(|a, b| a.partial_cmp(b).unwrap())?;
+    let dom = spec.dom_size;
+    let p = random_csp(&RandomSpec::new(n, dom, density, spec.tightness, spec.seed));
+
+    // kernel leg: stream the packed support rows of one real arc
+    // against a fully-alive domain word run — exactly the shape of one
+    // fused revise window on this cell
+    let arc = (0..p.n_vars()).find_map(|x| p.arcs_of(x).first().copied())?;
+    let (rows, rw) = p.arc_support_rows(arc);
+    let n_rows = dom.min(64);
+    let window = &rows[..n_rows * rw];
+    let mut domv = vec![!0u64; rw];
+    domv[rw - 1] &= tail_mask(dom);
+    let mask = tail_mask(n_rows);
+
+    let time_kernel = |f: &mut dyn FnMut() -> u64| -> f64 {
+        const ITERS: u32 = 4096;
+        for _ in 0..64 {
+            black_box(f());
+        }
+        let sw = Stopwatch::start();
+        let mut acc = 0u64;
+        for _ in 0..ITERS {
+            acc ^= f();
+        }
+        let ns = sw.elapsed_us() * 1e3 / f64::from(ITERS);
+        black_box(acc);
+        ns
+    };
+    let isa = simd::active_isa();
+    let kernel_scalar_ns = time_kernel(&mut || {
+        simd::scalar::supported_mask(black_box(mask), black_box(window), rw, black_box(&domv))
+    });
+    let kernel_ns = time_kernel(&mut || {
+        simd::supported_mask(isa, black_box(mask), black_box(window), rw, black_box(&domv))
+    });
+
+    // pass leg: whole dense AC enforcements from a fresh state, forced
+    // scalar vs whatever the runtime dispatch picks
+    let prior = simd::forced_scalar();
+    let time_pass = |forced: bool| -> f64 {
+        simd::set_forced_scalar(forced);
+        let mut eng = RtacNative::dense();
+        eng.reset(&p);
+        let mut st = State::new(&p);
+        let mut c = Counters::default();
+        black_box(eng.enforce(&p, &mut st, &[], &mut c)); // warm: sizes buffers
+        const REPS: usize = 5;
+        let sw = Stopwatch::start();
+        for _ in 0..REPS {
+            let mut st = State::new(&p);
+            let mut c = Counters::default();
+            black_box(eng.enforce(&p, &mut st, &[], &mut c));
+        }
+        sw.elapsed_ms() / REPS as f64
+    };
+    let pass_scalar_ms = time_pass(true);
+    let pass_ms = time_pass(prior);
+    simd::set_forced_scalar(prior);
+
+    Some(SimdComparison {
+        n,
+        density,
+        dom,
+        isa: isa_name(simd::active_isa()),
+        kernel_scalar_ns,
+        kernel_ns,
+        kernel_speedup: if kernel_ns > 0.0 { kernel_scalar_ns / kernel_ns } else { 0.0 },
+        pass_scalar_ms,
+        pass_ms,
+        pass_speedup: if pass_ms > 0.0 { pass_scalar_ms / pass_ms } else { 0.0 },
+    })
+}
+
+/// One-line report for the SIMD-vs-scalar kernel cell.
+pub fn render_simd(c: &SimdComparison) -> String {
+    format!(
+        "simd kernel cell (n={}, density={:.2}, dom={}, isa={}): support kernel {:.1}ns \
+         scalar vs {:.1}ns dispatched -> {:.2}x; fused pass {:.3}ms scalar vs {:.3}ms -> \
+         {:.2}x\n",
+        c.n, c.density, c.dom, c.isa, c.kernel_scalar_ns, c.kernel_ns, c.kernel_speedup,
+        c.pass_scalar_ms, c.pass_ms, c.pass_speedup
+    )
+}
+
 /// Tensor-route cell: batched SAC probes through the coordinator onto
 /// the compiled `fixb*` executables (`sac-xla`) vs the CPU pool
 /// (`sac-par`), plus the fused-batch occupancy the coordinator achieved.
@@ -374,9 +505,12 @@ impl<T> CellOutcome<T> {
     }
 }
 
-/// The six SAC/search comparison cells of one bench run.
+/// The seven comparison cells of one bench run.
 #[derive(Clone, Debug)]
 pub struct SacCells {
+    /// Dispatched SIMD word kernels vs the scalar oracle (CPU; runs
+    /// even when the probe cells are disabled).
+    pub simd: CellOutcome<SimdComparison>,
     /// Sequential SAC-1 vs `sac-par` (CPU; always runnable).
     pub sac: CellOutcome<SacComparison>,
     /// `sac-par` vs `sac-xla` (artifact-gated).
@@ -399,6 +533,7 @@ pub struct SacCells {
 impl SacCells {
     pub fn all_skipped(reason: SkipReason) -> SacCells {
         SacCells {
+            simd: CellOutcome::Skipped(reason),
             sac: CellOutcome::Skipped(reason),
             sac_xla: CellOutcome::Skipped(reason),
             delta: CellOutcome::Skipped(reason),
@@ -419,8 +554,14 @@ pub fn artifacts_available() -> bool {
 /// rest with their skip reason (the satellite fix: `bench-rtac` used to
 /// silently omit artifact-gated cells).
 pub fn run_sac_cells(spec: &GridSpec, workers: usize) -> SacCells {
+    // the SIMD kernel cell is CPU-only and engine-independent: measure
+    // it even when the operator disabled the probe cells
+    let simd = match simd_kernel_comparison(spec) {
+        Some(c) => CellOutcome::Measured(c),
+        None => CellOutcome::Skipped(SkipReason::EmptyGrid),
+    };
     if workers == 0 {
-        return SacCells::all_skipped(SkipReason::Disabled);
+        return SacCells { simd, ..SacCells::all_skipped(SkipReason::Disabled) };
     }
     let sac = match sac_probe_comparison(spec, workers) {
         Some(c) => CellOutcome::Measured(c),
@@ -428,6 +569,7 @@ pub fn run_sac_cells(spec: &GridSpec, workers: usize) -> SacCells {
     };
     if !artifacts_available() {
         return SacCells {
+            simd,
             sac,
             ..SacCells::all_skipped(SkipReason::NoArtifacts)
         };
@@ -439,6 +581,7 @@ pub fn run_sac_cells(spec: &GridSpec, workers: usize) -> SacCells {
     // don't let that masquerade as a session problem.
     let Some(cell) = tensor_cell(spec) else {
         return SacCells {
+            simd,
             sac,
             ..SacCells::all_skipped(SkipReason::EmptyGrid)
         };
@@ -465,7 +608,7 @@ pub fn run_sac_cells(spec: &GridSpec, workers: usize) -> SacCells {
         Some(c) => CellOutcome::Measured(c),
         None => CellOutcome::Skipped(SkipReason::SessionUnavailable),
     };
-    SacCells { sac, sac_xla, delta, mixed, search_delta, recovery }
+    SacCells { simd, sac, sac_xla, delta, mixed, search_delta, recovery }
 }
 
 /// Tensor-route upload-volume cell: the same SAC enforcement routed
@@ -855,10 +998,16 @@ pub fn render_recovery(c: &RecoveryComparison) -> String {
     )
 }
 
-/// Human report of all six SAC/search cells, including explicit skip
+/// Human report of all seven comparison cells, including explicit skip
 /// notes.
 pub fn render_cells(cells: &SacCells) -> String {
     let mut out = String::new();
+    match &cells.simd {
+        CellOutcome::Measured(c) => out.push_str(&render_simd(c)),
+        CellOutcome::Skipped(r) => {
+            out.push_str(&format!("simd kernel cell: skipped ({})\n", r.as_str()))
+        }
+    }
     match &cells.sac {
         CellOutcome::Measured(c) => out.push_str(&render_sac(c)),
         CellOutcome::Skipped(r) => {
@@ -945,7 +1094,7 @@ pub fn render(results: &[CellResult], engines: &[&str]) -> String {
 }
 
 /// JSON export: grid metadata + one row per cell (BENCH_rtac.json),
-/// plus the densest-cell verdicts and the six SAC/search comparison cells —
+/// plus the densest-cell verdicts and the seven comparison cells —
 /// measured fields when run, an explicit `*_skipped: "<reason>"`
 /// marker when not (never silently absent).
 pub fn to_json(spec: &GridSpec, results: &[CellResult], cells: &SacCells) -> Json {
@@ -978,6 +1127,21 @@ pub fn to_json(spec: &GridSpec, results: &[CellResult], cells: &SacCells) -> Jso
         fields.push(("pooled_vs_scoped_speedup", num(speedup)));
         fields.push(("pooled_engine", s(&pooled)));
         fields.push(("scoped_engine", s(&scoped)));
+    }
+    match &cells.simd {
+        CellOutcome::Measured(c) => {
+            fields.push(("simd_n", num(c.n as f64)));
+            fields.push(("simd_density", num(c.density)));
+            fields.push(("simd_dom", num(c.dom as f64)));
+            fields.push(("simd_isa", s(c.isa)));
+            fields.push(("simd_kernel_scalar_ns", num(c.kernel_scalar_ns)));
+            fields.push(("simd_kernel_ns", num(c.kernel_ns)));
+            fields.push(("simd_vs_scalar_kernel_speedup", num(c.kernel_speedup)));
+            fields.push(("simd_pass_scalar_ms", num(c.pass_scalar_ms)));
+            fields.push(("simd_pass_ms", num(c.pass_ms)));
+            fields.push(("simd_vs_scalar_pass_speedup", num(c.pass_speedup)));
+        }
+        CellOutcome::Skipped(r) => fields.push(("simd_skipped", s(r.as_str()))),
     }
     match &cells.sac {
         CellOutcome::Measured(c) => {
@@ -1114,6 +1278,7 @@ mod tests {
         let j = to_json(&spec, &results, &SacCells::all_skipped(SkipReason::Disabled));
         let parsed = crate::util::json::parse(&j.to_string()).unwrap();
         for key in [
+            "simd_skipped",
             "sac_skipped",
             "sac_xla_skipped",
             "sac_delta_skipped",
@@ -1140,8 +1305,10 @@ mod tests {
             assignments: 5,
             seed: 2,
         };
-        // workers == 0: everything disabled
+        // workers == 0: the probe cells are disabled, but the CPU-only
+        // SIMD kernel cell still measures
         let cells = run_sac_cells(&spec, 0);
+        assert!(cells.simd.measured().is_some(), "the SIMD cell ignores --sac-workers");
         assert!(matches!(cells.sac, CellOutcome::Skipped(SkipReason::Disabled)));
         assert!(matches!(cells.mixed, CellOutcome::Skipped(SkipReason::Disabled)));
         // workers > 0: the CPU cell always measures; the tensor cells
@@ -1158,9 +1325,10 @@ mod tests {
             ));
             assert!(matches!(cells.recovery, CellOutcome::Skipped(SkipReason::NoArtifacts)));
         }
-        // render always mentions all six cells
+        // render always mentions all seven cells
         let txt = render_cells(&cells);
         for needle in [
+            "simd kernel cell",
             "sac cell",
             "sac tensor cell",
             "sac delta cell",
@@ -1228,6 +1396,36 @@ mod tests {
         assert!(parsed.get("sac_par_speedup").is_some());
         assert!(parsed.get("sac_probes").is_some());
         assert!(parsed.get("sac_skipped").is_none(), "a measured cell carries no marker");
+    }
+
+    #[test]
+    fn simd_cell_measures_and_exports() {
+        let spec = GridSpec {
+            sizes: vec![10],
+            densities: vec![1.0],
+            dom_size: 5,
+            tightness: 0.3,
+            assignments: 5,
+            seed: 7,
+        };
+        let c = simd_kernel_comparison(&spec).unwrap();
+        assert_eq!(c.n, 10);
+        assert!(["scalar", "avx2", "avx512"].contains(&c.isa), "unknown isa {}", c.isa);
+        assert!(c.kernel_scalar_ns > 0.0 && c.kernel_ns > 0.0);
+        assert!(c.pass_scalar_ms >= 0.0 && c.pass_ms >= 0.0);
+        let txt = render_simd(&c);
+        assert!(txt.contains("simd kernel cell"));
+        assert!(txt.contains(c.isa));
+        let cells = SacCells {
+            simd: CellOutcome::Measured(c),
+            ..SacCells::all_skipped(SkipReason::Disabled)
+        };
+        let j = to_json(&spec, &run(&spec, &["rtac"]), &cells);
+        let parsed = crate::util::json::parse(&j.to_string()).unwrap();
+        assert!(parsed.get("simd_isa").is_some());
+        assert!(parsed.get("simd_vs_scalar_kernel_speedup").is_some());
+        assert!(parsed.get("simd_vs_scalar_pass_speedup").is_some());
+        assert!(parsed.get("simd_skipped").is_none(), "a measured cell carries no marker");
     }
 
     #[test]

@@ -22,9 +22,11 @@
 //!   `runtime::encode`, keeping a future device upload of the arena a
 //!   straight reinterpretation rather than a gather.
 //!
-//! Follow-ons recorded in ROADMAP.md: explicit SIMD intrinsics over the
-//! word rows, and reusing the arena as the staging buffer for GPU plane
-//! uploads in the coordinator.
+//! The word-level operations over the arena (bulk clears, support
+//! intersections, changed/wipeout detection) dispatch through the
+//! runtime-selected SIMD kernels in [`crate::util::simd`].  Remaining
+//! follow-on recorded in ROADMAP.md: reusing the arena as the staging
+//! buffer for GPU plane uploads in the coordinator.
 //!
 //! The mutable search state ([`crate::core::State`]) owns one
 //! `DomainPlane` plus the undo trail; engines keep private planes for
@@ -172,9 +174,7 @@ impl DomainPlane {
     pub fn assign(&mut self, v: VarId, a: Val) {
         debug_assert!(a < self.width(v));
         let range = self.word_range(v);
-        for w in &mut self.words[range] {
-            *w = 0;
-        }
+        crate::util::simd::zero_words(crate::util::simd::active_isa(), &mut self.words[range]);
         self.set(v, a);
     }
 

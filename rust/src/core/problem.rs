@@ -8,6 +8,7 @@
 use std::collections::HashMap;
 
 use crate::core::relation::Relation;
+use crate::util::bitset::words_for;
 
 /// Index of a variable.
 pub type VarId = usize;
@@ -38,6 +39,13 @@ pub struct Problem {
     constraints: Vec<Constraint>,
     /// adj[v] = arcs that revise v (one per incident constraint).
     adj: Vec<Vec<Arc>>,
+    /// Neighbour bitsets, one `adj_words`-word row per variable: bit `u`
+    /// of row `v` set iff `u` and `v` share a constraint.  The word-
+    /// parallel mirror of `adj`, used to expand changed-variable bitsets
+    /// into Prop.-2 affected sets with OR merges instead of arc scans.
+    adj_bits: Vec<u64>,
+    /// Words per `adj_bits` row (`words_for(n_vars)`).
+    adj_words: usize,
     pair_index: HashMap<(VarId, VarId), usize>,
     name: String,
 }
@@ -50,6 +58,8 @@ impl Problem {
             dom_sizes: vec![dom_size; n],
             constraints: Vec::new(),
             adj: vec![Vec::new(); n],
+            adj_bits: vec![0; n * words_for(n)],
+            adj_words: words_for(n),
             pair_index: HashMap::new(),
             name: name.to_string(),
         }
@@ -63,6 +73,8 @@ impl Problem {
             dom_sizes,
             constraints: Vec::new(),
             adj: vec![Vec::new(); n],
+            adj_bits: vec![0; n * words_for(n)],
+            adj_words: words_for(n),
             pair_index: HashMap::new(),
             name: name.to_string(),
         }
@@ -105,6 +117,19 @@ impl Problem {
     #[inline]
     pub fn arcs_of(&self, v: VarId) -> &[Arc] {
         &self.adj[v]
+    }
+
+    /// Neighbour bitset of `v` (`adj_row_words()` words over `n_vars`
+    /// bits): the word-parallel form of `arcs_of(v)`'s other endpoints.
+    #[inline]
+    pub fn neighbor_words(&self, v: VarId) -> &[u64] {
+        &self.adj_bits[v * self.adj_words..(v + 1) * self.adj_words]
+    }
+
+    /// Words per [`Self::neighbor_words`] row (`words_for(n_vars)`).
+    #[inline]
+    pub fn adj_row_words(&self) -> usize {
+        self.adj_words
     }
 
     /// All directed arcs of the network (2 per constraint).
@@ -152,6 +177,21 @@ impl Problem {
         }
     }
 
+    /// The arc's whole packed support buffer: one row per value of the
+    /// revised variable, `words` words per row (over the witness
+    /// variable's domain).  The word-kernel sweeps stream consecutive
+    /// value rows from this instead of per-value [`Self::arc_support_row`]
+    /// views.
+    #[inline]
+    pub fn arc_support_rows(&self, a: Arc) -> (&[u64], usize) {
+        let c = &self.constraints[a.cons];
+        if a.is_x {
+            c.rel.rows_fwd()
+        } else {
+            c.rel.rows_rev()
+        }
+    }
+
     /// Add (or merge into an existing) constraint between `x` and `y`.
     ///
     /// Constraints are stored once per unordered pair; adding a second
@@ -183,6 +223,11 @@ impl Problem {
         self.pair_index.insert((cx, cy), ci);
         self.adj[cx].push(Arc { cons: ci, is_x: true });
         self.adj[cy].push(Arc { cons: ci, is_x: false });
+        // Mirror the new edge into the word-parallel adjacency.  The
+        // duplicate-pair merge path above returns before reaching here,
+        // matching `adj`, which it also leaves untouched.
+        self.adj_bits[cx * self.adj_words + cy / 64] |= 1u64 << (cy % 64);
+        self.adj_bits[cy * self.adj_words + cx / 64] |= 1u64 << (cx % 64);
     }
 
     /// Constraint index between two variables, if any.
@@ -228,6 +273,18 @@ impl Problem {
                 if self.arc_var(*a) != v {
                     return Err(format!("adjacency of var {v} holds foreign arc {a:?}"));
                 }
+            }
+            // the word-parallel adjacency must mirror the arc lists
+            let from_arcs: std::collections::BTreeSet<VarId> =
+                arcs.iter().map(|&a| self.arc_other(a)).collect();
+            let from_bits: std::collections::BTreeSet<VarId> =
+                crate::util::bitset::Bits::new(self.n_vars(), self.neighbor_words(v))
+                    .iter_ones()
+                    .collect();
+            if from_arcs != from_bits {
+                return Err(format!(
+                    "neighbour bitset of var {v} diverges from arc list: {from_bits:?} vs {from_arcs:?}"
+                ));
             }
         }
         Ok(())
@@ -279,6 +336,38 @@ mod tests {
         }
         // adjacency not duplicated
         assert_eq!(p.arcs_of(0).len(), 1);
+    }
+
+    #[test]
+    fn neighbor_words_mirror_arc_lists() {
+        // 70 vars so neighbour rows span two words
+        let mut p = Problem::new("t", 70, 2);
+        p.add_constraint(0, 1, neq(2));
+        p.add_constraint(0, 69, neq(2));
+        p.add_constraint(63, 64, neq(2));
+        p.add_constraint(0, 1, neq(2)); // duplicate: merged, no new edge
+        assert_eq!(p.adj_row_words(), 2);
+        let ones = |v: usize| crate::util::bitset::Bits::new(70, p.neighbor_words(v)).to_vec();
+        assert_eq!(ones(0), vec![1, 69]);
+        assert_eq!(ones(1), vec![0]);
+        assert_eq!(ones(63), vec![64]);
+        assert_eq!(ones(64), vec![63]);
+        assert_eq!(ones(69), vec![0]);
+        assert_eq!(ones(2), Vec::<usize>::new());
+        p.validate().unwrap();
+    }
+
+    #[test]
+    fn arc_support_rows_match_per_value_views() {
+        let mut p = Problem::with_domains("t", vec![3, 5]);
+        p.add_constraint(0, 1, Relation::from_fn(3, 5, |a, b| (a + b) % 2 == 0));
+        for a in p.all_arcs() {
+            let (rows, w) = p.arc_support_rows(a);
+            let d = p.dom_size(p.arc_var(a));
+            for val in 0..d {
+                assert_eq!(&rows[val * w..(val + 1) * w], p.arc_support_row(a, val).words());
+            }
+        }
     }
 
     #[test]

@@ -123,6 +123,21 @@ impl Relation {
         Bits::new(self.dx, &self.rev[b * self.wx..(b + 1) * self.wx])
     }
 
+    /// The whole packed forward buffer: `dx` consecutive rows of
+    /// `words_per_row` words each.  The word-kernel sweeps
+    /// ([`crate::util::simd::supported_mask`]) stream consecutive rows
+    /// from this buffer instead of taking per-value [`Bits`] views.
+    #[inline]
+    pub fn rows_fwd(&self) -> (&[u64], usize) {
+        (&self.fwd, self.wy)
+    }
+
+    /// The whole packed reverse buffer (`dy` rows of `words_per_row`).
+    #[inline]
+    pub fn rows_rev(&self) -> (&[u64], usize) {
+        (&self.rev, self.wx)
+    }
+
     /// True iff every pair is allowed (encodes "no constraint").
     pub fn is_universal(&self) -> bool {
         (0..self.dx).all(|a| self.row_fwd(a).count() == self.dy)

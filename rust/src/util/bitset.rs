@@ -317,6 +317,51 @@ impl<'a> Iterator for OnesIter<'a> {
     }
 }
 
+/// Iterate set-bit indices of `words` restricted to `start..end`, in
+/// ascending order.  Used by parallel sweep workers to walk an affected-
+/// variable bitset within their chunk's variable range without scanning
+/// the words outside it.
+pub fn ones_in_range(words: &[u64], start: usize, end: usize) -> RangeOnesIter<'_> {
+    let end = end.min(words.len() * 64);
+    if start >= end {
+        return RangeOnesIter { words: &[], wi: 0, cur: 0, end: 0 };
+    }
+    let wi = start / 64;
+    let cur = words[wi] & (!0u64 << (start % 64));
+    RangeOnesIter { words, wi, cur, end }
+}
+
+/// Iterator behind [`ones_in_range`].
+pub struct RangeOnesIter<'a> {
+    words: &'a [u64],
+    wi: usize,
+    cur: u64,
+    end: usize,
+}
+
+impl Iterator for RangeOnesIter<'_> {
+    type Item = usize;
+
+    #[inline]
+    fn next(&mut self) -> Option<usize> {
+        loop {
+            if self.cur != 0 {
+                let i = self.wi * 64 + self.cur.trailing_zeros() as usize;
+                if i >= self.end {
+                    return None;
+                }
+                self.cur &= self.cur - 1;
+                return Some(i);
+            }
+            self.wi += 1;
+            if self.wi * 64 >= self.end || self.wi >= self.words.len() {
+                return None;
+            }
+            self.cur = self.words[self.wi];
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -407,6 +452,22 @@ mod tests {
         assert!(empty.bits().none());
         assert!(v.intersects(s.bits()));
         assert!(!v.intersects(empty.bits()));
+    }
+
+    #[test]
+    fn ones_in_range_respects_bounds() {
+        let s = BitSet::from_indices(200, vec![0, 5, 63, 64, 65, 128, 199]);
+        let all: Vec<usize> = ones_in_range(s.words(), 0, 200).collect();
+        assert_eq!(all, s.to_vec());
+        let mid: Vec<usize> = ones_in_range(s.words(), 5, 65).collect();
+        assert_eq!(mid, vec![5, 63, 64]);
+        let word_edge: Vec<usize> = ones_in_range(s.words(), 64, 128).collect();
+        assert_eq!(word_edge, vec![64, 65]);
+        assert_eq!(ones_in_range(s.words(), 199, 200).collect::<Vec<_>>(), vec![199]);
+        assert!(ones_in_range(s.words(), 66, 66).next().is_none());
+        assert!(ones_in_range(s.words(), 300, 400).next().is_none());
+        // end clamps to the slice's bit capacity
+        assert_eq!(ones_in_range(s.words(), 190, 1000).collect::<Vec<_>>(), vec![199]);
     }
 
     #[test]

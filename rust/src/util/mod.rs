@@ -8,6 +8,7 @@ pub mod cli;
 pub mod json;
 pub mod quickcheck;
 pub mod rng;
+pub mod simd;
 pub mod stats;
 pub mod table;
 pub mod timer;

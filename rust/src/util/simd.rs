@@ -1,0 +1,680 @@
+//! Runtime-dispatched SIMD word kernels for the CPU hot path.
+//!
+//! Every native AC engine spends its time in three word-level operations
+//! over the flat domain-plane arena and the packed relation rows:
+//!
+//! 1. **multi-row support intersection** ([`supported_mask`]) — given a
+//!    mask of up-to-64 candidate values of one variable, decide for each
+//!    candidate whether its relation row intersects the witness domain.
+//!    The AVX2 path tests 4 consecutive single-word rows per iteration,
+//!    the AVX-512 path 8; wide rows fall back to a vectorised any-
+//!    intersect per row.  The arc loop's early exit is preserved by the
+//!    caller (it stops as soon as the mask empties).
+//! 2. **masked row clearing / merging** ([`zero_words`], [`or_words`]) —
+//!    bulk clears of domain rows (`assign`) and OR-merges of changed /
+//!    affected bitsets at sweep barriers.
+//! 3. **fused changed/wipeout detection** ([`row_delta`]) — one pass
+//!    computing `cur XOR next != 0` (row changed) and `next == 0` (row
+//!    wiped), replacing separate change bookkeeping and `all-zero`
+//!    rescans.
+//!
+//! Dispatch is decided once per process by [`active_isa`]
+//! (`is_x86_feature_detected!`), overridable with the `RTAC_FORCE_SCALAR`
+//! environment variable or [`set_forced_scalar`] — the scalar kernels in
+//! [`scalar`] are the reference oracle the SIMD paths are property-tested
+//! against (including lane-boundary widths 63/64/65/127/128).  The
+//! AVX-512 path additionally needs a compiler new enough to have the
+//! stabilized AVX-512 intrinsics (rustc ≥ 1.89, probed by `build.rs` as
+//! the `rtac_avx512` cfg); otherwise [`Isa::Avx512`] silently degrades to
+//! scalar and is never selected by detection.
+//!
+//! Engines hoist [`active_isa`] to one call per enforcement and thread
+//! the [`Isa`] value through the kernels, so a toggle of the force flag
+//! takes effect at the next `enforce` — which is what the
+//! scalar-vs-dispatched bit-identity tests and the `simd_vs_scalar`
+//! bench cells rely on.
+//!
+//! # Safety contract
+//!
+//! The kernel entry points are safe functions, but an [`Isa`] value must
+//! come from [`active_isa`] (or be [`Isa::Scalar`]): hand-constructing
+//! `Isa::Avx2`/`Isa::Avx512` and passing it on a machine without those
+//! features would execute illegal instructions.
+//!
+//! ```
+//! use rtac::util::simd::{self, Isa};
+//!
+//! // Four relation rows (one word each); the witness domain is {3}.
+//! let rows = [0b1010u64, 0b0001, 0b1111, 0b0000];
+//! let dom = [0b1000u64];
+//! // Of the candidates {0,1,2,3}, only rows 0 and 2 contain value 3.
+//! assert_eq!(simd::supported_mask(Isa::Scalar, 0b1111, &rows, 1, &dom), 0b0101);
+//!
+//! // Fused changed/wipeout detection over a 2-word row.
+//! let d = simd::row_delta(Isa::Scalar, &[0b11, 0b1], &[0b01, 0b1]);
+//! assert!(d.changed && !d.wiped);
+//! let d = simd::row_delta(Isa::Scalar, &[0b11, 0b0], &[0b00, 0b0]);
+//! assert!(d.changed && d.wiped);
+//!
+//! // The dispatched ISA gives bit-identical answers to the oracle.
+//! let isa = simd::active_isa();
+//! assert_eq!(
+//!     simd::supported_mask(isa, 0b1111, &rows, 1, &dom),
+//!     simd::scalar::supported_mask(0b1111, &rows, 1, &dom),
+//! );
+//! ```
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Once, OnceLock};
+
+/// Instruction set a kernel call dispatches to.
+///
+/// Obtain via [`active_isa`] — see the module-level safety contract.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Isa {
+    /// Portable word loops — the reference oracle.
+    Scalar,
+    /// 256-bit paths (4 words / 4 single-word rows per iteration).
+    Avx2,
+    /// 512-bit paths (8 words / 8 single-word rows per iteration).
+    /// Selected only when compiled with rustc ≥ 1.89 (`rtac_avx512`).
+    Avx512,
+}
+
+/// Short lowercase name for bench cells and logs.
+pub fn isa_name(isa: Isa) -> &'static str {
+    match isa {
+        Isa::Scalar => "scalar",
+        Isa::Avx2 => "avx2",
+        Isa::Avx512 => "avx512",
+    }
+}
+
+static FORCE_SCALAR: AtomicBool = AtomicBool::new(false);
+static FORCE_INIT: Once = Once::new();
+
+fn force_init_from_env() {
+    FORCE_INIT.call_once(|| {
+        let on = std::env::var_os("RTAC_FORCE_SCALAR")
+            .is_some_and(|v| !v.is_empty() && v != "0");
+        if on {
+            FORCE_SCALAR.store(true, Ordering::Relaxed);
+        }
+    });
+}
+
+/// Is the scalar override currently in effect (env or programmatic)?
+pub fn forced_scalar() -> bool {
+    force_init_from_env();
+    FORCE_SCALAR.load(Ordering::Relaxed)
+}
+
+/// Programmatically force (or release) the scalar kernels, overriding
+/// the `RTAC_FORCE_SCALAR` environment variable.  Takes effect at the
+/// next [`active_isa`] call — engines re-read it per enforcement.
+pub fn set_forced_scalar(on: bool) {
+    force_init_from_env();
+    FORCE_SCALAR.store(on, Ordering::Relaxed);
+}
+
+fn detected_isa() -> Isa {
+    static DETECTED: OnceLock<Isa> = OnceLock::new();
+    *DETECTED.get_or_init(|| {
+        #[cfg(target_arch = "x86_64")]
+        {
+            #[cfg(rtac_avx512)]
+            {
+                if is_x86_feature_detected!("avx512f") {
+                    return Isa::Avx512;
+                }
+            }
+            if is_x86_feature_detected!("avx2") {
+                return Isa::Avx2;
+            }
+        }
+        Isa::Scalar
+    })
+}
+
+/// The ISA kernel calls should dispatch to right now: the widest one the
+/// CPU supports, unless the scalar override is in effect.
+pub fn active_isa() -> Isa {
+    if forced_scalar() {
+        Isa::Scalar
+    } else {
+        detected_isa()
+    }
+}
+
+/// Report the dispatched ISA once per process (first engine construction
+/// wins), so bench logs record which kernels produced the numbers.
+pub fn announce_isa_once() {
+    static ANNOUNCED: Once = Once::new();
+    ANNOUNCED.call_once(|| {
+        eprintln!("rtac: word kernels dispatching to {}", isa_name(active_isa()));
+    });
+}
+
+/// Result of the fused changed/wipeout pass over one domain row.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RowDelta {
+    /// `cur XOR next` had a set bit — the row changed.
+    pub changed: bool,
+    /// `next` is all-zero — the variable wiped out.
+    pub wiped: bool,
+}
+
+/// Scalar reference kernels — the oracle every SIMD path must match
+/// bit-for-bit (property-tested below and in `tests/engines.rs`).
+pub mod scalar {
+    use super::RowDelta;
+
+    /// See [`super::supported_mask`].
+    pub fn supported_mask(mask: u64, rows: &[u64], row_words: usize, dom: &[u64]) -> u64 {
+        let mut out = 0u64;
+        let mut m = mask;
+        while m != 0 {
+            let i = m.trailing_zeros() as usize;
+            m &= m - 1;
+            let row = &rows[i * row_words..(i + 1) * row_words];
+            if row.iter().zip(dom).any(|(&r, &d)| r & d != 0) {
+                out |= 1u64 << i;
+            }
+        }
+        out
+    }
+
+    /// See [`super::zero_words`].
+    pub fn zero_words(dst: &mut [u64]) {
+        for w in dst.iter_mut() {
+            *w = 0;
+        }
+    }
+
+    /// See [`super::or_words`].
+    pub fn or_words(dst: &mut [u64], src: &[u64]) {
+        debug_assert_eq!(dst.len(), src.len());
+        for (d, &s) in dst.iter_mut().zip(src) {
+            *d |= s;
+        }
+    }
+
+    /// See [`super::row_delta`].
+    pub fn row_delta(cur: &[u64], next: &[u64]) -> RowDelta {
+        debug_assert_eq!(cur.len(), next.len());
+        let mut diff = 0u64;
+        let mut alive = 0u64;
+        for (&c, &n) in cur.iter().zip(next) {
+            diff |= c ^ n;
+            alive |= n;
+        }
+        RowDelta { changed: diff != 0, wiped: alive == 0 }
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use super::RowDelta;
+    use std::arch::x86_64::*;
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn supported_mask(mask: u64, rows: &[u64], row_words: usize, dom: &[u64]) -> u64 {
+        if row_words == 1 {
+            // 4 single-word rows per iteration against a splat of the
+            // witness domain word; skip groups with no candidate bits.
+            let splat = _mm256_set1_epi64x(dom[0] as i64);
+            let zero = _mm256_setzero_si256();
+            let n = rows.len();
+            let mut out = 0u64;
+            let mut i = 0;
+            while i + 4 <= n {
+                let nib = (mask >> i) & 0xF;
+                if nib != 0 {
+                    let v = _mm256_loadu_si256(rows.as_ptr().add(i) as *const __m256i);
+                    let eq = _mm256_cmpeq_epi64(_mm256_and_si256(v, splat), zero);
+                    let zero_lanes = _mm256_movemask_pd(_mm256_castsi256_pd(eq)) as u64;
+                    out |= (!zero_lanes & nib) << i;
+                }
+                i += 4;
+            }
+            while i < n {
+                if (mask >> i) & 1 != 0 && rows[i] & dom[0] != 0 {
+                    out |= 1u64 << i;
+                }
+                i += 1;
+            }
+            out
+        } else {
+            let mut out = 0u64;
+            let mut m = mask;
+            while m != 0 {
+                let i = m.trailing_zeros() as usize;
+                m &= m - 1;
+                if intersects(&rows[i * row_words..(i + 1) * row_words], dom) {
+                    out |= 1u64 << i;
+                }
+            }
+            out
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn intersects(row: &[u64], dom: &[u64]) -> bool {
+        let n = row.len();
+        let mut i = 0;
+        while i + 4 <= n {
+            let a = _mm256_loadu_si256(row.as_ptr().add(i) as *const __m256i);
+            let b = _mm256_loadu_si256(dom.as_ptr().add(i) as *const __m256i);
+            if _mm256_testz_si256(a, b) == 0 {
+                return true;
+            }
+            i += 4;
+        }
+        while i < n {
+            if row[i] & dom[i] != 0 {
+                return true;
+            }
+            i += 1;
+        }
+        false
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn zero_words(dst: &mut [u64]) {
+        let z = _mm256_setzero_si256();
+        let n = dst.len();
+        let p = dst.as_mut_ptr();
+        let mut i = 0;
+        while i + 4 <= n {
+            _mm256_storeu_si256(p.add(i) as *mut __m256i, z);
+            i += 4;
+        }
+        while i < n {
+            *p.add(i) = 0;
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn or_words(dst: &mut [u64], src: &[u64]) {
+        let n = dst.len().min(src.len());
+        let p = dst.as_mut_ptr();
+        let q = src.as_ptr();
+        let mut i = 0;
+        while i + 4 <= n {
+            let a = _mm256_loadu_si256(p.add(i) as *const __m256i);
+            let b = _mm256_loadu_si256(q.add(i) as *const __m256i);
+            _mm256_storeu_si256(p.add(i) as *mut __m256i, _mm256_or_si256(a, b));
+            i += 4;
+        }
+        while i < n {
+            *p.add(i) |= *q.add(i);
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn row_delta(cur: &[u64], next: &[u64]) -> RowDelta {
+        let n = cur.len();
+        let mut diff_acc = _mm256_setzero_si256();
+        let mut alive_acc = _mm256_setzero_si256();
+        let mut diff = 0u64;
+        let mut alive = 0u64;
+        let mut i = 0;
+        while i + 4 <= n {
+            let c = _mm256_loadu_si256(cur.as_ptr().add(i) as *const __m256i);
+            let x = _mm256_loadu_si256(next.as_ptr().add(i) as *const __m256i);
+            diff_acc = _mm256_or_si256(diff_acc, _mm256_xor_si256(c, x));
+            alive_acc = _mm256_or_si256(alive_acc, x);
+            i += 4;
+        }
+        while i < n {
+            diff |= cur[i] ^ next[i];
+            alive |= next[i];
+            i += 1;
+        }
+        let changed = diff != 0 || _mm256_testz_si256(diff_acc, diff_acc) == 0;
+        let wiped = alive == 0 && _mm256_testz_si256(alive_acc, alive_acc) == 1;
+        RowDelta { changed, wiped }
+    }
+}
+
+#[cfg(all(target_arch = "x86_64", rtac_avx512))]
+mod avx512 {
+    use super::RowDelta;
+    use std::arch::x86_64::*;
+
+    #[target_feature(enable = "avx512f")]
+    pub unsafe fn supported_mask(mask: u64, rows: &[u64], row_words: usize, dom: &[u64]) -> u64 {
+        if row_words == 1 {
+            // 8 single-word rows per iteration; `_mm512_test_epi64_mask`
+            // yields the nonzero-lane mask directly.
+            let splat = _mm512_set1_epi64(dom[0] as i64);
+            let n = rows.len();
+            let mut out = 0u64;
+            let mut i = 0;
+            while i + 8 <= n {
+                let byte = (mask >> i) & 0xFF;
+                if byte != 0 {
+                    let v = _mm512_loadu_epi64(rows.as_ptr().add(i) as *const i64);
+                    let nz = _mm512_test_epi64_mask(v, splat) as u64;
+                    out |= (nz & byte) << i;
+                }
+                i += 8;
+            }
+            while i < n {
+                if (mask >> i) & 1 != 0 && rows[i] & dom[0] != 0 {
+                    out |= 1u64 << i;
+                }
+                i += 1;
+            }
+            out
+        } else {
+            let mut out = 0u64;
+            let mut m = mask;
+            while m != 0 {
+                let i = m.trailing_zeros() as usize;
+                m &= m - 1;
+                if intersects(&rows[i * row_words..(i + 1) * row_words], dom) {
+                    out |= 1u64 << i;
+                }
+            }
+            out
+        }
+    }
+
+    #[target_feature(enable = "avx512f")]
+    unsafe fn intersects(row: &[u64], dom: &[u64]) -> bool {
+        let n = row.len();
+        let mut i = 0;
+        while i + 8 <= n {
+            let a = _mm512_loadu_epi64(row.as_ptr().add(i) as *const i64);
+            let b = _mm512_loadu_epi64(dom.as_ptr().add(i) as *const i64);
+            if _mm512_test_epi64_mask(a, b) != 0 {
+                return true;
+            }
+            i += 8;
+        }
+        while i < n {
+            if row[i] & dom[i] != 0 {
+                return true;
+            }
+            i += 1;
+        }
+        false
+    }
+
+    #[target_feature(enable = "avx512f")]
+    pub unsafe fn zero_words(dst: &mut [u64]) {
+        let z = _mm512_setzero_si512();
+        let n = dst.len();
+        let p = dst.as_mut_ptr();
+        let mut i = 0;
+        while i + 8 <= n {
+            _mm512_storeu_epi64(p.add(i) as *mut i64, z);
+            i += 8;
+        }
+        while i < n {
+            *p.add(i) = 0;
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx512f")]
+    pub unsafe fn or_words(dst: &mut [u64], src: &[u64]) {
+        let n = dst.len().min(src.len());
+        let p = dst.as_mut_ptr();
+        let q = src.as_ptr();
+        let mut i = 0;
+        while i + 8 <= n {
+            let a = _mm512_loadu_epi64(p.add(i) as *const i64);
+            let b = _mm512_loadu_epi64(q.add(i) as *const i64);
+            _mm512_storeu_epi64(p.add(i) as *mut i64, _mm512_or_si512(a, b));
+            i += 8;
+        }
+        while i < n {
+            *p.add(i) |= *q.add(i);
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx512f")]
+    pub unsafe fn row_delta(cur: &[u64], next: &[u64]) -> RowDelta {
+        let n = cur.len();
+        let mut diff_acc = _mm512_setzero_si512();
+        let mut alive_acc = _mm512_setzero_si512();
+        let mut diff = 0u64;
+        let mut alive = 0u64;
+        let mut i = 0;
+        while i + 8 <= n {
+            let c = _mm512_loadu_epi64(cur.as_ptr().add(i) as *const i64);
+            let x = _mm512_loadu_epi64(next.as_ptr().add(i) as *const i64);
+            diff_acc = _mm512_or_si512(diff_acc, _mm512_xor_si512(c, x));
+            alive_acc = _mm512_or_si512(alive_acc, x);
+            i += 8;
+        }
+        while i < n {
+            diff |= cur[i] ^ next[i];
+            alive |= next[i];
+            i += 1;
+        }
+        let changed = diff != 0 || _mm512_test_epi64_mask(diff_acc, diff_acc) != 0;
+        let wiped = alive == 0 && _mm512_test_epi64_mask(alive_acc, alive_acc) == 0;
+        RowDelta { changed, wiped }
+    }
+}
+
+/// Dispatch a kernel call on an [`Isa`] value: compiled-out ISAs (non-
+/// x86_64 targets, or AVX-512 on an old compiler) degrade to scalar.
+macro_rules! dispatch {
+    ($isa:expr, $scalar:expr, $avx2:expr, $avx512:expr) => {
+        match $isa {
+            Isa::Scalar => $scalar,
+            #[cfg(target_arch = "x86_64")]
+            Isa::Avx2 => unsafe { $avx2 },
+            #[cfg(all(target_arch = "x86_64", rtac_avx512))]
+            Isa::Avx512 => unsafe { $avx512 },
+            #[cfg(all(target_arch = "x86_64", not(rtac_avx512)))]
+            Isa::Avx512 => $scalar,
+            #[cfg(not(target_arch = "x86_64"))]
+            _ => $scalar,
+        }
+    };
+}
+
+/// Multi-row support intersection: for each set bit `i` of `mask`,
+/// decide whether row `i` of `rows` (`row_words` words per row, up to 64
+/// rows) intersects `dom`, and return the mask of rows that do.
+///
+/// This is one arc's worth of support tests for one 64-value window of
+/// the revised variable's domain: `mask` holds the values still alive,
+/// `rows` their relation rows (consecutive values ⇒ consecutive rows in
+/// the packed buffer), `dom` the witness variable's current domain row.
+pub fn supported_mask(isa: Isa, mask: u64, rows: &[u64], row_words: usize, dom: &[u64]) -> u64 {
+    debug_assert!(row_words > 0 && rows.len() % row_words == 0);
+    debug_assert!(rows.len() / row_words <= 64);
+    debug_assert!({
+        let k = rows.len() / row_words;
+        k >= 64 || mask >> k == 0
+    });
+    debug_assert!(dom.len() >= row_words);
+    if mask == 0 {
+        return 0;
+    }
+    dispatch!(
+        isa,
+        scalar::supported_mask(mask, rows, row_words, dom),
+        avx2::supported_mask(mask, rows, row_words, dom),
+        avx512::supported_mask(mask, rows, row_words, dom)
+    )
+}
+
+/// Clear every word of `dst` (bulk row clearing, e.g. `assign`).
+pub fn zero_words(isa: Isa, dst: &mut [u64]) {
+    dispatch!(isa, scalar::zero_words(dst), avx2::zero_words(dst), avx512::zero_words(dst))
+}
+
+/// `dst |= src`, word-wise (bitset merges at sweep barriers).
+pub fn or_words(isa: Isa, dst: &mut [u64], src: &[u64]) {
+    debug_assert_eq!(dst.len(), src.len());
+    dispatch!(
+        isa,
+        scalar::or_words(dst, src),
+        avx2::or_words(dst, src),
+        avx512::or_words(dst, src)
+    )
+}
+
+/// Fused changed/wipeout detection over one domain row: one pass yields
+/// both `cur != next` and `next == 0`.
+pub fn row_delta(isa: Isa, cur: &[u64], next: &[u64]) -> RowDelta {
+    debug_assert_eq!(cur.len(), next.len());
+    dispatch!(
+        isa,
+        scalar::row_delta(cur, next),
+        avx2::row_delta(cur, next),
+        avx512::row_delta(cur, next)
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::bitset::{tail_mask, words_for};
+    use crate::util::quickcheck::forall;
+    use crate::util::rng::Rng;
+
+    /// Widths that straddle word-lane boundaries, per the bit-identity
+    /// contract, plus a few odd ones.
+    const WIDTHS: &[usize] = &[1, 7, 63, 64, 65, 127, 128, 200];
+
+    fn random_words(rng: &mut Rng, len_bits: usize) -> Vec<u64> {
+        let mut v: Vec<u64> = (0..words_for(len_bits)).map(|_| rng.next_u64()).collect();
+        if let Some(last) = v.last_mut() {
+            *last &= tail_mask(len_bits);
+        }
+        v
+    }
+
+    #[test]
+    fn isa_name_covers_all_variants() {
+        assert_eq!(isa_name(Isa::Scalar), "scalar");
+        assert_eq!(isa_name(Isa::Avx2), "avx2");
+        assert_eq!(isa_name(Isa::Avx512), "avx512");
+    }
+
+    #[test]
+    fn forced_scalar_toggles_active_isa() {
+        let prior = forced_scalar();
+        set_forced_scalar(true);
+        assert_eq!(active_isa(), Isa::Scalar);
+        set_forced_scalar(prior);
+        assert_eq!(forced_scalar(), prior);
+    }
+
+    #[test]
+    fn supported_mask_matches_scalar_on_single_word_rows() {
+        let isa = detected_isa();
+        forall("simd-supported-1w", 0x51D1, 64, |rng: &mut Rng| {
+            let n_rows = 1 + rng.gen_range(64);
+            let rows: Vec<u64> = (0..n_rows).map(|_| rng.next_u64()).collect();
+            let dom = [rng.next_u64()];
+            let mask = rng.next_u64() & tail_mask(n_rows);
+            let got = supported_mask(isa, mask, &rows, 1, &dom);
+            let want = scalar::supported_mask(mask, &rows, 1, &dom);
+            if got != want {
+                return Err(format!("{n_rows} rows: {got:#x} != {want:#x}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn supported_mask_matches_scalar_on_wide_rows() {
+        let isa = detected_isa();
+        forall("simd-supported-wide", 0x51D2, 48, |rng: &mut Rng| {
+            let width = WIDTHS[rng.gen_range(WIDTHS.len())];
+            let rw = words_for(width);
+            let n_rows = 1 + rng.gen_range(32);
+            let mut rows = Vec::with_capacity(n_rows * rw);
+            for _ in 0..n_rows {
+                rows.extend(random_words(rng, width));
+            }
+            // sparse domain so both outcomes occur
+            let mut dom = random_words(rng, width);
+            for w in dom.iter_mut() {
+                *w &= rng.next_u64() & rng.next_u64();
+            }
+            let mask = rng.next_u64() & tail_mask(n_rows);
+            let got = supported_mask(isa, mask, &rows, rw, &dom);
+            let want = scalar::supported_mask(mask, &rows, rw, &dom);
+            if got != want {
+                return Err(format!("width {width}, {n_rows} rows: {got:#x} != {want:#x}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn zero_and_or_match_scalar_at_lane_boundaries() {
+        let isa = detected_isa();
+        for &width in WIDTHS {
+            forall(&format!("simd-zero-or-{width}"), 0x51D3 + width as u64, 8, |rng| {
+                let src = random_words(rng, width);
+                let base = random_words(rng, width);
+
+                let mut a = base.clone();
+                let mut b = base.clone();
+                or_words(isa, &mut a, &src);
+                scalar::or_words(&mut b, &src);
+                if a != b {
+                    return Err(format!("or_words diverged at width {width}"));
+                }
+
+                zero_words(isa, &mut a);
+                scalar::zero_words(&mut b);
+                if a != b || a.iter().any(|&w| w != 0) {
+                    return Err(format!("zero_words diverged at width {width}"));
+                }
+                Ok(())
+            });
+        }
+    }
+
+    #[test]
+    fn row_delta_matches_scalar_including_wipeouts() {
+        let isa = detected_isa();
+        forall("simd-row-delta", 0x51D4, 64, |rng: &mut Rng| {
+            let width = WIDTHS[rng.gen_range(WIDTHS.len())];
+            let cur = random_words(rng, width);
+            let mut next = cur.clone();
+            match rng.gen_range(4) {
+                0 => {}                                     // unchanged
+                1 => scalar::zero_words(&mut next),         // wiped (if cur nonzero)
+                _ => {
+                    for w in next.iter_mut() {
+                        *w &= rng.next_u64();               // random removals
+                    }
+                }
+            }
+            let got = row_delta(isa, &cur, &next);
+            let want = scalar::row_delta(&cur, &next);
+            if got != want {
+                return Err(format!("width {width}: {got:?} != {want:?}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn row_delta_edge_semantics() {
+        for isa in [Isa::Scalar, detected_isa()] {
+            let d = row_delta(isa, &[5, 0], &[5, 0]);
+            assert!(!d.changed && !d.wiped, "{isa:?}: unchanged nonzero row");
+            let d = row_delta(isa, &[0, 0], &[0, 0]);
+            assert!(!d.changed && d.wiped, "{isa:?}: already-empty row");
+            let d = row_delta(isa, &[1, 2], &[1, 0]);
+            assert!(d.changed && !d.wiped, "{isa:?}: partial removal");
+        }
+    }
+}

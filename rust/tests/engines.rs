@@ -128,6 +128,60 @@ fn incremental_use_equals_scratch_use() {
 }
 
 #[test]
+fn lane_boundary_domain_sizes_agree_across_engines() {
+    // domain sizes straddling the 64-bit word boundaries exercise the
+    // word kernels' tail handling: every AC engine must still agree
+    for dom in [63usize, 64, 65, 127, 128] {
+        let p = random_csp(&RandomSpec::new(6, dom, 1.0, 0.55, 0xB0 + dom as u64));
+        let results = closures_for(&p);
+        for (i, r) in results.iter().enumerate() {
+            assert_eq!(r.0, results[0].0, "{} verdict at dom={dom}", ALL_ENGINES[i]);
+            if r.0 {
+                assert_eq!(r.1, results[0].1, "{} closure at dom={dom}", ALL_ENGINES[i]);
+            }
+        }
+    }
+}
+
+#[test]
+fn forced_scalar_is_bit_identical_for_simd_engines() {
+    // the RTAC_FORCE_SCALAR escape hatch must be purely a performance
+    // switch: outcome, closure, AND counters identical either way, for
+    // the sequential, parallel, and batched-SAC users of the kernels
+    use rtac::util::simd::{forced_scalar, set_forced_scalar};
+    let prior = forced_scalar();
+    let run = |name: &str, p: &rtac::core::Problem| {
+        let mut engine = make_engine(name).unwrap();
+        let mut s = State::new(p);
+        let mut c = Counters::default();
+        let out = engine.enforce(p, &mut s, &[], &mut c);
+        (out.is_consistent(), s.snapshot(), c)
+    };
+    forall("forced-scalar-bit-identity", 0x51D, 10, |rng: &mut Rng| {
+        let spec = RandomSpec::new(
+            2 + rng.gen_range(8),
+            1 + rng.gen_range(70), // crosses the 64-value lane boundary
+            rng.next_f64(),
+            rng.next_f64(),
+            rng.next_u64(),
+        );
+        let p = random_csp(&spec);
+        for name in ["rtac", "rtac-inc", "rtac-par3", "rtac-par-inc3", "sac-par2"] {
+            set_forced_scalar(true);
+            let scalar = run(name, &p);
+            set_forced_scalar(false);
+            let dispatched = run(name, &p);
+            if scalar != dispatched {
+                set_forced_scalar(prior);
+                return Err(format!("{name}: scalar vs dispatched diverged on {spec:?}"));
+            }
+        }
+        Ok(())
+    });
+    set_forced_scalar(prior);
+}
+
+#[test]
 fn table1_shape_revisions_grow_recurrences_flat() {
     // miniature of the paper's Table 1 claim, as a regression guard:
     // revisions grow superlinearly with density, recurrences stay ~flat.
