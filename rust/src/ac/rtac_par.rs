@@ -323,6 +323,9 @@ impl RtacParallel {
                     .collect();
                 pool.run_collect(tasks)
             }
+            // lint:allow(thread-placement): the Scoped mode IS the bench
+            // baseline quantifying what the WorkerPool saves — it must
+            // keep spawning per sweep to stay a fair comparison.
             SpawnMode::Scoped => std::thread::scope(|scope| {
                 let handles: Vec<_> = work
                     .into_iter()

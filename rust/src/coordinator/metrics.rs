@@ -53,7 +53,7 @@ struct Inner {
     shipped_f32: u64,
     base_uploads: u64,
     base_evictions: u64,
-    batch_occupancy_sum: u64,
+    batch_occupancy_sum: u64, // lint:allow(metrics-ledger): surfaced as mean_batch_occupancy
     padded_slots: u64,
     wipeouts: u64,
     queue_us: Online,

@@ -1863,6 +1863,7 @@ mod tests {
         let (h, rx) = test_handle();
         let len = h.bucket.vars_len();
         let metrics = h.metrics.clone();
+        // lint:allow(thread-placement): test-only fake executor thread
         let executor = std::thread::spawn(move || {
             // fake executor: receive one request, fail its "execution",
             // drop the responder without answering, then exit.
@@ -1885,6 +1886,7 @@ mod tests {
         let (h, rx) = test_handle();
         let len = h.bucket.vars_len();
         let metrics = h.metrics.clone();
+        // lint:allow(thread-placement): test-only fake executor thread
         let executor = std::thread::spawn(move || {
             // answer the first probe, then die with the second in flight
             let req = expect_req(rx.recv().unwrap());
@@ -1927,6 +1929,7 @@ mod tests {
         let len = h.bucket.vars_len();
         let metrics = h.metrics.clone();
         let thread_metrics = metrics.clone();
+        // lint:allow(thread-placement): test-only fake executor thread
         let executor = std::thread::spawn(move || {
             let mut served = 0usize;
             while let Ok(msg) = rx.recv() {
@@ -2079,6 +2082,7 @@ mod tests {
                 }
             }
         }
+        // lint:allow(thread-placement): chaos-test reference executor thread
         std::thread::spawn(move || {
             use crate::ac::{rtac::RtacNative, Counters, Propagator};
             use crate::runtime::{decode_vars, encode_vars};
@@ -2434,6 +2438,7 @@ mod tests {
         let bucket = Bucket { n: 8, d: 4 };
         let p = random_csp(&RandomSpec::new(6, 4, 0.7, 0.4, 31));
         let (h, join) = reference_session(&p, bucket);
+        // lint:allow(thread-placement): test clients hammering one session
         std::thread::scope(|scope| {
             for t in 0..2u64 {
                 let handle = h.clone();

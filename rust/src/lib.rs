@@ -19,6 +19,11 @@
 //! See DESIGN.md for the architecture and EXPERIMENTS.md for the
 //! paper-reproduction results (Fig. 3, Table 1).
 
+// Every unsafe operation must sit in an explicit `unsafe {}` block with
+// its own SAFETY argument, even inside `unsafe fn` — enforced here and
+// cross-checked by `tools/rtac-lint` (see docs/CORRECTNESS.md).
+#![deny(unsafe_op_in_unsafe_fn)]
+
 pub mod ac;
 pub mod bench;
 pub mod coordinator;

@@ -182,6 +182,9 @@ pub fn solve_parallel_with(
     let stop = Arc::new(AtomicBool::new(false));
     let (tx, rx) = mpsc::channel::<(usize, SolveResult, SolveStats, Option<String>)>();
 
+    // lint:allow(thread-placement): portfolio search workers live for the
+    // whole solve, not per-sweep — a WorkerPool would add a second barrier
+    // layer for no reuse (each worker runs one long solve, then exits).
     std::thread::scope(|scope| {
         for (wid, slice) in slices.into_iter().enumerate() {
             let handle = handle.clone();

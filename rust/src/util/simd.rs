@@ -120,6 +120,11 @@ pub fn set_forced_scalar(on: bool) {
 fn detected_isa() -> Isa {
     static DETECTED: OnceLock<Isa> = OnceLock::new();
     *DETECTED.get_or_init(|| {
+        // Miri interprets MIR and cannot execute vendor intrinsics; the
+        // scalar oracle is the only meaningful path under it.
+        if cfg!(miri) {
+            return Isa::Scalar;
+        }
         #[cfg(target_arch = "x86_64")]
         {
             #[cfg(rtac_avx512)]
@@ -217,125 +222,152 @@ mod avx2 {
     use super::RowDelta;
     use std::arch::x86_64::*;
 
+    // SAFETY: caller must guarantee AVX2 is available (the dispatch!
+    // macro only routes here after `active_isa` detection).
     #[target_feature(enable = "avx2")]
     pub unsafe fn supported_mask(mask: u64, rows: &[u64], row_words: usize, dom: &[u64]) -> u64 {
-        if row_words == 1 {
-            // 4 single-word rows per iteration against a splat of the
-            // witness domain word; skip groups with no candidate bits.
-            let splat = _mm256_set1_epi64x(dom[0] as i64);
-            let zero = _mm256_setzero_si256();
-            let n = rows.len();
-            let mut out = 0u64;
+        // SAFETY: AVX2 availability is this fn's own precondition; every
+        // 4-word `loadu` is kept in bounds by `i + 4 <= rows.len()`.
+        unsafe {
+            if row_words == 1 {
+                // 4 single-word rows per iteration against a splat of the
+                // witness domain word; skip groups with no candidate bits.
+                let splat = _mm256_set1_epi64x(dom[0] as i64);
+                let zero = _mm256_setzero_si256();
+                let n = rows.len();
+                let mut out = 0u64;
+                let mut i = 0;
+                while i + 4 <= n {
+                    let nib = (mask >> i) & 0xF;
+                    if nib != 0 {
+                        let v = _mm256_loadu_si256(rows.as_ptr().add(i) as *const __m256i);
+                        let eq = _mm256_cmpeq_epi64(_mm256_and_si256(v, splat), zero);
+                        let zero_lanes = _mm256_movemask_pd(_mm256_castsi256_pd(eq)) as u64;
+                        out |= (!zero_lanes & nib) << i;
+                    }
+                    i += 4;
+                }
+                while i < n {
+                    if (mask >> i) & 1 != 0 && rows[i] & dom[0] != 0 {
+                        out |= 1u64 << i;
+                    }
+                    i += 1;
+                }
+                out
+            } else {
+                let mut out = 0u64;
+                let mut m = mask;
+                while m != 0 {
+                    let i = m.trailing_zeros() as usize;
+                    m &= m - 1;
+                    if intersects(&rows[i * row_words..(i + 1) * row_words], dom) {
+                        out |= 1u64 << i;
+                    }
+                }
+                out
+            }
+        }
+    }
+
+    // SAFETY: caller must guarantee AVX2 (reached only from the AVX2
+    // kernels above, which carry the same precondition).
+    #[target_feature(enable = "avx2")]
+    unsafe fn intersects(row: &[u64], dom: &[u64]) -> bool {
+        // SAFETY: AVX2 is the fn's precondition; `i + 4 <= row.len()`
+        // bounds both loads (callers pass `dom` at least as long).
+        unsafe {
+            let n = row.len();
             let mut i = 0;
             while i + 4 <= n {
-                let nib = (mask >> i) & 0xF;
-                if nib != 0 {
-                    let v = _mm256_loadu_si256(rows.as_ptr().add(i) as *const __m256i);
-                    let eq = _mm256_cmpeq_epi64(_mm256_and_si256(v, splat), zero);
-                    let zero_lanes = _mm256_movemask_pd(_mm256_castsi256_pd(eq)) as u64;
-                    out |= (!zero_lanes & nib) << i;
+                let a = _mm256_loadu_si256(row.as_ptr().add(i) as *const __m256i);
+                let b = _mm256_loadu_si256(dom.as_ptr().add(i) as *const __m256i);
+                if _mm256_testz_si256(a, b) == 0 {
+                    return true;
                 }
                 i += 4;
             }
             while i < n {
-                if (mask >> i) & 1 != 0 && rows[i] & dom[0] != 0 {
-                    out |= 1u64 << i;
+                if row[i] & dom[i] != 0 {
+                    return true;
                 }
                 i += 1;
             }
-            out
-        } else {
-            let mut out = 0u64;
-            let mut m = mask;
-            while m != 0 {
-                let i = m.trailing_zeros() as usize;
-                m &= m - 1;
-                if intersects(&rows[i * row_words..(i + 1) * row_words], dom) {
-                    out |= 1u64 << i;
-                }
-            }
-            out
+            false
         }
     }
 
-    #[target_feature(enable = "avx2")]
-    unsafe fn intersects(row: &[u64], dom: &[u64]) -> bool {
-        let n = row.len();
-        let mut i = 0;
-        while i + 4 <= n {
-            let a = _mm256_loadu_si256(row.as_ptr().add(i) as *const __m256i);
-            let b = _mm256_loadu_si256(dom.as_ptr().add(i) as *const __m256i);
-            if _mm256_testz_si256(a, b) == 0 {
-                return true;
-            }
-            i += 4;
-        }
-        while i < n {
-            if row[i] & dom[i] != 0 {
-                return true;
-            }
-            i += 1;
-        }
-        false
-    }
-
+    // SAFETY: caller must guarantee AVX2 (dispatch!-routed).
     #[target_feature(enable = "avx2")]
     pub unsafe fn zero_words(dst: &mut [u64]) {
-        let z = _mm256_setzero_si256();
-        let n = dst.len();
-        let p = dst.as_mut_ptr();
-        let mut i = 0;
-        while i + 4 <= n {
-            _mm256_storeu_si256(p.add(i) as *mut __m256i, z);
-            i += 4;
-        }
-        while i < n {
-            *p.add(i) = 0;
-            i += 1;
+        // SAFETY: AVX2 is the fn's precondition; stores stay inside
+        // `dst` because `i + 4 <= n` (vector) and `i < n` (tail).
+        unsafe {
+            let z = _mm256_setzero_si256();
+            let n = dst.len();
+            let p = dst.as_mut_ptr();
+            let mut i = 0;
+            while i + 4 <= n {
+                _mm256_storeu_si256(p.add(i) as *mut __m256i, z);
+                i += 4;
+            }
+            while i < n {
+                *p.add(i) = 0;
+                i += 1;
+            }
         }
     }
 
+    // SAFETY: caller must guarantee AVX2 (dispatch!-routed).
     #[target_feature(enable = "avx2")]
     pub unsafe fn or_words(dst: &mut [u64], src: &[u64]) {
-        let n = dst.len().min(src.len());
-        let p = dst.as_mut_ptr();
-        let q = src.as_ptr();
-        let mut i = 0;
-        while i + 4 <= n {
-            let a = _mm256_loadu_si256(p.add(i) as *const __m256i);
-            let b = _mm256_loadu_si256(q.add(i) as *const __m256i);
-            _mm256_storeu_si256(p.add(i) as *mut __m256i, _mm256_or_si256(a, b));
-            i += 4;
-        }
-        while i < n {
-            *p.add(i) |= *q.add(i);
-            i += 1;
+        // SAFETY: AVX2 is the fn's precondition; `n` is the shorter of
+        // the two lengths, so every load/store is in bounds for both.
+        unsafe {
+            let n = dst.len().min(src.len());
+            let p = dst.as_mut_ptr();
+            let q = src.as_ptr();
+            let mut i = 0;
+            while i + 4 <= n {
+                let a = _mm256_loadu_si256(p.add(i) as *const __m256i);
+                let b = _mm256_loadu_si256(q.add(i) as *const __m256i);
+                _mm256_storeu_si256(p.add(i) as *mut __m256i, _mm256_or_si256(a, b));
+                i += 4;
+            }
+            while i < n {
+                *p.add(i) |= *q.add(i);
+                i += 1;
+            }
         }
     }
 
+    // SAFETY: caller must guarantee AVX2 (dispatch!-routed).
     #[target_feature(enable = "avx2")]
     pub unsafe fn row_delta(cur: &[u64], next: &[u64]) -> RowDelta {
-        let n = cur.len();
-        let mut diff_acc = _mm256_setzero_si256();
-        let mut alive_acc = _mm256_setzero_si256();
-        let mut diff = 0u64;
-        let mut alive = 0u64;
-        let mut i = 0;
-        while i + 4 <= n {
-            let c = _mm256_loadu_si256(cur.as_ptr().add(i) as *const __m256i);
-            let x = _mm256_loadu_si256(next.as_ptr().add(i) as *const __m256i);
-            diff_acc = _mm256_or_si256(diff_acc, _mm256_xor_si256(c, x));
-            alive_acc = _mm256_or_si256(alive_acc, x);
-            i += 4;
+        // SAFETY: AVX2 is the fn's precondition; `i + 4 <= cur.len()`
+        // bounds both loads (the safe wrapper asserts equal lengths).
+        unsafe {
+            let n = cur.len();
+            let mut diff_acc = _mm256_setzero_si256();
+            let mut alive_acc = _mm256_setzero_si256();
+            let mut diff = 0u64;
+            let mut alive = 0u64;
+            let mut i = 0;
+            while i + 4 <= n {
+                let c = _mm256_loadu_si256(cur.as_ptr().add(i) as *const __m256i);
+                let x = _mm256_loadu_si256(next.as_ptr().add(i) as *const __m256i);
+                diff_acc = _mm256_or_si256(diff_acc, _mm256_xor_si256(c, x));
+                alive_acc = _mm256_or_si256(alive_acc, x);
+                i += 4;
+            }
+            while i < n {
+                diff |= cur[i] ^ next[i];
+                alive |= next[i];
+                i += 1;
+            }
+            let changed = diff != 0 || _mm256_testz_si256(diff_acc, diff_acc) == 0;
+            let wiped = alive == 0 && _mm256_testz_si256(alive_acc, alive_acc) == 1;
+            RowDelta { changed, wiped }
         }
-        while i < n {
-            diff |= cur[i] ^ next[i];
-            alive |= next[i];
-            i += 1;
-        }
-        let changed = diff != 0 || _mm256_testz_si256(diff_acc, diff_acc) == 0;
-        let wiped = alive == 0 && _mm256_testz_si256(alive_acc, alive_acc) == 1;
-        RowDelta { changed, wiped }
     }
 }
 
@@ -344,123 +376,150 @@ mod avx512 {
     use super::RowDelta;
     use std::arch::x86_64::*;
 
+    // SAFETY: caller must guarantee AVX-512F (the dispatch! macro only
+    // routes here after `active_isa` detection).
     #[target_feature(enable = "avx512f")]
     pub unsafe fn supported_mask(mask: u64, rows: &[u64], row_words: usize, dom: &[u64]) -> u64 {
-        if row_words == 1 {
-            // 8 single-word rows per iteration; `_mm512_test_epi64_mask`
-            // yields the nonzero-lane mask directly.
-            let splat = _mm512_set1_epi64(dom[0] as i64);
-            let n = rows.len();
-            let mut out = 0u64;
+        // SAFETY: AVX-512F is this fn's own precondition; every 8-word
+        // `loadu` is kept in bounds by `i + 8 <= rows.len()`.
+        unsafe {
+            if row_words == 1 {
+                // 8 single-word rows per iteration; `_mm512_test_epi64_mask`
+                // yields the nonzero-lane mask directly.
+                let splat = _mm512_set1_epi64(dom[0] as i64);
+                let n = rows.len();
+                let mut out = 0u64;
+                let mut i = 0;
+                while i + 8 <= n {
+                    let byte = (mask >> i) & 0xFF;
+                    if byte != 0 {
+                        let v = _mm512_loadu_epi64(rows.as_ptr().add(i) as *const i64);
+                        let nz = _mm512_test_epi64_mask(v, splat) as u64;
+                        out |= (nz & byte) << i;
+                    }
+                    i += 8;
+                }
+                while i < n {
+                    if (mask >> i) & 1 != 0 && rows[i] & dom[0] != 0 {
+                        out |= 1u64 << i;
+                    }
+                    i += 1;
+                }
+                out
+            } else {
+                let mut out = 0u64;
+                let mut m = mask;
+                while m != 0 {
+                    let i = m.trailing_zeros() as usize;
+                    m &= m - 1;
+                    if intersects(&rows[i * row_words..(i + 1) * row_words], dom) {
+                        out |= 1u64 << i;
+                    }
+                }
+                out
+            }
+        }
+    }
+
+    // SAFETY: caller must guarantee AVX-512F (reached only from the
+    // AVX-512 kernels above, which carry the same precondition).
+    #[target_feature(enable = "avx512f")]
+    unsafe fn intersects(row: &[u64], dom: &[u64]) -> bool {
+        // SAFETY: AVX-512F is the fn's precondition; `i + 8 <= row.len()`
+        // bounds both loads (callers pass `dom` at least as long).
+        unsafe {
+            let n = row.len();
             let mut i = 0;
             while i + 8 <= n {
-                let byte = (mask >> i) & 0xFF;
-                if byte != 0 {
-                    let v = _mm512_loadu_epi64(rows.as_ptr().add(i) as *const i64);
-                    let nz = _mm512_test_epi64_mask(v, splat) as u64;
-                    out |= (nz & byte) << i;
+                let a = _mm512_loadu_epi64(row.as_ptr().add(i) as *const i64);
+                let b = _mm512_loadu_epi64(dom.as_ptr().add(i) as *const i64);
+                if _mm512_test_epi64_mask(a, b) != 0 {
+                    return true;
                 }
                 i += 8;
             }
             while i < n {
-                if (mask >> i) & 1 != 0 && rows[i] & dom[0] != 0 {
-                    out |= 1u64 << i;
+                if row[i] & dom[i] != 0 {
+                    return true;
                 }
                 i += 1;
             }
-            out
-        } else {
-            let mut out = 0u64;
-            let mut m = mask;
-            while m != 0 {
-                let i = m.trailing_zeros() as usize;
-                m &= m - 1;
-                if intersects(&rows[i * row_words..(i + 1) * row_words], dom) {
-                    out |= 1u64 << i;
-                }
-            }
-            out
+            false
         }
     }
 
-    #[target_feature(enable = "avx512f")]
-    unsafe fn intersects(row: &[u64], dom: &[u64]) -> bool {
-        let n = row.len();
-        let mut i = 0;
-        while i + 8 <= n {
-            let a = _mm512_loadu_epi64(row.as_ptr().add(i) as *const i64);
-            let b = _mm512_loadu_epi64(dom.as_ptr().add(i) as *const i64);
-            if _mm512_test_epi64_mask(a, b) != 0 {
-                return true;
-            }
-            i += 8;
-        }
-        while i < n {
-            if row[i] & dom[i] != 0 {
-                return true;
-            }
-            i += 1;
-        }
-        false
-    }
-
+    // SAFETY: caller must guarantee AVX-512F (dispatch!-routed).
     #[target_feature(enable = "avx512f")]
     pub unsafe fn zero_words(dst: &mut [u64]) {
-        let z = _mm512_setzero_si512();
-        let n = dst.len();
-        let p = dst.as_mut_ptr();
-        let mut i = 0;
-        while i + 8 <= n {
-            _mm512_storeu_epi64(p.add(i) as *mut i64, z);
-            i += 8;
-        }
-        while i < n {
-            *p.add(i) = 0;
-            i += 1;
+        // SAFETY: AVX-512F is the fn's precondition; stores stay inside
+        // `dst` because `i + 8 <= n` (vector) and `i < n` (tail).
+        unsafe {
+            let z = _mm512_setzero_si512();
+            let n = dst.len();
+            let p = dst.as_mut_ptr();
+            let mut i = 0;
+            while i + 8 <= n {
+                _mm512_storeu_epi64(p.add(i) as *mut i64, z);
+                i += 8;
+            }
+            while i < n {
+                *p.add(i) = 0;
+                i += 1;
+            }
         }
     }
 
+    // SAFETY: caller must guarantee AVX-512F (dispatch!-routed).
     #[target_feature(enable = "avx512f")]
     pub unsafe fn or_words(dst: &mut [u64], src: &[u64]) {
-        let n = dst.len().min(src.len());
-        let p = dst.as_mut_ptr();
-        let q = src.as_ptr();
-        let mut i = 0;
-        while i + 8 <= n {
-            let a = _mm512_loadu_epi64(p.add(i) as *const i64);
-            let b = _mm512_loadu_epi64(q.add(i) as *const i64);
-            _mm512_storeu_epi64(p.add(i) as *mut i64, _mm512_or_si512(a, b));
-            i += 8;
-        }
-        while i < n {
-            *p.add(i) |= *q.add(i);
-            i += 1;
+        // SAFETY: AVX-512F is the fn's precondition; `n` is the shorter
+        // of the two lengths, so every load/store is in bounds for both.
+        unsafe {
+            let n = dst.len().min(src.len());
+            let p = dst.as_mut_ptr();
+            let q = src.as_ptr();
+            let mut i = 0;
+            while i + 8 <= n {
+                let a = _mm512_loadu_epi64(p.add(i) as *const i64);
+                let b = _mm512_loadu_epi64(q.add(i) as *const i64);
+                _mm512_storeu_epi64(p.add(i) as *mut i64, _mm512_or_si512(a, b));
+                i += 8;
+            }
+            while i < n {
+                *p.add(i) |= *q.add(i);
+                i += 1;
+            }
         }
     }
 
+    // SAFETY: caller must guarantee AVX-512F (dispatch!-routed).
     #[target_feature(enable = "avx512f")]
     pub unsafe fn row_delta(cur: &[u64], next: &[u64]) -> RowDelta {
-        let n = cur.len();
-        let mut diff_acc = _mm512_setzero_si512();
-        let mut alive_acc = _mm512_setzero_si512();
-        let mut diff = 0u64;
-        let mut alive = 0u64;
-        let mut i = 0;
-        while i + 8 <= n {
-            let c = _mm512_loadu_epi64(cur.as_ptr().add(i) as *const i64);
-            let x = _mm512_loadu_epi64(next.as_ptr().add(i) as *const i64);
-            diff_acc = _mm512_or_si512(diff_acc, _mm512_xor_si512(c, x));
-            alive_acc = _mm512_or_si512(alive_acc, x);
-            i += 8;
+        // SAFETY: AVX-512F is the fn's precondition; `i + 8 <= cur.len()`
+        // bounds both loads (the safe wrapper asserts equal lengths).
+        unsafe {
+            let n = cur.len();
+            let mut diff_acc = _mm512_setzero_si512();
+            let mut alive_acc = _mm512_setzero_si512();
+            let mut diff = 0u64;
+            let mut alive = 0u64;
+            let mut i = 0;
+            while i + 8 <= n {
+                let c = _mm512_loadu_epi64(cur.as_ptr().add(i) as *const i64);
+                let x = _mm512_loadu_epi64(next.as_ptr().add(i) as *const i64);
+                diff_acc = _mm512_or_si512(diff_acc, _mm512_xor_si512(c, x));
+                alive_acc = _mm512_or_si512(alive_acc, x);
+                i += 8;
+            }
+            while i < n {
+                diff |= cur[i] ^ next[i];
+                alive |= next[i];
+                i += 1;
+            }
+            let changed = diff != 0 || _mm512_test_epi64_mask(diff_acc, diff_acc) != 0;
+            let wiped = alive == 0 && _mm512_test_epi64_mask(alive_acc, alive_acc) == 0;
+            RowDelta { changed, wiped }
         }
-        while i < n {
-            diff |= cur[i] ^ next[i];
-            alive |= next[i];
-            i += 1;
-        }
-        let changed = diff != 0 || _mm512_test_epi64_mask(diff_acc, diff_acc) != 0;
-        let wiped = alive == 0 && _mm512_test_epi64_mask(alive_acc, alive_acc) == 0;
-        RowDelta { changed, wiped }
     }
 }
 
@@ -470,8 +529,12 @@ macro_rules! dispatch {
     ($isa:expr, $scalar:expr, $avx2:expr, $avx512:expr) => {
         match $isa {
             Isa::Scalar => $scalar,
+            // SAFETY: an `Isa::Avx2` value only exists when `active_isa`
+            // detected AVX2 on this CPU (module-level safety contract).
             #[cfg(target_arch = "x86_64")]
             Isa::Avx2 => unsafe { $avx2 },
+            // SAFETY: an `Isa::Avx512` value only exists when `active_isa`
+            // detected AVX-512F on this CPU (module-level safety contract).
             #[cfg(all(target_arch = "x86_64", rtac_avx512))]
             Isa::Avx512 => unsafe { $avx512 },
             #[cfg(all(target_arch = "x86_64", not(rtac_avx512)))]

@@ -82,6 +82,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // wall-clock sleep: meaningless under the interpreter
     fn restart_resets() {
         let mut sw = Stopwatch::start();
         std::thread::sleep(Duration::from_millis(1));

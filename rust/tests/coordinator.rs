@@ -108,6 +108,8 @@ fn concurrent_requests_coalesce_and_match_serial() {
         .map(|pl| hs.enforce_blocking(pl.clone()).unwrap())
         .collect();
 
+    // lint:allow(thread-placement): concurrent test clients exercising the
+    // coordinator's batching window
     let batched: Vec<_> = std::thread::scope(|scope| {
         let handles: Vec<_> = planes
             .iter()

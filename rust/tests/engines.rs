@@ -182,6 +182,66 @@ fn forced_scalar_is_bit_identical_for_simd_engines() {
 }
 
 #[test]
+fn every_registered_engine_name_is_constructible_and_sound() {
+    // One member of every `make_engine` arm — the exact names and one
+    // suffixed member of each worker family (rtac-lint's engine-coverage
+    // rule keeps this list in sync with the registry).  AC engines must
+    // reproduce the ac3 closure (Prop. 1: the AC closure is unique);
+    // SAC engines must reproduce the sequential sac closure.  sac-xla
+    // needs compiled artifacts and real PJRT bindings, so offline it
+    // must fail loudly (failure() set) rather than mis-answer.
+    let p = random_csp(&RandomSpec::new(8, 5, 0.85, 0.3, 0xC0FE));
+    let run = |name: &str| {
+        let mut engine = make_engine(name).unwrap();
+        let mut s = State::new(&p);
+        let mut c = Counters::default();
+        let out = engine.enforce(&p, &mut s, &[], &mut c);
+        (out.is_consistent(), s.snapshot(), engine.failure().map(String::from))
+    };
+
+    let (ac_ok, ac_closure, _) = run("ac3");
+    for name in [
+        "ac3-lifo",
+        "ac3-dom",
+        "ac2001",
+        "ac3bit",
+        "rtac",
+        "rtac-inc",
+        "rtac-par2",
+        "rtac-par-inc2",
+        "rtac-par-scoped2",
+    ] {
+        let (ok, closure, failed) = run(name);
+        assert_eq!(failed, None, "{name} reported failure");
+        assert_eq!(ok, ac_ok, "{name}: AC verdict diverged from ac3");
+        if ok {
+            assert_eq!(closure, ac_closure, "{name}: AC closure diverged from ac3");
+        }
+    }
+
+    let (sac_ok, sac_closure, _) = run("sac");
+    for name in ["sac-rtac", "sac-par2", "sac-mixed2"] {
+        let (ok, closure, failed) = run(name);
+        assert_eq!(failed, None, "{name} reported failure");
+        assert_eq!(ok, sac_ok, "{name}: SAC verdict diverged from sac");
+        if ok {
+            assert_eq!(closure, sac_closure, "{name}: SAC closure diverged from sac");
+        }
+    }
+
+    let (ok, closure, failed) = run("sac-xla2");
+    match failed {
+        Some(_) => assert!(!ok, "sac-xla2 reported failure but claimed consistency"),
+        None => {
+            assert_eq!(ok, sac_ok, "sac-xla2: SAC verdict diverged from sac");
+            if ok {
+                assert_eq!(closure, sac_closure, "sac-xla2: SAC closure diverged from sac");
+            }
+        }
+    }
+}
+
+#[test]
 fn table1_shape_revisions_grow_recurrences_flat() {
     // miniature of the paper's Table 1 claim, as a regression guard:
     // revisions grow superlinearly with density, recurrences stay ~flat.

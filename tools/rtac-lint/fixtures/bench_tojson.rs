@@ -1,0 +1,14 @@
+// Fixture: a miniature to_json emitting four cell keys (the skip
+// marker included — a cell that did not run still appears).  The
+// format! string below must NOT be mistaken for a key.  Not compiled.
+
+pub fn to_json(ok: bool) -> Vec<(&'static str, f64)> {
+    let mut fields = vec![("bench", 1.0), ("rows", 2.0)];
+    if ok {
+        fields.push(("simd_kernel_ns", 3.0));
+    } else {
+        fields.push(("simd_skipped", 0.0));
+    }
+    let _label = format!("not_a_key {}", fields.len());
+    fields
+}

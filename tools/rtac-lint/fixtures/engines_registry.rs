@@ -1,0 +1,12 @@
+// Fixture: a miniature make_engine with two exact arms and two prefix
+// families.  Not compiled.
+
+pub fn make_engine(name: &str) -> Result<(), String> {
+    match name {
+        "ac3" => Ok(()),
+        "rtac" => Ok(()),
+        other if other.starts_with("rtac-par") => Ok(()),
+        other if other.starts_with("sac-par") => Ok(()),
+        other => Err(format!("unknown engine {other:?}")),
+    }
+}

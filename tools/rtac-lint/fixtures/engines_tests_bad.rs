@@ -1,0 +1,10 @@
+// Fixture: only `ac3` is really exercised.  `rtac-par-extra` must NOT
+// count as covering the `rtac-par` family (the suffix is not digits).
+// Not compiled.
+
+#[test]
+fn partial_coverage() {
+    for name in ["ac3", "rtac-par-extra"] {
+        let _ = name;
+    }
+}

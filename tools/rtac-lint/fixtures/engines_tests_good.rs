@@ -1,0 +1,10 @@
+// Fixture: exercises every fixture-registry engine by name — exact
+// names literally, families via a digit suffix or the bare prefix.
+// Not compiled.
+
+#[test]
+fn every_engine_by_name() {
+    for name in ["ac3", "rtac", "rtac-par3", "sac-par"] {
+        let _ = name;
+    }
+}

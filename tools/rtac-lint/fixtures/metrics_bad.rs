@@ -1,0 +1,20 @@
+// Fixture: a counter with no snapshot field (dropped_requests) and one
+// that reaches the snapshot but not summary() (responses).  Not
+// compiled.
+
+struct Inner {
+    requests: u64,
+    responses: u64,
+    dropped_requests: u64,
+}
+
+pub struct MetricsSnapshot {
+    pub requests: u64,
+    pub responses: u64,
+}
+
+impl MetricsSnapshot {
+    pub fn summary(&self) -> String {
+        format!("req={}", self.requests)
+    }
+}

@@ -1,0 +1,25 @@
+// Fixture: a miniature metrics module where every u64 counter on Inner
+// surfaces in MetricsSnapshot and summary(), except one derived counter
+// carrying an explicit waiver.  Not compiled.
+
+struct Inner {
+    requests: u64,
+    responses: u64,
+    batch_occupancy_sum: u64, // lint:allow(metrics-ledger): surfaced as mean_batch_occupancy
+    queue_us: f64,
+}
+
+pub struct MetricsSnapshot {
+    pub requests: u64,
+    pub responses: u64,
+    pub mean_batch_occupancy: f64,
+}
+
+impl MetricsSnapshot {
+    pub fn summary(&self) -> String {
+        format!(
+            "req={} resp={} occ={:.2}",
+            self.requests, self.responses, self.mean_batch_occupancy
+        )
+    }
+}

@@ -1,0 +1,20 @@
+// Fixture: three `unsafe` sites without a SAFETY comment (a bare one,
+// one separated from its comment by a blank line, and one whose
+// adjacent comment says something else).  Not compiled.
+
+pub fn broken(x: &[u64]) -> u64 {
+    let a = unsafe { *x.as_ptr() };
+
+    // this comment is adjacent but carries no safety argument
+    let b = unsafe { *x.as_ptr() };
+    a + b
+}
+
+// SAFETY: this one is stranded — the blank line below breaks adjacency.
+
+pub unsafe fn no_comment() {}
+
+pub fn waived(x: &[u64]) -> u64 {
+    // lint:allow(safety-comment): vetted in review, comment pending
+    unsafe { *x.as_ptr() }
+}

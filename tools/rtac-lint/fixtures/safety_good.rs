@@ -1,0 +1,28 @@
+// Fixture: every `unsafe` carries a SAFETY comment in one of the
+// accepted shapes (above, above an attribute, below an attribute,
+// trailing on the same line).  Not compiled — lexed by the rule tests.
+
+pub struct W(*mut u8);
+
+impl W {
+    pub fn read(&self) -> u8 {
+        // SAFETY: the pointer is non-null and owned by construction.
+        unsafe { *self.0 }
+    }
+}
+
+// SAFETY: callers guarantee AVX2 (the comment may sit above the
+// attribute — attribute lines are transparent to the walk-up).
+#[target_feature(enable = "avx2")]
+pub unsafe fn kernel(x: &mut [u64]) {
+    // SAFETY: writes stay in bounds: the pointer is the slice's own.
+    unsafe { core::ptr::write(x.as_mut_ptr(), 1) }
+}
+
+#[inline]
+// SAFETY: comment below the attribute works too.
+pub unsafe fn kernel2() {}
+
+pub fn trailing(x: &[u64]) -> u64 {
+    unsafe { *x.as_ptr() } // SAFETY: `x` is non-empty (checked by caller)
+}

@@ -1,0 +1,13 @@
+// Fixture: vendor intrinsics leaking outside util/simd.rs (three
+// violations: the import, a core::arch path, and the detection macro).
+// Not compiled.
+
+use std::arch::x86_64::_mm256_setzero_si256;
+
+pub fn leak() -> bool {
+    let _z = core::arch::x86_64::_mm256_setzero_si256;
+    is_x86_feature_detected!("avx2")
+}
+
+// talking about std::arch or is_x86_feature_detected! in a comment is fine
+pub const DOC: &str = "and std::arch in a string is fine";

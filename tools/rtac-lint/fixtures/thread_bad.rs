@@ -1,0 +1,20 @@
+// Fixture: raw thread spawning outside exec/pool.rs (two violations —
+// the comment and string mentions below must NOT count).  Not compiled.
+
+pub fn fan_out() {
+    let h = std::thread::spawn(|| 1);
+    let _ = h.join();
+    std::thread::scope(|s| {
+        s.spawn(|| 2);
+    });
+}
+
+// a doc mention of thread::spawn is fine
+pub fn doc_mention() -> &'static str {
+    "thread::scope in a string is fine too"
+}
+
+pub fn waived() {
+    // lint:allow(thread-placement): test-only fake executor
+    std::thread::spawn(|| 3).join().unwrap();
+}

@@ -1,0 +1,13 @@
+// Fixture: thread APIs that are NOT spawn/scope never trip the rule.
+// Not compiled.
+
+use std::thread::JoinHandle;
+
+pub fn builder() -> JoinHandle<()> {
+    std::thread::Builder::new().spawn(|| {}).unwrap()
+}
+
+pub fn nap() {
+    std::thread::sleep(std::time::Duration::from_millis(1));
+    std::thread::yield_now();
+}

@@ -1,0 +1,215 @@
+//! File walking, rule orchestration, suppression and output.
+
+use crate::lexer::{lex, Lexed};
+use crate::rules::{self, Allow, Finding};
+use std::fs;
+use std::path::{Path, PathBuf};
+
+/// The result of one lint pass.
+#[derive(Clone, Debug, Default)]
+pub struct Report {
+    pub findings: Vec<Finding>,
+    pub files_scanned: usize,
+}
+
+impl Report {
+    pub fn clean(&self) -> bool {
+        self.findings.is_empty()
+    }
+}
+
+/// Recursively collect `.rs` files under `dir` (sorted for stable
+/// output).
+fn walk(dir: &Path, out: &mut Vec<PathBuf>) -> Result<(), String> {
+    let entries =
+        fs::read_dir(dir).map_err(|e| format!("cannot read {}: {e}", dir.display()))?;
+    for entry in entries {
+        let entry = entry.map_err(|e| format!("cannot read {}: {e}", dir.display()))?;
+        let path = entry.path();
+        if path.is_dir() {
+            walk(&path, out)?;
+        } else if path.extension().map(|e| e == "rs").unwrap_or(false) {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+fn rel(root: &Path, path: &Path) -> String {
+    path.strip_prefix(root)
+        .unwrap_or(path)
+        .to_string_lossy()
+        .replace('\\', "/")
+}
+
+/// Run every rule over `root` (the repo checkout: `rust/src`,
+/// `rust/tests`, `docs/BENCHMARKS.md` live beneath it).
+pub fn run(root: &Path) -> Result<Report, String> {
+    let mut files = Vec::new();
+    for dir in ["rust/src", "rust/tests"] {
+        let d = root.join(dir);
+        if !d.is_dir() {
+            return Err(format!(
+                "{} not found under --root {} — run from the repo root",
+                dir,
+                root.display()
+            ));
+        }
+        walk(&d, &mut files)?;
+    }
+    files.sort();
+
+    let mut findings: Vec<Finding> = Vec::new();
+    // Anchors for the cross-file rules, captured while walking.
+    let mut registry: Option<(String, Lexed, Vec<Allow>)> = None;
+    let mut engine_tests: Option<Lexed> = None;
+    let mut bench: Option<(String, Lexed, Vec<Allow>)> = None;
+    let mut saw_metrics = false;
+
+    for path in &files {
+        let name = rel(root, path);
+        let src = fs::read_to_string(path)
+            .map_err(|e| format!("cannot read {}: {e}", path.display()))?;
+        let lexed = lex(&src);
+        let allow_list = rules::allows(&lexed);
+
+        let mut per_file = Vec::new();
+        per_file.extend(rules::check_safety_comments(&name, &lexed));
+        per_file.extend(rules::check_thread_placement(&name, &lexed));
+        per_file.extend(rules::check_simd_containment(&name, &lexed));
+        if name.ends_with("coordinator/metrics.rs") {
+            saw_metrics = true;
+            per_file.extend(rules::check_metrics_ledger(&name, &lexed));
+        }
+        findings.extend(
+            per_file.into_iter().filter(|f| !rules::suppressed(&allow_list, f.rule, f.line)),
+        );
+
+        if name.ends_with("ac/mod.rs") {
+            registry = Some((name.clone(), lexed.clone(), allow_list.clone()));
+        }
+        if name.ends_with("tests/engines.rs") {
+            engine_tests = Some(lexed.clone());
+        }
+        if name.ends_with("bench/rtac_bench.rs") {
+            bench = Some((name.clone(), lexed.clone(), allow_list.clone()));
+        }
+    }
+
+    if !saw_metrics {
+        findings.push(Finding {
+            rule: rules::METRICS_LEDGER,
+            file: "rust/src/coordinator/metrics.rs".to_string(),
+            line: 1,
+            msg: "coordinator/metrics.rs missing — the metrics-ledger rule cannot run"
+                .to_string(),
+        });
+    }
+
+    match (&registry, &engine_tests) {
+        (Some((name, reg, allow_list)), Some(tests)) => {
+            findings.extend(
+                rules::check_engine_coverage(name, reg, tests)
+                    .into_iter()
+                    .filter(|f| !rules::suppressed(allow_list, f.rule, f.line)),
+            );
+        }
+        _ => findings.push(Finding {
+            rule: rules::ENGINE_COVERAGE,
+            file: "rust/src/ac/mod.rs".to_string(),
+            line: 1,
+            msg: "engine registry (ac/mod.rs) or rust/tests/engines.rs missing — the \
+                  engine-coverage rule cannot run"
+                .to_string(),
+        }),
+    }
+
+    let doc_path = root.join("docs/BENCHMARKS.md");
+    match (&bench, fs::read_to_string(&doc_path)) {
+        (Some((name, lexed, allow_list)), Ok(doc)) => {
+            findings.extend(
+                rules::check_bench_doc_drift(name, lexed, &doc)
+                    .into_iter()
+                    .filter(|f| !rules::suppressed(allow_list, f.rule, f.line)),
+            );
+        }
+        _ => findings.push(Finding {
+            rule: rules::BENCH_DOC_DRIFT,
+            file: "rust/src/bench/rtac_bench.rs".to_string(),
+            line: 1,
+            msg: "bench/rtac_bench.rs or docs/BENCHMARKS.md missing — the bench-doc-drift \
+                  rule cannot run"
+                .to_string(),
+        }),
+    }
+
+    findings.sort_by(|a, b| {
+        (a.file.as_str(), a.line, a.rule).cmp(&(b.file.as_str(), b.line, b.rule))
+    });
+    Ok(Report { findings, files_scanned: files.len() })
+}
+
+/// Human-readable report: one `file:line: [rule] message` per finding
+/// plus a one-line verdict.
+pub fn render_human(report: &Report) -> String {
+    let mut out = String::new();
+    for f in &report.findings {
+        out.push_str(&format!("{}:{}: [{}] {}\n", f.file, f.line, f.rule, f.msg));
+    }
+    if report.clean() {
+        out.push_str(&format!(
+            "rtac-lint: clean ({} files, {} rules)\n",
+            report.files_scanned,
+            rules::ALL_RULES.len()
+        ));
+    } else {
+        out.push_str(&format!(
+            "rtac-lint: {} violation(s) in {} files scanned\n",
+            report.findings.len(),
+            report.files_scanned
+        ));
+    }
+    out
+}
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Machine-readable report (the CI `lint` job consumes this shape).
+pub fn render_json(report: &Report) -> String {
+    let mut out = String::from("{\n  \"violations\": [");
+    for (i, f) in report.findings.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str(&format!(
+            "\n    {{\"rule\": \"{}\", \"file\": \"{}\", \"line\": {}, \"message\": \"{}\"}}",
+            json_escape(f.rule),
+            json_escape(&f.file),
+            f.line,
+            json_escape(&f.msg)
+        ));
+    }
+    if !report.findings.is_empty() {
+        out.push_str("\n  ");
+    }
+    out.push_str(&format!(
+        "],\n  \"count\": {},\n  \"files_scanned\": {}\n}}\n",
+        report.findings.len(),
+        report.files_scanned
+    ));
+    out
+}

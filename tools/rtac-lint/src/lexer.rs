@@ -1,0 +1,458 @@
+//! A minimal hand-written Rust lexer — just enough structure for the
+//! lint rules: every token knows its line, comments are captured as
+//! text spans (the `// SAFETY:` and `lint:allow(...)` carriers), and
+//! string/char/raw-string literals are lexed as single tokens so their
+//! *content* never masquerades as code.
+//!
+//! Deliberately not a full Rust lexer: multi-char operators come out as
+//! consecutive [`Tok::Punct`] tokens (`::` is `':' ':'`), numeric
+//! literals are not value-parsed, and macro bodies are lexed like any
+//! other token stream.  The rules only ever match token *sequences*,
+//! so that loss of fidelity is free — what matters is that comments,
+//! strings and lifetimes can never be confused with identifiers.
+
+use std::collections::{HashMap, HashSet};
+
+/// One lexed token.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Tok {
+    /// Identifier or keyword (`unsafe`, `thread`, `make_engine`, …).
+    Ident(String),
+    /// `'a` — distinguished from char literals by lookahead.
+    Lifetime(String),
+    /// String literal content (cooked escapes left as written; raw and
+    /// byte strings normalize to the same token).
+    Str(String),
+    /// A char or byte-char literal (content is never rule-relevant).
+    Char,
+    /// A numeric literal (content is never rule-relevant).
+    Num,
+    /// Any other single character (`:`, `=`, `{`, `#`, …).
+    Punct(char),
+}
+
+impl Tok {
+    /// The identifier text, if this token is one.
+    pub fn ident(&self) -> Option<&str> {
+        match self {
+            Tok::Ident(s) => Some(s.as_str()),
+            _ => None,
+        }
+    }
+
+    /// The string-literal text, if this token is one.
+    pub fn str_lit(&self) -> Option<&str> {
+        match self {
+            Tok::Str(s) => Some(s.as_str()),
+            _ => None,
+        }
+    }
+
+    pub fn is_punct(&self, c: char) -> bool {
+        matches!(self, Tok::Punct(p) if *p == c)
+    }
+}
+
+/// A token with its 1-based source line.
+#[derive(Clone, Debug)]
+pub struct Token {
+    pub tok: Tok,
+    pub line: usize,
+}
+
+/// A comment span (line comments are one-line spans; block comments may
+/// cover several).  `text` is the raw interior, markers stripped.
+#[derive(Clone, Debug)]
+pub struct Comment {
+    pub start_line: usize,
+    pub end_line: usize,
+    pub text: String,
+}
+
+/// The lexed view of one file.
+#[derive(Clone, Debug, Default)]
+pub struct Lexed {
+    pub tokens: Vec<Token>,
+    pub comments: Vec<Comment>,
+}
+
+impl Lexed {
+    /// Lines carrying at least one non-comment token.
+    pub fn token_lines(&self) -> HashSet<usize> {
+        self.tokens.iter().map(|t| t.line).collect()
+    }
+
+    /// The first token on each line (attribute-line detection: a line
+    /// whose first token is `#` is an attribute).
+    pub fn first_tok_by_line(&self) -> HashMap<usize, Tok> {
+        let mut map = HashMap::new();
+        for t in &self.tokens {
+            map.entry(t.line).or_insert_with(|| t.tok.clone());
+        }
+        map
+    }
+
+    /// Concatenated comment text per covered line (a block comment
+    /// contributes its whole text to every line it spans).
+    pub fn comment_text_by_line(&self) -> HashMap<usize, String> {
+        let mut map: HashMap<usize, String> = HashMap::new();
+        for c in &self.comments {
+            for line in c.start_line..=c.end_line {
+                let slot = map.entry(line).or_default();
+                slot.push('\n');
+                slot.push_str(&c.text);
+            }
+        }
+        map
+    }
+}
+
+/// Lex `src` into tokens + comments.  Never fails: unterminated
+/// constructs are closed at end of input (the rules prefer a lossy
+/// token stream over a lint pass that aborts on one odd file).
+pub fn lex(src: &str) -> Lexed {
+    let chars: Vec<char> = src.chars().collect();
+    let n = chars.len();
+    let mut i = 0usize;
+    let mut line = 1usize;
+    let mut tokens: Vec<Token> = Vec::new();
+    let mut comments: Vec<Comment> = Vec::new();
+
+    while i < n {
+        let c = chars[i];
+        if c == '\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if c.is_whitespace() {
+            i += 1;
+            continue;
+        }
+
+        // ---- comments ------------------------------------------------
+        if c == '/' && i + 1 < n && chars[i + 1] == '/' {
+            let start = line;
+            let mut j = i + 2;
+            let mut text = String::new();
+            while j < n && chars[j] != '\n' {
+                text.push(chars[j]);
+                j += 1;
+            }
+            comments.push(Comment { start_line: start, end_line: start, text });
+            i = j; // the '\n' is handled by the main loop
+            continue;
+        }
+        if c == '/' && i + 1 < n && chars[i + 1] == '*' {
+            let start = line;
+            let mut depth = 1usize;
+            let mut j = i + 2;
+            let mut text = String::new();
+            while j < n && depth > 0 {
+                if chars[j] == '/' && j + 1 < n && chars[j + 1] == '*' {
+                    depth += 1;
+                    text.push_str("/*");
+                    j += 2;
+                } else if chars[j] == '*' && j + 1 < n && chars[j + 1] == '/' {
+                    depth -= 1;
+                    if depth > 0 {
+                        text.push_str("*/");
+                    }
+                    j += 2;
+                } else {
+                    if chars[j] == '\n' {
+                        line += 1;
+                    }
+                    text.push(chars[j]);
+                    j += 1;
+                }
+            }
+            comments.push(Comment { start_line: start, end_line: line, text });
+            i = j;
+            continue;
+        }
+
+        // ---- cooked string literals ----------------------------------
+        if c == '"' {
+            let tline = line;
+            let mut j = i + 1;
+            let mut text = String::new();
+            while j < n {
+                let d = chars[j];
+                if d == '\\' {
+                    text.push(d);
+                    j += 1;
+                    if j < n {
+                        if chars[j] == '\n' {
+                            line += 1;
+                        }
+                        text.push(chars[j]);
+                        j += 1;
+                    }
+                    continue;
+                }
+                if d == '"' {
+                    j += 1;
+                    break;
+                }
+                if d == '\n' {
+                    line += 1;
+                }
+                text.push(d);
+                j += 1;
+            }
+            tokens.push(Token { tok: Tok::Str(text), line: tline });
+            i = j;
+            continue;
+        }
+
+        // ---- char literal vs lifetime --------------------------------
+        if c == '\'' {
+            let tline = line;
+            if i + 1 < n && chars[i + 1] == '\\' {
+                // escaped char literal ('\n', '\x41', '\u{1F600}', …)
+                let mut j = i + 2;
+                if j < n {
+                    j += 1; // the char introducing the escape body
+                }
+                while j < n && chars[j] != '\'' {
+                    if chars[j] == '\n' {
+                        line += 1;
+                    }
+                    j += 1;
+                }
+                tokens.push(Token { tok: Tok::Char, line: tline });
+                i = if j < n { j + 1 } else { n };
+                continue;
+            }
+            if i + 2 < n && chars[i + 2] == '\'' && chars[i + 1] != '\'' {
+                // plain char literal 'x' (also non-ASCII 'µ')
+                tokens.push(Token { tok: Tok::Char, line: tline });
+                i += 3;
+                continue;
+            }
+            // lifetime: 'a, 'scope, '_
+            let mut j = i + 1;
+            let mut name = String::new();
+            while j < n && (chars[j].is_alphanumeric() || chars[j] == '_') {
+                name.push(chars[j]);
+                j += 1;
+            }
+            tokens.push(Token { tok: Tok::Lifetime(name), line: tline });
+            i = j;
+            continue;
+        }
+
+        // ---- numeric literals ----------------------------------------
+        if c.is_ascii_digit() {
+            let tline = line;
+            let mut j = i;
+            while j < n {
+                let d = chars[j];
+                if d.is_ascii_alphanumeric() || d == '_' {
+                    j += 1;
+                } else if d == '.' && j + 1 < n && chars[j + 1].is_ascii_digit() {
+                    // consume the fraction, but leave `0..4` as Num ':' ':'
+                    j += 1;
+                } else if (d == '+' || d == '-')
+                    && j > i
+                    && (chars[j - 1] == 'e' || chars[j - 1] == 'E')
+                    && j + 1 < n
+                    && chars[j + 1].is_ascii_digit()
+                {
+                    // exponent sign: 1e-9
+                    j += 1;
+                } else {
+                    break;
+                }
+            }
+            tokens.push(Token { tok: Tok::Num, line: tline });
+            i = j;
+            continue;
+        }
+
+        // ---- identifiers (and raw/byte-literal prefixes) -------------
+        if c.is_alphabetic() || c == '_' {
+            let tline = line;
+            let mut j = i;
+            let mut word = String::new();
+            while j < n && (chars[j].is_alphanumeric() || chars[j] == '_') {
+                word.push(chars[j]);
+                j += 1;
+            }
+            // raw strings: r"..." / r#"..."# / br"..." / br##"..."##
+            if (word == "r" || word == "br") && j < n && (chars[j] == '"' || chars[j] == '#') {
+                let mut hashes = 0usize;
+                let mut k = j;
+                while k < n && chars[k] == '#' {
+                    hashes += 1;
+                    k += 1;
+                }
+                if k < n && chars[k] == '"' {
+                    k += 1;
+                    let mut text = String::new();
+                    while k < n {
+                        if chars[k] == '"' {
+                            let mut m = 0usize;
+                            while m < hashes && k + 1 + m < n && chars[k + 1 + m] == '#' {
+                                m += 1;
+                            }
+                            if m == hashes {
+                                k += 1 + hashes;
+                                break;
+                            }
+                        }
+                        if chars[k] == '\n' {
+                            line += 1;
+                        }
+                        text.push(chars[k]);
+                        k += 1;
+                    }
+                    tokens.push(Token { tok: Tok::Str(text), line: tline });
+                    i = k;
+                    continue;
+                }
+                if word == "r" && hashes == 1 && k < n && (chars[k].is_alphabetic() || chars[k] == '_')
+                {
+                    // raw identifier r#type → Ident("type")
+                    let mut name = String::new();
+                    let mut m = k;
+                    while m < n && (chars[m].is_alphanumeric() || chars[m] == '_') {
+                        name.push(chars[m]);
+                        m += 1;
+                    }
+                    tokens.push(Token { tok: Tok::Ident(name), line: tline });
+                    i = m;
+                    continue;
+                }
+            }
+            // byte string b"..." / byte char b'x': re-enter the main
+            // loop at the quote — the prefix itself is not a token
+            if word == "b" && j < n && (chars[j] == '"' || chars[j] == '\'') {
+                i = j;
+                continue;
+            }
+            tokens.push(Token { tok: Tok::Ident(word), line: tline });
+            i = j;
+            continue;
+        }
+
+        // ---- everything else -----------------------------------------
+        tokens.push(Token { tok: Tok::Punct(c), line });
+        i += 1;
+    }
+
+    Lexed { tokens, comments }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn idents(lexed: &Lexed) -> Vec<String> {
+        lexed.tokens.iter().filter_map(|t| t.tok.ident().map(String::from)).collect()
+    }
+
+    #[test]
+    fn code_in_strings_is_not_code() {
+        let lexed = lex(r#"let x = "unsafe { thread::spawn } // SAFETY:";"#);
+        assert_eq!(idents(&lexed), vec!["let", "x"]);
+        assert!(lexed.comments.is_empty(), "string content produced a comment");
+        assert_eq!(
+            lexed.tokens.iter().filter(|t| matches!(t.tok, Tok::Str(_))).count(),
+            1
+        );
+    }
+
+    #[test]
+    fn escaped_quotes_do_not_end_strings() {
+        let lexed = lex(r#"let s = "a \" b"; unsafe {}"#);
+        assert!(idents(&lexed).contains(&"unsafe".to_string()));
+        let strs: Vec<&str> = lexed.tokens.iter().filter_map(|t| t.tok.str_lit()).collect();
+        assert_eq!(strs, vec![r#"a \" b"#]);
+    }
+
+    #[test]
+    fn nested_block_comments_terminate_correctly() {
+        let lexed = lex("/* outer /* inner */ still comment */ fn f() {}");
+        assert_eq!(idents(&lexed), vec!["fn", "f"]);
+        assert_eq!(lexed.comments.len(), 1);
+        assert!(lexed.comments[0].text.contains("inner"));
+        assert!(lexed.comments[0].text.contains("still comment"));
+    }
+
+    #[test]
+    fn raw_strings_swallow_quotes_and_comment_markers() {
+        let lexed = lex(r##"let s = r#"has "quotes" and // no comment"#; fn g() {}"##);
+        assert!(lexed.comments.is_empty());
+        let strs: Vec<&str> = lexed.tokens.iter().filter_map(|t| t.tok.str_lit()).collect();
+        assert_eq!(strs, vec![r#"has "quotes" and // no comment"#]);
+        assert!(idents(&lexed).contains(&"g".to_string()));
+    }
+
+    #[test]
+    fn lifetimes_are_not_char_literals() {
+        let lexed = lex("fn f<'scope>(x: &'scope str) { let c = 'a'; let u = '\\n'; }");
+        let lifetimes: Vec<&Token> =
+            lexed.tokens.iter().filter(|t| matches!(t.tok, Tok::Lifetime(_))).collect();
+        assert_eq!(lifetimes.len(), 2);
+        let chars: Vec<&Token> =
+            lexed.tokens.iter().filter(|t| matches!(t.tok, Tok::Char)).collect();
+        assert_eq!(chars.len(), 2);
+    }
+
+    #[test]
+    fn line_numbers_track_every_construct() {
+        let src = "fn a() {}\n// comment\n/* block\nspans */\nfn b() {}\n";
+        let lexed = lex(src);
+        let b = lexed.tokens.iter().find(|t| t.tok.ident() == Some("b")).unwrap();
+        assert_eq!(b.line, 5);
+        assert_eq!(lexed.comments[0].start_line, 2);
+        assert_eq!(lexed.comments[1].start_line, 3);
+        assert_eq!(lexed.comments[1].end_line, 4);
+    }
+
+    #[test]
+    fn multiline_strings_advance_the_line_counter() {
+        let lexed = lex("let s = \"line one\nline two\";\nfn tail() {}");
+        let tail = lexed.tokens.iter().find(|t| t.tok.ident() == Some("tail")).unwrap();
+        assert_eq!(tail.line, 3);
+    }
+
+    #[test]
+    fn double_colon_is_two_puncts_and_ranges_are_not_fractions() {
+        let lexed = lex("thread::spawn(0..4)");
+        let toks: Vec<&Tok> = lexed.tokens.iter().map(|t| &t.tok).collect();
+        assert_eq!(toks[0].ident(), Some("thread"));
+        assert!(toks[1].is_punct(':') && toks[2].is_punct(':'));
+        assert_eq!(toks[3].ident(), Some("spawn"));
+        // 0..4 must lex as Num '.' '.' Num, not a fractional literal
+        let dots = lexed.tokens.iter().filter(|t| t.tok.is_punct('.')).count();
+        assert_eq!(dots, 2);
+    }
+
+    #[test]
+    fn byte_literals_lex_as_literals_not_idents() {
+        let lexed = lex(r#"let x = b"bytes"; let y = b'z';"#);
+        assert_eq!(idents(&lexed), vec!["let", "x", "let", "y"]);
+        assert!(lexed.tokens.iter().any(|t| t.tok.str_lit() == Some("bytes")));
+        assert!(lexed.tokens.iter().any(|t| matches!(t.tok, Tok::Char)));
+    }
+
+    #[test]
+    fn comment_text_by_line_covers_block_spans() {
+        let lexed = lex("/* SAFETY: spans\nmore */\nunsafe {}");
+        let by_line = lexed.comment_text_by_line();
+        assert!(by_line[&1].contains("SAFETY:"));
+        assert!(by_line[&2].contains("SAFETY:"));
+        assert!(!by_line.contains_key(&3));
+    }
+
+    #[test]
+    fn attributes_lex_with_hash_first_on_line() {
+        let lexed = lex("#[cfg(test)]\nfn f() {}");
+        let first = lexed.first_tok_by_line();
+        assert!(first[&1].is_punct('#'));
+        assert_eq!(first[&2].ident(), Some("fn"));
+    }
+}

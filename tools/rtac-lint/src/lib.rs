@@ -1,0 +1,17 @@
+//! `rtac-lint` — offline static analysis that machine-checks the repo's
+//! cross-file conventions (see `docs/CORRECTNESS.md` for the rule
+//! catalog and rationale).
+//!
+//! The binary walks `rust/src` and `rust/tests` with a small
+//! hand-written lexer ([`lexer`]) — comments, strings, raw strings and
+//! attributes are understood, so a `thread::spawn` in a doc comment is
+//! not a violation — and runs six named rules ([`rules`]).  Any
+//! violation can be locally waived with a
+//! `// lint:allow(rule-name): reason` comment on the offending line or
+//! up to three lines above it (so the waiver can sit above attributes).
+
+#![forbid(unsafe_code)]
+
+pub mod lexer;
+pub mod rules;
+pub mod driver;

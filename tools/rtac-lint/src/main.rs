@@ -1,0 +1,74 @@
+//! CLI entry point: `cargo run -p rtac-lint [-- --root <path>] [--json]`.
+//!
+//! Exit status: 0 when every rule passes, 1 on violations, 2 on usage
+//! or I/O errors — so CI can distinguish "the tree drifted" from "the
+//! lint could not run".
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use rtac_lint::{driver, rules};
+
+const USAGE: &str = "\
+rtac-lint — repo-invariant static analysis (see docs/CORRECTNESS.md)
+
+USAGE:
+    rtac-lint [--root <path>] [--json]
+
+OPTIONS:
+    --root <path>   repo checkout to lint (default: current directory)
+    --json          machine-readable output
+    --rules         list the rules and exit
+    -h, --help      this text
+";
+
+fn main() -> ExitCode {
+    let mut json = false;
+    let mut root = PathBuf::from(".");
+    let mut args = std::env::args().skip(1);
+    while let Some(arg) = args.next() {
+        match arg.as_str() {
+            "--json" => json = true,
+            "--root" => match args.next() {
+                Some(p) => root = PathBuf::from(p),
+                None => {
+                    eprintln!("--root needs a path\n\n{USAGE}");
+                    return ExitCode::from(2);
+                }
+            },
+            "--rules" => {
+                for rule in rules::ALL_RULES {
+                    println!("{rule}");
+                }
+                return ExitCode::SUCCESS;
+            }
+            "-h" | "--help" => {
+                print!("{USAGE}");
+                return ExitCode::SUCCESS;
+            }
+            other => {
+                eprintln!("unknown argument {other:?}\n\n{USAGE}");
+                return ExitCode::from(2);
+            }
+        }
+    }
+
+    match driver::run(&root) {
+        Ok(report) => {
+            if json {
+                print!("{}", driver::render_json(&report));
+            } else {
+                print!("{}", driver::render_human(&report));
+            }
+            if report.clean() {
+                ExitCode::SUCCESS
+            } else {
+                ExitCode::FAILURE
+            }
+        }
+        Err(e) => {
+            eprintln!("rtac-lint: {e}");
+            ExitCode::from(2)
+        }
+    }
+}

@@ -1,0 +1,539 @@
+//! The six repo-invariant rules.
+//!
+//! Each rule is a pure function over lexed source (plus, for the
+//! cross-file rules, a second input), returning [`Finding`]s; the
+//! driver applies [`suppressed`] afterwards so every rule is waivable
+//! with `// lint:allow(rule-name): reason` at the finding site (same
+//! line, up to three lines above — attributes in between are fine — or
+//! a spanning block comment).
+//!
+//! | rule | invariant |
+//! |---|---|
+//! | `safety-comment`   | every `unsafe` is immediately preceded by `// SAFETY:` |
+//! | `thread-placement` | no `thread::spawn`/`thread::scope` outside `exec/pool.rs` |
+//! | `simd-containment` | no `std::arch`/`core::arch`/`is_x86_feature_detected!` outside `util/simd.rs` |
+//! | `metrics-ledger`   | every `u64` counter on `Inner` surfaces in `MetricsSnapshot` *and* `summary()` |
+//! | `engine-coverage`  | every `make_engine` name is exercised by name in `rust/tests/engines.rs` |
+//! | `bench-doc-drift`  | every BENCH cell key in `to_json` has a backticked row in `docs/BENCHMARKS.md` |
+
+use crate::lexer::Lexed;
+use std::collections::HashSet;
+
+pub const SAFETY_COMMENT: &str = "safety-comment";
+pub const THREAD_PLACEMENT: &str = "thread-placement";
+pub const SIMD_CONTAINMENT: &str = "simd-containment";
+pub const METRICS_LEDGER: &str = "metrics-ledger";
+pub const ENGINE_COVERAGE: &str = "engine-coverage";
+pub const BENCH_DOC_DRIFT: &str = "bench-doc-drift";
+
+/// All rule names (CLI listing + allow-name validation).
+pub const ALL_RULES: &[&str] = &[
+    SAFETY_COMMENT,
+    THREAD_PLACEMENT,
+    SIMD_CONTAINMENT,
+    METRICS_LEDGER,
+    ENGINE_COVERAGE,
+    BENCH_DOC_DRIFT,
+];
+
+/// One violation, anchored to a file line.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Finding {
+    pub rule: &'static str,
+    pub file: String,
+    pub line: usize,
+    pub msg: String,
+}
+
+impl Finding {
+    fn new(rule: &'static str, file: &str, line: usize, msg: String) -> Finding {
+        Finding { rule, file: file.to_string(), line, msg }
+    }
+}
+
+/// A `lint:allow(rule)` waiver parsed from a comment.
+#[derive(Clone, Debug)]
+pub struct Allow {
+    pub rule: String,
+    pub start_line: usize,
+    pub end_line: usize,
+}
+
+/// Extract every `lint:allow(rule-a, rule-b)` waiver from a file's
+/// comments.
+pub fn allows(lexed: &Lexed) -> Vec<Allow> {
+    let mut out = Vec::new();
+    for c in &lexed.comments {
+        let mut rest = c.text.as_str();
+        while let Some(pos) = rest.find("lint:allow(") {
+            rest = &rest[pos + "lint:allow(".len()..];
+            let Some(close) = rest.find(')') else { break };
+            for rule in rest[..close].split(',') {
+                let rule = rule.trim();
+                if !rule.is_empty() {
+                    out.push(Allow {
+                        rule: rule.to_string(),
+                        start_line: c.start_line,
+                        end_line: c.end_line,
+                    });
+                }
+            }
+            rest = &rest[close + 1..];
+        }
+    }
+    out
+}
+
+/// Is a finding for `rule` at `line` waived by one of `allows`?  Waivers
+/// reach the same line or up to 3 lines below their comment (so one can
+/// sit above attributes), and any line a block-comment waiver spans.
+pub fn suppressed(allows: &[Allow], rule: &str, line: usize) -> bool {
+    allows.iter().any(|a| {
+        a.rule == rule
+            && ((a.end_line <= line && line - a.end_line <= 3)
+                || (a.start_line <= line && line <= a.end_line))
+    })
+}
+
+// ---------------------------------------------------------------------
+// rule 1: safety-comment
+// ---------------------------------------------------------------------
+
+/// Every `unsafe` token must be immediately preceded by a comment
+/// containing `SAFETY:` — contiguous comment lines count, attribute
+/// lines in between are transparent, a blank line breaks adjacency.  A
+/// trailing `// SAFETY:` on the `unsafe` line itself also counts.
+pub fn check_safety_comments(file: &str, lexed: &Lexed) -> Vec<Finding> {
+    let token_lines = lexed.token_lines();
+    let first = lexed.first_tok_by_line();
+    let comments = lexed.comment_text_by_line();
+    let mut out = Vec::new();
+    for t in &lexed.tokens {
+        if t.tok.ident() != Some("unsafe") {
+            continue;
+        }
+        let line = t.line;
+        let mut ok = comments.get(&line).is_some_and(|txt| txt.contains("SAFETY:"));
+        let mut l = line;
+        while !ok && l > 1 {
+            l -= 1;
+            let has_code = token_lines.contains(&l);
+            if has_code {
+                if first.get(&l).is_some_and(|tk| tk.is_punct('#')) {
+                    continue; // attribute line: keep walking up
+                }
+                break; // a real code line ends the search
+            }
+            match comments.get(&l) {
+                Some(txt) if txt.contains("SAFETY:") => ok = true,
+                Some(_) => {} // comment block continues upward
+                None => break, // blank line: not "immediately preceding"
+            }
+        }
+        if !ok {
+            out.push(Finding::new(
+                SAFETY_COMMENT,
+                file,
+                line,
+                "`unsafe` without an immediately preceding `// SAFETY:` comment".to_string(),
+            ));
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------
+// rule 2: thread-placement
+// ---------------------------------------------------------------------
+
+/// `thread::spawn` / `thread::scope` are only allowed in
+/// `exec/pool.rs` — everything else should borrow the persistent
+/// `WorkerPool` instead of minting threads.
+pub fn check_thread_placement(file: &str, lexed: &Lexed) -> Vec<Finding> {
+    if norm(file).ends_with("exec/pool.rs") {
+        return Vec::new();
+    }
+    let t = &lexed.tokens;
+    let mut out = Vec::new();
+    for i in 0..t.len() {
+        if t[i].tok.ident() != Some("thread") || i + 3 >= t.len() {
+            continue;
+        }
+        if !(t[i + 1].tok.is_punct(':') && t[i + 2].tok.is_punct(':')) {
+            continue;
+        }
+        if let Some(what) = t[i + 3].tok.ident() {
+            if what == "spawn" || what == "scope" {
+                out.push(Finding::new(
+                    THREAD_PLACEMENT,
+                    file,
+                    t[i].line,
+                    format!(
+                        "`thread::{what}` outside exec/pool.rs — threads belong to the \
+                         persistent WorkerPool"
+                    ),
+                ));
+            }
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------
+// rule 3: simd-containment
+// ---------------------------------------------------------------------
+
+/// Vendor intrinsics (`std::arch` / `core::arch`) and runtime feature
+/// detection stay inside `util/simd.rs`, where the scalar oracle and
+/// the dispatch safety contract live.
+pub fn check_simd_containment(file: &str, lexed: &Lexed) -> Vec<Finding> {
+    if norm(file).ends_with("util/simd.rs") {
+        return Vec::new();
+    }
+    let t = &lexed.tokens;
+    let mut out = Vec::new();
+    for i in 0..t.len() {
+        if t[i].tok.ident() == Some("is_x86_feature_detected") {
+            out.push(Finding::new(
+                SIMD_CONTAINMENT,
+                file,
+                t[i].line,
+                "`is_x86_feature_detected!` outside util/simd.rs — ISA dispatch is decided \
+                 once, by `active_isa`"
+                    .to_string(),
+            ));
+            continue;
+        }
+        let root = match t[i].tok.ident() {
+            Some("std") | Some("core") => t[i].tok.ident().unwrap(),
+            _ => continue,
+        };
+        if i + 3 < t.len()
+            && t[i + 1].tok.is_punct(':')
+            && t[i + 2].tok.is_punct(':')
+            && t[i + 3].tok.ident() == Some("arch")
+        {
+            out.push(Finding::new(
+                SIMD_CONTAINMENT,
+                file,
+                t[i].line,
+                format!(
+                    "`{root}::arch` intrinsics outside util/simd.rs — kernels live behind \
+                     the dispatched word-kernel layer"
+                ),
+            ));
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------
+// token-walking helpers for the cross-file rules
+// ---------------------------------------------------------------------
+
+fn norm(path: &str) -> String {
+    path.replace('\\', "/")
+}
+
+/// Fields of `struct name { ... }`: `(field, line, first type token)`.
+/// The type token is the identifier right after the `:` (`u64`,
+/// `HashMap`, …) or `"?"` for non-ident types.
+fn struct_fields(lexed: &Lexed, name: &str) -> Vec<(String, usize, String)> {
+    let t = &lexed.tokens;
+    let mut fields = Vec::new();
+    let mut start = None;
+    for i in 0..t.len() {
+        if t[i].tok.ident() == Some("struct")
+            && i + 1 < t.len()
+            && t[i + 1].tok.ident() == Some(name)
+        {
+            // skip to the opening brace (no generic structs to handle
+            // in this tree, but a `<...>` would be skipped here too)
+            let mut j = i + 2;
+            while j < t.len() && !t[j].tok.is_punct('{') {
+                if t[j].tok.is_punct(';') {
+                    break; // unit/tuple struct: no named fields
+                }
+                j += 1;
+            }
+            if j < t.len() && t[j].tok.is_punct('{') {
+                start = Some(j + 1);
+            }
+            break;
+        }
+    }
+    let Some(mut i) = start else { return fields };
+    let mut depth = 1usize;
+    let mut expecting = true;
+    while i < t.len() && depth > 0 {
+        let tok = &t[i].tok;
+        if tok.is_punct('{') {
+            depth += 1;
+        } else if tok.is_punct('}') {
+            depth -= 1;
+        } else if depth == 1 {
+            if tok.is_punct(',') {
+                expecting = true;
+            } else if expecting {
+                if let Some(w) = tok.ident() {
+                    if w == "pub" {
+                        // `pub` / `pub(crate)`: stay in field-name state
+                        if i + 1 < t.len() && t[i + 1].tok.is_punct('(') {
+                            let mut k = i + 1;
+                            while k < t.len() && !t[k].tok.is_punct(')') {
+                                k += 1;
+                            }
+                            i = k;
+                        }
+                    } else if i + 1 < t.len()
+                        && t[i + 1].tok.is_punct(':')
+                        && !(i + 2 < t.len() && t[i + 2].tok.is_punct(':'))
+                    {
+                        let ty = t
+                            .get(i + 2)
+                            .and_then(|x| x.tok.ident())
+                            .unwrap_or("?")
+                            .to_string();
+                        fields.push((w.to_string(), t[i].line, ty));
+                        expecting = false;
+                    } else {
+                        expecting = false;
+                    }
+                }
+            }
+        }
+        i += 1;
+    }
+    fields
+}
+
+/// Token index range (exclusive end) of the body of `fn name`, searched
+/// from token `from`.  Returns the range *inside* the braces.
+fn fn_body_range(lexed: &Lexed, name: &str, from: usize) -> Option<(usize, usize)> {
+    let t = &lexed.tokens;
+    let mut i = from;
+    while i + 1 < t.len() {
+        if t[i].tok.ident() == Some("fn") && t[i + 1].tok.ident() == Some(name) {
+            let mut j = i + 2;
+            while j < t.len() && !t[j].tok.is_punct('{') {
+                j += 1;
+            }
+            if j >= t.len() {
+                return None;
+            }
+            let start = j + 1;
+            let mut depth = 1usize;
+            let mut k = start;
+            while k < t.len() && depth > 0 {
+                if t[k].tok.is_punct('{') {
+                    depth += 1;
+                } else if t[k].tok.is_punct('}') {
+                    depth -= 1;
+                }
+                k += 1;
+            }
+            return Some((start, k.saturating_sub(1)));
+        }
+        i += 1;
+    }
+    None
+}
+
+/// Identifiers used inside `fn method` of `impl type_name { ... }`.
+fn impl_fn_idents(lexed: &Lexed, type_name: &str, method: &str) -> Option<HashSet<String>> {
+    let t = &lexed.tokens;
+    for i in 0..t.len() {
+        if t[i].tok.ident() == Some("impl")
+            && i + 2 < t.len()
+            && t[i + 1].tok.ident() == Some(type_name)
+            && t[i + 2].tok.is_punct('{')
+        {
+            let (start, end) = fn_body_range(lexed, method, i + 3)?;
+            let mut idents = HashSet::new();
+            for tok in &t[start..end] {
+                if let Some(w) = tok.tok.ident() {
+                    idents.insert(w.to_string());
+                }
+            }
+            return Some(idents);
+        }
+    }
+    None
+}
+
+// ---------------------------------------------------------------------
+// rule 4: metrics-ledger
+// ---------------------------------------------------------------------
+
+/// Every `u64` counter on the metrics `Inner` must appear as a
+/// `MetricsSnapshot` field *and* be reported by
+/// `MetricsSnapshot::summary()` — otherwise the conservation ledger
+/// silently loses a column.  Derived counters waive the field with
+/// `lint:allow(metrics-ledger)` naming the surfaced form.
+pub fn check_metrics_ledger(file: &str, lexed: &Lexed) -> Vec<Finding> {
+    let counters: Vec<(String, usize)> = struct_fields(lexed, "Inner")
+        .into_iter()
+        .filter(|(_, _, ty)| ty == "u64")
+        .map(|(name, line, _)| (name, line))
+        .collect();
+    let snapshot: HashSet<String> =
+        struct_fields(lexed, "MetricsSnapshot").into_iter().map(|(n, _, _)| n).collect();
+    let summary = impl_fn_idents(lexed, "MetricsSnapshot", "summary");
+    if counters.is_empty() || snapshot.is_empty() || summary.is_none() {
+        return vec![Finding::new(
+            METRICS_LEDGER,
+            file,
+            1,
+            "metrics anchors not found (struct Inner / struct MetricsSnapshot / \
+             MetricsSnapshot::summary) — the ledger rule cannot run"
+                .to_string(),
+        )];
+    }
+    let summary = summary.unwrap();
+    let mut out = Vec::new();
+    for (name, line) in counters {
+        if !snapshot.contains(&name) {
+            out.push(Finding::new(
+                METRICS_LEDGER,
+                file,
+                line,
+                format!("counter `{name}` has no MetricsSnapshot field"),
+            ));
+        } else if !summary.contains(&name) {
+            out.push(Finding::new(
+                METRICS_LEDGER,
+                file,
+                line,
+                format!("counter `{name}` is not reported by MetricsSnapshot::summary()"),
+            ));
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------
+// rule 5: engine-coverage
+// ---------------------------------------------------------------------
+
+/// Every engine name registered in `make_engine` — exact `"name" =>`
+/// arms and `starts_with("prefix")` families — must be exercised by
+/// name in `rust/tests/engines.rs`.  A prefix family counts as covered
+/// when the tests name the bare prefix or `prefix` + digits
+/// (`rtac-par3` covers `rtac-par` but not `rtac-par-inc`).
+pub fn check_engine_coverage(reg_file: &str, reg: &Lexed, tests: &Lexed) -> Vec<Finding> {
+    let Some((start, end)) = fn_body_range(reg, "make_engine", 0) else {
+        return vec![Finding::new(
+            ENGINE_COVERAGE,
+            reg_file,
+            1,
+            "fn make_engine not found — the engine-coverage rule cannot run".to_string(),
+        )];
+    };
+    let t = &reg.tokens;
+    let mut exact: Vec<(String, usize)> = Vec::new();
+    let mut prefixes: Vec<(String, usize)> = Vec::new();
+    for i in start..end {
+        if let Some(s) = t[i].tok.str_lit() {
+            if i + 2 < end && t[i + 1].tok.is_punct('=') && t[i + 2].tok.is_punct('>') {
+                exact.push((s.to_string(), t[i].line));
+            }
+        }
+        if t[i].tok.ident() == Some("starts_with")
+            && i + 2 < end
+            && t[i + 1].tok.is_punct('(')
+        {
+            if let Some(p) = t[i + 2].tok.str_lit() {
+                prefixes.push((p.to_string(), t[i].line));
+            }
+        }
+    }
+    let exercised: HashSet<&str> =
+        tests.tokens.iter().filter_map(|tok| tok.tok.str_lit()).collect();
+    let covers_prefix = |p: &str| {
+        exercised.iter().any(|name| {
+            *name == p
+                || (name.starts_with(p)
+                    && name.len() > p.len()
+                    && name[p.len()..].bytes().all(|b| b.is_ascii_digit()))
+        })
+    };
+    let mut out = Vec::new();
+    for (name, line) in exact {
+        if !exercised.contains(name.as_str()) {
+            out.push(Finding::new(
+                ENGINE_COVERAGE,
+                reg_file,
+                line,
+                format!("engine `{name}` is never exercised by name in rust/tests/engines.rs"),
+            ));
+        }
+    }
+    for (p, line) in prefixes {
+        if !covers_prefix(&p) {
+            out.push(Finding::new(
+                ENGINE_COVERAGE,
+                reg_file,
+                line,
+                format!(
+                    "engine family `{p}[N]` is never exercised by name in \
+                     rust/tests/engines.rs"
+                ),
+            ));
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------
+// rule 6: bench-doc-drift
+// ---------------------------------------------------------------------
+
+fn ident_like(s: &str) -> bool {
+    let mut chars = s.chars();
+    matches!(chars.next(), Some(c) if c.is_ascii_lowercase())
+        && chars.all(|c| c.is_ascii_lowercase() || c.is_ascii_digit() || c == '_')
+}
+
+/// Every BENCH cell key emitted by `to_json` (the `("key", value)`
+/// tuple literals) must appear as a backticked token in
+/// `docs/BENCHMARKS.md` — a measurement nobody can interpret is a
+/// measurement nobody trusts.
+pub fn check_bench_doc_drift(bench_file: &str, bench: &Lexed, doc: &str) -> Vec<Finding> {
+    let Some((start, end)) = fn_body_range(bench, "to_json", 0) else {
+        return vec![Finding::new(
+            BENCH_DOC_DRIFT,
+            bench_file,
+            1,
+            "fn to_json not found — the bench-doc-drift rule cannot run".to_string(),
+        )];
+    };
+    let t = &bench.tokens;
+    let mut keys: Vec<(String, usize)> = Vec::new();
+    for i in start..end {
+        if !t[i].tok.is_punct('(') || i + 2 >= end {
+            continue;
+        }
+        let Some(k) = t[i + 1].tok.str_lit() else { continue };
+        if t[i + 2].tok.is_punct(',') && ident_like(k) {
+            keys.push((k.to_string(), t[i + 1].line));
+        }
+    }
+    let documented: HashSet<&str> =
+        doc.split('`').enumerate().filter(|(n, _)| n % 2 == 1).map(|(_, s)| s).collect();
+    let mut out = Vec::new();
+    let mut seen = HashSet::new();
+    for (k, line) in keys {
+        if !seen.insert(k.clone()) {
+            continue;
+        }
+        if !documented.contains(k.as_str()) {
+            out.push(Finding::new(
+                BENCH_DOC_DRIFT,
+                bench_file,
+                line,
+                format!("BENCH cell key `{k}` has no backticked row in docs/BENCHMARKS.md"),
+            ));
+        }
+    }
+    out
+}

@@ -1,0 +1,230 @@
+//! Fixture-driven tests: each rule gets a good/bad snippet pair, the
+//! `lint:allow` waiver is exercised per rule, and the driver runs
+//! end-to-end against a synthesized mini-repo (clean tree exits clean,
+//! seeded violations are reported).
+
+use rtac_lint::driver;
+use rtac_lint::lexer::lex;
+use rtac_lint::rules::{
+    self, allows, check_bench_doc_drift, check_engine_coverage, check_metrics_ledger,
+    check_safety_comments, check_simd_containment, check_thread_placement, suppressed, Finding,
+};
+
+const SAFETY_GOOD: &str = include_str!("../fixtures/safety_good.rs");
+const SAFETY_BAD: &str = include_str!("../fixtures/safety_bad.rs");
+const THREAD_GOOD: &str = include_str!("../fixtures/thread_good.rs");
+const THREAD_BAD: &str = include_str!("../fixtures/thread_bad.rs");
+const SIMD_BAD: &str = include_str!("../fixtures/simd_bad.rs");
+const METRICS_GOOD: &str = include_str!("../fixtures/metrics_good.rs");
+const METRICS_BAD: &str = include_str!("../fixtures/metrics_bad.rs");
+const ENGINES_REGISTRY: &str = include_str!("../fixtures/engines_registry.rs");
+const ENGINES_TESTS_GOOD: &str = include_str!("../fixtures/engines_tests_good.rs");
+const ENGINES_TESTS_BAD: &str = include_str!("../fixtures/engines_tests_bad.rs");
+const BENCH_TOJSON: &str = include_str!("../fixtures/bench_tojson.rs");
+const BENCH_DOC_GOOD: &str = include_str!("../fixtures/bench_doc_good.md");
+const BENCH_DOC_BAD: &str = include_str!("../fixtures/bench_doc_bad.md");
+
+/// Run a single-file rule and drop waived findings, like the driver.
+fn surviving(findings: Vec<Finding>, src: &str) -> Vec<Finding> {
+    let allow_list = allows(&lex(src));
+    findings.into_iter().filter(|f| !suppressed(&allow_list, f.rule, f.line)).collect()
+}
+
+// ---- rule 1: safety-comment -----------------------------------------
+
+#[test]
+fn safety_good_fixture_is_clean() {
+    let f = check_safety_comments("x.rs", &lex(SAFETY_GOOD));
+    assert!(f.is_empty(), "false positives: {f:?}");
+}
+
+#[test]
+fn safety_bad_fixture_flags_each_bare_unsafe() {
+    let raw = check_safety_comments("x.rs", &lex(SAFETY_BAD));
+    assert_eq!(raw.len(), 4, "{raw:?}");
+    let kept = surviving(raw, SAFETY_BAD);
+    assert_eq!(kept.len(), 3, "the lint:allow site must be waived: {kept:?}");
+    assert!(kept.iter().all(|f| f.rule == rules::SAFETY_COMMENT));
+}
+
+// ---- rule 2: thread-placement ---------------------------------------
+
+#[test]
+fn thread_good_fixture_is_clean() {
+    let f = check_thread_placement("rust/src/search/parallel.rs", &lex(THREAD_GOOD));
+    assert!(f.is_empty(), "Builder/sleep/yield_now are not spawn: {f:?}");
+}
+
+#[test]
+fn thread_bad_fixture_flags_spawn_and_scope_but_not_comments() {
+    let raw = check_thread_placement("rust/src/search/parallel.rs", &lex(THREAD_BAD));
+    assert_eq!(raw.len(), 3, "{raw:?}");
+    let kept = surviving(raw, THREAD_BAD);
+    assert_eq!(kept.len(), 2, "the waived spawn must drop: {kept:?}");
+}
+
+#[test]
+fn thread_rule_exempts_the_pool() {
+    let f = check_thread_placement("rust/src/exec/pool.rs", &lex(THREAD_BAD));
+    assert!(f.is_empty(), "exec/pool.rs owns thread creation: {f:?}");
+}
+
+// ---- rule 3: simd-containment ---------------------------------------
+
+#[test]
+fn simd_bad_fixture_flags_arch_and_detection() {
+    let f = check_simd_containment("rust/src/core/plane.rs", &lex(SIMD_BAD));
+    assert_eq!(f.len(), 3, "{f:?}");
+}
+
+#[test]
+fn simd_rule_exempts_the_kernel_module() {
+    let f = check_simd_containment("rust/src/util/simd.rs", &lex(SIMD_BAD));
+    assert!(f.is_empty(), "util/simd.rs owns the intrinsics: {f:?}");
+}
+
+// ---- rule 4: metrics-ledger -----------------------------------------
+
+#[test]
+fn metrics_good_fixture_waives_the_derived_counter() {
+    let raw = check_metrics_ledger("m.rs", &lex(METRICS_GOOD));
+    assert_eq!(raw.len(), 1, "only batch_occupancy_sum should raise: {raw:?}");
+    assert!(raw[0].msg.contains("batch_occupancy_sum"));
+    let kept = surviving(raw, METRICS_GOOD);
+    assert!(kept.is_empty(), "the same-line waiver must hold: {kept:?}");
+}
+
+#[test]
+fn metrics_bad_fixture_flags_field_and_summary_gaps() {
+    let f = check_metrics_ledger("m.rs", &lex(METRICS_BAD));
+    assert_eq!(f.len(), 2, "{f:?}");
+    assert!(f.iter().any(|x| x.msg.contains("dropped_requests")
+        && x.msg.contains("no MetricsSnapshot field")));
+    assert!(f.iter().any(|x| x.msg.contains("responses") && x.msg.contains("summary")));
+}
+
+// ---- rule 5: engine-coverage ----------------------------------------
+
+#[test]
+fn engine_coverage_good_fixture_is_clean() {
+    let f =
+        check_engine_coverage("reg.rs", &lex(ENGINES_REGISTRY), &lex(ENGINES_TESTS_GOOD));
+    assert!(f.is_empty(), "bare prefix and digit suffix both cover: {f:?}");
+}
+
+#[test]
+fn engine_coverage_bad_fixture_flags_uncovered_names() {
+    let f = check_engine_coverage("reg.rs", &lex(ENGINES_REGISTRY), &lex(ENGINES_TESTS_BAD));
+    assert_eq!(f.len(), 3, "rtac, rtac-par, sac-par must raise: {f:?}");
+    assert!(f.iter().any(|x| x.msg.contains("`rtac`")));
+    assert!(
+        f.iter().any(|x| x.msg.contains("rtac-par[N]")),
+        "a non-digit suffix must not cover a family: {f:?}"
+    );
+    assert!(f.iter().any(|x| x.msg.contains("sac-par[N]")));
+}
+
+// ---- rule 6: bench-doc-drift ----------------------------------------
+
+#[test]
+fn bench_doc_good_fixture_is_clean() {
+    let f = check_bench_doc_drift("b.rs", &lex(BENCH_TOJSON), BENCH_DOC_GOOD);
+    assert!(f.is_empty(), "{f:?}");
+}
+
+#[test]
+fn bench_doc_bad_fixture_flags_the_undocumented_key() {
+    let f = check_bench_doc_drift("b.rs", &lex(BENCH_TOJSON), BENCH_DOC_BAD);
+    assert_eq!(f.len(), 1, "{f:?}");
+    assert!(f[0].msg.contains("simd_skipped"), "unbackticked mention must not count");
+}
+
+// ---- driver end-to-end ----------------------------------------------
+
+struct MiniRepo {
+    root: std::path::PathBuf,
+}
+
+impl MiniRepo {
+    fn new(tag: &str) -> MiniRepo {
+        let root = std::env::temp_dir()
+            .join(format!("rtac-lint-test-{}-{tag}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&root);
+        for dir in [
+            "rust/src/ac",
+            "rust/src/bench",
+            "rust/src/coordinator",
+            "rust/tests",
+            "docs",
+        ] {
+            std::fs::create_dir_all(root.join(dir)).unwrap();
+        }
+        MiniRepo { root }
+    }
+
+    fn write(&self, rel: &str, content: &str) {
+        std::fs::write(self.root.join(rel), content).unwrap();
+    }
+
+    /// A tree every rule passes on.
+    fn clean(tag: &str) -> MiniRepo {
+        let repo = MiniRepo::new(tag);
+        repo.write("rust/src/ac/mod.rs", ENGINES_REGISTRY);
+        repo.write("rust/tests/engines.rs", ENGINES_TESTS_GOOD);
+        repo.write("rust/src/bench/rtac_bench.rs", BENCH_TOJSON);
+        repo.write("rust/src/coordinator/metrics.rs", METRICS_GOOD);
+        repo.write("rust/src/lib.rs", SAFETY_GOOD);
+        repo.write("docs/BENCHMARKS.md", BENCH_DOC_GOOD);
+        repo
+    }
+}
+
+impl Drop for MiniRepo {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_dir_all(&self.root);
+    }
+}
+
+#[test]
+fn driver_is_clean_on_a_conforming_tree() {
+    let repo = MiniRepo::clean("clean");
+    let report = driver::run(&repo.root).unwrap();
+    assert!(report.clean(), "unexpected findings: {:?}", report.findings);
+    assert_eq!(report.files_scanned, 5);
+    assert!(driver::render_human(&report).contains("clean"));
+    assert!(driver::render_json(&report).contains("\"count\": 0"));
+}
+
+#[test]
+fn driver_reports_seeded_violations_of_every_rule() {
+    let repo = MiniRepo::clean("seeded");
+    // seed one violation per rule
+    repo.write("rust/src/lib.rs", SAFETY_BAD); // safety-comment
+    repo.write("rust/src/search_parallel.rs", THREAD_BAD); // thread-placement
+    repo.write("rust/src/core_plane.rs", SIMD_BAD); // simd-containment
+    repo.write("rust/src/coordinator/metrics.rs", METRICS_BAD); // metrics-ledger
+    repo.write("rust/tests/engines.rs", ENGINES_TESTS_BAD); // engine-coverage
+    repo.write("docs/BENCHMARKS.md", BENCH_DOC_BAD); // bench-doc-drift
+    let report = driver::run(&repo.root).unwrap();
+    for rule in rules::ALL_RULES {
+        assert!(
+            report.findings.iter().any(|f| f.rule == *rule),
+            "rule {rule} raised nothing: {:?}",
+            report.findings
+        );
+    }
+    let json = driver::render_json(&report);
+    assert!(json.contains("\"rule\": \"safety-comment\""));
+    let human = driver::render_human(&report);
+    assert!(human.contains("violation(s)"));
+}
+
+#[test]
+fn driver_flags_missing_anchor_files_instead_of_passing_silently() {
+    let repo = MiniRepo::clean("anchors");
+    std::fs::remove_file(repo.root.join("rust/src/coordinator/metrics.rs")).unwrap();
+    std::fs::remove_file(repo.root.join("docs/BENCHMARKS.md")).unwrap();
+    let report = driver::run(&repo.root).unwrap();
+    assert!(report.findings.iter().any(|f| f.rule == rules::METRICS_LEDGER));
+    assert!(report.findings.iter().any(|f| f.rule == rules::BENCH_DOC_DRIFT));
+}
