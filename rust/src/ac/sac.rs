@@ -1225,9 +1225,13 @@ pub struct SacXla {
 /// every constraint's scope + relation bits.  Guards [`SacXla`]'s
 /// session reuse — the constraint tensor is device-resident, so reusing
 /// a session for a same-*shaped* but different problem would silently
-/// probe against the wrong constraints.  O(e·d²), but SacXla only
-/// serves bucket-sized problems, where that is microseconds.
-fn problem_fingerprint(problem: &Problem) -> u64 {
+/// probe against the wrong constraints — and keys session *placement*
+/// in the fleet tier ([`crate::coordinator::fleet`]): identical
+/// constraint content from different clients hashes to the same shard
+/// and shares one compiled session there.  O(e·d²), but the serving
+/// paths only fingerprint bucket-sized problems, where that is
+/// microseconds.
+pub fn problem_fingerprint(problem: &Problem) -> u64 {
     fn mix(h: u64, v: u64) -> u64 {
         (h ^ v).wrapping_mul(0x0000_0100_0000_01b3) // FNV-1a step
     }

@@ -1,0 +1,483 @@
+//! The deterministic offline load harness behind `rtac loadgen` and the
+//! `fleet_*` bench cells: a seeded population of synthetic concurrent
+//! clients — mixed delta-chain search workers and SAC probe rounds —
+//! driving a [`Fleet`] of CPU-reference (or chaos) executors, recording
+//! latency percentiles, occupancy, rejection rate, and upload volume.
+//!
+//! Determinism contract: against a fault-free reference fleet with no
+//! latency budget, two runs with the same [`LoadSpec::seed`] produce
+//! **identical** request/response/drop ledgers (only the latency cells
+//! are wall-clock and exempt) — every workload decision (problem pool,
+//! worker mix, narrowing steps, probe picks) derives from the seed, and
+//! a fault-free run has no racy error paths.  Under chaos the ledgers
+//! depend on request interleaving across workers, so the invariants
+//! weaken to the ones the chaos battery asserts: per-shard and
+//! aggregate conservation, and every *answered* request bit-identical
+//! to the native CPU fixpoint of its input plane.
+//!
+//! Every response is verified on the spot: the worker reconstructs the
+//! exact input plane it submitted (base + delta, via
+//! [`PlaneDelta::apply_into`]), runs the native CPU engine on it, and
+//! compares planes bit-for-bit — a mismatch increments the worker's
+//! [`ClientLedger::mismatches`], which the chaos battery requires to be
+//! zero across every seed and failover.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Result};
+
+use crate::ac::{rtac::RtacNative, Counters, Propagator};
+use crate::bench::rtac_bench::{CellOutcome, SkipReason};
+use crate::coordinator::chaos::dump_chaos_snapshot;
+use crate::coordinator::fleet::is_admission_rejected;
+use crate::coordinator::{Fleet, FleetClient, FleetPolicy, MetricsSnapshot, Response};
+use crate::core::{Problem, State};
+use crate::gen::random::{random_csp, RandomSpec};
+use crate::runtime::{decode_vars, encode_vars, Bucket, PlaneDelta, STATUS_WIPEOUT};
+use crate::util::rng::Rng;
+use crate::util::stats::Summary;
+
+/// One seeded load-harness run.
+#[derive(Clone, Debug)]
+pub struct LoadSpec {
+    /// Fleet shards ([`FleetPolicy::shards`]).
+    pub shards: usize,
+    /// Synthetic concurrent clients.  Even indices run delta-chain
+    /// search workers, odd indices run SAC probe rounds; client `i`
+    /// works problem `i % pool` of a `max(2, shards)`-problem pool, so
+    /// some clients share placed sessions and some do not.
+    pub clients: usize,
+    /// Enforcement rounds per client (a probe round submits 2–3
+    /// probes).
+    pub rounds: usize,
+    /// Master seed: problem pool, worker mix, and every workload
+    /// decision derive from it (and, under chaos, the fault plans and
+    /// the forced-kill victim).
+    pub seed: u64,
+    /// Admission-control budget forwarded to [`FleetPolicy`].
+    pub latency_budget: Option<Duration>,
+    /// Run against chaos executors (seeded faults per session) and
+    /// force-kill one shard once half the workload has run — the
+    /// chaos-battery configuration.  `false` = fault-free reference
+    /// executors, the deterministic-ledger configuration.
+    pub chaos: bool,
+}
+
+impl Default for LoadSpec {
+    fn default() -> LoadSpec {
+        LoadSpec {
+            shards: 3,
+            clients: 6,
+            rounds: 4,
+            seed: 0xF1EE7,
+            latency_budget: None,
+            chaos: true,
+        }
+    }
+}
+
+/// One synthetic client's own ledger — the client-side, deterministic
+/// view the determinism test compares across runs (fleet metrics count
+/// internal failover retries the client never sees; this does not).
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct ClientLedger {
+    /// Client index in the spec's population.
+    pub worker: usize,
+    /// Enforcement requests issued (each probe of a batch counts one;
+    /// recovery retries count again — they really hit the wire).
+    pub requests: u64,
+    /// Requests answered with a verified response.
+    pub responses: u64,
+    /// Requests rejected by fleet admission control (the client
+    /// degrades to its local CPU verdict — never a wrong answer).
+    pub rejected: u64,
+    /// Requests dropped by the serving side (fault drains, stale
+    /// bases, timeouts) — counted drops on the fleet ledger too.
+    pub dropped: u64,
+    /// Recovery cycles: a drop answered by a fresh base re-upload and
+    /// one retry (the bounded stale-recovery loop every delta client
+    /// runs).
+    pub recovery_uploads: u64,
+    /// Responses whose plane or status differed from the native CPU
+    /// fixpoint of the submitted input plane.  Must stay zero.
+    pub mismatches: u64,
+}
+
+/// A finished load-harness run: the fleet-aggregate and per-shard
+/// metric ledgers, every client's own ledger, and the wall-clock
+/// latency summary (ms; `None` when no request was answered).
+#[derive(Clone, Debug)]
+pub struct FleetReport {
+    pub aggregate: MetricsSnapshot,
+    pub shards: Vec<MetricsSnapshot>,
+    pub ledger: Vec<ClientLedger>,
+    /// Per-answered-request latency in milliseconds (wall-clock — the
+    /// only nondeterministic part of the report).
+    pub latency: Option<Summary>,
+    /// Total verification mismatches across clients.  Zero or the run
+    /// is wrong.
+    pub mismatches: u64,
+}
+
+impl FleetReport {
+    /// Rejected fraction of all fleet-counted requests (0.0 when the
+    /// fleet saw no traffic).
+    pub fn rejection_rate(&self) -> f64 {
+        if self.aggregate.requests == 0 {
+            return 0.0;
+        }
+        self.aggregate.rejected_requests as f64 / self.aggregate.requests as f64
+    }
+}
+
+/// The native CPU fixpoint of `plane` — the oracle every response is
+/// verified against, and the verdict a rejected client degrades to.
+fn native_fixpoint(problem: &Problem, plane: &[f32], bucket: Bucket) -> (Vec<f32>, bool) {
+    let mut state = State::new(problem);
+    decode_vars(problem, &mut state, plane, bucket).expect("workers keep planes monotone");
+    let mut engine = RtacNative::dense();
+    engine.reset(problem);
+    let mut c = Counters::default();
+    let out = engine.enforce(problem, &mut state, &[], &mut c);
+    let enforced = encode_vars(problem, &state, bucket).expect("state fits its own bucket");
+    (enforced, out.is_consistent())
+}
+
+/// Verify one response bit-for-bit against the native fixpoint of the
+/// submitted input plane.
+fn verified(problem: &Problem, input: &[f32], bucket: Bucket, resp: &Response) -> bool {
+    let (want, consistent) = native_fixpoint(problem, input, bucket);
+    resp.plane == want && (resp.status == STATUS_WIPEOUT) == !consistent
+}
+
+/// One narrowing step of a delta-chain worker: remove one value from
+/// some variable that still has at least two (never emptying a row, so
+/// the chained plane stays decodable), as a row diff against `prev`.
+/// Falls back to the empty delta when every domain is down to one.
+fn narrow_step(problem: &Problem, bucket: Bucket, prev: &[f32], rng: &mut Rng) -> PlaneDelta {
+    let n = problem.n_vars();
+    let start = rng.gen_range(n.max(1));
+    for off in 0..n {
+        let var = (start + off) % n;
+        let d = problem.dom_size(var);
+        let row = &prev[var * bucket.d..var * bucket.d + d];
+        let live: Vec<usize> = (0..d).filter(|&v| row[v] != 0.0).collect();
+        if live.len() < 2 {
+            continue;
+        }
+        let victim = live[rng.gen_range(live.len())];
+        let mut next = prev.to_vec();
+        next[var * bucket.d + victim] = 0.0;
+        return PlaneDelta::diff(prev, &next, bucket).expect("same bucket by construction");
+    }
+    PlaneDelta::empty(crate::runtime::plane_fingerprint(prev))
+}
+
+/// The per-round request loop shared by both worker kinds: try the
+/// call; on an admission rejection degrade (count and move on); on a
+/// drop run one bounded recovery cycle — re-upload the current base
+/// and retry once.  Returns the responses when some attempt was
+/// answered.
+fn call_with_recovery<T>(
+    client: &FleetClient,
+    base: &[f32],
+    k: u64,
+    ledger: &mut ClientLedger,
+    latencies: &mut Vec<f64>,
+    mut op: impl FnMut() -> Result<T>,
+) -> Option<T> {
+    for attempt in 0..2 {
+        ledger.requests += k;
+        let t0 = Instant::now();
+        match op() {
+            Ok(v) => {
+                ledger.responses += k;
+                latencies.push(t0.elapsed().as_secs_f64() * 1e3);
+                return Some(v);
+            }
+            Err(e) if is_admission_rejected(&e) => {
+                // the degrade path: the local native verdict stands in;
+                // no retry — the shard's queue is the problem
+                ledger.rejected += k;
+                return None;
+            }
+            Err(_) => {
+                ledger.dropped += k;
+                if attempt == 0 {
+                    ledger.recovery_uploads += 1;
+                    if client.upload_base(base.to_vec()).is_err() {
+                        return None;
+                    }
+                }
+            }
+        }
+    }
+    None
+}
+
+/// Even-index worker: a delta-chain search client.  Uploads its base
+/// once, then per round ships one narrowing row-diff and (on success)
+/// advances its local plane in lockstep with the executor slot — the
+/// MAC search-worker traffic shape.
+fn chain_worker(
+    worker: usize,
+    client: &FleetClient,
+    problem: &Problem,
+    init: &[f32],
+    rounds: usize,
+    rng: &mut Rng,
+    progress: &AtomicU64,
+) -> (ClientLedger, Vec<f64>) {
+    let bucket = client.bucket();
+    let mut ledger = ClientLedger { worker, ..ClientLedger::default() };
+    let mut latencies = Vec::new();
+    let mut prev = init.to_vec();
+    if client.upload_base(prev.clone()).is_err() {
+        // tolerated: the first delta will drop and recover
+        ledger.recovery_uploads += 1;
+    }
+    for _ in 0..rounds {
+        let delta = narrow_step(problem, bucket, &prev, rng);
+        let mut next = Vec::new();
+        delta
+            .apply_into(&prev, bucket, &mut next)
+            .expect("the step was built against prev");
+        let served = call_with_recovery(client, &prev, 1, &mut ledger, &mut latencies, || {
+            client.enforce_delta(delta.clone())
+        });
+        if let Some(resp) = served {
+            if !verified(problem, &next, bucket, &resp) {
+                ledger.mismatches += 1;
+            }
+            prev = next;
+        }
+        progress.fetch_add(1, Ordering::Relaxed);
+    }
+    (ledger, latencies)
+}
+
+/// Odd-index worker: a SAC probe client.  Uploads its base once, then
+/// per round submits a 2–3 probe singleton batch against it (the slot
+/// never advances) — the batched SAC enforcement traffic shape.
+fn probe_worker(
+    worker: usize,
+    client: &FleetClient,
+    problem: &Problem,
+    init: &[f32],
+    rounds: usize,
+    rng: &mut Rng,
+    progress: &AtomicU64,
+) -> (ClientLedger, Vec<f64>) {
+    let bucket = client.bucket();
+    let mut ledger = ClientLedger { worker, ..ClientLedger::default() };
+    let mut latencies = Vec::new();
+    let base_fp = crate::runtime::plane_fingerprint(init);
+    if client.upload_base(init.to_vec()).is_err() {
+        ledger.recovery_uploads += 1;
+    }
+    for _ in 0..rounds {
+        let k = 2 + rng.gen_range(2);
+        let probes: Vec<PlaneDelta> = (0..k)
+            .map(|_| {
+                let var = rng.gen_range(problem.n_vars());
+                let val = rng.gen_range(problem.dom_size(var));
+                PlaneDelta::singleton(base_fp, var, val, bucket)
+            })
+            .collect();
+        let served =
+            call_with_recovery(client, init, k as u64, &mut ledger, &mut latencies, || {
+                client.enforce_batch_delta(probes.clone())
+            });
+        if let Some(resps) = served {
+            for (probe, resp) in probes.iter().zip(&resps) {
+                let mut input = Vec::new();
+                probe
+                    .apply_into(init, bucket, &mut input)
+                    .expect("probes are built against the uploaded base");
+                if !verified(problem, &input, bucket, resp) {
+                    ledger.mismatches += 1;
+                }
+            }
+        }
+        progress.fetch_add(1, Ordering::Relaxed);
+    }
+    (ledger, latencies)
+}
+
+/// Run one seeded load-harness population against a fresh fleet and
+/// return the full report (quiescent — the fleet is shut down before
+/// the ledgers are snapshotted, so conservation is assertable).
+pub fn run_load(spec: &LoadSpec) -> Result<FleetReport> {
+    if spec.shards == 0 {
+        bail!("loadgen needs at least one shard");
+    }
+    if spec.clients == 0 {
+        bail!("loadgen needs at least one client");
+    }
+    let policy = FleetPolicy {
+        shards: spec.shards,
+        latency_budget: spec.latency_budget,
+        request_timeout: Duration::from_secs(2),
+        max_restarts: 2,
+        ..FleetPolicy::default()
+    };
+    let fleet =
+        if spec.chaos { Fleet::chaos(policy, spec.seed)? } else { Fleet::reference(policy)? };
+    let pool = spec.shards.max(2);
+    let problems: Vec<Problem> = (0..pool)
+        .map(|j| {
+            let seed = spec.seed.wrapping_mul(0x9E37_79B9_7F4A_7C15).wrapping_add(j as u64);
+            random_csp(&RandomSpec::new(6, 4, 0.7, 0.4, seed))
+        })
+        .collect();
+    let clients: Vec<FleetClient> =
+        (0..spec.clients).map(|i| fleet.client(&problems[i % pool])).collect::<Result<_>>()?;
+    let planes: Vec<Vec<f32>> = problems
+        .iter()
+        .map(|p| {
+            let bucket = Bucket { n: p.n_vars(), d: p.max_dom_size() };
+            encode_vars(p, &State::new(p), bucket)
+        })
+        .collect::<Result<_>>()?;
+    let progress = AtomicU64::new(0);
+    let total = (spec.clients * spec.rounds) as u64;
+    let results: Mutex<Vec<(usize, ClientLedger, Vec<f64>)>> = Mutex::new(Vec::new());
+    // lint:allow(thread-placement): load-harness synthetic client threads
+    // (the harness exists to drive the fleet concurrently)
+    std::thread::scope(|s| {
+        for (i, client) in clients.iter().enumerate() {
+            let problem = &problems[i % pool];
+            let init = &planes[i % pool];
+            let progress = &progress;
+            let results = &results;
+            let rounds = spec.rounds;
+            let mut rng = Rng::new(spec.seed ^ (i as u64).wrapping_mul(0xA076_1D64_78BD_642F));
+            s.spawn(move || {
+                let (ledger, lat) = if i % 2 == 0 {
+                    chain_worker(i, client, problem, init, rounds, &mut rng, progress)
+                } else {
+                    probe_worker(i, client, problem, init, rounds, &mut rng, progress)
+                };
+                results.lock().unwrap().push((i, ledger, lat));
+            });
+        }
+        if spec.chaos {
+            // the forced failover: once half the workload has run,
+            // kill a seed-chosen shard mid-flight (idempotent if a
+            // seeded kill-shard fault got there first)
+            while progress.load(Ordering::Relaxed) < total / 2 {
+                std::thread::sleep(Duration::from_micros(200));
+            }
+            fleet.kill_shard(spec.seed as usize % spec.shards);
+        }
+    });
+    fleet.shutdown();
+    let mut rows = results.into_inner().unwrap();
+    rows.sort_by_key(|(i, _, _)| *i);
+    let latencies: Vec<f64> = rows.iter().flat_map(|(_, _, l)| l.iter().copied()).collect();
+    let ledger: Vec<ClientLedger> = rows.into_iter().map(|(_, l, _)| l).collect();
+    let mismatches = ledger.iter().map(|c| c.mismatches).sum();
+    let aggregate = fleet.snapshot();
+    let shards = fleet.shard_snapshots();
+    // per-run metrics artifacts (env-gated, RTAC_CHAOS_SNAPSHOT_DIR):
+    // the aggregate plus one snapshot per shard, so CI uploads a
+    // conservation ledger for every seed it drives
+    dump_chaos_snapshot(&format!("loadgen_seed_{}", spec.seed), &aggregate);
+    for (i, shard) in shards.iter().enumerate() {
+        dump_chaos_snapshot(&format!("loadgen_seed_{}_shard_{i}", spec.seed), shard);
+    }
+    Ok(FleetReport { aggregate, shards, ledger, latency: Summary::from(&latencies), mismatches })
+}
+
+/// The bench-cell wrapper: a failed run becomes an explicit
+/// `fleet_*_skipped` marker instead of a missing cell.
+pub fn run_fleet_cell(spec: &LoadSpec) -> CellOutcome<FleetReport> {
+    match run_load(spec) {
+        Ok(r) => CellOutcome::Measured(r),
+        Err(e) => {
+            eprintln!("fleet load cell skipped: {e:#}");
+            CellOutcome::Skipped(SkipReason::SessionUnavailable)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn deterministic_counters(m: &MetricsSnapshot) -> (u64, u64, u64, u64, u64, u64) {
+        (
+            m.requests,
+            m.responses,
+            m.dropped_requests,
+            m.rejected_requests,
+            m.shipped_f32,
+            m.base_uploads,
+        )
+    }
+
+    #[test]
+    fn same_seed_against_a_reference_fleet_yields_identical_ledgers() {
+        let spec = LoadSpec {
+            shards: 2,
+            clients: 4,
+            rounds: 4,
+            seed: 7,
+            latency_budget: None,
+            chaos: false,
+        };
+        let a = run_load(&spec).unwrap();
+        let b = run_load(&spec).unwrap();
+        assert_eq!(a.ledger, b.ledger, "client ledgers must replay bit-identically");
+        assert_eq!(
+            deterministic_counters(&a.aggregate),
+            deterministic_counters(&b.aggregate),
+            "fleet counters must replay bit-identically (latency cells exempt)"
+        );
+        // a fault-free, unbudgeted run has no error path at all
+        assert_eq!(a.mismatches, 0);
+        assert_eq!(a.aggregate.rejected_requests, 0);
+        assert_eq!(a.aggregate.dropped_requests, 0);
+        assert!(a.aggregate.conserved() && a.aggregate.shard_conserved, "{:?}", a.aggregate);
+        for l in &a.ledger {
+            assert_eq!(l.requests, l.responses, "worker {}: {l:?}", l.worker);
+            assert_eq!(l.dropped + l.rejected + l.mismatches, 0, "worker {}: {l:?}", l.worker);
+        }
+        assert!(a.latency.is_some(), "answered requests must produce latency samples");
+    }
+
+    #[test]
+    fn a_single_client_population_is_valid() {
+        // clients < problem pool: the pool indexes must not assume one
+        // client per problem
+        let spec = LoadSpec {
+            shards: 3,
+            clients: 1,
+            rounds: 2,
+            seed: 5,
+            latency_budget: None,
+            chaos: false,
+        };
+        let r = run_load(&spec).unwrap();
+        assert_eq!(r.ledger.len(), 1);
+        assert!(r.aggregate.conserved() && r.aggregate.shard_conserved);
+        assert_eq!(r.mismatches, 0);
+    }
+
+    #[test]
+    fn rejection_rate_is_the_rejected_fraction() {
+        let mut m = crate::coordinator::Metrics::new().snapshot();
+        m.requests = 8;
+        m.rejected_requests = 2;
+        let r = FleetReport {
+            aggregate: m,
+            shards: Vec::new(),
+            ledger: Vec::new(),
+            latency: None,
+            mismatches: 0,
+        };
+        assert!((r.rejection_rate() - 0.25).abs() < 1e-12);
+    }
+}

@@ -5,6 +5,7 @@
 pub mod ablations;
 pub mod fig3;
 pub mod harness;
+pub mod load;
 pub mod rtac_bench;
 pub mod table1;
 pub mod workloads;

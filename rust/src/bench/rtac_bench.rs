@@ -1094,10 +1094,16 @@ pub fn render(results: &[CellResult], engines: &[&str]) -> String {
 }
 
 /// JSON export: grid metadata + one row per cell (BENCH_rtac.json),
-/// plus the densest-cell verdicts and the seven comparison cells —
+/// plus the densest-cell verdicts, the seven comparison cells, and the
+/// fleet load-harness cell ([`crate::bench::load::run_fleet_cell`]) —
 /// measured fields when run, an explicit `*_skipped: "<reason>"`
 /// marker when not (never silently absent).
-pub fn to_json(spec: &GridSpec, results: &[CellResult], cells: &SacCells) -> Json {
+pub fn to_json(
+    spec: &GridSpec,
+    results: &[CellResult],
+    cells: &SacCells,
+    fleet: &CellOutcome<crate::bench::load::FleetReport>,
+) -> Json {
     let rows = Json::Arr(
         results
             .iter()
@@ -1217,7 +1223,67 @@ pub fn to_json(spec: &GridSpec, results: &[CellResult], cells: &SacCells) -> Jso
         }
         CellOutcome::Skipped(r) => fields.push(("recovery_restart_skipped", s(r.as_str()))),
     }
+    match fleet {
+        CellOutcome::Measured(r) => {
+            fields.push(("fleet_shards", num(r.aggregate.shards as f64)));
+            fields.push(("fleet_clients", num(r.ledger.len() as f64)));
+            fields.push(("fleet_requests", num(r.aggregate.requests as f64)));
+            fields.push(("fleet_responses", num(r.aggregate.responses as f64)));
+            fields.push(("fleet_dropped_requests", num(r.aggregate.dropped_requests as f64)));
+            fields.push(("fleet_rejected_requests", num(r.aggregate.rejected_requests as f64)));
+            fields.push(("fleet_rejection_rate", num(r.rejection_rate())));
+            fields.push(("fleet_failovers", num(r.aggregate.failovers as f64)));
+            fields.push(("fleet_replaced_sessions", num(r.aggregate.replaced_sessions as f64)));
+            // wall-clock cells; absent (never fabricated) when no
+            // request was answered
+            if let Some(lat) = &r.latency {
+                fields.push(("fleet_p50_ms", num(lat.p50)));
+                fields.push(("fleet_p99_ms", num(lat.p99)));
+            }
+            fields.push(("fleet_mean_occupancy", num(r.aggregate.mean_batch_occupancy)));
+            fields.push(("fleet_shipped_f32", num(r.aggregate.shipped_f32 as f64)));
+            fields.push((
+                "fleet_conserved",
+                Json::Bool(r.aggregate.conserved() && r.aggregate.shard_conserved),
+            ));
+        }
+        CellOutcome::Skipped(r) => fields.push(("fleet_skipped", s(r.as_str()))),
+    }
     obj(fields)
+}
+
+/// Human rendering of the fleet load-harness cell (the `rtac loadgen` /
+/// `bench-rtac` console line).
+pub fn render_fleet_cell(fleet: &CellOutcome<crate::bench::load::FleetReport>) -> String {
+    match fleet {
+        CellOutcome::Skipped(r) => format!("fleet cell: skipped ({})\n", r.as_str()),
+        CellOutcome::Measured(rep) => {
+            let m = &rep.aggregate;
+            let lat = rep
+                .latency
+                .as_ref()
+                .map(|l| format!("p50 {:.2}ms p99 {:.2}ms", l.p50, l.p99))
+                .unwrap_or_else(|| "no answered requests".to_string());
+            format!(
+                "fleet cell ({} shard(s), {} client(s)): req={} resp={} dropped={} \
+                 rejected={} ({:.1}%) failovers={} replaced_sessions={} {lat} \
+                 occupancy {:.2} shipped={}f32 mismatches={} conserved={}\n",
+                m.shards,
+                rep.ledger.len(),
+                m.requests,
+                m.responses,
+                m.dropped_requests,
+                m.rejected_requests,
+                rep.rejection_rate() * 100.0,
+                m.failovers,
+                m.replaced_sessions,
+                m.mean_batch_occupancy,
+                m.shipped_f32,
+                rep.mismatches,
+                m.conserved() && m.shard_conserved,
+            )
+        }
+    }
 }
 
 #[cfg(test)]
@@ -1262,7 +1328,12 @@ mod tests {
     #[test]
     fn json_has_row_per_cell_and_parses_back() {
         let (spec, results) = tiny_results();
-        let j = to_json(&spec, &results, &SacCells::all_skipped(SkipReason::Disabled));
+        let j = to_json(
+            &spec,
+            &results,
+            &SacCells::all_skipped(SkipReason::Disabled),
+            &CellOutcome::Skipped(SkipReason::Disabled),
+        );
         let parsed = crate::util::json::parse(&j.to_string()).unwrap();
         assert_eq!(
             parsed.get("rows").unwrap().as_arr().unwrap().len(),
@@ -1275,7 +1346,12 @@ mod tests {
     fn skipped_cells_are_marked_not_omitted() {
         // the satellite fix: every un-run cell leaves an explicit marker
         let (spec, results) = tiny_results();
-        let j = to_json(&spec, &results, &SacCells::all_skipped(SkipReason::Disabled));
+        let j = to_json(
+            &spec,
+            &results,
+            &SacCells::all_skipped(SkipReason::Disabled),
+            &CellOutcome::Skipped(SkipReason::Disabled),
+        );
         let parsed = crate::util::json::parse(&j.to_string()).unwrap();
         for key in [
             "simd_skipped",
@@ -1285,14 +1361,56 @@ mod tests {
             "sac_mixed_skipped",
             "search_delta_skipped",
             "recovery_restart_skipped",
+            "fleet_skipped",
         ] {
             assert_eq!(parsed.get(key).unwrap().as_str(), Some("disabled"), "{key}");
         }
         // and the no-artifacts reason serialises as the documented token
-        let j = to_json(&spec, &results, &SacCells::all_skipped(SkipReason::NoArtifacts));
+        let j = to_json(
+            &spec,
+            &results,
+            &SacCells::all_skipped(SkipReason::NoArtifacts),
+            &CellOutcome::Skipped(SkipReason::Disabled),
+        );
         let parsed = crate::util::json::parse(&j.to_string()).unwrap();
         assert_eq!(parsed.get("sac_xla_skipped").unwrap().as_str(), Some("no-artifacts"));
         assert!(parsed.get("sac_xla_ms").is_none(), "skipped cells must carry no numbers");
+    }
+
+    #[test]
+    fn fleet_cell_serialises_measured_fields_and_renders() {
+        let (spec, results) = tiny_results();
+        let mut m = crate::coordinator::Metrics::new().snapshot();
+        m.shards = 3;
+        m.requests = 10;
+        m.responses = 8;
+        m.dropped_requests = 2;
+        m.rejected_requests = 1;
+        m.failovers = 1;
+        m.shard_conserved = true;
+        let report = crate::bench::load::FleetReport {
+            aggregate: m,
+            shards: Vec::new(),
+            ledger: Vec::new(),
+            latency: crate::util::stats::Summary::from(&[1.0, 2.0, 3.0]),
+            mismatches: 0,
+        };
+        let j = to_json(
+            &spec,
+            &results,
+            &SacCells::all_skipped(SkipReason::Disabled),
+            &CellOutcome::Measured(report.clone()),
+        );
+        let parsed = crate::util::json::parse(&j.to_string()).unwrap();
+        assert_eq!(parsed.get("fleet_shards").unwrap().as_f64(), Some(3.0));
+        assert_eq!(parsed.get("fleet_requests").unwrap().as_f64(), Some(10.0));
+        assert_eq!(parsed.get("fleet_rejected_requests").unwrap().as_f64(), Some(1.0));
+        assert_eq!(parsed.get("fleet_rejection_rate").unwrap().as_f64(), Some(0.1));
+        assert!(parsed.get("fleet_p50_ms").is_some() && parsed.get("fleet_p99_ms").is_some());
+        assert_eq!(parsed.get("fleet_conserved"), Some(&Json::Bool(true)));
+        assert!(parsed.get("fleet_skipped").is_none(), "measured cells carry no skip marker");
+        let line = render_fleet_cell(&CellOutcome::Measured(report));
+        assert!(line.contains("failovers=1") && line.contains("conserved=true"), "{line}");
     }
 
     #[test]
@@ -1391,7 +1509,12 @@ mod tests {
             sac: CellOutcome::Measured(c),
             ..SacCells::all_skipped(SkipReason::NoArtifacts)
         };
-        let j = to_json(&spec, &run(&spec, &["rtac"]), &cells);
+        let j = to_json(
+            &spec,
+            &run(&spec, &["rtac"]),
+            &cells,
+            &CellOutcome::Skipped(SkipReason::Disabled),
+        );
         let parsed = crate::util::json::parse(&j.to_string()).unwrap();
         assert!(parsed.get("sac_par_speedup").is_some());
         assert!(parsed.get("sac_probes").is_some());
@@ -1420,7 +1543,12 @@ mod tests {
             simd: CellOutcome::Measured(c),
             ..SacCells::all_skipped(SkipReason::Disabled)
         };
-        let j = to_json(&spec, &run(&spec, &["rtac"]), &cells);
+        let j = to_json(
+            &spec,
+            &run(&spec, &["rtac"]),
+            &cells,
+            &CellOutcome::Skipped(SkipReason::Disabled),
+        );
         let parsed = crate::util::json::parse(&j.to_string()).unwrap();
         assert!(parsed.get("simd_isa").is_some());
         assert!(parsed.get("simd_vs_scalar_kernel_speedup").is_some());
@@ -1460,7 +1588,12 @@ mod tests {
             sac_xla: CellOutcome::Measured(c.clone()),
             ..SacCells::all_skipped(SkipReason::Disabled)
         };
-        let j = to_json(&spec, &run(&spec, &["rtac"]), &cells);
+        let j = to_json(
+            &spec,
+            &run(&spec, &["rtac"]),
+            &cells,
+            &CellOutcome::Skipped(SkipReason::Disabled),
+        );
         let parsed = crate::util::json::parse(&j.to_string()).unwrap();
         assert!(parsed.get("sac_xla_mean_batch_occupancy").is_some());
         assert!(parsed.get("sac_xla_speedup").is_some());
@@ -1536,7 +1669,12 @@ mod tests {
             recovery: CellOutcome::Measured(recovery),
             ..SacCells::all_skipped(SkipReason::Disabled)
         };
-        let j = to_json(&spec, &run(&spec, &["rtac"]), &cells);
+        let j = to_json(
+            &spec,
+            &run(&spec, &["rtac"]),
+            &cells,
+            &CellOutcome::Skipped(SkipReason::Disabled),
+        );
         let parsed = crate::util::json::parse(&j.to_string()).unwrap();
         assert!(parsed.get("sac_delta_upload_ratio").is_some());
         assert!(parsed.get("sac_delta_shipped_f32").is_some());

@@ -1,0 +1,463 @@
+//! Deterministic fault injection over the session protocol — the
+//! offline chaos harness behind the CI `chaos` job, the protocol test
+//! batteries, and (since the fleet PR) the runtime reference executors
+//! that `coordinator::fleet` and `bench::load` shard over.
+//!
+//! The centerpiece is [`chaos_reference_executor`]: a stand-in executor
+//! thread that serves the exact client→executor wire protocol
+//! (`service::Msg` over the same `BaseSlots` + `resolve_payload` the
+//! production executor thread uses) with the native CPU engine instead
+//! of XLA, while a seeded [`FaultPlan`] injects crashes, hangs,
+//! failed-execution streaks, base-cache wipes, and — for the sharded
+//! tier — whole-shard kills.  It is supervised by the SAME
+//! `service::Supervisor` state machine production runs, so the offline
+//! e2e tests exercise production's restart/deadline/drop decisions with
+//! no compiled artifacts.
+//!
+//! Everything here used to live inside `service.rs`'s test module; it
+//! was promoted to a runtime module so a [`crate::coordinator::fleet`]
+//! built from reference executors can serve real (offline) traffic —
+//! `rtac loadgen` drives exactly these executors.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::Duration;
+
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::service::{resolve_payload, BaseSlots, Msg, Response, Supervisor};
+use crate::core::Problem;
+use crate::runtime::{Bucket, STATUS_WIPEOUT};
+
+/// Shared liveness flag of one fleet shard: flipped dead by a
+/// [`FaultPlan::kill_shard_at`] fault (or by a session going moribund)
+/// and polled by the fleet tier, which then fails the shard over —
+/// every session homed on it re-places onto a surviving shard.
+/// Standalone (non-fleet) sessions pass a fresh flag and ignore it.
+#[derive(Clone, Debug, Default)]
+pub(crate) struct ShardHealth(Arc<AtomicBool>);
+
+impl ShardHealth {
+    pub(crate) fn new() -> ShardHealth {
+        ShardHealth::default()
+    }
+
+    /// True once the shard has been declared dead (sticky; a dead shard
+    /// never comes back — its sessions move instead).
+    pub(crate) fn is_dead(&self) -> bool {
+        self.0.load(Ordering::SeqCst)
+    }
+
+    /// Declare the shard dead.
+    pub(crate) fn mark_dead(&self) {
+        self.0.store(true, Ordering::SeqCst);
+    }
+}
+
+/// §Fault injection: one deterministic chaos plan for the supervised
+/// CPU-reference executor ([`chaos_reference_executor`]).  Fault sites
+/// are *request indices* — the Nth enforcement request the executor
+/// receives (base uploads and restart messages do not count) — so a
+/// plan replays bit-identically for a deterministic client.
+#[derive(Clone, Debug, Default)]
+pub(crate) struct FaultPlan {
+    /// Simulated executor crashes: before serving request N the
+    /// session state dies and the supervisor restarts it — same
+    /// `Supervisor` budget/backoff decisions, same re-hydration
+    /// accounting (base replay + in-flight re-enqueue) as the
+    /// production executor thread.
+    pub(crate) crash_at: Vec<u64>,
+    /// Hangs: serving request N stalls until past the per-request
+    /// deadline, so the client's `recv_deadline` fires and the
+    /// executor counts the expired request when it reaches it.
+    pub(crate) hang_at: Vec<u64>,
+    /// Failed fused executions: requests N and N+1 both fail — a
+    /// streak of `Supervisor::FAILED_STREAK_LIMIT`, driving the
+    /// streak→restart path.
+    pub(crate) fail_streak_at: Vec<u64>,
+    /// Base-cache wipes (`BaseSlots::wipe`) before request N: every
+    /// delta client's next round drops stale and must recover through
+    /// its bounded fresh-base retry.
+    pub(crate) wipe_bases_at: Vec<u64>,
+    /// Whole-shard kills (the fleet-tier fault): before serving request
+    /// N the session's [`ShardHealth`] flips dead and the session goes
+    /// moribund — request N and everything after it is dropped AND
+    /// counted (`restart_dropped_requests`), so per-shard conservation
+    /// holds while the fleet re-places the shard's sessions onto
+    /// survivors.
+    pub(crate) kill_shard_at: Vec<u64>,
+}
+
+impl FaultPlan {
+    /// Deterministic plan derived from `seed` (xorshift64 — no
+    /// external RNG dependency): 1–3 faults of mixed kinds spread
+    /// over the first ~12 requests.  Single-session fault kinds only —
+    /// the historical chaos battery replays these seeds bit-identically.
+    pub(crate) fn seeded(seed: u64) -> FaultPlan {
+        let mut s = seed.wrapping_mul(0x9E37_79B9_7F4A_7C15) | 1;
+        let mut next = move || {
+            s ^= s << 13;
+            s ^= s >> 7;
+            s ^= s << 17;
+            s
+        };
+        let mut plan = FaultPlan::default();
+        let n_faults = 1 + next() % 3;
+        for i in 0..n_faults {
+            let at = 1 + i * 4 + next() % 3;
+            match next() % 4 {
+                0 => plan.crash_at.push(at),
+                1 => plan.hang_at.push(at),
+                2 => plan.fail_streak_at.push(at),
+                _ => plan.wipe_bases_at.push(at),
+            }
+        }
+        plan
+    }
+
+    /// Deterministic *fleet* plan: the single-session faults of
+    /// [`FaultPlan::seeded`], plus — on roughly one seed in three — a
+    /// whole-shard kill, so a seeded fleet run exercises failover
+    /// organically on top of any forced kills the driver injects.
+    pub(crate) fn seeded_fleet(seed: u64) -> FaultPlan {
+        let mut plan = FaultPlan::seeded(seed);
+        // derive the kill decision from a disjoint xorshift stream so
+        // the shared single-session faults stay bit-identical to
+        // `seeded(seed)`
+        let mut s = seed.wrapping_mul(0xD134_2543_DE82_EF95) | 1;
+        let mut next = move || {
+            s ^= s << 13;
+            s ^= s >> 7;
+            s ^= s << 17;
+            s
+        };
+        if next() % 3 == 0 {
+            plan.kill_shard_at.push(2 + next() % 6);
+        }
+        plan
+    }
+
+    /// Does request `i` fall in a failed-execution streak?
+    fn fails(&self, i: u64) -> bool {
+        self.fail_streak_at.iter().any(|&at| i == at || i == at + 1)
+    }
+}
+
+/// The CPU-reference executor wrapped in deterministic fault
+/// injection: serves the session protocol with the native CPU engine
+/// (same `resolve_payload` over the same `BaseSlots` as the real
+/// executor) while a [`FaultPlan`] injects crashes, hangs, failed
+/// executions, base-cache wipes, and whole-shard kills — supervised by
+/// the SAME `Supervisor` state machine the production executor thread
+/// runs.  With an empty plan this *is* the plain CPU-reference
+/// executor.  `health` is the hosting shard's liveness flag (flipped by
+/// kill-shard faults and by moribund exhaustion so the fleet tier can
+/// fail the shard over); standalone sessions pass `ShardHealth::new()`.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn chaos_reference_executor(
+    problem: Problem,
+    bucket: Bucket,
+    base_slots: usize,
+    request_timeout: Duration,
+    max_restarts: u32,
+    plan: FaultPlan,
+    health: ShardHealth,
+    rx: mpsc::Receiver<Msg>,
+    metrics: Arc<Metrics>,
+) -> std::thread::JoinHandle<()> {
+    /// Spend one restart (mirroring `restart_session`): true when
+    /// the session re-hydrated, false when the budget is exhausted
+    /// and the session must go moribund (`drain_moribund`).
+    fn restart(supervisor: &mut Supervisor, slots: &BaseSlots, metrics: &Metrics, why: &str) -> bool {
+        match supervisor.begin_restart() {
+            Some(backoff) => {
+                std::thread::sleep(backoff);
+                metrics.on_executor_restart();
+                for _ in 0..slots.len() {
+                    metrics.on_base_replayed();
+                }
+                eprintln!(
+                    "chaos-executor: restart {} after {why} ({} base slot(s) replayed)",
+                    supervisor.restarts(),
+                    slots.len()
+                );
+                true
+            }
+            None => {
+                eprintln!("chaos-executor: restart budget exhausted after {why} — moribund");
+                false
+            }
+        }
+    }
+    // lint:allow(thread-placement): chaos reference executor thread (the
+    // offline stand-in for the production rtac-executor thread)
+    std::thread::spawn(move || {
+        use crate::ac::{rtac::RtacNative, Counters, Propagator};
+        use crate::runtime::{decode_vars, encode_vars};
+        let mut slots = BaseSlots::new(base_slots);
+        let mut engine = RtacNative::dense();
+        let mut supervisor = Supervisor::new(max_restarts);
+        let mut idx: u64 = 0;
+        let mut moribund = false;
+        while let Ok(msg) = rx.recv() {
+            let req = match msg {
+                Msg::Base { client, fp, plane } => {
+                    if !moribund && slots.insert(client, fp, plane) {
+                        metrics.on_base_evicted();
+                    }
+                    continue;
+                }
+                Msg::ForceRestart => {
+                    if !moribund
+                        && !restart(&mut supervisor, &slots, &metrics, "a forced restart")
+                    {
+                        moribund = true;
+                        health.mark_dead();
+                    }
+                    continue;
+                }
+                Msg::Req(r) => r,
+            };
+            if moribund {
+                // the drain_moribund contract: drop AND count every
+                // remaining request until all handles disconnect
+                metrics.on_restart_dropped(req.payload.client());
+                continue;
+            }
+            let i = idx;
+            idx += 1;
+            if plan.kill_shard_at.contains(&i) {
+                // the fleet-tier fault: the whole shard dies with
+                // request i in flight.  The session goes moribund (all
+                // further requests dropped AND counted) and the shard's
+                // health flag flips, so the fleet re-places every
+                // session homed here onto a surviving shard.
+                eprintln!("chaos-executor: shard killed before request {i}");
+                health.mark_dead();
+                moribund = true;
+                metrics.on_restart_dropped(req.payload.client());
+                continue;
+            }
+            if plan.wipe_bases_at.contains(&i) {
+                let n = slots.wipe();
+                eprintln!("chaos-executor: wiped {n} base slot(s) before request {i}");
+            }
+            if plan.crash_at.contains(&i) {
+                // the crash kills the exec state with request i in
+                // flight; after the restart the request is served
+                // from the re-enqueued pending set (the
+                // `restart_session` replay)
+                if !restart(&mut supervisor, &slots, &metrics, "a crash") {
+                    moribund = true;
+                    health.mark_dead();
+                    metrics.on_restart_dropped(req.payload.client());
+                    continue;
+                }
+            }
+            if plan.hang_at.contains(&i) {
+                std::thread::sleep(request_timeout + Duration::from_millis(20));
+            }
+            // the executor half of the per-request deadline
+            // (mirrors the real drain loop)
+            if req.submitted.elapsed() > request_timeout {
+                metrics.on_request_timeout(req.payload.client());
+                continue;
+            }
+            if plan.fails(i) {
+                metrics.on_batch_failed(&[req.payload.client()]);
+                drop(req); // responder gone: the client sees dropped_err
+                if supervisor.on_batch_failed()
+                    && !restart(&mut supervisor, &slots, &metrics, "a failed-execution streak")
+                {
+                    moribund = true;
+                    health.mark_dead();
+                }
+                continue;
+            }
+            let client = req.payload.client();
+            let Some(plane) = resolve_payload(req.payload, &mut slots, bucket) else {
+                let client = client.expect("only deltas can fail to resolve");
+                metrics.on_stale_delta(client);
+                continue; // responder dropped, like the real executor
+            };
+            let mut state = crate::core::State::new(&problem);
+            decode_vars(&problem, &mut state, &plane, bucket).expect("monotone input plane");
+            let mut c = Counters::default();
+            engine.reset(&problem);
+            let out = engine.enforce(&problem, &mut state, &[], &mut c);
+            supervisor.on_batch_ok();
+            let status = if out.is_consistent() { 0 } else { STATUS_WIPEOUT };
+            let out_plane = encode_vars(&problem, &state, bucket).expect("fits the bucket");
+            metrics.on_batch(1, 1, Duration::from_micros(1));
+            metrics.on_response(
+                client,
+                Duration::ZERO,
+                Duration::ZERO,
+                c.recurrences as i32,
+                status == STATUS_WIPEOUT,
+            );
+            let _ = req.resp.send(Response {
+                plane: out_plane,
+                status,
+                iters: c.recurrences as i32,
+                batch_real: 1,
+                batch_capacity: 1,
+                queue_time: Duration::ZERO,
+                total_time: Duration::ZERO,
+            });
+        }
+    })
+}
+
+/// A stand-in executor thread that serves the session protocol with
+/// the native CPU engine instead of XLA — the fault-free
+/// specialisation of [`chaos_reference_executor`].  Lets the delta
+/// protocol — and clients built on it, up to whole parallel searches
+/// and reference fleets — run end-to-end with no compiled artifacts.
+/// (The fleet tier calls [`chaos_reference_executor`] directly so its
+/// shard health flag is wired in; this convenience wrapper serves the
+/// single-session test fixtures.)
+#[cfg(test)]
+pub(crate) fn cpu_reference_executor(
+    problem: Problem,
+    bucket: Bucket,
+    base_slots: usize,
+    rx: mpsc::Receiver<Msg>,
+    metrics: Arc<Metrics>,
+) -> std::thread::JoinHandle<()> {
+    let policy = crate::coordinator::BatchPolicy::default();
+    chaos_reference_executor(
+        problem,
+        bucket,
+        base_slots,
+        policy.request_timeout,
+        policy.max_restarts,
+        FaultPlan::default(),
+        ShardHealth::new(),
+        rx,
+        metrics,
+    )
+}
+
+/// When `RTAC_CHAOS_SNAPSHOT_DIR` is set (the CI chaos job), dump a
+/// final [`crate::coordinator::MetricsSnapshot`] there as
+/// `<name>.txt` — one artifact per chaos seed / fleet shard, so a CI
+/// failure is diagnosable from the uploaded artifacts alone.
+pub(crate) fn dump_chaos_snapshot(name: &str, m: &crate::coordinator::MetricsSnapshot) {
+    let Ok(dir) = std::env::var("RTAC_CHAOS_SNAPSHOT_DIR") else { return };
+    let path = std::path::Path::new(&dir).join(format!("{name}.txt"));
+    if let Err(e) = std::fs::write(&path, format!("{}\n\n{m:#?}\n", m.summary())) {
+        eprintln!("chaos snapshot: could not write {path:?}: {e}");
+    }
+}
+
+/// Session fixture around [`chaos_reference_executor`] with an
+/// explicit fault plan, deadline, and restart budget (all mirrored
+/// onto the handle like `Coordinator::start` does from the policy).
+#[cfg(test)]
+pub(crate) fn chaos_session(
+    problem: &Problem,
+    bucket: Bucket,
+    plan: FaultPlan,
+    request_timeout: Duration,
+    max_restarts: u32,
+) -> (crate::coordinator::Handle, std::thread::JoinHandle<()>) {
+    let base_slots = crate::coordinator::BatchPolicy::default().base_slots;
+    let (h, rx) =
+        crate::coordinator::Handle::for_reference_executor(bucket, base_slots, request_timeout);
+    let join = chaos_reference_executor(
+        problem.clone(),
+        bucket,
+        base_slots,
+        request_timeout,
+        max_restarts,
+        plan,
+        ShardHealth::new(),
+        rx,
+        h.metrics.clone(),
+    );
+    (h, join)
+}
+
+/// Session fixture around [`cpu_reference_executor`] with an
+/// explicit base-slot cap (mirrored onto the handle, like
+/// `Coordinator::start` does from the policy).
+#[cfg(test)]
+pub(crate) fn reference_session_with_slots(
+    problem: &Problem,
+    bucket: Bucket,
+    base_slots: usize,
+) -> (crate::coordinator::Handle, std::thread::JoinHandle<()>) {
+    let timeout = crate::coordinator::BatchPolicy::default().request_timeout;
+    let (h, rx) = crate::coordinator::Handle::for_reference_executor(bucket, base_slots, timeout);
+    let join = cpu_reference_executor(problem.clone(), bucket, base_slots, rx, h.metrics.clone());
+    (h, join)
+}
+
+/// Session fixture at the default slot cap.
+#[cfg(test)]
+pub(crate) fn reference_session(
+    problem: &Problem,
+    bucket: Bucket,
+) -> (crate::coordinator::Handle, std::thread::JoinHandle<()>) {
+    reference_session_with_slots(problem, bucket, crate::coordinator::BatchPolicy::default().base_slots)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn seeded_fleet_plans_extend_but_never_reshuffle_the_session_faults() {
+        for seed in 1..=32u64 {
+            let base = FaultPlan::seeded(seed);
+            let fleet = FaultPlan::seeded_fleet(seed);
+            assert_eq!(base.crash_at, fleet.crash_at, "seed {seed}");
+            assert_eq!(base.hang_at, fleet.hang_at, "seed {seed}");
+            assert_eq!(base.fail_streak_at, fleet.fail_streak_at, "seed {seed}");
+            assert_eq!(base.wipe_bases_at, fleet.wipe_bases_at, "seed {seed}");
+            assert!(base.kill_shard_at.is_empty(), "seeded() must stay single-session");
+        }
+        // the fleet variant does inject shard kills on some seeds
+        let kills: usize =
+            (1..=32u64).map(|s| FaultPlan::seeded_fleet(s).kill_shard_at.len()).sum();
+        assert!(kills > 0, "at least one of 32 seeds must kill a shard");
+    }
+
+    #[test]
+    fn kill_shard_fault_flips_health_and_drains_with_conservation() {
+        use crate::gen::random::{random_csp, RandomSpec};
+        use crate::runtime::encode_vars;
+        let bucket = Bucket { n: 8, d: 4 };
+        let p = random_csp(&RandomSpec::new(6, 4, 0.7, 0.4, 11));
+        let health = ShardHealth::new();
+        let base_slots = crate::coordinator::BatchPolicy::default().base_slots;
+        let (h, rx) = crate::coordinator::Handle::for_reference_executor(
+            bucket,
+            base_slots,
+            Duration::from_secs(5),
+        );
+        let plan = FaultPlan { kill_shard_at: vec![1], ..FaultPlan::default() };
+        let join = chaos_reference_executor(
+            p.clone(),
+            bucket,
+            base_slots,
+            Duration::from_secs(5),
+            3,
+            plan,
+            health.clone(),
+            rx,
+            h.metrics.clone(),
+        );
+        let s = crate::core::State::new(&p);
+        let plane = encode_vars(&p, &s, bucket).unwrap();
+        h.enforce_blocking(plane.clone()).expect("request 0 precedes the kill");
+        assert!(!health.is_dead(), "the shard dies at request 1, not before");
+        let e = h.enforce_blocking(plane.clone()).unwrap_err();
+        assert!(format!("{e:#}").contains("dropped"), "{e:#}");
+        assert!(health.is_dead(), "the kill-shard fault must flip the health flag");
+        // moribund drain: later requests also drop AND count
+        let _ = h.enforce_blocking(plane).unwrap_err();
+        drop(h);
+        join.join().unwrap();
+    }
+}

@@ -1,0 +1,1120 @@
+//! The scheduler tier above single serving sessions: a [`Fleet`] owns
+//! N supervised shards and places *sessions* — one per distinct
+//! constraint network — across them by content fingerprint, with
+//! admission control in front of every shard queue and failover when a
+//! shard dies.
+//!
+//! # Placement
+//!
+//! A session is keyed by [`crate::ac::sac::problem_fingerprint`] — the
+//! same content fingerprint that guards compiled-session reuse in the
+//! SAC engines — so identical networks from different clients share
+//! ONE session (one compiled artifact set, one base-slot map) on one
+//! shard, while differing networks get disjoint sessions and can never
+//! cross-invalidate each other's base slots.  The shard is chosen by
+//! rendezvous (highest-random-weight) hashing over the *live* shards:
+//! placement is deterministic, identical across fleet restarts, and
+//! stable under membership change — removing one shard re-places only
+//! that shard's sessions, every other key keeps its home.
+//!
+//! # Admission control
+//!
+//! With a latency budget configured ([`FleetPolicy::latency_budget`],
+//! `rtac serve --latency-budget MS`), every enforcement call first
+//! projects its completion latency from the target shard's queue depth
+//! and its EWMA round latency: `ceil((outstanding + k) / max_batch) ×
+//! ewma`.  A request whose projection blows the budget is **rejected
+//! and counted** (`rejected_requests` — a named error,
+//! [`ADMISSION_REJECTED`]), never silently shed and never answered
+//! wrongly: the caller degrades to its CPU path exactly like it does
+//! for a moribund session.  The batch path additionally enforces a
+//! per-client fairness share so one greedy prober cannot starve the
+//! other clients of a shard.
+//!
+//! # Failover
+//!
+//! Each shard carries a shared health flag; a chaos plan can kill a
+//! whole shard mid-flight (`FaultPlan::kill_shard_at`), a session that
+//! exhausts its restart budget marks its shard dead, and the load
+//! harness can force a kill ([`Fleet::kill_shard`]).  The first client
+//! to observe the death (or the forced kill itself) triggers failover:
+//! every session homed on the dead shard re-places by rendezvous over
+//! the survivors and **re-hydrates** there through the PR-6 replay
+//! machinery — the fleet mirrors every client's last uploaded base
+//! plane host-side, so the replacement incarnation starts with the
+//! full slot map (`replayed_bases`) and chained-delta clients resume
+//! with at worst one stale round.  Conservation
+//! (`requests == responses + dropped_requests`) holds per shard ledger
+//! AND fleet-aggregate across the move: the dying incarnation drains
+//! its queue counting every drop, the replacement counts its own
+//! traffic, and [`MetricsSnapshot::aggregate`] merges the ledgers.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Result};
+
+use crate::ac::sac::problem_fingerprint;
+use crate::coordinator::chaos::{chaos_reference_executor, FaultPlan, ShardHealth};
+use crate::coordinator::metrics::{Metrics, MetricsSnapshot};
+use crate::coordinator::service::{
+    BatchPolicy, ClientId, Coordinator, CoordinatorConfig, Handle, Response,
+};
+use crate::core::Problem;
+use crate::runtime::{Bucket, PlaneDelta};
+
+/// Leading text of every admission-control rejection error — the
+/// *named* drop cause clients match on ([`is_admission_rejected`]) to
+/// distinguish "the fleet is over its latency budget, degrade to the
+/// CPU path" from a dead session.
+pub const ADMISSION_REJECTED: &str = "fleet admission rejected the request";
+
+/// Is `e` an admission-control rejection ([`ADMISSION_REJECTED`])?
+/// Rejected requests are counted (`rejected_requests`), carry no
+/// verdict, and are not worth retrying against the same shard until
+/// its queue drains — callers degrade to their CPU path instead.
+pub fn is_admission_rejected(e: &anyhow::Error) -> bool {
+    format!("{e:#}").contains(ADMISSION_REJECTED)
+}
+
+/// Fleet-level policy: shard count, admission budget, and the
+/// per-session knobs every shard's sessions inherit (the
+/// [`BatchPolicy`] subset that matters to reference executors).
+#[derive(Clone, Debug)]
+pub struct FleetPolicy {
+    /// Number of shards (supervised executor homes).  Must be >= 1.
+    pub shards: usize,
+    /// Admission-control latency budget (`--latency-budget`): reject a
+    /// request when its projected completion latency exceeds this.
+    /// `None` disables admission control — every request is queued.
+    pub latency_budget: Option<Duration>,
+    /// Per-session resident delta-base cap ([`BatchPolicy::base_slots`]).
+    pub base_slots: usize,
+    /// Per-request deadline ([`BatchPolicy::request_timeout`]).
+    pub request_timeout: Duration,
+    /// Per-session supervisor restart budget
+    /// ([`BatchPolicy::max_restarts`]).
+    pub max_restarts: u32,
+    /// Fused-batch ceiling ([`BatchPolicy::max_batch`]) — the
+    /// amortisation denominator of the admission-latency projection.
+    pub max_batch: usize,
+}
+
+impl Default for FleetPolicy {
+    fn default() -> FleetPolicy {
+        let b = BatchPolicy::default();
+        FleetPolicy {
+            shards: 1,
+            latency_budget: None,
+            base_slots: b.base_slots,
+            request_timeout: b.request_timeout,
+            max_restarts: b.max_restarts,
+            max_batch: b.max_batch,
+        }
+    }
+}
+
+/// splitmix64 finalizer — the avalanche behind rendezvous scoring.
+fn mix64(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Rendezvous (highest-random-weight) placement: the live shard with
+/// the highest mixed score for `fp`.  Pure and deterministic, so the
+/// same network lands on the same shard across fleets and restarts;
+/// removing one shard re-places only the keys that scored it highest.
+pub(crate) fn rendezvous_shard(fp: u64, alive: &[usize]) -> usize {
+    assert!(!alive.is_empty(), "rendezvous over zero shards");
+    *alive
+        .iter()
+        .max_by_key(|&&s| mix64(fp ^ mix64(s as u64 ^ 0x5851_F42D_4C95_7F2D)))
+        .unwrap()
+}
+
+/// Projected completion latency (µs) of `k` more requests against a
+/// shard with `outstanding` queued requests: the number of fused
+/// rounds the queue needs at `max_batch`, times the observed EWMA
+/// round latency.  The Berkholz propagation-depth bound is what makes
+/// this well-posed: per-request propagation work — and so the round
+/// latency — is bounded, not heavy-tailed.
+pub(crate) fn admission_estimate_us(
+    outstanding: u64,
+    k: u64,
+    max_batch: usize,
+    ewma_round_us: u64,
+) -> u64 {
+    let rounds = (outstanding + k).div_ceil(max_batch.max(1) as u64);
+    rounds.saturating_mul(ewma_round_us)
+}
+
+/// Per-client fairness share of a shard queue on the batch path: an
+/// equal split of the projected depth across the clients currently in
+/// flight, floored at `max_batch` so solo clients keep full fused
+/// rounds.
+pub(crate) fn fairness_cap(outstanding: u64, k: u64, active_clients: u64, max_batch: usize) -> u64 {
+    (outstanding + k).div_ceil(active_clients.max(1)).max(max_batch as u64)
+}
+
+/// How a fleet spawns its per-session executors.
+#[derive(Clone)]
+enum Spawner {
+    /// Fault-free CPU-reference executors (offline; `rtac loadgen`'s
+    /// determinism oracle).
+    Reference,
+    /// Chaos reference executors: each session's fault plan is seeded
+    /// from this fleet seed mixed with the session fingerprint.
+    Chaos(u64),
+    /// Production sessions ([`Coordinator::start`]) over compiled
+    /// artifacts (`rtac serve --shards N`).
+    Artifacts(CoordinatorConfig),
+}
+
+/// The thing that keeps a session incarnation's executor alive — and
+/// the way to stop it once its handles are gone.
+enum Keeper {
+    Thread(JoinHandle<()>),
+    Session(Coordinator),
+}
+
+impl Keeper {
+    /// Stop the incarnation.  Thread keepers exit on their own once
+    /// every handle clone is dropped (the caller guarantees that);
+    /// production sessions shut down explicitly.
+    fn stop(self) {
+        match self {
+            Keeper::Thread(j) => {
+                let _ = j.join();
+            }
+            Keeper::Session(c) => c.shutdown(),
+        }
+    }
+}
+
+/// One shard: a placement home with a shared health flag, queue-depth
+/// accounting for admission, and the metrics ledgers of every session
+/// incarnation ever homed here (the per-shard conservation unit).
+struct ShardState {
+    health: ShardHealth,
+    /// Set once by the failover that evacuated this shard.
+    failed_over: AtomicBool,
+    /// Requests currently in flight against this shard (all sessions).
+    outstanding: AtomicU64,
+    /// In-flight count per fleet client key — the fairness ledger.
+    inflight: Mutex<HashMap<u64, u64>>,
+    /// EWMA of observed fused-round latency, µs (0 = no signal yet).
+    /// Racy read-modify-write by design: it is a latency *estimate*
+    /// feeding admission, not an exact counter.
+    ewma_round_us: AtomicU64,
+    /// Metrics of every incarnation ever homed here.  A snapshot of
+    /// this shard aggregates the whole list, so per-shard conservation
+    /// spans restarts and outbound failovers.
+    metrics: Mutex<Vec<Arc<Metrics>>>,
+}
+
+/// One placed session (one distinct constraint network): its current
+/// incarnation (shard + handle + keeper) plus the host-side state that
+/// survives incarnations — the base-plane mirror that re-hydrates the
+/// replacement on failover.
+struct SessionState {
+    fp: u64,
+    problem: Problem,
+    bucket: Bucket,
+    /// Bumped on every failover re-placement (observability only).
+    generation: AtomicU64,
+    inner: Mutex<SessionInner>,
+}
+
+struct SessionInner {
+    shard: usize,
+    handle: Handle,
+    keeper: Option<Keeper>,
+    /// fleet client key → the last base plane that client uploaded.
+    /// Replayed into the replacement incarnation on failover (the
+    /// fleet-level twin of the executor's own restart re-hydration).
+    mirror: HashMap<u64, Vec<f32>>,
+    /// fleet client key → this incarnation's session [`ClientId`].
+    idmap: HashMap<u64, ClientId>,
+}
+
+struct FleetInner {
+    policy: FleetPolicy,
+    spawner: Spawner,
+    shards: Vec<ShardState>,
+    sessions: Mutex<HashMap<u64, Arc<SessionState>>>,
+    /// Fleet-level ledger: rejections (which are counted requests —
+    /// see [`Metrics::on_rejected`]), failovers, replaced sessions,
+    /// replayed bases, and the shard count.
+    fleet_metrics: Arc<Metrics>,
+    /// Issues fleet-wide client keys (stable across failovers, unlike
+    /// per-incarnation [`ClientId`]s).
+    next_key: AtomicU64,
+    /// Serialises failovers so concurrent observers of one death
+    /// re-place each session exactly once.
+    failover_lock: Mutex<()>,
+    /// Keepers of replaced incarnations, joined at shutdown (their
+    /// executors drain and exit as soon as their last handle drops —
+    /// joining *during* failover would deadlock against in-flight
+    /// calls still holding old handle clones).
+    graveyard: Mutex<Vec<Keeper>>,
+}
+
+/// The scheduler tier: N supervised shards, fingerprint placement,
+/// admission control, failover.  Cheap to clone (shared state);
+/// clients come from [`Fleet::client`].
+#[derive(Clone)]
+pub struct Fleet {
+    inner: Arc<FleetInner>,
+}
+
+impl Fleet {
+    /// A fleet of fault-free CPU-reference executors — no compiled
+    /// artifacts needed.  The determinism oracle `rtac loadgen`
+    /// measures against.
+    pub fn reference(policy: FleetPolicy) -> Result<Fleet> {
+        Fleet::with_spawner(policy, Spawner::Reference)
+    }
+
+    /// A fleet of chaos reference executors: each session runs under a
+    /// deterministic fault plan seeded from `seed` and the session's
+    /// content fingerprint (crashes, hangs, failed streaks, base
+    /// wipes, and whole-shard kills).  Replacement incarnations
+    /// spawned by failover run fault-free — chaos keys initial
+    /// placements, so a seeded run terminates instead of cascading
+    /// kills across every survivor.
+    pub fn chaos(policy: FleetPolicy, seed: u64) -> Result<Fleet> {
+        Fleet::with_spawner(policy, Spawner::Chaos(seed))
+    }
+
+    /// A fleet of production sessions over compiled artifacts
+    /// (`rtac serve --shards N`): every placed session is a full
+    /// [`Coordinator`] stack with `config`'s artifacts and batching
+    /// policy (the fleet policy's session knobs override the
+    /// [`BatchPolicy`] ones so both tiers agree on deadlines).
+    pub fn with_artifacts(policy: FleetPolicy, config: CoordinatorConfig) -> Result<Fleet> {
+        let mut config = config;
+        config.policy.base_slots = policy.base_slots;
+        config.policy.request_timeout = policy.request_timeout;
+        config.policy.max_restarts = policy.max_restarts;
+        config.policy.max_batch = policy.max_batch;
+        Fleet::with_spawner(policy, Spawner::Artifacts(config))
+    }
+
+    fn with_spawner(policy: FleetPolicy, spawner: Spawner) -> Result<Fleet> {
+        if policy.shards == 0 {
+            bail!("a fleet needs at least one shard (got --shards 0)");
+        }
+        let shards = (0..policy.shards)
+            .map(|_| ShardState {
+                health: ShardHealth::new(),
+                failed_over: AtomicBool::new(false),
+                outstanding: AtomicU64::new(0),
+                inflight: Mutex::new(HashMap::new()),
+                ewma_round_us: AtomicU64::new(0),
+                metrics: Mutex::new(Vec::new()),
+            })
+            .collect();
+        let fleet_metrics = Arc::new(Metrics::new());
+        fleet_metrics.set_shards(policy.shards as u64);
+        Ok(Fleet {
+            inner: Arc::new(FleetInner {
+                policy,
+                spawner,
+                shards,
+                sessions: Mutex::new(HashMap::new()),
+                fleet_metrics,
+                next_key: AtomicU64::new(0),
+                failover_lock: Mutex::new(()),
+                graveyard: Mutex::new(Vec::new()),
+            }),
+        })
+    }
+
+    pub fn policy(&self) -> &FleetPolicy {
+        &self.inner.policy
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.inner.shards.len()
+    }
+
+    /// Shards whose health flag still reads live.
+    pub fn live_shards(&self) -> usize {
+        self.inner.shards.iter().filter(|s| !s.health.is_dead()).count()
+    }
+
+    /// Attach a client for `problem`: places (or joins) the session
+    /// keyed by the problem's content fingerprint.  Two callers with
+    /// identical constraint content share one session; differing
+    /// content gets disjoint sessions (and so disjoint base slots).
+    pub fn client(&self, problem: &Problem) -> Result<FleetClient> {
+        let fp = problem_fingerprint(problem);
+        let session = {
+            let mut map = self.inner.sessions.lock().unwrap();
+            match map.get(&fp) {
+                Some(s) => s.clone(),
+                None => {
+                    let alive = self.alive();
+                    if alive.is_empty() {
+                        bail!("fleet has no live shards left to place session {fp:016x} on");
+                    }
+                    let shard = rendezvous_shard(fp, &alive);
+                    let bucket = Bucket { n: problem.n_vars(), d: problem.max_dom_size() };
+                    let (handle, keeper) = self.spawn_incarnation(shard, problem, bucket, fp)?;
+                    let s = Arc::new(SessionState {
+                        fp,
+                        problem: problem.clone(),
+                        bucket,
+                        generation: AtomicU64::new(0),
+                        inner: Mutex::new(SessionInner {
+                            shard,
+                            handle,
+                            keeper: Some(keeper),
+                            mirror: HashMap::new(),
+                            idmap: HashMap::new(),
+                        }),
+                    });
+                    map.insert(fp, s.clone());
+                    s
+                }
+            }
+        };
+        let key = self.inner.next_key.fetch_add(1, Ordering::Relaxed);
+        Ok(FleetClient { fleet: self.clone(), session, key })
+    }
+
+    fn alive(&self) -> Vec<usize> {
+        self.inner
+            .shards
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| !s.health.is_dead())
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    /// Spawn one session incarnation on `shard` and register its
+    /// metrics ledger with that shard.
+    fn spawn_incarnation(
+        &self,
+        shard: usize,
+        problem: &Problem,
+        bucket: Bucket,
+        fp: u64,
+    ) -> Result<(Handle, Keeper)> {
+        let p = &self.inner.policy;
+        let (handle, keeper) = match &self.inner.spawner {
+            Spawner::Artifacts(config) => {
+                let coord = Coordinator::start(problem, config.clone())?;
+                (coord.handle(), Keeper::Session(coord))
+            }
+            Spawner::Reference | Spawner::Chaos(_) => {
+                let plan = match self.inner.spawner {
+                    Spawner::Chaos(seed) => FaultPlan::seeded_fleet(mix64(seed ^ fp)),
+                    _ => FaultPlan::default(),
+                };
+                let (handle, rx) =
+                    Handle::for_reference_executor(bucket, p.base_slots, p.request_timeout);
+                let join = chaos_reference_executor(
+                    problem.clone(),
+                    bucket,
+                    p.base_slots,
+                    p.request_timeout,
+                    p.max_restarts,
+                    plan,
+                    self.inner.shards[shard].health.clone(),
+                    rx,
+                    handle.metrics.clone(),
+                );
+                (handle, Keeper::Thread(join))
+            }
+        };
+        self.inner.shards[shard].metrics.lock().unwrap().push(handle.metrics.clone());
+        Ok((handle, keeper))
+    }
+
+    /// Force-kill `shard` (the load harness's deterministic failover
+    /// trigger) and evacuate its sessions.
+    pub fn kill_shard(&self, shard: usize) {
+        assert!(shard < self.inner.shards.len(), "no shard {shard}");
+        self.inner.shards[shard].health.mark_dead();
+        self.failover(shard);
+    }
+
+    /// A client observed an error against `shard`.  If the shard is
+    /// dead, evacuate it and tell the caller to retry on the new
+    /// placement.
+    fn recover_shard(&self, shard: usize) -> bool {
+        if !self.inner.shards[shard].health.is_dead() {
+            return false;
+        }
+        self.failover(shard);
+        true
+    }
+
+    /// Evacuate a dead shard: re-place every session homed on it by
+    /// rendezvous over the survivors and re-hydrate the replacement
+    /// from the host-side base mirror.  Idempotent — exactly one
+    /// caller does the work per shard death.
+    fn failover(&self, dead: usize) {
+        let _serial = self.inner.failover_lock.lock().unwrap();
+        let shard = &self.inner.shards[dead];
+        if shard.failed_over.swap(true, Ordering::SeqCst) {
+            return;
+        }
+        self.inner.fleet_metrics.on_failover();
+        let alive = self.alive();
+        let sessions: Vec<Arc<SessionState>> =
+            self.inner.sessions.lock().unwrap().values().cloned().collect();
+        for session in sessions {
+            let mut s = session.inner.lock().unwrap();
+            if s.shard != dead {
+                continue;
+            }
+            if alive.is_empty() {
+                eprintln!(
+                    "fleet: shard {dead} died with no survivors — session \
+                     {:016x} stays down (its requests drop counted)",
+                    session.fp
+                );
+                continue;
+            }
+            let target = rendezvous_shard(session.fp, &alive);
+            let (handle, keeper) =
+                match self.spawn_incarnation(target, &session.problem, session.bucket, session.fp)
+                {
+                    Ok(v) => v,
+                    Err(e) => {
+                        eprintln!(
+                            "fleet: could not respawn session {:016x} on shard {target}: {e:#}",
+                            session.fp
+                        );
+                        continue;
+                    }
+                };
+            // re-hydrate: replay every mirrored base under a fresh
+            // client id on the replacement incarnation
+            let mut idmap = HashMap::new();
+            for (&key, plane) in &s.mirror {
+                let id = handle.attach();
+                match handle.upload_base(id, plane.clone()) {
+                    Ok(_) => self.inner.fleet_metrics.on_base_replayed(),
+                    Err(e) => eprintln!("fleet: base replay failed: {e:#}"),
+                }
+                idmap.insert(key, id);
+            }
+            let old_keeper = s.keeper.take();
+            s.keeper = Some(keeper);
+            s.handle = handle;
+            s.idmap = idmap;
+            s.shard = target;
+            drop(s);
+            if let Some(k) = old_keeper {
+                self.inner.graveyard.lock().unwrap().push(k);
+            }
+            session.generation.fetch_add(1, Ordering::SeqCst);
+            self.inner.fleet_metrics.on_session_replaced();
+            eprintln!(
+                "fleet: session {:016x} failed over shard {dead} → shard {target}",
+                session.fp
+            );
+        }
+    }
+
+    /// Admission check for `k` requests from client `key` against
+    /// `shard`; `fair` additionally enforces the batch-path fairness
+    /// share.  A rejection is counted (`rejected_requests` — which
+    /// self-conserves, see [`Metrics::on_rejected`]) and returned as a
+    /// named error.
+    fn admit(&self, shard: &ShardState, key: u64, k: u64, fair: bool) -> Result<()> {
+        let p = &self.inner.policy;
+        if let Some(budget) = p.latency_budget {
+            let ewma = shard.ewma_round_us.load(Ordering::Relaxed);
+            if ewma > 0 {
+                let depth = shard.outstanding.load(Ordering::Relaxed);
+                let est = admission_estimate_us(depth, k, p.max_batch, ewma);
+                if est > budget.as_micros().min(u128::from(u64::MAX)) as u64 {
+                    for _ in 0..k {
+                        self.inner.fleet_metrics.on_rejected();
+                    }
+                    bail!(
+                        "{ADMISSION_REJECTED}: projected completion in {est}µs \
+                         (queue depth {depth} + {k}, ewma round {ewma}µs) exceeds \
+                         the {budget:?} latency budget — degrade to the CPU path"
+                    );
+                }
+            }
+        }
+        if fair {
+            let inflight = shard.inflight.lock().unwrap();
+            let active = inflight.len() as u64 + u64::from(!inflight.contains_key(&key));
+            let own = inflight.get(&key).copied().unwrap_or(0);
+            let cap =
+                fairness_cap(shard.outstanding.load(Ordering::Relaxed), k, active, p.max_batch);
+            if own + k > cap {
+                drop(inflight);
+                for _ in 0..k {
+                    self.inner.fleet_metrics.on_rejected();
+                }
+                bail!(
+                    "{ADMISSION_REJECTED}: client holds {own} request(s) in flight and \
+                     asked for {k} more, over its fair share of {cap} across {active} \
+                     active client(s) on the shard"
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// Per-shard ledgers: each shard's snapshot aggregates every
+    /// session incarnation ever homed on it, so `requests == responses
+    /// + dropped_requests` holds per shard across restarts and
+    /// outbound failovers (at quiescence).
+    pub fn shard_snapshots(&self) -> Vec<MetricsSnapshot> {
+        self.inner
+            .shards
+            .iter()
+            .map(|s| {
+                let parts: Vec<MetricsSnapshot> =
+                    s.metrics.lock().unwrap().iter().map(|m| m.snapshot()).collect();
+                MetricsSnapshot::aggregate(&parts)
+            })
+            .collect()
+    }
+
+    /// The fleet-aggregate ledger: every incarnation on every shard
+    /// plus the fleet-level counters (rejections, failovers, replaced
+    /// sessions, the shard count).  `shard_conserved` on the result
+    /// demands conservation of every merged part individually.
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let mut parts: Vec<MetricsSnapshot> = Vec::new();
+        for s in &self.inner.shards {
+            parts.extend(s.metrics.lock().unwrap().iter().map(|m| m.snapshot()));
+        }
+        parts.push(self.inner.fleet_metrics.snapshot());
+        MetricsSnapshot::aggregate(&parts)
+    }
+
+    /// Shut the fleet down: disconnect every session's executor and
+    /// join every incarnation (current and replaced).  Call after all
+    /// in-flight calls have returned; clients attached to this fleet
+    /// fail cleanly afterwards.  Executors drain their queues before
+    /// exiting, so a post-shutdown [`Fleet::snapshot`] is quiescent —
+    /// the state the conservation asserts run against.
+    pub fn shutdown(&self) {
+        let sessions: Vec<Arc<SessionState>> = {
+            let mut map = self.inner.sessions.lock().unwrap();
+            map.drain().map(|(_, s)| s).collect()
+        };
+        let mut keepers: Vec<Keeper> = self.inner.graveyard.lock().unwrap().drain(..).collect();
+        for session in &sessions {
+            let mut s = session.inner.lock().unwrap();
+            // swap in a dead handle: the executor's channel disconnects
+            // (it drains, counts, and exits), and late client calls get
+            // a clean "shut down" error instead of a hang
+            let (dead, _) = Handle::for_reference_executor(
+                session.bucket,
+                0,
+                Duration::from_millis(1),
+            );
+            let old = std::mem::replace(&mut s.handle, dead);
+            drop(old);
+            if let Some(k) = s.keeper.take() {
+                keepers.push(k);
+            }
+        }
+        drop(sessions);
+        for k in keepers {
+            k.stop();
+        }
+    }
+}
+
+/// In-flight accounting guard: holds `k` slots of a shard's queue
+/// depth (and the owning client's fairness share) for the duration of
+/// one blocking call.
+struct InflightGuard<'a> {
+    shard: &'a ShardState,
+    key: u64,
+    k: u64,
+}
+
+impl<'a> InflightGuard<'a> {
+    fn enter(shard: &'a ShardState, key: u64, k: u64) -> InflightGuard<'a> {
+        shard.outstanding.fetch_add(k, Ordering::Relaxed);
+        *shard.inflight.lock().unwrap().entry(key).or_insert(0) += k;
+        InflightGuard { shard, key, k }
+    }
+}
+
+impl Drop for InflightGuard<'_> {
+    fn drop(&mut self) {
+        self.shard.outstanding.fetch_sub(self.k, Ordering::Relaxed);
+        let mut m = self.shard.inflight.lock().unwrap();
+        if let Some(v) = m.get_mut(&self.key) {
+            *v = v.saturating_sub(self.k);
+            if *v == 0 {
+                m.remove(&self.key);
+            }
+        }
+    }
+}
+
+/// A fleet client: one logical delta writer bound to the session its
+/// constraint network placed on.  The fleet key is stable across
+/// failovers (per-incarnation [`ClientId`]s are re-minted by the
+/// replay), and the client transparently retries ONCE through a
+/// failover — the failed attempt is a counted drop on the dying
+/// shard, the retry a fresh request on the survivor, so conservation
+/// holds on both ledgers.
+pub struct FleetClient {
+    fleet: Fleet,
+    session: Arc<SessionState>,
+    key: u64,
+}
+
+impl FleetClient {
+    /// The placed session's content fingerprint.
+    pub fn fingerprint(&self) -> u64 {
+        self.session.fp
+    }
+
+    /// The shard currently hosting this client's session.
+    pub fn shard(&self) -> usize {
+        self.session.inner.lock().unwrap().shard
+    }
+
+    /// The session's failover generation (0 until the first failover).
+    pub fn generation(&self) -> u64 {
+        self.session.generation.load(Ordering::SeqCst)
+    }
+
+    /// The raw protocol [`Handle`] of the session's current
+    /// incarnation — the bridge for Handle-based stacks (the MAC
+    /// solver workers behind `rtac serve --shards N`).  Raw-handle
+    /// traffic speaks the session protocol directly, so it is **not**
+    /// admission-checked (that guard lives on the [`FleetClient`]
+    /// enforcement paths), and the clone does not follow a failover
+    /// re-placement — take it again to pick up the replacement
+    /// incarnation.
+    pub fn session_handle(&self) -> Handle {
+        self.session.inner.lock().unwrap().handle.clone()
+    }
+
+    /// Do two clients share one placed session (identical constraint
+    /// content)?
+    pub fn shares_session(&self, other: &FleetClient) -> bool {
+        Arc::ptr_eq(&self.session, &other.session)
+    }
+
+    /// The session's plane bucket (shapes for
+    /// [`crate::runtime::encode_vars`] / [`PlaneDelta::diff`]).
+    pub fn bucket(&self) -> Bucket {
+        self.session.bucket
+    }
+
+    /// Current incarnation route: handle, this client's session id
+    /// there, and the hosting shard.
+    fn route(&self) -> (Handle, ClientId, usize) {
+        let mut s = self.session.inner.lock().unwrap();
+        let client = match s.idmap.get(&self.key) {
+            Some(&id) => id,
+            None => {
+                let id = s.handle.attach();
+                s.idmap.insert(self.key, id);
+                id
+            }
+        };
+        (s.handle.clone(), client, s.shard)
+    }
+
+    /// Upload (or replace) this client's delta base.  Mirrored
+    /// host-side for failover re-hydration.  Not admission-checked:
+    /// bases are the recovery path — rejecting them would wedge
+    /// clients that only need to re-sync.
+    pub fn upload_base(&self, plane: Vec<f32>) -> Result<u64> {
+        for attempt in 0..2 {
+            let (handle, client, shard) = self.route();
+            match handle.upload_base(client, plane.clone()) {
+                Ok(fp) => {
+                    self.session.inner.lock().unwrap().mirror.insert(self.key, plane);
+                    return Ok(fp);
+                }
+                Err(e) => {
+                    if attempt == 0 && self.fleet.recover_shard(shard) {
+                        continue;
+                    }
+                    return Err(e);
+                }
+            }
+        }
+        unreachable!("the second attempt returned")
+    }
+
+    /// One admitted blocking call of weight `k` against the current
+    /// incarnation, with the single transparent failover retry.
+    fn call<T>(
+        &self,
+        k: u64,
+        fair: bool,
+        mut op: impl FnMut(&Handle, ClientId) -> Result<T>,
+    ) -> Result<T> {
+        for attempt in 0..2 {
+            let (handle, client, shard_id) = self.route();
+            let shard = &self.fleet.inner.shards[shard_id];
+            self.fleet.admit(shard, self.key, k, fair)?;
+            let _guard = InflightGuard::enter(shard, self.key, k);
+            let t0 = Instant::now();
+            match op(&handle, client) {
+                Ok(v) => {
+                    observe_round(shard, t0.elapsed());
+                    return Ok(v);
+                }
+                Err(e) => {
+                    if attempt == 0 && self.fleet.recover_shard(shard_id) {
+                        continue;
+                    }
+                    return Err(e);
+                }
+            }
+        }
+        unreachable!("the second attempt returned")
+    }
+
+    /// Enforce one chained delta ([`Handle::submit_delta`] semantics:
+    /// the slot advances).  On success the host-side mirror advances
+    /// in lockstep, so a later failover replays the plane the executor
+    /// slot actually held.
+    pub fn enforce_delta(&self, delta: PlaneDelta) -> Result<Response> {
+        let resp = self.call(1, false, |h, c| h.enforce_delta_blocking(c, delta.clone()))?;
+        let mut s = self.session.inner.lock().unwrap();
+        if let Some(base) = s.mirror.get(&self.key) {
+            let mut next = Vec::new();
+            // a fingerprint mismatch means the mirror lost sync with
+            // the slot (a failover raced the call) — leave it; the
+            // client's next stale round re-uploads and re-syncs both
+            if delta.apply_into(base, self.session.bucket, &mut next).is_ok() {
+                s.mirror.insert(self.key, next);
+            }
+        }
+        Ok(resp)
+    }
+
+    /// Enforce a probe round of deltas against this client's base
+    /// (slot unchanged) — the SAC probe path, admission-checked AND
+    /// fairness-capped: the round's weight is its probe count.
+    pub fn enforce_batch_delta(&self, deltas: Vec<PlaneDelta>) -> Result<Vec<Response>> {
+        let k = deltas.len() as u64;
+        if k == 0 {
+            return Ok(Vec::new());
+        }
+        self.call(k, true, |h, c| h.enforce_batch_delta_blocking(c, deltas.clone()))
+    }
+
+    /// Enforce one full plane (no delta base involved).
+    pub fn enforce_full(&self, plane: Vec<f32>) -> Result<Response> {
+        self.call(1, false, |h, _| h.enforce_blocking(plane.clone()))
+    }
+}
+
+/// Fold one observed round latency into the shard's EWMA (3:1 old:new).
+fn observe_round(shard: &ShardState, elapsed: Duration) {
+    let sample = (elapsed.as_micros().min(u128::from(u64::MAX)) as u64).max(1);
+    let old = shard.ewma_round_us.load(Ordering::Relaxed);
+    let new = if old == 0 { sample } else { (old * 3 + sample) / 4 };
+    shard.ewma_round_us.store(new, Ordering::Relaxed);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench::load::{run_load, LoadSpec};
+    use crate::coordinator::chaos::dump_chaos_snapshot;
+    use crate::core::State;
+    use crate::gen::random::{random_csp, RandomSpec};
+    use crate::runtime::encode_vars;
+    use crate::util::quickcheck::forall;
+
+    fn small_problem(seed: u64) -> Problem {
+        random_csp(&RandomSpec::new(6, 4, 0.7, 0.4, seed))
+    }
+
+    fn quick_policy(shards: usize) -> FleetPolicy {
+        FleetPolicy {
+            shards,
+            request_timeout: Duration::from_secs(5),
+            max_restarts: 2,
+            max_batch: 4,
+            ..FleetPolicy::default()
+        }
+    }
+
+    fn initial_plane(p: &Problem, bucket: Bucket) -> Vec<f32> {
+        encode_vars(p, &State::new(p), bucket).unwrap()
+    }
+
+    // ---- placement properties ----
+
+    #[test]
+    fn placement_is_deterministic_and_rendezvous_stable() {
+        forall("fleet-placement", 0xF1EE7, 256, |rng| {
+            let n = 2 + rng.gen_range(8);
+            let fp = rng.next_u64();
+            let alive: Vec<usize> = (0..n).collect();
+            let s = rendezvous_shard(fp, &alive);
+            if s >= n {
+                return Err(format!("placed {fp:016x} on shard {s} of {n}"));
+            }
+            if rendezvous_shard(fp, &alive) != s {
+                return Err("placement is not deterministic".into());
+            }
+            // membership change: removing any OTHER shard never moves
+            // this key; removing its own home moves it to a survivor
+            let dead = rng.gen_range(n);
+            let survivors: Vec<usize> = (0..n).filter(|&i| i != dead).collect();
+            let re = rendezvous_shard(fp, &survivors);
+            if dead != s && re != s {
+                return Err(format!("removing shard {dead} moved {fp:016x} from {s} to {re}"));
+            }
+            if dead == s && re == dead {
+                return Err("re-placed a key onto the removed shard".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn same_network_places_on_the_same_shard_across_fleet_restarts() {
+        let problems: Vec<Problem> = (1..=6).map(small_problem).collect();
+        let first = Fleet::reference(quick_policy(4)).unwrap();
+        let second = Fleet::reference(quick_policy(4)).unwrap();
+        for p in &problems {
+            let a = first.client(p).unwrap();
+            let b = second.client(p).unwrap();
+            assert_eq!(a.shard(), b.shard(), "restart moved {:016x}", a.fingerprint());
+            assert_eq!(a.fingerprint(), b.fingerprint());
+        }
+        first.shutdown();
+        second.shutdown();
+    }
+
+    #[test]
+    fn identical_content_shares_a_session_and_differing_content_never_cross_invalidates() {
+        let fleet = Fleet::reference(quick_policy(3)).unwrap();
+        let p1 = small_problem(21);
+        let p1_again = small_problem(21); // separately constructed, identical content
+        let p2 = small_problem(22);
+        let a = fleet.client(&p1).unwrap();
+        let b = fleet.client(&p1_again).unwrap();
+        let c = fleet.client(&p2).unwrap();
+        assert!(a.shares_session(&b), "identical constraint content must share a session");
+        assert!(!a.shares_session(&c), "distinct content must not share a session");
+        assert_ne!(a.fingerprint(), c.fingerprint());
+        // interleave delta traffic from all three clients: nobody may
+        // invalidate anybody else's slot (zero stale drops)
+        let base1 = initial_plane(&p1, a.bucket());
+        let base2 = initial_plane(&p2, c.bucket());
+        let fp1 = a.upload_base(base1.clone()).unwrap();
+        let fp1b = b.upload_base(base1.clone()).unwrap();
+        let fp2 = c.upload_base(base2.clone()).unwrap();
+        assert_eq!(fp1, fp1b, "same plane, same content fingerprint");
+        for round in 0..4usize {
+            let var = round % 4;
+            let d1 = PlaneDelta::singleton(fp1, var, 0, a.bucket());
+            let d2 = PlaneDelta::singleton(fp2, var, 0, c.bucket());
+            a.enforce_batch_delta(vec![d1.clone()]).unwrap();
+            c.enforce_batch_delta(vec![d2]).unwrap();
+            b.enforce_batch_delta(vec![d1]).unwrap();
+        }
+        let agg = fleet.snapshot();
+        assert_eq!(agg.stale_deltas, 0, "cross-invalidation: {agg:?}");
+        assert!(agg.conserved() && agg.shard_conserved, "{agg:?}");
+        fleet.shutdown();
+    }
+
+    // ---- admission control ----
+
+    #[test]
+    fn admission_estimate_grows_with_depth_and_fairness_splits_evenly() {
+        // 0 outstanding + 1 request at ewma 100µs = one round
+        assert_eq!(admission_estimate_us(0, 1, 4, 100), 100);
+        // 7 outstanding + 1 = 2 rounds of 4
+        assert_eq!(admission_estimate_us(7, 1, 4, 100), 200);
+        // deeper queue, more rounds
+        assert_eq!(admission_estimate_us(15, 1, 4, 100), 400);
+        // batch ceiling 1: every request is its own round
+        assert_eq!(admission_estimate_us(2, 1, 1, 50), 150);
+        // saturation, not overflow
+        assert_eq!(admission_estimate_us(u64::MAX - 1, 1, 1, u64::MAX), u64::MAX);
+        // fairness: 2 clients on a 10-deep queue split 5 each, floored
+        // at max_batch
+        assert_eq!(fairness_cap(8, 2, 2, 4), 5);
+        assert_eq!(fairness_cap(0, 1, 1, 4), 4, "solo clients keep full rounds");
+        assert_eq!(fairness_cap(100, 4, 4, 4), 26);
+    }
+
+    #[test]
+    fn budget_exceeded_requests_are_rejected_and_counted_not_silently_dropped() {
+        let policy = FleetPolicy {
+            latency_budget: Some(Duration::ZERO), // any projection blows it
+            ..quick_policy(1)
+        };
+        let fleet = Fleet::reference(policy).unwrap();
+        let p = small_problem(31);
+        let client = fleet.client(&p).unwrap();
+        let plane = initial_plane(&p, client.bucket());
+        // no latency signal yet: the first request is admitted and
+        // seeds the EWMA
+        client.enforce_full(plane.clone()).expect("first request admitted");
+        // now every projection exceeds the zero budget
+        let e = client.enforce_full(plane.clone()).unwrap_err();
+        assert!(is_admission_rejected(&e), "named rejection, got: {e:#}");
+        let e2 = client
+            .enforce_batch_delta(vec![PlaneDelta::singleton(
+                crate::runtime::plane_fingerprint(&plane),
+                0,
+                0,
+                client.bucket(),
+            )])
+            .unwrap_err();
+        assert!(is_admission_rejected(&e2), "{e2:#}");
+        fleet.shutdown();
+        let agg = fleet.snapshot();
+        assert_eq!(agg.rejected_requests, 2);
+        assert_eq!(agg.requests, 3, "rejections are counted requests");
+        assert_eq!(agg.responses, 1);
+        assert!(agg.conserved() && agg.shard_conserved, "rejected-and-counted: {agg:?}");
+        assert_eq!(agg.failovers, 0, "a rejection is not a death");
+    }
+
+    #[test]
+    fn generous_budget_admits_everything() {
+        let policy = FleetPolicy {
+            latency_budget: Some(Duration::from_secs(60)),
+            ..quick_policy(2)
+        };
+        let fleet = Fleet::reference(policy).unwrap();
+        let p = small_problem(32);
+        let client = fleet.client(&p).unwrap();
+        let plane = initial_plane(&p, client.bucket());
+        let fp = client.upload_base(plane.clone()).unwrap();
+        for _ in 0..6 {
+            client.enforce_full(plane.clone()).unwrap();
+            client
+                .enforce_batch_delta(vec![PlaneDelta::singleton(fp, 0, 0, client.bucket())])
+                .unwrap();
+        }
+        fleet.shutdown();
+        let agg = fleet.snapshot();
+        assert_eq!(agg.rejected_requests, 0, "{agg:?}");
+        assert!(agg.conserved() && agg.shard_conserved);
+    }
+
+    // ---- failover ----
+
+    #[test]
+    fn forced_kill_re_places_only_the_dead_shards_sessions_and_replays_bases() {
+        let fleet = Fleet::reference(quick_policy(3)).unwrap();
+        let problems: Vec<Problem> = (41..=46).map(small_problem).collect();
+        let clients: Vec<FleetClient> =
+            problems.iter().map(|p| fleet.client(p).unwrap()).collect();
+        let planes: Vec<Vec<f32>> =
+            problems.iter().zip(&clients).map(|(p, c)| initial_plane(p, c.bucket())).collect();
+        for (c, plane) in clients.iter().zip(&planes) {
+            c.upload_base(plane.clone()).unwrap();
+            c.enforce_full(plane.clone()).unwrap();
+        }
+        let before: Vec<usize> = clients.iter().map(|c| c.shard()).collect();
+        let victim = before[0];
+        let expected_moves = before.iter().filter(|&&s| s == victim).count() as u64;
+        fleet.kill_shard(victim);
+        let after: Vec<usize> = clients.iter().map(|c| c.shard()).collect();
+        for (i, (&b, &a)) in before.iter().zip(&after).enumerate() {
+            if b == victim {
+                assert_ne!(a, victim, "session {i} must leave the dead shard");
+                assert_eq!(clients[i].generation(), 1);
+            } else {
+                assert_eq!(a, b, "survivor session {i} must not move");
+                assert_eq!(clients[i].generation(), 0);
+            }
+        }
+        // the re-placed clients keep working — their bases were
+        // replayed, so a delta against the pre-kill fingerprint holds
+        for (i, (c, plane)) in clients.iter().zip(&planes).enumerate() {
+            let fp = crate::runtime::plane_fingerprint(plane);
+            let out = c
+                .enforce_batch_delta(vec![PlaneDelta::singleton(fp, 0, 0, c.bucket())])
+                .unwrap_or_else(|e| panic!("client {i} after failover: {e:#}"));
+            assert_eq!(out.len(), 1);
+        }
+        fleet.shutdown();
+        let agg = fleet.snapshot();
+        assert_eq!(agg.failovers, 1);
+        assert_eq!(agg.replaced_sessions, expected_moves);
+        assert!(agg.replayed_bases >= expected_moves, "one mirrored base per moved client");
+        assert_eq!(agg.stale_deltas, 0, "replayed bases must not go stale: {agg:?}");
+        assert!(agg.conserved() && agg.shard_conserved, "{agg:?}");
+        assert_eq!(fleet.live_shards(), 2);
+    }
+
+    // ---- the seeded fleet chaos battery (the CI `chaos` job runs this
+    // by name; snapshots dump per seed AND per shard when
+    // RTAC_CHAOS_SNAPSHOT_DIR is set) ----
+
+    #[test]
+    fn fleet_chaos_plans_conserve_per_shard_and_reach_native_fixpoints() {
+        for seed in 1..=8u64 {
+            let spec = LoadSpec {
+                shards: 3,
+                clients: 6,
+                rounds: 6,
+                seed,
+                latency_budget: None,
+                chaos: true,
+            };
+            let report = run_load(&spec).unwrap_or_else(|e| panic!("seed {seed}: {e:#}"));
+            assert_eq!(
+                report.mismatches, 0,
+                "seed {seed}: every response must be bit-identical to the native fixpoint"
+            );
+            assert!(
+                report.aggregate.failovers >= 1,
+                "seed {seed}: the forced kill must register a failover: {:?}",
+                report.aggregate
+            );
+            assert!(
+                report.aggregate.conserved() && report.aggregate.shard_conserved,
+                "seed {seed}: fleet-aggregate conservation: {:?}",
+                report.aggregate
+            );
+            for (i, shard) in report.shards.iter().enumerate() {
+                assert!(
+                    shard.conserved(),
+                    "seed {seed} shard {i}: requests {} != responses {} + dropped {}",
+                    shard.requests,
+                    shard.responses,
+                    shard.dropped_requests
+                );
+            }
+            let ledger_requests: u64 = report.ledger.iter().map(|c| c.requests).sum();
+            assert!(ledger_requests > 0, "seed {seed}: the workload must have run");
+            dump_chaos_snapshot(&format!("fleet_seed_{seed}"), &report.aggregate);
+            for (i, shard) in report.shards.iter().enumerate() {
+                dump_chaos_snapshot(&format!("fleet_seed_{seed}_shard_{i}"), shard);
+            }
+        }
+    }
+
+    #[test]
+    fn a_fleet_of_zero_shards_is_rejected() {
+        let e = Fleet::reference(FleetPolicy { shards: 0, ..FleetPolicy::default() })
+            .err()
+            .expect("zero shards must fail");
+        assert!(format!("{e:#}").contains("at least one shard"));
+    }
+}

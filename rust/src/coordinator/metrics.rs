@@ -56,6 +56,10 @@ struct Inner {
     batch_occupancy_sum: u64, // lint:allow(metrics-ledger): surfaced as mean_batch_occupancy
     padded_slots: u64,
     wipeouts: u64,
+    rejected_requests: u64,
+    failovers: u64,
+    replaced_sessions: u64,
+    shards: u64,
     queue_us: Online,
     exec_us: Online,
     total_us: Online,
@@ -199,6 +203,30 @@ pub struct MetricsSnapshot {
     pub mean_batch_occupancy: f64,
     pub padded_slots: u64,
     pub wipeouts: u64,
+    /// Requests rejected by fleet admission control before reaching any
+    /// shard queue (the projected latency would have blown the
+    /// `--latency-budget`, or the client exceeded its fairness share on
+    /// the batch path).  Every rejection is counted here AND in
+    /// `requests`/`dropped_requests`, so the fleet ledger conserves —
+    /// nothing is silently shed.  Zero for single-session ledgers.
+    pub rejected_requests: u64,
+    /// Shard failovers performed by the fleet tier: a shard died (a
+    /// chaos kill, or restart-budget exhaustion turned it moribund) and
+    /// its sessions were re-placed onto survivors.
+    pub failovers: u64,
+    /// Sessions re-placed (and re-hydrated via base replay) onto a
+    /// surviving shard across all failovers.
+    pub replaced_sessions: u64,
+    /// Shard count of the fleet this ledger describes (0 for plain
+    /// single-session ledgers; on an aggregate snapshot, the fleet's
+    /// `--shards`).
+    pub shards: u64,
+    /// Per-shard conservation: for a single-shard snapshot, this shard's
+    /// `requests == responses + dropped_requests`; for a fleet aggregate
+    /// ([`MetricsSnapshot::aggregate`]), true only when EVERY merged
+    /// part conserved individually — strictly stronger than
+    /// [`MetricsSnapshot::conserved`] on the summed counters.
+    pub shard_conserved: bool,
     pub mean_queue_us: f64,
     pub mean_exec_us: f64,
     pub mean_total_us: f64,
@@ -300,6 +328,35 @@ impl Metrics {
         self.inner.lock().unwrap().executor_restarts += 1;
     }
 
+    /// Record one request rejected by fleet admission control (latency
+    /// budget or fairness share).  The request never reached a shard
+    /// queue, so this ledger is the only place it can be accounted: it
+    /// counts as a request AND a drop here, keeping `requests ==
+    /// responses + dropped_requests` exact for the fleet ledger.
+    pub fn on_rejected(&self) {
+        let mut m = self.inner.lock().unwrap();
+        m.requests += 1;
+        m.dropped_requests += 1;
+        m.rejected_requests += 1;
+    }
+
+    /// Record one shard failover (the fleet re-placed a dead shard's
+    /// sessions onto survivors).
+    pub fn on_failover(&self) {
+        self.inner.lock().unwrap().failovers += 1;
+    }
+
+    /// Record one session re-placed onto a surviving shard during a
+    /// failover (its bases replay through [`Metrics::on_base_replayed`]).
+    pub fn on_session_replaced(&self) {
+        self.inner.lock().unwrap().replaced_sessions += 1;
+    }
+
+    /// Record the shard count of the fleet this ledger describes.
+    pub fn set_shards(&self, shards: u64) {
+        self.inner.lock().unwrap().shards = shards;
+    }
+
     /// Record one base slot replayed through a restart's re-hydration.
     pub fn on_base_replayed(&self) {
         self.inner.lock().unwrap().replayed_bases += 1;
@@ -387,6 +444,11 @@ impl Metrics {
             },
             padded_slots: m.padded_slots,
             wipeouts: m.wipeouts,
+            rejected_requests: m.rejected_requests,
+            failovers: m.failovers,
+            replaced_sessions: m.replaced_sessions,
+            shards: m.shards,
+            shard_conserved: m.requests == m.responses + m.dropped_requests,
             mean_queue_us: m.queue_us.mean(),
             mean_exec_us: m.exec_us.mean(),
             mean_total_us: m.total_us.mean(),
@@ -400,9 +462,9 @@ impl Metrics {
 impl MetricsSnapshot {
     /// One-line human summary (served by `rtac serve` and the examples).
     pub fn summary(&self) -> String {
-        format!(
+        let mut s = format!(
             "req={} (delta={}) resp={} batches={} failed={} dropped={} stale_deltas={} \
-             timed_out={} restart_dropped={} restarts={} replayed_bases={} \
+             timed_out={} restart_dropped={} rejected={} restarts={} replayed_bases={} \
              shipped={}f32 bases={} evicted={} occ={:.2} padded={} \
              wipeouts={} queue={:.0}µs exec={:.0}µs total={:.0}µs iters={:.2}",
             self.requests,
@@ -414,6 +476,7 @@ impl MetricsSnapshot {
             self.stale_deltas,
             self.timed_out_requests,
             self.restart_dropped_requests,
+            self.rejected_requests,
             self.executor_restarts,
             self.replayed_bases,
             self.shipped_f32,
@@ -426,7 +489,14 @@ impl MetricsSnapshot {
             self.mean_exec_us,
             self.mean_total_us,
             self.mean_iters,
-        )
+        );
+        if self.shards > 0 {
+            s.push_str(&format!(
+                " shards={} shard_conserved={} failovers={} replaced_sessions={}",
+                self.shards, self.shard_conserved, self.failovers, self.replaced_sessions,
+            ));
+        }
+        s
     }
 
     /// Conservation invariant at quiescence: every request that reached
@@ -455,6 +525,81 @@ impl MetricsSnapshot {
     /// client ever touched the delta path.
     pub fn client(&self, client: u64) -> Option<&ClientMetrics> {
         self.clients.iter().find(|c| c.client == client)
+    }
+
+    /// Merge per-shard (or per-incarnation) snapshots into one fleet
+    /// ledger: counters sum, latency/iteration means are weighted by
+    /// the count they were computed over (`responses` for the
+    /// request-path means, `batches` for occupancy and exec time),
+    /// `max_total_us` is the max over parts, and `shard_conserved`
+    /// holds only when every merged part conserved individually.
+    ///
+    /// Client rows merge by [`ClientMetrics::client`].  Ids are minted
+    /// per session, so rows from *different* sessions can collide on an
+    /// id; the merged rows are a best-effort roll-up (the fleet load
+    /// harness keeps its authoritative per-client ledger client-side).
+    pub fn aggregate(parts: &[MetricsSnapshot]) -> MetricsSnapshot {
+        fn weighted(
+            parts: &[MetricsSnapshot],
+            value: impl Fn(&MetricsSnapshot) -> f64,
+            weight: impl Fn(&MetricsSnapshot) -> u64,
+        ) -> f64 {
+            let total: u64 = parts.iter().map(&weight).sum();
+            if total == 0 {
+                return 0.0;
+            }
+            parts.iter().map(|p| value(p) * weight(p) as f64).sum::<f64>() / total as f64
+        }
+        let mut out = Metrics::new().snapshot();
+        for p in parts {
+            out.requests += p.requests;
+            out.delta_requests += p.delta_requests;
+            out.responses += p.responses;
+            out.batches += p.batches;
+            out.failed_batches += p.failed_batches;
+            out.dropped_requests += p.dropped_requests;
+            out.stale_deltas += p.stale_deltas;
+            out.timed_out_requests += p.timed_out_requests;
+            out.restart_dropped_requests += p.restart_dropped_requests;
+            out.executor_restarts += p.executor_restarts;
+            out.replayed_bases += p.replayed_bases;
+            out.shipped_f32 += p.shipped_f32;
+            out.base_uploads += p.base_uploads;
+            out.base_evictions += p.base_evictions;
+            out.padded_slots += p.padded_slots;
+            out.wipeouts += p.wipeouts;
+            out.rejected_requests += p.rejected_requests;
+            out.failovers += p.failovers;
+            out.replaced_sessions += p.replaced_sessions;
+            out.shards += p.shards;
+        }
+        out.shard_conserved = parts.iter().all(|p| p.shard_conserved);
+        out.mean_batch_occupancy = weighted(parts, |p| p.mean_batch_occupancy, |p| p.batches);
+        out.mean_exec_us = weighted(parts, |p| p.mean_exec_us, |p| p.batches);
+        out.mean_queue_us = weighted(parts, |p| p.mean_queue_us, |p| p.responses);
+        out.mean_total_us = weighted(parts, |p| p.mean_total_us, |p| p.responses);
+        out.mean_iters = weighted(parts, |p| p.mean_iters, |p| p.responses);
+        out.max_total_us = parts.iter().map(|p| p.max_total_us).fold(0.0, f64::max);
+        let mut by_id: HashMap<u64, ClientMetrics> = HashMap::new();
+        for p in parts {
+            for c in &p.clients {
+                let row = by_id
+                    .entry(c.client)
+                    .or_insert_with(|| ClientMetrics { client: c.client, ..Default::default() });
+                row.requests += c.requests;
+                row.delta_requests += c.delta_requests;
+                row.responses += c.responses;
+                row.dropped_requests += c.dropped_requests;
+                row.stale_deltas += c.stale_deltas;
+                row.timed_out_requests += c.timed_out_requests;
+                row.restart_dropped_requests += c.restart_dropped_requests;
+                row.shipped_f32 += c.shipped_f32;
+                row.base_uploads += c.base_uploads;
+            }
+        }
+        out.clients = by_id.into_values().collect();
+        out.clients.sort_by_key(|c| c.client);
+        out
     }
 }
 
@@ -621,6 +766,104 @@ mod tests {
         let s = m.snapshot();
         assert_eq!(s.base_evictions, 2);
         assert!(s.summary().contains("evicted=2"));
+    }
+
+    #[test]
+    fn rejections_are_counted_drops_and_conserve() {
+        let m = Metrics::new();
+        m.set_shards(3);
+        m.on_submit(None, 8, false);
+        m.on_batch(1, 1, Duration::from_micros(10));
+        m.on_response(None, Duration::ZERO, Duration::from_micros(20), 2, false);
+        m.on_rejected();
+        m.on_rejected();
+        let s = m.snapshot();
+        assert_eq!(s.requests, 3, "a rejection is a counted request");
+        assert_eq!(s.rejected_requests, 2);
+        assert_eq!(s.dropped_requests, 2, "every rejection is a counted drop");
+        assert!(s.conserved(), "rejected-and-counted, never silently shed: {s:?}");
+        assert!(s.shard_conserved);
+        assert_eq!(s.shards, 3);
+        assert!(s.summary().contains("rejected=2"));
+        assert!(s.summary().contains("shards=3"));
+        assert!(s.summary().contains("shard_conserved=true"));
+    }
+
+    #[test]
+    fn failover_counters_accumulate_without_breaking_conservation() {
+        let m = Metrics::new();
+        m.on_failover();
+        m.on_session_replaced();
+        m.on_session_replaced();
+        let s = m.snapshot();
+        assert_eq!(s.failovers, 1);
+        assert_eq!(s.replaced_sessions, 2);
+        assert!(s.conserved(), "failovers move sessions, not requests");
+        assert_eq!(s.shards, 0, "single-session ledgers carry no shard count");
+        assert!(
+            !s.summary().contains("failovers="),
+            "fleet columns only print for fleet ledgers"
+        );
+    }
+
+    #[test]
+    fn aggregate_sums_counters_and_weights_means() {
+        let (a, b) = two_clients();
+        let shard1 = {
+            let m = Metrics::new();
+            m.on_submit(Some(a), 8, true);
+            m.on_submit(Some(a), 8, true);
+            m.on_batch(2, 4, Duration::from_micros(100));
+            m.on_response(Some(a), Duration::ZERO, Duration::from_micros(30), 2, false);
+            m.on_response(Some(a), Duration::ZERO, Duration::from_micros(30), 2, false);
+            m.snapshot()
+        };
+        let shard2 = {
+            let m = Metrics::new();
+            m.on_submit(Some(b), 16, true);
+            m.on_batch(1, 1, Duration::from_micros(40));
+            m.on_response(Some(b), Duration::ZERO, Duration::from_micros(90), 8, true);
+            m.snapshot()
+        };
+        let fleet = {
+            let m = Metrics::new();
+            m.set_shards(2);
+            m.on_rejected();
+            m.on_failover();
+            m.on_session_replaced();
+            m.snapshot()
+        };
+        let agg = MetricsSnapshot::aggregate(&[shard1.clone(), shard2.clone(), fleet]);
+        assert_eq!(agg.requests, 4, "2 + 1 served + 1 rejected");
+        assert_eq!(agg.responses, 3);
+        assert_eq!(agg.dropped_requests, 1);
+        assert_eq!(agg.rejected_requests, 1);
+        assert_eq!(agg.failovers, 1);
+        assert_eq!(agg.replaced_sessions, 1);
+        assert_eq!(agg.shards, 2);
+        assert_eq!(agg.batches, 3);
+        assert_eq!(agg.shipped_f32, 32);
+        assert!(agg.conserved() && agg.shard_conserved, "{agg:?}");
+        // occupancy weighted by batches: (2.0*1 + 1.0*1) / 2
+        assert!((agg.mean_batch_occupancy - 1.5).abs() < 1e-9, "{agg:?}");
+        // request-path means weighted by responses: (30*2 + 90*1) / 3
+        assert!((agg.mean_total_us - 50.0).abs() < 1e-6, "{agg:?}");
+        assert!((agg.mean_iters - 4.0).abs() < 1e-9, "{agg:?}");
+        assert!((agg.max_total_us - 90.0).abs() < 1e-6, "{agg:?}");
+        // client rows survive the merge
+        assert_eq!(agg.clients.len(), 2);
+        assert!(agg.clients_conserved());
+        assert_eq!(agg.client(a.id()).unwrap().requests, 2);
+        assert_eq!(agg.client(b.id()).unwrap().shipped_f32, 16);
+        // a part that does NOT conserve poisons shard_conserved even if
+        // the summed counters happen to balance
+        let unbalanced = {
+            let m = Metrics::new();
+            m.on_submit(None, 4, false); // in flight: requests=1, responses=0
+            m.snapshot()
+        };
+        let agg2 = MetricsSnapshot::aggregate(&[shard1, unbalanced]);
+        assert!(!agg2.shard_conserved);
     }
 
     #[test]

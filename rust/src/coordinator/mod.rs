@@ -27,6 +27,17 @@
 //!   every client-side recovery loop, and the executor-side supervision
 //!   story's client-facing half: a restarted session answers retried
 //!   calls, a moribund one fails them fatally.
+//! * [`fleet`] — the scheduler tier above single sessions: a [`Fleet`]
+//!   of N supervised shards with fingerprint-keyed session placement
+//!   (rendezvous-stable, content-deduplicated), latency-budget
+//!   admission control, per-client fairness on the batch path, and
+//!   shard failover that re-places and re-hydrates a dead shard's
+//!   sessions onto survivors.  `rtac serve --shards N` and
+//!   `rtac loadgen` run on it.
+//! * `chaos` (crate-internal) — the deterministic fault-injection
+//!   harness: seeded `FaultPlan`s driving CPU-reference executors that
+//!   speak the exact session wire protocol, including whole-shard
+//!   kills for the fleet tier.
 //!
 //! ```
 //! use rtac::coordinator::BatchPolicy;
@@ -37,12 +48,15 @@
 //! assert!(policy.max_batch >= 1);
 //! ```
 
+pub(crate) mod chaos;
 pub mod engine;
+pub mod fleet;
 pub mod metrics;
 pub mod retry;
 pub mod service;
 
 pub use engine::TensorEngine;
+pub use fleet::{Fleet, FleetClient, FleetPolicy};
 pub use metrics::{ClientMetrics, Metrics, MetricsSnapshot};
 pub use retry::{Retry, RetryPolicy};
 pub use service::{

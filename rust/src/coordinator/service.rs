@@ -269,7 +269,6 @@ impl BaseSlots {
     /// wipe".  After it, every client's next delta drops as stale and
     /// the client re-uploads (the same observable state as a restart
     /// that lost the cache).  Returns how many slots were wiped.
-    #[cfg(test)]
     pub(crate) fn wipe(&mut self) -> usize {
         let n = self.slots.len();
         self.slots.clear();
@@ -416,8 +415,10 @@ impl Default for CoordinatorConfig {
     }
 }
 
-/// Client→executor message.
-enum Msg {
+/// Client→executor message.  `pub(crate)` so the offline chaos
+/// reference executors ([`crate::coordinator::chaos`]) can serve the
+/// exact wire protocol the production executor thread serves.
+pub(crate) enum Msg {
     /// One enforcement request (full plane or delta).
     Req(Request),
     /// Cache `plane` as `client`'s delta base under fingerprint `fp`,
@@ -433,15 +434,15 @@ enum Msg {
 }
 
 /// A request: one domains plane to enforce.
-struct Request {
-    payload: Payload,
-    submitted: Instant,
-    resp: mpsc::Sender<Response>,
+pub(crate) struct Request {
+    pub(crate) payload: Payload,
+    pub(crate) submitted: Instant,
+    pub(crate) resp: mpsc::Sender<Response>,
 }
 
 /// The plane a request carries: materialised, or in delta form against
 /// the submitting client's cached base plane.
-enum Payload {
+pub(crate) enum Payload {
     Full(Vec<f32>),
     Delta {
         client: ClientId,
@@ -458,7 +459,7 @@ enum Payload {
 impl Payload {
     /// The submitting client, for per-client drop/response accounting
     /// (full planes are unattributed).
-    fn client(&self) -> Option<ClientId> {
+    pub(crate) fn client(&self) -> Option<ClientId> {
         match self {
             Payload::Full(_) => None,
             Payload::Delta { client, .. } => Some(*client),
@@ -479,7 +480,11 @@ impl Payload {
 /// plane per request — K redundant O(n·d) passes per probe round on
 /// the executor's serving path).  An advancing delta re-fingerprints
 /// only its *reconstructed* plane, once, to key the client's new slot.
-fn resolve_payload(payload: Payload, slots: &mut BaseSlots, bucket: Bucket) -> Option<Vec<f32>> {
+pub(crate) fn resolve_payload(
+    payload: Payload,
+    slots: &mut BaseSlots,
+    bucket: Bucket,
+) -> Option<Vec<f32>> {
     match payload {
         Payload::Full(plane) => Some(plane),
         Payload::Delta { client, delta, advance } => {
@@ -605,6 +610,33 @@ pub struct Handle {
 }
 
 impl Handle {
+    /// Construct a handle wired to a raw message channel, with fresh
+    /// metrics and the compiled-batch capacities of the offline
+    /// reference executors.  The session side of the channel must be
+    /// served by something speaking the [`Msg`] protocol — the chaos /
+    /// CPU-reference executors ([`crate::coordinator::chaos`]), which
+    /// the fleet tier and the protocol test batteries run where
+    /// compiled artifacts are unavailable.  `Coordinator::start`
+    /// remains the only constructor that spawns the production
+    /// executor thread.
+    pub(crate) fn for_reference_executor(
+        bucket: Bucket,
+        base_slots: usize,
+        request_timeout: Duration,
+    ) -> (Handle, mpsc::Receiver<Msg>) {
+        let (tx, rx) = mpsc::channel();
+        let handle = Handle {
+            tx,
+            bucket,
+            metrics: Arc::new(Metrics::new()),
+            compiled_batches: vec![1, 2, 4],
+            base_slots,
+            request_timeout,
+            next_client: Arc::new(AtomicU64::new(0)),
+        };
+        (handle, rx)
+    }
+
     /// Attach a delta-writing client to the session: issues a fresh,
     /// session-unique [`ClientId`] that keys the client's base slot and
     /// its per-client metrics row.  Attach once per logical writer (a
@@ -1526,17 +1558,8 @@ mod tests {
     }
 
     fn handle_at(bucket: Bucket) -> (Handle, mpsc::Receiver<Msg>) {
-        let (tx, rx) = mpsc::channel();
-        let handle = Handle {
-            tx,
-            bucket,
-            metrics: Arc::new(Metrics::new()),
-            compiled_batches: vec![1, 2, 4],
-            base_slots: BatchPolicy::default().base_slots,
-            request_timeout: BatchPolicy::default().request_timeout,
-            next_client: Arc::new(AtomicU64::new(0)),
-        };
-        (handle, rx)
+        let policy = BatchPolicy::default();
+        Handle::for_reference_executor(bucket, policy.base_slots, policy.request_timeout)
     }
 
     fn test_handle() -> (Handle, mpsc::Receiver<Msg>) {
@@ -1970,299 +1993,16 @@ mod tests {
     }
 
     // ---- delta protocol end-to-end (offline CPU-reference executor) ----
+    //
+    // The executors themselves live in `coordinator::chaos` (promoted
+    // out of this test module in the fleet PR so the fleet tier and the
+    // load harness can run them at runtime); these tests keep driving
+    // them through the same fixtures.
 
-    /// §Fault injection: one deterministic chaos plan for the
-    /// supervised CPU-reference executor
-    /// ([`chaos_reference_executor`]).  Fault sites are *request
-    /// indices* — the Nth enforcement request the executor receives
-    /// (base uploads and restart messages do not count) — so a plan
-    /// replays bit-identically for a deterministic client.
-    #[derive(Clone, Debug, Default)]
-    struct FaultPlan {
-        /// Simulated executor crashes: before serving request N the
-        /// session state dies and the supervisor restarts it — same
-        /// [`Supervisor`] budget/backoff decisions, same re-hydration
-        /// accounting (base replay + in-flight re-enqueue) as the
-        /// production executor thread.
-        crash_at: Vec<u64>,
-        /// Hangs: serving request N stalls until past the per-request
-        /// deadline, so the client's `recv_deadline` fires and the
-        /// executor counts the expired request when it reaches it.
-        hang_at: Vec<u64>,
-        /// Failed fused executions: requests N and N+1 both fail — a
-        /// streak of [`Supervisor::FAILED_STREAK_LIMIT`], driving the
-        /// streak→restart path.
-        fail_streak_at: Vec<u64>,
-        /// Base-cache wipes ([`BaseSlots::wipe`]) before request N:
-        /// every delta client's next round drops stale and must recover
-        /// through its bounded fresh-base retry.
-        wipe_bases_at: Vec<u64>,
-    }
-
-    impl FaultPlan {
-        /// Deterministic plan derived from `seed` (xorshift64 — no
-        /// external RNG dependency): 1–3 faults of mixed kinds spread
-        /// over the first ~12 requests.
-        fn seeded(seed: u64) -> FaultPlan {
-            let mut s = seed.wrapping_mul(0x9E37_79B9_7F4A_7C15) | 1;
-            let mut next = move || {
-                s ^= s << 13;
-                s ^= s >> 7;
-                s ^= s << 17;
-                s
-            };
-            let mut plan = FaultPlan::default();
-            let n_faults = 1 + next() % 3;
-            for i in 0..n_faults {
-                let at = 1 + i * 4 + next() % 3;
-                match next() % 4 {
-                    0 => plan.crash_at.push(at),
-                    1 => plan.hang_at.push(at),
-                    2 => plan.fail_streak_at.push(at),
-                    _ => plan.wipe_bases_at.push(at),
-                }
-            }
-            plan
-        }
-
-        /// Does request `i` fall in a failed-execution streak?
-        fn fails(&self, i: u64) -> bool {
-            self.fail_streak_at.iter().any(|&at| i == at || i == at + 1)
-        }
-    }
-
-    /// The CPU-reference executor wrapped in deterministic fault
-    /// injection: serves the session protocol with the native CPU
-    /// engine (same [`resolve_payload`] over the same [`BaseSlots`] as
-    /// the real executor) while a [`FaultPlan`] injects crashes, hangs,
-    /// failed executions, and base-cache wipes — supervised by the SAME
-    /// [`Supervisor`] state machine the production executor thread
-    /// runs, so the offline e2e tests exercise production's
-    /// restart/deadline/drop decisions with no compiled artifacts.
-    /// With an empty plan this *is* the plain CPU-reference executor.
-    #[allow(clippy::too_many_arguments)]
-    fn chaos_reference_executor(
-        problem: crate::core::Problem,
-        bucket: Bucket,
-        base_slots: usize,
-        request_timeout: Duration,
-        max_restarts: u32,
-        plan: FaultPlan,
-        rx: mpsc::Receiver<Msg>,
-        metrics: Arc<Metrics>,
-    ) -> std::thread::JoinHandle<()> {
-        /// Spend one restart (mirroring `restart_session`): true when
-        /// the session re-hydrated, false when the budget is exhausted
-        /// and the session must go moribund (`drain_moribund`).
-        fn restart(
-            supervisor: &mut Supervisor,
-            slots: &BaseSlots,
-            metrics: &Metrics,
-            why: &str,
-        ) -> bool {
-            match supervisor.begin_restart() {
-                Some(backoff) => {
-                    std::thread::sleep(backoff);
-                    metrics.on_executor_restart();
-                    for _ in 0..slots.len() {
-                        metrics.on_base_replayed();
-                    }
-                    eprintln!(
-                        "chaos-executor: restart {} after {why} ({} base slot(s) replayed)",
-                        supervisor.restarts(),
-                        slots.len()
-                    );
-                    true
-                }
-                None => {
-                    eprintln!(
-                        "chaos-executor: restart budget exhausted after {why} — moribund"
-                    );
-                    false
-                }
-            }
-        }
-        // lint:allow(thread-placement): chaos-test reference executor thread
-        std::thread::spawn(move || {
-            use crate::ac::{rtac::RtacNative, Counters, Propagator};
-            use crate::runtime::{decode_vars, encode_vars};
-            let mut slots = BaseSlots::new(base_slots);
-            let mut engine = RtacNative::dense();
-            let mut supervisor = Supervisor::new(max_restarts);
-            let mut idx: u64 = 0;
-            let mut moribund = false;
-            while let Ok(msg) = rx.recv() {
-                let req = match msg {
-                    Msg::Base { client, fp, plane } => {
-                        if !moribund && slots.insert(client, fp, plane) {
-                            metrics.on_base_evicted();
-                        }
-                        continue;
-                    }
-                    Msg::ForceRestart => {
-                        if !moribund
-                            && !restart(&mut supervisor, &slots, &metrics, "a forced restart")
-                        {
-                            moribund = true;
-                        }
-                        continue;
-                    }
-                    Msg::Req(r) => r,
-                };
-                if moribund {
-                    // the drain_moribund contract: drop AND count every
-                    // remaining request until all handles disconnect
-                    metrics.on_restart_dropped(req.payload.client());
-                    continue;
-                }
-                let i = idx;
-                idx += 1;
-                if plan.wipe_bases_at.contains(&i) {
-                    let n = slots.wipe();
-                    eprintln!("chaos-executor: wiped {n} base slot(s) before request {i}");
-                }
-                if plan.crash_at.contains(&i) {
-                    // the crash kills the exec state with request i in
-                    // flight; after the restart the request is served
-                    // from the re-enqueued pending set (the
-                    // `restart_session` replay)
-                    if !restart(&mut supervisor, &slots, &metrics, "a crash") {
-                        moribund = true;
-                        metrics.on_restart_dropped(req.payload.client());
-                        continue;
-                    }
-                }
-                if plan.hang_at.contains(&i) {
-                    std::thread::sleep(request_timeout + Duration::from_millis(20));
-                }
-                // the executor half of the per-request deadline
-                // (mirrors the real drain loop)
-                if req.submitted.elapsed() > request_timeout {
-                    metrics.on_request_timeout(req.payload.client());
-                    continue;
-                }
-                if plan.fails(i) {
-                    metrics.on_batch_failed(&[req.payload.client()]);
-                    drop(req); // responder gone: the client sees dropped_err
-                    if supervisor.on_batch_failed()
-                        && !restart(
-                            &mut supervisor,
-                            &slots,
-                            &metrics,
-                            "a failed-execution streak",
-                        )
-                    {
-                        moribund = true;
-                    }
-                    continue;
-                }
-                let client = req.payload.client();
-                let Some(plane) = resolve_payload(req.payload, &mut slots, bucket) else {
-                    let client = client.expect("only deltas can fail to resolve");
-                    metrics.on_stale_delta(client);
-                    continue; // responder dropped, like the real executor
-                };
-                let mut state = crate::core::State::new(&problem);
-                decode_vars(&problem, &mut state, &plane, bucket).expect("monotone input plane");
-                let mut c = Counters::default();
-                engine.reset(&problem);
-                let out = engine.enforce(&problem, &mut state, &[], &mut c);
-                supervisor.on_batch_ok();
-                let status = if out.is_consistent() { 0 } else { STATUS_WIPEOUT };
-                let out_plane = encode_vars(&problem, &state, bucket).expect("fits the bucket");
-                metrics.on_batch(1, 1, Duration::from_micros(1));
-                metrics.on_response(
-                    client,
-                    Duration::ZERO,
-                    Duration::ZERO,
-                    c.recurrences as i32,
-                    status == STATUS_WIPEOUT,
-                );
-                let _ = req.resp.send(Response {
-                    plane: out_plane,
-                    status,
-                    iters: c.recurrences as i32,
-                    batch_real: 1,
-                    batch_capacity: 1,
-                    queue_time: Duration::ZERO,
-                    total_time: Duration::ZERO,
-                });
-            }
-        })
-    }
-
-    /// A stand-in executor thread that serves the session protocol with
-    /// the native CPU engine instead of XLA — the fault-free
-    /// specialisation of [`chaos_reference_executor`].  Lets the delta
-    /// protocol — and clients built on it, up to whole parallel
-    /// searches — run end-to-end with no compiled artifacts.
-    fn cpu_reference_executor(
-        problem: crate::core::Problem,
-        bucket: Bucket,
-        base_slots: usize,
-        rx: mpsc::Receiver<Msg>,
-        metrics: Arc<Metrics>,
-    ) -> std::thread::JoinHandle<()> {
-        let policy = BatchPolicy::default();
-        chaos_reference_executor(
-            problem,
-            bucket,
-            base_slots,
-            policy.request_timeout,
-            policy.max_restarts,
-            FaultPlan::default(),
-            rx,
-            metrics,
-        )
-    }
-
-    /// Session fixture around [`chaos_reference_executor`] with an
-    /// explicit fault plan, deadline, and restart budget (all mirrored
-    /// onto the handle like `Coordinator::start` does from the policy).
-    fn chaos_session(
-        problem: &crate::core::Problem,
-        bucket: Bucket,
-        plan: FaultPlan,
-        request_timeout: Duration,
-        max_restarts: u32,
-    ) -> (Handle, std::thread::JoinHandle<()>) {
-        let (mut h, rx) = handle_at(bucket);
-        h.request_timeout = request_timeout;
-        let join = chaos_reference_executor(
-            problem.clone(),
-            bucket,
-            h.base_slots,
-            request_timeout,
-            max_restarts,
-            plan,
-            rx,
-            h.metrics.clone(),
-        );
-        (h, join)
-    }
-
-    /// Session fixture around [`cpu_reference_executor`] with an
-    /// explicit base-slot cap (mirrored onto the handle, like
-    /// `Coordinator::start` does from the policy).
-    fn reference_session_with_slots(
-        problem: &crate::core::Problem,
-        bucket: Bucket,
-        base_slots: usize,
-    ) -> (Handle, std::thread::JoinHandle<()>) {
-        let (mut h, rx) = handle_at(bucket);
-        h.base_slots = base_slots;
-        let join =
-            cpu_reference_executor(problem.clone(), bucket, base_slots, rx, h.metrics.clone());
-        (h, join)
-    }
-
-    /// Session fixture at the default slot cap.
-    fn reference_session(
-        problem: &crate::core::Problem,
-        bucket: Bucket,
-    ) -> (Handle, std::thread::JoinHandle<()>) {
-        reference_session_with_slots(problem, bucket, BatchPolicy::default().base_slots)
-    }
+    use crate::coordinator::chaos::{
+        chaos_session, dump_chaos_snapshot, reference_session, reference_session_with_slots,
+        FaultPlan,
+    };
 
     #[test]
     fn delta_round_matches_full_round_through_the_protocol() {
@@ -2782,16 +2522,6 @@ mod tests {
 
     // ---- fault injection: supervised recovery e2e ---------------------
 
-    /// When `RTAC_CHAOS_SNAPSHOT_DIR` is set (the CI chaos job), dump
-    /// each seed's final [`MetricsSnapshot`] there as an artifact.
-    fn dump_chaos_snapshot(seed: u64, m: &crate::coordinator::MetricsSnapshot) {
-        let Ok(dir) = std::env::var("RTAC_CHAOS_SNAPSHOT_DIR") else { return };
-        let path = std::path::Path::new(&dir).join(format!("chaos_seed_{seed}.txt"));
-        if let Err(e) = std::fs::write(&path, format!("{}\n\n{m:#?}\n", m.summary())) {
-            eprintln!("chaos snapshot: could not write {path:?}: {e}");
-        }
-    }
-
     #[test]
     fn chaos_plans_conserve_and_reach_the_native_fixpoint() {
         // the tentpole e2e: for every seeded FaultPlan — crashes, hangs,
@@ -2863,7 +2593,7 @@ mod tests {
             assert!(m.conserved(), "seed {seed}: {}", m.summary());
             assert!(m.clients_conserved(), "seed {seed}: {m:?}");
             assert!(m.executor_restarts <= 8, "seed {seed}: {}", m.summary());
-            dump_chaos_snapshot(seed, &m);
+            dump_chaos_snapshot(&format!("chaos_seed_{seed}"), &m);
         }
     }
 

@@ -5,7 +5,10 @@
 //!   solve         MAC search on a file or generated instance
 //!   ac            one arc-consistency enforcement, engine-selectable
 //!   serve         start a coordinator session and drive a synthetic
-//!                 parallel-search load against it (metrics report)
+//!                 parallel-search load against it (metrics report);
+//!                 --shards/--latency-budget route through the fleet tier
+//!   loadgen       deterministic offline load harness: seeded synthetic
+//!                 clients against a multi-shard (chaos) fleet
 //!   bench-fig3    reproduce Fig. 3 (time per assignment grid)
 //!   bench-table1  reproduce Table 1 (#Revision vs #Recurrence grid)
 //!   bench-ablate  ablations A-D (DESIGN.md §5)
@@ -18,8 +21,8 @@
 use std::time::Duration;
 
 use rtac::ac::make_engine;
-use rtac::bench::{ablations, fig3, rtac_bench, table1, GridSpec};
-use rtac::coordinator::{BatchPolicy, Coordinator, CoordinatorConfig};
+use rtac::bench::{ablations, fig3, load, rtac_bench, table1, GridSpec};
+use rtac::coordinator::{BatchPolicy, Coordinator, CoordinatorConfig, Fleet, FleetPolicy};
 use rtac::core::Problem;
 use rtac::gen::random::{random_csp, RandomSpec};
 use rtac::search::parallel::{solve_parallel_with, WorkerEngine};
@@ -54,9 +57,21 @@ SUBCOMMANDS
                per-worker delta hit rates, tensor-full is the upload
                baseline)
                --artifacts DIR     (end-to-end batched tensor serving demo)
+               --shards N (with N >= 2, or any --latency-budget: place the
+               session through the fleet scheduler tier — content-
+               fingerprint placement, admission control, shard failover;
+               docs/PROTOCOL.md §Fleet)
+               --latency-budget MS (fleet admission budget; requests whose
+               projected completion exceeds it are rejected AND counted —
+               rejected_requests; 0/absent admits everything)
                --sac-probe [--probe-batch K]  (SAC-probing client: fused
                delta vs fused full-plane vs per-probe submission, plus the
                sac-mixed split — occupancy + upload-volume report)
+  loadgen      --shards 3 --clients 6 --rounds 4 --seed S --latency-budget MS
+               --reference (fault-free CPU-reference fleet: same-seed runs
+               produce identical request/response/drop ledgers; the default
+               is chaos executors plus one forced mid-run shard kill)
+               [--json FILE]   (fleet_* cells + per-shard conservation)
   ac           same instance flags; runs one enforcement and prints counters
   bench-fig3   --full | --sizes 20,50 --densities 0.1,0.5 --assignments 300
                --engines ac3,ac3bit,rtac,rtac-inc [--json FILE]
@@ -65,8 +80,10 @@ SUBCOMMANDS
   bench-rtac   --sizes 50,100,200 --densities 0.1,0.5,1.0 --assignments 200
                --engines rtac,rtac-inc,rtac-par2,rtac-par4,rtac-par-inc4,rtac-par-scoped4
                --sac-workers 4 (0 skips the SAC cells; artifact-gated cells
-               are marked "skipped": "no-artifacts" in the JSON, never
-               silently omitted) [--json BENCH_rtac.json]
+               are marked \"skipped\": \"no-artifacts\" in the JSON, never
+               silently omitted) --fleet-clients 6 (0 skips the fleet
+               serving cell — a reduced seeded loadgen run against chaos
+               shards) [--json BENCH_rtac.json]
   info         --artifacts DIR
 ";
 
@@ -94,6 +111,7 @@ fn run(args: Args) -> Result<(), String> {
         Some("solve") => cmd_solve(&args),
         Some("ac") => cmd_ac(&args),
         Some("serve") => cmd_serve(&args),
+        Some("loadgen") => cmd_loadgen(&args),
         Some("bench-fig3") => cmd_fig3(&args),
         Some("bench-table1") => cmd_table1(&args),
         Some("bench-ablate") => cmd_ablate(&args),
@@ -265,6 +283,8 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
             .into());
     }
     let max_restarts = args.get_u64("max-restarts", 3)? as u32;
+    let shards = args.get_usize("shards", 1)?;
+    let latency_budget_ms = args.get_u64("latency-budget", 0)?;
     let adaptive = args.has_flag("adaptive");
     let sac_probe = args.has_flag("sac-probe");
     let probe_batch = args.get_usize("probe-batch", 0)?;
@@ -311,19 +331,62 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
         Coordinator::validate_policy(&p, &config).map_err(|e| format!("{e:#}"))?;
     }
     if sac_probe {
+        if shards != 1 || latency_budget_ms > 0 {
+            return Err("--sac-probe drives dedicated single sessions; it does not \
+                        compose with --shards/--latency-budget"
+                .into());
+        }
         return serve_sac_probe(&p, config, probe_batch);
     }
-    let coord = Coordinator::start(&p, config).map_err(|e| format!("{e:#}"))?;
+    // with --shards >= 2 (or any --latency-budget) the session is
+    // placed through the fleet scheduler tier: same solver workload,
+    // but the session participates in fingerprint placement and
+    // failover bookkeeping, and the fleet/shard conservation ledgers
+    // are reported at shutdown (docs/PROTOCOL.md §Fleet)
+    let fleet_mode = shards != 1 || latency_budget_ms > 0;
+    let mut single: Option<Coordinator> = None;
+    let mut fleet: Option<Fleet> = None;
+    let handle = if fleet_mode {
+        let fleet_policy = FleetPolicy {
+            shards,
+            latency_budget: (latency_budget_ms > 0)
+                .then(|| Duration::from_millis(latency_budget_ms)),
+            base_slots,
+            request_timeout: Duration::from_millis(request_timeout_ms),
+            max_restarts,
+            max_batch,
+        };
+        let f = Fleet::with_artifacts(fleet_policy, config).map_err(|e| format!("{e:#}"))?;
+        let client = f.client(&p).map_err(|e| format!("{e:#}"))?;
+        println!(
+            "fleet up: shards={shards} latency_budget={} — session {:016x} placed on shard {}",
+            if latency_budget_ms > 0 {
+                format!("{latency_budget_ms}ms")
+            } else {
+                "none".to_string()
+            },
+            client.fingerprint(),
+            client.shard(),
+        );
+        let h = client.session_handle();
+        fleet = Some(f);
+        h
+    } else {
+        let coord = Coordinator::start(&p, config).map_err(|e| format!("{e:#}"))?;
+        let h = coord.handle();
+        single = Some(coord);
+        h
+    };
     println!(
         "session up: problem={} bucket={}x{} workers={workers} max_wait={max_wait}µs \
          max_batch={max_batch}{} base_slots={base_slots} worker_engine={worker_engine:?}",
         p.name(),
-        coord.bucket().n,
-        coord.bucket().d,
+        handle.bucket.n,
+        handle.bucket.d,
         if adaptive { " (adaptive)" } else { "" },
     );
     let sw = rtac::util::timer::Stopwatch::start();
-    let out = solve_parallel_with(&p, &coord.handle(), &cfg, 0, workers, worker_engine)
+    let out = solve_parallel_with(&p, &handle, &cfg, 0, workers, worker_engine)
         .map_err(|e| format!("{e:#}"))?;
     let elapsed = sw.elapsed_ms();
     match &out.result {
@@ -333,7 +396,7 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
         }
         other => println!("{other:?}"),
     }
-    let m = coord.metrics().snapshot();
+    let m = handle.metrics.snapshot();
     println!("metrics: {}", m.summary());
     // the per-worker delta report: one row per session client (each
     // delta-shipping worker engine attaches one), with its hit rate —
@@ -356,6 +419,33 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
         m.responses as f64 / (elapsed / 1e3),
         elapsed
     );
+    // shutdown blocks until every handle clone is gone — drop ours
+    // before joining the session(s)
+    drop(handle);
+    if let Some(coord) = single {
+        coord.shutdown();
+    }
+    if let Some(fleet) = fleet {
+        fleet.shutdown();
+        let agg = fleet.snapshot();
+        println!(
+            "fleet: {} — shard_conserved={} failovers={} replaced_sessions={}",
+            agg.summary(),
+            agg.shard_conserved,
+            agg.failovers,
+            agg.replaced_sessions,
+        );
+        for (i, s) in fleet.shard_snapshots().iter().enumerate() {
+            println!(
+                "  shard {i}: requests={} responses={} dropped={} rejected={} conserved={}",
+                s.requests,
+                s.responses,
+                s.dropped_requests,
+                s.rejected_requests,
+                s.conserved(),
+            );
+        }
+    }
     Ok(())
 }
 
@@ -561,6 +651,7 @@ fn cmd_bench_rtac(args: &Args) -> Result<(), String> {
     let engines: Vec<&str> = engines_arg.split(',').collect();
     let json_path = args.get_or("json", "BENCH_rtac.json");
     let sac_workers = args.get_usize("sac-workers", 4)?;
+    let fleet_clients = args.get_usize("fleet-clients", 6)?;
     args.finish()?;
     eprintln!(
         "rtac family grid: sizes={:?} densities={:?} dom={} t={} assignments={}",
@@ -573,10 +664,129 @@ fn cmd_bench_rtac(args: &Args) -> Result<(), String> {
     // "no-artifacts") where not — see docs/BENCHMARKS.md for the schema
     let cells = rtac_bench::run_sac_cells(&spec, sac_workers);
     println!("{}", rtac_bench::render_cells(&cells));
-    let json = rtac_bench::to_json(&spec, &results, &cells);
+    // the fleet serving cell: a reduced seeded loadgen run (chaos
+    // shards, >= 1 forced failover) — measured, or explicitly marked
+    // "fleet_skipped" in the JSON, never silently omitted
+    let fleet = if fleet_clients == 0 {
+        rtac_bench::CellOutcome::Skipped(rtac_bench::SkipReason::Disabled)
+    } else {
+        load::run_fleet_cell(&load::LoadSpec {
+            clients: fleet_clients,
+            ..load::LoadSpec::default()
+        })
+    };
+    print!("{}", rtac_bench::render_fleet_cell(&fleet));
+    let json = rtac_bench::to_json(&spec, &results, &cells, &fleet);
     std::fs::write(&json_path, json.to_string()).map_err(|e| format!("{json_path}: {e}"))?;
     eprintln!("wrote {json_path}");
     Ok(())
+}
+
+/// `rtac loadgen` — the deterministic offline load harness: a seeded
+/// population of synthetic concurrent clients (mixed delta-chain
+/// search workers and SAC probe rounds) driving a multi-shard fleet.
+/// The default drives chaos executors and forces one mid-run shard
+/// kill; `--reference` runs the fault-free CPU-reference fleet, where
+/// same-seed runs produce identical ledgers.  Exits non-zero on any
+/// fixpoint mismatch against the native CPU engine or any conservation
+/// violation.
+fn cmd_loadgen(args: &Args) -> Result<(), String> {
+    let shards = args.get_usize("shards", 3)?;
+    let clients = args.get_usize("clients", 6)?;
+    let rounds = args.get_usize("rounds", 4)?;
+    let seed = args.get_u64("seed", 0xF1EE7)?;
+    let latency_budget_ms = args.get_u64("latency-budget", 0)?;
+    let reference = args.has_flag("reference");
+    let json_requested = args.get_str("json");
+    args.finish()?;
+    let spec = load::LoadSpec {
+        shards,
+        clients,
+        rounds,
+        seed,
+        latency_budget: (latency_budget_ms > 0).then(|| Duration::from_millis(latency_budget_ms)),
+        chaos: !reference,
+    };
+    let report = load::run_load(&spec).map_err(|e| format!("{e:#}"))?;
+    print!(
+        "{}",
+        rtac_bench::render_fleet_cell(&rtac_bench::CellOutcome::Measured(report.clone()))
+    );
+    for c in &report.ledger {
+        println!(
+            "  client {}: requests={} responses={} rejected={} dropped={} \
+             recovery_uploads={} mismatches={}",
+            c.worker,
+            c.requests,
+            c.responses,
+            c.rejected,
+            c.dropped,
+            c.recovery_uploads,
+            c.mismatches,
+        );
+    }
+    for (i, s) in report.shards.iter().enumerate() {
+        println!(
+            "  shard {i}: requests={} responses={} dropped={} rejected={} restarts={} \
+             conserved={}",
+            s.requests,
+            s.responses,
+            s.dropped_requests,
+            s.rejected_requests,
+            s.executor_restarts,
+            s.conserved(),
+        );
+    }
+    let agg = &report.aggregate;
+    println!(
+        "aggregate: {} — shard_conserved={} failovers={} replaced_sessions={} mismatches={}",
+        agg.summary(),
+        agg.shard_conserved,
+        agg.failovers,
+        agg.replaced_sessions,
+        report.mismatches,
+    );
+    if report.mismatches > 0 {
+        return Err(format!(
+            "{} fixpoint mismatch(es) against the native CPU reference",
+            report.mismatches
+        ));
+    }
+    if !(agg.conserved() && agg.shard_conserved) {
+        return Err("conservation violated (requests != responses + dropped_requests)".into());
+    }
+    if json_requested.is_some() {
+        maybe_write_json(args, loadgen_json(&spec, &report))?;
+    }
+    Ok(())
+}
+
+/// The loadgen JSON cell: the same `fleet_*` keys the bench emits
+/// (docs/BENCHMARKS.md), plus the seed and the cross-check tally.
+fn loadgen_json(spec: &load::LoadSpec, r: &load::FleetReport) -> rtac::util::json::Json {
+    use rtac::util::json::{num, obj, Json};
+    let a = &r.aggregate;
+    let mut fields = vec![
+        ("seed", num(spec.seed as f64)),
+        ("fleet_shards", num(a.shards as f64)),
+        ("fleet_clients", num(r.ledger.len() as f64)),
+        ("fleet_requests", num(a.requests as f64)),
+        ("fleet_responses", num(a.responses as f64)),
+        ("fleet_dropped_requests", num(a.dropped_requests as f64)),
+        ("fleet_rejected_requests", num(a.rejected_requests as f64)),
+        ("fleet_rejection_rate", num(r.rejection_rate())),
+        ("fleet_failovers", num(a.failovers as f64)),
+        ("fleet_replaced_sessions", num(a.replaced_sessions as f64)),
+        ("fleet_mean_occupancy", num(a.mean_batch_occupancy)),
+        ("fleet_shipped_f32", num(a.shipped_f32 as f64)),
+        ("fleet_mismatches", num(r.mismatches as f64)),
+        ("fleet_conserved", Json::Bool(a.conserved() && a.shard_conserved)),
+    ];
+    if let Some(l) = &r.latency {
+        fields.push(("fleet_p50_ms", num(l.p50)));
+        fields.push(("fleet_p99_ms", num(l.p99)));
+    }
+    obj(fields)
 }
 
 fn cmd_ablate(args: &Args) -> Result<(), String> {
