@@ -73,7 +73,7 @@ use std::time::Instant;
 
 use crate::ac::rtac::{expand_affected, revise_var_fused, RtacNative};
 use crate::ac::{Counters, Outcome, Propagator};
-use crate::coordinator::{Handle, Response, Retry, RetryPolicy, StaleTracker};
+use crate::coordinator::{FixCache, Handle, Response, Retry, RetryPolicy, StaleTracker};
 use crate::core::{DomainPlane, PlaneSlab, Problem, State, Val, VarId};
 use crate::exec::WorkerPool;
 use crate::runtime::{encode_vars_into, plane_fingerprint, PlaneDelta};
@@ -1069,6 +1069,32 @@ pub struct SacParallel {
     /// Set on a backend failure (tensor route only): the engine is then
     /// poisoned and reports wipeouts, like `TensorEngine`.
     pub failed: Option<String>,
+    /// Optional probe-round memo ([`SacParallel::with_fixcache`]): a
+    /// round keyed by `(problem fingerprint, launch domains + probe
+    /// list)` replays its verdict vector AND its counter delta, so
+    /// repeated rounds — SAC's final clean pass, re-enforcement at
+    /// repeated search nodes, restarts — short-circuit bit-identically.
+    /// Entries are content-addressed, so the cache stays valid across
+    /// `reset` and across problems.
+    fixcache: Option<Arc<FixCache>>,
+}
+
+/// Fingerprint of one probe round's inputs: the launch domain words
+/// plus the ordered probe list (FNV-1a, the repo-wide fingerprint
+/// idiom).  Combined with [`problem_fingerprint`] this keys a round's
+/// memo entry ([`FixCache::insert_round`]).
+fn probe_round_fingerprint(state: &State, round: &[(VarId, Val)]) -> u64 {
+    fn mix(h: u64, v: u64) -> u64 {
+        (h ^ v).wrapping_mul(0x0000_0100_0000_01b3)
+    }
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &w in state.plane().words() {
+        h = mix(h, w);
+    }
+    for &(x, a) in round {
+        h = mix(h, ((x as u64) << 32) | a as u64);
+    }
+    h
 }
 
 impl SacParallel {
@@ -1091,7 +1117,19 @@ impl SacParallel {
             probes: 0,
             pairs: Vec::new(),
             failed: None,
+            fixcache: None,
         }
+    }
+
+    /// Attach (or detach, with `None`) a probe-round memo — typically a
+    /// per-shard cache shared with the serving tier, or a private one
+    /// from [`FixCache::shared`].  Soundness: the AC closure is unique
+    /// (Prop. 1), so an identical round can only ever produce the
+    /// identical verdict vector and counter delta — a hit is
+    /// bit-identical to the run it skips.
+    pub fn with_fixcache(mut self, fixcache: Option<Arc<FixCache>>) -> SacParallel {
+        self.fixcache = fixcache;
+        self
     }
 
     /// Enforce SAC with batched probes.  Returns the outcome; `counters`
@@ -1109,6 +1147,9 @@ impl SacParallel {
         if !out.is_consistent() {
             return out;
         }
+        // the memo key's constraint half, once per enforcement
+        // (microseconds next to a single probe round)
+        let cons_fp = self.fixcache.as_ref().map(|_| problem_fingerprint(problem));
         let k = self.backend.batch().max(1);
         loop {
             let mut removed_any = false;
@@ -1139,11 +1180,43 @@ impl SacParallel {
                     continue;
                 }
                 self.probes += round.len() as u64;
-                let verdicts = match self.backend.run_probes(problem, state, &round, counters) {
-                    Ok(v) => v,
-                    Err(e) => {
-                        self.failed = Some(format!("{e:#}"));
-                        return Outcome::Wipeout(0);
+                // consult the round memo first: a hit replays the
+                // verdict vector and the counter delta of the original
+                // run (unique closure ⇒ bit-identical), skipping the
+                // backend entirely; a miss runs the round against a
+                // fresh delta so the admitted entry attributes exactly
+                // this round's work
+                let memo = self.fixcache.clone().map(|cache| {
+                    let fp = probe_round_fingerprint(state, &round);
+                    (cache, cons_fp.expect("fingerprinted when a cache is attached"), fp)
+                });
+                let cached =
+                    memo.as_ref().and_then(|(cache, cf, rfp)| cache.lookup_round(*cf, *rfp));
+                let verdicts = if let Some((verdicts, delta)) = cached {
+                    counters.add(&delta);
+                    verdicts
+                } else if let Some((cache, cf, rfp)) = &memo {
+                    let mut delta = Counters::default();
+                    match self.backend.run_probes(problem, state, &round, &mut delta) {
+                        Ok(verdicts) => {
+                            counters.add(&delta);
+                            cache.insert_round(*cf, *rfp, &verdicts, &delta);
+                            verdicts
+                        }
+                        Err(e) => {
+                            // a session accident, not a content-
+                            // addressed fact: nothing is admitted
+                            self.failed = Some(format!("{e:#}"));
+                            return Outcome::Wipeout(0);
+                        }
+                    }
+                } else {
+                    match self.backend.run_probes(problem, state, &round, counters) {
+                        Ok(v) => v,
+                        Err(e) => {
+                            self.failed = Some(format!("{e:#}"));
+                            return Outcome::Wipeout(0);
+                        }
                     }
                 };
                 debug_assert_eq!(verdicts.len(), round.len());
@@ -1651,6 +1724,68 @@ mod tests {
         assert!(rounds.iter().all(|r| !r.is_empty() && r.len() <= 3), "round sizes: {rounds:?}");
         let probed: u64 = rounds.iter().map(|r| r.len() as u64).sum();
         assert_eq!(probed, engine.probes);
+    }
+
+    #[test]
+    fn probe_round_memo_replays_rounds_without_rerunning_the_backend() {
+        let mut p = Problem::new("chain", 4, 3);
+        let eq = Relation::from_fn(3, 3, |a, b| a == b);
+        for v in 0..3 {
+            p.add_constraint(v, v + 1, eq.clone());
+        }
+        let rounds = std::rc::Rc::new(std::cell::RefCell::new(Vec::new()));
+        let backend = RecordingBackend { rounds: rounds.clone(), k: 3, fail_after: None };
+        let cache = FixCache::shared(64);
+        let mut engine =
+            SacParallel::with_backend(Box::new(backend)).with_fixcache(cache.clone());
+        let mut s1 = State::new(&p);
+        let mut c1 = Counters::default();
+        assert!(engine.enforce_sac(&p, &mut s1, &mut c1).is_consistent());
+        let cold_rounds = rounds.borrow().len();
+        assert!(cold_rounds > 0);
+        let mut s2 = State::new(&p);
+        let mut c2 = Counters::default();
+        assert!(engine.enforce_sac(&p, &mut s2, &mut c2).is_consistent());
+        assert_eq!(
+            rounds.borrow().len(),
+            cold_rounds,
+            "every warm round must be served from the memo, not the backend"
+        );
+        assert_eq!(s1.snapshot(), s2.snapshot(), "replayed verdicts reach the same closure");
+        assert_eq!(c1, c2, "replayed counter deltas keep the work ledger bit-identical");
+        let stats = cache.expect("attached").stats();
+        assert_eq!(stats.hits as usize, cold_rounds, "one hit per memoised round");
+        assert_eq!(stats.misses as usize, cold_rounds, "one miss per cold round");
+    }
+
+    #[test]
+    fn probe_round_memo_is_bit_identical_to_the_uncached_engine() {
+        // the sac.rs half of the differential battery: cache off vs on
+        // vs capacity-1 — identical outcome, closure, and counters on
+        // real CPU probe work (capacity 1 thrashes, which must change
+        // nothing but the hit rate)
+        let p = random_csp(&RandomSpec::new(7, 5, 0.8, 0.4, 23));
+        let mut off_state = State::new(&p);
+        let mut off_c = Counters::default();
+        let off_out = SacParallel::new(2).enforce_sac(&p, &mut off_state, &mut off_c);
+        for entries in [64usize, 1] {
+            let cache = FixCache::shared(entries);
+            let mut engine = SacParallel::new(2).with_fixcache(cache.clone());
+            // cold pass, then a (partially) warm repeat
+            for _ in 0..2 {
+                let mut s = State::new(&p);
+                let mut c = Counters::default();
+                let out = engine.enforce_sac(&p, &mut s, &mut c);
+                assert_eq!(out.is_consistent(), off_out.is_consistent());
+                assert_eq!(s.snapshot(), off_state.snapshot(), "cap {entries}");
+                assert_eq!(c, off_c, "cache (cap {entries}) must not change the work ledger");
+            }
+            let stats = cache.expect("attached").stats();
+            assert!(stats.misses > 0, "cold rounds miss (cap {entries})");
+            if entries > 1 {
+                assert!(stats.hits > 0, "the warm repeat must hit (cap {entries})");
+            }
+        }
     }
 
     #[test]

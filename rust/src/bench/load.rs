@@ -63,6 +63,14 @@ pub struct LoadSpec {
     /// chaos-battery configuration.  `false` = fault-free reference
     /// executors, the deterministic-ledger configuration.
     pub chaos: bool,
+    /// Per-shard fixpoint-cache capacity
+    /// ([`FleetPolicy::fixcache_entries`]; 0 disables).  Determinism
+    /// note: each session's executor serialises its own requests and
+    /// co-homed sessions touch disjoint cache keys, so with capacity
+    /// ample enough to avoid eviction the aggregate hit/miss counts are
+    /// order-independent — the first arrival of a key misses, every
+    /// repeat hits — and therefore replay with the seed.
+    pub fixcache_entries: usize,
 }
 
 impl Default for LoadSpec {
@@ -74,6 +82,7 @@ impl Default for LoadSpec {
             seed: 0xF1EE7,
             latency_budget: None,
             chaos: true,
+            fixcache_entries: 0,
         }
     }
 }
@@ -119,6 +128,11 @@ pub struct FleetReport {
     /// Total verification mismatches across clients.  Zero or the run
     /// is wrong.
     pub mismatches: u64,
+    /// The per-shard fixpoint-cache capacity the run was driven with
+    /// ([`LoadSpec::fixcache_entries`]) — 0 means the memo layer was
+    /// off, and the JSON export writes `fleet_fixcache_skipped:
+    /// "disabled"` instead of zero-valued cache columns.
+    pub fixcache_entries: usize,
 }
 
 impl FleetReport {
@@ -321,6 +335,7 @@ pub fn run_load(spec: &LoadSpec) -> Result<FleetReport> {
         latency_budget: spec.latency_budget,
         request_timeout: Duration::from_secs(2),
         max_restarts: 2,
+        fixcache_entries: spec.fixcache_entries,
         ..FleetPolicy::default()
     };
     let fleet =
@@ -388,7 +403,14 @@ pub fn run_load(spec: &LoadSpec) -> Result<FleetReport> {
     for (i, shard) in shards.iter().enumerate() {
         dump_chaos_snapshot(&format!("loadgen_seed_{}_shard_{i}", spec.seed), shard);
     }
-    Ok(FleetReport { aggregate, shards, ledger, latency: Summary::from(&latencies), mismatches })
+    Ok(FleetReport {
+        aggregate,
+        shards,
+        ledger,
+        latency: Summary::from(&latencies),
+        mismatches,
+        fixcache_entries: spec.fixcache_entries,
+    })
 }
 
 /// The bench-cell wrapper: a failed run becomes an explicit
@@ -427,6 +449,7 @@ mod tests {
             seed: 7,
             latency_budget: None,
             chaos: false,
+            fixcache_entries: 0,
         };
         let a = run_load(&spec).unwrap();
         let b = run_load(&spec).unwrap();
@@ -448,6 +471,51 @@ mod tests {
         assert!(a.latency.is_some(), "answered requests must produce latency samples");
     }
 
+    /// The loadgen determinism contract extended to the memo layer:
+    /// against a fault-free fleet, the same seed at the same
+    /// `--fixcache-entries` replays identical client ledgers AND
+    /// identical aggregate hit/miss/eviction/bytes counters.  This
+    /// holds because each session's executor serialises its requests
+    /// and co-homed sessions use disjoint keys: per key the first
+    /// arrival misses and every repeat hits, whatever the thread
+    /// interleaving — provided capacity is ample (no evictions).
+    #[test]
+    fn same_seed_with_a_warm_fixcache_replays_identical_ledgers_and_hit_counts() {
+        let spec = LoadSpec {
+            shards: 2,
+            clients: 4,
+            rounds: 4,
+            seed: 7,
+            latency_budget: None,
+            chaos: false,
+            fixcache_entries: 64,
+        };
+        let a = run_load(&spec).unwrap();
+        let b = run_load(&spec).unwrap();
+        assert_eq!(a.ledger, b.ledger, "client ledgers must replay bit-identically");
+        assert_eq!(
+            deterministic_counters(&a.aggregate),
+            deterministic_counters(&b.aggregate)
+        );
+        let cache_counters = |m: &MetricsSnapshot| {
+            (m.fixcache_hits, m.fixcache_misses, m.fixcache_evictions, m.fixcache_bytes)
+        };
+        assert_eq!(
+            cache_counters(&a.aggregate),
+            cache_counters(&b.aggregate),
+            "fixcache counters must replay bit-identically at ample capacity"
+        );
+        assert_eq!(a.aggregate.fixcache_evictions, 0, "ample capacity must not evict");
+        assert_eq!(a.mismatches, 0, "cache-served responses still verify bit-for-bit");
+        assert!(a.aggregate.conserved() && a.aggregate.shard_conserved, "{:?}", a.aggregate);
+        // the probe workload repeats keys, so the memo layer must land
+        assert!(a.aggregate.fixcache_hits > 0, "{}", a.aggregate.summary());
+        // and the cache-off baseline sees the same client-visible world
+        let off = run_load(&LoadSpec { fixcache_entries: 0, ..spec.clone() }).unwrap();
+        assert_eq!(off.ledger, a.ledger, "the cache must be client-invisible");
+        assert_eq!(off.aggregate.fixcache_hits + off.aggregate.fixcache_misses, 0);
+    }
+
     #[test]
     fn a_single_client_population_is_valid() {
         // clients < problem pool: the pool indexes must not assume one
@@ -459,6 +527,7 @@ mod tests {
             seed: 5,
             latency_budget: None,
             chaos: false,
+            fixcache_entries: 0,
         };
         let r = run_load(&spec).unwrap();
         assert_eq!(r.ledger.len(), 1);
@@ -477,6 +546,7 @@ mod tests {
             ledger: Vec::new(),
             latency: None,
             mismatches: 0,
+            fixcache_entries: 0,
         };
         assert!((r.rejection_rate() - 0.25).abs() < 1e-12);
     }

@@ -26,7 +26,11 @@
 //!   worker shipping per-node row diffs vs full planes — the PR-5
 //!   serving-protocol headline), and the *recovery*-restart cell
 //!   (steady-state enforcement vs the first enforcement after a forced
-//!   supervised restart — what a crash costs a live session).
+//!   supervised restart — what a crash costs a live session);
+//! * the fixpoint-cache cell (`fixcache_*`): the same enforcement
+//!   stream served cold (every request enforced) vs warm (every
+//!   request answered by the content-addressed memo layer) through a
+//!   cache-enabled CPU reference fleet — what a hit saves.
 //!
 //! Cells that cannot run are **explicitly marked** in the JSON
 //! (`*_skipped: "<reason>"` — e.g. `"no-artifacts"`) instead of being
@@ -505,7 +509,7 @@ impl<T> CellOutcome<T> {
     }
 }
 
-/// The seven comparison cells of one bench run.
+/// The eight comparison cells of one bench run.
 #[derive(Clone, Debug)]
 pub struct SacCells {
     /// Dispatched SIMD word kernels vs the scalar oracle (CPU; runs
@@ -528,6 +532,10 @@ pub struct SacCells {
     ///
     /// [`Handle::force_restart`]: crate::coordinator::Handle::force_restart
     pub recovery: CellOutcome<RecoveryComparison>,
+    /// Fixpoint-cache warm vs cold enforcement on the densest grid
+    /// cell (CPU; `fixcache_skipped: "disabled"` at
+    /// `--fixcache-entries 0`).
+    pub fixcache: CellOutcome<FixcacheComparison>,
 }
 
 impl SacCells {
@@ -540,6 +548,7 @@ impl SacCells {
             mixed: CellOutcome::Skipped(reason),
             search_delta: CellOutcome::Skipped(reason),
             recovery: CellOutcome::Skipped(reason),
+            fixcache: CellOutcome::Skipped(reason),
         }
     }
 }
@@ -553,15 +562,26 @@ pub fn artifacts_available() -> bool {
 /// Run every SAC comparison cell the environment permits, marking the
 /// rest with their skip reason (the satellite fix: `bench-rtac` used to
 /// silently omit artifact-gated cells).
-pub fn run_sac_cells(spec: &GridSpec, workers: usize) -> SacCells {
+pub fn run_sac_cells(spec: &GridSpec, workers: usize, fixcache_entries: usize) -> SacCells {
     // the SIMD kernel cell is CPU-only and engine-independent: measure
     // it even when the operator disabled the probe cells
     let simd = match simd_kernel_comparison(spec) {
         Some(c) => CellOutcome::Measured(c),
         None => CellOutcome::Skipped(SkipReason::EmptyGrid),
     };
+    // likewise CPU-only: the memo layer fronts the reference executor,
+    // so the warm-vs-cold cell runs offline whenever a capacity was
+    // configured
+    let fixcache = if fixcache_entries == 0 {
+        CellOutcome::Skipped(SkipReason::Disabled)
+    } else {
+        match fixcache_comparison(spec, fixcache_entries) {
+            Some(c) => CellOutcome::Measured(c),
+            None => CellOutcome::Skipped(SkipReason::EmptyGrid),
+        }
+    };
     if workers == 0 {
-        return SacCells { simd, ..SacCells::all_skipped(SkipReason::Disabled) };
+        return SacCells { simd, fixcache, ..SacCells::all_skipped(SkipReason::Disabled) };
     }
     let sac = match sac_probe_comparison(spec, workers) {
         Some(c) => CellOutcome::Measured(c),
@@ -571,6 +591,7 @@ pub fn run_sac_cells(spec: &GridSpec, workers: usize) -> SacCells {
         return SacCells {
             simd,
             sac,
+            fixcache,
             ..SacCells::all_skipped(SkipReason::NoArtifacts)
         };
     }
@@ -583,6 +604,7 @@ pub fn run_sac_cells(spec: &GridSpec, workers: usize) -> SacCells {
         return SacCells {
             simd,
             sac,
+            fixcache,
             ..SacCells::all_skipped(SkipReason::EmptyGrid)
         };
     };
@@ -608,7 +630,7 @@ pub fn run_sac_cells(spec: &GridSpec, workers: usize) -> SacCells {
         Some(c) => CellOutcome::Measured(c),
         None => CellOutcome::Skipped(SkipReason::SessionUnavailable),
     };
-    SacCells { simd, sac, sac_xla, delta, mixed, search_delta, recovery }
+    SacCells { simd, sac, sac_xla, delta, mixed, search_delta, recovery, fixcache }
 }
 
 /// Tensor-route upload-volume cell: the same SAC enforcement routed
@@ -998,7 +1020,110 @@ pub fn render_recovery(c: &RecoveryComparison) -> String {
     )
 }
 
-/// Human report of all seven comparison cells, including explicit skip
+/// Fixpoint-cache cell: the same enforcement stream served twice
+/// through a cache-enabled single-shard CPU reference fleet on the
+/// densest grid cell — a cold pass (every plane a miss: the native
+/// engine runs) and a warm pass (every plane a hit: the memo layer
+/// answers without enforcing).  CPU-only, so it measures offline;
+/// `--fixcache-entries 0` marks it `fixcache_skipped: "disabled"`.
+#[derive(Clone, Debug)]
+pub struct FixcacheComparison {
+    pub n: usize,
+    pub density: f64,
+    pub dom: usize,
+    /// Configured cache capacity (`--fixcache-entries`).
+    pub entries: usize,
+    /// Distinct input planes in the stream (each enforced once per
+    /// pass; capped below `entries` so the warm pass cannot evict).
+    pub planes: usize,
+    /// Wall time of the cold pass (all misses).
+    pub cold_ms: f64,
+    /// Wall time of the warm pass (all hits).
+    pub warm_ms: f64,
+    /// cold_ms / warm_ms (> 1 = warm beats cold).
+    pub speedup: f64,
+    pub hits: u64,
+    pub misses: u64,
+}
+
+/// Measure the fixpoint-cache warm-vs-cold cell.  `None` when the grid
+/// is empty or the stream could not be served; the caller gates
+/// `entries == 0` into the `"disabled"` marker before calling.
+pub fn fixcache_comparison(spec: &GridSpec, entries: usize) -> Option<FixcacheComparison> {
+    use crate::coordinator::{Fleet, FleetPolicy};
+    use crate::runtime::encode_vars;
+    use std::time::Duration;
+
+    let n = spec.sizes.iter().copied().max()?.min(60);
+    let density = spec
+        .densities
+        .iter()
+        .copied()
+        .max_by(|a, b| a.partial_cmp(b).unwrap())?;
+    let dom = spec.dom_size;
+    let p = random_csp(&RandomSpec::new(n, dom, density, spec.tightness, spec.seed));
+    let policy = FleetPolicy {
+        shards: 1,
+        request_timeout: Duration::from_secs(30),
+        fixcache_entries: entries,
+        ..FleetPolicy::default()
+    };
+    let fleet = Fleet::reference(policy).ok()?;
+    let client = fleet.client(&p).ok()?;
+    let bucket = client.bucket();
+    let init = encode_vars(&p, &State::new(&p), bucket).ok()?;
+    // the stream: the initial plane plus single-value prunings of the
+    // first few multi-valued variables — distinct monotone inputs, so
+    // the cold pass is all misses; capped at the cache capacity so the
+    // warm pass is all hits (nothing evicts between the passes)
+    let mut planes = vec![init.clone()];
+    for var in 0..p.n_vars() {
+        if planes.len() >= 8.min(entries) {
+            break;
+        }
+        if p.dom_size(var) < 2 {
+            continue;
+        }
+        let mut next = init.clone();
+        next[var * bucket.d] = 0.0;
+        planes.push(next);
+    }
+    let run_pass = |planes: &[Vec<f32>]| -> Option<f64> {
+        let sw = Stopwatch::start();
+        for plane in planes {
+            client.enforce_full(plane.clone()).ok()?;
+        }
+        Some(sw.elapsed_ms())
+    };
+    let cold_ms = run_pass(&planes)?;
+    let warm_ms = run_pass(&planes)?;
+    fleet.shutdown();
+    let m = fleet.snapshot();
+    Some(FixcacheComparison {
+        n,
+        density,
+        dom,
+        entries,
+        planes: planes.len(),
+        cold_ms,
+        warm_ms,
+        speedup: if warm_ms > 0.0 { cold_ms / warm_ms } else { 0.0 },
+        hits: m.fixcache_hits,
+        misses: m.fixcache_misses,
+    })
+}
+
+/// One-line report for the fixpoint-cache warm-vs-cold cell.
+pub fn render_fixcache(c: &FixcacheComparison) -> String {
+    format!(
+        "fixcache cell (n={}, density={:.2}, dom={}, {} entries): cold {:.2}ms vs warm \
+         {:.2}ms over {} plane(s) -> {:.2}x ({} hit(s), {} miss(es))\n",
+        c.n, c.density, c.dom, c.entries, c.cold_ms, c.warm_ms, c.planes, c.speedup, c.hits,
+        c.misses
+    )
+}
+
+/// Human report of all eight comparison cells, including explicit skip
 /// notes.
 pub fn render_cells(cells: &SacCells) -> String {
     let mut out = String::new();
@@ -1042,6 +1167,12 @@ pub fn render_cells(cells: &SacCells) -> String {
         CellOutcome::Measured(c) => out.push_str(&render_recovery(c)),
         CellOutcome::Skipped(r) => {
             out.push_str(&format!("recovery restart cell: skipped ({})\n", r.as_str()))
+        }
+    }
+    match &cells.fixcache {
+        CellOutcome::Measured(c) => out.push_str(&render_fixcache(c)),
+        CellOutcome::Skipped(r) => {
+            out.push_str(&format!("fixcache cell: skipped ({})\n", r.as_str()))
         }
     }
     out
@@ -1094,7 +1225,7 @@ pub fn render(results: &[CellResult], engines: &[&str]) -> String {
 }
 
 /// JSON export: grid metadata + one row per cell (BENCH_rtac.json),
-/// plus the densest-cell verdicts, the seven comparison cells, and the
+/// plus the densest-cell verdicts, the eight comparison cells, and the
 /// fleet load-harness cell ([`crate::bench::load::run_fleet_cell`]) —
 /// measured fields when run, an explicit `*_skipped: "<reason>"`
 /// marker when not (never silently absent).
@@ -1223,6 +1354,21 @@ pub fn to_json(
         }
         CellOutcome::Skipped(r) => fields.push(("recovery_restart_skipped", s(r.as_str()))),
     }
+    match &cells.fixcache {
+        CellOutcome::Measured(c) => {
+            fields.push(("fixcache_n", num(c.n as f64)));
+            fields.push(("fixcache_density", num(c.density)));
+            fields.push(("fixcache_dom", num(c.dom as f64)));
+            fields.push(("fixcache_entries", num(c.entries as f64)));
+            fields.push(("fixcache_planes", num(c.planes as f64)));
+            fields.push(("fixcache_cold_ms", num(c.cold_ms)));
+            fields.push(("fixcache_warm_ms", num(c.warm_ms)));
+            fields.push(("fixcache_warm_speedup", num(c.speedup)));
+            fields.push(("fixcache_hits", num(c.hits as f64)));
+            fields.push(("fixcache_misses", num(c.misses as f64)));
+        }
+        CellOutcome::Skipped(r) => fields.push(("fixcache_skipped", s(r.as_str()))),
+    }
     match fleet {
         CellOutcome::Measured(r) => {
             fields.push(("fleet_shards", num(r.aggregate.shards as f64)));
@@ -1246,6 +1392,18 @@ pub fn to_json(
                 "fleet_conserved",
                 Json::Bool(r.aggregate.conserved() && r.aggregate.shard_conserved),
             ));
+            // memo-layer columns only when the run configured a cache:
+            // zeros from a cache-less run would read as "enabled but
+            // never consulted"
+            if r.fixcache_entries > 0 {
+                fields.push(("fleet_fixcache_hits", num(r.aggregate.fixcache_hits as f64)));
+                fields.push(("fleet_fixcache_misses", num(r.aggregate.fixcache_misses as f64)));
+                fields
+                    .push(("fleet_fixcache_evictions", num(r.aggregate.fixcache_evictions as f64)));
+                fields.push(("fleet_fixcache_bytes", num(r.aggregate.fixcache_bytes as f64)));
+            } else {
+                fields.push(("fleet_fixcache_skipped", s("disabled")));
+            }
         }
         CellOutcome::Skipped(r) => fields.push(("fleet_skipped", s(r.as_str()))),
     }
@@ -1361,6 +1519,7 @@ mod tests {
             "sac_mixed_skipped",
             "search_delta_skipped",
             "recovery_restart_skipped",
+            "fixcache_skipped",
             "fleet_skipped",
         ] {
             assert_eq!(parsed.get(key).unwrap().as_str(), Some("disabled"), "{key}");
@@ -1388,12 +1547,15 @@ mod tests {
         m.rejected_requests = 1;
         m.failovers = 1;
         m.shard_conserved = true;
+        m.fixcache_hits = 4;
+        m.fixcache_misses = 2;
         let report = crate::bench::load::FleetReport {
             aggregate: m,
             shards: Vec::new(),
             ledger: Vec::new(),
             latency: crate::util::stats::Summary::from(&[1.0, 2.0, 3.0]),
             mismatches: 0,
+            fixcache_entries: 16,
         };
         let j = to_json(
             &spec,
@@ -1409,8 +1571,23 @@ mod tests {
         assert!(parsed.get("fleet_p50_ms").is_some() && parsed.get("fleet_p99_ms").is_some());
         assert_eq!(parsed.get("fleet_conserved"), Some(&Json::Bool(true)));
         assert!(parsed.get("fleet_skipped").is_none(), "measured cells carry no skip marker");
-        let line = render_fleet_cell(&CellOutcome::Measured(report));
+        assert_eq!(parsed.get("fleet_fixcache_hits").unwrap().as_f64(), Some(4.0));
+        assert_eq!(parsed.get("fleet_fixcache_misses").unwrap().as_f64(), Some(2.0));
+        assert!(parsed.get("fleet_fixcache_skipped").is_none());
+        let line = render_fleet_cell(&CellOutcome::Measured(report.clone()));
         assert!(line.contains("failovers=1") && line.contains("conserved=true"), "{line}");
+        // a cache-less run carries the explicit marker, never zeros
+        let mut off = report;
+        off.fixcache_entries = 0;
+        let j = to_json(
+            &spec,
+            &results,
+            &SacCells::all_skipped(SkipReason::Disabled),
+            &CellOutcome::Measured(off),
+        );
+        let parsed = crate::util::json::parse(&j.to_string()).unwrap();
+        assert_eq!(parsed.get("fleet_fixcache_skipped").unwrap().as_str(), Some("disabled"));
+        assert!(parsed.get("fleet_fixcache_hits").is_none());
     }
 
     #[test]
@@ -1424,14 +1601,20 @@ mod tests {
             seed: 2,
         };
         // workers == 0: the probe cells are disabled, but the CPU-only
-        // SIMD kernel cell still measures
-        let cells = run_sac_cells(&spec, 0);
+        // SIMD and fixcache cells still measure
+        let cells = run_sac_cells(&spec, 0, 16);
         assert!(cells.simd.measured().is_some(), "the SIMD cell ignores --sac-workers");
         assert!(matches!(cells.sac, CellOutcome::Skipped(SkipReason::Disabled)));
         assert!(matches!(cells.mixed, CellOutcome::Skipped(SkipReason::Disabled)));
+        let fx = cells.fixcache.measured().expect("the fixcache cell ignores --sac-workers");
+        assert!(fx.hits >= fx.planes as u64, "the warm pass must hit every plane");
+        assert!(fx.misses >= fx.planes as u64, "the cold pass must miss every plane");
+        // --fixcache-entries 0 marks the cell disabled
+        let cells = run_sac_cells(&spec, 0, 0);
+        assert!(matches!(cells.fixcache, CellOutcome::Skipped(SkipReason::Disabled)));
         // workers > 0: the CPU cell always measures; the tensor cells
         // either measure (artifacts present) or carry the gate marker
-        let cells = run_sac_cells(&spec, 2);
+        let cells = run_sac_cells(&spec, 2, 0);
         assert!(cells.sac.measured().is_some(), "the CPU cell needs no artifacts");
         if !artifacts_available() {
             assert!(matches!(cells.sac_xla, CellOutcome::Skipped(SkipReason::NoArtifacts)));
@@ -1443,7 +1626,7 @@ mod tests {
             ));
             assert!(matches!(cells.recovery, CellOutcome::Skipped(SkipReason::NoArtifacts)));
         }
-        // render always mentions all seven cells
+        // render always mentions all eight cells
         let txt = render_cells(&cells);
         for needle in [
             "simd kernel cell",
@@ -1453,6 +1636,7 @@ mod tests {
             "sac mixed cell",
             "search delta cell",
             "recovery restart cell",
+            "fixcache cell",
         ] {
             assert!(txt.contains(needle), "render_cells misses {needle}: {txt}");
         }

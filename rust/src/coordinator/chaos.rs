@@ -23,6 +23,7 @@ use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{mpsc, Arc};
 use std::time::Duration;
 
+use crate::coordinator::fixcache::FixCache;
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::service::{resolve_payload, BaseSlots, Msg, Response, Supervisor};
 use crate::core::Problem;
@@ -85,6 +86,12 @@ pub(crate) struct FaultPlan {
     /// holds while the fleet re-places the shard's sessions onto
     /// survivors.
     pub(crate) kill_shard_at: Vec<u64>,
+    /// Fixpoint-cache wipes ([`FixCache::wipe`]) before request N: the
+    /// memo layer loses every warm entry and request N (plus everything
+    /// after it, until re-warmed) takes the miss path — the closure
+    /// served must stay bit-identical, only `fixcache_hits` moves.
+    /// A no-op when the session runs cache-less.
+    pub(crate) wipe_fixcache_at: Vec<u64>,
 }
 
 impl FaultPlan {
@@ -110,6 +117,20 @@ impl FaultPlan {
                 2 => plan.fail_streak_at.push(at),
                 _ => plan.wipe_bases_at.push(at),
             }
+        }
+        // fixpoint-cache wipes ride a DISJOINT xorshift stream (like
+        // the fleet kill stream below) so the four historical fault
+        // kinds replay bit-identically under every seed that predates
+        // the memo layer; roughly one seed in three wipes once.
+        let mut s2 = seed.wrapping_mul(0xBF58_476D_1CE4_E5B9) | 1;
+        let mut next2 = move || {
+            s2 ^= s2 << 13;
+            s2 ^= s2 >> 7;
+            s2 ^= s2 << 17;
+            s2
+        };
+        if next2() % 3 == 0 {
+            plan.wipe_fixcache_at.push(1 + next2() % 8);
         }
         plan
     }
@@ -152,6 +173,10 @@ impl FaultPlan {
 /// executor.  `health` is the hosting shard's liveness flag (flipped by
 /// kill-shard faults and by moribund exhaustion so the fleet tier can
 /// fail the shard over); standalone sessions pass `ShardHealth::new()`.
+/// `fixcache` is the (optionally shard-shared) fixpoint memo layer:
+/// exactly like the production executor thread, a hit skips the native
+/// enforcement and still answers as a normal response, keyed here by
+/// `(problem fingerprint, input-plane fingerprint)`.
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn chaos_reference_executor(
     problem: Problem,
@@ -161,6 +186,7 @@ pub(crate) fn chaos_reference_executor(
     max_restarts: u32,
     plan: FaultPlan,
     health: ShardHealth,
+    fixcache: Option<Arc<FixCache>>,
     rx: mpsc::Receiver<Msg>,
     metrics: Arc<Metrics>,
 ) -> std::thread::JoinHandle<()> {
@@ -192,7 +218,11 @@ pub(crate) fn chaos_reference_executor(
     // offline stand-in for the production rtac-executor thread)
     std::thread::spawn(move || {
         use crate::ac::{rtac::RtacNative, Counters, Propagator};
-        use crate::runtime::{decode_vars, encode_vars};
+        use crate::runtime::{decode_vars, encode_vars, plane_fingerprint};
+        // the constraint half of every cache key, hashed once — the
+        // reference executor is content-addressed by the problem itself
+        // (the production executor hashes its encoded constraint tensor)
+        let cons_fp = crate::ac::sac::problem_fingerprint(&problem);
         let mut slots = BaseSlots::new(base_slots);
         let mut engine = RtacNative::dense();
         let mut supervisor = Supervisor::new(max_restarts);
@@ -241,6 +271,12 @@ pub(crate) fn chaos_reference_executor(
                 let n = slots.wipe();
                 eprintln!("chaos-executor: wiped {n} base slot(s) before request {i}");
             }
+            if plan.wipe_fixcache_at.contains(&i) {
+                if let Some(cache) = &fixcache {
+                    let n = cache.wipe();
+                    eprintln!("chaos-executor: wiped {n} fixcache entr(y/ies) before request {i}");
+                }
+            }
             if plan.crash_at.contains(&i) {
                 // the crash kills the exec state with request i in
                 // flight; after the restart the request is served
@@ -279,6 +315,29 @@ pub(crate) fn chaos_reference_executor(
                 metrics.on_stale_delta(client);
                 continue; // responder dropped, like the real executor
             };
+            // fixpoint-cache consult (mirrors the production executor's
+            // step 3b): a hit answers as a normal response — counted in
+            // `responses`, NOT in `batches` — with the stored closure
+            // and sweep count, bit-identical to running the engine
+            let input_fp = plane_fingerprint(&plane);
+            if let Some(cache) = &fixcache {
+                if let Some(hit) = cache.lookup_plane(cons_fp, input_fp) {
+                    metrics.on_fixcache_hit();
+                    let status = if hit.wiped { STATUS_WIPEOUT } else { 0 };
+                    metrics.on_response(client, Duration::ZERO, Duration::ZERO, hit.iters, hit.wiped);
+                    let _ = req.resp.send(Response {
+                        plane: hit.plane,
+                        status,
+                        iters: hit.iters,
+                        batch_real: 1,
+                        batch_capacity: 1,
+                        queue_time: Duration::ZERO,
+                        total_time: Duration::ZERO,
+                    });
+                    continue;
+                }
+                metrics.on_fixcache_miss();
+            }
             let mut state = crate::core::State::new(&problem);
             decode_vars(&problem, &mut state, &plane, bucket).expect("monotone input plane");
             let mut c = Counters::default();
@@ -287,6 +346,16 @@ pub(crate) fn chaos_reference_executor(
             supervisor.on_batch_ok();
             let status = if out.is_consistent() { 0 } else { STATUS_WIPEOUT };
             let out_plane = encode_vars(&problem, &state, bucket).expect("fits the bucket");
+            if let Some(cache) = &fixcache {
+                let (evicted, bytes) = cache.insert_plane(
+                    cons_fp,
+                    input_fp,
+                    out_plane.clone(),
+                    status == STATUS_WIPEOUT,
+                    c.recurrences as i32,
+                );
+                metrics.on_fixcache_insert(bytes, evicted);
+            }
             metrics.on_batch(1, 1, Duration::from_micros(1));
             metrics.on_response(
                 client,
@@ -333,6 +402,7 @@ pub(crate) fn cpu_reference_executor(
         policy.max_restarts,
         FaultPlan::default(),
         ShardHealth::new(),
+        None,
         rx,
         metrics,
     )
@@ -361,6 +431,22 @@ pub(crate) fn chaos_session(
     request_timeout: Duration,
     max_restarts: u32,
 ) -> (crate::coordinator::Handle, std::thread::JoinHandle<()>) {
+    chaos_session_with_cache(problem, bucket, plan, request_timeout, max_restarts, None)
+}
+
+/// [`chaos_session`] with an explicit (possibly shared) fixpoint memo
+/// layer — the fixture behind the differential cache-equivalence
+/// battery: the same problem, plan, and request stream served cache-off
+/// vs cache-on vs capacity-1 must reach bit-identical closures.
+#[cfg(test)]
+pub(crate) fn chaos_session_with_cache(
+    problem: &Problem,
+    bucket: Bucket,
+    plan: FaultPlan,
+    request_timeout: Duration,
+    max_restarts: u32,
+    fixcache: Option<Arc<FixCache>>,
+) -> (crate::coordinator::Handle, std::thread::JoinHandle<()>) {
     let base_slots = crate::coordinator::BatchPolicy::default().base_slots;
     let (h, rx) =
         crate::coordinator::Handle::for_reference_executor(bucket, base_slots, request_timeout);
@@ -372,6 +458,7 @@ pub(crate) fn chaos_session(
         max_restarts,
         plan,
         ShardHealth::new(),
+        fixcache,
         rx,
         h.metrics.clone(),
     );
@@ -415,12 +502,168 @@ mod tests {
             assert_eq!(base.hang_at, fleet.hang_at, "seed {seed}");
             assert_eq!(base.fail_streak_at, fleet.fail_streak_at, "seed {seed}");
             assert_eq!(base.wipe_bases_at, fleet.wipe_bases_at, "seed {seed}");
+            assert_eq!(base.wipe_fixcache_at, fleet.wipe_fixcache_at, "seed {seed}");
             assert!(base.kill_shard_at.is_empty(), "seeded() must stay single-session");
         }
         // the fleet variant does inject shard kills on some seeds
         let kills: usize =
             (1..=32u64).map(|s| FaultPlan::seeded_fleet(s).kill_shard_at.len()).sum();
         assert!(kills > 0, "at least one of 32 seeds must kill a shard");
+        // and the disjoint fixcache stream does wipe on some seeds
+        let wipes: usize =
+            (1..=32u64).map(|s| FaultPlan::seeded(s).wipe_fixcache_at.len()).sum();
+        assert!(wipes > 0, "at least one of 32 seeds must wipe the fixcache");
+    }
+
+    #[test]
+    fn fixcache_hit_serves_the_identical_closure_without_a_batch() {
+        use crate::gen::random::{random_csp, RandomSpec};
+        use crate::runtime::encode_vars;
+        let bucket = Bucket { n: 8, d: 4 };
+        let p = random_csp(&RandomSpec::new(6, 4, 0.7, 0.4, 23));
+        let cache = FixCache::shared(16);
+        let (h, join) = chaos_session_with_cache(
+            &p,
+            bucket,
+            FaultPlan::default(),
+            Duration::from_secs(5),
+            3,
+            cache.clone(),
+        );
+        let s = crate::core::State::new(&p);
+        let plane = encode_vars(&p, &s, bucket).unwrap();
+        let cold = h.enforce_blocking(plane.clone()).unwrap();
+        let warm = h.enforce_blocking(plane).unwrap();
+        assert_eq!(cold.plane, warm.plane, "a hit must serve the identical closure");
+        assert_eq!(cold.status, warm.status);
+        assert_eq!(cold.iters, warm.iters, "the stored sweep count replays bit-identically");
+        let m = h.metrics.snapshot();
+        drop(h);
+        join.join().unwrap();
+        assert!(m.conserved(), "{}", m.summary());
+        assert_eq!(m.fixcache_hits, 1, "{}", m.summary());
+        assert_eq!(m.fixcache_misses, 1, "{}", m.summary());
+        assert_eq!(m.batches, 1, "the hit must skip the enforcement entirely");
+        assert_eq!(m.responses, 2, "the hit still counts as a normal response");
+        let stats = cache.unwrap().stats();
+        assert_eq!((stats.hits, stats.misses), (1, 1));
+    }
+
+    #[test]
+    fn poisoned_fixcache_entry_is_detected_and_recomputed_not_served() {
+        use crate::ac::sac::problem_fingerprint;
+        use crate::gen::random::{random_csp, RandomSpec};
+        use crate::runtime::{encode_vars, plane_fingerprint};
+        let bucket = Bucket { n: 8, d: 4 };
+        let p = random_csp(&RandomSpec::new(6, 4, 0.7, 0.4, 29));
+        let cache = FixCache::shared(16).unwrap();
+        let (h, join) = chaos_session_with_cache(
+            &p,
+            bucket,
+            FaultPlan::default(),
+            Duration::from_secs(5),
+            3,
+            Some(cache.clone()),
+        );
+        let s = crate::core::State::new(&p);
+        let plane = encode_vars(&p, &s, bucket).unwrap();
+        let cold = h.enforce_blocking(plane.clone()).unwrap();
+        // corrupt the resident entry's payload WITHOUT refreshing its
+        // stored fingerprint — the canary: the lookup's re-check must
+        // catch the mismatch, evict, and fall through to a recompute
+        let cons_fp = problem_fingerprint(&p);
+        let input_fp = plane_fingerprint(&plane);
+        assert!(cache.poison(cons_fp, input_fp), "the cold solve must have been admitted");
+        let recomputed = h.enforce_blocking(plane).unwrap();
+        assert_eq!(
+            cold.plane, recomputed.plane,
+            "the corrupted entry must never be served — the engine reruns"
+        );
+        let m = h.metrics.snapshot();
+        drop(h);
+        join.join().unwrap();
+        assert!(m.conserved(), "{}", m.summary());
+        assert_eq!(m.fixcache_hits, 0, "a poisoned entry is not a hit");
+        assert_eq!(m.fixcache_misses, 2, "{}", m.summary());
+        assert!(
+            cache.stats().evictions >= 1,
+            "poison detection must eject the corrupted entry"
+        );
+        assert_eq!(m.batches, 2, "both solves ran the engine");
+    }
+
+    /// The 8-seed differential leg of the cache-equivalence battery:
+    /// the same seeded chaos plan (crashes, hangs, failed streaks, base
+    /// wipes, fixcache wipes) driven over the same request stream must
+    /// produce *bit-identical per-request outcomes* — same closure
+    /// plane, status, and sweep count on success, an error on the same
+    /// requests otherwise — whether the memo layer is off, ample, or a
+    /// thrashing capacity-1, and every variant's ledger must conserve.
+    #[test]
+    fn seeded_chaos_replays_bit_identically_across_cache_variants() {
+        use crate::gen::random::{random_csp, RandomSpec};
+        use crate::runtime::encode_vars;
+        let bucket = Bucket { n: 8, d: 4 };
+        let p = random_csp(&RandomSpec::new(6, 4, 0.7, 0.4, 7));
+        let s0 = crate::core::State::new(&p);
+        let full = encode_vars(&p, &s0, bucket).unwrap();
+        // a second, tighter input plane so capacity-1 actually thrashes
+        let mut pruned = full.clone();
+        pruned[0] = 0.0;
+        let planes = [full, pruned];
+        let mut total_hits = 0u64;
+        for seed in [1u64, 2, 3, 5, 8, 13, 21, 34] {
+            // hang faults turn on wall-clock timing (sleep past the
+            // deadline), which can flip a *neighbouring* request's
+            // outcome under scheduler noise — strip them so the
+            // bit-identity comparison is deterministic; the timeout
+            // path has its own dedicated battery
+            let mut plan = FaultPlan::seeded(seed);
+            plan.hang_at.clear();
+            let mut outcomes: Vec<Vec<Result<(Vec<f32>, i32, i32), String>>> = Vec::new();
+            for entries in [0usize, 64, 1] {
+                let (h, join) = chaos_session_with_cache(
+                    &p,
+                    bucket,
+                    plan.clone(),
+                    Duration::from_secs(1),
+                    8,
+                    FixCache::shared(entries),
+                );
+                let mut run = Vec::new();
+                for _round in 0..3 {
+                    for plane in &planes {
+                        run.push(
+                            h.enforce_blocking(plane.clone())
+                                .map(|r| (r.plane, r.status, r.iters))
+                                .map_err(|e| format!("{e:#}")),
+                        );
+                    }
+                }
+                let m = h.metrics.snapshot();
+                drop(h);
+                join.join().unwrap();
+                assert!(m.conserved(), "seed {seed} entries {entries}: {}", m.summary());
+                if entries == 64 {
+                    total_hits += m.fixcache_hits;
+                }
+                outcomes.push(run);
+            }
+            let (off, on, cap1) = (&outcomes[0], &outcomes[1], &outcomes[2]);
+            for (i, base) in off.iter().enumerate() {
+                match (base, &on[i], &cap1[i]) {
+                    (Ok(a), Ok(b), Ok(c)) => {
+                        assert_eq!(a, b, "seed {seed} req {i}: cache-on diverged");
+                        assert_eq!(a, c, "seed {seed} req {i}: capacity-1 diverged");
+                    }
+                    (Err(_), Err(_), Err(_)) => {}
+                    _ => panic!(
+                        "seed {seed} req {i}: fault outcomes diverged across cache variants"
+                    ),
+                }
+            }
+        }
+        assert!(total_hits > 0, "the warm variant must hit at least once across 8 seeds");
     }
 
     #[test]
@@ -445,6 +688,7 @@ mod tests {
             3,
             plan,
             health.clone(),
+            None,
             rx,
             h.metrics.clone(),
         );

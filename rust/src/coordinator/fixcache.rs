@@ -1,0 +1,559 @@
+//! Content-addressed fixpoint memo layer — the bounded LRU cache
+//! consulted before any enforcement round actually runs.
+//!
+//! Everything on the serving path is already content-fingerprinted:
+//! constraint networks ([`crate::ac::sac::problem_fingerprint`], the
+//! fleet's placement key), domain planes
+//! ([`crate::runtime::plane_fingerprint`], the delta-base key).  A
+//! [`FixCache`] composes the two into a memo key
+//! `(constraint fingerprint, input-plane fingerprint)` and stores the
+//! *result* of enforcement: the fixpoint plane (or the UNSAT verdict)
+//! plus the sweep count the recurrence took to reach it.
+//!
+//! Memoisation is sound because the AC/SAC closure is **unique** (the
+//! paper's Prop. 1 — the same argument that makes probe backends
+//! interchangeable): two enforcements of the same constraint network on
+//! the same input plane can only ever produce the same fixpoint, the
+//! same wipeout verdict, and the same joint sweep count.  A hit
+//! therefore answers bit-identically to the execution it skipped.
+//!
+//! Three layers consult one of these (all through this one type, so
+//! the eviction and poison-detection rules cannot drift):
+//!
+//! * the production executor thread and the chaos CPU-reference
+//!   executor, before dispatching a fused `fixb*` execution — a hit
+//!   skips the tensor round entirely and still counts toward
+//!   conservation as a normal response;
+//! * [`crate::ac::sac::SacParallel`] probe rounds, so repeated
+//!   singleton probes across SAC iterations and search restarts
+//!   short-circuit.  A probe *round* is itself content-addressed —
+//!   `(constraint network, launch domains, probe list) → (verdict
+//!   vector, counter delta)` — and closure uniqueness makes replaying
+//!   a memoised round bit-identical to running it, work counters
+//!   included ([`FixCache::insert_round`]/[`FixCache::lookup_round`]);
+//! * the fleet tier, which owns one shared cache **per shard** —
+//!   rendezvous-placed duplicate sessions share warm entries, and
+//!   failover replays repopulate the survivors' caches.
+//!
+//! # Poison detection
+//!
+//! Every plane entry stores its own content fingerprint, computed at
+//! insert.  A plane lookup re-fingerprints the resident plane before
+//! serving it; a mismatch means the entry was corrupted after
+//! admission (a torn write, a stray mutation, a bug) — the entry is
+//! **evicted and reported as a miss**, never served.  The canary test
+//! battery corrupts an entry deliberately and proves exactly that.
+//!
+//! ```
+//! use rtac::coordinator::FixCache;
+//!
+//! let cache = FixCache::new(2);
+//! assert!(cache.lookup_plane(1, 2).is_none(), "cold cache");
+//! cache.insert_plane(1, 2, vec![1.0, 0.0], false, 3);
+//! let hit = cache.lookup_plane(1, 2).expect("warm cache");
+//! assert_eq!(hit.plane, vec![1.0, 0.0]);
+//! assert_eq!(hit.iters, 3);
+//! let stats = cache.stats();
+//! assert_eq!((stats.hits, stats.misses), (1, 1));
+//! ```
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::ac::Counters;
+use crate::runtime::plane_fingerprint;
+
+/// Cumulative cache statistics, mirrored into
+/// [`crate::coordinator::Metrics`] on the serving paths (`fixcache_*`
+/// counters) and read directly by layers that carry no metrics sink
+/// (the SAC probe loop, the bench cells).  `bytes` is the cumulative
+/// volume **admitted** (a monotonic counter, like `shipped_f32`), not
+/// a residency gauge — so per-shard stats aggregate by summation.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct FixCacheStats {
+    /// Lookups answered from a resident entry.
+    pub hits: u64,
+    /// Lookups that found no (usable) entry — including plane lookups
+    /// that found only a verdict entry, and poisoned entries that
+    /// failed the fingerprint re-check.
+    pub misses: u64,
+    /// Entries evicted: LRU displacement under the capacity bound,
+    /// plus poisoned entries ejected by the fingerprint re-check.
+    /// Fault-injected wipes ([`FixCache::wipe`]) are *not* counted
+    /// here — they are a chaos event, not cache pressure.
+    pub evictions: u64,
+    /// Bytes admitted across all inserts (entry header + plane
+    /// payload), cumulative.
+    pub bytes: u64,
+}
+
+/// What a plane lookup returns: everything the executor needs to
+/// synthesise a [`crate::coordinator::Response`] without running the
+/// recurrence — the fixpoint plane, the wipeout verdict, and the joint
+/// sweep count of the execution that originally produced it (unique,
+/// so replaying it keeps iteration accounting bit-identical to the
+/// skipped run).
+#[derive(Clone, Debug, PartialEq)]
+pub struct CachedFixpoint {
+    /// The enforced fixpoint plane, exactly as the original execution
+    /// produced it.
+    pub plane: Vec<f32>,
+    /// True when the original enforcement wiped out (UNSAT).
+    pub wiped: bool,
+    /// Joint sweep count of the original enforcement.
+    pub iters: i32,
+    /// Work-counter delta of the original enforcement.  Executor plane
+    /// entries carry the tensor-side accounting (`recurrences =
+    /// iters`); probe-round entries carry the full delta the round
+    /// contributed, so a hit replays counter state bit-identically.
+    pub delta: Counters,
+}
+
+/// One resident memo entry.  `plane` is `None` for verdict-only
+/// entries (SAC probe rounds record pass/fail + sweeps; the probe's
+/// closure plane is never read back).
+struct Entry {
+    cons_fp: u64,
+    input_fp: u64,
+    plane: Option<Vec<f32>>,
+    /// Content fingerprint of `plane` at admission — re-checked on
+    /// every plane lookup (poison detection).  0 for verdict entries.
+    plane_fp: u64,
+    wiped: bool,
+    iters: i32,
+    /// Counter delta of the original enforcement (see
+    /// [`CachedFixpoint::delta`]).
+    delta: Counters,
+}
+
+impl Entry {
+    /// Admission size: the fixed header plus the plane payload.
+    fn bytes(&self) -> u64 {
+        (std::mem::size_of::<Entry>()
+            + self.plane.as_ref().map_or(0, |p| p.len() * std::mem::size_of::<f32>()))
+            as u64
+    }
+}
+
+/// The bounded store: at most `cap` entries, most-recently-used LAST
+/// (the same `Vec`-scan LRU as the executor's `BaseSlots` — capacities
+/// are tens to hundreds, where a scan beats a map and keeps recency
+/// maintenance a `remove`+`push`).
+struct Slots {
+    cap: usize,
+    entries: Vec<Entry>,
+}
+
+impl Slots {
+    fn position(&self, cons_fp: u64, input_fp: u64) -> Option<usize> {
+        self.entries
+            .iter()
+            .position(|e| e.cons_fp == cons_fp && e.input_fp == input_fp)
+    }
+}
+
+/// A bounded, LRU-evicting, content-addressed fixpoint cache, shared
+/// across threads (`Arc<FixCache>`): the executor thread, K probe
+/// workers, or every session of a fleet shard.  See the module docs
+/// for the key derivation and the soundness argument; `0` configured
+/// entries means "no cache" and is represented as `None` at the call
+/// sites ([`FixCache::shared`]).
+pub struct FixCache {
+    slots: Mutex<Slots>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    evictions: AtomicU64,
+    bytes: AtomicU64,
+}
+
+impl std::fmt::Debug for FixCache {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let stats = self.stats();
+        f.debug_struct("FixCache")
+            .field("len", &self.len())
+            .field("stats", &stats)
+            .finish()
+    }
+}
+
+impl FixCache {
+    /// A cache bounded at `entries` resident fixpoints (clamped to
+    /// >= 1 — a zero-capacity cache is "no cache", spelled `None`;
+    /// see [`FixCache::shared`]).
+    pub fn new(entries: usize) -> FixCache {
+        FixCache {
+            slots: Mutex::new(Slots { cap: entries.max(1), entries: Vec::new() }),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+            bytes: AtomicU64::new(0),
+        }
+    }
+
+    /// The configuration-boundary constructor: `--fixcache-entries 0`
+    /// disables the cache, so `0` maps to `None` and every consult
+    /// site stays a plain `if let Some(cache)`.
+    pub fn shared(entries: usize) -> Option<Arc<FixCache>> {
+        (entries > 0).then(|| Arc::new(FixCache::new(entries)))
+    }
+
+    /// Look up the fixpoint plane memoised under `(cons_fp,
+    /// input_fp)`.  Refreshes the entry's recency on a hit.  Returns
+    /// `None` (a counted miss) when the key is absent, resident only
+    /// as a verdict entry, or **poisoned** — the resident plane no
+    /// longer matches the fingerprint recorded at admission, in which
+    /// case the entry is also evicted (counted) so corruption cannot
+    /// be served later either.
+    pub fn lookup_plane(&self, cons_fp: u64, input_fp: u64) -> Option<CachedFixpoint> {
+        let mut slots = self.slots.lock().unwrap();
+        let Some(i) = slots.position(cons_fp, input_fp) else {
+            self.misses.fetch_add(1, Ordering::Relaxed);
+            return None;
+        };
+        if slots.entries[i].plane.is_none() {
+            // verdict-only entry: nothing to serve a plane lookup with
+            self.misses.fetch_add(1, Ordering::Relaxed);
+            return None;
+        }
+        // poison detection: re-fingerprint the resident plane before
+        // serving it; a mismatch evicts instead of answering
+        let entry = &slots.entries[i];
+        let plane = entry.plane.as_ref().expect("checked above");
+        if plane_fingerprint(plane) != entry.plane_fp {
+            slots.entries.remove(i);
+            self.evictions.fetch_add(1, Ordering::Relaxed);
+            self.misses.fetch_add(1, Ordering::Relaxed);
+            return None;
+        }
+        let entry = slots.entries.remove(i);
+        let hit = CachedFixpoint {
+            plane: entry.plane.clone().expect("checked above"),
+            wiped: entry.wiped,
+            iters: entry.iters,
+            delta: entry.delta,
+        };
+        slots.entries.push(entry);
+        self.hits.fetch_add(1, Ordering::Relaxed);
+        Some(hit)
+    }
+
+    /// Look up just the wipeout verdict (+ sweep count) memoised under
+    /// `(cons_fp, input_fp)` — the SAC probe-round consult: the merge
+    /// loop needs pass/fail and the counter delta, never the probe's
+    /// closure plane.  Served by plane entries too (a memoised plane
+    /// implies its verdict).  Refreshes recency on a hit.
+    pub fn lookup_verdict(&self, cons_fp: u64, input_fp: u64) -> Option<(bool, i32)> {
+        let mut slots = self.slots.lock().unwrap();
+        let Some(i) = slots.position(cons_fp, input_fp) else {
+            self.misses.fetch_add(1, Ordering::Relaxed);
+            return None;
+        };
+        let entry = slots.entries.remove(i);
+        let verdict = (entry.wiped, entry.iters);
+        slots.entries.push(entry);
+        self.hits.fetch_add(1, Ordering::Relaxed);
+        Some(verdict)
+    }
+
+    /// Admit the fixpoint `plane` (with its wipeout verdict and sweep
+    /// count) under `(cons_fp, input_fp)`.  Re-inserting a resident
+    /// key replaces it in place (upgrading a verdict-only entry to a
+    /// full plane entry); a fresh key under a full cache evicts the
+    /// LRU entry.  Returns `(evicted, bytes_admitted)` so serving
+    /// paths can mirror the accounting into their
+    /// [`crate::coordinator::Metrics`].
+    pub fn insert_plane(
+        &self,
+        cons_fp: u64,
+        input_fp: u64,
+        plane: Vec<f32>,
+        wiped: bool,
+        iters: i32,
+    ) -> (bool, u64) {
+        let plane_fp = plane_fingerprint(&plane);
+        // the tensor-side counter accounting of a fused response is
+        // exactly its joint sweep count
+        let delta = Counters { recurrences: iters.max(0) as u64, ..Counters::default() };
+        self.insert(Entry { cons_fp, input_fp, plane: Some(plane), plane_fp, wiped, iters, delta })
+    }
+
+    /// Admit one SAC probe *round*: the verdict vector (`true` = that
+    /// probe's fixpoint stayed consistent, in probe order) plus the
+    /// counter delta the round contributed, keyed by `(cons_fp,
+    /// round_fp)` where `round_fp` fingerprints the launch domains and
+    /// the probe list.  Stored as a 0.0/1.0 plane payload, so round
+    /// entries get the same LRU, byte accounting, and poison-detection
+    /// re-check as executor plane entries.
+    pub fn insert_round(
+        &self,
+        cons_fp: u64,
+        round_fp: u64,
+        verdicts: &[bool],
+        delta: &Counters,
+    ) -> (bool, u64) {
+        let plane: Vec<f32> = verdicts.iter().map(|&v| if v { 1.0 } else { 0.0 }).collect();
+        let plane_fp = plane_fingerprint(&plane);
+        self.insert(Entry {
+            cons_fp,
+            input_fp: round_fp,
+            plane: Some(plane),
+            plane_fp,
+            wiped: false,
+            iters: delta.recurrences.min(i32::MAX as u64) as i32,
+            delta: *delta,
+        })
+    }
+
+    /// Look up a memoised probe round (see [`FixCache::insert_round`]).
+    /// Shares the plane-lookup internals, so a poisoned round entry is
+    /// detected by the fingerprint re-check, evicted, and reported as a
+    /// miss — a corrupted verdict vector is never replayed.
+    pub fn lookup_round(&self, cons_fp: u64, round_fp: u64) -> Option<(Vec<bool>, Counters)> {
+        let hit = self.lookup_plane(cons_fp, round_fp)?;
+        Some((hit.plane.iter().map(|&v| v != 0.0).collect(), hit.delta))
+    }
+
+    /// Admit a verdict-only entry (no plane payload) — the SAC
+    /// probe-round insert.  A resident plane entry for the same key is
+    /// left intact (it already implies the verdict).  Returns
+    /// `(evicted, bytes_admitted)` like [`FixCache::insert_plane`].
+    pub fn insert_verdict(
+        &self,
+        cons_fp: u64,
+        input_fp: u64,
+        wiped: bool,
+        iters: i32,
+    ) -> (bool, u64) {
+        let mut slots = self.slots.lock().unwrap();
+        if let Some(i) = slots.position(cons_fp, input_fp) {
+            // refresh recency; never downgrade a plane entry
+            let entry = slots.entries.remove(i);
+            slots.entries.push(entry);
+            return (false, 0);
+        }
+        drop(slots);
+        let delta = Counters { recurrences: iters.max(0) as u64, ..Counters::default() };
+        self.insert(Entry { cons_fp, input_fp, plane: None, plane_fp: 0, wiped, iters, delta })
+    }
+
+    fn insert(&self, entry: Entry) -> (bool, u64) {
+        let bytes = entry.bytes();
+        let mut slots = self.slots.lock().unwrap();
+        if let Some(i) = slots.position(entry.cons_fp, entry.input_fp) {
+            slots.entries.remove(i);
+            slots.entries.push(entry);
+            self.bytes.fetch_add(bytes, Ordering::Relaxed);
+            return (false, bytes);
+        }
+        let evicted = slots.entries.len() >= slots.cap;
+        if evicted {
+            slots.entries.remove(0);
+            self.evictions.fetch_add(1, Ordering::Relaxed);
+        }
+        slots.entries.push(entry);
+        self.bytes.fetch_add(bytes, Ordering::Relaxed);
+        (evicted, bytes)
+    }
+
+    /// Drop every resident entry — the fault-injection cache wipe
+    /// (`FaultPlan::wipe_fixcache_at`).  Semantically invisible:
+    /// every later lookup simply misses and re-derives.  Returns how
+    /// many entries were wiped; they are *not* counted as evictions
+    /// (a wipe is a chaos event, not cache pressure).
+    pub fn wipe(&self) -> usize {
+        let mut slots = self.slots.lock().unwrap();
+        let n = slots.entries.len();
+        slots.entries.clear();
+        n
+    }
+
+    /// Resident entries right now (a gauge, unlike the cumulative
+    /// [`FixCacheStats`]).
+    pub fn len(&self) -> usize {
+        self.slots.lock().unwrap().entries.len()
+    }
+
+    /// True when nothing is resident.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Cumulative statistics since construction.
+    pub fn stats(&self) -> FixCacheStats {
+        FixCacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
+            bytes: self.bytes.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Corrupt the resident plane stored under `(cons_fp, input_fp)`
+    /// *without* updating its admission fingerprint — the canary
+    /// battery's deliberate poisoning.  Returns true when an entry
+    /// with a plane was found and corrupted.
+    #[cfg(test)]
+    pub(crate) fn poison(&self, cons_fp: u64, input_fp: u64) -> bool {
+        let mut slots = self.slots.lock().unwrap();
+        let Some(i) = slots.position(cons_fp, input_fp) else { return false };
+        match slots.entries[i].plane.as_mut() {
+            Some(plane) if !plane.is_empty() => {
+                // flip one domain bit: 1.0 <-> 0.0
+                plane[0] = if plane[0] == 0.0 { 1.0 } else { 0.0 };
+                true
+            }
+            _ => false,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cold_miss_then_warm_hit_round_trips_the_fixpoint() {
+        let cache = FixCache::new(4);
+        assert!(cache.lookup_plane(7, 9).is_none());
+        cache.insert_plane(7, 9, vec![1.0, 0.0, 1.0], true, 5);
+        let hit = cache.lookup_plane(7, 9).expect("warm");
+        assert_eq!(hit.plane, vec![1.0, 0.0, 1.0]);
+        assert!(hit.wiped);
+        assert_eq!(hit.iters, 5);
+        // the verdict view serves plane entries too
+        assert_eq!(cache.lookup_verdict(7, 9), Some((true, 5)));
+        let s = cache.stats();
+        assert_eq!((s.hits, s.misses, s.evictions), (2, 1, 0));
+        assert!(s.bytes > 3 * 4, "admission bytes cover header + payload");
+    }
+
+    #[test]
+    fn keys_are_content_addressed_on_both_halves() {
+        let cache = FixCache::new(8);
+        cache.insert_plane(1, 10, vec![1.0], false, 1);
+        assert!(cache.lookup_plane(1, 11).is_none(), "different input plane");
+        assert!(cache.lookup_plane(2, 10).is_none(), "different constraint network");
+        assert!(cache.lookup_plane(1, 10).is_some());
+    }
+
+    #[test]
+    fn lru_eviction_under_the_cap_and_recency_refresh() {
+        let cache = FixCache::new(2);
+        cache.insert_plane(0, 1, vec![1.0], false, 1);
+        cache.insert_plane(0, 2, vec![0.0], false, 1);
+        // touch key 1 so key 2 becomes the LRU
+        assert!(cache.lookup_plane(0, 1).is_some());
+        let (evicted, _) = cache.insert_plane(0, 3, vec![1.0], false, 1);
+        assert!(evicted, "a third key under cap 2 must evict");
+        assert_eq!(cache.len(), 2);
+        assert!(cache.lookup_plane(0, 2).is_none(), "the LRU key is gone");
+        assert!(cache.lookup_plane(0, 1).is_some(), "the refreshed key survived");
+        assert!(cache.lookup_plane(0, 3).is_some());
+        assert_eq!(cache.stats().evictions, 1);
+    }
+
+    #[test]
+    fn capacity_one_still_serves_back_to_back_repeats() {
+        let cache = FixCache::new(1);
+        cache.insert_plane(0, 1, vec![1.0], false, 2);
+        assert!(cache.lookup_plane(0, 1).is_some());
+        assert!(cache.lookup_plane(0, 1).is_some(), "repeat hits keep hitting");
+        let (evicted, _) = cache.insert_plane(0, 2, vec![0.0], false, 2);
+        assert!(evicted);
+        assert!(cache.lookup_plane(0, 1).is_none());
+        assert!(cache.lookup_plane(0, 2).is_some());
+    }
+
+    #[test]
+    fn reinserting_a_resident_key_replaces_without_eviction() {
+        let cache = FixCache::new(1);
+        cache.insert_plane(0, 1, vec![1.0], false, 2);
+        let (evicted, _) = cache.insert_plane(0, 1, vec![1.0], false, 2);
+        assert!(!evicted, "a replace is not an eviction");
+        assert_eq!(cache.len(), 1);
+        assert_eq!(cache.stats().evictions, 0);
+    }
+
+    #[test]
+    fn verdict_entries_serve_verdicts_but_never_planes() {
+        let cache = FixCache::new(4);
+        cache.insert_verdict(3, 4, true, 7);
+        assert!(cache.lookup_plane(3, 4).is_none(), "no plane payload to serve");
+        assert_eq!(cache.lookup_verdict(3, 4), Some((true, 7)));
+        // upgrading to a plane entry serves both views
+        cache.insert_plane(3, 4, vec![0.0, 0.0], true, 7);
+        assert_eq!(cache.len(), 1, "the upgrade replaced in place");
+        assert!(cache.lookup_plane(3, 4).is_some());
+        // a verdict re-insert must not downgrade the plane entry
+        cache.insert_verdict(3, 4, true, 7);
+        assert!(cache.lookup_plane(3, 4).is_some());
+    }
+
+    #[test]
+    fn wipe_clears_residency_but_counts_no_evictions() {
+        let cache = FixCache::new(4);
+        cache.insert_plane(0, 1, vec![1.0], false, 1);
+        cache.insert_verdict(0, 2, false, 1);
+        assert_eq!(cache.wipe(), 2);
+        assert!(cache.is_empty());
+        assert_eq!(cache.stats().evictions, 0, "a wipe is a chaos event, not pressure");
+        assert!(cache.lookup_plane(0, 1).is_none(), "wiped entries are gone");
+    }
+
+    #[test]
+    fn poisoned_entry_is_detected_evicted_and_never_served() {
+        let cache = FixCache::new(4);
+        cache.insert_plane(5, 6, vec![1.0, 0.0, 1.0, 1.0], false, 3);
+        assert!(cache.poison(5, 6), "the canary must corrupt a resident plane");
+        // the fingerprint re-check fires: no hit, entry ejected
+        assert!(cache.lookup_plane(5, 6).is_none(), "corruption must never be served");
+        assert_eq!(cache.len(), 0, "the poisoned entry was evicted");
+        let s = cache.stats();
+        assert_eq!(s.hits, 0);
+        assert_eq!(s.evictions, 1, "poison ejection is a counted eviction");
+        // and the slot is usable again: a fresh insert serves cleanly
+        cache.insert_plane(5, 6, vec![1.0, 0.0, 1.0, 1.0], false, 3);
+        assert_eq!(cache.lookup_plane(5, 6).unwrap().plane, vec![1.0, 0.0, 1.0, 1.0]);
+    }
+
+    #[test]
+    fn round_entries_replay_verdicts_and_counter_delta() {
+        let cache = FixCache::new(4);
+        let delta = Counters { recurrences: 6, removals: 2, support_checks: 40, revisions: 0 };
+        assert!(cache.lookup_round(1, 2).is_none(), "cold round consult");
+        cache.insert_round(1, 2, &[true, false, true], &delta);
+        let (verdicts, replayed) = cache.lookup_round(1, 2).expect("warm round");
+        assert_eq!(verdicts, vec![true, false, true]);
+        assert_eq!(replayed, delta, "the hit replays the full counter delta");
+        let s = cache.stats();
+        assert_eq!((s.hits, s.misses), (1, 1));
+    }
+
+    #[test]
+    fn poisoned_round_entry_is_detected_not_replayed() {
+        let cache = FixCache::new(4);
+        let delta = Counters { recurrences: 3, ..Counters::default() };
+        cache.insert_round(8, 9, &[true, true], &delta);
+        assert!(cache.poison(8, 9), "round payloads are poisonable planes");
+        assert!(cache.lookup_round(8, 9).is_none(), "a corrupted verdict vector is never served");
+        assert_eq!(cache.stats().evictions, 1);
+        assert!(cache.is_empty());
+    }
+
+    #[test]
+    fn shared_maps_zero_to_none() {
+        assert!(FixCache::shared(0).is_none(), "--fixcache-entries 0 disables");
+        let cache = FixCache::shared(16).expect("nonzero capacity");
+        assert_eq!(cache.len(), 0);
+    }
+
+    #[test]
+    fn stats_bytes_accumulate_monotonically() {
+        let cache = FixCache::new(1);
+        cache.insert_plane(0, 1, vec![1.0; 8], false, 1);
+        let b1 = cache.stats().bytes;
+        cache.insert_plane(0, 2, vec![1.0; 8], false, 1); // evicts, still admits
+        let b2 = cache.stats().bytes;
+        assert!(b2 > b1, "bytes is cumulative admitted volume, not residency");
+    }
+}

@@ -59,6 +59,7 @@ use anyhow::{bail, Result};
 
 use crate::ac::sac::problem_fingerprint;
 use crate::coordinator::chaos::{chaos_reference_executor, FaultPlan, ShardHealth};
+use crate::coordinator::fixcache::FixCache;
 use crate::coordinator::metrics::{Metrics, MetricsSnapshot};
 use crate::coordinator::service::{
     BatchPolicy, ClientId, Coordinator, CoordinatorConfig, Handle, Response,
@@ -101,6 +102,14 @@ pub struct FleetPolicy {
     /// Fused-batch ceiling ([`BatchPolicy::max_batch`]) — the
     /// amortisation denominator of the admission-latency projection.
     pub max_batch: usize,
+    /// Capacity of each shard's content-addressed fixpoint cache
+    /// ([`BatchPolicy::fixcache_entries`], `rtac serve
+    /// --fixcache-entries`).  The cache is **per shard, shared by every
+    /// session incarnation homed there** — rendezvous-placed duplicate
+    /// sessions warm each other, and a failover replacement spawned on
+    /// a survivor inherits (and repopulates) the survivor's warm
+    /// entries.  0 disables the memo layer fleet-wide.
+    pub fixcache_entries: usize,
 }
 
 impl Default for FleetPolicy {
@@ -113,6 +122,7 @@ impl Default for FleetPolicy {
             request_timeout: b.request_timeout,
             max_restarts: b.max_restarts,
             max_batch: b.max_batch,
+            fixcache_entries: b.fixcache_entries,
         }
     }
 }
@@ -215,6 +225,12 @@ struct ShardState {
     /// this shard aggregates the whole list, so per-shard conservation
     /// spans restarts and outbound failovers.
     metrics: Mutex<Vec<Arc<Metrics>>>,
+    /// The shard's fixpoint memo layer, shared by every session
+    /// incarnation homed here ([`FleetPolicy::fixcache_entries`]; `None`
+    /// when disabled).  Keys carry the session's constraint fingerprint,
+    /// so co-homed sessions can never serve each other's planes — they
+    /// only pool capacity, and failover replacements land warm.
+    fixcache: Option<Arc<FixCache>>,
 }
 
 /// One placed session (one distinct constraint network): its current
@@ -302,6 +318,7 @@ impl Fleet {
         config.policy.request_timeout = policy.request_timeout;
         config.policy.max_restarts = policy.max_restarts;
         config.policy.max_batch = policy.max_batch;
+        config.policy.fixcache_entries = policy.fixcache_entries;
         Fleet::with_spawner(policy, Spawner::Artifacts(config))
     }
 
@@ -317,6 +334,7 @@ impl Fleet {
                 inflight: Mutex::new(HashMap::new()),
                 ewma_round_us: AtomicU64::new(0),
                 metrics: Mutex::new(Vec::new()),
+                fixcache: FixCache::shared(policy.fixcache_entries),
             })
             .collect();
         let fleet_metrics = Arc::new(Metrics::new());
@@ -408,9 +426,14 @@ impl Fleet {
         fp: u64,
     ) -> Result<(Handle, Keeper)> {
         let p = &self.inner.policy;
+        // every incarnation on this shard — initial placements AND
+        // failover replacements — shares the shard's memo layer, so a
+        // re-placed session repopulates (and benefits from) the
+        // survivor's warm entries
+        let fixcache = self.inner.shards[shard].fixcache.clone();
         let (handle, keeper) = match &self.inner.spawner {
             Spawner::Artifacts(config) => {
-                let coord = Coordinator::start(problem, config.clone())?;
+                let coord = Coordinator::start_with_cache(problem, config.clone(), fixcache)?;
                 (coord.handle(), Keeper::Session(coord))
             }
             Spawner::Reference | Spawner::Chaos(_) => {
@@ -428,6 +451,7 @@ impl Fleet {
                     p.max_restarts,
                     plan,
                     self.inner.shards[shard].health.clone(),
+                    fixcache,
                     rx,
                     handle.metrics.clone(),
                 );
@@ -1067,6 +1091,37 @@ mod tests {
     // RTAC_CHAOS_SNAPSHOT_DIR is set) ----
 
     #[test]
+    fn shard_fixcache_serves_warm_hits_and_survives_failover() {
+        let policy = FleetPolicy { fixcache_entries: 32, ..quick_policy(3) };
+        let fleet = Fleet::reference(policy).unwrap();
+        let p = small_problem(51);
+        let client = fleet.client(&p).unwrap();
+        let plane = initial_plane(&p, client.bucket());
+        let cold = client.enforce_full(plane.clone()).unwrap();
+        let warm = client.enforce_full(plane.clone()).unwrap();
+        assert_eq!(cold.plane, warm.plane, "a warm hit must serve the identical closure");
+        assert_eq!(cold.iters, warm.iters);
+        let agg = fleet.snapshot();
+        assert_eq!(agg.fixcache_hits, 1, "{}", agg.summary());
+        assert_eq!(agg.fixcache_misses, 1, "{}", agg.summary());
+        // kill the hosting shard: the replacement incarnation shares
+        // the SURVIVOR's cache — the first post-failover solve is a
+        // miss there, the repeat a hit (the replay repopulates it)
+        let home = client.shard();
+        fleet.kill_shard(home);
+        let moved = client.enforce_full(plane.clone()).unwrap();
+        assert_eq!(cold.plane, moved.plane, "failover must not change the closure");
+        let rewarmed = client.enforce_full(plane).unwrap();
+        assert_eq!(cold.plane, rewarmed.plane);
+        fleet.shutdown();
+        let agg = fleet.snapshot();
+        assert_eq!(agg.fixcache_hits, 2, "{}", agg.summary());
+        assert_eq!(agg.fixcache_misses, 2, "{}", agg.summary());
+        assert!(agg.fixcache_bytes > 0);
+        assert!(agg.conserved() && agg.shard_conserved, "{agg:?}");
+    }
+
+    #[test]
     fn fleet_chaos_plans_conserve_per_shard_and_reach_native_fixpoints() {
         for seed in 1..=8u64 {
             let spec = LoadSpec {
@@ -1076,6 +1131,7 @@ mod tests {
                 seed,
                 latency_budget: None,
                 chaos: true,
+                fixcache_entries: 0,
             };
             let report = run_load(&spec).unwrap_or_else(|e| panic!("seed {seed}: {e:#}"));
             assert_eq!(
@@ -1108,6 +1164,48 @@ mod tests {
                 dump_chaos_snapshot(&format!("fleet_seed_{seed}_shard_{i}"), shard);
             }
         }
+    }
+
+    /// The cache-enabled leg of the seeded battery (satellite of the
+    /// fixcache PR; the CI `chaos` job runs this by name): with every
+    /// shard carrying a warm memo layer — and seeded plans now also
+    /// wiping it mid-run — restarts, failovers, and cache hits
+    /// interleave, yet every response stays bit-identical to the
+    /// native fixpoint and every ledger conserves.
+    #[test]
+    fn fleet_chaos_with_fixcache_stays_bit_identical_and_conserves() {
+        let mut total_hits = 0u64;
+        for seed in 1..=8u64 {
+            let spec = LoadSpec {
+                shards: 3,
+                clients: 6,
+                rounds: 6,
+                seed,
+                latency_budget: None,
+                chaos: true,
+                fixcache_entries: 64,
+            };
+            let report = run_load(&spec).unwrap_or_else(|e| panic!("seed {seed}: {e:#}"));
+            assert_eq!(
+                report.mismatches, 0,
+                "seed {seed}: cache-served responses must stay bit-identical to the \
+                 native fixpoint"
+            );
+            assert!(
+                report.aggregate.conserved() && report.aggregate.shard_conserved,
+                "seed {seed}: conservation with the memo layer on: {:?}",
+                report.aggregate
+            );
+            for (i, shard) in report.shards.iter().enumerate() {
+                assert!(shard.conserved(), "seed {seed} shard {i}: {}", shard.summary());
+            }
+            total_hits += report.aggregate.fixcache_hits;
+            dump_chaos_snapshot(&format!("fleet_fixcache_seed_{seed}"), &report.aggregate);
+        }
+        assert!(
+            total_hits > 0,
+            "across 8 seeds of repeated probe traffic the memo layer must hit"
+        );
     }
 
     #[test]

@@ -60,6 +60,10 @@ struct Inner {
     failovers: u64,
     replaced_sessions: u64,
     shards: u64,
+    fixcache_hits: u64,
+    fixcache_misses: u64,
+    fixcache_evictions: u64,
+    fixcache_bytes: u64,
     queue_us: Online,
     exec_us: Online,
     total_us: Online,
@@ -221,6 +225,24 @@ pub struct MetricsSnapshot {
     /// single-session ledgers; on an aggregate snapshot, the fleet's
     /// `--shards`).
     pub shards: u64,
+    /// Fixpoint-cache hits: requests answered straight from the
+    /// content-addressed memo layer
+    /// ([`crate::coordinator::FixCache`]) without running the
+    /// recurrence.  Every hit is a *normal response* — it counts in
+    /// `responses`, so conservation is unchanged by caching.  0 when
+    /// the cache is disabled (`--fixcache-entries 0`).
+    pub fixcache_hits: u64,
+    /// Fixpoint-cache lookups that found no usable entry (the request
+    /// then ran normally and its result was admitted).
+    pub fixcache_misses: u64,
+    /// Fixpoint-cache entries evicted: LRU displacement under the
+    /// `--fixcache-entries` cap plus poisoned entries ejected by the
+    /// admission-fingerprint re-check.
+    pub fixcache_evictions: u64,
+    /// Bytes admitted into the fixpoint cache, cumulative (a monotonic
+    /// volume counter like `shipped_f32`, not a residency gauge — so
+    /// per-shard ledgers aggregate by summation).
+    pub fixcache_bytes: u64,
     /// Per-shard conservation: for a single-shard snapshot, this shard's
     /// `requests == responses + dropped_requests`; for a fleet aggregate
     /// ([`MetricsSnapshot::aggregate`]), true only when EVERY merged
@@ -357,6 +379,31 @@ impl Metrics {
         self.inner.lock().unwrap().shards = shards;
     }
 
+    /// Record one fixpoint-cache hit: the request was answered from
+    /// the memo layer without running the recurrence.  The response
+    /// itself is recorded separately via [`Metrics::on_response`] —
+    /// a hit is a normal response, so conservation is untouched.
+    pub fn on_fixcache_hit(&self) {
+        self.inner.lock().unwrap().fixcache_hits += 1;
+    }
+
+    /// Record one fixpoint-cache miss (the request ran normally).
+    pub fn on_fixcache_miss(&self) {
+        self.inner.lock().unwrap().fixcache_misses += 1;
+    }
+
+    /// Record one fixpoint admitted into the cache: `bytes` of
+    /// cumulative admission volume, `evicted` when the insert
+    /// displaced the LRU entry under the capacity bound (also used for
+    /// poison ejections, with `bytes == 0`).
+    pub fn on_fixcache_insert(&self, bytes: u64, evicted: bool) {
+        let mut m = self.inner.lock().unwrap();
+        m.fixcache_bytes += bytes;
+        if evicted {
+            m.fixcache_evictions += 1;
+        }
+    }
+
     /// Record one base slot replayed through a restart's re-hydration.
     pub fn on_base_replayed(&self) {
         self.inner.lock().unwrap().replayed_bases += 1;
@@ -448,6 +495,10 @@ impl Metrics {
             failovers: m.failovers,
             replaced_sessions: m.replaced_sessions,
             shards: m.shards,
+            fixcache_hits: m.fixcache_hits,
+            fixcache_misses: m.fixcache_misses,
+            fixcache_evictions: m.fixcache_evictions,
+            fixcache_bytes: m.fixcache_bytes,
             shard_conserved: m.requests == m.responses + m.dropped_requests,
             mean_queue_us: m.queue_us.mean(),
             mean_exec_us: m.exec_us.mean(),
@@ -494,6 +545,16 @@ impl MetricsSnapshot {
             s.push_str(&format!(
                 " shards={} shard_conserved={} failovers={} replaced_sessions={}",
                 self.shards, self.shard_conserved, self.failovers, self.replaced_sessions,
+            ));
+        }
+        if self.fixcache_hits + self.fixcache_misses + self.fixcache_evictions > 0 {
+            s.push_str(&format!(
+                " fixcache_hits={} fixcache_misses={} fixcache_evictions={} \
+                 fixcache_bytes={}",
+                self.fixcache_hits,
+                self.fixcache_misses,
+                self.fixcache_evictions,
+                self.fixcache_bytes,
             ));
         }
         s
@@ -572,6 +633,10 @@ impl MetricsSnapshot {
             out.failovers += p.failovers;
             out.replaced_sessions += p.replaced_sessions;
             out.shards += p.shards;
+            out.fixcache_hits += p.fixcache_hits;
+            out.fixcache_misses += p.fixcache_misses;
+            out.fixcache_evictions += p.fixcache_evictions;
+            out.fixcache_bytes += p.fixcache_bytes;
         }
         out.shard_conserved = parts.iter().all(|p| p.shard_conserved);
         out.mean_batch_occupancy = weighted(parts, |p| p.mean_batch_occupancy, |p| p.batches);
@@ -864,6 +929,43 @@ mod tests {
         };
         let agg2 = MetricsSnapshot::aggregate(&[shard1, unbalanced]);
         assert!(!agg2.shard_conserved);
+    }
+
+    #[test]
+    fn fixcache_counters_accumulate_aggregate_and_stay_conserved() {
+        let m = Metrics::new();
+        // two requests: one served from the cache (hit = normal
+        // response), one that missed, ran, and was admitted
+        m.on_submit(None, 8, false);
+        m.on_fixcache_hit();
+        m.on_response(None, Duration::ZERO, Duration::from_micros(5), 3, false);
+        m.on_submit(None, 8, false);
+        m.on_fixcache_miss();
+        m.on_batch(1, 1, Duration::from_micros(50));
+        m.on_response(None, Duration::ZERO, Duration::from_micros(60), 3, false);
+        m.on_fixcache_insert(256, true);
+        let s = m.snapshot();
+        assert_eq!(s.fixcache_hits, 1);
+        assert_eq!(s.fixcache_misses, 1);
+        assert_eq!(s.fixcache_evictions, 1);
+        assert_eq!(s.fixcache_bytes, 256);
+        assert_eq!(s.batches, 1, "the hit skipped its execution entirely");
+        assert!(s.conserved(), "a cache hit is a normal response: {s:?}");
+        assert!(s.summary().contains("fixcache_hits=1"));
+        assert!(s.summary().contains("fixcache_misses=1"));
+        assert!(s.summary().contains("fixcache_evictions=1"));
+        assert!(s.summary().contains("fixcache_bytes=256"));
+        // cache-off ledgers keep the historical summary shape
+        assert!(
+            !Metrics::new().snapshot().summary().contains("fixcache_"),
+            "fixcache columns only print once the cache saw traffic"
+        );
+        // and the counters sum across shard ledgers
+        let agg = MetricsSnapshot::aggregate(&[s.clone(), s]);
+        assert_eq!(agg.fixcache_hits, 2);
+        assert_eq!(agg.fixcache_misses, 2);
+        assert_eq!(agg.fixcache_evictions, 2);
+        assert_eq!(agg.fixcache_bytes, 512);
     }
 
     #[test]

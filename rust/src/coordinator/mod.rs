@@ -27,6 +27,14 @@
 //!   every client-side recovery loop, and the executor-side supervision
 //!   story's client-facing half: a restarted session answers retried
 //!   calls, a moribund one fails them fatally.
+//! * [`fixcache`] — the content-addressed fixpoint memo layer: a
+//!   bounded LRU cache keyed by `(constraint fingerprint, input-plane
+//!   fingerprint)` consulted before any enforcement actually runs —
+//!   executor-side (a hit skips the fused execution and still counts
+//!   as a normal response), in SAC probe rounds, and per fleet shard.
+//!   Sound because the AC/SAC closure is unique; poisoned entries are
+//!   detected by a fingerprint re-check and evicted, never served.
+//!   `rtac serve --fixcache-entries` (0 disables).
 //! * [`fleet`] — the scheduler tier above single sessions: a [`Fleet`]
 //!   of N supervised shards with fingerprint-keyed session placement
 //!   (rendezvous-stable, content-deduplicated), latency-budget
@@ -50,12 +58,14 @@
 
 pub(crate) mod chaos;
 pub mod engine;
+pub mod fixcache;
 pub mod fleet;
 pub mod metrics;
 pub mod retry;
 pub mod service;
 
 pub use engine::TensorEngine;
+pub use fixcache::{CachedFixpoint, FixCache, FixCacheStats};
 pub use fleet::{Fleet, FleetClient, FleetPolicy};
 pub use metrics::{ClientMetrics, Metrics, MetricsSnapshot};
 pub use retry::{Retry, RetryPolicy};

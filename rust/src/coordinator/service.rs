@@ -201,6 +201,18 @@ pub struct BatchPolicy {
     /// (`restart_dropped_requests`) so conservation still holds, and
     /// serve workers degrade to CPU engines.
     pub max_restarts: u32,
+    /// Capacity of the session's content-addressed fixpoint cache
+    /// ([`crate::coordinator::FixCache`], `rtac serve
+    /// --fixcache-entries`): resident `(constraint fingerprint,
+    /// input-plane fingerprint) → fixpoint` memo entries, LRU-evicted.
+    /// The executor consults it before dispatching a fused execution —
+    /// a hit answers the request as a normal response (counted
+    /// `fixcache_hits`; conservation unchanged) without touching the
+    /// tensor route.  **0 disables the cache** (the default: memo
+    /// capacity is an opt-in serving knob, not a solver default).
+    /// Sound because the AC closure is unique — see the `fixcache`
+    /// module docs.
+    pub fixcache_entries: usize,
 }
 
 impl Default for BatchPolicy {
@@ -212,6 +224,7 @@ impl Default for BatchPolicy {
             base_slots: 8,
             request_timeout: Duration::from_secs(30),
             max_restarts: 3,
+            fixcache_entries: 0,
         }
     }
 }
@@ -981,6 +994,22 @@ impl Coordinator {
     /// constraint tensor (so a broken artifact dir — or a failed upload —
     /// fails fast, here, not on first request).
     pub fn start(problem: &Problem, config: CoordinatorConfig) -> Result<Coordinator> {
+        let fixcache = crate::coordinator::FixCache::shared(config.policy.fixcache_entries);
+        Coordinator::start_with_cache(problem, config, fixcache)
+    }
+
+    /// [`Coordinator::start`] with an explicit — possibly **shared** —
+    /// fixpoint cache instead of one derived from
+    /// [`BatchPolicy::fixcache_entries`].  The fleet tier passes each
+    /// shard's cache here so rendezvous-placed duplicate sessions on
+    /// one shard share warm entries (and failover replacements inherit
+    /// them); `None` disables caching for the session regardless of
+    /// the policy knob.
+    pub(crate) fn start_with_cache(
+        problem: &Problem,
+        config: CoordinatorConfig,
+        fixcache: Option<Arc<crate::coordinator::FixCache>>,
+    ) -> Result<Coordinator> {
         // pick the bucket from the manifest before spawning, so errors
         // (problem too large for any artifact, zero max_batch) surface
         // synchronously.  An *oversized* max_batch is clamped to the
@@ -1002,7 +1031,7 @@ impl Coordinator {
         let join = std::thread::Builder::new()
             .name("rtac-executor".into())
             .spawn(move || {
-                executor_thread(cfg, bucket, cons, rx, ready_tx, metrics2);
+                executor_thread(cfg, bucket, cons, fixcache, rx, ready_tx, metrics2);
             })
             .context("spawning executor thread")?;
 
@@ -1263,12 +1292,16 @@ fn drain_moribund(rx: &mpsc::Receiver<Msg>, pending: &mut Vec<Request>, metrics:
 
 /// Executor main loop: owns all XLA state, plus the session's
 /// per-client delta base slots (see the module docs for the cache
-/// rules) and the supervision state (§Supervision & recovery: restart
-/// budget, failed-execution streak, per-request deadlines).
+/// rules), the optional content-addressed fixpoint cache (consulted
+/// between payload resolution and dispatch — a hit answers as a
+/// normal response and skips the fused execution), and the
+/// supervision state (§Supervision & recovery: restart budget,
+/// failed-execution streak, per-request deadlines).
 fn executor_thread(
     config: CoordinatorConfig,
     bucket: Bucket,
     cons: Vec<f32>,
+    fixcache: Option<Arc<crate::coordinator::FixCache>>,
     rx: mpsc::Receiver<Msg>,
     ready_tx: mpsc::Sender<Result<()>>,
     metrics: Arc<Metrics>,
@@ -1297,6 +1330,11 @@ fn executor_thread(
     // half of §Supervision & recovery.
 
     let request_timeout = config.policy.request_timeout;
+    // the cache key's constraint half: the session serves ONE network,
+    // fingerprinted once from its encoded constraint tensor (content-
+    // addressed, so identical networks key identical entries — which is
+    // what lets a fleet shard share one cache across its sessions)
+    let cons_fp = crate::runtime::plane_fingerprint(&cons);
     let mut supervisor = Supervisor::new(config.policy.max_restarts);
     let mut compiled_max = batch_sizes.last().copied().unwrap_or(1);
     let mut adaptive =
@@ -1438,8 +1476,46 @@ fn executor_thread(
                 }
             }
         }
+        // 3b. consult the fixpoint cache between resolution and
+        // dispatch: the AC closure of (cons, plane) is unique, so a
+        // memoised fixpoint answers bit-identically to the execution
+        // it skips.  A hit is served as a NORMAL response right here
+        // (counted in `responses` — conservation unchanged — plus
+        // `fixcache_hits`); only the misses go on to fuse.
+        let mut input_fps: Vec<u64> = Vec::new();
+        if let Some(cache) = &fixcache {
+            input_fps =
+                planes.iter().map(|p| crate::runtime::plane_fingerprint(p)).collect();
+            let mut i = 0;
+            while i < planes.len() {
+                match cache.lookup_plane(cons_fp, input_fps[i]) {
+                    Some(hit) => {
+                        metrics.on_fixcache_hit();
+                        planes.remove(i);
+                        input_fps.remove(i);
+                        let (submitted, resp_tx, client) = served.remove(i);
+                        let total = submitted.elapsed();
+                        let resp = Response {
+                            plane: hit.plane,
+                            status: if hit.wiped { STATUS_WIPEOUT } else { 0 },
+                            iters: hit.iters,
+                            batch_real: 1,
+                            batch_capacity: 1,
+                            queue_time: total,
+                            total_time: total,
+                        };
+                        metrics.on_response(client, total, total, hit.iters, hit.wiped);
+                        let _ = resp_tx.send(resp);
+                    }
+                    None => {
+                        metrics.on_fixcache_miss();
+                        i += 1;
+                    }
+                }
+            }
+        }
         if planes.is_empty() {
-            continue; // the whole drain was stale deltas or expired
+            continue; // the whole drain was stale deltas, expired, or cache hits
         }
         // 4. pick the smallest compiled batch that fits, pad, execute
         let real = planes.len();
@@ -1472,6 +1548,21 @@ fn executor_thread(
             Ok(out) => {
                 supervisor.on_batch_ok();
                 metrics.on_batch(real, capacity, exec);
+                // admit every served fixpoint so identical future
+                // inputs (same client or another) hit instead of
+                // re-running the recurrence
+                if let Some(cache) = &fixcache {
+                    for (i, fp) in input_fps.iter().enumerate() {
+                        let (evicted, bytes) = cache.insert_plane(
+                            cons_fp,
+                            *fp,
+                            out.vars[i * plane_len..(i + 1) * plane_len].to_vec(),
+                            out.status[i] == STATUS_WIPEOUT,
+                            out.iters,
+                        );
+                        metrics.on_fixcache_insert(bytes, evicted);
+                    }
+                }
                 for (i, (submitted, resp_tx, client)) in served.into_iter().enumerate() {
                     let queue = t_exec.duration_since(submitted);
                     let total = submitted.elapsed();

@@ -64,10 +64,16 @@ SUBCOMMANDS
                --latency-budget MS (fleet admission budget; requests whose
                projected completion exceeds it are rejected AND counted —
                rejected_requests; 0/absent admits everything)
+               --fixcache-entries N (content-addressed fixpoint memo layer:
+               a repeated (constraint, input-plane) pair is answered from
+               the cache without a tensor round; per shard under --shards;
+               0/absent disables; docs/PROTOCOL.md §Fixpoint cache)
                --sac-probe [--probe-batch K]  (SAC-probing client: fused
                delta vs fused full-plane vs per-probe submission, plus the
                sac-mixed split — occupancy + upload-volume report)
   loadgen      --shards 3 --clients 6 --rounds 4 --seed S --latency-budget MS
+               --fixcache-entries N (per-shard fixpoint memo layer; same
+               seed + same N replays identical ledgers, hit counts included)
                --reference (fault-free CPU-reference fleet: same-seed runs
                produce identical request/response/drop ledgers; the default
                is chaos executors plus one forced mid-run shard kill)
@@ -83,7 +89,9 @@ SUBCOMMANDS
                are marked \"skipped\": \"no-artifacts\" in the JSON, never
                silently omitted) --fleet-clients 6 (0 skips the fleet
                serving cell — a reduced seeded loadgen run against chaos
-               shards) [--json BENCH_rtac.json]
+               shards) --fixcache-entries N (measures the fixcache_* warm-
+               vs-cold cell and enables the memo layer in the fleet cell;
+               0 marks both skipped) [--json BENCH_rtac.json]
   info         --artifacts DIR
 ";
 
@@ -285,6 +293,7 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
     let max_restarts = args.get_u64("max-restarts", 3)? as u32;
     let shards = args.get_usize("shards", 1)?;
     let latency_budget_ms = args.get_u64("latency-budget", 0)?;
+    let fixcache_entries = args.get_usize("fixcache-entries", 0)?;
     let adaptive = args.has_flag("adaptive");
     let sac_probe = args.has_flag("sac-probe");
     let probe_batch = args.get_usize("probe-batch", 0)?;
@@ -320,6 +329,7 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
         base_slots,
         request_timeout: Duration::from_millis(request_timeout_ms),
         max_restarts,
+        fixcache_entries,
     };
     let config = CoordinatorConfig { artifact_dir: artifacts.into(), policy };
     // validate an EXPLICIT --max-batch against the compiled fixb*
@@ -355,6 +365,7 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
             request_timeout: Duration::from_millis(request_timeout_ms),
             max_restarts,
             max_batch,
+            fixcache_entries,
         };
         let f = Fleet::with_artifacts(fleet_policy, config).map_err(|e| format!("{e:#}"))?;
         let client = f.client(&p).map_err(|e| format!("{e:#}"))?;
@@ -652,6 +663,7 @@ fn cmd_bench_rtac(args: &Args) -> Result<(), String> {
     let json_path = args.get_or("json", "BENCH_rtac.json");
     let sac_workers = args.get_usize("sac-workers", 4)?;
     let fleet_clients = args.get_usize("fleet-clients", 6)?;
+    let fixcache_entries = args.get_usize("fixcache-entries", 0)?;
     args.finish()?;
     eprintln!(
         "rtac family grid: sizes={:?} densities={:?} dom={} t={} assignments={}",
@@ -659,10 +671,10 @@ fn cmd_bench_rtac(args: &Args) -> Result<(), String> {
     );
     let results = rtac_bench::run(&spec, &engines);
     println!("{}", rtac_bench::render(&results, &engines));
-    // the five SAC/search comparison cells: measured where the
+    // the SAC/search/fixcache comparison cells: measured where the
     // environment permits, explicitly marked skipped (e.g.
     // "no-artifacts") where not — see docs/BENCHMARKS.md for the schema
-    let cells = rtac_bench::run_sac_cells(&spec, sac_workers);
+    let cells = rtac_bench::run_sac_cells(&spec, sac_workers, fixcache_entries);
     println!("{}", rtac_bench::render_cells(&cells));
     // the fleet serving cell: a reduced seeded loadgen run (chaos
     // shards, >= 1 forced failover) — measured, or explicitly marked
@@ -672,6 +684,7 @@ fn cmd_bench_rtac(args: &Args) -> Result<(), String> {
     } else {
         load::run_fleet_cell(&load::LoadSpec {
             clients: fleet_clients,
+            fixcache_entries,
             ..load::LoadSpec::default()
         })
     };
@@ -696,6 +709,7 @@ fn cmd_loadgen(args: &Args) -> Result<(), String> {
     let rounds = args.get_usize("rounds", 4)?;
     let seed = args.get_u64("seed", 0xF1EE7)?;
     let latency_budget_ms = args.get_u64("latency-budget", 0)?;
+    let fixcache_entries = args.get_usize("fixcache-entries", 0)?;
     let reference = args.has_flag("reference");
     let json_requested = args.get_str("json");
     args.finish()?;
@@ -706,6 +720,7 @@ fn cmd_loadgen(args: &Args) -> Result<(), String> {
         seed,
         latency_budget: (latency_budget_ms > 0).then(|| Duration::from_millis(latency_budget_ms)),
         chaos: !reference,
+        fixcache_entries,
     };
     let report = load::run_load(&spec).map_err(|e| format!("{e:#}"))?;
     print!(
@@ -785,6 +800,16 @@ fn loadgen_json(spec: &load::LoadSpec, r: &load::FleetReport) -> rtac::util::jso
     if let Some(l) = &r.latency {
         fields.push(("fleet_p50_ms", num(l.p50)));
         fields.push(("fleet_p99_ms", num(l.p99)));
+    }
+    // same memo-layer columns as the bench's fleet cell: measured when
+    // the run configured a cache, an explicit marker when it did not
+    if r.fixcache_entries > 0 {
+        fields.push(("fleet_fixcache_hits", num(a.fixcache_hits as f64)));
+        fields.push(("fleet_fixcache_misses", num(a.fixcache_misses as f64)));
+        fields.push(("fleet_fixcache_evictions", num(a.fixcache_evictions as f64)));
+        fields.push(("fleet_fixcache_bytes", num(a.fixcache_bytes as f64)));
+    } else {
+        fields.push(("fleet_fixcache_skipped", rtac::util::json::s("disabled")));
     }
     obj(fields)
 }

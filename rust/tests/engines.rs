@@ -143,6 +143,102 @@ fn lane_boundary_domain_sizes_agree_across_engines() {
     }
 }
 
+/// The engine names the cache battery sweeps: every AC engine plus one
+/// member of each SAC family that runs offline (`sac-xla` needs compiled
+/// artifacts and is covered by its own fail-loudly test above).
+const CACHE_BATTERY_ENGINES: &[&str] =
+    &["ac3", "ac3-lifo", "ac3-dom", "ac2001", "ac3bit", "rtac", "rtac-inc", "rtac-par",
+      "rtac-par-inc", "sac", "sac-rtac", "sac-par2", "sac-mixed2"];
+
+/// Run `name` on `p` under a fixpoint-cache setting.  The memo seam
+/// lives in `SacParallel::with_fixcache`, so the `sac-par` family gets a
+/// real cache attached; for every other engine the setting is a
+/// structural no-op — which the battery pins down too: the cache layer
+/// must not be able to perturb engines that never consult it.
+fn run_cached(
+    name: &str,
+    cache: Option<std::sync::Arc<rtac::coordinator::FixCache>>,
+    p: &rtac::core::Problem,
+) -> (bool, Vec<Vec<usize>>, Counters) {
+    use rtac::ac::sac::SacParallel;
+    let mut boxed;
+    let mut sac_engine;
+    let engine: &mut dyn rtac::ac::Propagator = if let Some(rest) = name.strip_prefix("sac-par") {
+        let workers = rest.parse::<usize>().expect("battery pins sac-parN names");
+        sac_engine = SacParallel::new(workers).with_fixcache(cache);
+        &mut sac_engine
+    } else {
+        boxed = make_engine(name).unwrap();
+        boxed.as_mut()
+    };
+    let mut s = State::new(p);
+    let mut c = Counters::default();
+    let out = engine.enforce(p, &mut s, &[], &mut c);
+    (out.is_consistent(), s.snapshot(), c)
+}
+
+/// One problem through the full battery: cache off, a shared warm cache
+/// (run twice so the second pass replays memoised rounds), and a
+/// capacity-1 cache that thrashes — verdict, closure, AND the counter
+/// ledger must be bit-identical throughout.
+fn assert_cache_battery(p: &rtac::core::Problem, ctx: &str) -> Result<(), String> {
+    use rtac::coordinator::FixCache;
+    for name in CACHE_BATTERY_ENGINES {
+        let base = run_cached(name, None, p);
+        let warm = FixCache::shared(64);
+        for (variant, cache) in [
+            ("cold-64", warm.clone()),
+            ("warm-64", warm.clone()),
+            ("capacity-1", FixCache::shared(1)),
+        ] {
+            let got = run_cached(name, cache, p);
+            if got.0 != base.0 {
+                return Err(format!("{name} [{variant}]: verdict diverged on {ctx}"));
+            }
+            if got.1 != base.1 {
+                return Err(format!("{name} [{variant}]: closure diverged on {ctx}"));
+            }
+            if got.2 != base.2 {
+                return Err(format!(
+                    "{name} [{variant}]: counter ledger diverged on {ctx}: \
+                     {:?} vs {:?}",
+                    got.2, base.2
+                ));
+            }
+        }
+    }
+    Ok(())
+}
+
+#[test]
+fn cache_variants_are_bit_identical_for_every_engine_family() {
+    // the differential cache-equivalence battery (quickcheck leg): every
+    // engine family solves random grids bit-identically with the
+    // fixpoint cache off vs on vs capacity-1
+    forall("cache-equivalence", 0xF1C, 8, |rng: &mut Rng| {
+        let spec = RandomSpec::new(
+            3 + rng.gen_range(5),
+            2 + rng.gen_range(5),
+            rng.next_f64(),
+            rng.next_f64(),
+            rng.next_u64(),
+        );
+        let p = random_csp(&spec);
+        assert_cache_battery(&p, &format!("{spec:?}"))
+    });
+}
+
+#[test]
+fn cache_variants_agree_at_lane_boundary_domain_sizes() {
+    // the battery again at domain sizes straddling the 64-bit word
+    // boundary, where the word kernels' tail handling (and therefore
+    // the fingerprinted planes the cache keys on) is most delicate
+    for dom in [63usize, 64, 65, 128] {
+        let p = random_csp(&RandomSpec::new(4, dom, 1.0, 0.55, 0xCAC + dom as u64));
+        assert_cache_battery(&p, &format!("dom={dom}")).unwrap();
+    }
+}
+
 #[test]
 fn forced_scalar_is_bit_identical_for_simd_engines() {
     // the RTAC_FORCE_SCALAR escape hatch must be purely a performance
